@@ -1,0 +1,63 @@
+//! Quickstart: train a small MLP classifier with SMMF through the full
+//! three-layer stack (Pallas-fused AOT train step executed from Rust),
+//! then the framework path (HLO grads + Rust SMMF), and compare optimizer
+//! memory against Adam.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+
+use smmf_repro::coordinator::experiments::BatchSource;
+use smmf_repro::coordinator::ExperimentConfig;
+use smmf_repro::optim::{memory, OptKind, OptimConfig};
+use smmf_repro::runtime::Runtime;
+use smmf_repro::train::FusedSmmfStep;
+use smmf_repro::util::fmt;
+
+fn main() -> Result<()> {
+    let rt = Runtime::open("artifacts")?;
+
+    // --- Path 1: the compiled whole-train-step (L1 Pallas SMMF kernel
+    // fused into the XLA program; Rust only feeds batches).
+    println!("=== compiled SMMF train step (Pallas kernel inside XLA) ===");
+    let mut fused = FusedSmmfStep::load(&rt, "mlp_smmf_step", 0)?;
+    let mut source = BatchSource::for_spec(fused.spec(), 1)?;
+    let mut first = None;
+    let mut last = 0.0;
+    for step in 1..=60 {
+        let loss = fused.train_step(&source.next()?)?;
+        first.get_or_insert(loss);
+        last = loss;
+        if step % 15 == 0 {
+            println!("  step {step:>3}: loss {loss:.4}");
+        }
+    }
+    println!(
+        "  loss {:.4} -> {last:.4}; persistent optimizer state {}\n",
+        first.unwrap(),
+        fmt::bytes(fused.state_bytes())
+    );
+
+    // --- Path 2: the framework path — HLO computes grads, the Rust SMMF
+    // optimizer (bit-packed sign matrix) updates parameters.
+    println!("=== framework path (HLO grads + Rust SMMF optimizer) ===");
+    let mut cfg = ExperimentConfig::default();
+    cfg.artifact = "mlp_grads".into();
+    cfg.optimizer = OptKind::Smmf;
+    cfg.steps = 60;
+    cfg.name = "quickstart/smmf".into();
+    let s = smmf_repro::coordinator::experiments::run_experiment(&rt, &cfg)?;
+    println!("  loss {:.4} -> {:.4} in {} steps", s.first_loss, s.final_loss, s.steps);
+
+    // --- Memory: SMMF vs the baselines on this model's shapes.
+    let graph = smmf_repro::train::TrainGraph::load(&rt, "mlp_grads")?;
+    let shapes = graph.param_shapes();
+    println!("\n=== optimizer state on the MLP's parameter shapes ===");
+    for kind in OptKind::all() {
+        let b = memory::inventory_state_bytes(kind, &shapes, &OptimConfig::paper_defaults(kind));
+        println!("  {:<10} {}", kind.name(), fmt::bytes(b));
+    }
+    Ok(())
+}

@@ -1,0 +1,234 @@
+"""AOT driver: lower every L2 graph to HLO text + manifest for the Rust runtime.
+
+Run once at build time (``make artifacts``); Python never runs again.
+
+Interchange format is HLO **text**, not a serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which xla_extension
+0.5.1 (the version behind the published ``xla`` crate) rejects
+(``proto.id() <= INT_MAX``). The text parser reassigns ids and round-trips
+cleanly (see /opt/xla-example/README.md).
+
+Artifacts built (``--only`` to restrict):
+
+* ``<model>_grads``      — (params..., batch...) -> (loss, grads...)
+* ``<model>_smmf_step``  — (step, params..., state..., batch...) ->
+                           (loss, params'..., state'...), the SMMF update
+                           fused through the L1 Pallas kernel.
+* ``smmf_tensor_NxM``    — the bare Pallas per-tensor update, for runtime
+                           microbenches against the native Rust hot path.
+
+``artifacts/manifest.json`` records, per artifact: file, ordered inputs and
+outputs (name/shape/dtype), parameter init specs, and model metadata.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .kernels import ref
+from .kernels.smmf_update import smmf_tensor_step
+from .model import (
+    CnnConfig,
+    LmConfig,
+    ModelGraph,
+    build_cnn,
+    build_lm,
+    build_lora_lm,
+    build_mlp,
+    smmf_fused_step,
+    smmf_state_specs,
+)
+
+_DTYPES = {"f32": jnp.float32, "i32": jnp.int32, "pred": jnp.bool_}
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(tuple(shape), _DTYPES[dtype])
+
+
+def _io(name, shape, dtype):
+    return {"name": name, "shape": [int(s) for s in shape], "dtype": dtype}
+
+
+def lower_grads(graph: ModelGraph):
+    """Lower the (params, batch) -> (loss, grads) graph of a model."""
+    args = [_spec(s.shape) for s in graph.params]
+    args += [_spec(shape, dt) for (_, shape, dt) in graph.batch]
+    lowered = jax.jit(graph.grads_fn()).lower(*args)
+    inputs = [_io(s.name, s.shape, "f32") for s in graph.params]
+    inputs += [_io(n, sh, dt) for (n, sh, dt) in graph.batch]
+    outputs = [_io("loss", (), "f32")]
+    outputs += [_io(f"grad.{s.name}", s.shape, "f32") for s in graph.params]
+    return lowered, inputs, outputs
+
+
+def lower_smmf_step(graph: ModelGraph, **hyper):
+    fn, state_specs = smmf_fused_step(graph, **hyper)
+    args = [_spec((), "f32")]  # step
+    args += [_spec(s.shape) for s in graph.params]
+    args += [_spec(shape, dt) for (_, shape, dt) in state_specs]
+    args += [_spec(shape, dt) for (_, shape, dt) in graph.batch]
+    lowered = jax.jit(fn).lower(*args)
+    inputs = [_io("step", (), "f32")]
+    inputs += [_io(s.name, s.shape, "f32") for s in graph.params]
+    inputs += [_io(n, sh, dt) for (n, sh, dt) in state_specs]
+    inputs += [_io(n, sh, dt) for (n, sh, dt) in graph.batch]
+    outputs = [_io("loss", (), "f32")]
+    outputs += [_io(f"new.{s.name}", s.shape, "f32") for s in graph.params]
+    outputs += [_io(f"new.{n}", sh, dt) for (n, sh, dt) in state_specs]
+    return lowered, inputs, outputs
+
+
+def lower_smmf_tensor(n: int, m: int):
+    """Bare Pallas per-tensor SMMF update for an (n, m) matricized tensor."""
+
+    def fn(g, r_m, c_m, sign, r_v, c_v, beta_m, beta_v, eps):
+        return smmf_tensor_step(g, r_m, c_m, sign, r_v, c_v, beta_m, beta_v, eps)
+
+    args = [
+        _spec((n, m)),
+        _spec((n,)),
+        _spec((m,)),
+        _spec((n, m), "pred"),
+        _spec((n,)),
+        _spec((m,)),
+        _spec(()),
+        _spec(()),
+        _spec(()),
+    ]
+    lowered = jax.jit(fn).lower(*args)
+    inputs = [
+        _io("g_bar", (n, m), "f32"),
+        _io("r_m", (n,), "f32"),
+        _io("c_m", (m,), "f32"),
+        _io("sign", (n, m), "pred"),
+        _io("r_v", (n,), "f32"),
+        _io("c_v", (m,), "f32"),
+        _io("beta_m", (), "f32"),
+        _io("beta_v", (), "f32"),
+        _io("eps", (), "f32"),
+    ]
+    outputs = [
+        _io("u", (n, m), "f32"),
+        _io("new.r_m", (n,), "f32"),
+        _io("new.c_m", (m,), "f32"),
+        _io("new.sign", (n, m), "pred"),
+        _io("new.r_v", (n,), "f32"),
+        _io("new.c_v", (m,), "f32"),
+    ]
+    return lowered, inputs, outputs
+
+
+def _param_manifest(graph: ModelGraph):
+    return [
+        {
+            "name": s.name,
+            "shape": [int(x) for x in s.shape],
+            "init": s.init,
+            "scale": float(s.scale),
+        }
+        for s in graph.params
+    ]
+
+
+LM_E2E = LmConfig(vocab=96, d_model=256, n_head=8, n_layer=4, d_ff=1024, seq_len=128, batch=16)
+LM_TINY = LmConfig()
+LORA_CFG = LmConfig(vocab=96, d_model=128, n_head=4, n_layer=2, d_ff=512, seq_len=64, batch=8)
+
+
+def build_all(only: list[str] | None = None):
+    """Yield (name, lower-thunk) pairs; thunk returns (lowered, in, out, extra)."""
+
+    def g(name, graph_fn, smmf_hyper=None):
+        def thunk():
+            graph = graph_fn()
+            extra = {"kind": "grads", "model": graph.name, "params": _param_manifest(graph), "meta": graph.meta}
+            if smmf_hyper is None:
+                lowered, ins, outs = lower_grads(graph)
+            else:
+                lowered, ins, outs = lower_smmf_step(graph, **smmf_hyper)
+                extra["kind"] = "smmf_step"
+                extra["hyper"] = smmf_hyper
+                extra["state"] = [
+                    _io(n, sh, dt) for (n, sh, dt) in smmf_state_specs(graph)
+                ]
+            return lowered, ins, outs, extra
+
+        return name, thunk
+
+    hyper = dict(lr=1e-3, beta1=0.9, eps=1e-8, growth_rate=0.999, decay_rate=-0.8, weight_decay=0.0)
+    items = [
+        g("mlp_grads", build_mlp),
+        g("cnn_grads", build_cnn),
+        g("lm_tiny_grads", lambda: build_lm(LM_TINY)),
+        g("lm_e2e_grads", lambda: build_lm(LM_E2E)),
+        g("lora_tiny_grads", lambda: build_lora_lm(LORA_CFG, rank=8)),
+        g("mlp_smmf_step", build_mlp, smmf_hyper=hyper),
+        g("lm_tiny_smmf_step", lambda: build_lm(LM_TINY), smmf_hyper=hyper),
+    ]
+
+    def tensor_thunk(n, m):
+        def thunk():
+            lowered, ins, outs = lower_smmf_tensor(n, m)
+            return lowered, ins, outs, {"kind": "smmf_tensor", "meta": {"n": n, "m": m}}
+
+        return thunk
+
+    items.append((f"smmf_tensor_1024x1024", tensor_thunk(1024, 1024)))
+
+    if only:
+        items = [(n, t) for (n, t) in items if n in only]
+    return items
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", nargs="*", default=None)
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"artifacts": {}}
+    if os.path.exists(manifest_path) and args.only:
+        with open(manifest_path) as f:
+            manifest = json.load(f)
+
+    for name, thunk in build_all(args.only):
+        t0 = time.time()
+        lowered, inputs, outputs, extra = thunk()
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": fname,
+            "inputs": inputs,
+            "outputs": outputs,
+            **extra,
+        }
+        print(f"[aot] {name}: {len(text)/1e6:.1f} MB HLO text in {time.time()-t0:.1f}s")
+
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] wrote {manifest_path} ({len(manifest['artifacts'])} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

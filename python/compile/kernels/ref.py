@@ -1,0 +1,187 @@
+"""Pure-jnp SMMF reference: the correctness oracle for the Pallas kernel.
+
+This module is a line-faithful port of the paper's Appendix M PyTorch code
+(https://github.com/eai-lab/SMMF) to jax.numpy. Every quirk of the original
+is preserved and pinned by tests (python/tests/test_ref_semantics.py):
+
+* ``effective_shape`` scans ``i = floor(sqrt(N)) .. 1`` for the largest
+  divisor and returns ``(N // i, i)`` — so ``shape[0] >= shape[1]`` always.
+* Compression stores ``sign = (M > 0)`` but decompression negates where the
+  sign bit is *unset* (exact zeros land in the negative class; harmless
+  because |M| = 0 there).
+* The normalization side rule is ``if shape[0] < shape[1]: r /= sum(r) else:
+  c /= sum(c)`` — with the effective-shape convention above the ``else``
+  branch is the one that fires in practice.
+* ``beta1_t = beta1 * growth_rate**(t-1)`` (AdamNC-style growth schedule),
+  ``beta2_t = 1 - t**decay_rate`` (Adafactor-style decay), ``t`` starting
+  at 1.
+* epsilon is added *after* ``sqrt(V)`` (Adafactor-style), and there is no
+  bias correction.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def effective_shape(numel: int) -> tuple[int, int]:
+    """Square-matricization target shape (Algorithm 2).
+
+    Returns (n, m), n >= m, n * m == numel, |n - m| minimal.
+    """
+    s = int(math.isqrt(numel))
+    if s * s == numel:
+        return (s, s)
+    for i in range(s, 0, -1):
+        if numel % i == 0:
+            return (numel // i, i)
+    return (numel, 1)  # unreachable: i == 1 always divides
+
+
+def decompress(r: jnp.ndarray, c: jnp.ndarray, sign: jnp.ndarray | None) -> jnp.ndarray:
+    """Algorithm 3: M = r ⊗ c, negated where the sign bit is unset."""
+    m = jnp.outer(r, c)
+    if sign is not None:
+        m = jnp.where(sign, m, -m)
+    return m
+
+
+def compress(m: jnp.ndarray, signed: bool):
+    """Algorithm 4 (one-pass NNMF, Algorithm 5).
+
+    Returns (r, c, sign). ``sign`` is None when ``signed`` is False (the
+    2nd momentum is non-negative).
+    """
+    if signed:
+        sign = m > 0
+        am = jnp.abs(m)
+    else:
+        sign = None
+        am = m
+    r = am.sum(axis=1)
+    c = am.sum(axis=0)
+    n, mm = m.shape
+    if n < mm:
+        total = r.sum()
+        r = jnp.where(total != 0, r / total, r)
+    else:
+        total = c.sum()
+        c = jnp.where(total != 0, c / total, c)
+    return r, c, sign
+
+
+class TensorState(NamedTuple):
+    """SMMF per-tensor factorized state (the only persistent memory)."""
+
+    r_m: jnp.ndarray  # (n,)  1st-momentum row factor
+    c_m: jnp.ndarray  # (m,)  1st-momentum col factor
+    sign: jnp.ndarray  # (n, m) bool — sign of the 1st momentum
+    r_v: jnp.ndarray  # (n,)  2nd-momentum row factor
+    c_v: jnp.ndarray  # (m,)  2nd-momentum col factor
+
+
+def init_state(shape: tuple[int, int], dtype=jnp.float32) -> TensorState:
+    n, m = shape
+    return TensorState(
+        r_m=jnp.zeros((n,), dtype),
+        c_m=jnp.zeros((m,), dtype),
+        sign=jnp.zeros((n, m), dtype=bool),
+        r_v=jnp.zeros((n,), dtype),
+        c_v=jnp.zeros((m,), dtype),
+    )
+
+
+def betas(step, beta1: float, growth_rate: float, decay_rate: float):
+    """The default beta schedules (paper Algorithm 8)."""
+    beta_m = beta1 * growth_rate ** (step - 1.0)
+    beta_v = 1.0 - step**decay_rate
+    return beta_m, beta_v
+
+
+def tensor_step(
+    state: TensorState,
+    g_bar: jnp.ndarray,
+    beta_m,
+    beta_v,
+    eps: float = 1e-8,
+):
+    """One SMMF step over a square-matricized gradient ``g_bar`` (n, m).
+
+    The decompression→compression scheme (paper §3.2): moments are
+    reconstructed, updated with the *intact* current gradient, re-factorized,
+    and only then the update term U = M / (sqrt(V) + eps) is formed.
+
+    Returns (new_state, u) where ``u`` has the matricized shape.
+    """
+    m_hat = decompress(state.r_m, state.c_m, state.sign)
+    v_hat = decompress(state.r_v, state.c_v, None)
+    m = beta_m * m_hat + (1.0 - beta_m) * g_bar
+    v = beta_v * v_hat + (1.0 - beta_v) * (g_bar * g_bar)
+    r_m, c_m, sign = compress(m, signed=True)
+    r_v, c_v, _ = compress(v, signed=False)
+    u = m / (jnp.sqrt(v) + eps)
+    return TensorState(r_m, c_m, sign, r_v, c_v), u
+
+
+# ---------------------------------------------------------------------------
+# Full-optimizer reference over a pytree of parameters (mirrors the paper's
+# torch.optim.Optimizer class, including weight-decay modes and the
+# non-factorized fallback for rank-1 tensors when vector_reshape=False).
+# ---------------------------------------------------------------------------
+
+
+class SmmfHyper(NamedTuple):
+    lr: float = 1e-3
+    beta1: float = 0.9
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    decay_rate: float = -0.5
+    growth_rate: float = 0.999
+    vector_reshape: bool = True
+    weight_decay_mode: str = "adamw"  # "adam" | "adamw"
+
+
+def smmf_init(params, hyper: SmmfHyper = SmmfHyper()):
+    """Build the factorized state pytree for a parameter pytree."""
+
+    def one(p):
+        if p.ndim <= 1 and not hyper.vector_reshape:
+            # Non-factorized fallback: dense Adam-style moments.
+            return (jnp.zeros_like(p), jnp.zeros_like(p))
+        shape = effective_shape(p.size)
+        return init_state(shape, p.dtype)
+
+    return jax.tree_util.tree_map(one, params)
+
+
+def smmf_update(params, grads, state, step, hyper: SmmfHyper = SmmfHyper()):
+    """One SMMF optimizer step over pytrees. ``step`` starts at 1."""
+    beta_m, beta_v = betas(step, hyper.beta1, hyper.growth_rate, hyper.decay_rate)
+
+    def one(p, g, s):
+        if hyper.weight_decay != 0.0 and hyper.weight_decay_mode == "adam":
+            g = g + hyper.weight_decay * p
+        elif hyper.weight_decay != 0.0 and hyper.weight_decay_mode == "adamw":
+            p = p * (1.0 - hyper.lr * hyper.weight_decay)
+        if isinstance(s, TensorState):
+            shape = (s.r_m.shape[0], s.c_m.shape[0])
+            g_bar = g.reshape(shape)
+            s2, u = tensor_step(s, g_bar, beta_m, beta_v, hyper.eps)
+            return p - hyper.lr * u.reshape(p.shape), s2
+        m, v = s
+        m = beta_m * m + (1.0 - beta_m) * g
+        v = beta_v * v + (1.0 - beta_v) * g * g
+        u = m / (jnp.sqrt(v) + hyper.eps)
+        return p - hyper.lr * u, (m, v)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_s = treedef.flatten_up_to(state)
+    out = [one(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_s = treedef.unflatten([o[1] for o in out])
+    return new_p, new_s

@@ -1,0 +1,173 @@
+"""L1 — Pallas kernel for the fused SMMF per-tensor update.
+
+The paper's compute hot-spot is the per-tensor decompression → moment
+update → compression → update-term chain (Algorithms 3–4). On a naive
+implementation this is five full passes over the (n̂, m̂) moment matrix; the
+kernel below fuses them into a *single* pass per row-block:
+
+    for each row block (bm, m̂) of the square-matricized gradient:
+        M̂  = r_m ⊗ c_m, sign-restored            (decompress, never hits HBM)
+        V̂  = r_v ⊗ c_v
+        M   = β₁ₜ·M̂ + (1−β₁ₜ)·Ḡ                  (moment update)
+        V   = β₂ₜ·V̂ + (1−β₂ₜ)·Ḡ²
+        U   = M / (√V + ε)                        (update term, written out)
+        S'  = M > 0                               (new sign bits)
+        row/col partial sums of |M| and V         (compression reductions)
+
+HBM traffic per step is therefore one read of Ḡ + one write of U + the
+vectors, versus Adam's read-modify-write of two dense moments: the fused
+SMMF step moves *less* memory than Adam even though it does more arithmetic.
+
+TPU adaptation (DESIGN.md §5): the block is sized for VMEM; reductions
+accumulate per-block partials that a cheap jnp epilogue combines (the
+epilogue is O(n̂+m̂)). The kernel is VPU-bound — there is no MXU work — so
+the roofline is HBM bandwidth. ``interpret=True`` everywhere: the CPU PJRT
+plugin cannot execute Mosaic custom-calls; on a real TPU the same
+``pallas_call`` lowers natively.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _smmf_kernel(
+    scal_ref,  # (1, 3) f32: [beta_m, beta_v, eps]
+    g_ref,  # (bm, m) f32 — square-matricized gradient block
+    r_m_ref,  # (bm, 1) f32
+    c_m_ref,  # (1, m) f32
+    sign_ref,  # (bm, m) bool
+    r_v_ref,  # (bm, 1) f32
+    c_v_ref,  # (1, m) f32
+    u_ref,  # (bm, m) f32 out — update term
+    sign_out_ref,  # (bm, m) bool out
+    rsum_m_ref,  # (bm, 1) f32 out — |M| row sums
+    csum_m_ref,  # (1, m) f32 out — |M| col partial sums for this block
+    rsum_v_ref,  # (bm, 1) f32 out
+    csum_v_ref,  # (1, m) f32 out
+):
+    beta_m = scal_ref[0, 0]
+    beta_v = scal_ref[0, 1]
+    eps = scal_ref[0, 2]
+
+    g = g_ref[...]
+    # Decompress: M̂ = ±(r ⊗ c), V̂ = r ⊗ c. Broadcasting (bm,1)*(1,m)
+    # materializes only in VMEM/registers, never in HBM.
+    m_hat = r_m_ref[...] * c_m_ref[...]
+    m_hat = jnp.where(sign_ref[...], m_hat, -m_hat)
+    v_hat = r_v_ref[...] * c_v_ref[...]
+
+    m = beta_m * m_hat + (1.0 - beta_m) * g
+    v = beta_v * v_hat + (1.0 - beta_v) * (g * g)
+
+    u_ref[...] = m / (jnp.sqrt(v) + eps)
+    sign_out_ref[...] = m > 0
+
+    am = jnp.abs(m)
+    rsum_m_ref[...] = am.sum(axis=1, keepdims=True)
+    csum_m_ref[...] = am.sum(axis=0, keepdims=True)
+    rsum_v_ref[...] = v.sum(axis=1, keepdims=True)
+    csum_v_ref[...] = v.sum(axis=0, keepdims=True)
+
+
+def _pick_block_rows(n: int, target: int = 256) -> int:
+    """Largest divisor of n that is <= target (VMEM-sized row block)."""
+    if n <= target:
+        return n
+    best = 1
+    for bm in range(1, target + 1):
+        if n % bm == 0:
+            best = bm
+    return best
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def smmf_tensor_step(
+    g_bar: jnp.ndarray,
+    r_m: jnp.ndarray,
+    c_m: jnp.ndarray,
+    sign: jnp.ndarray,
+    r_v: jnp.ndarray,
+    c_v: jnp.ndarray,
+    beta_m: jnp.ndarray,
+    beta_v: jnp.ndarray,
+    eps: jnp.ndarray,
+    *,
+    block_rows: int | None = None,
+):
+    """Fused SMMF step over one square-matricized tensor.
+
+    Args mirror ``ref.tensor_step`` but flattened: vectors are 1-D, ``sign``
+    is the (n, m) bool matrix, and the three scalars are 0-D f32 arrays.
+
+    Returns ``(u, r_m', c_m', sign', r_v', c_v')`` with the same semantics
+    as the reference (including the normalize-shorter-side rule).
+    """
+    n, m = g_bar.shape
+    bm = block_rows if block_rows is not None else _pick_block_rows(n)
+    assert n % bm == 0, (n, bm)
+    grid = (n // bm,)
+
+    scal = jnp.stack([beta_m, beta_v, eps]).astype(jnp.float32).reshape(1, 3)
+
+    out_shapes = (
+        jax.ShapeDtypeStruct((n, m), g_bar.dtype),  # u
+        jax.ShapeDtypeStruct((n, m), jnp.bool_),  # sign'
+        jax.ShapeDtypeStruct((n, 1), g_bar.dtype),  # rsum_m
+        jax.ShapeDtypeStruct((grid[0], m), g_bar.dtype),  # csum_m partials
+        jax.ShapeDtypeStruct((n, 1), g_bar.dtype),  # rsum_v
+        jax.ShapeDtypeStruct((grid[0], m), g_bar.dtype),  # csum_v partials
+    )
+    row_block = lambda i: (i, 0)
+    full = lambda i: (0, 0)
+    u, sign2, rsum_m, csum_m_p, rsum_v, csum_v_p = pl.pallas_call(
+        _smmf_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 3), full),
+            pl.BlockSpec((bm, m), row_block),
+            pl.BlockSpec((bm, 1), row_block),
+            pl.BlockSpec((1, m), full),
+            pl.BlockSpec((bm, m), row_block),
+            pl.BlockSpec((bm, 1), row_block),
+            pl.BlockSpec((1, m), full),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, m), row_block),
+            pl.BlockSpec((bm, m), row_block),
+            pl.BlockSpec((bm, 1), row_block),
+            pl.BlockSpec((1, m), row_block),
+            pl.BlockSpec((bm, 1), row_block),
+            pl.BlockSpec((1, m), row_block),
+        ],
+        out_shape=out_shapes,
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(
+        scal,
+        g_bar,
+        r_m.reshape(n, 1),
+        c_m.reshape(1, m),
+        sign,
+        r_v.reshape(n, 1),
+        c_v.reshape(1, m),
+    )
+
+    # O(n+m) epilogue: combine per-block column partials and apply the
+    # normalize-shorter-side rule (paper Algorithm 4 / Appendix M code).
+    r_m2 = rsum_m.reshape(n)
+    c_m2 = csum_m_p.sum(axis=0)
+    r_v2 = rsum_v.reshape(n)
+    c_v2 = csum_v_p.sum(axis=0)
+    if n < m:
+        tot_m, tot_v = r_m2.sum(), r_v2.sum()
+        r_m2 = jnp.where(tot_m != 0, r_m2 / tot_m, r_m2)
+        r_v2 = jnp.where(tot_v != 0, r_v2 / tot_v, r_v2)
+    else:
+        tot_m, tot_v = c_m2.sum(), c_v2.sum()
+        c_m2 = jnp.where(tot_m != 0, c_m2 / tot_m, c_m2)
+        c_v2 = jnp.where(tot_v != 0, c_v2 / tot_v, c_v2)
+    return u, r_m2, c_m2, sign2, r_v2, c_v2

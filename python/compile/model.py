@@ -1,0 +1,430 @@
+"""L2 — JAX model graphs (build-time only).
+
+Three trainable models, each exposed as a ``(params, batch) -> (loss,
+*grads)`` graph that ``aot.py`` lowers to HLO text for the Rust runtime:
+
+* ``mlp``      — 2-layer classifier over 32-d features (quickstart model).
+* ``lm``       — char-level pre-norm transformer LM (the end-to-end driver
+                 model; size set by ``LmConfig``). Stands in for the paper's
+                 Transformer-base/WMT32k full-training workload.
+* ``cnn``      — 3-conv + dense classifier over 32×32×3 images. Stands in
+                 for the paper's MobileNetV2/ResNet-50 CIFAR workload.
+* ``lora_lm``  — the ``lm`` with a frozen base and trainable rank-r LoRA
+                 adapters on the attention projections (Table 7 / Figure 4
+                 proxy). Only adapter grads are emitted.
+
+Parameters are *ordered flat lists* of named tensors — the manifest records
+the order so the Rust side can address buffers positionally. Additionally
+``smmf_fused_step`` builds a whole-train-step graph (fwd + bwd + SMMF update
+through the Pallas kernel) whose persistent state is exactly the factorized
+vectors + sign matrices: the paper's optimizer compiled into one XLA
+program.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import ref
+from .kernels.smmf_update import smmf_tensor_step
+
+
+# ---------------------------------------------------------------------------
+# Parameter registry
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ParamSpec:
+    name: str
+    shape: tuple[int, ...]
+    init: str = "normal"  # normal | zeros | ones
+    scale: float = 0.02
+
+
+@dataclass
+class ModelGraph:
+    """A model as the Rust runtime sees it: ordered params + a loss fn."""
+
+    name: str
+    params: list[ParamSpec]
+    # loss_fn(list_of_param_arrays, batch_dict) -> scalar loss
+    loss_fn: Callable
+    # batch inputs, ordered: (name, shape, dtype)
+    batch: list[tuple[str, tuple[int, ...], str]]
+    meta: dict = field(default_factory=dict)
+
+    def init_params(self, seed: int = 0) -> list[np.ndarray]:
+        rng = np.random.default_rng(seed)
+        out = []
+        for spec in self.params:
+            if spec.init == "zeros":
+                out.append(np.zeros(spec.shape, np.float32))
+            elif spec.init == "ones":
+                out.append(np.ones(spec.shape, np.float32))
+            else:
+                out.append(
+                    rng.standard_normal(spec.shape, np.float32) * np.float32(spec.scale)
+                )
+        return out
+
+    def grads_fn(self):
+        """(params..., batch...) -> (loss, grads...) as a flat-signature fn."""
+        n_params = len(self.params)
+        batch_names = [b[0] for b in self.batch]
+
+        def fn(*args):
+            params = list(args[:n_params])
+            batch = dict(zip(batch_names, args[n_params:]))
+            loss, grads = jax.value_and_grad(self.loss_fn)(params, batch)
+            return (loss, *grads)
+
+        return fn
+
+
+# ---------------------------------------------------------------------------
+# MLP classifier
+# ---------------------------------------------------------------------------
+
+
+def build_mlp(in_dim: int = 32, hidden: int = 64, classes: int = 10, batch: int = 64) -> ModelGraph:
+    specs = [
+        ParamSpec("w1", (in_dim, hidden), scale=1.0 / math.sqrt(in_dim)),
+        ParamSpec("b1", (hidden,), init="zeros"),
+        ParamSpec("w2", (hidden, classes), scale=1.0 / math.sqrt(hidden)),
+        ParamSpec("b2", (classes,), init="zeros"),
+    ]
+
+    def loss_fn(params, b):
+        w1, b1, w2, b2 = params
+        h = jnp.tanh(b["x"] @ w1 + b1)
+        logits = h @ w2 + b2
+        logp = jax.nn.log_softmax(logits)
+        onehot = jax.nn.one_hot(b["y"], classes)
+        return -(onehot * logp).sum(axis=-1).mean()
+
+    return ModelGraph(
+        name="mlp",
+        params=specs,
+        loss_fn=loss_fn,
+        batch=[("x", (batch, in_dim), "f32"), ("y", (batch,), "i32")],
+        meta={"classes": classes, "in_dim": in_dim, "hidden": hidden, "batch": batch},
+    )
+
+
+# ---------------------------------------------------------------------------
+# Char-level transformer LM
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LmConfig:
+    vocab: int = 96
+    d_model: int = 128
+    n_head: int = 4
+    n_layer: int = 2
+    d_ff: int = 512
+    seq_len: int = 64
+    batch: int = 16
+
+    def param_count(self) -> int:
+        per_layer = 4 * self.d_model * self.d_model + 2 * self.d_model * self.d_ff
+        return (
+            self.vocab * self.d_model * 2
+            + self.seq_len * self.d_model
+            + self.n_layer * (per_layer + 4 * self.d_model + self.d_model + self.d_ff)
+            + 2 * self.d_model
+        )
+
+
+def lm_param_specs(cfg: LmConfig) -> list[ParamSpec]:
+    s = 0.02
+    specs = [
+        ParamSpec("tok_emb", (cfg.vocab, cfg.d_model), scale=s),
+        ParamSpec("pos_emb", (cfg.seq_len, cfg.d_model), scale=s),
+    ]
+    for i in range(cfg.n_layer):
+        p = f"l{i}."
+        specs += [
+            ParamSpec(p + "ln1_g", (cfg.d_model,), init="ones"),
+            ParamSpec(p + "ln1_b", (cfg.d_model,), init="zeros"),
+            ParamSpec(p + "wq", (cfg.d_model, cfg.d_model), scale=s),
+            ParamSpec(p + "wk", (cfg.d_model, cfg.d_model), scale=s),
+            ParamSpec(p + "wv", (cfg.d_model, cfg.d_model), scale=s),
+            ParamSpec(p + "wo", (cfg.d_model, cfg.d_model), scale=s / math.sqrt(2 * cfg.n_layer)),
+            ParamSpec(p + "ln2_g", (cfg.d_model,), init="ones"),
+            ParamSpec(p + "ln2_b", (cfg.d_model,), init="zeros"),
+            ParamSpec(p + "w_ff1", (cfg.d_model, cfg.d_ff), scale=s),
+            ParamSpec(p + "b_ff1", (cfg.d_ff,), init="zeros"),
+            ParamSpec(p + "w_ff2", (cfg.d_ff, cfg.d_model), scale=s / math.sqrt(2 * cfg.n_layer)),
+            ParamSpec(p + "b_ff2", (cfg.d_model,), init="zeros"),
+        ]
+    specs += [
+        ParamSpec("lnf_g", (cfg.d_model,), init="ones"),
+        ParamSpec("lnf_b", (cfg.d_model,), init="zeros"),
+        ParamSpec("head", (cfg.d_model, cfg.vocab), scale=s),
+    ]
+    return specs
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * g + b
+
+
+def _attention(x, wq, wk, wv, wo, n_head):
+    b, t, d = x.shape
+    hd = d // n_head
+    q = (x @ wq).reshape(b, t, n_head, hd).transpose(0, 2, 1, 3)
+    k = (x @ wk).reshape(b, t, n_head, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv).reshape(b, t, n_head, hd).transpose(0, 2, 1, 3)
+    att = (q @ k.transpose(0, 1, 3, 2)) / math.sqrt(hd)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    att = jnp.where(mask, att, -1e9)
+    att = jax.nn.softmax(att, axis=-1)
+    y = (att @ v).transpose(0, 2, 1, 3).reshape(b, t, d)
+    return y @ wo
+
+
+def _lm_logits(params_by_name, tokens, cfg: LmConfig):
+    p = params_by_name
+    b, t = tokens.shape
+    x = p["tok_emb"][tokens] + p["pos_emb"][:t]
+    for i in range(cfg.n_layer):
+        pre = f"l{i}."
+        h = _layernorm(x, p[pre + "ln1_g"], p[pre + "ln1_b"])
+        x = x + _attention(h, p[pre + "wq"], p[pre + "wk"], p[pre + "wv"], p[pre + "wo"], cfg.n_head)
+        h = _layernorm(x, p[pre + "ln2_g"], p[pre + "ln2_b"])
+        h = jax.nn.gelu(h @ p[pre + "w_ff1"] + p[pre + "b_ff1"])
+        x = x + h @ p[pre + "w_ff2"] + p[pre + "b_ff2"]
+    x = _layernorm(x, p["lnf_g"], p["lnf_b"])
+    return x @ p["head"]
+
+
+def build_lm(cfg: LmConfig = LmConfig()) -> ModelGraph:
+    specs = lm_param_specs(cfg)
+    names = [s.name for s in specs]
+
+    def loss_fn(params, b):
+        by_name = dict(zip(names, params))
+        logits = _lm_logits(by_name, b["tokens"], cfg)
+        logp = jax.nn.log_softmax(logits)
+        tgt = jax.nn.one_hot(b["targets"], cfg.vocab)
+        return -(tgt * logp).sum(-1).mean()
+
+    return ModelGraph(
+        name="lm",
+        params=specs,
+        loss_fn=loss_fn,
+        batch=[
+            ("tokens", (cfg.batch, cfg.seq_len), "i32"),
+            ("targets", (cfg.batch, cfg.seq_len), "i32"),
+        ],
+        meta={
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_head": cfg.n_head,
+            "n_layer": cfg.n_layer,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+            "batch": cfg.batch,
+            "param_count": int(sum(int(np.prod(s.shape)) for s in specs)),
+        },
+    )
+
+
+# ---------------------------------------------------------------------------
+# Small CNN (CIFAR-shaped stand-in)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class CnnConfig:
+    channels: tuple[int, ...] = (16, 32, 64)
+    classes: int = 10
+    batch: int = 32
+    image: int = 32
+
+
+def build_cnn(cfg: CnnConfig = CnnConfig()) -> ModelGraph:
+    specs = []
+    cin = 3
+    for i, cout in enumerate(cfg.channels):
+        specs.append(ParamSpec(f"conv{i}_w", (cout, cin, 3, 3), scale=1.0 / math.sqrt(cin * 9)))
+        specs.append(ParamSpec(f"conv{i}_b", (cout,), init="zeros"))
+        cin = cout
+    final_hw = cfg.image // (2 ** len(cfg.channels))
+    flat = cfg.channels[-1] * final_hw * final_hw
+    specs.append(ParamSpec("fc_w", (flat, cfg.classes), scale=1.0 / math.sqrt(flat)))
+    specs.append(ParamSpec("fc_b", (cfg.classes,), init="zeros"))
+    names = [s.name for s in specs]
+
+    def loss_fn(params, b):
+        p = dict(zip(names, params))
+        x = b["x"]  # (B, 3, H, W)
+        for i in range(len(cfg.channels)):
+            x = jax.lax.conv_general_dilated(
+                x, p[f"conv{i}_w"], window_strides=(1, 1), padding="SAME"
+            ) + p[f"conv{i}_b"][None, :, None, None]
+            x = jax.nn.relu(x)
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 1, 2, 2), (1, 1, 2, 2), "VALID"
+            )
+        x = x.reshape(x.shape[0], -1)
+        logits = x @ p["fc_w"] + p["fc_b"]
+        logp = jax.nn.log_softmax(logits)
+        onehot = jax.nn.one_hot(b["y"], cfg.classes)
+        return -(onehot * logp).sum(-1).mean()
+
+    return ModelGraph(
+        name="cnn",
+        params=specs,
+        loss_fn=loss_fn,
+        batch=[
+            ("x", (cfg.batch, 3, cfg.image, cfg.image), "f32"),
+            ("y", (cfg.batch,), "i32"),
+        ],
+        meta={"classes": cfg.classes, "batch": cfg.batch, "image": cfg.image},
+    )
+
+
+# ---------------------------------------------------------------------------
+# LoRA LM: frozen base + trainable adapters (Table 7 / Figure 4 proxy)
+# ---------------------------------------------------------------------------
+
+
+def build_lora_lm(cfg: LmConfig = LmConfig(), rank: int = 8) -> ModelGraph:
+    """The LM with LoRA adapters on wq/wv of every layer.
+
+    The frozen base weights become *batch-like constants* (extra inputs) so
+    the artifact can be fed any pre-trained base; trainable params are only
+    the A/B adapter matrices, matching the paper's LLaMA-7b LoRA setup.
+    """
+    base_specs = lm_param_specs(cfg)
+    base_names = [s.name for s in base_specs]
+    specs = []
+    for i in range(cfg.n_layer):
+        for proj in ("wq", "wv"):
+            specs.append(
+                ParamSpec(f"l{i}.{proj}.lora_a", (cfg.d_model, rank), scale=1.0 / math.sqrt(cfg.d_model))
+            )
+            specs.append(ParamSpec(f"l{i}.{proj}.lora_b", (rank, cfg.d_model), init="zeros"))
+    adapter_names = [s.name for s in specs]
+
+    def loss_fn(params, b):
+        adapters = dict(zip(adapter_names, params))
+        base = {n: b[f"base.{n}"] for n in base_names}
+        merged = dict(base)
+        for i in range(cfg.n_layer):
+            for proj in ("wq", "wv"):
+                a = adapters[f"l{i}.{proj}.lora_a"]
+                bb = adapters[f"l{i}.{proj}.lora_b"]
+                merged[f"l{i}.{proj}"] = base[f"l{i}.{proj}"] + a @ bb
+        logits = _lm_logits(merged, b["tokens"], cfg)
+        logp = jax.nn.log_softmax(logits)
+        tgt = jax.nn.one_hot(b["targets"], cfg.vocab)
+        return -(tgt * logp).sum(-1).mean()
+
+    batch = [
+        ("tokens", (cfg.batch, cfg.seq_len), "i32"),
+        ("targets", (cfg.batch, cfg.seq_len), "i32"),
+    ] + [(f"base.{s.name}", s.shape, "f32") for s in base_specs]
+
+    return ModelGraph(
+        name="lora_lm",
+        params=specs,
+        loss_fn=loss_fn,
+        batch=batch,
+        meta={"rank": rank, "base_params": [s.name for s in base_specs], "seq_len": cfg.seq_len,
+              "vocab": cfg.vocab, "batch": cfg.batch},
+    )
+
+
+# ---------------------------------------------------------------------------
+# SMMF-fused whole-train-step graph (fwd + bwd + Pallas optimizer update)
+# ---------------------------------------------------------------------------
+
+
+def smmf_state_specs(graph: ModelGraph) -> list[tuple[str, tuple[int, ...], str]]:
+    """Ordered (name, shape, dtype) for the factorized state of a model."""
+    out = []
+    for spec in graph.params:
+        n, m = ref.effective_shape(int(np.prod(spec.shape)))
+        out += [
+            (f"{spec.name}.r_m", (n,), "f32"),
+            (f"{spec.name}.c_m", (m,), "f32"),
+            (f"{spec.name}.sign", (n, m), "pred"),
+            (f"{spec.name}.r_v", (n,), "f32"),
+            (f"{spec.name}.c_v", (m,), "f32"),
+        ]
+    return out
+
+
+def smmf_fused_step(
+    graph: ModelGraph,
+    lr: float = 1e-3,
+    beta1: float = 0.9,
+    eps: float = 1e-8,
+    growth_rate: float = 0.999,
+    decay_rate: float = -0.8,
+    weight_decay: float = 0.0,
+    use_pallas: bool = True,
+):
+    """Build ``(step, params..., state..., batch...) -> (loss, params'...,
+    state'...)`` — the paper's optimizer fused into one XLA program.
+
+    ``use_pallas=True`` routes the per-tensor update through the L1 kernel;
+    ``False`` uses the jnp oracle (used by tests to pin equivalence of the
+    *lowered* graphs).
+    """
+    n_params = len(graph.params)
+    state_specs = smmf_state_specs(graph)
+    n_state = len(state_specs)
+    batch_names = [b[0] for b in graph.batch]
+
+    def fn(*args):
+        step = args[0]
+        params = list(args[1 : 1 + n_params])
+        flat_state = list(args[1 + n_params : 1 + n_params + n_state])
+        batch = dict(zip(batch_names, args[1 + n_params + n_state :]))
+
+        loss, grads = jax.value_and_grad(graph.loss_fn)(params, batch)
+        beta_m, beta_v = ref.betas(step.astype(jnp.float32), beta1, growth_rate, decay_rate)
+
+        new_params, new_state = [], []
+        for i, spec in enumerate(graph.params):
+            p, g = params[i], grads[i]
+            if weight_decay != 0.0:
+                p = p * (1.0 - lr * weight_decay)  # adamw mode
+            r_m, c_m, sign, r_v, c_v = flat_state[5 * i : 5 * i + 5]
+            n, m = ref.effective_shape(int(np.prod(spec.shape)))
+            g_bar = g.reshape(n, m)
+            if use_pallas:
+                u, r_m2, c_m2, sign2, r_v2, c_v2 = smmf_tensor_step(
+                    g_bar, r_m, c_m, sign, r_v, c_v,
+                    beta_m.astype(jnp.float32), beta_v.astype(jnp.float32),
+                    jnp.float32(eps),
+                )
+            else:
+                st = ref.TensorState(r_m, c_m, sign, r_v, c_v)
+                st2, u = ref.tensor_step(st, g_bar, beta_m, beta_v, eps)
+                r_m2, c_m2, sign2, r_v2, c_v2 = st2
+            new_params.append(p - lr * u.reshape(p.shape))
+            new_state += [r_m2, c_m2, sign2, r_v2, c_v2]
+        return (loss, *new_params, *new_state)
+
+    return fn, state_specs
+
+
+MODELS = {
+    "mlp": build_mlp,
+    "lm": lambda: build_lm(LmConfig()),
+    "cnn": lambda: build_cnn(CnnConfig()),
+}

@@ -1,0 +1,76 @@
+"""AOT pipeline tests: manifest integrity and HLO text round-trip."""
+
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import numpy as np
+import pytest
+
+ART = Path(__file__).resolve().parents[2] / "artifacts"
+
+
+def load_manifest():
+    p = ART / "manifest.json"
+    if not p.exists():
+        pytest.skip("artifacts not built (run `make artifacts`)")
+    with open(p) as f:
+        return json.load(f)
+
+
+def test_manifest_files_exist():
+    man = load_manifest()
+    assert man["artifacts"], "empty manifest"
+    for name, art in man["artifacts"].items():
+        f = ART / art["file"]
+        assert f.exists(), f"{name}: missing {art['file']}"
+        head = f.read_text()[:200]
+        assert "HloModule" in head, f"{name}: not HLO text"
+
+
+def test_manifest_io_shapes_well_formed():
+    man = load_manifest()
+    for name, art in man["artifacts"].items():
+        assert art["inputs"] and art["outputs"], name
+        for io in art["inputs"] + art["outputs"]:
+            assert io["dtype"] in ("f32", "i32", "pred"), (name, io)
+            assert all(isinstance(d, int) and d > 0 for d in io["shape"]), (name, io)
+        if art["kind"] == "grads":
+            # loss + one grad per param
+            assert len(art["outputs"]) == 1 + len(art["params"]), name
+        if art["kind"] == "smmf_step":
+            n_p, n_s = len(art["params"]), len(art["state"])
+            assert n_s == 5 * n_p, name
+            assert len(art["outputs"]) == 1 + n_p + n_s, name
+            assert len(art["inputs"]) == 1 + n_p + n_s + (
+                len(art["inputs"]) - 1 - n_p - n_s
+            ), name
+
+
+def test_hlo_entry_parameter_count_matches_manifest():
+    """The lowered HLO ENTRY must take exactly the manifest's inputs."""
+    man = load_manifest()
+    for name, art in man["artifacts"].items():
+        text = (ART / art["file"]).read_text()
+        idx = text.find("ENTRY")
+        assert idx >= 0, name
+        # Count parameter(k) declarations inside the ENTRY computation only
+        # (nested fusions/reductions declare their own parameters).
+        entry_body = text[idx:]
+        n_params = entry_body.count(" = parameter(") or entry_body.count("parameter(")
+        assert n_params == len(art["inputs"]), (name, n_params, len(art["inputs"]))
+
+
+def test_lowering_smoke_small_graph():
+    """Fresh lowering of a tiny graph must produce loadable HLO text."""
+    from compile.aot import lower_grads, to_hlo_text
+    from compile.model import build_mlp
+
+    graph = build_mlp(in_dim=4, hidden=6, classes=3, batch=5)
+    lowered, ins, outs = lower_grads(graph)
+    text = to_hlo_text(lowered)
+    assert text.startswith("HloModule")
+    assert len(ins) == len(graph.params) + len(graph.batch)
+    assert len(outs) == 1 + len(graph.params)

@@ -1,0 +1,91 @@
+//! Bench: per-step optimizer wall time over real model inventories —
+//! regenerates the *shape* of the paper's Table 5 (optimizer-only time;
+//! the paper measures full training steps on GPU, so absolute numbers
+//! differ but the Adam-relative ratios are the claim under test).
+//!
+//! Also includes the SMMF ablation the perf pass optimizes against:
+//! fused single-pass vs naive (materializing) implementation.
+//!
+//! ```bash
+//! cargo bench --bench optimizer_step            # full
+//! SMMF_BENCH_QUICK=1 cargo bench --bench optimizer_step
+//! ```
+
+use smmf_repro::models::inventory_by_name;
+use smmf_repro::optim::{self, Optimizer, OptKind, OptimConfig, Smmf};
+use smmf_repro::tensor::Tensor;
+use smmf_repro::util::bench::Bencher;
+use smmf_repro::util::fmt;
+use smmf_repro::util::rng::Pcg32;
+
+fn rand_tensors(shapes: &[Vec<usize>], seed: u64, scale: f32) -> Vec<Tensor> {
+    let mut rng = Pcg32::new(seed);
+    shapes
+        .iter()
+        .map(|s| {
+            let mut t = Tensor::zeros(s);
+            rng.fill_normal(t.data_mut(), scale);
+            t
+        })
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::var("SMMF_BENCH_QUICK").is_ok();
+    let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+
+    let models: &[&str] = if quick {
+        &["mobilenet_v2_imagenet"]
+    } else {
+        &["mobilenet_v2_imagenet", "resnet50_imagenet", "transformer_base", "transformer_big"]
+    };
+
+    println!("== Table 5 proxy: optimizer step over full model inventories ==");
+    for name in models {
+        let inv = inventory_by_name(name).unwrap();
+        let shapes = inv.shapes();
+        let mut params = rand_tensors(&shapes, 1, 0.05);
+        let grads = rand_tensors(&shapes, 2, 0.01);
+        let mut adam_ms = f64::NAN;
+        for kind in OptKind::all() {
+            let cfg = OptimConfig::paper_defaults(kind);
+            let mut opt = optim::build(kind, &shapes, &cfg);
+            let stats = bencher.bench(&format!("{name}/{}", kind.name()), || {
+                opt.step(&mut params, &grads)
+            });
+            if kind == OptKind::Adam {
+                adam_ms = stats.median.as_secs_f64() * 1e3;
+            }
+            println!(
+                "{}   ({:.2}x adam)",
+                stats.summary(),
+                stats.median.as_secs_f64() * 1e3 / adam_ms
+            );
+        }
+        println!();
+    }
+
+    println!("== Ablation: SMMF fused single-pass vs naive (Algorithm-literal) ==");
+    for &(n, m) in &[(512usize, 512usize), (2048, 2048), (5087, 4608)] {
+        let shapes = vec![vec![n, m]];
+        let cfg = OptimConfig::paper_defaults(OptKind::Smmf);
+        let mut params = rand_tensors(&shapes, 1, 0.05);
+        let grads = rand_tensors(&shapes, 2, 0.01);
+        let mut fused = Smmf::new(&shapes, &cfg);
+        let s1 = bencher.bench(&format!("smmf_fused/{n}x{m}"), || {
+            fused.step(&mut params, &grads)
+        });
+        println!("{}", s1.summary());
+        let mut naive = Smmf::new(&shapes, &cfg);
+        let s2 = bencher.bench(&format!("smmf_naive/{n}x{m}"), || {
+            naive.step_naive(&mut params, &grads)
+        });
+        println!(
+            "{}   (fused is {:.2}x faster, scratch {} vs {})",
+            s2.summary(),
+            s2.median.as_secs_f64() / s1.median.as_secs_f64(),
+            fmt::bytes(fused.scratch_bytes()),
+            fmt::bytes(naive.scratch_bytes()),
+        );
+    }
+}

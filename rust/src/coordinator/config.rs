@@ -1,0 +1,167 @@
+//! Experiment configuration: TOML file + CLI overrides.
+
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+use crate::optim::{OptKind, OptimConfig, WeightDecayMode};
+use crate::optim::schedule::LrSchedule;
+use crate::util::cli::Args;
+use crate::util::toml::TomlDoc;
+
+/// Everything a training experiment needs.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    pub artifact: String,
+    pub optimizer: OptKind,
+    pub optim: OptimConfig,
+    pub steps: u64,
+    pub seed: u64,
+    pub log_every: u64,
+    pub out_dir: String,
+    pub schedule: LrSchedule,
+    pub workers: usize,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            name: "run".into(),
+            artifact: "lm_tiny_grads".into(),
+            optimizer: OptKind::Smmf,
+            optim: OptimConfig::paper_defaults(OptKind::Smmf),
+            steps: 200,
+            seed: 0,
+            log_every: 10,
+            out_dir: "runs".into(),
+            schedule: LrSchedule::Constant,
+            workers: 1,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Load from a TOML file (all keys optional).
+    pub fn from_toml(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let doc = TomlDoc::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_toml(&doc)?;
+        Ok(cfg)
+    }
+
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        self.name = doc.str_or("name", &self.name).to_string();
+        self.artifact = doc.str_or("artifact", &self.artifact).to_string();
+        if let Some(k) = doc.get("optimizer.kind").and_then(|v| v.as_str()) {
+            self.set_optimizer(k)?;
+        }
+        self.steps = doc.i64_or("steps", self.steps as i64) as u64;
+        self.seed = doc.i64_or("seed", self.seed as i64) as u64;
+        self.log_every = doc.i64_or("log_every", self.log_every as i64) as u64;
+        self.out_dir = doc.str_or("out_dir", &self.out_dir).to_string();
+        self.workers = doc.i64_or("workers", self.workers as i64) as usize;
+        let o = &mut self.optim;
+        o.lr = doc.f64_or("optimizer.lr", o.lr as f64) as f32;
+        o.beta1 = doc.f64_or("optimizer.beta1", o.beta1 as f64) as f32;
+        o.beta2 = doc.f64_or("optimizer.beta2", o.beta2 as f64) as f32;
+        o.weight_decay = doc.f64_or("optimizer.weight_decay", o.weight_decay as f64) as f32;
+        o.decay_rate = doc.f64_or("optimizer.decay_rate", o.decay_rate as f64) as f32;
+        o.growth_rate = doc.f64_or("optimizer.growth_rate", o.growth_rate as f64) as f32;
+        o.vector_reshape = doc.bool_or("optimizer.vector_reshape", o.vector_reshape);
+        if let Some(mode) = doc.get("optimizer.weight_decay_mode").and_then(|v| v.as_str()) {
+            o.weight_decay_mode = match mode {
+                "adam" => WeightDecayMode::Adam,
+                "adamw" => WeightDecayMode::AdamW,
+                other => return Err(anyhow!("bad weight_decay_mode {other}")),
+            };
+        }
+        match doc.str_or("schedule.kind", "constant") {
+            "constant" => self.schedule = LrSchedule::Constant,
+            "warmup" => {
+                self.schedule =
+                    LrSchedule::Warmup { warmup: doc.i64_or("schedule.warmup", 100) as u64 }
+            }
+            "linear" => {
+                self.schedule = LrSchedule::Linear {
+                    warmup: doc.i64_or("schedule.warmup", 100) as u64,
+                    total: doc.i64_or("schedule.total", self.steps as i64) as u64,
+                }
+            }
+            "invsqrt" => {
+                self.schedule =
+                    LrSchedule::InvSqrt { warmup: doc.i64_or("schedule.warmup", 100) as u64 }
+            }
+            other => return Err(anyhow!("bad schedule.kind {other}")),
+        }
+        Ok(())
+    }
+
+    /// Apply `--key value` CLI overrides on top.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(k) = args.opt("optimizer") {
+            self.set_optimizer(k)?;
+        }
+        if let Some(a) = args.opt("artifact") {
+            self.artifact = a.to_string();
+        }
+        if let Some(n) = args.opt("name") {
+            self.name = n.to_string();
+        }
+        self.steps = args.u64_or("steps", self.steps);
+        self.seed = args.u64_or("seed", self.seed);
+        self.log_every = args.u64_or("log-every", self.log_every);
+        self.workers = args.usize_or("workers", self.workers);
+        self.out_dir = args.str_or("out-dir", &self.out_dir);
+        self.optim.lr = args.f64_or("lr", self.optim.lr as f64) as f32;
+        self.optim.weight_decay = args.f64_or("weight-decay", self.optim.weight_decay as f64) as f32;
+        self.optim.decay_rate = args.f64_or("decay-rate", self.optim.decay_rate as f64) as f32;
+        Ok(())
+    }
+
+    fn set_optimizer(&mut self, kind: &str) -> Result<()> {
+        let k = OptKind::parse(kind).ok_or_else(|| anyhow!("unknown optimizer {kind}"))?;
+        // Re-derive paper defaults for the new kind, preserving lr.
+        let lr = self.optim.lr;
+        self.optimizer = k;
+        self.optim = OptimConfig::paper_defaults(k);
+        self.optim.lr = lr;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toml_then_cli_overrides() {
+        let doc = TomlDoc::parse(
+            "name = \"fig2\"\nsteps = 400\n[optimizer]\nkind = \"came\"\nlr = 0.002\n[schedule]\nkind = \"warmup\"\nwarmup = 50",
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.optimizer, OptKind::Came);
+        assert_eq!(cfg.steps, 400);
+        assert!((cfg.optim.lr - 0.002).abs() < 1e-9);
+        assert_eq!(cfg.schedule, LrSchedule::Warmup { warmup: 50 });
+        // CAME paper defaults picked up
+        assert!((cfg.optim.eps2 - 1e-16).abs() < 1e-20);
+
+        let args = Args::parse(
+            ["--optimizer", "smmf", "--steps", "10", "--lr", "0.01"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.optimizer, OptKind::Smmf);
+        assert_eq!(cfg.steps, 10);
+        assert!((cfg.optim.lr - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bad_optimizer_errors() {
+        let mut cfg = ExperimentConfig::default();
+        let args = Args::parse(["--optimizer", "sgdx"].iter().map(|s| s.to_string()));
+        assert!(cfg.apply_args(&args).is_err());
+    }
+}

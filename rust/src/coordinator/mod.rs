@@ -1,0 +1,13 @@
+//! The experiment coordinator: config, experiment registry, launcher and
+//! the multi-worker data-parallel runtime.
+//!
+//! Every table and figure of the paper maps to a runner here (see
+//! DESIGN.md §3); `repro <experiment>` regenerates it. The coordinator
+//! owns process topology (worker threads for data-parallel gradient
+//! averaging), metrics, and the CLI surface.
+
+pub mod config;
+pub mod experiments;
+pub mod workers;
+
+pub use config::ExperimentConfig;

@@ -1,0 +1,114 @@
+//! Multi-worker data-parallel training (std::thread).
+//!
+//! Leader/worker topology: each worker owns its own PJRT client and
+//! compiled executable, receives the current parameters, computes
+//! gradients on its private shard of the batch stream, and sends them
+//! back; the leader averages gradients and applies one optimizer step
+//! (synchronous data parallelism). This exercises the framework's
+//! distributed shape on a single host; on this testbed (1 core) it is a
+//! correctness/topology feature, not a speedup.
+
+use anyhow::{anyhow, Result};
+use std::sync::mpsc;
+use std::thread;
+
+use crate::coordinator::config::ExperimentConfig;
+use crate::coordinator::experiments::BatchSource;
+use crate::optim;
+use crate::runtime::Runtime;
+use crate::tensor::Tensor;
+use crate::train::TrainGraph;
+
+enum ToWorker {
+    Params(Vec<Tensor>),
+    Stop,
+}
+
+struct FromWorker {
+    worker: usize,
+    loss: f32,
+    grads: Vec<Tensor>,
+}
+
+/// Run synchronous data-parallel training; returns per-step mean losses.
+pub fn train_data_parallel(
+    artifact_dir: &str,
+    cfg: &ExperimentConfig,
+    n_workers: usize,
+) -> Result<Vec<f32>> {
+    assert!(n_workers >= 1);
+    let rt = Runtime::open(artifact_dir)?;
+    let graph = TrainGraph::load(&rt, &cfg.artifact)?;
+    let shapes = graph.param_shapes();
+    let mut opt = optim::build(cfg.optimizer, &shapes, &cfg.optim);
+    let mut params = graph.init_params(cfg.seed);
+    drop(graph);
+    drop(rt);
+
+    let (result_tx, result_rx) = mpsc::channel::<Result<FromWorker>>();
+    let mut cmd_txs = Vec::new();
+    let mut handles = Vec::new();
+    for w in 0..n_workers {
+        let (cmd_tx, cmd_rx) = mpsc::channel::<ToWorker>();
+        cmd_txs.push(cmd_tx);
+        let result_tx = result_tx.clone();
+        let artifact_dir = artifact_dir.to_string();
+        let artifact = cfg.artifact.clone();
+        let seed = cfg.seed;
+        handles.push(thread::spawn(move || {
+            let run = || -> Result<()> {
+                let rt = Runtime::open(&artifact_dir)?;
+                let graph = TrainGraph::load(&rt, &artifact)?;
+                // Each worker streams a disjoint shard (distinct seed).
+                let mut source = BatchSource::for_spec(graph.spec(), seed ^ (w as u64) << 17)?;
+                let mut grads = Vec::new();
+                loop {
+                    match cmd_rx.recv() {
+                        Ok(ToWorker::Params(params)) => {
+                            let batch = source.next()?;
+                            let loss = graph.loss_and_grads(&params, &batch, &mut grads)?;
+                            result_tx
+                                .send(Ok(FromWorker {
+                                    worker: w,
+                                    loss,
+                                    grads: std::mem::take(&mut grads),
+                                }))
+                                .ok();
+                        }
+                        Ok(ToWorker::Stop) | Err(_) => return Ok(()),
+                    }
+                }
+            };
+            if let Err(e) = run() {
+                result_tx.send(Err(anyhow!("worker {w}: {e}"))).ok();
+            }
+        }));
+    }
+
+    let mut losses = Vec::with_capacity(cfg.steps as usize);
+    let mut avg: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+    for _step in 0..cfg.steps {
+        for tx in &cmd_txs {
+            tx.send(ToWorker::Params(params.clone())).map_err(|_| anyhow!("worker died"))?;
+        }
+        avg.iter_mut().for_each(|t| t.fill(0.0));
+        let mut loss_sum = 0.0f32;
+        for _ in 0..n_workers {
+            let msg = result_rx.recv().map_err(|_| anyhow!("workers gone"))??;
+            loss_sum += msg.loss;
+            for (a, g) in avg.iter_mut().zip(&msg.grads) {
+                a.axpy(1.0 / n_workers as f32, g);
+            }
+            let _ = msg.worker;
+        }
+        opt.step(&mut params, &avg);
+        losses.push(loss_sum / n_workers as f32);
+    }
+    for tx in &cmd_txs {
+        tx.send(ToWorker::Stop).ok();
+    }
+    for h in handles {
+        h.join().map_err(|_| anyhow!("worker panicked"))?;
+    }
+    Ok(losses)
+}

@@ -1,0 +1,167 @@
+//! Text substrates for the language-modeling experiments.
+//!
+//! * [`TINY_CORPUS`] — a real (public-domain) English text embedded in the
+//!   binary: the end-to-end driver trains a char-LM on it and the loss
+//!   curve is meaningful (it is real natural language, not noise).
+//! * [`ByteTokenizer`] — printable-ASCII tokenizer matching the AOT
+//!   models' `vocab = 96`.
+//! * [`ZipfCorpus`] — synthetic Zipf(1.1) token stream for scale tests.
+
+use crate::util::rng::{zipf_harmonic, Pcg32};
+
+/// Public-domain text (US founding documents + Lincoln + assorted prose),
+/// ~22 KB. Enough for a few hundred distinct 128-token windows.
+pub const TINY_CORPUS: &str = include_str!("tiny_corpus.txt");
+
+/// Maps bytes to [0, 96): printable ASCII 32..=126 -> 1..=95, everything
+/// else (incl. newline) -> 0.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub const VOCAB: usize = 96;
+
+    pub fn encode(&self, text: &str, out: &mut Vec<i32>) {
+        out.clear();
+        out.extend(text.bytes().map(|b| {
+            if (32..=126).contains(&b) {
+                (b - 31) as i32
+            } else {
+                0
+            }
+        }));
+    }
+
+    pub fn decode(&self, tokens: &[i32]) -> String {
+        tokens
+            .iter()
+            .map(|&t| {
+                if (1..=95).contains(&t) {
+                    (t as u8 + 31) as char
+                } else {
+                    '\n'
+                }
+            })
+            .collect()
+    }
+}
+
+/// Char-LM dataset: random (tokens, targets) windows over an encoded text.
+pub struct CharLmDataset {
+    tokens: Vec<i32>,
+    pub seq_len: usize,
+    rng: Pcg32,
+}
+
+impl CharLmDataset {
+    pub fn new(text: &str, seq_len: usize, seed: u64) -> CharLmDataset {
+        let mut tokens = Vec::new();
+        ByteTokenizer.encode(text, &mut tokens);
+        assert!(
+            tokens.len() > seq_len + 1,
+            "corpus too short: {} <= {}",
+            tokens.len(),
+            seq_len + 1
+        );
+        CharLmDataset { tokens, seq_len, rng: Pcg32::new(seed) }
+    }
+
+    pub fn len_tokens(&self) -> usize {
+        self.tokens.len()
+    }
+
+    /// Fill `(batch, seq)` inputs and next-char targets.
+    pub fn sample_batch(&mut self, batch: usize, inputs: &mut Vec<i32>, targets: &mut Vec<i32>) {
+        inputs.clear();
+        targets.clear();
+        for _ in 0..batch {
+            let start = self.rng.below(self.tokens.len() - self.seq_len - 1);
+            inputs.extend_from_slice(&self.tokens[start..start + self.seq_len]);
+            targets.extend_from_slice(&self.tokens[start + 1..start + self.seq_len + 1]);
+        }
+    }
+}
+
+/// Synthetic Zipf token stream (stands in for web-scale corpora: matches
+/// the rank-frequency skew real text has, so embedding-gradient sparsity
+/// patterns are realistic).
+pub struct ZipfCorpus {
+    vocab: usize,
+    harmonic: f64,
+    s: f64,
+    rng: Pcg32,
+}
+
+impl ZipfCorpus {
+    pub fn new(vocab: usize, s: f64, seed: u64) -> ZipfCorpus {
+        ZipfCorpus { vocab, harmonic: zipf_harmonic(vocab, s), s, rng: Pcg32::new(seed) }
+    }
+
+    pub fn sample_batch(&mut self, batch: usize, seq: usize, inputs: &mut Vec<i32>, targets: &mut Vec<i32>) {
+        inputs.clear();
+        targets.clear();
+        for _ in 0..batch {
+            let mut prev = self.rng.zipf(self.vocab, self.s, self.harmonic) as i32;
+            for k in 0..=seq {
+                // weak bigram structure: with p=0.25 repeat-ish token
+                let tok = if self.rng.uniform() < 0.25 {
+                    ((prev as usize + 1) % self.vocab) as i32
+                } else {
+                    self.rng.zipf(self.vocab, self.s, self.harmonic) as i32
+                };
+                if k < seq {
+                    inputs.push(tok);
+                }
+                if k > 0 {
+                    targets.push(tok);
+                }
+                prev = tok;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn corpus_is_real_text() {
+        assert!(TINY_CORPUS.len() > 15_000, "{}", TINY_CORPUS.len());
+        assert!(TINY_CORPUS.contains("the"));
+    }
+
+    #[test]
+    fn tokenizer_roundtrip_printables() {
+        let t = ByteTokenizer;
+        let mut toks = Vec::new();
+        t.encode("Hello, World! 123", &mut toks);
+        assert!(toks.iter().all(|&x| (0..96).contains(&x)));
+        assert_eq!(t.decode(&toks), "Hello, World! 123");
+    }
+
+    #[test]
+    fn windows_are_shifted_pairs() {
+        let mut ds = CharLmDataset::new(TINY_CORPUS, 16, 0);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        ds.sample_batch(4, &mut x, &mut y);
+        assert_eq!(x.len(), 64);
+        assert_eq!(y.len(), 64);
+        // each window: y[k] == x[k+1]
+        for b in 0..4 {
+            for k in 0..15 {
+                assert_eq!(y[b * 16 + k], x[b * 16 + k + 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_batch_shapes() {
+        let mut z = ZipfCorpus::new(500, 1.1, 1);
+        let (mut x, mut y) = (Vec::new(), Vec::new());
+        z.sample_batch(2, 8, &mut x, &mut y);
+        assert_eq!(x.len(), 16);
+        assert_eq!(y.len(), 16);
+        assert!(x.iter().all(|&t| (0..500).contains(&t)));
+    }
+}

@@ -1,0 +1,34 @@
+//! # smmf-repro — SMMF: Square-Matricized Momentum Factorization
+//!
+//! Full-system reproduction of *SMMF: Square-Matricized Momentum
+//! Factorization for Memory-Efficient Optimization* (Park & Lee, AAAI 2025).
+//!
+//! The system is a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1 (Pallas, build time)** — the SMMF fused
+//!   decompress→update→compress optimizer kernel, written with
+//!   `jax.experimental.pallas` and validated against a pure-`jnp` oracle.
+//! * **Layer 2 (JAX, build time)** — model forward/backward graphs (MLP,
+//!   char-level transformer LM, CNN) and SMMF-fused train steps, lowered
+//!   once by `python/compile/aot.py` to HLO text under `artifacts/`.
+//! * **Layer 3 (Rust, runtime)** — this crate: the training coordinator.
+//!   It loads the AOT artifacts through the PJRT CPU client (`xla` crate),
+//!   owns the training loop, the optimizer library (SMMF plus the Adam /
+//!   Adafactor / SM3 / CAME baselines), data pipelines, metrics, and the
+//!   experiment harness that regenerates every table and figure of the
+//!   paper. Python never runs on the training path.
+//!
+//! Entry points:
+//! * [`optim`] — the optimizer library (the paper's contribution).
+//! * [`train`] — the trainer that composes runtime + optim + data.
+//! * [`coordinator`] — experiment registry and launcher.
+//! * [`runtime`] — PJRT artifact loading/execution.
+
+pub mod coordinator;
+pub mod data;
+pub mod models;
+pub mod optim;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

@@ -1,0 +1,375 @@
+//! `repro` — the SMMF reproduction CLI (leader entrypoint).
+//!
+//! Every table/figure of the paper is a subcommand (DESIGN.md §3):
+//!
+//! ```text
+//! repro list                      # artifacts + model inventories
+//! repro memory --table table1    # memory columns of a paper table
+//! repro table1 .. table13        # shortcuts for the above
+//! repro table5 [--quick]         # optimizer step-time table
+//! repro fig1|fig2|fig4           # optimizer-comparison training curves
+//! repro e2e [--steps 300]        # end-to-end LM training driver (SMMF)
+//! repro train --artifact lm_tiny_grads --optimizer smmf --steps 100
+//! repro dp --workers 2           # data-parallel demo
+//! repro fused --steps 50         # compiled (Pallas) SMMF train step
+//! ```
+
+use anyhow::{bail, Result};
+
+use smmf_repro::coordinator::experiments as exp;
+use smmf_repro::coordinator::{workers, ExperimentConfig};
+use smmf_repro::models;
+use smmf_repro::optim::OptKind;
+use smmf_repro::runtime::Runtime;
+use smmf_repro::train::FusedSmmfStep;
+use smmf_repro::util::cli::Args;
+use smmf_repro::util::fmt;
+
+fn main() {
+    let args = Args::from_env();
+    if let Err(e) = run(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn artifacts_dir(args: &Args) -> String {
+    args.str_or("artifacts", "artifacts")
+}
+
+fn base_config(args: &Args) -> Result<ExperimentConfig> {
+    let mut cfg = ExperimentConfig::default();
+    if let Some(path) = args.opt("config") {
+        cfg = ExperimentConfig::from_toml(std::path::Path::new(path))?;
+    }
+    cfg.apply_args(args)?;
+    Ok(cfg)
+}
+
+fn run(args: &Args) -> Result<()> {
+    let cmd = args.command.clone().unwrap_or_else(|| "help".into());
+    match cmd.as_str() {
+        "help" | "--help" => {
+            println!("{}", HELP);
+            Ok(())
+        }
+        "list" => cmd_list(args),
+        "memory" => {
+            let table = args.str_or("table", "all");
+            cmd_memory(&table)
+        }
+        t if t.starts_with("table") && t != "table5" => cmd_memory(t),
+        "table5" => cmd_table5(args),
+        "fig1" => cmd_fig(args, "fig1"),
+        "fig2" => cmd_fig(args, "fig2"),
+        "fig4" => cmd_fig(args, "fig4"),
+        "e2e" => cmd_e2e(args),
+        "train" => cmd_train(args),
+        "dp" => cmd_dp(args),
+        "fused" => cmd_fused(args),
+        "ablate" => cmd_ablate(args),
+        other => bail!("unknown command {other} (try `repro help`)"),
+    }
+}
+
+const HELP: &str = "repro — SMMF (AAAI 2025) reproduction
+commands:
+  list              artifacts and model inventories
+  memory --table T  memory columns (table1..table4, table6..table13, all)
+  tableN            shortcut for `memory --table tableN`
+  table5 [--quick]  optimizer step-time measurements
+  fig1|fig2|fig4    optimizer-comparison training curves -> runs/
+  e2e               end-to-end char-LM training with SMMF -> runs/e2e
+  train             one training run (--artifact, --optimizer, --steps,
+                    --lr, --config file.toml, --out-dir)
+  dp --workers K    synchronous data-parallel training demo
+  fused             compiled whole-train-step (Pallas SMMF) demo
+  ablate            SMMF design ablations (scheme / sign width /
+                    matricization / vector_reshape) on the LM workload
+common flags: --artifacts DIR (default ./artifacts), --seed N";
+
+fn cmd_list(args: &Args) -> Result<()> {
+    println!("model inventories (memory accounting):");
+    for (name, ctx) in models::list_inventories() {
+        let inv = models::inventory_by_name(name).unwrap();
+        println!("  {name:<26} {:>8} params   {ctx}", fmt::count(inv.param_count()));
+    }
+    let dir = artifacts_dir(args);
+    match Runtime::open(&dir) {
+        Ok(rt) => {
+            println!("\nAOT artifacts in {dir}/:");
+            for (name, spec) in &rt.manifest().artifacts {
+                println!(
+                    "  {name:<26} kind={:<10} {} inputs / {} outputs",
+                    spec.kind,
+                    spec.inputs.len(),
+                    spec.outputs.len()
+                );
+            }
+        }
+        Err(_) => println!("\n(artifacts not built — run `make artifacts`)"),
+    }
+    Ok(())
+}
+
+fn cmd_memory(table: &str) -> Result<()> {
+    let tables: Vec<String> = if table == "all" {
+        vec![
+            "table1", "table2", "table3", "table4", "table6", "table7", "table8", "table9",
+            "table10", "table11", "table12", "table13",
+        ]
+        .into_iter()
+        .map(String::from)
+        .collect()
+    } else {
+        vec![table.to_string()]
+    };
+    for t in tables {
+        let rows = exp::memory_rows(&exp::table_models(&t)?)?;
+        println!("{}", exp::render_memory_table(&t, &rows));
+    }
+    Ok(())
+}
+
+fn cmd_table5(args: &Args) -> Result<()> {
+    let quick = args.has_flag("quick");
+    let models: Vec<&str> = if quick {
+        vec!["mobilenet_v2_imagenet", "transformer_base"]
+    } else {
+        vec!["mobilenet_v2_imagenet", "resnet50_imagenet", "transformer_base", "transformer_big"]
+    };
+    let reps = args.usize_or("reps", if quick { 3 } else { 5 });
+    let rows = exp::time_rows(&models, reps)?;
+    println!("{}", exp::render_time_table(&rows));
+    Ok(())
+}
+
+fn fig_defaults(fig: &str, cfg: &mut ExperimentConfig) {
+    match fig {
+        // Figure 1: CNN image classification (γ = -0.5 per Appendix F).
+        "fig1" => {
+            cfg.artifact = "cnn_grads".into();
+            cfg.steps = 200;
+            cfg.optim.lr = 1e-3;
+            cfg.optim.decay_rate = -0.5;
+            // Paper Table 15: weight-decay 5e-4, Adam-coupled.
+            cfg.optim.weight_decay = 5e-4;
+            cfg.optim.weight_decay_mode = smmf_repro::optim::WeightDecayMode::Adam;
+        }
+        // Figure 2: transformer LM (γ = -0.8).
+        "fig2" => {
+            cfg.artifact = "lm_tiny_grads".into();
+            cfg.steps = 300;
+            cfg.optim.lr = 1e-3;
+            cfg.optim.decay_rate = -0.8;
+        }
+        // Figure 4: LoRA fine-tune, Adam vs SMMF.
+        "fig4" => {
+            cfg.artifact = "lora_tiny_grads".into();
+            cfg.steps = 200;
+            cfg.optim.lr = 1e-4;
+            cfg.optim.decay_rate = -0.8;
+        }
+        _ => {}
+    }
+}
+
+fn cmd_fig(args: &Args, fig: &str) -> Result<()> {
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let mut cfg = base_config(args)?;
+    let user_steps = args.opt("steps").map(|s| s.parse::<u64>().ok()).flatten();
+    fig_defaults(fig, &mut cfg);
+    if let Some(steps) = user_steps {
+        cfg.steps = steps;
+    }
+    let kinds: Vec<OptKind> = if fig == "fig4" {
+        vec![OptKind::Adam, OptKind::Smmf]
+    } else {
+        OptKind::all().to_vec()
+    };
+    let summaries = exp::run_comparison(&rt, &cfg, &kinds, fig)?;
+    println!("\n== {fig} summary (final loss after {} steps) ==", cfg.steps);
+    let rows: Vec<Vec<String>> = summaries
+        .iter()
+        .map(|s| {
+            vec![
+                s.optimizer.clone(),
+                format!("{:.4}", s.final_loss),
+                format!("{:.4}", (s.final_loss as f64).exp()),
+                format!("{:.1}", s.mean_step_ms),
+                fmt::bytes(s.opt_state_bytes),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        fmt::render_table(&["optimizer", "final loss", "ppl", "ms/step", "opt state"], &rows)
+    );
+    Ok(())
+}
+
+fn cmd_e2e(args: &Args) -> Result<()> {
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let mut cfg = base_config(args)?;
+    if args.opt("artifact").is_none() {
+        cfg.artifact = "lm_e2e_grads".into();
+    }
+    if args.opt("steps").is_none() {
+        cfg.steps = 300;
+    }
+    cfg.name = args.str_or("name", "e2e/smmf");
+    cfg.optim.decay_rate = -0.8;
+    println!(
+        "[e2e] training {} with {} for {} steps (tiny real corpus)…",
+        cfg.artifact,
+        cfg.optimizer.name(),
+        cfg.steps
+    );
+    let s = exp::run_experiment(&rt, &cfg)?;
+    // Compare the optimizer state against Adam on the same shapes.
+    let graph = smmf_repro::train::TrainGraph::load(&rt, &cfg.artifact)?;
+    let shapes = graph.param_shapes();
+    let adam = smmf_repro::optim::memory::inventory_state_bytes(
+        OptKind::Adam,
+        &shapes,
+        &smmf_repro::optim::OptimConfig::default(),
+    );
+    println!(
+        "\n[e2e] loss {:.4} -> {:.4} over {} steps ({:.0} ms/step)",
+        s.first_loss, s.final_loss, s.steps, s.mean_step_ms
+    );
+    println!(
+        "[e2e] optimizer state: {} ({}) vs Adam {} — {:.1}x smaller",
+        fmt::bytes(s.opt_state_bytes),
+        s.optimizer,
+        fmt::bytes(adam),
+        adam as f64 / s.opt_state_bytes as f64
+    );
+    println!("[e2e] curves in runs/{}/metrics.csv", s.name);
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let mut cfg = base_config(args)?;
+    if args.opt("name").is_none() {
+        cfg.name = format!("{}_{}", cfg.artifact, cfg.optimizer.name());
+    }
+    let s = exp::run_experiment(&rt, &cfg)?;
+    println!(
+        "[train:{}] loss {:.4} -> {:.4}   {:.1} ms/step   opt {}",
+        s.optimizer,
+        s.first_loss,
+        s.final_loss,
+        s.mean_step_ms,
+        fmt::bytes(s.opt_state_bytes)
+    );
+    Ok(())
+}
+
+fn cmd_dp(args: &Args) -> Result<()> {
+    let mut cfg = base_config(args)?;
+    if args.opt("artifact").is_none() {
+        cfg.artifact = "mlp_grads".into();
+    }
+    if args.opt("steps").is_none() {
+        cfg.steps = 30;
+    }
+    let workers = args.usize_or("workers", 2);
+    println!("[dp] {} workers, {} steps on {}", workers, cfg.steps, cfg.artifact);
+    let losses = workers::train_data_parallel(&artifacts_dir(args), &cfg, workers)?;
+    println!(
+        "[dp] loss {:.4} -> {:.4} (synchronous gradient averaging over {} workers)",
+        losses.first().copied().unwrap_or(f32::NAN),
+        losses.last().copied().unwrap_or(f32::NAN),
+        workers
+    );
+    Ok(())
+}
+
+fn cmd_ablate(args: &Args) -> Result<()> {
+    use smmf_repro::optim::{MatricizeMode, SignMode, SmmfScheme};
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let mut base = base_config(args)?;
+    if args.opt("artifact").is_none() {
+        base.artifact = "lm_tiny_grads".into();
+    }
+    if args.opt("steps").is_none() {
+        base.steps = 150;
+    }
+    base.optimizer = OptKind::Smmf;
+    base.optim.decay_rate = -0.8;
+
+    let variants: Vec<(&str, Box<dyn Fn(&mut ExperimentConfig)>)> = vec![
+        ("default (decompress→compress, 1-bit, square)", Box::new(|_| {})),
+        (
+            "compress→decompress scheme (§3.2 ablation)",
+            Box::new(|c| c.optim.smmf_scheme = SmmfScheme::CompressFirst),
+        ),
+        (
+            "8-bit S_M (Table 5 timing variant)",
+            Box::new(|c| c.optim.smmf_sign_mode = SignMode::Byte8),
+        ),
+        (
+            "fold-last matricization (no Algorithm 2)",
+            Box::new(|c| c.optim.smmf_matricize = MatricizeMode::FoldLast),
+        ),
+        (
+            "vector_reshape = false (dense rank-1 state)",
+            Box::new(|c| c.optim.vector_reshape = false),
+        ),
+    ];
+    println!("== SMMF design ablations on {} ({} steps) ==", base.artifact, base.steps);
+    let mut rows = Vec::new();
+    for (i, (label, tweak)) in variants.iter().enumerate() {
+        let mut cfg = base.clone();
+        tweak(&mut cfg);
+        cfg.name = format!("ablate/v{i}");
+        let s = exp::run_experiment(&rt, &cfg)?;
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.4}", s.final_loss),
+            format!("{:.1}", s.mean_step_ms),
+            fmt::bytes(s.opt_state_bytes),
+        ]);
+    }
+    println!(
+        "{}",
+        fmt::render_table(&["variant", "final loss", "ms/step", "opt state"], &rows)
+    );
+    Ok(())
+}
+
+fn cmd_fused(args: &Args) -> Result<()> {
+    let rt = Runtime::open(artifacts_dir(args))?;
+    let name = args.str_or("artifact", "mlp_smmf_step");
+    let steps = args.u64_or("steps", 50);
+    let mut fused = FusedSmmfStep::load(&rt, &name, args.u64_or("seed", 0))?;
+    let mut source = exp::BatchSource::for_spec(fused.spec(), 1)?;
+    println!(
+        "[fused] {} — whole train step (fwd+bwd+SMMF w/ Pallas kernel) compiled into one XLA program",
+        name
+    );
+    let t0 = std::time::Instant::now();
+    let (mut first, mut last) = (f32::NAN, f32::NAN);
+    for step in 1..=steps {
+        let batch = source.next()?;
+        let loss = fused.train_step(&batch)?;
+        if step == 1 {
+            first = loss;
+        }
+        last = loss;
+        if step % 10 == 0 || step == 1 {
+            println!("  step {step:>4}: loss {loss:.4}");
+        }
+    }
+    let ms = t0.elapsed().as_secs_f64() * 1e3 / steps as f64;
+    println!(
+        "[fused] loss {first:.4} -> {last:.4} over {steps} steps, {ms:.1} ms/step, state {} (PRED sign = the paper's 8-bit S_M variant)",
+        fmt::bytes(fused.state_bytes())
+    );
+    if last >= first {
+        bail!("fused path did not reduce the loss");
+    }
+    Ok(())
+}

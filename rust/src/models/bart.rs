@@ -1,0 +1,126 @@
+//! BART-family inventories: BART-base (summarization, Table 12),
+//! mBART-large (multilingual summarization, Table 13) and MarianMT
+//! (WMT16 En-Ro, Table 10 — a BART variant without embedding LayerNorm).
+
+use super::Inventory;
+
+pub struct BartCfg {
+    pub layers: usize, // per stack
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub vocab: usize,
+    pub max_pos: usize,
+    /// LayerNorm after the embedding (BART yes, Marian no).
+    pub emb_layernorm: bool,
+    /// Extra final LayerNorm per stack (mBART).
+    pub final_layernorm: bool,
+}
+
+pub fn bart(name: &str, cfg: &BartCfg) -> Inventory {
+    let mut inv = Inventory::new(name);
+    let d = cfg.d_model;
+    inv.embedding("shared", cfg.vocab, d); // tied enc/dec/lm_head
+    for stack in ["encoder", "decoder"] {
+        let is_dec = stack == "decoder";
+        inv.embedding(&format!("{stack}.embed_positions"), cfg.max_pos, d);
+        if cfg.emb_layernorm {
+            inv.norm(&format!("{stack}.layernorm_embedding"), d);
+        }
+        for l in 0..cfg.layers {
+            let p = format!("{stack}.layers.{l}");
+            for proj in ["q_proj", "k_proj", "v_proj", "out_proj"] {
+                inv.linear(&format!("{p}.self_attn.{proj}"), d, d);
+            }
+            inv.norm(&format!("{p}.self_attn_layer_norm"), d);
+            if is_dec {
+                for proj in ["q_proj", "k_proj", "v_proj", "out_proj"] {
+                    inv.linear(&format!("{p}.encoder_attn.{proj}"), d, d);
+                }
+                inv.norm(&format!("{p}.encoder_attn_layer_norm"), d);
+            }
+            inv.linear(&format!("{p}.fc1"), d, cfg.d_ff);
+            inv.linear(&format!("{p}.fc2"), cfg.d_ff, d);
+            inv.norm(&format!("{p}.final_layer_norm"), d);
+        }
+        if cfg.final_layernorm {
+            inv.norm(&format!("{stack}.layer_norm"), d);
+        }
+    }
+    inv
+}
+
+pub fn bart_base() -> Inventory {
+    bart(
+        "bart_base",
+        &BartCfg {
+            layers: 6,
+            d_model: 768,
+            d_ff: 3072,
+            vocab: 50265,
+            max_pos: 1026,
+            emb_layernorm: true,
+            final_layernorm: false,
+        },
+    )
+}
+
+pub fn mbart_large() -> Inventory {
+    bart(
+        "mbart_large",
+        &BartCfg {
+            layers: 12,
+            d_model: 1024,
+            d_ff: 4096,
+            vocab: 250054,
+            max_pos: 1026,
+            emb_layernorm: true,
+            final_layernorm: true,
+        },
+    )
+}
+
+/// MarianMT en-ro: BART-small-like, no embedding LayerNorm, static
+/// sinusoidal positions (no learned position parameters).
+pub fn marian_mt() -> Inventory {
+    let mut inv = bart(
+        "marian_mt",
+        &BartCfg {
+            layers: 6,
+            d_model: 512,
+            d_ff: 2048,
+            vocab: 59543,
+            max_pos: 0, // sinusoidal -> drop below
+            emb_layernorm: false,
+            final_layernorm: false,
+        },
+    );
+    // remove zero-size position tables injected by the generic builder
+    inv.tensors.retain(|t| t.numel() > 0);
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bart_base_is_140m() {
+        // Paper Table 12: Adam = 1068 MiB -> N ≈ 140M.
+        let n = bart_base().param_count();
+        assert!((137_000_000..143_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn mbart_large_is_610m() {
+        // Paper Table 13: Adam = 4661 MiB -> N ≈ 611M.
+        let n = mbart_large().param_count();
+        assert!((600_000_000..625_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn marian_is_74m() {
+        // Paper Table 10: Adam = 569 MiB -> N ≈ 74.6M.
+        let n = marian_mt().param_count();
+        assert!((72_000_000..77_000_000).contains(&n), "{n}");
+    }
+}

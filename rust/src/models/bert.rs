@@ -1,0 +1,121 @@
+//! BERT-family inventories: Megatron BERT-345M (the paper's pre-training
+//! workload, Table 3 — trained with NVIDIA Megatron-LM code), BERT-base
+//! (fine-tuning, Table 6), RoBERTa-base and ALBERT-base-v2 (SQuAD,
+//! Table 8).
+
+use super::Inventory;
+
+pub struct EncoderCfg {
+    pub layers: usize,
+    pub hidden: usize,
+    pub ff: usize,
+    pub vocab: usize,
+    pub max_pos: usize,
+    pub type_vocab: usize,
+}
+
+/// Standard BERT encoder stack (HF layout, biases everywhere).
+pub fn bert_encoder(name: &str, cfg: &EncoderCfg, with_pooler: bool) -> Inventory {
+    let mut inv = Inventory::new(name);
+    let h = cfg.hidden;
+    inv.embedding("embeddings.word", cfg.vocab, h);
+    inv.embedding("embeddings.position", cfg.max_pos, h);
+    if cfg.type_vocab > 0 {
+        inv.embedding("embeddings.token_type", cfg.type_vocab, h);
+    }
+    inv.norm("embeddings.LayerNorm", h);
+    for l in 0..cfg.layers {
+        let p = format!("encoder.layer.{l}");
+        for proj in ["query", "key", "value"] {
+            inv.linear(&format!("{p}.attention.self.{proj}"), h, h);
+        }
+        inv.linear(&format!("{p}.attention.output.dense"), h, h);
+        inv.norm(&format!("{p}.attention.output.LayerNorm"), h);
+        inv.linear(&format!("{p}.intermediate.dense"), h, cfg.ff);
+        inv.linear(&format!("{p}.output.dense"), cfg.ff, h);
+        inv.norm(&format!("{p}.output.LayerNorm"), h);
+    }
+    if with_pooler {
+        inv.linear("pooler.dense", h, h);
+    }
+    inv
+}
+
+pub fn bert_base() -> Inventory {
+    bert_encoder(
+        "bert_base",
+        &EncoderCfg { layers: 12, hidden: 768, ff: 3072, vocab: 30522, max_pos: 512, type_vocab: 2 },
+        true,
+    )
+}
+
+/// Megatron BERT-345M (L=24, H=1024) — the paper's pre-training target.
+pub fn bert_345m() -> Inventory {
+    bert_encoder(
+        "bert_345m",
+        &EncoderCfg { layers: 24, hidden: 1024, ff: 4096, vocab: 30522, max_pos: 512, type_vocab: 2 },
+        true,
+    )
+}
+
+pub fn roberta_base() -> Inventory {
+    bert_encoder(
+        "roberta_base",
+        &EncoderCfg { layers: 12, hidden: 768, ff: 3072, vocab: 50265, max_pos: 514, type_vocab: 1 },
+        true,
+    )
+}
+
+/// ALBERT-base-v2: factorized embedding (E=128) + ONE shared encoder layer.
+pub fn albert_base_v2() -> Inventory {
+    let mut inv = Inventory::new("albert_base_v2");
+    let (e, h, ff) = (128, 768, 3072);
+    inv.embedding("embeddings.word", 30000, e);
+    inv.embedding("embeddings.position", 512, e);
+    inv.embedding("embeddings.token_type", 2, e);
+    inv.norm("embeddings.LayerNorm", e);
+    inv.linear("embedding_hidden_mapping_in", e, h);
+    // single shared layer (reused 12x at runtime; parameters stored once)
+    let p = "encoder.albert_layer";
+    for proj in ["query", "key", "value"] {
+        inv.linear(&format!("{p}.attention.{proj}"), h, h);
+    }
+    inv.linear(&format!("{p}.attention.dense"), h, h);
+    inv.norm(&format!("{p}.attention.LayerNorm"), h);
+    inv.linear(&format!("{p}.ffn"), h, ff);
+    inv.linear(&format!("{p}.ffn_output"), ff, h);
+    inv.norm(&format!("{p}.full_layer_layer_norm"), h);
+    inv.linear("pooler", h, h);
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_base_is_110m() {
+        let n = bert_base().param_count();
+        assert!((108_000_000..112_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn megatron_bert_is_345m_class() {
+        // Paper Table 3: Adam = 2.5 GiB = 2N floats -> N ≈ 335M.
+        let n = bert_345m().param_count();
+        assert!((330_000_000..360_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn roberta_base_is_125m() {
+        let n = roberta_base().param_count();
+        assert!((123_000_000..128_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn albert_is_tiny_via_sharing() {
+        // ALBERT-base-v2: 11.7M parameters (HF).
+        let n = albert_base_v2().param_count();
+        assert!((11_000_000..12_500_000).contains(&n), "{n}");
+    }
+}

@@ -1,0 +1,61 @@
+//! GPT-2 inventories: 124M (HF `gpt2`, fine-tuning Tables 4/8) and the
+//! Megatron 345M variant (pre-training, Table 3).
+
+use super::Inventory;
+
+pub struct Gpt2Cfg {
+    pub layers: usize,
+    pub hidden: usize,
+    pub vocab: usize,
+    pub max_pos: usize,
+}
+
+pub fn gpt2(name: &str, cfg: &Gpt2Cfg) -> Inventory {
+    let mut inv = Inventory::new(name);
+    let h = cfg.hidden;
+    inv.embedding("wte", cfg.vocab, h);
+    inv.embedding("wpe", cfg.max_pos, h);
+    for l in 0..cfg.layers {
+        let p = format!("h.{l}");
+        inv.norm(&format!("{p}.ln_1"), h);
+        // HF stores fused qkv as c_attn (h, 3h) + bias.
+        inv.push(format!("{p}.attn.c_attn.weight"), &[h, 3 * h]);
+        inv.push(format!("{p}.attn.c_attn.bias"), &[3 * h]);
+        inv.push(format!("{p}.attn.c_proj.weight"), &[h, h]);
+        inv.push(format!("{p}.attn.c_proj.bias"), &[h]);
+        inv.norm(&format!("{p}.ln_2"), h);
+        inv.push(format!("{p}.mlp.c_fc.weight"), &[h, 4 * h]);
+        inv.push(format!("{p}.mlp.c_fc.bias"), &[4 * h]);
+        inv.push(format!("{p}.mlp.c_proj.weight"), &[4 * h, h]);
+        inv.push(format!("{p}.mlp.c_proj.bias"), &[h]);
+    }
+    inv.norm("ln_f", h);
+    // lm_head tied to wte (no extra parameters).
+    inv
+}
+
+pub fn gpt2_124m() -> Inventory {
+    gpt2("gpt2_124m", &Gpt2Cfg { layers: 12, hidden: 768, vocab: 50257, max_pos: 1024 })
+}
+
+pub fn gpt2_345m() -> Inventory {
+    gpt2("gpt2_345m", &Gpt2Cfg { layers: 24, hidden: 1024, vocab: 50257, max_pos: 1024 })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_is_124m() {
+        let n = gpt2_124m().param_count();
+        assert!((123_000_000..126_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn megatron_is_354m() {
+        // Paper Table 3: Adam = 2.6 GiB -> N ≈ 349M.
+        let n = gpt2_345m().param_count();
+        assert!((340_000_000..360_000_000).contains(&n), "{n}");
+    }
+}

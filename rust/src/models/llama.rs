@@ -1,0 +1,76 @@
+//! LLaMA-7b + LoRA inventory (Touvron et al. 2023; Hu et al. 2021) — the
+//! paper's Table 4/7 and Figure 4 workload.
+//!
+//! The base model (6.7B params) is frozen and counted as resident bytes;
+//! the trainable inventory is the LoRA adapter set: rank-8 A/B pairs on
+//! every linear projection (q/k/v/o/gate/up/down), which lands at ~20M
+//! trainable params — matching the paper's 153 MiB Adam state (2N·4B).
+
+use super::Inventory;
+
+pub struct LlamaCfg {
+    pub layers: usize,
+    pub hidden: usize,
+    pub intermediate: usize,
+    pub vocab: usize,
+}
+
+pub const LLAMA_7B: LlamaCfg =
+    LlamaCfg { layers: 32, hidden: 4096, intermediate: 11008, vocab: 32000 };
+
+/// Full (frozen) base parameter count.
+pub fn llama_base_params(cfg: &LlamaCfg) -> u64 {
+    let h = cfg.hidden as u64;
+    let i = cfg.intermediate as u64;
+    let per_layer = 4 * h * h + 3 * h * i + 2 * h; // attn + mlp + 2 rmsnorm
+    cfg.vocab as u64 * h * 2 + cfg.layers as u64 * per_layer + h
+}
+
+/// LoRA adapters over every linear projection of every layer.
+pub fn llama7b_lora(rank: usize) -> Inventory {
+    let cfg = &LLAMA_7B;
+    let mut inv = Inventory::new(&format!("llama7b_lora_r{rank}"));
+    let h = cfg.hidden;
+    let i = cfg.intermediate;
+    for l in 0..cfg.layers {
+        let p = format!("model.layers.{l}");
+        for proj in ["q_proj", "k_proj", "v_proj", "o_proj"] {
+            inv.push(format!("{p}.self_attn.{proj}.lora_A"), &[rank, h]);
+            inv.push(format!("{p}.self_attn.{proj}.lora_B"), &[h, rank]);
+        }
+        for (proj, inf, outf) in
+            [("gate_proj", h, i), ("up_proj", h, i), ("down_proj", i, h)]
+        {
+            inv.push(format!("{p}.mlp.{proj}.lora_A"), &[rank, inf]);
+            inv.push(format!("{p}.mlp.{proj}.lora_B"), &[outf, rank]);
+        }
+    }
+    inv.frozen_bytes = llama_base_params(cfg) * 4; // fp32 resident base
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_is_6_7b() {
+        let n = llama_base_params(&LLAMA_7B);
+        assert!((6_500_000_000..6_900_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn lora_r8_is_20m_trainable() {
+        // Paper Table 4: Adam = 153 MiB = 2N·4B -> N ≈ 20.0M.
+        let n = llama7b_lora(8).param_count();
+        assert!((19_500_000..20_500_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn frozen_base_dominates_e2e() {
+        // Paper: end-to-end 24.9 GiB ≈ frozen fp32 base (25 GiB).
+        let inv = llama7b_lora(8);
+        let gib = inv.frozen_bytes as f64 / (1u64 << 30) as f64;
+        assert!((24.0..26.5).contains(&gib), "{gib}");
+    }
+}

@@ -1,0 +1,82 @@
+//! MobileNetV2 (Sandler et al. 2018) parameter inventory, torchvision
+//! layout: inverted residual blocks with 1×1 expand → 3×3 depthwise →
+//! 1×1 project, each followed by BatchNorm. Dominated by 1×1 convolutions,
+//! which is exactly the shape where Adafactor/CAME's last-two-dims
+//! factorization degenerates (paper Table 1).
+
+use super::{make_divisible, Inventory};
+
+/// (expansion t, output channels c, repeats n, stride s) per the paper.
+const CFG: [(usize, usize, usize, usize); 7] = [
+    (1, 16, 1, 1),
+    (6, 24, 2, 2),
+    (6, 32, 3, 2),
+    (6, 64, 4, 2),
+    (6, 96, 3, 1),
+    (6, 160, 3, 2),
+    (6, 320, 1, 1),
+];
+
+pub fn mobilenet_v2(classes: usize) -> Inventory {
+    mobilenet_v2_width(classes, 1.0)
+}
+
+pub fn mobilenet_v2_width(classes: usize, width: f64) -> Inventory {
+    let mut inv = Inventory::new(&format!("mobilenet_v2_c{classes}"));
+    let mut cin = make_divisible(32.0 * width, 8);
+    inv.conv("features.0.conv", cin, 3, 3);
+    inv.norm("features.0.bn", cin);
+    let mut idx = 1;
+    for (t, c, n, _s) in CFG {
+        let cout = make_divisible(c as f64 * width, 8);
+        for _ in 0..n {
+            let p = format!("features.{idx}");
+            let hidden = cin * t;
+            if t != 1 {
+                inv.conv(&format!("{p}.expand"), hidden, cin, 1);
+                inv.norm(&format!("{p}.expand_bn"), hidden);
+            }
+            inv.dwconv(&format!("{p}.dw"), hidden, 3);
+            inv.norm(&format!("{p}.dw_bn"), hidden);
+            inv.conv(&format!("{p}.project"), cout, hidden, 1);
+            inv.norm(&format!("{p}.project_bn"), cout);
+            cin = cout;
+            idx += 1;
+        }
+    }
+    let last = make_divisible(1280.0 * width.max(1.0), 8);
+    inv.conv("features.head", last, cin, 1);
+    inv.norm("features.head_bn", last);
+    inv.linear("classifier", last, classes);
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imagenet_param_count() {
+        // torchvision mobilenet_v2: 3,504,872 parameters.
+        assert_eq!(mobilenet_v2(1000).param_count(), 3_504_872);
+    }
+
+    #[test]
+    fn cifar_head() {
+        let d = mobilenet_v2(1000).param_count() - mobilenet_v2(100).param_count();
+        assert_eq!(d, (1280 * 900 + 900) as u64);
+    }
+
+    #[test]
+    fn pointwise_dominated() {
+        // >60% of parameters live in 1x1 convolutions.
+        let inv = mobilenet_v2(1000);
+        let pw: u64 = inv
+            .tensors
+            .iter()
+            .filter(|t| t.shape.len() == 4 && t.shape[2] == 1 && t.shape[1] > 1)
+            .map(|t| t.numel())
+            .sum();
+        assert!(pw as f64 > 0.6 * inv.param_count() as f64);
+    }
+}

@@ -1,0 +1,140 @@
+//! Exact parameter-shape inventories for every model the paper evaluates.
+//!
+//! Optimizer memory is a pure function of the trainable-parameter shapes,
+//! so the paper's memory tables are regenerated from these inventories
+//! without instantiating multi-GiB models. Each builder enumerates every
+//! weight/bias/norm tensor in declaration order with HF/torchvision
+//! naming conventions; `tests` pin total parameter counts against the
+//! published sizes.
+
+pub mod bart;
+pub mod bert;
+pub mod gpt2;
+pub mod llama;
+pub mod mobilenet;
+pub mod registry;
+pub mod resnet;
+pub mod t5;
+pub mod transformer;
+pub mod yolo;
+
+pub use registry::{inventory_by_name, list_inventories};
+
+/// One named parameter tensor.
+#[derive(Clone, Debug)]
+pub struct ParamTensor {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamTensor {
+    pub fn numel(&self) -> u64 {
+        self.shape.iter().product::<usize>() as u64
+    }
+}
+
+/// A model as a flat list of trainable tensors (plus optional frozen
+/// bytes, for LoRA fine-tuning where the base model is kept in memory but
+/// carries no optimizer state or gradients).
+#[derive(Clone, Debug, Default)]
+pub struct Inventory {
+    pub name: String,
+    pub tensors: Vec<ParamTensor>,
+    /// Frozen (non-trainable) parameter bytes resident during training.
+    pub frozen_bytes: u64,
+}
+
+impl Inventory {
+    pub fn new(name: &str) -> Inventory {
+        Inventory { name: name.to_string(), tensors: Vec::new(), frozen_bytes: 0 }
+    }
+
+    pub fn push(&mut self, name: impl Into<String>, shape: &[usize]) {
+        self.tensors.push(ParamTensor { name: name.into(), shape: shape.to_vec() });
+    }
+
+    /// conv weight (Cout, Cin, k, k)
+    pub fn conv(&mut self, name: &str, cout: usize, cin: usize, k: usize) {
+        self.push(format!("{name}.weight"), &[cout, cin, k, k]);
+    }
+
+    /// depthwise conv weight (C, 1, k, k)
+    pub fn dwconv(&mut self, name: &str, c: usize, k: usize) {
+        self.push(format!("{name}.weight"), &[c, 1, k, k]);
+    }
+
+    /// batch-norm / layer-norm scale + shift
+    pub fn norm(&mut self, name: &str, c: usize) {
+        self.push(format!("{name}.weight"), &[c]);
+        self.push(format!("{name}.bias"), &[c]);
+    }
+
+    /// norm with scale only (T5 RMSNorm, LLaMA RMSNorm)
+    pub fn rmsnorm(&mut self, name: &str, c: usize) {
+        self.push(format!("{name}.weight"), &[c]);
+    }
+
+    /// linear layer with bias
+    pub fn linear(&mut self, name: &str, inf: usize, outf: usize) {
+        self.push(format!("{name}.weight"), &[outf, inf]);
+        self.push(format!("{name}.bias"), &[outf]);
+    }
+
+    /// linear layer without bias
+    pub fn linear_nb(&mut self, name: &str, inf: usize, outf: usize) {
+        self.push(format!("{name}.weight"), &[outf, inf]);
+    }
+
+    /// embedding table
+    pub fn embedding(&mut self, name: &str, vocab: usize, dim: usize) {
+        self.push(format!("{name}.weight"), &[vocab, dim]);
+    }
+
+    pub fn param_count(&self) -> u64 {
+        self.tensors.iter().map(|t| t.numel()).sum()
+    }
+
+    pub fn shapes(&self) -> Vec<Vec<usize>> {
+        self.tensors.iter().map(|t| t.shape.clone()).collect()
+    }
+
+    pub fn param_bytes(&self) -> u64 {
+        self.param_count() * 4
+    }
+}
+
+/// Round channels to the nearest multiple of `div` (torchvision /
+/// YOLO width-multiple convention, never dropping below 90%).
+pub fn make_divisible(v: f64, div: usize) -> usize {
+    let d = div as f64;
+    let new_v = ((v + d / 2.0) / d).floor() * d;
+    let new_v = new_v.max(d);
+    if new_v < 0.9 * v {
+        (new_v + d) as usize
+    } else {
+        new_v as usize
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn inventory_helpers() {
+        let mut inv = Inventory::new("toy");
+        inv.conv("c1", 8, 3, 3);
+        inv.norm("bn1", 8);
+        inv.linear("fc", 8, 2);
+        assert_eq!(inv.param_count(), (8 * 3 * 9 + 16 + 8 * 2 + 2) as u64);
+        assert_eq!(inv.tensors.len(), 5);
+        assert_eq!(inv.tensors[0].shape, vec![8, 3, 3, 3]);
+    }
+
+    #[test]
+    fn divisible() {
+        assert_eq!(make_divisible(32.0 * 0.5, 8), 16);
+        assert_eq!(make_divisible(64.0 * 0.75, 8), 48);
+        assert_eq!(make_divisible(3.0, 8), 8);
+    }
+}

@@ -1,0 +1,75 @@
+//! Name -> inventory registry used by the CLI and experiment harness.
+
+use super::{bart, bert, gpt2, llama, mobilenet, resnet, t5, transformer, yolo, Inventory};
+
+/// All named inventories with the dataset context the paper pairs them
+/// with (classes / vocab already baked in).
+pub fn list_inventories() -> Vec<(&'static str, &'static str)> {
+    vec![
+        ("mobilenet_v2_cifar100", "Table 1 (CIFAR100)"),
+        ("mobilenet_v2_imagenet", "Table 1 (ImageNet)"),
+        ("resnet50_cifar100", "Table 1 (CIFAR100)"),
+        ("resnet50_imagenet", "Table 1 (ImageNet)"),
+        ("yolov5s", "Table 1 (COCO)"),
+        ("yolov5m", "Table 1 (COCO)"),
+        ("transformer_base", "Table 2 (WMT32k)"),
+        ("transformer_big", "Table 2 (WMT32k)"),
+        ("bert_345m", "Table 3 (pre-training)"),
+        ("gpt2_345m", "Table 3 (pre-training)"),
+        ("t5_base", "Table 3 (pre-training)"),
+        ("gpt2_124m", "Table 4 (GLUE fine-tuning)"),
+        ("t5_small", "Table 4 (GLUE fine-tuning)"),
+        ("llama7b_lora_r8", "Tables 4/7 (LoRA fine-tuning)"),
+        ("bert_base", "Table 6 (GLUE fine-tuning)"),
+        ("roberta_base", "Table 8 (SQuAD)"),
+        ("albert_base_v2", "Table 8 (SQuAD)"),
+        ("bart_base", "Table 12 (summarization)"),
+        ("mbart_large", "Table 13 (summarization)"),
+        ("marian_mt", "Table 10 (WMT16 En-Ro)"),
+    ]
+}
+
+pub fn inventory_by_name(name: &str) -> Option<Inventory> {
+    Some(match name {
+        "mobilenet_v2_cifar100" => mobilenet::mobilenet_v2(100),
+        "mobilenet_v2_imagenet" => mobilenet::mobilenet_v2(1000),
+        "resnet50_cifar100" => resnet::resnet50(100),
+        "resnet50_imagenet" => resnet::resnet50(1000),
+        "yolov5s" => yolo::yolov5s(80),
+        "yolov5m" => yolo::yolov5m(80),
+        "transformer_base" => transformer::transformer_base(),
+        "transformer_big" => transformer::transformer_big(),
+        "bert_base" => bert::bert_base(),
+        "bert_345m" => bert::bert_345m(),
+        "roberta_base" => bert::roberta_base(),
+        "albert_base_v2" => bert::albert_base_v2(),
+        "gpt2_124m" => gpt2::gpt2_124m(),
+        "gpt2_345m" => gpt2::gpt2_345m(),
+        "t5_small" => t5::t5_small(),
+        "t5_base" => t5::t5_base(),
+        "llama7b_lora_r8" => llama::llama7b_lora(8),
+        "bart_base" => bart::bart_base(),
+        "mbart_large" => bart::mbart_large(),
+        "marian_mt" => bart::marian_mt(),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_listed_name_resolves() {
+        for (name, _) in list_inventories() {
+            let inv = inventory_by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            assert!(inv.param_count() > 0, "{name}");
+            assert!(!inv.tensors.is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn unknown_is_none() {
+        assert!(inventory_by_name("gpt5").is_none());
+    }
+}

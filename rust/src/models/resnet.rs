@@ -1,0 +1,62 @@
+//! ResNet-50 (He et al. 2016) parameter inventory, torchvision layout.
+
+use super::Inventory;
+
+/// Bottleneck widths per stage and block counts for ResNet-50.
+const STAGES: [(usize, usize); 4] = [(64, 3), (128, 4), (256, 6), (512, 3)];
+const EXPANSION: usize = 4;
+
+/// Build the ResNet-50 inventory. `classes` = 1000 (ImageNet) or 100
+/// (CIFAR100 — the paper trains the same trunk with a smaller head).
+pub fn resnet50(classes: usize) -> Inventory {
+    let mut inv = Inventory::new(&format!("resnet50_c{classes}"));
+    inv.conv("conv1", 64, 3, 7);
+    inv.norm("bn1", 64);
+    let mut cin = 64;
+    for (stage_idx, (width, blocks)) in STAGES.iter().enumerate() {
+        let (width, blocks) = (*width, *blocks);
+        let cout = width * EXPANSION;
+        for b in 0..blocks {
+            let p = format!("layer{}.{}", stage_idx + 1, b);
+            inv.conv(&format!("{p}.conv1"), width, cin, 1);
+            inv.norm(&format!("{p}.bn1"), width);
+            inv.conv(&format!("{p}.conv2"), width, width, 3);
+            inv.norm(&format!("{p}.bn2"), width);
+            inv.conv(&format!("{p}.conv3"), cout, width, 1);
+            inv.norm(&format!("{p}.bn3"), cout);
+            if b == 0 {
+                // projection shortcut on the first block of every stage
+                inv.conv(&format!("{p}.downsample.0"), cout, cin, 1);
+                inv.norm(&format!("{p}.downsample.1"), cout);
+            }
+            cin = cout;
+        }
+    }
+    inv.linear("fc", 512 * EXPANSION, classes);
+    inv
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn imagenet_param_count() {
+        // torchvision resnet50: 25,557,032 parameters.
+        assert_eq!(resnet50(1000).param_count(), 25_557_032);
+    }
+
+    #[test]
+    fn cifar_head_shrinks() {
+        let full = resnet50(1000).param_count();
+        let cifar = resnet50(100).param_count();
+        assert_eq!(full - cifar, (2048 * 900 + 900) as u64);
+    }
+
+    #[test]
+    fn mostly_conv_tensors() {
+        let inv = resnet50(1000);
+        let convs = inv.tensors.iter().filter(|t| t.shape.len() == 4).count();
+        assert_eq!(convs, 53); // 53 conv layers in resnet50
+    }
+}

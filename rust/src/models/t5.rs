@@ -1,0 +1,82 @@
+//! T5 inventories (Raffel et al. 2020): T5-small (fine-tuning, Tables 4,
+//! 9–11) and T5-base (pre-training, Table 3). HF layout: RMSNorm scales
+//! only, no biases in linears, relative-attention bias tables in the first
+//! layer of each stack, lm_head tied to the shared embedding.
+
+use super::Inventory;
+
+pub struct T5Cfg {
+    pub layers: usize, // per stack
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub d_kv: usize,
+    pub heads: usize,
+    pub vocab: usize,
+}
+
+pub const SMALL: T5Cfg =
+    T5Cfg { layers: 6, d_model: 512, d_ff: 2048, d_kv: 64, heads: 8, vocab: 32128 };
+pub const BASE: T5Cfg =
+    T5Cfg { layers: 12, d_model: 768, d_ff: 3072, d_kv: 64, heads: 12, vocab: 32128 };
+
+fn t5_attention(inv: &mut Inventory, p: &str, cfg: &T5Cfg, rel_bias: bool) {
+    let inner = cfg.d_kv * cfg.heads;
+    inv.linear_nb(&format!("{p}.q"), cfg.d_model, inner);
+    inv.linear_nb(&format!("{p}.k"), cfg.d_model, inner);
+    inv.linear_nb(&format!("{p}.v"), cfg.d_model, inner);
+    inv.linear_nb(&format!("{p}.o"), inner, cfg.d_model);
+    if rel_bias {
+        inv.push(format!("{p}.relative_attention_bias"), &[32, cfg.heads]);
+    }
+}
+
+pub fn t5(name: &str, cfg: &T5Cfg) -> Inventory {
+    let mut inv = Inventory::new(name);
+    inv.embedding("shared", cfg.vocab, cfg.d_model);
+    for stack in ["encoder", "decoder"] {
+        let is_dec = stack == "decoder";
+        for l in 0..cfg.layers {
+            let p = format!("{stack}.block.{l}");
+            inv.rmsnorm(&format!("{p}.layer.0.layer_norm"), cfg.d_model);
+            t5_attention(&mut inv, &format!("{p}.layer.0.SelfAttention"), cfg, l == 0);
+            let mut li = 1;
+            if is_dec {
+                inv.rmsnorm(&format!("{p}.layer.1.layer_norm"), cfg.d_model);
+                t5_attention(&mut inv, &format!("{p}.layer.1.EncDecAttention"), cfg, false);
+                li = 2;
+            }
+            inv.rmsnorm(&format!("{p}.layer.{li}.layer_norm"), cfg.d_model);
+            inv.linear_nb(&format!("{p}.layer.{li}.DenseReluDense.wi"), cfg.d_model, cfg.d_ff);
+            inv.linear_nb(&format!("{p}.layer.{li}.DenseReluDense.wo"), cfg.d_ff, cfg.d_model);
+        }
+        inv.rmsnorm(&format!("{stack}.final_layer_norm"), cfg.d_model);
+    }
+    inv
+}
+
+pub fn t5_small() -> Inventory {
+    t5("t5_small", &SMALL)
+}
+
+pub fn t5_base() -> Inventory {
+    t5("t5_base", &BASE)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn small_is_60m() {
+        // HF t5-small: 60.5M parameters.
+        let n = t5_small().param_count();
+        assert!((59_000_000..62_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn base_is_223m() {
+        // Paper Table 3: Adam = 1.7 GiB -> N ≈ 228M; HF t5-base 222.9M.
+        let n = t5_base().param_count();
+        assert!((218_000_000..228_000_000).contains(&n), "{n}");
+    }
+}

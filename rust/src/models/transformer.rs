@@ -1,0 +1,95 @@
+//! Transformer-base / big (Vaswani et al. 2017) for WMT32k — the paper's
+//! full-training workload (Table 2). tensor2tensor conventions: separate
+//! source/target embeddings, softmax weights tied to the target embedding,
+//! learned biases in attention/FFN, LayerNorm everywhere.
+
+use super::Inventory;
+
+pub struct TransformerCfg {
+    pub d_model: usize,
+    pub d_ff: usize,
+    pub layers: usize,
+    pub vocab: usize,
+}
+
+pub const BASE: TransformerCfg =
+    TransformerCfg { d_model: 512, d_ff: 2048, layers: 6, vocab: 32768 };
+pub const BIG: TransformerCfg =
+    TransformerCfg { d_model: 1024, d_ff: 4096, layers: 6, vocab: 32768 };
+
+fn attention(inv: &mut Inventory, p: &str, d: usize) {
+    for proj in ["q", "k", "v", "o"] {
+        inv.linear(&format!("{p}.attn.{proj}"), d, d);
+    }
+}
+
+fn ffn(inv: &mut Inventory, p: &str, d: usize, ff: usize) {
+    inv.linear(&format!("{p}.ffn.w1"), d, ff);
+    inv.linear(&format!("{p}.ffn.w2"), ff, d);
+}
+
+pub fn transformer_mt(name: &str, cfg: &TransformerCfg) -> Inventory {
+    let mut inv = Inventory::new(name);
+    let d = cfg.d_model;
+    // Separate source/target embeddings and softmax projection (the
+    // unshared tensor2tensor configuration the paper's 0.7 GiB Adam
+    // footprint implies).
+    inv.embedding("src_emb", cfg.vocab, d);
+    inv.embedding("tgt_emb", cfg.vocab, d);
+    inv.linear_nb("softmax", d, cfg.vocab);
+    for l in 0..cfg.layers {
+        let p = format!("encoder.{l}");
+        inv.norm(&format!("{p}.ln1"), d);
+        attention(&mut inv, &p, d);
+        inv.norm(&format!("{p}.ln2"), d);
+        ffn(&mut inv, &p, d, cfg.d_ff);
+    }
+    inv.norm("encoder.ln_final", d);
+    for l in 0..cfg.layers {
+        let p = format!("decoder.{l}");
+        inv.norm(&format!("{p}.ln1"), d);
+        attention(&mut inv, &p, d); // self-attention
+        inv.norm(&format!("{p}.ln2"), d);
+        for proj in ["q", "k", "v", "o"] {
+            inv.linear(&format!("{p}.cross.{proj}"), d, d);
+        }
+        inv.norm(&format!("{p}.ln3"), d);
+        ffn(&mut inv, &p, d, cfg.d_ff);
+    }
+    inv.norm("decoder.ln_final", d);
+    inv
+}
+
+pub fn transformer_base() -> Inventory {
+    transformer_mt("transformer_base", &BASE)
+}
+
+pub fn transformer_big() -> Inventory {
+    transformer_mt("transformer_big", &BIG)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_matches_paper_memory_scale() {
+        // Paper Table 2: Adam on Transformer-base = 0.7 GiB = 2N floats
+        // -> N ≈ 94M. Our inventory must land in that band.
+        let n = transformer_base().param_count();
+        assert!((85_000_000..100_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn big_matches_paper_memory_scale() {
+        // Adam on big = 2.1 GiB -> N ≈ 282M.
+        let n = transformer_big().param_count();
+        assert!((260_000_000..300_000_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn all_matrices_are_2d() {
+        let inv = transformer_base();
+        assert!(inv.tensors.iter().all(|t| t.shape.len() <= 2));
+    }
+}

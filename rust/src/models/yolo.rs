@@ -1,0 +1,120 @@
+//! YOLOv5 s/m (Ultralytics, v6.0 architecture) parameter inventory:
+//! CSPDarknet backbone + SPPF + PANet head + Detect, with the
+//! depth/width-multiple scaling that differentiates the s and m variants.
+
+use super::{make_divisible, Inventory};
+
+struct Builder {
+    inv: Inventory,
+    width: f64,
+    depth: f64,
+    idx: usize,
+}
+
+impl Builder {
+    fn ch(&self, c: usize) -> usize {
+        make_divisible(c as f64 * self.width, 8)
+    }
+
+    fn depth(&self, n: usize) -> usize {
+        ((n as f64 * self.depth).round() as usize).max(1)
+    }
+
+    /// Conv = conv2d(k) + BN (+ SiLU).
+    fn conv(&mut self, cin: usize, cout: usize, k: usize) -> usize {
+        let name = format!("m{}.conv", self.idx);
+        self.idx += 1;
+        self.inv.conv(&name, cout, cin, k);
+        self.inv.norm(&format!("{name}.bn"), cout);
+        cout
+    }
+
+    /// C3 module: cv1/cv2 1×1 into c/2, n bottlenecks, cv3 1×1 out.
+    fn c3(&mut self, cin: usize, cout: usize, n: usize) -> usize {
+        let c_ = cout / 2;
+        self.conv(cin, c_, 1); // cv1
+        self.conv(cin, c_, 1); // cv2
+        for _ in 0..self.depth(n) {
+            self.conv(c_, c_, 1); // bottleneck cv1
+            self.conv(c_, c_, 3); // bottleneck cv2
+        }
+        self.conv(2 * c_, cout, 1) // cv3
+    }
+
+    /// SPPF: cv1 1×1 c→c/2, pyramid pooling (no params), cv2 1×1 2c→c.
+    fn sppf(&mut self, cin: usize, cout: usize) -> usize {
+        let c_ = cin / 2;
+        self.conv(cin, c_, 1);
+        self.conv(c_ * 4, cout, 1)
+    }
+}
+
+/// Build YOLOv5 with the given multiples. nc = classes (80 for COCO),
+/// 3 anchors per scale, 3 detection scales (P3/P4/P5).
+pub fn yolov5(name: &str, depth: f64, width: f64, nc: usize) -> Inventory {
+    let mut b = Builder { inv: Inventory::new(name), width, depth, idx: 0 };
+    // backbone
+    let c64 = b.ch(64);
+    let c128 = b.ch(128);
+    let c256 = b.ch(256);
+    let c512 = b.ch(512);
+    let c1024 = b.ch(1024);
+    b.conv(3, c64, 6); // P1/2 stem (v6.0: 6x6 stride-2)
+    b.conv(c64, c128, 3); // P2/4
+    b.c3(c128, c128, 3);
+    b.conv(c128, c256, 3); // P3/8
+    b.c3(c256, c256, 6);
+    b.conv(c256, c512, 3); // P4/16
+    b.c3(c512, c512, 9);
+    b.conv(c512, c1024, 3); // P5/32
+    b.c3(c1024, c1024, 3);
+    b.sppf(c1024, c1024);
+    // head (PANet)
+    b.conv(c1024, c512, 1);
+    b.c3(c512 + c512, c512, 3); // cat with backbone P4
+    b.conv(c512, c256, 1);
+    b.c3(c256 + c256, c256, 3); // cat with backbone P3 -> P3 out
+    b.conv(c256, c256, 3); // downsample
+    b.c3(c256 + c256, c512, 3); // -> P4 out
+    b.conv(c512, c512, 3); // downsample
+    b.c3(c512 + c512, c1024, 3); // -> P5 out
+    // Detect: 1×1 conv per scale to 3*(5+nc), with bias.
+    let no = 3 * (5 + nc);
+    for (i, c) in [c256, c512, c1024].iter().enumerate() {
+        b.inv.conv(&format!("detect.m.{i}"), no, *c, 1);
+        b.inv.push(format!("detect.m.{i}.bias"), &[no]);
+    }
+    b.inv
+}
+
+pub fn yolov5s(nc: usize) -> Inventory {
+    yolov5("yolov5s", 0.33, 0.50, nc)
+}
+
+pub fn yolov5m(nc: usize) -> Inventory {
+    yolov5("yolov5m", 0.67, 0.75, nc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn yolov5s_coco_param_count() {
+        // Ultralytics reports 7.2M params for YOLOv5s (80 classes).
+        let n = yolov5s(80).param_count();
+        assert!((7_000_000..7_500_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn yolov5m_coco_param_count() {
+        // Ultralytics reports 21.2M params for YOLOv5m.
+        let n = yolov5m(80).param_count();
+        assert!((20_800_000..21_600_000).contains(&n), "{n}");
+    }
+
+    #[test]
+    fn m_deeper_and_wider_than_s() {
+        assert!(yolov5m(80).tensors.len() > yolov5s(80).tensors.len());
+    }
+}

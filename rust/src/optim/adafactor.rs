@@ -1,0 +1,264 @@
+//! Adafactor baseline (Shazeer & Stern 2018), Hugging Face conventions.
+//!
+//! Factored 2nd moment for rank >= 2 tensors: `exp_avg_sq_row` over
+//! `shape[:-1]` and `exp_avg_sq_col` over `shape[:-2] + shape[-1:]`. This
+//! is the convention the paper's measurements reflect — note that for 1×1
+//! convolutions it stores *2N* floats for V (worse than dense Adam), which
+//! is exactly why the paper's Table 1 shows Adafactor using more memory
+//! than Adam on CNNs.
+//!
+//! With β1 > 0 a dense 1st moment (N floats) is kept, matching the paper's
+//! configs (β1 = 0.9 everywhere).
+
+use super::schedule::beta2_t;
+use super::{OptimConfig, Optimizer, WeightDecayMode};
+use crate::tensor::Tensor;
+
+enum VState {
+    Factored { row: Vec<f32>, col: Vec<f32>, last: usize, second: usize, lead: usize },
+    Dense(Vec<f32>),
+}
+
+struct PState {
+    v: VState,
+    m: Option<Vec<f32>>,
+}
+
+pub struct Adafactor {
+    cfg: OptimConfig,
+    states: Vec<PState>,
+    t: u64,
+    scratch: Vec<f32>,
+    /// Reusable per-row rsqrt(col-factor) buffer (perf: hoisted out of
+    /// the inner update loop).
+    cfac: Vec<f32>,
+}
+
+fn rms(x: &[f32]) -> f32 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    (x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64).sqrt() as f32
+}
+
+impl Adafactor {
+    pub fn new(shapes: &[Vec<usize>], cfg: &OptimConfig) -> Adafactor {
+        let states = shapes
+            .iter()
+            .map(|shape| {
+                let numel: usize = shape.iter().product();
+                let v = if shape.len() >= 2 {
+                    let last = shape[shape.len() - 1];
+                    let second = shape[shape.len() - 2];
+                    let lead: usize = shape[..shape.len() - 2].iter().product();
+                    VState::Factored {
+                        row: vec![0.0; lead * second],
+                        col: vec![0.0; lead * last],
+                        last,
+                        second,
+                        lead,
+                    }
+                } else {
+                    VState::Dense(vec![0.0; numel])
+                };
+                let m = (cfg.beta1 > 0.0).then(|| vec![0.0; numel]);
+                PState { v, m }
+            })
+            .collect();
+        Adafactor { cfg: cfg.clone(), states, t: 0, scratch: Vec::new(), cfac: Vec::new() }
+    }
+
+}
+
+impl Optimizer for Adafactor {
+    fn name(&self) -> &'static str {
+        "adafactor"
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        self.t += 1;
+        let beta2 = beta2_t(self.cfg.decay_rate, self.t);
+        let cfg = self.cfg.clone();
+        for ((param, grad), st) in params.iter_mut().zip(grads).zip(self.states.iter_mut()) {
+            let p = param.data_mut();
+            let g = grad.data();
+            let lr = self.cfg.lr; // captured before mutable borrows below
+            let alpha = if cfg.relative_step {
+                let rel = (1.0f32 / (self.t as f32).sqrt()).min(1e-2);
+                rel * rms(p).max(cfg.eps2)
+            } else {
+                lr
+            };
+            // update = g / sqrt(v̂); factored v̂ via the HF approximation.
+            self.scratch.clear();
+            self.scratch.extend_from_slice(g);
+            let u = &mut self.scratch;
+            match &mut st.v {
+                VState::Factored { row, col, last, second, lead } => {
+                    let (last, second, lead) = (*last, *second, *lead);
+                    // v_row[l, s] <- b2 v_row + (1-b2) mean_j (g²+eps1)
+                    // v_col[l, j] <- b2 v_col + (1-b2) mean_s (g²+eps1)
+                    // Perf: the column reduction walks rows sequentially
+                    // (cache-friendly) instead of striding by `last`.
+                    self.cfac.resize(last, 0.0);
+                    for l in 0..lead {
+                        let block = &g[l * second * last..(l + 1) * second * last];
+                        self.cfac.iter_mut().for_each(|x| *x = 0.0);
+                        for s in 0..second {
+                            let r = &block[s * last..(s + 1) * last];
+                            let mut sum = 0.0f32;
+                            for (acc, &x) in self.cfac.iter_mut().zip(r) {
+                                let sq = x * x + cfg.eps1;
+                                sum += sq;
+                                *acc += sq;
+                            }
+                            let idx = l * second + s;
+                            row[idx] = beta2 * row[idx] + (1.0 - beta2) * sum / last as f32;
+                        }
+                        let scale = (1.0 - beta2) / second as f32;
+                        for (c, &acc) in
+                            col[l * last..(l + 1) * last].iter_mut().zip(self.cfac.iter())
+                        {
+                            *c = beta2 * *c + scale * acc;
+                        }
+                    }
+                    // approx rsqrt(v̂): u = g * r_factor * c_factor.
+                    // Perf: hoist the per-column factor out of the s-loop
+                    // (it was recomputed `second` times) and use
+                    // sqrt().recip() instead of powf(-0.5).
+                    self.cfac.resize(last, 0.0);
+                    for l in 0..lead {
+                        for (cf, &c) in self.cfac.iter_mut().zip(&col[l * last..(l + 1) * last]) {
+                            *cf = c.max(1e-30).sqrt().recip();
+                        }
+                        let rslice = &row[l * second..(l + 1) * second];
+                        let rmean = rslice.iter().sum::<f32>() / second as f32;
+                        for s in 0..second {
+                            let rfac = (rmean.max(1e-30) / rslice[s].max(1e-30)).sqrt();
+                            let urow = &mut u[(l * second + s) * last..(l * second + s + 1) * last];
+                            for (uij, &cf) in urow.iter_mut().zip(self.cfac.iter()) {
+                                *uij *= rfac * cf;
+                            }
+                        }
+                    }
+                }
+                VState::Dense(v) => {
+                    for (vij, &gij) in v.iter_mut().zip(g) {
+                        *vij = beta2 * *vij + (1.0 - beta2) * (gij * gij + cfg.eps1);
+                    }
+                    for (uij, vij) in u.iter_mut().zip(v.iter()) {
+                        *uij /= vij.sqrt().max(1e-30);
+                    }
+                }
+            }
+            // Clip by RMS(update)/d.
+            let denom = (rms(u) / cfg.clip_threshold).max(1.0);
+            u.iter_mut().for_each(|x| *x /= denom);
+            // 1st moment.
+            if let Some(m) = &mut st.m {
+                for (mij, &uij) in m.iter_mut().zip(u.iter()) {
+                    *mij = cfg.beta1 * *mij + (1.0 - cfg.beta1) * uij;
+                }
+                u.copy_from_slice(m);
+            }
+            // Weight decay + apply.
+            if cfg.weight_decay != 0.0 {
+                match cfg.weight_decay_mode {
+                    WeightDecayMode::AdamW => {
+                        let f = 1.0 - alpha * cfg.weight_decay;
+                        p.iter_mut().for_each(|w| *w *= f);
+                    }
+                    WeightDecayMode::Adam => {
+                        for (uij, &w) in u.iter_mut().zip(p.iter()) {
+                            *uij += cfg.weight_decay * w;
+                        }
+                    }
+                }
+            }
+            for (w, &uij) in p.iter_mut().zip(u.iter()) {
+                *w -= alpha * uij;
+            }
+        }
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+        self.cfg.relative_step = false;
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.states
+            .iter()
+            .map(|s| {
+                let v = match &s.v {
+                    VState::Factored { row, col, .. } => row.len() + col.len(),
+                    VState::Dense(v) => v.len(),
+                };
+                ((v + s.m.as_ref().map_or(0, |m| m.len())) * 4) as u64
+            })
+            .sum()
+    }
+
+    fn scratch_bytes(&self) -> u64 {
+        (self.scratch.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::OptKind;
+
+    #[test]
+    fn factored_memory_rule() {
+        // (64, 32): V = 64 + 32 floats; M = 2048 floats.
+        let cfg = OptimConfig::paper_defaults(OptKind::Adafactor);
+        let a = Adafactor::new(&[vec![64, 32]], &cfg);
+        assert_eq!(a.state_bytes(), ((64 + 32 + 64 * 32) * 4) as u64);
+        // 1x1 conv (Co, Ci, 1, 1): rows Co*Ci*1 + cols Co*Ci*1 = 2N — the
+        // pathology the paper exploits in Table 1.
+        let b = Adafactor::new(&[vec![8, 4, 1, 1]], &cfg);
+        assert_eq!(b.state_bytes(), ((2 * 32 + 32) * 4) as u64);
+    }
+
+    #[test]
+    fn quadratic_convergence_fixed_lr() {
+        let cfg = OptimConfig {
+            lr: 0.05,
+            relative_step: false,
+            ..OptimConfig::paper_defaults(OptKind::Adafactor)
+        };
+        let mut opt = Adafactor::new(&[vec![3, 3]], &cfg);
+        let mut p = vec![Tensor::from_vec(&[3, 3], (1..=9).map(|i| i as f32 / 3.0).collect())];
+        for _ in 0..400 {
+            let mut g = p[0].clone();
+            g.scale(2.0);
+            opt.step(&mut p, &[g]);
+        }
+        assert!(p[0].max_abs() < 0.1, "{:?}", p[0].data());
+    }
+
+    #[test]
+    fn relative_step_uses_param_scale() {
+        let cfg = OptimConfig {
+            relative_step: true,
+            ..OptimConfig::paper_defaults(OptKind::Adafactor)
+        };
+        let mut opt = Adafactor::new(&[vec![4]], &cfg);
+        let mut p = vec![Tensor::from_vec(&[4], vec![100.0, 100.0, 100.0, 100.0])];
+        let before = p[0].data()[0];
+        let g = vec![Tensor::from_vec(&[4], vec![1.0, 1.0, 1.0, 1.0])];
+        opt.step(&mut p, &g);
+        // alpha = min(1e-2, 1/sqrt(1)) * RMS(p)=100 -> 1.0; first-step
+        // momentum dampens the update to (1-beta1)=0.1 of that.
+        let delta = before - p[0].data()[0];
+        assert!(delta > 0.05 && delta < 0.2, "delta={delta}");
+        // A 100x smaller parameter gets a 100x smaller absolute step.
+        let mut opt2 = Adafactor::new(&[vec![4]], &cfg);
+        let mut p2 = vec![Tensor::from_vec(&[4], vec![1.0, 1.0, 1.0, 1.0])];
+        let g2 = vec![Tensor::from_vec(&[4], vec![1.0, 1.0, 1.0, 1.0])];
+        opt2.step(&mut p2, &g2);
+        let delta2 = 1.0 - p2[0].data()[0];
+        assert!((delta / delta2 - 100.0).abs() < 5.0, "ratio={}", delta / delta2);
+    }
+}

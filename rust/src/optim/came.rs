@@ -1,0 +1,278 @@
+//! CAME baseline (Luo et al. 2023): Confidence-guided Adaptive Memory
+//! Efficient optimizer.
+//!
+//! Adafactor's factored 2nd moment plus (a) a dense 1st moment and (b) a
+//! *factored instability/confidence* matrix `U = (û − m)²` with its own
+//! decay β3, used to rescale the momentum update. State per rank-≥2
+//! tensor: `N` (momentum) + rows+cols (V) + rows+cols (U) — for 1×1 convs
+//! that is ≈ 5N floats, reproducing CAME's surprisingly *large* CNN
+//! memory in the paper's Table 1.
+
+use super::schedule::beta2_t;
+use super::{OptimConfig, Optimizer, WeightDecayMode};
+use crate::tensor::Tensor;
+
+struct Factored {
+    row: Vec<f32>,
+    col: Vec<f32>,
+    last: usize,
+    second: usize,
+    lead: usize,
+}
+
+impl Factored {
+    fn new(shape: &[usize]) -> Option<Factored> {
+        if shape.len() < 2 {
+            return None;
+        }
+        let last = shape[shape.len() - 1];
+        let second = shape[shape.len() - 2];
+        let lead: usize = shape[..shape.len() - 2].iter().product();
+        Some(Factored {
+            row: vec![0.0; lead * second],
+            col: vec![0.0; lead * last],
+            last,
+            second,
+            lead,
+        })
+    }
+
+    /// EMA-update the factors with row/col means of `sq` and then scale
+    /// `out` by the approximate rsqrt of the reconstructed matrix.
+    /// Perf (§Perf): column EMA accumulated row-wise (sequential reads),
+    /// per-column rsqrt hoisted out of the s-loop, powf -> sqrt.recip.
+    fn update_and_rsqrt(&mut self, sq: &[f32], beta: f32, out: &mut [f32], cfac: &mut Vec<f32>) {
+        let (last, second, lead) = (self.last, self.second, self.lead);
+        cfac.resize(last, 0.0);
+        for l in 0..lead {
+            let block = &sq[l * second * last..(l + 1) * second * last];
+            let colslice = &mut self.col[l * last..(l + 1) * last];
+            cfac.iter_mut().for_each(|x| *x = 0.0);
+            for s in 0..second {
+                let brow = &block[s * last..(s + 1) * last];
+                let mean = brow.iter().sum::<f32>() / last as f32;
+                let idx = l * second + s;
+                self.row[idx] = beta * self.row[idx] + (1.0 - beta) * mean;
+                for (acc, &x) in cfac.iter_mut().zip(brow) {
+                    *acc += x;
+                }
+            }
+            let scale = (1.0 - beta) / second as f32;
+            for (c, &acc) in colslice.iter_mut().zip(cfac.iter()) {
+                *c = beta * *c + scale * acc;
+            }
+        }
+        for l in 0..lead {
+            for (cf, &c) in cfac.iter_mut().zip(&self.col[l * last..(l + 1) * last]) {
+                *cf = c.max(1e-30).sqrt().recip();
+            }
+            let rslice = &self.row[l * second..(l + 1) * second];
+            let rmean = rslice.iter().sum::<f32>() / second as f32;
+            for s in 0..second {
+                let rfac = (rmean.max(1e-30) / rslice[s].max(1e-30)).sqrt();
+                let orow = &mut out[(l * second + s) * last..(l * second + s + 1) * last];
+                for (o, &cf) in orow.iter_mut().zip(cfac.iter()) {
+                    *o *= rfac * cf;
+                }
+            }
+        }
+    }
+
+    fn len(&self) -> usize {
+        self.row.len() + self.col.len()
+    }
+}
+
+struct PState {
+    v: Option<Factored>,
+    v_dense: Vec<f32>, // used when rank < 2
+    u: Option<Factored>,
+    u_dense: Vec<f32>,
+    m: Vec<f32>,
+}
+
+pub struct Came {
+    cfg: OptimConfig,
+    states: Vec<PState>,
+    t: u64,
+    scratch: Vec<f32>,
+    scratch2: Vec<f32>,
+    /// Reusable per-column factor buffer (perf).
+    cfac: Vec<f32>,
+    /// Reusable instability / update buffers (perf: no per-step allocs).
+    inst: Vec<f32>,
+    upd: Vec<f32>,
+}
+
+fn rms(x: &[f32]) -> f32 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    (x.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / x.len() as f64).sqrt() as f32
+}
+
+impl Came {
+    pub fn new(shapes: &[Vec<usize>], cfg: &OptimConfig) -> Came {
+        let states = shapes
+            .iter()
+            .map(|shape| {
+                let numel: usize = shape.iter().product();
+                let v = Factored::new(shape);
+                let u = Factored::new(shape);
+                PState {
+                    v_dense: if v.is_none() { vec![0.0; numel] } else { Vec::new() },
+                    u_dense: if u.is_none() { vec![0.0; numel] } else { Vec::new() },
+                    v,
+                    u,
+                    m: vec![0.0; numel],
+                }
+            })
+            .collect();
+        Came { cfg: cfg.clone(), states, t: 0, scratch: Vec::new(), scratch2: Vec::new(), cfac: Vec::new(), inst: Vec::new(), upd: Vec::new() }
+    }
+}
+
+impl Optimizer for Came {
+    fn name(&self) -> &'static str {
+        "came"
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        self.t += 1;
+        let cfg = self.cfg.clone();
+        let beta2 = beta2_t(cfg.decay_rate, self.t);
+        for ((param, grad), st) in params.iter_mut().zip(grads).zip(self.states.iter_mut()) {
+            let p = param.data_mut();
+            let g = grad.data();
+            // û = g / sqrt(V̂ + eps1)
+            self.scratch.clear();
+            self.scratch.extend_from_slice(g);
+            let uhat = &mut self.scratch;
+            self.scratch2.clear();
+            self.scratch2.extend(g.iter().map(|&x| x * x + cfg.eps1));
+            let sq = &self.scratch2;
+            match &mut st.v {
+                Some(f) => f.update_and_rsqrt(sq, beta2, uhat, &mut self.cfac),
+                None => {
+                    for (vij, &s) in st.v_dense.iter_mut().zip(sq) {
+                        *vij = beta2 * *vij + (1.0 - beta2) * s;
+                    }
+                    for (u, vij) in uhat.iter_mut().zip(&st.v_dense) {
+                        *u /= vij.sqrt().max(1e-30);
+                    }
+                }
+            }
+            // clip
+            let denom = (rms(uhat) / cfg.clip_threshold).max(1.0);
+            uhat.iter_mut().for_each(|x| *x /= denom);
+            // m = β1 m + (1-β1) û
+            for (mij, &u) in st.m.iter_mut().zip(uhat.iter()) {
+                *mij = cfg.beta1 * *mij + (1.0 - cfg.beta1) * u;
+            }
+            // instability U = (û − m)², factored with β3; confidence-scaled
+            // update = m / sqrt(Û + eps2)
+            let m = &st.m;
+            self.inst.clear();
+            self.inst.extend(
+                uhat.iter().zip(m.iter()).map(|(&u, &mij)| (u - mij) * (u - mij) + cfg.eps2),
+            );
+            let inst = &self.inst;
+            self.upd.clear();
+            self.upd.extend_from_slice(m);
+            let update = &mut self.upd;
+            match &mut st.u {
+                Some(f) => f.update_and_rsqrt(inst, cfg.beta3, update, &mut self.cfac),
+                None => {
+                    for (uij, &s) in st.u_dense.iter_mut().zip(inst) {
+                        *uij = cfg.beta3 * *uij + (1.0 - cfg.beta3) * s;
+                    }
+                    for (x, uij) in update.iter_mut().zip(&st.u_dense) {
+                        *x /= uij.sqrt().max(1e-30);
+                    }
+                }
+            }
+            // weight decay + apply
+            if cfg.weight_decay != 0.0 {
+                match cfg.weight_decay_mode {
+                    WeightDecayMode::AdamW => {
+                        let f = 1.0 - cfg.lr * cfg.weight_decay;
+                        p.iter_mut().for_each(|w| *w *= f);
+                    }
+                    WeightDecayMode::Adam => {
+                        for (x, &w) in update.iter_mut().zip(p.iter()) {
+                            *x += cfg.weight_decay * w;
+                        }
+                    }
+                }
+            }
+            for (w, &x) in p.iter_mut().zip(update.iter()) {
+                *w -= cfg.lr * x;
+            }
+        }
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.states
+            .iter()
+            .map(|s| {
+                let v = s.v.as_ref().map_or(s.v_dense.len(), |f| f.len());
+                let u = s.u.as_ref().map_or(s.u_dense.len(), |f| f.len());
+                ((v + u + s.m.len()) * 4) as u64
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::OptKind;
+
+    #[test]
+    fn memory_rule_matches_paper_pathology() {
+        let cfg = OptimConfig::paper_defaults(OptKind::Came);
+        // 2D (n, m): N + 2(n + m)
+        let a = Came::new(&[vec![64, 32]], &cfg);
+        assert_eq!(a.state_bytes(), ((64 * 32 + 2 * (64 + 32)) * 4) as u64);
+        // 1×1 conv: N + 2·2N = 5N — CAME's CNN blow-up (paper Table 1).
+        let b = Came::new(&[vec![16, 8, 1, 1]], &cfg);
+        assert_eq!(b.state_bytes(), ((5 * 128) * 4) as u64);
+    }
+
+    #[test]
+    fn quadratic_convergence() {
+        let cfg = OptimConfig {
+            lr: 0.05,
+            ..OptimConfig::paper_defaults(OptKind::Came)
+        };
+        let mut opt = Came::new(&[vec![4, 4]], &cfg);
+        let mut p = vec![Tensor::from_vec(&[4, 4], (1..=16).map(|i| i as f32 / 4.0).collect())];
+        for _ in 0..500 {
+            let mut g = p[0].clone();
+            g.scale(2.0);
+            opt.step(&mut p, &[g]);
+        }
+        assert!(p[0].max_abs() < 0.2, "{:?}", p[0].data());
+    }
+
+    #[test]
+    fn confidence_dampens_unstable_coordinates() {
+        // A coordinate whose û flips sign every step has high instability
+        // and must receive a smaller effective update than a stable one.
+        let cfg = OptimConfig { lr: 1.0, eps2: 1e-6, ..OptimConfig::paper_defaults(OptKind::Came) };
+        let mut opt = Came::new(&[vec![1, 2]], &cfg);
+        let mut p = vec![Tensor::zeros(&[1, 2])];
+        for t in 0..30 {
+            let flip = if t % 2 == 0 { 1.0 } else { -1.0 };
+            let g = vec![Tensor::from_vec(&[1, 2], vec![1.0, flip])];
+            opt.step(&mut p, &g);
+        }
+        // stable coordinate moved much further
+        let d = p[0].data();
+        assert!(d[0].abs() > 3.0 * d[1].abs(), "{:?}", d);
+    }
+}

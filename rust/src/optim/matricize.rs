@@ -1,0 +1,91 @@
+//! Square-matricization (paper Algorithm 2).
+//!
+//! Given a tensor with `numel` elements, find the factorization
+//! `numel = n * m` minimizing `|n - m|` (equivalently `n + m`, Theorem 3.2)
+//! by scanning `i = floor(sqrt(numel)) .. 1` for the largest divisor.
+//! Computed once per tensor at optimizer construction — O(sqrt N).
+
+/// Returns `(n, m)` with `n >= m`, `n * m == numel`, `|n - m|` minimal.
+pub fn effective_shape(numel: usize) -> (usize, usize) {
+    assert!(numel > 0, "effective_shape of empty tensor");
+    let s = isqrt(numel);
+    if s * s == numel {
+        return (s, s);
+    }
+    for i in (1..=s).rev() {
+        if numel % i == 0 {
+            return (numel / i, i);
+        }
+    }
+    (numel, 1) // unreachable: i == 1 divides everything
+}
+
+/// Integer square root (floor).
+pub fn isqrt(n: usize) -> usize {
+    if n == 0 {
+        return 0;
+    }
+    let mut x = (n as f64).sqrt() as usize;
+    // Correct float rounding in both directions (checked_mul guards the
+    // x*x overflow near usize::MAX).
+    while x.checked_mul(x).map_or(true, |v| v > n) {
+        x -= 1;
+    }
+    while (x + 1).checked_mul(x + 1).map_or(false, |v| v <= n) {
+        x += 1;
+    }
+    x
+}
+
+/// The paper's `squeeze`-based rank used to pick the non-factorized
+/// fallback: rank after dropping all size-1 axes.
+pub fn squeezed_rank(shape: &[usize]) -> usize {
+    shape.iter().filter(|&&d| d != 1).count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn known_examples() {
+        assert_eq!(effective_shape(1), (1, 1));
+        assert_eq!(effective_shape(12), (4, 3));
+        assert_eq!(effective_shape(16), (4, 4));
+        assert_eq!(effective_shape(17), (17, 1)); // prime
+        assert_eq!(effective_shape(30522 * 768), (5087, 4608)); // paper §5.2
+    }
+
+    #[test]
+    fn isqrt_edges() {
+        assert_eq!(isqrt(0), 0);
+        assert_eq!(isqrt(1), 1);
+        assert_eq!(isqrt(15), 3);
+        assert_eq!(isqrt(16), 4);
+        assert_eq!(isqrt(usize::MAX), 4294967295);
+    }
+
+    #[test]
+    fn prop_factorization_is_optimal() {
+        prop::cases(300, |rng| {
+            let numel = 1 + rng.below(500_000);
+            let (n, m) = effective_shape(numel);
+            assert_eq!(n * m, numel);
+            assert!(n >= m && m >= 1);
+            // No divisor between m and sqrt gives a tighter split.
+            let s = isqrt(numel);
+            for i in (m + 1)..=s {
+                assert_ne!(numel % i, 0, "numel={numel} better divisor {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn squeezed_rank_matches_paper_semantics() {
+        assert_eq!(squeezed_rank(&[64]), 1);
+        assert_eq!(squeezed_rank(&[1, 64, 1]), 1);
+        assert_eq!(squeezed_rank(&[32, 16]), 2);
+        assert_eq!(squeezed_rank(&[1]), 0); // scalar-like
+    }
+}

@@ -1,0 +1,308 @@
+//! The optimizer library — the paper's contribution plus every baseline it
+//! is evaluated against.
+//!
+//! * [`Smmf`] — Square-Matricized Momentum Factorization (this paper).
+//! * [`Adam`] — Adam / AdamW (Kingma & Ba 2014; Loshchilov & Hutter 2019).
+//! * [`Adafactor`] — factored 2nd moment (Shazeer & Stern 2018), HF
+//!   conventions (row over the last axis, column over the second-to-last).
+//! * [`Sm3`] — min-max cover accumulators (Anil et al. 2019) + momentum.
+//! * [`Came`] — confidence-guided factored optimizer (Luo et al. 2023).
+//! * [`Sgd`] — SGD with momentum.
+//!
+//! All optimizers implement [`Optimizer`] over parallel `&mut [Tensor]`
+//! params / `&[Tensor]` grads and report their *live* persistent state
+//! bytes; [`memory`] provides matching analytic accounting over bare shape
+//! inventories (used for the LLaMA-scale tables where instantiating state
+//! would need tens of GiB).
+
+pub mod adafactor;
+pub mod adam;
+pub mod came;
+pub mod matricize;
+pub mod memory;
+pub mod nnmf;
+pub mod schedule;
+pub mod sgd;
+pub mod sm3;
+pub mod smmf;
+
+pub use adafactor::Adafactor;
+pub use adam::Adam;
+pub use came::Came;
+pub use sgd::Sgd;
+pub use sm3::Sm3;
+pub use smmf::Smmf;
+
+use crate::tensor::Tensor;
+
+/// Which optimizer (CLI / config selector).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum OptKind {
+    Sgd,
+    Adam,
+    AdamW,
+    Adafactor,
+    Sm3,
+    Came,
+    Smmf,
+}
+
+impl OptKind {
+    pub fn parse(s: &str) -> Option<OptKind> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "sgd" => OptKind::Sgd,
+            "adam" => OptKind::Adam,
+            "adamw" => OptKind::AdamW,
+            "adafactor" => OptKind::Adafactor,
+            "sm3" => OptKind::Sm3,
+            "came" => OptKind::Came,
+            "smmf" => OptKind::Smmf,
+            _ => return None,
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            OptKind::Sgd => "sgd",
+            OptKind::Adam => "adam",
+            OptKind::AdamW => "adamw",
+            OptKind::Adafactor => "adafactor",
+            OptKind::Sm3 => "sm3",
+            OptKind::Came => "came",
+            OptKind::Smmf => "smmf",
+        }
+    }
+
+    pub fn all() -> [OptKind; 5] {
+        // The paper's five evaluated optimizers.
+        [OptKind::Adam, OptKind::Adafactor, OptKind::Sm3, OptKind::Came, OptKind::Smmf]
+    }
+}
+
+/// SMMF moment-update ordering (paper §3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SmmfScheme {
+    /// The paper's contribution: decompress the stored moments, fold in
+    /// the *intact* gradient, then re-compress.
+    DecompressFirst,
+    /// Ablation — the Adafactor-style ordering the paper argues against:
+    /// the gradient is itself compressed (rank-1 + sign) before it ever
+    /// touches the moments, losing the intact-gradient information.
+    CompressFirst,
+}
+
+/// SMMF sign-matrix storage width.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SignMode {
+    /// 1 bit per element (the paper's memory claim).
+    Bit1,
+    /// 1 byte per element — the faster variant the paper uses for its
+    /// Table 5 timing runs ("8-bit format S_M").
+    Byte8,
+}
+
+/// SMMF matricization target (ablation of Algorithm 2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MatricizeMode {
+    /// Squarest factorization of numel (the paper: minimizes n̂+m̂).
+    Square,
+    /// Ablation — fold every leading axis into the rows and factorize
+    /// (numel/last, last), the last-axes convention of Adafactor/CAME.
+    FoldLast,
+}
+
+/// Weight-decay coupling mode (paper Appendix L, Algorithms 6–7).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum WeightDecayMode {
+    /// Adam-style: `g += wd * p` before the moment update.
+    Adam,
+    /// AdamW-style: `p *= 1 - lr * wd` decoupled decay.
+    AdamW,
+}
+
+/// Shared hyper-parameters (union over all optimizers; each reads the
+/// fields it uses; defaults follow the paper's Appendix L tables).
+#[derive(Clone, Debug)]
+pub struct OptimConfig {
+    pub lr: f32,
+    /// 1st-moment coefficient (β1 everywhere).
+    pub beta1: f32,
+    /// Adam / SM3 2nd-moment coefficient.
+    pub beta2: f32,
+    /// CAME instability coefficient (β3).
+    pub beta3: f32,
+    /// Regularization constants: ε1 inside/after sqrt, ε2 (CAME/Adafactor).
+    pub eps1: f32,
+    pub eps2: f32,
+    pub weight_decay: f32,
+    pub weight_decay_mode: WeightDecayMode,
+    /// Adafactor/SMMF 2nd-moment decay exponent γ (in [-1, 0]).
+    pub decay_rate: f32,
+    /// SMMF 1st-moment growth rate λ.
+    pub growth_rate: f32,
+    /// Adafactor/CAME update clipping threshold d.
+    pub clip_threshold: f32,
+    /// SMMF: square-matricize rank-1 tensors too.
+    pub vector_reshape: bool,
+    /// SGD momentum.
+    pub momentum: f32,
+    /// Adam bias correction (the paper disables it for pre-training).
+    pub bias_correction: bool,
+    /// Adafactor relative-step / parameter-scaled LR (HF default true when
+    /// no explicit lr is given — the paper's Adafactor configs use it).
+    pub relative_step: bool,
+    /// SMMF ablation knobs (see the enums above).
+    pub smmf_scheme: SmmfScheme,
+    pub smmf_sign_mode: SignMode,
+    pub smmf_matricize: MatricizeMode,
+}
+
+impl Default for OptimConfig {
+    fn default() -> Self {
+        Self {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            beta3: 0.9999,
+            eps1: 1e-8,
+            eps2: 1e-3,
+            weight_decay: 0.0,
+            weight_decay_mode: WeightDecayMode::AdamW,
+            decay_rate: -0.8,
+            growth_rate: 0.999,
+            clip_threshold: 1.0,
+            vector_reshape: true,
+            momentum: 0.9,
+            bias_correction: true,
+            relative_step: false,
+            smmf_scheme: SmmfScheme::DecompressFirst,
+            smmf_sign_mode: SignMode::Bit1,
+            smmf_matricize: MatricizeMode::Square,
+        }
+    }
+}
+
+impl OptimConfig {
+    /// The paper's per-optimizer defaults (Appendix L): SMMF uses ε=1e-8,
+    /// Adafactor/SM3/CAME use ε1=1e-30, CAME ε2=1e-16.
+    pub fn paper_defaults(kind: OptKind) -> OptimConfig {
+        let mut c = OptimConfig::default();
+        match kind {
+            OptKind::Smmf => {
+                c.eps1 = 1e-8;
+            }
+            OptKind::Adafactor => {
+                c.eps1 = 1e-30;
+                c.eps2 = 1e-3;
+                c.relative_step = true;
+            }
+            OptKind::Came => {
+                c.eps1 = 1e-30;
+                c.eps2 = 1e-16;
+            }
+            OptKind::Sm3 => {
+                c.eps1 = 1e-30;
+            }
+            _ => {}
+        }
+        c
+    }
+}
+
+/// A stateful optimizer over a fixed set of parameter tensors.
+pub trait Optimizer: Send {
+    fn name(&self) -> &'static str;
+
+    /// Apply one optimization step. `params[i]` and `grads[i]` must have
+    /// the shapes registered at construction. Internal step counter starts
+    /// at 1 on the first call (paper convention).
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]);
+
+    /// Override the learning rate (for external schedules).
+    fn set_lr(&mut self, lr: f32);
+
+    /// Persistent optimizer-state heap bytes (the paper's "optimizer
+    /// memory" column — excludes transient scratch, see Appendix G).
+    fn state_bytes(&self) -> u64;
+
+    /// Transient scratch bytes held between steps (Appendix G's temporary
+    /// memory; reported separately for honesty).
+    fn scratch_bytes(&self) -> u64 {
+        0
+    }
+}
+
+/// Construct an optimizer for a set of parameter shapes.
+pub fn build(kind: OptKind, shapes: &[Vec<usize>], cfg: &OptimConfig) -> Box<dyn Optimizer> {
+    match kind {
+        OptKind::Sgd => Box::new(Sgd::new(shapes, cfg)),
+        OptKind::Adam => Box::new(Adam::new(shapes, cfg, false)),
+        OptKind::AdamW => Box::new(Adam::new(shapes, cfg, true)),
+        OptKind::Adafactor => Box::new(Adafactor::new(shapes, cfg)),
+        OptKind::Sm3 => Box::new(Sm3::new(shapes, cfg)),
+        OptKind::Came => Box::new(Came::new(shapes, cfg)),
+        OptKind::Smmf => Box::new(Smmf::new(shapes, cfg)),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_roundtrip() {
+        for k in [
+            OptKind::Sgd,
+            OptKind::Adam,
+            OptKind::AdamW,
+            OptKind::Adafactor,
+            OptKind::Sm3,
+            OptKind::Came,
+            OptKind::Smmf,
+        ] {
+            assert_eq!(OptKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(OptKind::parse("nope"), None);
+    }
+
+    /// Shared smoke test: every optimizer reduces a convex quadratic.
+    #[test]
+    fn all_optimizers_minimize_quadratic() {
+        let shapes = vec![vec![4, 3], vec![6]];
+        for kind in OptKind::all() {
+            let cfg = OptimConfig {
+                lr: 0.05,
+                relative_step: false,
+                ..OptimConfig::paper_defaults(kind)
+            };
+            let mut opt = build(kind, &shapes, &cfg);
+            let mut params: Vec<Tensor> = shapes
+                .iter()
+                .map(|s| {
+                    let n: usize = s.iter().product();
+                    Tensor::from_vec(s, (0..n).map(|i| 1.0 + (i % 3) as f32).collect())
+                })
+                .collect();
+            let loss = |ps: &[Tensor]| -> f64 { ps.iter().map(|p| p.sq_norm()).sum() };
+            let initial = loss(&params);
+            for _ in 0..1500 {
+                let grads: Vec<Tensor> = params
+                    .iter()
+                    .map(|p| {
+                        let mut g = p.clone();
+                        g.scale(2.0);
+                        g
+                    })
+                    .collect();
+                opt.step(&mut params, &grads);
+            }
+            let fin = loss(&params);
+            assert!(
+                fin < initial * 0.1,
+                "{}: {initial} -> {fin}",
+                kind.name()
+            );
+            assert!(opt.state_bytes() > 0);
+        }
+    }
+}

@@ -1,0 +1,165 @@
+//! One-pass rank-1 NNMF compression / decompression (paper Algorithms 3–5).
+//!
+//! `compress` produces the row/column mass vectors of a non-negative
+//! matrix (normalizing the side chosen by the paper's shape rule);
+//! `decompress` is the outer product, with SMMF's sign restoration for the
+//! 1st momentum. These are the *naive* (materializing) forms used for
+//! differential testing; the production hot path in `smmf.rs` fuses them
+//! and never materializes the matrix.
+
+use crate::tensor::BitMatrix;
+
+/// Compress a non-negative (rows × cols) matrix `m` into `r`, `c`.
+/// Normalization side rule (Appendix M code): if rows < cols normalize `r`
+/// by its total mass, else normalize `c`.
+pub fn compress(m: &[f32], rows: usize, cols: usize, r: &mut [f32], c: &mut [f32]) {
+    crate::tensor::mat::row_sums(m, rows, cols, r);
+    crate::tensor::mat::col_sums(m, rows, cols, c);
+    normalize_side(rows, cols, r, c);
+}
+
+/// Apply the normalize-shorter-side rule in place.
+pub fn normalize_side(rows: usize, cols: usize, r: &mut [f32], c: &mut [f32]) {
+    if rows < cols {
+        let total: f32 = r.iter().sum();
+        if total != 0.0 {
+            r.iter_mut().for_each(|x| *x /= total);
+        }
+    } else {
+        let total: f32 = c.iter().sum();
+        if total != 0.0 {
+            c.iter_mut().for_each(|x| *x /= total);
+        }
+    }
+}
+
+/// Compress a signed matrix: store signs (strictly-positive convention)
+/// and factorize |m|.
+pub fn compress_signed(
+    m: &[f32],
+    rows: usize,
+    cols: usize,
+    r: &mut [f32],
+    c: &mut [f32],
+    sign: &mut BitMatrix,
+) {
+    debug_assert_eq!(sign.nbits(), rows * cols);
+    r.iter_mut().for_each(|x| *x = 0.0);
+    c.iter_mut().for_each(|x| *x = 0.0);
+    for i in 0..rows {
+        let row = &m[i * cols..(i + 1) * cols];
+        let mut rs = 0.0f32;
+        for (j, &v) in row.iter().enumerate() {
+            sign.set(i * cols + j, v > 0.0);
+            let a = v.abs();
+            rs += a;
+            c[j] += a;
+        }
+        r[i] = rs;
+    }
+    normalize_side(rows, cols, r, c);
+}
+
+/// Decompress: out[i, j] = r[i] * c[j], negated where sign bit is unset.
+pub fn decompress(r: &[f32], c: &[f32], sign: Option<&BitMatrix>, out: &mut [f32]) {
+    let (rows, cols) = (r.len(), c.len());
+    debug_assert_eq!(out.len(), rows * cols);
+    crate::tensor::mat::outer(r, c, out);
+    if let Some(s) = sign {
+        for (idx, v) in out.iter_mut().enumerate() {
+            if !s.get(idx) {
+                *v = -*v;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn compress_preserves_total_mass() {
+        // After decompression the total mass equals the original total:
+        // Lemma E.7 (sum of the NNMF error matrix is zero).
+        prop::cases(100, |rng| {
+            let rows = 1 + rng.below(12);
+            let cols = 1 + rng.below(12);
+            let m: Vec<f32> = (0..rows * cols).map(|_| rng.uniform() + 0.01).collect();
+            let mut r = vec![0.0; rows];
+            let mut c = vec![0.0; cols];
+            compress(&m, rows, cols, &mut r, &mut c);
+            let mut rec = vec![0.0; rows * cols];
+            decompress(&r, &c, None, &mut rec);
+            let total: f32 = m.iter().sum();
+            let rec_total: f32 = rec.iter().sum();
+            assert!(
+                (total - rec_total).abs() <= 1e-3 * total.abs().max(1.0),
+                "mass not preserved: {total} vs {rec_total}"
+            );
+        });
+    }
+
+    #[test]
+    fn signed_roundtrip_signs() {
+        let m = vec![1.0, -2.0, 0.0, 3.0, -4.0, 5.0];
+        let (rows, cols) = (2, 3);
+        let mut r = vec![0.0; 2];
+        let mut c = vec![0.0; 3];
+        let mut s = BitMatrix::zeros(rows, cols);
+        compress_signed(&m, rows, cols, &mut r, &mut c, &mut s);
+        let mut rec = vec![0.0; 6];
+        decompress(&r, &c, Some(&s), &mut rec);
+        for (orig, rec) in m.iter().zip(&rec) {
+            if *orig > 0.0 {
+                assert!(*rec >= 0.0);
+            }
+            if *orig < 0.0 {
+                assert!(*rec <= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn rank1_matrix_is_exact() {
+        // A rank-1 non-negative matrix must be reconstructed exactly.
+        let r0 = [0.5f32, 2.0, 1.0];
+        let c0 = [1.0f32, 3.0];
+        let mut m = vec![0.0; 6];
+        crate::tensor::mat::outer(&r0, &c0, &mut m);
+        let mut r = vec![0.0; 3];
+        let mut c = vec![0.0; 2];
+        compress(&m, 3, 2, &mut r, &mut c);
+        let mut rec = vec![0.0; 6];
+        decompress(&r, &c, None, &mut rec);
+        for (a, b) in m.iter().zip(&rec) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn normalization_side() {
+        // wide matrix (rows < cols): r sums to 1
+        let m = vec![1.0f32; 2 * 5];
+        let mut r = vec![0.0; 2];
+        let mut c = vec![0.0; 5];
+        compress(&m, 2, 5, &mut r, &mut c);
+        assert!((r.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        // tall matrix: c sums to 1
+        let m = vec![1.0f32; 5 * 2];
+        let mut r = vec![0.0; 5];
+        let mut c = vec![0.0; 2];
+        compress(&m, 5, 2, &mut r, &mut c);
+        assert!((c.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn zero_matrix_stays_zero() {
+        let m = vec![0.0f32; 12];
+        let mut r = vec![0.0; 4];
+        let mut c = vec![0.0; 3];
+        compress(&m, 4, 3, &mut r, &mut c);
+        assert!(r.iter().all(|&x| x == 0.0) && c.iter().all(|&x| x == 0.0));
+    }
+}

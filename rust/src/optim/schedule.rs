@@ -1,0 +1,166 @@
+//! Hyper-parameter schedules shared by the optimizers.
+//!
+//! * SMMF's beta schedules (paper Algorithm 8): `β1_t = β1·λ^(t−1)` and
+//!   `β2_t = 1 − t^γ` (also used by Adafactor/CAME for their 2nd-moment
+//!   decay).
+//! * Learning-rate schedules used by the experiment harness: constant,
+//!   linear-warmup + linear/cosine decay, inverse-sqrt (transformer), and
+//!   ReduceLROnPlateau (the paper's CNN recipe).
+
+/// SMMF / AdamNC 1st-momentum growth schedule.
+#[inline]
+pub fn beta1_t(beta1: f32, growth_rate: f32, t: u64) -> f32 {
+    beta1 * growth_rate.powf((t - 1) as f32)
+}
+
+/// Adafactor-style 2nd-momentum decay schedule. `decay_rate` in [-1, 0].
+#[inline]
+pub fn beta2_t(decay_rate: f32, t: u64) -> f32 {
+    1.0 - (t as f32).powf(decay_rate)
+}
+
+/// Learning-rate schedules.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LrSchedule {
+    Constant,
+    /// Linear warmup to the base LR over `warmup` steps, then constant.
+    Warmup { warmup: u64 },
+    /// Linear warmup then linear decay to zero at `total` steps.
+    Linear { warmup: u64, total: u64 },
+    /// Transformer inverse-sqrt: lr * min(t^-0.5, t * warmup^-1.5) * warmup^0.5.
+    InvSqrt { warmup: u64 },
+    /// Cosine decay to `floor` fraction after warmup.
+    Cosine { warmup: u64, total: u64, floor: f32 },
+}
+
+impl LrSchedule {
+    pub fn at(&self, base_lr: f32, t: u64) -> f32 {
+        let t = t.max(1);
+        match *self {
+            LrSchedule::Constant => base_lr,
+            LrSchedule::Warmup { warmup } => {
+                if warmup > 0 && t <= warmup {
+                    base_lr * t as f32 / warmup as f32
+                } else {
+                    base_lr
+                }
+            }
+            LrSchedule::Linear { warmup, total } => {
+                if warmup > 0 && t <= warmup {
+                    base_lr * t as f32 / warmup as f32
+                } else if total > warmup {
+                    let frac = (total.saturating_sub(t)) as f32 / (total - warmup) as f32;
+                    base_lr * frac.max(0.0)
+                } else {
+                    base_lr
+                }
+            }
+            LrSchedule::InvSqrt { warmup } => {
+                let w = warmup.max(1) as f32;
+                let tf = t as f32;
+                base_lr * w.sqrt() * (tf.powf(-0.5)).min(tf * w.powf(-1.5))
+            }
+            LrSchedule::Cosine { warmup, total, floor } => {
+                if warmup > 0 && t <= warmup {
+                    base_lr * t as f32 / warmup as f32
+                } else if total > warmup {
+                    let frac =
+                        ((t - warmup) as f32 / (total - warmup) as f32).clamp(0.0, 1.0);
+                    let cos = 0.5 * (1.0 + (std::f32::consts::PI * frac).cos());
+                    base_lr * (floor + (1.0 - floor) * cos)
+                } else {
+                    base_lr
+                }
+            }
+        }
+    }
+}
+
+/// ReduceLROnPlateau (the paper's CNN training scheduler): multiply LR by
+/// `factor` when the monitored metric fails to improve for `patience`
+/// evaluations.
+#[derive(Clone, Debug)]
+pub struct ReduceOnPlateau {
+    pub factor: f32,
+    pub patience: u32,
+    pub min_lr: f32,
+    best: f32,
+    bad_evals: u32,
+    pub lr_scale: f32,
+}
+
+impl ReduceOnPlateau {
+    pub fn new(factor: f32, patience: u32, min_lr: f32) -> Self {
+        Self { factor, patience, min_lr, best: f32::INFINITY, bad_evals: 0, lr_scale: 1.0 }
+    }
+
+    /// Report a new (lower-is-better) metric; returns the current LR scale.
+    pub fn observe(&mut self, metric: f32) -> f32 {
+        if metric < self.best - 1e-6 {
+            self.best = metric;
+            self.bad_evals = 0;
+        } else {
+            self.bad_evals += 1;
+            if self.bad_evals > self.patience {
+                self.lr_scale = (self.lr_scale * self.factor).max(self.min_lr);
+                self.bad_evals = 0;
+            }
+        }
+        self.lr_scale
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn beta_schedules_match_paper() {
+        assert!((beta1_t(0.9, 0.999, 1) - 0.9).abs() < 1e-7);
+        assert!((beta1_t(0.9, 0.999, 2) - 0.9 * 0.999).abs() < 1e-7);
+        assert!((beta2_t(-0.5, 1) - 0.0).abs() < 1e-7); // 1 - 1 = 0
+        assert!((beta2_t(-0.5, 4) - 0.5).abs() < 1e-7); // 1 - 4^-.5
+        assert!((beta2_t(-0.8, 1) - 0.0).abs() < 1e-7);
+    }
+
+    #[test]
+    fn beta2_monotone_towards_one() {
+        let mut prev = 0.0;
+        for t in 1..100 {
+            let b = beta2_t(-0.8, t);
+            assert!(b >= prev && b < 1.0);
+            prev = b;
+        }
+    }
+
+    #[test]
+    fn warmup_ramps() {
+        let s = LrSchedule::Warmup { warmup: 10 };
+        assert!((s.at(1.0, 1) - 0.1).abs() < 1e-6);
+        assert!((s.at(1.0, 10) - 1.0).abs() < 1e-6);
+        assert!((s.at(1.0, 100) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn linear_decays_to_zero() {
+        let s = LrSchedule::Linear { warmup: 2, total: 10 };
+        assert!(s.at(1.0, 10) < 1e-6);
+        assert!(s.at(1.0, 6) > s.at(1.0, 9));
+    }
+
+    #[test]
+    fn invsqrt_peaks_at_warmup() {
+        let s = LrSchedule::InvSqrt { warmup: 100 };
+        let peak = s.at(1.0, 100);
+        assert!(s.at(1.0, 50) < peak && s.at(1.0, 400) < peak);
+    }
+
+    #[test]
+    fn plateau_reduces() {
+        let mut p = ReduceOnPlateau::new(0.5, 1, 0.01);
+        assert_eq!(p.observe(1.0), 1.0); // improves
+        assert_eq!(p.observe(1.0), 1.0); // bad 1 (== patience)
+        assert_eq!(p.observe(1.0), 0.5); // bad 2 -> reduce
+        assert_eq!(p.observe(0.5), 0.5); // improves again
+    }
+}

@@ -1,0 +1,85 @@
+//! SGD with momentum — the zero/low-memory reference point.
+
+use super::{OptimConfig, Optimizer, WeightDecayMode};
+use crate::tensor::Tensor;
+
+pub struct Sgd {
+    cfg: OptimConfig,
+    m: Vec<Vec<f32>>, // empty when momentum == 0
+    t: u64,
+}
+
+impl Sgd {
+    pub fn new(shapes: &[Vec<usize>], cfg: &OptimConfig) -> Sgd {
+        let m = if cfg.momentum != 0.0 {
+            shapes.iter().map(|s| vec![0.0; s.iter().product()]).collect()
+        } else {
+            Vec::new()
+        };
+        Sgd { cfg: cfg.clone(), m, t: 0 }
+    }
+}
+
+impl Optimizer for Sgd {
+    fn name(&self) -> &'static str {
+        "sgd"
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        self.t += 1;
+        let cfg = &self.cfg;
+        for (idx, (param, grad)) in params.iter_mut().zip(grads).enumerate() {
+            let p = param.data_mut();
+            let g = grad.data();
+            if cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::AdamW {
+                let f = 1.0 - cfg.lr * cfg.weight_decay;
+                p.iter_mut().for_each(|w| *w *= f);
+            }
+            let couple = cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::Adam;
+            if cfg.momentum != 0.0 {
+                let m = &mut self.m[idx];
+                for ((w, &g0), mij) in p.iter_mut().zip(g).zip(m.iter_mut()) {
+                    let gij = if couple { g0 + cfg.weight_decay * *w } else { g0 };
+                    *mij = cfg.momentum * *mij + gij;
+                    *w -= cfg.lr * *mij;
+                }
+            } else {
+                for (w, &g0) in p.iter_mut().zip(g) {
+                    let gij = if couple { g0 + cfg.weight_decay * *w } else { g0 };
+                    *w -= cfg.lr * gij;
+                }
+            }
+        }
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.m.iter().map(|x| (x.len() * 4) as u64).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_momentum_no_state() {
+        let cfg = OptimConfig { momentum: 0.0, ..Default::default() };
+        assert_eq!(Sgd::new(&[vec![100]], &cfg).state_bytes(), 0);
+        let cfg = OptimConfig { momentum: 0.9, ..Default::default() };
+        assert_eq!(Sgd::new(&[vec![100]], &cfg).state_bytes(), 400);
+    }
+
+    #[test]
+    fn plain_step_is_lr_times_grad() {
+        let cfg = OptimConfig { lr: 0.5, momentum: 0.0, ..Default::default() };
+        let mut opt = Sgd::new(&[vec![2]], &cfg);
+        let mut p = vec![Tensor::from_vec(&[2], vec![1.0, 2.0])];
+        let g = vec![Tensor::from_vec(&[2], vec![2.0, -2.0])];
+        opt.step(&mut p, &g);
+        assert_eq!(p[0].data(), &[0.0, 3.0]);
+    }
+}

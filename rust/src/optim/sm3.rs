@@ -1,0 +1,185 @@
+//! SM3 baseline (Anil, Gupta, Koren, Singer 2019) with momentum.
+//!
+//! Per rank-d tensor, one accumulator vector per axis (`Σ_r n_r` floats).
+//! The effective 2nd moment of element `(i1..id)` is `min_r μ_r[i_r]`;
+//! after each step every accumulator is raised to the max of the covered
+//! ν values (the min-max cover scheme). A dense momentum buffer (N floats)
+//! is kept because the paper runs SM3 with β1 = 0.9 (Appendix L) — which
+//! is also why SM3's memory in Table 1 is ≈ half of Adam's, not tiny.
+
+use super::{OptimConfig, Optimizer, WeightDecayMode};
+use crate::tensor::Tensor;
+
+struct PState {
+    shape: Vec<usize>,
+    /// One accumulator per axis.
+    acc: Vec<Vec<f32>>,
+    /// Dense momentum (β1 > 0).
+    m: Option<Vec<f32>>,
+}
+
+pub struct Sm3 {
+    cfg: OptimConfig,
+    states: Vec<PState>,
+    t: u64,
+}
+
+impl Sm3 {
+    pub fn new(shapes: &[Vec<usize>], cfg: &OptimConfig) -> Sm3 {
+        let states = shapes
+            .iter()
+            .map(|shape| {
+                let numel: usize = shape.iter().product();
+                let shape = if shape.is_empty() { vec![1] } else { shape.clone() };
+                PState {
+                    acc: shape.iter().map(|&d| vec![0.0; d]).collect(),
+                    m: (cfg.beta1 > 0.0).then(|| vec![0.0; numel]),
+                    shape,
+                }
+            })
+            .collect();
+        Sm3 { cfg: cfg.clone(), states, t: 0 }
+    }
+}
+
+impl Optimizer for Sm3 {
+    fn name(&self) -> &'static str {
+        "sm3"
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        self.t += 1;
+        let cfg = self.cfg.clone();
+        for ((param, grad), st) in params.iter_mut().zip(grads).zip(self.states.iter_mut()) {
+            let p = param.data_mut();
+            let g = grad.data();
+            if cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::AdamW {
+                let f = 1.0 - cfg.lr * cfg.weight_decay;
+                p.iter_mut().for_each(|w| *w *= f);
+            }
+            let rank = st.shape.len();
+            // Per-axis max of ν for the cover update, accumulated this step.
+            let mut new_max: Vec<Vec<f32>> =
+                st.shape.iter().map(|&d| vec![0.0; d]).collect();
+            // Perf (§Perf): odometer multi-index (increment + carry)
+            // instead of div/mod per element, and the min over the leading
+            // rank-1 axes hoisted out of the innermost (last-axis) loop.
+            let mut idx = vec![0usize; rank];
+            let couple =
+                cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::Adam;
+            let last_dim = *st.shape.last().unwrap();
+            let n = g.len();
+            let mut flat = 0;
+            while flat < n {
+                // min over the non-last axes is constant across this row
+                let mut vmin_head = f32::INFINITY;
+                for r in 0..rank - 1 {
+                    vmin_head = vmin_head.min(st.acc[r][idx[r]]);
+                }
+                let acc_last = &st.acc[rank - 1];
+                let new_last = &mut new_max[rank - 1];
+                let mut row_max = 0.0f32; // max ν over this row (other axes)
+                for j in 0..last_dim {
+                    let w = &mut p[flat + j];
+                    let gij = if couple { g[flat + j] + cfg.weight_decay * *w } else { g[flat + j] };
+                    // ν = min_r μ_r[i_r] + g²
+                    let nu = vmin_head.min(acc_last[j]) + gij * gij;
+                    new_last[j] = new_last[j].max(nu);
+                    row_max = row_max.max(nu);
+                    let update = gij / (nu.sqrt() + cfg.eps1.max(1e-30));
+                    if let Some(m) = &mut st.m {
+                        let mij = &mut m[flat + j];
+                        *mij = cfg.beta1 * *mij + (1.0 - cfg.beta1) * update;
+                        *w -= cfg.lr * *mij;
+                    } else {
+                        *w -= cfg.lr * update;
+                    }
+                }
+                for r in 0..rank - 1 {
+                    let e = &mut new_max[r][idx[r]];
+                    *e = e.max(row_max);
+                }
+                // odometer carry over the leading axes
+                flat += last_dim;
+                for r in (0..rank.saturating_sub(1)).rev() {
+                    idx[r] += 1;
+                    if idx[r] < st.shape[r] {
+                        break;
+                    }
+                    idx[r] = 0;
+                }
+            }
+            st.acc = new_max;
+        }
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.states
+            .iter()
+            .map(|s| {
+                let acc: usize = s.acc.iter().map(|a| a.len()).sum();
+                ((acc + s.m.as_ref().map_or(0, |m| m.len())) * 4) as u64
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn memory_is_axis_sums_plus_momentum() {
+        let cfg = OptimConfig::default(); // beta1 = 0.9 -> momentum kept
+        let s = Sm3::new(&[vec![10, 20, 30]], &cfg);
+        assert_eq!(s.state_bytes(), (((10 + 20 + 30) + 6000) * 4) as u64);
+        let cfg0 = OptimConfig { beta1: 0.0, ..OptimConfig::default() };
+        let s0 = Sm3::new(&[vec![10, 20, 30]], &cfg0);
+        assert_eq!(s0.state_bytes(), ((10 + 20 + 30) * 4) as u64);
+    }
+
+    #[test]
+    fn accumulators_cover_squared_gradients() {
+        // After one step with g, ν for each coordinate >= g², so each axis
+        // accumulator >= max row/col g².
+        let mut opt = Sm3::new(&[vec![2, 2]], &OptimConfig { beta1: 0.0, ..Default::default() });
+        let mut p = vec![Tensor::zeros(&[2, 2])];
+        let g = vec![Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 3.0, 4.0])];
+        opt.step(&mut p, &g);
+        let acc0 = &opt.states[0].acc[0];
+        let acc1 = &opt.states[0].acc[1];
+        assert!((acc0[0] - 4.0).abs() < 1e-6); // row 0 max g² = 2²
+        assert!((acc0[1] - 16.0).abs() < 1e-6); // row 1 max = 4²
+        assert!((acc1[0] - 9.0).abs() < 1e-6); // col 0 max = 3²
+        assert!((acc1[1] - 16.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quadratic_convergence() {
+        // SM3 is Adagrad-like: the accumulators only grow, so the
+        // effective step decays as 1/sqrt(sum g²) — convergence needs
+        // more iterations than Adam at the same lr.
+        let cfg = OptimConfig { lr: 0.1, ..Default::default() };
+        let mut opt = Sm3::new(&[vec![5]], &cfg);
+        let mut p = vec![Tensor::from_vec(&[5], vec![2.0, -1.5, 3.0, -0.5, 1.0])];
+        for _ in 0..3000 {
+            let mut g = p[0].clone();
+            g.scale(2.0);
+            opt.step(&mut p, &[g]);
+        }
+        assert!(p[0].max_abs() < 0.15, "{:?}", p[0].data());
+    }
+
+    #[test]
+    fn scalar_tensor_ok() {
+        let mut opt = Sm3::new(&[vec![]], &OptimConfig::default());
+        let mut p = vec![Tensor::scalar(4.0)];
+        let g = vec![Tensor::scalar(1.0)];
+        opt.step(&mut p, &g);
+        assert!(p[0].data()[0] < 4.0);
+    }
+}

@@ -1,0 +1,721 @@
+//! SMMF — Square-Matricized Momentum Factorization (the paper).
+//!
+//! Per parameter tensor the persistent state is `r_m, c_m` (1st-momentum
+//! factors), a bit-packed sign matrix `S_M`, and `r_v, c_v` (2nd-momentum
+//! factors): `2(n̂+m̂)` floats + `n̂·m̂` bits for a tensor of `n̂·m̂`
+//! elements — versus Adam's `2·n̂·m̂` floats.
+//!
+//! Two step implementations:
+//!
+//! * [`Smmf::step`] — the production **fused** path: decompression, moment
+//!   update, re-compression reductions, update term and parameter write
+//!   happen in a *single pass* over each row of the matricized view, with
+//!   O(n̂+m̂) scratch. The full moment matrices are never materialized —
+//!   this beats even the paper's reference implementation, whose temporary
+//!   memory is O(n̂·m̂) (Appendix G).
+//! * [`Smmf::step_naive`] — a literal transcription of Algorithms 1/3/4
+//!   that materializes M and V; kept for differential testing and the
+//!   perf ablation bench.
+
+use super::matricize::{effective_shape, squeezed_rank};
+use super::nnmf;
+use super::schedule::{beta1_t, beta2_t};
+use super::{MatricizeMode, OptimConfig, Optimizer, SignMode, SmmfScheme, WeightDecayMode};
+use crate::tensor::{BitMatrix, Tensor};
+
+/// Sign-matrix storage: 1-bit packed (the paper's memory claim) or one
+/// byte per element (the "8-bit S_M" timing variant of Table 5).
+pub enum SignStore {
+    Bits(BitMatrix),
+    Bytes(Vec<u8>),
+}
+
+impl SignStore {
+    fn new(mode: SignMode, n: usize, m: usize) -> SignStore {
+        match mode {
+            SignMode::Bit1 => SignStore::Bits(BitMatrix::zeros(n, m)),
+            SignMode::Byte8 => SignStore::Bytes(vec![0u8; n * m]),
+        }
+    }
+
+    fn heap_bytes(&self) -> u64 {
+        match self {
+            SignStore::Bits(b) => b.heap_bytes() as u64,
+            SignStore::Bytes(v) => v.len() as u64,
+        }
+    }
+
+    #[inline]
+    fn get(&self, idx: usize) -> bool {
+        match self {
+            SignStore::Bits(b) => b.get(idx),
+            SignStore::Bytes(v) => v[idx] != 0,
+        }
+    }
+
+    #[inline]
+    fn set(&mut self, idx: usize, val: bool) {
+        match self {
+            SignStore::Bits(b) => b.set(idx, val),
+            SignStore::Bytes(v) => v[idx] = val as u8,
+        }
+    }
+
+    /// Read `len` (<=64) sign bits starting at `start` into a word.
+    #[inline]
+    fn get_chunk64(&self, start: usize, len: usize) -> u64 {
+        match self {
+            SignStore::Bits(b) => b.get_chunk64(start),
+            SignStore::Bytes(v) => {
+                let mut bits = 0u64;
+                for (k, &byte) in v[start..start + len].iter().enumerate() {
+                    bits |= ((byte != 0) as u64) << k;
+                }
+                bits
+            }
+        }
+    }
+
+    /// Write `len` (<=64) sign bits starting at `start` from a word.
+    #[inline]
+    fn set_chunk64(&mut self, start: usize, bits: u64, len: usize) {
+        match self {
+            SignStore::Bits(b) => b.set_chunk64(start, bits, len),
+            SignStore::Bytes(v) => {
+                for (k, byte) in v[start..start + len].iter_mut().enumerate() {
+                    *byte = ((bits >> k) & 1) as u8;
+                }
+            }
+        }
+    }
+}
+
+enum State {
+    /// Factorized (square-matricized) state.
+    Factored {
+        n: usize,
+        m: usize,
+        r_m: Vec<f32>,
+        c_m: Vec<f32>,
+        sign: SignStore,
+        r_v: Vec<f32>,
+        c_v: Vec<f32>,
+    },
+    /// Dense fallback for rank-1 tensors when `vector_reshape = false`.
+    Dense { m: Vec<f32>, v: Vec<f32> },
+}
+
+impl State {
+    fn bytes(&self) -> u64 {
+        match self {
+            State::Factored { r_m, c_m, sign, r_v, c_v, .. } => {
+                (4 * (r_m.len() + c_m.len() + r_v.len() + c_v.len())) as u64
+                    + sign.heap_bytes()
+            }
+            State::Dense { m, v } => (4 * (m.len() + v.len())) as u64,
+        }
+    }
+}
+
+pub struct Smmf {
+    cfg: OptimConfig,
+    states: Vec<State>,
+    t: u64,
+    /// Reusable per-step scratch: column accumulators sized to max m̂.
+    scratch_cm: Vec<f32>,
+    scratch_cv: Vec<f32>,
+    /// Scratch for the naive path (lazily grown; only used by step_naive).
+    scratch_mat: Vec<f32>,
+    scratch_mat2: Vec<f32>,
+}
+
+impl Smmf {
+    pub fn new(shapes: &[Vec<usize>], cfg: &OptimConfig) -> Smmf {
+        let mut max_m = 0;
+        let states = shapes
+            .iter()
+            .map(|shape| {
+                let numel: usize = shape.iter().product();
+                assert!(numel > 0, "empty tensor {shape:?}");
+                if squeezed_rank(shape) == 1 && !cfg.vector_reshape {
+                    State::Dense { m: vec![0.0; numel], v: vec![0.0; numel] }
+                } else {
+                    let (n, m) = match cfg.smmf_matricize {
+                        MatricizeMode::Square => effective_shape(numel),
+                        // Ablation: Adafactor/CAME-style last-axis fold.
+                        MatricizeMode::FoldLast => {
+                            let last = *shape.last().unwrap();
+                            (numel / last, last)
+                        }
+                    };
+                    max_m = max_m.max(m);
+                    State::Factored {
+                        n,
+                        m,
+                        r_m: vec![0.0; n],
+                        c_m: vec![0.0; m],
+                        sign: SignStore::new(cfg.smmf_sign_mode, n, m),
+                        r_v: vec![0.0; n],
+                        c_v: vec![0.0; m],
+                    }
+                }
+            })
+            .collect();
+        Smmf {
+            cfg: cfg.clone(),
+            states,
+            t: 0,
+            scratch_cm: vec![0.0; max_m],
+            scratch_cv: vec![0.0; max_m],
+            scratch_mat: Vec::new(),
+            scratch_mat2: Vec::new(),
+        }
+    }
+
+    /// The paper's β schedules at the current step.
+    fn betas(&self, t: u64) -> (f32, f32) {
+        (
+            beta1_t(self.cfg.beta1, self.cfg.growth_rate, t),
+            beta2_t(self.cfg.decay_rate, t),
+        )
+    }
+
+    fn apply_weight_decay(cfg: &OptimConfig, p: &mut [f32], g: &[f32], g_wd: &mut Vec<f32>) -> bool {
+        // Returns true if g_wd holds the effective gradient (adam mode).
+        match cfg.weight_decay_mode {
+            WeightDecayMode::Adam if cfg.weight_decay != 0.0 => {
+                g_wd.clear();
+                g_wd.extend(g.iter().zip(p.iter()).map(|(&g, &w)| g + cfg.weight_decay * w));
+                true
+            }
+            WeightDecayMode::AdamW if cfg.weight_decay != 0.0 => {
+                let f = 1.0 - cfg.lr * cfg.weight_decay;
+                p.iter_mut().for_each(|w| *w *= f);
+                false
+            }
+            _ => false,
+        }
+    }
+
+    /// Fused single-pass update of one factored tensor. See module docs.
+    #[allow(clippy::too_many_arguments)]
+    fn step_factored_fused(
+        p: &mut [f32],
+        g: &[f32],
+        n: usize,
+        m: usize,
+        r_m: &mut [f32],
+        c_m: &mut [f32],
+        sign: &mut SignStore,
+        r_v: &mut [f32],
+        c_v: &mut [f32],
+        beta_m: f32,
+        beta_v: f32,
+        lr: f32,
+        eps: f32,
+        acc_cm: &mut [f32],
+        acc_cv: &mut [f32],
+    ) {
+        debug_assert_eq!(p.len(), n * m);
+        let one_m = 1.0 - beta_m;
+        let one_v = 1.0 - beta_v;
+        let acc_cm = &mut acc_cm[..m];
+        let acc_cv = &mut acc_cv[..m];
+        acc_cm.iter_mut().for_each(|x| *x = 0.0);
+        acc_cv.iter_mut().for_each(|x| *x = 0.0);
+
+        for i in 0..n {
+            let ri_m = r_m[i];
+            let ri_v = r_v[i];
+            let row_p = &mut p[i * m..(i + 1) * m];
+            let row_g = &g[i * m..(i + 1) * m];
+            let mut rsum_m = 0.0f32;
+            let mut rsum_v = 0.0f32;
+            let base = i * m;
+            // Perf (§Perf in EXPERIMENTS.md): process 64-column chunks so
+            // the sign matrix is touched one word at a time, and keep the
+            // arithmetic branchless (sign via ±1 multiplier, bit build via
+            // bool cast) so the compiler can vectorize the FP work.
+            let mut m_buf = [0.0f32; 64];
+            let mut v_buf = [0.0f32; 64];
+            let mut j0 = 0;
+            while j0 < m {
+                let len = (m - j0).min(64);
+                let old_bits = sign.get_chunk64(base + j0, len);
+                // Phase 1 (vectorizable): decompress M̂/V̂ from the factors
+                // (sign-restored; bit=1 means positive) and apply the
+                // moment update with the intact gradient
+                // (decompression→compression scheme, §3.2).
+                for k in 0..len {
+                    let j = j0 + k;
+                    let s = f32::from_bits(
+                        0x3f80_0000 | ((((old_bits >> k) & 1) ^ 1) as u32) << 31,
+                    );
+                    let gij = row_g[j];
+                    m_buf[k] = beta_m * (ri_m * c_m[j] * s) + one_m * gij;
+                    v_buf[k] = beta_v * (ri_v * c_v[j]) + one_v * gij * gij;
+                }
+                // Phase 2: sign capture (integer bit chain, no FP).
+                let mut new_bits = 0u64;
+                for (k, &mk) in m_buf[..len].iter().enumerate() {
+                    new_bits |= ((mk > 0.0) as u64) << k;
+                }
+                sign.set_chunk64(base + j0, new_bits, len);
+                // Phase 3 (vectorizable): update term + parameter write;
+                // |M| computed once and reused by both reductions.
+                for k in 0..len {
+                    let j = j0 + k;
+                    row_p[j] -= lr * (m_buf[k] / (v_buf[k].sqrt() + eps));
+                    m_buf[k] = m_buf[k].abs();
+                    acc_cm[j] += m_buf[k];
+                    acc_cv[j] += v_buf[k];
+                }
+                // Phase 4: row reductions with 4-way partials (breaks the
+                // serial FP dependence chain).
+                let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0, 0.0, 0.0);
+                let (mut b0, mut b1, mut b2, mut b3) = (0.0f32, 0.0, 0.0, 0.0);
+                let mut k = 0;
+                while k + 4 <= len {
+                    a0 += m_buf[k];
+                    a1 += m_buf[k + 1];
+                    a2 += m_buf[k + 2];
+                    a3 += m_buf[k + 3];
+                    b0 += v_buf[k];
+                    b1 += v_buf[k + 1];
+                    b2 += v_buf[k + 2];
+                    b3 += v_buf[k + 3];
+                    k += 4;
+                }
+                while k < len {
+                    a0 += m_buf[k];
+                    b0 += v_buf[k];
+                    k += 1;
+                }
+                rsum_m += (a0 + a1) + (a2 + a3);
+                rsum_v += (b0 + b1) + (b2 + b3);
+                j0 += len;
+            }
+            r_m[i] = rsum_m;
+            r_v[i] = rsum_v;
+        }
+        c_m.copy_from_slice(acc_cm);
+        c_v.copy_from_slice(acc_cv);
+        nnmf::normalize_side(n, m, r_m, c_m);
+        nnmf::normalize_side(n, m, r_v, c_v);
+    }
+
+    /// Literal Algorithms 1/3/4 with materialized M, V (differential
+    /// oracle + perf ablation baseline).
+    pub fn step_naive(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        self.t += 1;
+        let (beta_m, beta_v) = self.betas(self.t);
+        let cfg = self.cfg.clone();
+        let mut g_wd: Vec<f32> = Vec::new();
+        for (idx, (param, grad)) in params.iter_mut().zip(grads).enumerate() {
+            let p = param.data_mut();
+            let use_wd = Self::apply_weight_decay(&cfg, p, grad.data(), &mut g_wd);
+            let g: &[f32] = if use_wd { &g_wd } else { grad.data() };
+            match &mut self.states[idx] {
+                State::Factored { n, m, r_m, c_m, sign, r_v, c_v } => {
+                    let (n, m) = (*n, *m);
+                    self.scratch_mat.resize(n * m, 0.0);
+                    self.scratch_mat2.resize(n * m, 0.0);
+                    let mm = &mut self.scratch_mat;
+                    let vv = &mut self.scratch_mat2;
+                    // Decompression (Algorithm 3).
+                    crate::tensor::mat::outer(r_m, c_m, mm);
+                    for (idx2, x) in mm.iter_mut().enumerate() {
+                        if !sign.get(idx2) {
+                            *x = -*x;
+                        }
+                    }
+                    nnmf::decompress(r_v, c_v, None, vv);
+                    // Moment update.
+                    for ((mij, vij), &gij) in mm.iter_mut().zip(vv.iter_mut()).zip(g) {
+                        *mij = beta_m * *mij + (1.0 - beta_m) * gij;
+                        *vij = beta_v * *vij + (1.0 - beta_v) * gij * gij;
+                    }
+                    // Compression (Algorithm 4).
+                    for (idx2, &x) in mm.iter().enumerate() {
+                        sign.set(idx2, x > 0.0);
+                    }
+                    let abs_m: Vec<f32> = mm.iter().map(|x| x.abs()).collect();
+                    nnmf::compress(&abs_m, n, m, r_m, c_m);
+                    nnmf::compress(vv, n, m, r_v, c_v);
+                    // Weight update.
+                    for ((w, &mij), &vij) in p.iter_mut().zip(mm.iter()).zip(vv.iter()) {
+                        *w -= cfg.lr * (mij / (vij.sqrt() + cfg.eps1));
+                    }
+                }
+                State::Dense { m, v } => {
+                    dense_update(p, g, m, v, beta_m, beta_v, cfg.lr, cfg.eps1);
+                }
+            }
+        }
+    }
+
+    pub fn step_count(&self) -> u64 {
+        self.t
+    }
+
+    /// Ablation (§3.2): the compression→decompression ordering used by
+    /// existing memory-efficient optimizers — the gradient itself is
+    /// factorized to rank-1 (+ signs) *before* it reaches the moments, so
+    /// the intact-gradient information the paper's scheme preserves is
+    /// destroyed. `out` receives the reconstructed Ĝ.
+    fn compress_then_decompress(g: &[f32], n: usize, m: usize, out: &mut Vec<f32>) {
+        let mut r = vec![0.0f32; n];
+        let mut c = vec![0.0f32; m];
+        out.resize(n * m, 0.0);
+        for i in 0..n {
+            let row = &g[i * m..(i + 1) * m];
+            let mut rs = 0.0f32;
+            for (j, &x) in row.iter().enumerate() {
+                let a = x.abs();
+                rs += a;
+                c[j] += a;
+            }
+            r[i] = rs;
+        }
+        nnmf::normalize_side(n, m, &mut r, &mut c);
+        for i in 0..n {
+            for j in 0..m {
+                let v = r[i] * c[j];
+                out[i * m + j] = if g[i * m + j] > 0.0 { v } else { -v };
+            }
+        }
+    }
+}
+
+fn dense_update(
+    p: &mut [f32],
+    g: &[f32],
+    m: &mut [f32],
+    v: &mut [f32],
+    beta_m: f32,
+    beta_v: f32,
+    lr: f32,
+    eps: f32,
+) {
+    for (((w, &gij), mij), vij) in p.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut()) {
+        *mij = beta_m * *mij + (1.0 - beta_m) * gij;
+        *vij = beta_v * *vij + (1.0 - beta_v) * gij * gij;
+        *w -= lr * (*mij / (vij.sqrt() + eps));
+    }
+}
+
+impl Optimizer for Smmf {
+    fn name(&self) -> &'static str {
+        "smmf"
+    }
+
+    fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        assert_eq!(params.len(), self.states.len());
+        self.t += 1;
+        let (beta_m, beta_v) = self.betas(self.t);
+        let cfg = self.cfg.clone();
+        let mut g_wd: Vec<f32> = Vec::new();
+        for (idx, (param, grad)) in params.iter_mut().zip(grads).enumerate() {
+            debug_assert_eq!(param.numel(), grad.numel());
+            let p = param.data_mut();
+            let use_wd = Self::apply_weight_decay(&cfg, p, grad.data(), &mut g_wd);
+            let g: &[f32] = if use_wd { &g_wd } else { grad.data() };
+            match &mut self.states[idx] {
+                State::Factored { n, m, r_m, c_m, sign, r_v, c_v } => {
+                    let g: &[f32] = if cfg.smmf_scheme == SmmfScheme::CompressFirst {
+                        Self::compress_then_decompress(g, *n, *m, &mut self.scratch_mat);
+                        &self.scratch_mat
+                    } else {
+                        g
+                    };
+                    Self::step_factored_fused(
+                        p,
+                        g,
+                        *n,
+                        *m,
+                        r_m,
+                        c_m,
+                        sign,
+                        r_v,
+                        c_v,
+                        beta_m,
+                        beta_v,
+                        cfg.lr,
+                        cfg.eps1,
+                        &mut self.scratch_cm,
+                        &mut self.scratch_cv,
+                    );
+                }
+                State::Dense { m, v } => {
+                    dense_update(p, g, m, v, beta_m, beta_v, cfg.lr, cfg.eps1);
+                }
+            }
+        }
+    }
+
+    fn set_lr(&mut self, lr: f32) {
+        self.cfg.lr = lr;
+    }
+
+    fn state_bytes(&self) -> u64 {
+        self.states.iter().map(|s| s.bytes()).sum()
+    }
+
+    fn scratch_bytes(&self) -> u64 {
+        (4 * (self.scratch_cm.len()
+            + self.scratch_cv.len()
+            + self.scratch_mat.len()
+            + self.scratch_mat2.len())) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    fn rand_tensors(rng: &mut Pcg32, shapes: &[Vec<usize>], scale: f32) -> Vec<Tensor> {
+        shapes
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                Tensor::from_vec(s, prop::gen_vec(rng, n, scale))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fused_matches_naive_trajectory() {
+        // The production fused path must equal the literal-algorithm path
+        // bit-for-bit-ish over multi-step trajectories of random shapes.
+        prop::cases(40, |rng| {
+            let n_tensors = 1 + rng.below(3);
+            let shapes: Vec<Vec<usize>> =
+                (0..n_tensors).map(|_| prop::gen_shape(rng, 4, 2048)).collect();
+            let cfg = OptimConfig {
+                lr: 0.01,
+                weight_decay: 0.01,
+                ..OptimConfig::paper_defaults(super::super::OptKind::Smmf)
+            };
+            let mut fused = Smmf::new(&shapes, &cfg);
+            let mut naive = Smmf::new(&shapes, &cfg);
+            let mut p1 = rand_tensors(rng, &shapes, 1.0);
+            let mut p2 = p1.clone();
+            for _ in 0..3 {
+                let grads = rand_tensors(rng, &shapes, 1.0);
+                fused.step(&mut p1, &grads);
+                naive.step_naive(&mut p2, &grads);
+                for (a, b) in p1.iter().zip(&p2) {
+                    for (x, y) in a.data().iter().zip(b.data()) {
+                        assert!(
+                            (x - y).abs() <= 1e-5 * x.abs().max(1.0),
+                            "fused {x} vs naive {y}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn state_is_factorized_memory() {
+        // 1024x1024 tensor: Adam would hold 8 MiB of moments; SMMF holds
+        // 2*(1024+1024)*4 B of vectors + 1 Mbit of signs = 147,456 B.
+        let shapes = vec![vec![1024, 1024]];
+        let opt = Smmf::new(&shapes, &OptimConfig::default());
+        let expect = 4 * 4 * 1024 + 1024 * 1024 / 8;
+        assert_eq!(opt.state_bytes(), expect as u64);
+        // >96% smaller than Adam's 2N floats — the paper's headline.
+        let adam = 2 * 1024 * 1024 * 4;
+        assert!((opt.state_bytes() as f64) < 0.04 * adam as f64);
+    }
+
+    #[test]
+    fn dense_fallback_when_vector_reshape_off() {
+        let cfg = OptimConfig { vector_reshape: false, ..OptimConfig::default() };
+        let opt = Smmf::new(&[vec![100]], &cfg);
+        assert_eq!(opt.state_bytes(), 2 * 100 * 4);
+        let opt2 = Smmf::new(&[vec![100]], &OptimConfig::default());
+        // 100 = 10x10 factored: (10+10+10+10) floats + 100 bits (2 words)
+        assert_eq!(opt2.state_bytes(), (40 * 4 + 16) as u64);
+    }
+
+    #[test]
+    fn converges_on_rosenbrock_like() {
+        // Non-convex sanity: SMMF reduces a banana-ish function.
+        let shapes = vec![vec![2]];
+        let cfg = OptimConfig { lr: 1e-2, ..OptimConfig::default() };
+        let mut opt = Smmf::new(&shapes, &cfg);
+        let mut p = vec![Tensor::from_vec(&[2], vec![-1.2, 1.0])];
+        let f = |x: f32, y: f32| (1.0 - x).powi(2) + 5.0 * (y - x * x).powi(2);
+        let initial = f(p[0].data()[0], p[0].data()[1]);
+        for _ in 0..2000 {
+            let (x, y) = (p[0].data()[0], p[0].data()[1]);
+            let gx = -2.0 * (1.0 - x) - 20.0 * x * (y - x * x);
+            let gy = 10.0 * (y - x * x);
+            let g = vec![Tensor::from_vec(&[2], vec![gx, gy])];
+            opt.step(&mut p, &g);
+        }
+        let fin = f(p[0].data()[0], p[0].data()[1]);
+        assert!(fin < initial * 0.05, "{initial} -> {fin}");
+    }
+
+    #[test]
+    fn first_step_equals_sign_scaled() {
+        // At t=1 both β are 0 (β2_1 = 1-1=0, β1_1=0.9 but state is zero so
+        // M = 0.1 g, V = g²): U = 0.1g/(|g|+eps) ≈ 0.1*sign(g).
+        let shapes = vec![vec![3, 3]];
+        let mut opt = Smmf::new(&shapes, &OptimConfig { lr: 1.0, ..OptimConfig::default() });
+        let mut p = vec![Tensor::zeros(&[3, 3])];
+        let g = vec![Tensor::from_vec(&[3, 3], vec![2., -3., 4., -5., 6., -7., 8., -9., 10.])];
+        opt.step(&mut p, &g);
+        for (w, &gij) in p[0].data().iter().zip(g[0].data()) {
+            let expect = -0.1 * gij.signum();
+            assert!((w - expect).abs() < 1e-3, "{w} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn prop_state_invariants_hold_over_trajectories() {
+        // After any number of steps: V factors are non-negative, the
+        // normalized side sums to 1 (or the state is all-zero), and the
+        // sign matrix agrees with the sign of the decompressed moment.
+        prop::cases(25, |rng| {
+            let shape = prop::gen_shape(rng, 3, 1024);
+            let cfg = OptimConfig::default();
+            let mut opt = Smmf::new(&[shape.clone()], &cfg);
+            let mut p = rand_tensors(rng, &[shape.clone()], 0.5);
+            let steps = 1 + rng.below(4);
+            for _ in 0..steps {
+                let g = rand_tensors(rng, &[shape.clone()], 0.5);
+                opt.step(&mut p, &g);
+            }
+            match &opt.states[0] {
+                State::Factored { n, m, r_m, c_m, r_v, c_v, .. } => {
+                    assert!(r_v.iter().all(|&x| x >= 0.0));
+                    assert!(c_v.iter().all(|&x| x >= 0.0));
+                    // normalize-shorter-side rule: the chosen side is a
+                    // probability vector (within float tolerance).
+                    let (side_m, side_v): (&[f32], &[f32]) =
+                        if n < m { (r_m, r_v) } else { (c_m, c_v) };
+                    for side in [side_m, side_v] {
+                        let total: f32 = side.iter().sum();
+                        assert!(
+                            total == 0.0 || (total - 1.0).abs() < 1e-3,
+                            "side sum {total}"
+                        );
+                    }
+                }
+                State::Dense { .. } => unreachable!(),
+            }
+        });
+    }
+
+    #[test]
+    fn byte8_sign_mode_matches_bit1_trajectory() {
+        // The 8-bit S_M variant (paper Table 5) must be numerically
+        // identical to the 1-bit variant — only the storage differs.
+        prop::cases(15, |rng| {
+            let shapes = vec![prop::gen_shape(rng, 3, 1024)];
+            let cfg1 = OptimConfig::default();
+            let cfg8 = OptimConfig {
+                smmf_sign_mode: super::super::SignMode::Byte8,
+                ..OptimConfig::default()
+            };
+            let mut o1 = Smmf::new(&shapes, &cfg1);
+            let mut o8 = Smmf::new(&shapes, &cfg8);
+            let mut p1 = rand_tensors(rng, &shapes, 1.0);
+            let mut p8 = p1.clone();
+            for _ in 0..3 {
+                let g = rand_tensors(rng, &shapes, 1.0);
+                o1.step(&mut p1, &g);
+                o8.step(&mut p8, &g);
+            }
+            assert_eq!(p1, p8);
+            // ...and the byte store is larger whenever numel > ~64.
+            let numel: usize = shapes[0].iter().product();
+            if numel > 128 {
+                assert!(o8.state_bytes() > o1.state_bytes(), "{numel}");
+            }
+        });
+    }
+
+    #[test]
+    fn compress_first_scheme_uses_rank1_gradient() {
+        // Mechanism check for the §3.2 ablation: compression→decompression
+        // replaces the intact gradient with its rank-1 (+sign)
+        // reconstruction — same total |mass| (Lemma E.7) but a different
+        // matrix — so a single step from zero state must differ from the
+        // decompression→compression scheme, while the first-step V (and
+        // hence the scale of updates) stays comparable.
+        let mut rng = Pcg32::new(9);
+        let g: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let mut ghat = Vec::new();
+        Smmf::compress_then_decompress(&g, 8, 8, &mut ghat);
+        // mass preserved...
+        let mass: f32 = g.iter().map(|x| x.abs()).sum();
+        let mass_hat: f32 = ghat.iter().map(|x| x.abs()).sum();
+        assert!((mass - mass_hat).abs() < 1e-3 * mass);
+        // ...signs preserved...
+        for (a, b) in g.iter().zip(&ghat) {
+            assert_eq!(*a > 0.0, *b > 0.0);
+        }
+        // ...but the matrix itself is degraded (not equal).
+        let err: f32 = g.iter().zip(&ghat).map(|(a, b)| (a - b).abs()).sum();
+        assert!(err > 0.05 * mass, "err={err} mass={mass}");
+
+        // And the two schemes produce different parameter updates.
+        let shapes = vec![vec![8, 8]];
+        let mk = |scheme| OptimConfig { lr: 0.1, smmf_scheme: scheme, ..OptimConfig::default() };
+        let gt = Tensor::from_vec(&[8, 8], g.clone());
+        let mut p1 = vec![Tensor::zeros(&[8, 8])];
+        let mut p2 = vec![Tensor::zeros(&[8, 8])];
+        Smmf::new(&shapes, &mk(SmmfScheme::DecompressFirst)).step(&mut p1, &[gt.clone()]);
+        Smmf::new(&shapes, &mk(SmmfScheme::CompressFirst)).step(&mut p2, &[gt]);
+        assert_ne!(p1, p2);
+    }
+
+    #[test]
+    fn fold_last_matricize_uses_more_memory() {
+        // Square-matricization is the memory win (Theorem 3.1/3.2): the
+        // last-axis fold ablation stores much longer vectors on conv
+        // shapes.
+        let shapes = vec![vec![512, 256, 3, 3]];
+        let sq = Smmf::new(&shapes, &OptimConfig::default());
+        let fold = Smmf::new(
+            &shapes,
+            &OptimConfig {
+                smmf_matricize: super::super::MatricizeMode::FoldLast,
+                ..OptimConfig::default()
+            },
+        );
+        // fold: r has numel/3 entries vs ~sqrt(numel) for square.
+        assert!(fold.state_bytes() > 2 * sq.state_bytes());
+    }
+
+    #[test]
+    fn update_is_bounded_by_lr_over_eps() {
+        // |Δw| per step is at most lr * |M|/(sqrt(V)+eps); with M,V built
+        // from the same gradient this is O(lr) — no blow-ups even for
+        // huge gradients.
+        let shapes = vec![vec![8, 8]];
+        let cfg = OptimConfig { lr: 0.01, ..OptimConfig::default() };
+        let mut opt = Smmf::new(&shapes, &cfg);
+        let mut p = vec![Tensor::zeros(&[8, 8])];
+        let g = vec![Tensor::from_vec(&[8, 8], vec![1e6; 64])];
+        opt.step(&mut p, &g);
+        assert!(p[0].max_abs() <= 0.011, "{}", p[0].max_abs());
+    }
+
+    #[test]
+    fn scratch_is_bounded_by_vectors_not_matrix() {
+        let shapes = vec![vec![512, 512]];
+        let mut opt = Smmf::new(&shapes, &OptimConfig::default());
+        let mut p = vec![Tensor::zeros(&[512, 512])];
+        let g = vec![Tensor::zeros(&[512, 512])];
+        opt.step(&mut p, &g);
+        // Fused path scratch: 2 column accumulators only.
+        assert_eq!(opt.scratch_bytes(), 2 * 512 * 4);
+    }
+}

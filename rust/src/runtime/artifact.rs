@@ -1,0 +1,191 @@
+//! `artifacts/manifest.json` parsing (written by `python/compile/aot.py`).
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// One input/output tensor of an artifact.
+#[derive(Clone, Debug)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// Parameter initialization spec (so Rust can create initial weights
+/// without Python at runtime).
+#[derive(Clone, Debug)]
+pub struct ParamInit {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub init: String,
+    pub scale: f32,
+}
+
+/// One lowered artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub file: String,
+    pub kind: String, // grads | smmf_step | smmf_tensor
+    /// Model family ("mlp" | "lm" | "cnn" | "lora_lm" | "").
+    pub model: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+    pub params: Vec<ParamInit>,
+    /// smmf_step only: the factorized-state tensors (5 per param).
+    pub state: Vec<IoSpec>,
+    pub meta: BTreeMap<String, f64>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+fn parse_io(v: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: v.get("name").and_then(Json::as_str).ok_or_else(|| anyhow!("io.name"))?.into(),
+        shape: v
+            .get("shape")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow!("io.shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("io.shape elem")))
+            .collect::<Result<_>>()?,
+        dtype: v.get("dtype").and_then(Json::as_str).unwrap_or("f32").into(),
+    })
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("{path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let root = Json::parse(text).map_err(|e| anyhow!("manifest JSON: {e}"))?;
+        let arts = root
+            .get("artifacts")
+            .and_then(Json::as_obj)
+            .ok_or_else(|| anyhow!("manifest missing artifacts"))?;
+        let mut out = Manifest::default();
+        for (name, art) in arts {
+            let io = |key: &str| -> Result<Vec<IoSpec>> {
+                art.get(key)
+                    .and_then(Json::as_arr)
+                    .map(|a| a.iter().map(parse_io).collect())
+                    .unwrap_or_else(|| Ok(Vec::new()))
+            };
+            let params = art
+                .get("params")
+                .and_then(Json::as_arr)
+                .map(|a| {
+                    a.iter()
+                        .map(|p| {
+                            Ok(ParamInit {
+                                name: p
+                                    .get("name")
+                                    .and_then(Json::as_str)
+                                    .ok_or_else(|| anyhow!("param.name"))?
+                                    .into(),
+                                shape: p
+                                    .get("shape")
+                                    .and_then(Json::as_arr)
+                                    .ok_or_else(|| anyhow!("param.shape"))?
+                                    .iter()
+                                    .map(|d| d.as_usize().ok_or_else(|| anyhow!("shape elem")))
+                                    .collect::<Result<_>>()?,
+                                init: p.get("init").and_then(Json::as_str).unwrap_or("normal").into(),
+                                scale: p.get("scale").and_then(Json::as_f64).unwrap_or(0.02) as f32,
+                            })
+                        })
+                        .collect::<Result<Vec<_>>>()
+                })
+                .unwrap_or_else(|| Ok(Vec::new()))?;
+            let meta = art
+                .get("meta")
+                .and_then(Json::as_obj)
+                .map(|m| {
+                    m.iter()
+                        .filter_map(|(k, v)| v.as_f64().map(|f| (k.clone(), f)))
+                        .collect()
+                })
+                .unwrap_or_default();
+            out.artifacts.insert(
+                name.clone(),
+                ArtifactSpec {
+                    file: art
+                        .get("file")
+                        .and_then(Json::as_str)
+                        .ok_or_else(|| anyhow!("{name}: file"))?
+                        .into(),
+                    kind: art.get("kind").and_then(Json::as_str).unwrap_or("grads").into(),
+                    model: art.get("model").and_then(Json::as_str).unwrap_or("").into(),
+                    inputs: io("inputs")?,
+                    outputs: io("outputs")?,
+                    state: io("state")?,
+                    params,
+                    meta,
+                },
+            );
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": {
+        "mlp_grads": {
+          "file": "mlp_grads.hlo.txt",
+          "kind": "grads",
+          "inputs": [
+            {"name": "w1", "shape": [4, 8], "dtype": "f32"},
+            {"name": "y", "shape": [16], "dtype": "i32"}
+          ],
+          "outputs": [{"name": "loss", "shape": [], "dtype": "f32"}],
+          "params": [{"name": "w1", "shape": [4, 8], "init": "normal", "scale": 0.05}],
+          "meta": {"batch": 16, "classes": 10}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let a = &m.artifacts["mlp_grads"];
+        assert_eq!(a.file, "mlp_grads.hlo.txt");
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].shape, vec![4, 8]);
+        assert_eq!(a.inputs[1].dtype, "i32");
+        assert_eq!(a.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(a.params[0].scale, 0.05);
+        assert_eq!(a.meta["batch"], 16.0);
+    }
+
+    #[test]
+    fn parse_real_manifest_if_built() {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if !path.exists() {
+            return; // artifacts not built in this checkout
+        }
+        let m = Manifest::load(&path).unwrap();
+        assert!(m.artifacts.contains_key("mlp_grads"));
+        let step = &m.artifacts["mlp_smmf_step"];
+        assert_eq!(step.kind, "smmf_step");
+        assert_eq!(step.state.len(), 5 * step.params.len());
+        // inputs = step + params + state + batch
+        assert!(step.inputs.len() > step.params.len() + step.state.len());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("{\"artifacts\": {\"x\": {}}}").is_err());
+    }
+}

@@ -1,0 +1,219 @@
+//! PJRT runtime: load and execute the AOT artifacts from `artifacts/`.
+//!
+//! Build-time Python lowers every graph to HLO *text* (xla_extension 0.5.1
+//! rejects jax≥0.5 serialized protos — 64-bit instruction ids); this module
+//! parses the manifest, compiles each artifact once on the PJRT CPU client
+//! and exposes a typed [`Graph::run`]. Python never runs here.
+
+pub mod artifact;
+
+pub use artifact::{ArtifactSpec, IoSpec, Manifest, ParamInit};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// Dtypes crossing the Rust <-> XLA boundary.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+    Pred,
+}
+
+impl Dtype {
+    pub fn parse(s: &str) -> Result<Dtype> {
+        Ok(match s {
+            "f32" => Dtype::F32,
+            "i32" => Dtype::I32,
+            "pred" => Dtype::Pred,
+            other => bail!("unsupported dtype {other}"),
+        })
+    }
+
+    pub fn bytes(&self) -> usize {
+        match self {
+            Dtype::F32 | Dtype::I32 => 4,
+            Dtype::Pred => 1,
+        }
+    }
+}
+
+/// The PJRT CPU client + artifact directory.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl Runtime {
+    /// Open the artifact directory (reads `manifest.json`).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {dir:?} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile one artifact (HLO text -> executable).
+    pub fn load(&self, name: &str) -> Result<Graph> {
+        let spec = self
+            .manifest
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not in manifest"))?
+            .clone();
+        let path = self.dir.join(&spec.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        Ok(Graph { exe, spec })
+    }
+}
+
+/// A compiled computation plus its manifest I/O spec.
+pub struct Graph {
+    exe: xla::PjRtLoadedExecutable,
+    pub spec: ArtifactSpec,
+}
+
+impl Graph {
+    /// Execute with host literals; returns output literals in manifest
+    /// order (the AOT side lowers with `return_tuple=True`).
+    pub fn run(&self, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        if inputs.len() != self.spec.inputs.len() {
+            bail!(
+                "{}: expected {} inputs, got {}",
+                self.spec.file,
+                self.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        let result = self.exe.execute::<xla::Literal>(inputs).map_err(|e| anyhow!("{e:?}"))?;
+        let tuple = result[0][0].to_literal_sync().map_err(|e| anyhow!("{e:?}"))?;
+        let outs = tuple.to_tuple().map_err(|e| anyhow!("{e:?}"))?;
+        if outs.len() != self.spec.outputs.len() {
+            bail!(
+                "{}: expected {} outputs, got {}",
+                self.spec.file,
+                self.spec.outputs.len(),
+                outs.len()
+            );
+        }
+        Ok(outs)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal construction / extraction helpers
+// ---------------------------------------------------------------------------
+
+pub fn lit_f32(shape: &[usize], data: &[f32]) -> Result<xla::Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let lit = xla::Literal::vec1(data);
+    lit.reshape(&dims).map_err(|e| anyhow!("{e:?}"))
+}
+
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    debug_assert_eq!(shape.iter().product::<usize>(), data.len());
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    let lit = xla::Literal::vec1(data);
+    lit.reshape(&dims).map_err(|e| anyhow!("{e:?}"))
+}
+
+pub fn lit_scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// PRED tensor from bools (XLA stores PRED as one byte per element).
+pub fn lit_pred(shape: &[usize], data: &[bool]) -> Result<xla::Literal> {
+    let bytes: Vec<u8> = data.iter().map(|&b| b as u8).collect();
+    xla::Literal::create_from_shape_and_untyped_data(xla::ElementType::Pred, shape, &bytes)
+        .map_err(|e| anyhow!("{e:?}"))
+}
+
+/// All-zero literal of a manifest dtype/shape.
+pub fn lit_zeros(dtype: Dtype, shape: &[usize]) -> Result<xla::Literal> {
+    let numel: usize = shape.iter().product();
+    match dtype {
+        Dtype::F32 => lit_f32(shape, &vec![0.0; numel]),
+        Dtype::I32 => lit_i32(shape, &vec![0; numel]),
+        Dtype::Pred => lit_pred(shape, &vec![false; numel]),
+    }
+}
+
+pub fn lit_to_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))
+}
+
+pub fn lit_to_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    lit.get_first_element::<f32>().map_err(|e| anyhow!("{e:?}"))
+}
+
+/// Initialize parameter tensors from the manifest init specs.
+pub fn init_params(inits: &[ParamInit], seed: u64) -> Vec<Tensor> {
+    let mut rng = Pcg32::new(seed);
+    inits
+        .iter()
+        .map(|p| {
+            let mut t = Tensor::zeros(&p.shape);
+            match p.init.as_str() {
+                "zeros" => {}
+                "ones" => t.fill(1.0),
+                _ => rng.fill_normal(t.data_mut(), p.scale),
+            }
+            t
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_parse() {
+        assert_eq!(Dtype::parse("f32").unwrap(), Dtype::F32);
+        assert_eq!(Dtype::parse("pred").unwrap(), Dtype::Pred);
+        assert!(Dtype::parse("f64").is_err());
+    }
+
+    #[test]
+    fn literals_roundtrip() {
+        let l = lit_f32(&[2, 3], &[1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(lit_to_vec_f32(&l).unwrap(), vec![1., 2., 3., 4., 5., 6.]);
+        let s = lit_scalar_f32(7.5);
+        assert_eq!(lit_to_scalar_f32(&s).unwrap(), 7.5);
+        let i = lit_i32(&[4], &[1, -2, 3, -4]).unwrap();
+        assert_eq!(i.to_vec::<i32>().unwrap(), vec![1, -2, 3, -4]);
+    }
+
+    #[test]
+    fn pred_literal_size() {
+        let p = lit_pred(&[2, 2], &[true, false, true, true]).unwrap();
+        assert_eq!(p.size_bytes(), 4); // 1 byte per PRED element
+    }
+
+    #[test]
+    fn init_params_respects_spec() {
+        let inits = vec![
+            ParamInit { name: "w".into(), shape: vec![4, 4], init: "normal".into(), scale: 0.1 },
+            ParamInit { name: "b".into(), shape: vec![4], init: "zeros".into(), scale: 0.0 },
+            ParamInit { name: "g".into(), shape: vec![4], init: "ones".into(), scale: 0.0 },
+        ];
+        let ps = init_params(&inits, 0);
+        assert!(ps[0].data().iter().any(|&x| x != 0.0));
+        assert!(ps[0].max_abs() < 1.0);
+        assert!(ps[1].data().iter().all(|&x| x == 0.0));
+        assert!(ps[2].data().iter().all(|&x| x == 1.0));
+    }
+}

@@ -1,0 +1,195 @@
+//! Packed bit matrix — SMMF's 1-bit sign state `S_M`.
+//!
+//! The paper stores the sign of every 1st-momentum element as one bit
+//! (32× smaller than the f32 momentum it replaces); this is the single
+//! largest component of SMMF's optimizer memory and must actually be
+//! bit-packed for the memory tables to mean anything.
+
+/// Row-major packed bit matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct BitMatrix {
+    rows: usize,
+    cols: usize,
+    words: Vec<u64>,
+}
+
+impl BitMatrix {
+    pub fn zeros(rows: usize, cols: usize) -> BitMatrix {
+        let nbits = rows * cols;
+        BitMatrix { rows, cols, words: vec![0; nbits.div_ceil(64)] }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    pub fn nbits(&self) -> usize {
+        self.rows * self.cols
+    }
+
+    /// Heap bytes actually held (the paper's S_M memory figure).
+    pub fn heap_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    #[inline]
+    pub fn get(&self, idx: usize) -> bool {
+        debug_assert!(idx < self.nbits());
+        (self.words[idx >> 6] >> (idx & 63)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn set(&mut self, idx: usize, v: bool) {
+        debug_assert!(idx < self.nbits());
+        let (w, b) = (idx >> 6, idx & 63);
+        if v {
+            self.words[w] |= 1u64 << b;
+        } else {
+            self.words[w] &= !(1u64 << b);
+        }
+    }
+
+    #[inline]
+    pub fn get2(&self, i: usize, j: usize) -> bool {
+        self.get(i * self.cols + j)
+    }
+
+    /// Set bits [start, start+len) from a sign predicate over values,
+    /// packing whole words at a time (hot path).
+    pub fn set_range_from_signs(&mut self, start: usize, values: &[f32]) {
+        for (k, &v) in values.iter().enumerate() {
+            self.set(start + k, v > 0.0);
+        }
+    }
+
+    /// Read up to 64 bits starting at bit `start` (bits beyond the matrix
+    /// are zero). Hot-path helper for the fused SMMF step: one load pair
+    /// replaces 64 `get` calls.
+    #[inline]
+    pub fn get_chunk64(&self, start: usize) -> u64 {
+        let w = start >> 6;
+        let o = start & 63;
+        let lo = self.words.get(w).copied().unwrap_or(0) >> o;
+        if o == 0 {
+            lo
+        } else {
+            let hi = self.words.get(w + 1).copied().unwrap_or(0) << (64 - o);
+            lo | hi
+        }
+    }
+
+    /// Write `len` (<= 64) bits starting at bit `start`.
+    #[inline]
+    pub fn set_chunk64(&mut self, start: usize, bits: u64, len: usize) {
+        debug_assert!(len >= 1 && len <= 64);
+        debug_assert!(start + len <= self.nbits().next_multiple_of(64));
+        let mask = if len == 64 { u64::MAX } else { (1u64 << len) - 1 };
+        let bits = bits & mask;
+        let w = start >> 6;
+        let o = start & 63;
+        self.words[w] = (self.words[w] & !(mask << o)) | (bits << o);
+        let spill = (o + len).saturating_sub(64);
+        if spill > 0 {
+            let hi_mask = (1u64 << spill) - 1;
+            self.words[w + 1] = (self.words[w + 1] & !hi_mask) | (bits >> (len - spill));
+        }
+    }
+
+    /// Raw words (for checkpointing).
+    pub fn words(&self) -> &[u64] {
+        &self.words
+    }
+
+    pub fn words_mut(&mut self) -> &mut [u64] {
+        &mut self.words
+    }
+
+    pub fn count_ones(&self) -> usize {
+        self.words.iter().map(|w| w.count_ones() as usize).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut b = BitMatrix::zeros(5, 13); // 65 bits -> 2 words
+        assert_eq!(b.heap_bytes(), 16);
+        b.set(0, true);
+        b.set(64, true);
+        b.set(37, true);
+        assert!(b.get(0) && b.get(64) && b.get(37));
+        assert!(!b.get(1) && !b.get(63));
+        b.set(64, false);
+        assert!(!b.get(64));
+        assert_eq!(b.count_ones(), 2);
+    }
+
+    #[test]
+    fn get2_row_major() {
+        let mut b = BitMatrix::zeros(3, 4);
+        b.set(1 * 4 + 2, true);
+        assert!(b.get2(1, 2));
+        assert!(!b.get2(2, 1));
+    }
+
+    #[test]
+    fn signs_from_values() {
+        let mut b = BitMatrix::zeros(1, 6);
+        b.set_range_from_signs(0, &[1.0, -1.0, 0.0, 2.0, -0.5, 3.0]);
+        let bits: Vec<bool> = (0..6).map(|i| b.get(i)).collect();
+        // strictly-positive convention (paper: sign = M > 0)
+        assert_eq!(bits, vec![true, false, false, true, false, true]);
+    }
+
+    #[test]
+    fn chunk_roundtrip_matches_bitwise() {
+        use crate::util::prop;
+        prop::cases(60, |rng| {
+            let rows = 1 + rng.below(6);
+            let cols = 1 + rng.below(130);
+            let mut a = BitMatrix::zeros(rows, cols);
+            let mut b = BitMatrix::zeros(rows, cols);
+            // random fill via chunks on a, via bits on b
+            for i in 0..rows {
+                let base = i * cols;
+                let mut j = 0;
+                while j < cols {
+                    let len = (cols - j).min(64);
+                    let bits = rng.next_u64();
+                    a.set_chunk64(base + j, bits, len);
+                    for k in 0..len {
+                        b.set(base + j + k, (bits >> k) & 1 == 1);
+                    }
+                    j += len;
+                }
+            }
+            assert_eq!(a.words(), b.words());
+            // chunk reads agree with bit reads
+            for i in 0..rows {
+                let base = i * cols;
+                let mut j = 0;
+                while j < cols {
+                    let len = (cols - j).min(64);
+                    let got = a.get_chunk64(base + j);
+                    for k in 0..len {
+                        assert_eq!((got >> k) & 1 == 1, b.get(base + j + k));
+                    }
+                    j += len;
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn memory_is_bit_packed() {
+        let b = BitMatrix::zeros(1024, 1024);
+        assert_eq!(b.heap_bytes(), 1024 * 1024 / 8);
+    }
+}

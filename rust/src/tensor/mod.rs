@@ -1,0 +1,179 @@
+//! Minimal dense tensor substrate.
+//!
+//! Optimizers only need: contiguous f32 storage with a shape, elementwise
+//! ops, outer products, axis reductions over a 2-D view, and a packed
+//! bitset for SMMF's sign matrix. Kept deliberately small and allocation
+//! explicit — the optimizer hot path reuses scratch buffers.
+
+mod bitset;
+
+pub use bitset::BitMatrix;
+
+/// A dense, contiguous, row-major f32 tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let numel = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; numel] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn scalar(v: f32) -> Tensor {
+        Tensor { shape: vec![], data: vec![v] }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    /// Reinterpret as a new shape (no data movement). Panics on mismatch.
+    pub fn reshaped(mut self, shape: &[usize]) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// self += alpha * other (elementwise, shapes must match).
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) {
+        assert_eq!(self.data.len(), other.data.len());
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+    }
+
+    pub fn scale(&mut self, alpha: f32) {
+        self.data.iter_mut().for_each(|x| *x *= alpha);
+    }
+
+    pub fn sum(&self) -> f32 {
+        // Pairwise-ish: accumulate in f64 for stability on big tensors.
+        self.data.iter().map(|&x| x as f64).sum::<f64>() as f32
+    }
+
+    pub fn sq_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum()
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+}
+
+/// 2-D helpers over a (rows, cols) view of a flat slice (the optimizer hot
+/// path works on square-matricized views without reshaping tensors).
+pub mod mat {
+    /// out[i] = sum_j m[i, j]
+    pub fn row_sums(m: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+        debug_assert_eq!(m.len(), rows * cols);
+        debug_assert_eq!(out.len(), rows);
+        for (i, o) in out.iter_mut().enumerate() {
+            let row = &m[i * cols..(i + 1) * cols];
+            *o = row.iter().sum();
+        }
+    }
+
+    /// out[j] = sum_i m[i, j]
+    pub fn col_sums(m: &[f32], rows: usize, cols: usize, out: &mut [f32]) {
+        debug_assert_eq!(m.len(), rows * cols);
+        debug_assert_eq!(out.len(), cols);
+        out.iter_mut().for_each(|x| *x = 0.0);
+        for i in 0..rows {
+            let row = &m[i * cols..(i + 1) * cols];
+            for (o, &v) in out.iter_mut().zip(row) {
+                *o += v;
+            }
+        }
+    }
+
+    /// out[i, j] = r[i] * c[j]
+    pub fn outer(r: &[f32], c: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(out.len(), r.len() * c.len());
+        for (i, &ri) in r.iter().enumerate() {
+            let row = &mut out[i * c.len()..(i + 1) * c.len()];
+            for (o, &cj) in row.iter_mut().zip(c) {
+                *o = ri * cj;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.numel(), 6);
+        let t2 = t.clone().reshaped(&[3, 2]);
+        assert_eq!(t2.shape(), &[3, 2]);
+        assert_eq!(t2.data(), t.data());
+    }
+
+    #[test]
+    #[should_panic]
+    fn reshape_mismatch_panics() {
+        Tensor::zeros(&[2, 2]).reshaped(&[3]);
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = Tensor::from_vec(&[3], vec![1., 2., 3.]);
+        let b = Tensor::from_vec(&[3], vec![10., 10., 10.]);
+        a.axpy(0.5, &b);
+        assert_eq!(a.data(), &[6., 7., 8.]);
+        a.scale(2.0);
+        assert_eq!(a.data(), &[12., 14., 16.]);
+    }
+
+    #[test]
+    fn mat_sums_and_outer() {
+        let m = vec![1., 2., 3., 4., 5., 6.]; // 2x3
+        let mut r = vec![0.; 2];
+        let mut c = vec![0.; 3];
+        mat::row_sums(&m, 2, 3, &mut r);
+        mat::col_sums(&m, 2, 3, &mut c);
+        assert_eq!(r, vec![6., 15.]);
+        assert_eq!(c, vec![5., 7., 9.]);
+        let mut o = vec![0.; 6];
+        mat::outer(&[2., 3.], &[1., 10., 100.], &mut o);
+        assert_eq!(o, vec![2., 20., 200., 3., 30., 300.]);
+    }
+
+    #[test]
+    fn stats() {
+        let t = Tensor::from_vec(&[4], vec![-3., 1., 2., -1.]);
+        assert_eq!(t.sum(), -1.0);
+        assert_eq!(t.max_abs(), 3.0);
+        assert_eq!(t.sq_norm(), 15.0);
+    }
+}

@@ -1,0 +1,119 @@
+//! Checkpointing: parameters (and trainer step) in a simple binary format.
+//!
+//! Layout (little-endian):
+//! `b"SMMFCKPT" | u32 version | u64 step | u32 n_tensors |`
+//! per tensor: `u32 name_len | name | u32 rank | u64 dims[rank] | f32 data[]`.
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use crate::tensor::Tensor;
+
+const MAGIC: &[u8; 8] = b"SMMFCKPT";
+const VERSION: u32 = 1;
+
+pub fn save(path: &Path, step: u64, names: &[String], tensors: &[Tensor]) -> Result<()> {
+    assert_eq!(names.len(), tensors.len());
+    let mut w = BufWriter::new(std::fs::File::create(path).with_context(|| format!("{path:?}"))?);
+    w.write_all(MAGIC)?;
+    w.write_all(&VERSION.to_le_bytes())?;
+    w.write_all(&step.to_le_bytes())?;
+    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in names.iter().zip(tensors) {
+        w.write_all(&(name.len() as u32).to_le_bytes())?;
+        w.write_all(name.as_bytes())?;
+        w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
+        for &d in t.shape() {
+            w.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &v in t.data() {
+            w.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load(path: &Path) -> Result<(u64, Vec<String>, Vec<Tensor>)> {
+    let mut r = BufReader::new(std::fs::File::open(path).with_context(|| format!("{path:?}"))?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        bail!("not a SMMF checkpoint: {path:?}");
+    }
+    let version = read_u32(&mut r)?;
+    if version != VERSION {
+        bail!("unsupported checkpoint version {version}");
+    }
+    let step = read_u64(&mut r)?;
+    let n = read_u32(&mut r)? as usize;
+    let mut names = Vec::with_capacity(n);
+    let mut tensors = Vec::with_capacity(n);
+    for _ in 0..n {
+        let name_len = read_u32(&mut r)? as usize;
+        if name_len > 4096 {
+            bail!("corrupt checkpoint: name_len {name_len}");
+        }
+        let mut name = vec![0u8; name_len];
+        r.read_exact(&mut name)?;
+        let rank = read_u32(&mut r)? as usize;
+        if rank > 16 {
+            bail!("corrupt checkpoint: rank {rank}");
+        }
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            shape.push(read_u64(&mut r)? as usize);
+        }
+        let numel: usize = shape.iter().product();
+        let mut data = vec![0f32; numel];
+        let mut buf = [0u8; 4];
+        for v in data.iter_mut() {
+            r.read_exact(&mut buf)?;
+            *v = f32::from_le_bytes(buf);
+        }
+        names.push(String::from_utf8(name)?);
+        tensors.push(Tensor::from_vec(&shape, data));
+    }
+    Ok((step, names, tensors))
+}
+
+fn read_u32(r: &mut impl Read) -> Result<u32> {
+    let mut b = [0u8; 4];
+    r.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+fn read_u64(r: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    r.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let tmp = std::env::temp_dir().join(format!("smmf_ckpt_{}.bin", std::process::id()));
+        let names = vec!["w1".to_string(), "b1".to_string()];
+        let tensors = vec![
+            Tensor::from_vec(&[2, 3], vec![1., -2., 3., 4., 5.5, -6.]),
+            Tensor::from_vec(&[3], vec![0.1, 0.2, 0.3]),
+        ];
+        save(&tmp, 42, &names, &tensors).unwrap();
+        let (step, n2, t2) = load(&tmp).unwrap();
+        assert_eq!(step, 42);
+        assert_eq!(n2, names);
+        assert_eq!(t2, tensors);
+        std::fs::remove_file(&tmp).unwrap();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let tmp = std::env::temp_dir().join(format!("smmf_bad_{}.bin", std::process::id()));
+        std::fs::write(&tmp, b"not a checkpoint").unwrap();
+        assert!(load(&tmp).is_err());
+        std::fs::remove_file(&tmp).unwrap();
+    }
+}

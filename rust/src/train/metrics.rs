@@ -1,0 +1,98 @@
+//! Run metrics: JSONL (machine) + CSV (plotting) writers under `runs/`.
+
+use anyhow::{Context, Result};
+use std::fs::{self, File};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use crate::util::json::ObjBuilder;
+
+pub struct RunLogger {
+    pub dir: PathBuf,
+    jsonl: BufWriter<File>,
+    csv: BufWriter<File>,
+    csv_header_written: bool,
+    started: Instant,
+}
+
+impl RunLogger {
+    /// Create `runs/<name>/` with `metrics.jsonl` and `metrics.csv`.
+    pub fn create(root: impl AsRef<Path>, name: &str) -> Result<RunLogger> {
+        let dir = root.as_ref().join(name);
+        fs::create_dir_all(&dir).with_context(|| format!("mkdir {dir:?}"))?;
+        let jsonl = BufWriter::new(File::create(dir.join("metrics.jsonl"))?);
+        let csv = BufWriter::new(File::create(dir.join("metrics.csv"))?);
+        Ok(RunLogger { dir, jsonl, csv, csv_header_written: false, started: Instant::now() })
+    }
+
+    /// Log one step record: fixed fields + extra named values.
+    pub fn log(&mut self, step: u64, loss: f32, extra: &[(&str, f64)]) -> Result<()> {
+        let elapsed = self.started.elapsed().as_secs_f64();
+        let mut obj = ObjBuilder::new()
+            .num("step", step as f64)
+            .num("loss", loss as f64)
+            .num("elapsed_s", elapsed);
+        for (k, v) in extra {
+            obj = obj.num(k, *v);
+        }
+        writeln!(self.jsonl, "{}", obj.build().to_string())?;
+        if !self.csv_header_written {
+            let mut head = vec!["step".to_string(), "loss".into(), "elapsed_s".into()];
+            head.extend(extra.iter().map(|(k, _)| k.to_string()));
+            writeln!(self.csv, "{}", head.join(","))?;
+            self.csv_header_written = true;
+        }
+        let mut row = vec![step.to_string(), format!("{loss}"), format!("{elapsed:.3}")];
+        row.extend(extra.iter().map(|(_, v)| format!("{v}")));
+        writeln!(self.csv, "{}", row.join(","))?;
+        // Flush per record: logs are sparse (every log_every steps) and
+        // live tailing during long runs matters more than write batching.
+        self.jsonl.flush()?;
+        self.csv.flush()?;
+        Ok(())
+    }
+
+    /// Write a free-form summary JSON next to the metrics.
+    pub fn write_summary(&self, json: &crate::util::json::Json) -> Result<()> {
+        fs::write(self.dir.join("summary.json"), json.to_string())?;
+        Ok(())
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        self.jsonl.flush()?;
+        self.csv.flush()?;
+        Ok(())
+    }
+}
+
+impl Drop for RunLogger {
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn writes_jsonl_and_csv() {
+        let tmp = std::env::temp_dir().join(format!("smmf_metrics_{}", std::process::id()));
+        {
+            let mut log = RunLogger::create(&tmp, "t1").unwrap();
+            log.log(1, 2.5, &[("lr", 1e-3)]).unwrap();
+            log.log(2, 2.0, &[("lr", 1e-3)]).unwrap();
+            log.flush().unwrap();
+        }
+        let jsonl = std::fs::read_to_string(tmp.join("t1/metrics.jsonl")).unwrap();
+        let lines: Vec<_> = jsonl.lines().collect();
+        assert_eq!(lines.len(), 2);
+        let rec = Json::parse(lines[0]).unwrap();
+        assert_eq!(rec.get("loss").unwrap().as_f64(), Some(2.5));
+        let csv = std::fs::read_to_string(tmp.join("t1/metrics.csv")).unwrap();
+        assert!(csv.starts_with("step,loss,elapsed_s,lr"));
+        std::fs::remove_dir_all(&tmp).unwrap();
+    }
+}

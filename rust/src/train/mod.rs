@@ -1,0 +1,220 @@
+//! Training loop: AOT fwd/bwd + Rust optimizer step.
+//!
+//! Two paths exercise the paper end-to-end:
+//!
+//! * [`TrainGraph`] + [`Trainer`] — the framework path: the HLO artifact
+//!   computes `(loss, grads…)`, any [`crate::optim::Optimizer`] (SMMF or a
+//!   baseline) updates parameters in Rust. This is what the experiment
+//!   harness uses to compare the five optimizers under identical budgets.
+//! * [`FusedSmmfStep`] — the compiled path: the whole train step including
+//!   the SMMF update (through the L1 Pallas kernel) is one XLA program;
+//!   Rust only feeds batches and carries the factorized state between
+//!   calls. Used by the quickstart and the L1/L2 perf benches.
+
+pub mod checkpoint;
+pub mod metrics;
+
+pub use metrics::RunLogger;
+
+use anyhow::{bail, Result};
+
+use crate::optim::schedule::LrSchedule;
+use crate::optim::Optimizer;
+use crate::runtime::{
+    init_params, lit_f32, lit_scalar_f32, lit_to_scalar_f32, lit_to_vec_f32, lit_zeros, Dtype,
+    Graph, Runtime,
+};
+use crate::tensor::Tensor;
+
+/// A `(params…, batch…) -> (loss, grads…)` artifact.
+pub struct TrainGraph {
+    graph: Graph,
+    n_params: usize,
+}
+
+impl TrainGraph {
+    pub fn load(rt: &Runtime, name: &str) -> Result<TrainGraph> {
+        let graph = rt.load(name)?;
+        if graph.spec.kind != "grads" {
+            bail!("{name} is kind {}, expected grads", graph.spec.kind);
+        }
+        let n_params = graph.spec.params.len();
+        Ok(TrainGraph { graph, n_params })
+    }
+
+    pub fn n_params(&self) -> usize {
+        self.n_params
+    }
+
+    pub fn spec(&self) -> &crate::runtime::ArtifactSpec {
+        &self.graph.spec
+    }
+
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        self.graph.spec.params.iter().map(|p| p.shape.clone()).collect()
+    }
+
+    pub fn init_params(&self, seed: u64) -> Vec<Tensor> {
+        init_params(&self.graph.spec.params, seed)
+    }
+
+    /// Batch input specs (everything after the params).
+    pub fn batch_inputs(&self) -> &[crate::runtime::IoSpec] {
+        &self.graph.spec.inputs[self.n_params..]
+    }
+
+    /// Run fwd/bwd; fills `grads_out` (reused across steps) and returns
+    /// the loss.
+    pub fn loss_and_grads(
+        &self,
+        params: &[Tensor],
+        batch: &[xla::Literal],
+        grads_out: &mut Vec<Tensor>,
+    ) -> Result<f32> {
+        let mut inputs = Vec::with_capacity(self.n_params + batch.len());
+        for (p, spec) in params.iter().zip(&self.graph.spec.params) {
+            inputs.push(lit_f32(&spec.shape, p.data())?);
+        }
+        inputs.extend(batch.iter().cloned());
+        let outs = self.graph.run(&inputs)?;
+        let loss = lit_to_scalar_f32(&outs[0])?;
+        grads_out.clear();
+        for (out, spec) in outs[1..].iter().zip(&self.graph.spec.params) {
+            grads_out.push(Tensor::from_vec(&spec.shape, lit_to_vec_f32(out)?));
+        }
+        Ok(loss)
+    }
+}
+
+/// Trainer: composes a [`TrainGraph`] with an optimizer and LR schedule.
+pub struct Trainer {
+    pub graph: TrainGraph,
+    pub opt: Box<dyn Optimizer>,
+    pub params: Vec<Tensor>,
+    grads: Vec<Tensor>,
+    pub step: u64,
+    pub base_lr: f32,
+    pub schedule: LrSchedule,
+}
+
+impl Trainer {
+    pub fn new(
+        graph: TrainGraph,
+        opt: Box<dyn Optimizer>,
+        seed: u64,
+        base_lr: f32,
+        schedule: LrSchedule,
+    ) -> Trainer {
+        let params = graph.init_params(seed);
+        Trainer { graph, opt, params, grads: Vec::new(), step: 0, base_lr, schedule }
+    }
+
+    /// One optimization step on a batch; returns the loss.
+    pub fn train_step(&mut self, batch: &[xla::Literal]) -> Result<f32> {
+        self.step += 1;
+        let lr = self.schedule.at(self.base_lr, self.step);
+        self.opt.set_lr(lr);
+        let loss = self.graph.loss_and_grads(&self.params, batch, &mut self.grads)?;
+        if !loss.is_finite() {
+            bail!("loss diverged at step {}: {loss}", self.step);
+        }
+        self.opt.step(&mut self.params, &self.grads);
+        Ok(loss)
+    }
+
+    /// Evaluate loss without updating (e.g. on a held-out batch).
+    pub fn eval_loss(&mut self, batch: &[xla::Literal]) -> Result<f32> {
+        self.graph.loss_and_grads(&self.params, batch, &mut self.grads)
+    }
+
+    pub fn optimizer_state_bytes(&self) -> u64 {
+        self.opt.state_bytes()
+    }
+}
+
+/// The compiled whole-train-step path: `(step, params…, state…, batch…) ->
+/// (loss, params'…, state'…)` with the SMMF update inside the XLA program.
+pub struct FusedSmmfStep {
+    graph: Graph,
+    n_params: usize,
+    n_state: usize,
+    /// Current parameters + factorized optimizer state, kept as literals
+    /// and threaded through consecutive executions.
+    params: Vec<xla::Literal>,
+    state: Vec<xla::Literal>,
+    pub step: u64,
+}
+
+impl FusedSmmfStep {
+    pub fn load(rt: &Runtime, name: &str, seed: u64) -> Result<FusedSmmfStep> {
+        let graph = rt.load(name)?;
+        if graph.spec.kind != "smmf_step" {
+            bail!("{name} is kind {}, expected smmf_step", graph.spec.kind);
+        }
+        let n_params = graph.spec.params.len();
+        let n_state = graph.spec.state.len();
+        let init = init_params(&graph.spec.params, seed);
+        let params = init
+            .iter()
+            .zip(&graph.spec.params)
+            .map(|(t, s)| lit_f32(&s.shape, t.data()))
+            .collect::<Result<Vec<_>>>()?;
+        let state = graph
+            .spec
+            .state
+            .iter()
+            .map(|s| lit_zeros(Dtype::parse(&s.dtype)?, &s.shape))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(FusedSmmfStep { graph, n_params, n_state, params, state, step: 0 })
+    }
+
+    pub fn batch_inputs(&self) -> &[crate::runtime::IoSpec] {
+        &self.graph.spec.inputs[1 + self.n_params + self.n_state..]
+    }
+
+    /// One fused train step; returns the loss.
+    pub fn train_step(&mut self, batch: &[xla::Literal]) -> Result<f32> {
+        self.step += 1;
+        let mut inputs = Vec::with_capacity(1 + self.n_params + self.n_state + batch.len());
+        inputs.push(lit_scalar_f32(self.step as f32));
+        inputs.extend(self.params.iter().cloned());
+        inputs.extend(self.state.iter().cloned());
+        inputs.extend(batch.iter().cloned());
+        let mut outs = self.graph.run(&inputs)?;
+        let loss = lit_to_scalar_f32(&outs[0])?;
+        // outs = [loss, params'…, state'…]
+        let state_new: Vec<_> = outs.drain(1 + self.n_params..).collect();
+        let params_new: Vec<_> = outs.drain(1..).collect();
+        self.params = params_new;
+        self.state = state_new;
+        Ok(loss)
+    }
+
+    /// Copy the current value of parameter `idx` back to the host.
+    pub fn param_f32(&self, idx: usize) -> Result<Vec<f32>> {
+        lit_to_vec_f32(&self.params[idx])
+    }
+
+    /// Persistent optimizer-state bytes of the compiled path: the
+    /// factorized vectors (f32) + sign matrices (1 byte/elem as PRED —
+    /// the paper's Table-5 "8-bit S_M" configuration).
+    pub fn state_bytes(&self) -> u64 {
+        self.graph
+            .spec
+            .state
+            .iter()
+            .map(|s| {
+                let numel: usize = s.shape.iter().product();
+                (numel * if s.dtype == "pred" { 1 } else { 4 }) as u64
+            })
+            .sum()
+    }
+
+    pub fn param_specs(&self) -> &[crate::runtime::ParamInit] {
+        &self.graph.spec.params
+    }
+
+    pub fn spec(&self) -> &crate::runtime::ArtifactSpec {
+        &self.graph.spec
+    }
+}

@@ -1,0 +1,134 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Warms up, auto-scales iteration counts to a target measurement time,
+//! reports median / mean / p10 / p90 over sample batches, and prints
+//! criterion-like one-line summaries. Used by `rust/benches/*`.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters_per_sample: u64,
+    pub samples: Vec<Duration>,
+    pub median: Duration,
+    pub mean: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+}
+
+impl BenchStats {
+    pub fn summary(&self) -> String {
+        format!(
+            "{:<44} median {:>12}  mean {:>12}  [p10 {} .. p90 {}]  ({} samples x {} iters)",
+            self.name,
+            super::fmt::duration(self.median),
+            super::fmt::duration(self.mean),
+            super::fmt::duration(self.p10),
+            super::fmt::duration(self.p90),
+            self.samples.len(),
+            self.iters_per_sample,
+        )
+    }
+}
+
+pub struct Bencher {
+    pub warmup: Duration,
+    pub target_sample: Duration,
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            warmup: Duration::from_millis(300),
+            target_sample: Duration::from_millis(100),
+            samples: 12,
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            warmup: Duration::from_millis(50),
+            target_sample: Duration::from_millis(30),
+            samples: 6,
+        }
+    }
+
+    /// Run `f` repeatedly and gather statistics. `f` should perform one
+    /// logical iteration and return something opaque to keep it alive.
+    pub fn bench<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        // Warmup + estimate single-iteration cost.
+        let warm_start = Instant::now();
+        let mut warm_iters = 0u64;
+        while warm_start.elapsed() < self.warmup || warm_iters < 1 {
+            std::hint::black_box(f());
+            warm_iters += 1;
+            if warm_iters > 1_000_000 {
+                break;
+            }
+        }
+        let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+        let iters = ((self.target_sample.as_secs_f64() / per_iter).ceil() as u64).clamp(1, 10_000_000);
+
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                std::hint::black_box(f());
+            }
+            samples.push(Duration::from_secs_f64(t0.elapsed().as_secs_f64() / iters as f64));
+        }
+        let mut sorted = samples.clone();
+        sorted.sort();
+        let pick = |q: f64| sorted[((sorted.len() - 1) as f64 * q).round() as usize];
+        let mean = Duration::from_secs_f64(
+            samples.iter().map(|d| d.as_secs_f64()).sum::<f64>() / samples.len() as f64,
+        );
+        BenchStats {
+            name: name.to_string(),
+            iters_per_sample: iters,
+            median: pick(0.5),
+            mean,
+            p10: pick(0.1),
+            p90: pick(0.9),
+            samples,
+        }
+    }
+
+    /// Bench and print the one-line summary; returns the stats.
+    pub fn run<T>(&self, name: &str, f: impl FnMut() -> T) -> BenchStats {
+        let stats = self.bench(name, f);
+        println!("{}", stats.summary());
+        stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let b = Bencher {
+            warmup: Duration::from_millis(5),
+            target_sample: Duration::from_millis(2),
+            samples: 3,
+        };
+        // black_box the loop bound so release builds can't fold the whole
+        // closure to a constant (which would measure as exactly zero).
+        let stats = b.bench("noop-ish", || {
+            let n = std::hint::black_box(100u64);
+            let mut acc = 0u64;
+            for i in 0..n {
+                acc = acc.wrapping_add(std::hint::black_box(i));
+            }
+            acc
+        });
+        assert!(stats.mean > Duration::ZERO);
+        assert_eq!(stats.samples.len(), 3);
+        assert!(stats.p10 <= stats.p90);
+    }
+}

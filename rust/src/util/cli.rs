@@ -1,0 +1,101 @@
+//! Tiny CLI argument parser (GNU-style `--flag value` / `--flag=value`).
+
+use std::collections::BTreeMap;
+
+/// Parsed command line: a subcommand, positional args and `--key value`
+/// options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub command: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from `std::env::args()` (skipping argv[0]).
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(iter: I) -> Args {
+        let mut out = Args::default();
+        let mut items = iter.into_iter().peekable();
+        while let Some(item) = items.next() {
+            if let Some(name) = item.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if items.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = items.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(item);
+            } else {
+                out.positional.push(item);
+            }
+        }
+        out
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or(default).to_string()
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        // Note: a bare `--name value` is greedy (option), so flags either
+        // precede another `--` token or sit at the end.
+        let a = parse("table1 extra --optimizer smmf --lr=0.001 --quiet");
+        assert_eq!(a.command.as_deref(), Some("table1"));
+        assert_eq!(a.opt("optimizer"), Some("smmf"));
+        assert_eq!(a.f64_or("lr", 0.0), 0.001);
+        assert!(a.has_flag("quiet"));
+        assert_eq!(a.positional, vec!["extra".to_string()]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("run --verbose --steps 10");
+        assert!(a.has_flag("verbose"));
+        assert_eq!(a.usize_or("steps", 0), 10);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert!(a.command.is_none());
+        assert_eq!(a.str_or("x", "d"), "d");
+    }
+}

@@ -1,0 +1,16 @@
+//! In-tree substrates.
+//!
+//! The build environment is offline with only the `xla` crate vendored, so
+//! every auxiliary dependency a framework normally pulls from crates.io is
+//! implemented here: a seeded PCG RNG, a JSON parser/writer (for the AOT
+//! manifest and metrics), a TOML-subset config parser, a CLI argument
+//! parser, byte/duration formatting, a micro-benchmark harness and a
+//! property-testing harness.
+
+pub mod bench;
+pub mod cli;
+pub mod fmt;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod toml;

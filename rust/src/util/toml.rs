@@ -1,0 +1,226 @@
+//! TOML-subset parser for experiment configs.
+//!
+//! Supports: `[section]` / `[a.b]` headers, `key = value` with string,
+//! integer, float, boolean and flat-array values, `#` comments. This covers
+//! every config shipped under `configs/`; exotic TOML (dates, inline
+//! tables, multiline strings) is intentionally rejected with an error.
+
+use std::collections::BTreeMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<TomlValue>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            TomlValue::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            TomlValue::Float(f) => Some(*f),
+            TomlValue::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            TomlValue::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            TomlValue::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A parsed config: dotted-path key -> value (e.g. "optimizer.lr").
+#[derive(Clone, Debug, Default)]
+pub struct TomlDoc {
+    pub values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, String> {
+        let mut doc = TomlDoc::default();
+        let mut prefix = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| format!("line {}: unterminated section", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty section name", lineno + 1));
+                }
+                prefix = format!("{name}.");
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let key = line[..eq].trim();
+            if key.is_empty() {
+                return Err(format!("line {}: empty key", lineno + 1));
+            }
+            let value = parse_value(line[eq + 1..].trim())
+                .map_err(|e| format!("line {}: {e}", lineno + 1))?;
+            doc.values.insert(format!("{prefix}{key}"), value);
+        }
+        Ok(doc)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+
+    pub fn str_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).and_then(|v| v.as_str()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.as_f64()).unwrap_or(default)
+    }
+
+    pub fn i64_or(&self, key: &str, default: i64) -> i64 {
+        self.get(key).and_then(|v| v.as_i64()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A '#' outside of quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<TomlValue, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(rest) = s.strip_prefix('"') {
+        let end = rest.rfind('"').ok_or("unterminated string")?;
+        return Ok(TomlValue::Str(rest[..end].to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner.strip_suffix(']').ok_or("unterminated array")?;
+        let mut out = Vec::new();
+        let trimmed = inner.trim();
+        if !trimmed.is_empty() {
+            for part in split_top_level(trimmed) {
+                out.push(parse_value(part.trim())?);
+            }
+        }
+        return Ok(TomlValue::Arr(out));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = s.replace('_', "").parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(format!("cannot parse value: {s}"))
+}
+
+fn split_top_level(s: &str) -> Vec<&str> {
+    let mut parts = Vec::new();
+    let (mut depth, mut start, mut in_str) = (0usize, 0usize, false);
+    for (i, c) in s.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '[' if !in_str => depth += 1,
+            ']' if !in_str => depth = depth.saturating_sub(1),
+            ',' if !in_str && depth == 0 => {
+                parts.push(&s[start..i]);
+                start = i + 1;
+            }
+            _ => {}
+        }
+    }
+    parts.push(&s[start..]);
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_config() {
+        let text = r#"
+# experiment config
+name = "fig2"
+steps = 400
+
+[optimizer]
+kind = "smmf"
+lr = 1e-3
+decay_rate = -0.8
+vector_reshape = true
+
+[model]
+sizes = [128, 256]
+"#;
+        let doc = TomlDoc::parse(text).unwrap();
+        assert_eq!(doc.str_or("name", ""), "fig2");
+        assert_eq!(doc.i64_or("steps", 0), 400);
+        assert_eq!(doc.str_or("optimizer.kind", ""), "smmf");
+        assert_eq!(doc.f64_or("optimizer.lr", 0.0), 1e-3);
+        assert_eq!(doc.f64_or("optimizer.decay_rate", 0.0), -0.8);
+        assert!(doc.bool_or("optimizer.vector_reshape", false));
+        assert_eq!(
+            doc.get("model.sizes").unwrap(),
+            &TomlValue::Arr(vec![TomlValue::Int(128), TomlValue::Int(256)])
+        );
+    }
+
+    #[test]
+    fn comments_and_strings_with_hash() {
+        let doc = TomlDoc::parse("a = \"x # y\" # trailing\nb = 2").unwrap();
+        assert_eq!(doc.str_or("a", ""), "x # y");
+        assert_eq!(doc.i64_or("b", 0), 2);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(TomlDoc::parse("[unterminated").is_err());
+        assert!(TomlDoc::parse("keyonly").is_err());
+        assert!(TomlDoc::parse("k = @oops").is_err());
+    }
+
+    #[test]
+    fn underscored_numbers() {
+        let doc = TomlDoc::parse("n = 1_000_000\nf = 2_5.5").unwrap();
+        assert_eq!(doc.i64_or("n", 0), 1_000_000);
+        assert_eq!(doc.f64_or("f", 0.0), 25.5);
+    }
+}
