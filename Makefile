@@ -1,0 +1,25 @@
+# Convenience targets for the SMMF reproduction.
+#
+#   make build     release build of the Rust crate
+#   make test      full test suite
+#   make smoke     build + test + quick bench (refreshes BENCH_*.json);
+#                  run this before merging optimizer/engine changes
+#   make bench     full optimizer-step bench (slow)
+#   make artifacts AOT-lower the JAX/Pallas graphs (needs python + jax)
+
+.PHONY: build test smoke bench artifacts
+
+build:
+	cd rust && cargo build --release
+
+test:
+	cd rust && cargo test -q
+
+smoke:
+	bash rust/tests/smoke.sh
+
+bench:
+	cd rust && SMMF_BENCH_JSON=../BENCH_optimizer_step.json cargo bench --bench optimizer_step
+
+artifacts:
+	python3 python/compile/aot.py

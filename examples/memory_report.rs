@@ -4,6 +4,12 @@
 //! ```bash
 //! cargo run --release --example memory_report
 //! ```
+//!
+//! Memory accounting is thread-invariant: the parallel step engine
+//! (`optim::parallel`, `OptimConfig::threads`) adds only transient
+//! per-worker scratch, never persistent optimizer state, so every table
+//! below is identical at any `threads` setting (asserted by
+//! `rust/tests/parallel_step.rs`).
 
 use anyhow::Result;
 

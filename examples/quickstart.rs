@@ -6,6 +6,11 @@
 //! ```bash
 //! make artifacts && cargo run --release --example quickstart
 //! ```
+//!
+//! The Rust optimizers accept a `threads` knob (`OptimConfig::threads`,
+//! CLI `--threads`, TOML `[optimizer] threads = N`) that dispatches
+//! `step()` over the parallel work-sharding engine in `optim::parallel`;
+//! `threads = 1` (the default here) is the serial reference path.
 
 use anyhow::Result;
 

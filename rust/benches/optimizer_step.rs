@@ -3,18 +3,26 @@
 //! the paper measures full training steps on GPU, so absolute numbers
 //! differ but the Adam-relative ratios are the claim under test).
 //!
-//! Also includes the SMMF ablation the perf pass optimizes against:
-//! fused single-pass vs naive (materializing) implementation.
+//! Sections:
+//! 1. Table 5 proxy — every optimizer, serial (`threads = 1`) baseline.
+//! 2. Parallel step engine thread sweep — SMMF and Adam at 1/2/4/8
+//!    worker threads, reporting speedup vs the serial baseline.
+//! 3. SMMF ablation — fused single-pass vs naive (Algorithm-literal).
 //!
 //! ```bash
 //! cargo bench --bench optimizer_step            # full
 //! SMMF_BENCH_QUICK=1 cargo bench --bench optimizer_step
+//! SMMF_BENCH_JSON=BENCH_optimizer_step.json cargo bench --bench optimizer_step
 //! ```
+//!
+//! With `SMMF_BENCH_JSON=<path>` a machine-readable report (per-model,
+//! per-optimizer, per-thread-count median/p10/p90 ns) is written so the
+//! perf trajectory is tracked across PRs.
 
 use smmf_repro::models::inventory_by_name;
-use smmf_repro::optim::{self, Optimizer, OptKind, OptimConfig, Smmf};
+use smmf_repro::optim::{self, OptKind, OptimConfig, Optimizer, Smmf};
 use smmf_repro::tensor::Tensor;
-use smmf_repro::util::bench::Bencher;
+use smmf_repro::util::bench::{Bencher, JsonSink};
 use smmf_repro::util::fmt;
 use smmf_repro::util::rng::Pcg32;
 
@@ -33,6 +41,7 @@ fn rand_tensors(shapes: &[Vec<usize>], seed: u64, scale: f32) -> Vec<Tensor> {
 fn main() {
     let quick = std::env::var("SMMF_BENCH_QUICK").is_ok();
     let bencher = if quick { Bencher::quick() } else { Bencher::default() };
+    let mut sink = JsonSink::from_env("optimizer_step", "SMMF_BENCH_JSON");
 
     let models: &[&str] = if quick {
         &["mobilenet_v2_imagenet"]
@@ -40,7 +49,7 @@ fn main() {
         &["mobilenet_v2_imagenet", "resnet50_imagenet", "transformer_base", "transformer_big"]
     };
 
-    println!("== Table 5 proxy: optimizer step over full model inventories ==");
+    println!("== Table 5 proxy: optimizer step over full model inventories (threads = 1) ==");
     for name in models {
         let inv = inventory_by_name(name).unwrap();
         let shapes = inv.shapes();
@@ -56,11 +65,48 @@ fn main() {
             if kind == OptKind::Adam {
                 adam_ms = stats.median.as_secs_f64() * 1e3;
             }
+            if let Some(s) = sink.as_mut() {
+                s.record(name, kind.name(), 1, &stats);
+            }
             println!(
                 "{}   ({:.2}x adam)",
                 stats.summary(),
                 stats.median.as_secs_f64() * 1e3 / adam_ms
             );
+        }
+        println!();
+    }
+
+    // Thread sweep: the parallel step engine on the two headline
+    // optimizers. Quick mode covers the acceptance model
+    // (mobilenet_v2_imagenet); full mode adds transformer_big.
+    let sweep_models: &[&str] =
+        if quick { &["mobilenet_v2_imagenet"] } else { &["mobilenet_v2_imagenet", "transformer_big"] };
+    println!("== Parallel step engine: thread sweep (speedup vs threads = 1) ==");
+    for name in sweep_models {
+        let inv = inventory_by_name(name).unwrap();
+        let shapes = inv.shapes();
+        let mut params = rand_tensors(&shapes, 1, 0.05);
+        let grads = rand_tensors(&shapes, 2, 0.01);
+        for kind in [OptKind::Smmf, OptKind::Adam] {
+            let mut serial_ms = f64::NAN;
+            for threads in [1usize, 2, 4, 8] {
+                let mut cfg = OptimConfig::paper_defaults(kind);
+                cfg.threads = threads;
+                let mut opt = optim::build(kind, &shapes, &cfg);
+                let label = format!("{name}/{}/t{threads}", kind.name());
+                let stats = bencher.bench(&label, || opt.step(&mut params, &grads));
+                let ms = stats.median.as_secs_f64() * 1e3;
+                if threads == 1 {
+                    serial_ms = ms;
+                } else if let Some(s) = sink.as_mut() {
+                    // threads = 1 for this (model, optimizer) is already
+                    // recorded by the Table 5 section — don't duplicate
+                    // the (model, optimizer, threads) key in the report.
+                    s.record(name, kind.name(), threads, &stats);
+                }
+                println!("{}   ({:.2}x vs serial)", stats.summary(), serial_ms / ms);
+            }
         }
         println!();
     }
@@ -76,10 +122,16 @@ fn main() {
             fused.step(&mut params, &grads)
         });
         println!("{}", s1.summary());
+        if let Some(s) = sink.as_mut() {
+            s.record(&format!("{n}x{m}"), "smmf_fused", 1, &s1);
+        }
         let mut naive = Smmf::new(&shapes, &cfg);
         let s2 = bencher.bench(&format!("smmf_naive/{n}x{m}"), || {
             naive.step_naive(&mut params, &grads)
         });
+        if let Some(s) = sink.as_mut() {
+            s.record(&format!("{n}x{m}"), "smmf_naive", 1, &s2);
+        }
         println!(
             "{}   (fused is {:.2}x faster, scratch {} vs {})",
             s2.summary(),
@@ -87,5 +139,12 @@ fn main() {
             fmt::bytes(fused.scratch_bytes()),
             fmt::bytes(naive.scratch_bytes()),
         );
+    }
+
+    if let Some(s) = sink {
+        match s.write() {
+            Ok(()) => println!("\nwrote {} bench records to {}", s.len(), s.path().display()),
+            Err(e) => eprintln!("\nfailed to write {}: {e}", s.path().display()),
+        }
     }
 }

@@ -69,6 +69,8 @@ impl ExperimentConfig {
         o.decay_rate = doc.f64_or("optimizer.decay_rate", o.decay_rate as f64) as f32;
         o.growth_rate = doc.f64_or("optimizer.growth_rate", o.growth_rate as f64) as f32;
         o.vector_reshape = doc.bool_or("optimizer.vector_reshape", o.vector_reshape);
+        // Parallel step engine worker threads (>= 1; 1 = serial).
+        o.threads = (doc.i64_or("optimizer.threads", o.threads as i64).max(1)) as usize;
         if let Some(mode) = doc.get("optimizer.weight_decay_mode").and_then(|v| v.as_str()) {
             o.weight_decay_mode = match mode {
                 "adam" => WeightDecayMode::Adam,
@@ -111,8 +113,9 @@ impl ExperimentConfig {
         self.steps = args.u64_or("steps", self.steps);
         self.seed = args.u64_or("seed", self.seed);
         self.log_every = args.u64_or("log-every", self.log_every);
-        self.workers = args.usize_or("workers", self.workers);
+        self.workers = args.positive_usize_or("workers", self.workers);
         self.out_dir = args.str_or("out-dir", &self.out_dir);
+        self.optim.threads = args.positive_usize_or("threads", self.optim.threads);
         self.optim.lr = args.f64_or("lr", self.optim.lr as f64) as f32;
         self.optim.weight_decay = args.f64_or("weight-decay", self.optim.weight_decay as f64) as f32;
         self.optim.decay_rate = args.f64_or("decay-rate", self.optim.decay_rate as f64) as f32;
@@ -121,11 +124,14 @@ impl ExperimentConfig {
 
     fn set_optimizer(&mut self, kind: &str) -> Result<()> {
         let k = OptKind::parse(kind).ok_or_else(|| anyhow!("unknown optimizer {kind}"))?;
-        // Re-derive paper defaults for the new kind, preserving lr.
+        // Re-derive paper defaults for the new kind, preserving the
+        // recipe-independent knobs (lr, engine threads).
         let lr = self.optim.lr;
+        let threads = self.optim.threads;
         self.optimizer = k;
         self.optim = OptimConfig::paper_defaults(k);
         self.optim.lr = lr;
+        self.optim.threads = threads;
         Ok(())
     }
 }
@@ -156,6 +162,26 @@ mod tests {
         assert_eq!(cfg.optimizer, OptKind::Smmf);
         assert_eq!(cfg.steps, 10);
         assert!((cfg.optim.lr - 0.01).abs() < 1e-9);
+    }
+
+    #[test]
+    fn threads_plumb_through_toml_and_cli() {
+        let doc = TomlDoc::parse("[optimizer]\nkind = \"smmf\"\nthreads = 4").unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.optim.threads, 4);
+        // Switching the optimizer on the CLI must not reset threads...
+        let args = Args::parse(["--optimizer", "adam"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.optimizer, OptKind::Adam);
+        assert_eq!(cfg.optim.threads, 4);
+        // ...and --threads overrides (clamped to >= 1).
+        let args = Args::parse(["--threads", "8"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.optim.threads, 8);
+        let args = Args::parse(["--threads", "0"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.optim.threads, 1);
     }
 
     #[test]

@@ -211,6 +211,9 @@ pub fn run_comparison(
         cfg.optim.decay_rate = base_o.decay_rate;
         cfg.optim.weight_decay = base_o.weight_decay;
         cfg.optim.weight_decay_mode = base_o.weight_decay_mode;
+        // Engine threads are recipe-independent (same rule as
+        // ExperimentConfig::set_optimizer): keep the base setting.
+        cfg.optim.threads = base_o.threads;
         cfg.name = format!("{group}/{}", kind.name());
         println!("[{} | {}] {} steps on {}", group, kind.name(), cfg.steps, cfg.artifact);
         let s = run_experiment(rt, &cfg)?;
@@ -323,8 +326,9 @@ pub struct TimeRow {
 
 /// Measure one optimizer step (the optimizer only — gradients are
 /// precomputed random tensors) over a full model inventory, mirroring the
-/// paper's Table 5 protocol of per-step optimization time.
-pub fn time_rows(models: &[&str], reps: usize) -> Result<Vec<TimeRow>> {
+/// paper's Table 5 protocol of per-step optimization time. `threads`
+/// selects the parallel step engine's worker count (1 = serial).
+pub fn time_rows(models: &[&str], reps: usize, threads: usize) -> Result<Vec<TimeRow>> {
     let mut rows = Vec::new();
     for name in models {
         let inv = inventory_by_name(name).ok_or_else(|| anyhow!("unknown inventory {name}"))?;
@@ -347,7 +351,8 @@ pub fn time_rows(models: &[&str], reps: usize) -> Result<Vec<TimeRow>> {
             })
             .collect();
         for kind in OptKind::all() {
-            let cfg = OptimConfig::paper_defaults(kind);
+            let mut cfg = OptimConfig::paper_defaults(kind);
+            cfg.threads = threads.max(1);
             let mut opt = optim::build(kind, &shapes, &cfg);
             // warmup
             opt.step(&mut params, &grads);

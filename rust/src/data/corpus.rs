@@ -1,16 +1,17 @@
 //! Text substrates for the language-modeling experiments.
 //!
-//! * [`TINY_CORPUS`] — a real (public-domain) English text embedded in the
-//!   binary: the end-to-end driver trains a char-LM on it and the loss
-//!   curve is meaningful (it is real natural language, not noise).
+//! * [`TINY_CORPUS`] — a real English text embedded in the binary: the
+//!   end-to-end driver trains a char-LM on it and the loss curve is
+//!   meaningful (it is real natural language, not noise).
 //! * [`ByteTokenizer`] — printable-ASCII tokenizer matching the AOT
 //!   models' `vocab = 96`.
 //! * [`ZipfCorpus`] — synthetic Zipf(1.1) token stream for scale tests.
 
 use crate::util::rng::{zipf_harmonic, Pcg32};
 
-/// Public-domain text (US founding documents + Lincoln + assorted prose),
-/// ~22 KB. Enough for a few hundred distinct 128-token windows.
+/// Original expository English prose (an essay on the history of
+/// calculation), ~18 KB. Enough for a few hundred distinct 128-token
+/// windows.
 pub const TINY_CORPUS: &str = include_str!("tiny_corpus.txt");
 
 /// Maps bytes to [0, 96): printable ASCII 32..=126 -> 1..=95, everything

@@ -86,7 +86,8 @@ commands:
   fused             compiled whole-train-step (Pallas SMMF) demo
   ablate            SMMF design ablations (scheme / sign width /
                     matricization / vector_reshape) on the LM workload
-common flags: --artifacts DIR (default ./artifacts), --seed N";
+common flags: --artifacts DIR (default ./artifacts), --seed N,
+              --threads N (parallel optimizer step engine; 1 = serial)";
 
 fn cmd_list(args: &Args) -> Result<()> {
     println!("model inventories (memory accounting):");
@@ -139,7 +140,8 @@ fn cmd_table5(args: &Args) -> Result<()> {
         vec!["mobilenet_v2_imagenet", "resnet50_imagenet", "transformer_base", "transformer_big"]
     };
     let reps = args.usize_or("reps", if quick { 3 } else { 5 });
-    let rows = exp::time_rows(&models, reps)?;
+    let threads = args.positive_usize_or("threads", 1);
+    let rows = exp::time_rows(&models, reps, threads)?;
     println!("{}", exp::render_time_table(&rows));
     Ok(())
 }
@@ -275,7 +277,7 @@ fn cmd_dp(args: &Args) -> Result<()> {
     if args.opt("steps").is_none() {
         cfg.steps = 30;
     }
-    let workers = args.usize_or("workers", 2);
+    let workers = args.positive_usize_or("workers", 2);
     println!("[dp] {} workers, {} steps on {}", workers, cfg.steps, cfg.artifact);
     let losses = workers::train_data_parallel(&artifacts_dir(args), &cfg, workers)?;
     println!(

@@ -9,7 +9,13 @@
 //!
 //! With β1 > 0 a dense 1st moment (N floats) is kept, matching the paper's
 //! configs (β1 = 0.9 everywhere).
+//!
+//! The update clips by RMS over the *whole* tensor, so the parallel path
+//! (`OptimConfig::threads > 1`) shards at tensor granularity: each tensor
+//! is updated by exactly one worker running the serial kernel with that
+//! worker's private scratch — bit-identical to the serial walk.
 
+use super::parallel::{self, ParamPartition, TensorGeom};
 use super::schedule::beta2_t;
 use super::{OptimConfig, Optimizer, WeightDecayMode};
 use crate::tensor::Tensor;
@@ -24,14 +30,22 @@ struct PState {
     m: Option<Vec<f32>>,
 }
 
+/// Per-worker scratch: the update buffer and the per-row rsqrt(col-factor)
+/// buffer (perf: hoisted out of the inner update loop).
+#[derive(Default)]
+struct Scratch {
+    u: Vec<f32>,
+    cfac: Vec<f32>,
+}
+
 pub struct Adafactor {
     cfg: OptimConfig,
     states: Vec<PState>,
     t: u64,
-    scratch: Vec<f32>,
-    /// Reusable per-row rsqrt(col-factor) buffer (perf: hoisted out of
-    /// the inner update loop).
-    cfac: Vec<f32>,
+    plan: ParamPartition,
+    /// One scratch per worker shard (index 0 doubles as the serial
+    /// path's scratch).
+    scratch: Vec<Scratch>,
 }
 
 fn rms(x: &[f32]) -> f32 {
@@ -65,9 +79,119 @@ impl Adafactor {
                 PState { v, m }
             })
             .collect();
-        Adafactor { cfg: cfg.clone(), states, t: 0, scratch: Vec::new(), cfac: Vec::new() }
+        let geoms: Vec<TensorGeom> =
+            shapes.iter().map(|s| TensorGeom::whole(s.iter().product(), 6)).collect();
+        let plan = ParamPartition::plan(&geoms, cfg.threads);
+        let scratch = (0..plan.n_shards()).map(|_| Scratch::default()).collect();
+        Adafactor { cfg: cfg.clone(), states, t: 0, plan, scratch }
     }
 
+    /// The whole-tensor kernel (`Send` + stateless over the per-tensor
+    /// state and a worker-private scratch).
+    fn update_tensor(
+        cfg: &OptimConfig,
+        t: u64,
+        beta2: f32,
+        p: &mut [f32],
+        g: &[f32],
+        st: &mut PState,
+        scr: &mut Scratch,
+    ) {
+        let alpha = if cfg.relative_step {
+            let rel = (1.0f32 / (t as f32).sqrt()).min(1e-2);
+            rel * rms(p).max(cfg.eps2)
+        } else {
+            cfg.lr
+        };
+        // update = g / sqrt(v̂); factored v̂ via the HF approximation.
+        scr.u.clear();
+        scr.u.extend_from_slice(g);
+        let u = &mut scr.u;
+        let cfac = &mut scr.cfac;
+        match &mut st.v {
+            VState::Factored { row, col, last, second, lead } => {
+                let (last, second, lead) = (*last, *second, *lead);
+                // v_row[l, s] <- b2 v_row + (1-b2) mean_j (g²+eps1)
+                // v_col[l, j] <- b2 v_col + (1-b2) mean_s (g²+eps1)
+                // Perf: the column reduction walks rows sequentially
+                // (cache-friendly) instead of striding by `last`.
+                cfac.resize(last, 0.0);
+                for l in 0..lead {
+                    let block = &g[l * second * last..(l + 1) * second * last];
+                    cfac.iter_mut().for_each(|x| *x = 0.0);
+                    for s in 0..second {
+                        let r = &block[s * last..(s + 1) * last];
+                        let mut sum = 0.0f32;
+                        for (acc, &x) in cfac.iter_mut().zip(r) {
+                            let sq = x * x + cfg.eps1;
+                            sum += sq;
+                            *acc += sq;
+                        }
+                        let idx = l * second + s;
+                        row[idx] = beta2 * row[idx] + (1.0 - beta2) * sum / last as f32;
+                    }
+                    let scale = (1.0 - beta2) / second as f32;
+                    for (c, &acc) in col[l * last..(l + 1) * last].iter_mut().zip(cfac.iter()) {
+                        *c = beta2 * *c + scale * acc;
+                    }
+                }
+                // approx rsqrt(v̂): u = g * r_factor * c_factor.
+                // Perf: hoist the per-column factor out of the s-loop
+                // (it was recomputed `second` times) and use
+                // sqrt().recip() instead of powf(-0.5).
+                cfac.resize(last, 0.0);
+                for l in 0..lead {
+                    for (cf, &c) in cfac.iter_mut().zip(&col[l * last..(l + 1) * last]) {
+                        *cf = c.max(1e-30).sqrt().recip();
+                    }
+                    let rslice = &row[l * second..(l + 1) * second];
+                    let rmean = rslice.iter().sum::<f32>() / second as f32;
+                    for s in 0..second {
+                        let rfac = (rmean.max(1e-30) / rslice[s].max(1e-30)).sqrt();
+                        let urow = &mut u[(l * second + s) * last..(l * second + s + 1) * last];
+                        for (uij, &cf) in urow.iter_mut().zip(cfac.iter()) {
+                            *uij *= rfac * cf;
+                        }
+                    }
+                }
+            }
+            VState::Dense(v) => {
+                for (vij, &gij) in v.iter_mut().zip(g) {
+                    *vij = beta2 * *vij + (1.0 - beta2) * (gij * gij + cfg.eps1);
+                }
+                for (uij, vij) in u.iter_mut().zip(v.iter()) {
+                    *uij /= vij.sqrt().max(1e-30);
+                }
+            }
+        }
+        // Clip by RMS(update)/d.
+        let denom = (rms(u) / cfg.clip_threshold).max(1.0);
+        u.iter_mut().for_each(|x| *x /= denom);
+        // 1st moment.
+        if let Some(m) = &mut st.m {
+            for (mij, &uij) in m.iter_mut().zip(u.iter()) {
+                *mij = cfg.beta1 * *mij + (1.0 - cfg.beta1) * uij;
+            }
+            u.copy_from_slice(m);
+        }
+        // Weight decay + apply.
+        if cfg.weight_decay != 0.0 {
+            match cfg.weight_decay_mode {
+                WeightDecayMode::AdamW => {
+                    let f = 1.0 - alpha * cfg.weight_decay;
+                    p.iter_mut().for_each(|w| *w *= f);
+                }
+                WeightDecayMode::Adam => {
+                    for (uij, &w) in u.iter_mut().zip(p.iter()) {
+                        *uij += cfg.weight_decay * w;
+                    }
+                }
+            }
+        }
+        for (w, &uij) in p.iter_mut().zip(u.iter()) {
+            *w -= alpha * uij;
+        }
+    }
 }
 
 impl Optimizer for Adafactor {
@@ -78,107 +202,20 @@ impl Optimizer for Adafactor {
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
         self.t += 1;
         let beta2 = beta2_t(self.cfg.decay_rate, self.t);
-        let cfg = self.cfg.clone();
-        for ((param, grad), st) in params.iter_mut().zip(grads).zip(self.states.iter_mut()) {
-            let p = param.data_mut();
-            let g = grad.data();
-            let lr = self.cfg.lr; // captured before mutable borrows below
-            let alpha = if cfg.relative_step {
-                let rel = (1.0f32 / (self.t as f32).sqrt()).min(1e-2);
-                rel * rms(p).max(cfg.eps2)
-            } else {
-                lr
-            };
-            // update = g / sqrt(v̂); factored v̂ via the HF approximation.
-            self.scratch.clear();
-            self.scratch.extend_from_slice(g);
-            let u = &mut self.scratch;
-            match &mut st.v {
-                VState::Factored { row, col, last, second, lead } => {
-                    let (last, second, lead) = (*last, *second, *lead);
-                    // v_row[l, s] <- b2 v_row + (1-b2) mean_j (g²+eps1)
-                    // v_col[l, j] <- b2 v_col + (1-b2) mean_s (g²+eps1)
-                    // Perf: the column reduction walks rows sequentially
-                    // (cache-friendly) instead of striding by `last`.
-                    self.cfac.resize(last, 0.0);
-                    for l in 0..lead {
-                        let block = &g[l * second * last..(l + 1) * second * last];
-                        self.cfac.iter_mut().for_each(|x| *x = 0.0);
-                        for s in 0..second {
-                            let r = &block[s * last..(s + 1) * last];
-                            let mut sum = 0.0f32;
-                            for (acc, &x) in self.cfac.iter_mut().zip(r) {
-                                let sq = x * x + cfg.eps1;
-                                sum += sq;
-                                *acc += sq;
-                            }
-                            let idx = l * second + s;
-                            row[idx] = beta2 * row[idx] + (1.0 - beta2) * sum / last as f32;
-                        }
-                        let scale = (1.0 - beta2) / second as f32;
-                        for (c, &acc) in
-                            col[l * last..(l + 1) * last].iter_mut().zip(self.cfac.iter())
-                        {
-                            *c = beta2 * *c + scale * acc;
-                        }
-                    }
-                    // approx rsqrt(v̂): u = g * r_factor * c_factor.
-                    // Perf: hoist the per-column factor out of the s-loop
-                    // (it was recomputed `second` times) and use
-                    // sqrt().recip() instead of powf(-0.5).
-                    self.cfac.resize(last, 0.0);
-                    for l in 0..lead {
-                        for (cf, &c) in self.cfac.iter_mut().zip(&col[l * last..(l + 1) * last]) {
-                            *cf = c.max(1e-30).sqrt().recip();
-                        }
-                        let rslice = &row[l * second..(l + 1) * second];
-                        let rmean = rslice.iter().sum::<f32>() / second as f32;
-                        for s in 0..second {
-                            let rfac = (rmean.max(1e-30) / rslice[s].max(1e-30)).sqrt();
-                            let urow = &mut u[(l * second + s) * last..(l * second + s + 1) * last];
-                            for (uij, &cf) in urow.iter_mut().zip(self.cfac.iter()) {
-                                *uij *= rfac * cf;
-                            }
-                        }
-                    }
-                }
-                VState::Dense(v) => {
-                    for (vij, &gij) in v.iter_mut().zip(g) {
-                        *vij = beta2 * *vij + (1.0 - beta2) * (gij * gij + cfg.eps1);
-                    }
-                    for (uij, vij) in u.iter_mut().zip(v.iter()) {
-                        *uij /= vij.sqrt().max(1e-30);
-                    }
-                }
+        let t = self.t;
+        if self.cfg.threads <= 1 {
+            let cfg = self.cfg.clone();
+            let scr = &mut self.scratch[0];
+            for ((param, grad), st) in params.iter_mut().zip(grads).zip(self.states.iter_mut()) {
+                Self::update_tensor(&cfg, t, beta2, param.data_mut(), grad.data(), st, scr);
             }
-            // Clip by RMS(update)/d.
-            let denom = (rms(u) / cfg.clip_threshold).max(1.0);
-            u.iter_mut().for_each(|x| *x /= denom);
-            // 1st moment.
-            if let Some(m) = &mut st.m {
-                for (mij, &uij) in m.iter_mut().zip(u.iter()) {
-                    *mij = cfg.beta1 * *mij + (1.0 - cfg.beta1) * uij;
-                }
-                u.copy_from_slice(m);
-            }
-            // Weight decay + apply.
-            if cfg.weight_decay != 0.0 {
-                match cfg.weight_decay_mode {
-                    WeightDecayMode::AdamW => {
-                        let f = 1.0 - alpha * cfg.weight_decay;
-                        p.iter_mut().for_each(|w| *w *= f);
-                    }
-                    WeightDecayMode::Adam => {
-                        for (uij, &w) in u.iter_mut().zip(p.iter()) {
-                            *uij += cfg.weight_decay * w;
-                        }
-                    }
-                }
-            }
-            for (w, &uij) in p.iter_mut().zip(u.iter()) {
-                *w -= alpha * uij;
-            }
+            return;
         }
+        let cfg = self.cfg.clone();
+        let ctxs: Vec<&mut Scratch> = self.scratch.iter_mut().collect();
+        parallel::run_per_tensor(&self.plan, params, grads, &mut self.states, ctxs, |scr, p, g, st| {
+            Self::update_tensor(&cfg, t, beta2, p, g, st, scr);
+        });
     }
 
     fn set_lr(&mut self, lr: f32) {
@@ -200,7 +237,11 @@ impl Optimizer for Adafactor {
     }
 
     fn scratch_bytes(&self) -> u64 {
-        (self.scratch.len() * 4) as u64
+        self.scratch.iter().map(|s| ((s.u.len() + s.cfac.len()) * 4) as u64).sum()
+    }
+
+    fn partition(&self) -> Option<&ParamPartition> {
+        Some(&self.plan)
     }
 }
 
@@ -260,5 +301,52 @@ mod tests {
         opt2.step(&mut p2, &g2);
         let delta2 = 1.0 - p2[0].data()[0];
         assert!((delta / delta2 - 100.0).abs() < 5.0, "ratio={}", delta / delta2);
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        // Tensor-granular sharding: every tensor is updated by exactly
+        // one worker running the serial kernel.
+        use crate::util::rng::Pcg32;
+        let shapes = vec![vec![48, 32], vec![96], vec![4, 8, 1, 1], vec![1]];
+        let mut rng = Pcg32::new(23);
+        let init: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| {
+                let mut t = Tensor::zeros(s);
+                rng.fill_normal(t.data_mut(), 0.5);
+                t
+            })
+            .collect();
+        let grads: Vec<Vec<Tensor>> = (0..3)
+            .map(|_| {
+                shapes
+                    .iter()
+                    .map(|s| {
+                        let mut t = Tensor::zeros(s);
+                        rng.fill_normal(t.data_mut(), 0.1);
+                        t
+                    })
+                    .collect()
+            })
+            .collect();
+        let run = |threads: usize| -> Vec<Tensor> {
+            let cfg = OptimConfig {
+                lr: 0.05,
+                relative_step: false,
+                weight_decay: 0.01,
+                threads,
+                ..OptimConfig::paper_defaults(OptKind::Adafactor)
+            };
+            let mut opt = Adafactor::new(&shapes, &cfg);
+            let mut p = init.clone();
+            for g in &grads {
+                opt.step(&mut p, g);
+            }
+            p
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(3));
+        assert_eq!(serial, run(8));
     }
 }

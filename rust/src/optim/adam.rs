@@ -3,7 +3,13 @@
 //! Dense 1st + 2nd moments: `2N` floats of state — the memory baseline all
 //! the paper's tables compare against. Bias correction is optional (the
 //! paper disables it for Transformer pre-training, Table 3).
+//!
+//! With `OptimConfig::threads > 1` the update dispatches over the
+//! [`super::parallel`] engine: the update is purely elementwise, so flat
+//! element-range splitting is bit-identical to the serial walk at any
+//! thread count.
 
+use super::parallel::{self, ParamPartition, TensorGeom};
 use super::{OptimConfig, Optimizer, WeightDecayMode};
 use crate::tensor::Tensor;
 
@@ -13,13 +19,47 @@ pub struct Adam {
     m: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
     t: u64,
+    plan: ParamPartition,
 }
 
 impl Adam {
     pub fn new(shapes: &[Vec<usize>], cfg: &OptimConfig, decoupled: bool) -> Adam {
         let m = shapes.iter().map(|s| vec![0.0; s.iter().product()]).collect();
         let v = shapes.iter().map(|s| vec![0.0; s.iter().product()]).collect();
-        Adam { cfg: cfg.clone(), decoupled, m, v, t: 0 }
+        let geoms: Vec<TensorGeom> = shapes
+            .iter()
+            .map(|s| TensorGeom::elementwise(s.iter().product(), 2))
+            .collect();
+        let plan = ParamPartition::plan(&geoms, cfg.threads);
+        Adam { cfg: cfg.clone(), decoupled, m, v, t: 0, plan }
+    }
+
+    /// The per-chunk elementwise kernel (`Send` + stateless): identical
+    /// arithmetic whether the chunk is a whole tensor (serial path) or a
+    /// planned sub-range (parallel path).
+    #[allow(clippy::too_many_arguments)]
+    fn update_chunk(
+        cfg: &OptimConfig,
+        decoupled: bool,
+        lr_t: f32,
+        p: &mut [f32],
+        g: &[f32],
+        m: &mut [f32],
+        v: &mut [f32],
+    ) {
+        let (b1, b2) = (cfg.beta1, cfg.beta2);
+        let wd = cfg.weight_decay;
+        if wd != 0.0 && decoupled {
+            let f = 1.0 - cfg.lr * wd;
+            p.iter_mut().for_each(|w| *w *= f);
+        }
+        let couple = wd != 0.0 && !decoupled && cfg.weight_decay_mode == WeightDecayMode::Adam;
+        for (((w, &g0), mij), vij) in p.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut()) {
+            let gij = if couple { g0 + wd * *w } else { g0 };
+            *mij = b1 * *mij + (1.0 - b1) * gij;
+            *vij = b2 * *vij + (1.0 - b2) * gij * gij;
+            *w -= lr_t * *mij / (vij.sqrt() + cfg.eps1);
+        }
     }
 }
 
@@ -34,34 +74,53 @@ impl Optimizer for Adam {
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
         self.t += 1;
-        let c = &self.cfg;
-        let (b1, b2) = (c.beta1, c.beta2);
         // Bias-correction folded into a step-size scale.
-        let lr_t = if c.bias_correction {
-            let bc1 = 1.0 - b1.powi(self.t as i32);
-            let bc2 = 1.0 - b2.powi(self.t as i32);
-            c.lr * bc2.sqrt() / bc1
+        let lr_t = if self.cfg.bias_correction {
+            let bc1 = 1.0 - self.cfg.beta1.powi(self.t as i32);
+            let bc2 = 1.0 - self.cfg.beta2.powi(self.t as i32);
+            self.cfg.lr * bc2.sqrt() / bc1
         } else {
-            c.lr
+            self.cfg.lr
         };
-        for ((param, grad), (m, v)) in
-            params.iter_mut().zip(grads).zip(self.m.iter_mut().zip(self.v.iter_mut()))
-        {
-            let p = param.data_mut();
-            let g = grad.data();
-            let wd = c.weight_decay;
-            if wd != 0.0 && self.decoupled {
-                let f = 1.0 - c.lr * wd;
-                p.iter_mut().for_each(|w| *w *= f);
+        let decoupled = self.decoupled;
+        if self.cfg.threads <= 1 {
+            let cfg = &self.cfg;
+            for ((param, grad), (m, v)) in
+                params.iter_mut().zip(grads).zip(self.m.iter_mut().zip(self.v.iter_mut()))
+            {
+                Self::update_chunk(cfg, decoupled, lr_t, param.data_mut(), grad.data(), m, v);
             }
-            let couple = wd != 0.0 && !self.decoupled && c.weight_decay_mode == WeightDecayMode::Adam;
-            for (((w, &g0), mij), vij) in p.iter_mut().zip(g).zip(m.iter_mut()).zip(v.iter_mut()) {
-                let gij = if couple { g0 + wd * *w } else { g0 };
-                *mij = b1 * *mij + (1.0 - b1) * gij;
-                *vij = b2 * *vij + (1.0 - b2) * gij * gij;
-                *w -= lr_t * *mij / (vij.sqrt() + c.eps1);
+            return;
+        }
+
+        struct Task<'a> {
+            p: &'a mut [f32],
+            g: &'a [f32],
+            m: &'a mut [f32],
+            v: &'a mut [f32],
+        }
+        let cfg = self.cfg.clone();
+        let plan = &self.plan;
+        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(plan.n_items());
+        for (idx, ((param, grad), (m, v))) in params
+            .iter_mut()
+            .zip(grads)
+            .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+            .enumerate()
+        {
+            let items = plan.items_of(idx);
+            let p_parts = parallel::split_rows_mut(param.data_mut(), items, 1);
+            let m_parts = parallel::split_rows_mut(m, items, 1);
+            let v_parts = parallel::split_rows_mut(v, items, 1);
+            let g = grad.data();
+            for (((it, p), mm), vv) in items.iter().zip(p_parts).zip(m_parts).zip(v_parts) {
+                tasks.push(Task { p, g: &g[it.row0..it.row1], m: mm, v: vv });
             }
         }
+        let mut shards = parallel::into_shards(plan, vec![(); plan.n_shards()], tasks);
+        parallel::run_shards(&mut shards, |_, t| {
+            Self::update_chunk(&cfg, decoupled, lr_t, t.p, t.g, t.m, t.v);
+        });
     }
 
     fn set_lr(&mut self, lr: f32) {
@@ -70,6 +129,10 @@ impl Optimizer for Adam {
 
     fn state_bytes(&self) -> u64 {
         self.m.iter().chain(&self.v).map(|x| (x.len() * 4) as u64).sum()
+    }
+
+    fn partition(&self) -> Option<&ParamPartition> {
+        Some(&self.plan)
     }
 }
 
@@ -118,5 +181,47 @@ mod tests {
         let g = vec![Tensor::from_vec(&[1], vec![1.0])];
         opt.step(&mut p, &g);
         assert!((p[0].data()[0] + 0.1).abs() < 1e-3, "{}", p[0].data()[0]);
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        // Elementwise update: any split is exact. Trajectories over a mix
+        // of tensor sizes must match bit-for-bit at every thread count.
+        use crate::util::rng::Pcg32;
+        let shapes = vec![vec![513, 37], vec![1], vec![4096], vec![64, 64]];
+        let mut rng = Pcg32::new(5);
+        let init: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| {
+                let mut t = Tensor::zeros(s);
+                rng.fill_normal(t.data_mut(), 0.5);
+                t
+            })
+            .collect();
+        let grads: Vec<Vec<Tensor>> = (0..4)
+            .map(|_| {
+                shapes
+                    .iter()
+                    .map(|s| {
+                        let mut t = Tensor::zeros(s);
+                        rng.fill_normal(t.data_mut(), 0.1);
+                        t
+                    })
+                    .collect()
+            })
+            .collect();
+        let cfg = OptimConfig { lr: 0.01, weight_decay: 0.01, ..Default::default() };
+        let run = |threads: usize| -> Vec<Tensor> {
+            let mut opt = Adam::new(&shapes, &OptimConfig { threads, ..cfg.clone() }, true);
+            let mut p = init.clone();
+            for g in &grads {
+                opt.step(&mut p, g);
+            }
+            p
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(2));
+        assert_eq!(serial, run(4));
+        assert_eq!(serial, run(8));
     }
 }

@@ -7,7 +7,13 @@
 //! tensor: `N` (momentum) + rows+cols (V) + rows+cols (U) — for 1×1 convs
 //! that is ≈ 5N floats, reproducing CAME's surprisingly *large* CNN
 //! memory in the paper's Table 1.
+//!
+//! Like Adafactor, the update clips by whole-tensor RMS, so the parallel
+//! path (`OptimConfig::threads > 1`) shards at tensor granularity — each
+//! tensor updated by one worker with private scratch, bit-identical to
+//! the serial walk.
 
+use super::parallel::{self, ParamPartition, TensorGeom};
 use super::schedule::beta2_t;
 use super::{OptimConfig, Optimizer, WeightDecayMode};
 use crate::tensor::Tensor;
@@ -91,17 +97,29 @@ struct PState {
     m: Vec<f32>,
 }
 
+/// Per-worker scratch buffers (perf: no per-step allocs).
+#[derive(Default)]
+struct Scratch {
+    uhat: Vec<f32>,
+    sq: Vec<f32>,
+    cfac: Vec<f32>,
+    inst: Vec<f32>,
+    upd: Vec<f32>,
+}
+
+impl Scratch {
+    fn len(&self) -> usize {
+        self.uhat.len() + self.sq.len() + self.cfac.len() + self.inst.len() + self.upd.len()
+    }
+}
+
 pub struct Came {
     cfg: OptimConfig,
     states: Vec<PState>,
     t: u64,
-    scratch: Vec<f32>,
-    scratch2: Vec<f32>,
-    /// Reusable per-column factor buffer (perf).
-    cfac: Vec<f32>,
-    /// Reusable instability / update buffers (perf: no per-step allocs).
-    inst: Vec<f32>,
-    upd: Vec<f32>,
+    plan: ParamPartition,
+    /// One scratch per worker shard (index 0 doubles as the serial one).
+    scratch: Vec<Scratch>,
 }
 
 fn rms(x: &[f32]) -> f32 {
@@ -128,7 +146,87 @@ impl Came {
                 }
             })
             .collect();
-        Came { cfg: cfg.clone(), states, t: 0, scratch: Vec::new(), scratch2: Vec::new(), cfac: Vec::new(), inst: Vec::new(), upd: Vec::new() }
+        let geoms: Vec<TensorGeom> =
+            shapes.iter().map(|s| TensorGeom::whole(s.iter().product(), 10)).collect();
+        let plan = ParamPartition::plan(&geoms, cfg.threads);
+        let scratch = (0..plan.n_shards()).map(|_| Scratch::default()).collect();
+        Came { cfg: cfg.clone(), states, t: 0, plan, scratch }
+    }
+
+    /// The whole-tensor kernel (`Send` + stateless over per-tensor state
+    /// and a worker-private scratch).
+    fn update_tensor(
+        cfg: &OptimConfig,
+        beta2: f32,
+        p: &mut [f32],
+        g: &[f32],
+        st: &mut PState,
+        scr: &mut Scratch,
+    ) {
+        // û = g / sqrt(V̂ + eps1)
+        scr.uhat.clear();
+        scr.uhat.extend_from_slice(g);
+        let uhat = &mut scr.uhat;
+        scr.sq.clear();
+        scr.sq.extend(g.iter().map(|&x| x * x + cfg.eps1));
+        let sq = &scr.sq;
+        match &mut st.v {
+            Some(f) => f.update_and_rsqrt(sq, beta2, uhat, &mut scr.cfac),
+            None => {
+                for (vij, &s) in st.v_dense.iter_mut().zip(sq) {
+                    *vij = beta2 * *vij + (1.0 - beta2) * s;
+                }
+                for (u, vij) in uhat.iter_mut().zip(&st.v_dense) {
+                    *u /= vij.sqrt().max(1e-30);
+                }
+            }
+        }
+        // clip
+        let denom = (rms(uhat) / cfg.clip_threshold).max(1.0);
+        uhat.iter_mut().for_each(|x| *x /= denom);
+        // m = β1 m + (1-β1) û
+        for (mij, &u) in st.m.iter_mut().zip(uhat.iter()) {
+            *mij = cfg.beta1 * *mij + (1.0 - cfg.beta1) * u;
+        }
+        // instability U = (û − m)², factored with β3; confidence-scaled
+        // update = m / sqrt(Û + eps2)
+        let m = &st.m;
+        scr.inst.clear();
+        scr.inst.extend(
+            uhat.iter().zip(m.iter()).map(|(&u, &mij)| (u - mij) * (u - mij) + cfg.eps2),
+        );
+        let inst = &scr.inst;
+        scr.upd.clear();
+        scr.upd.extend_from_slice(m);
+        let update = &mut scr.upd;
+        match &mut st.u {
+            Some(f) => f.update_and_rsqrt(inst, cfg.beta3, update, &mut scr.cfac),
+            None => {
+                for (uij, &s) in st.u_dense.iter_mut().zip(inst) {
+                    *uij = cfg.beta3 * *uij + (1.0 - cfg.beta3) * s;
+                }
+                for (x, uij) in update.iter_mut().zip(&st.u_dense) {
+                    *x /= uij.sqrt().max(1e-30);
+                }
+            }
+        }
+        // weight decay + apply
+        if cfg.weight_decay != 0.0 {
+            match cfg.weight_decay_mode {
+                WeightDecayMode::AdamW => {
+                    let f = 1.0 - cfg.lr * cfg.weight_decay;
+                    p.iter_mut().for_each(|w| *w *= f);
+                }
+                WeightDecayMode::Adam => {
+                    for (x, &w) in update.iter_mut().zip(p.iter()) {
+                        *x += cfg.weight_decay * w;
+                    }
+                }
+            }
+        }
+        for (w, &x) in p.iter_mut().zip(update.iter()) {
+            *w -= cfg.lr * x;
+        }
     }
 }
 
@@ -139,76 +237,20 @@ impl Optimizer for Came {
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
         self.t += 1;
-        let cfg = self.cfg.clone();
-        let beta2 = beta2_t(cfg.decay_rate, self.t);
-        for ((param, grad), st) in params.iter_mut().zip(grads).zip(self.states.iter_mut()) {
-            let p = param.data_mut();
-            let g = grad.data();
-            // û = g / sqrt(V̂ + eps1)
-            self.scratch.clear();
-            self.scratch.extend_from_slice(g);
-            let uhat = &mut self.scratch;
-            self.scratch2.clear();
-            self.scratch2.extend(g.iter().map(|&x| x * x + cfg.eps1));
-            let sq = &self.scratch2;
-            match &mut st.v {
-                Some(f) => f.update_and_rsqrt(sq, beta2, uhat, &mut self.cfac),
-                None => {
-                    for (vij, &s) in st.v_dense.iter_mut().zip(sq) {
-                        *vij = beta2 * *vij + (1.0 - beta2) * s;
-                    }
-                    for (u, vij) in uhat.iter_mut().zip(&st.v_dense) {
-                        *u /= vij.sqrt().max(1e-30);
-                    }
-                }
+        let beta2 = beta2_t(self.cfg.decay_rate, self.t);
+        if self.cfg.threads <= 1 {
+            let cfg = self.cfg.clone();
+            let scr = &mut self.scratch[0];
+            for ((param, grad), st) in params.iter_mut().zip(grads).zip(self.states.iter_mut()) {
+                Self::update_tensor(&cfg, beta2, param.data_mut(), grad.data(), st, scr);
             }
-            // clip
-            let denom = (rms(uhat) / cfg.clip_threshold).max(1.0);
-            uhat.iter_mut().for_each(|x| *x /= denom);
-            // m = β1 m + (1-β1) û
-            for (mij, &u) in st.m.iter_mut().zip(uhat.iter()) {
-                *mij = cfg.beta1 * *mij + (1.0 - cfg.beta1) * u;
-            }
-            // instability U = (û − m)², factored with β3; confidence-scaled
-            // update = m / sqrt(Û + eps2)
-            let m = &st.m;
-            self.inst.clear();
-            self.inst.extend(
-                uhat.iter().zip(m.iter()).map(|(&u, &mij)| (u - mij) * (u - mij) + cfg.eps2),
-            );
-            let inst = &self.inst;
-            self.upd.clear();
-            self.upd.extend_from_slice(m);
-            let update = &mut self.upd;
-            match &mut st.u {
-                Some(f) => f.update_and_rsqrt(inst, cfg.beta3, update, &mut self.cfac),
-                None => {
-                    for (uij, &s) in st.u_dense.iter_mut().zip(inst) {
-                        *uij = cfg.beta3 * *uij + (1.0 - cfg.beta3) * s;
-                    }
-                    for (x, uij) in update.iter_mut().zip(&st.u_dense) {
-                        *x /= uij.sqrt().max(1e-30);
-                    }
-                }
-            }
-            // weight decay + apply
-            if cfg.weight_decay != 0.0 {
-                match cfg.weight_decay_mode {
-                    WeightDecayMode::AdamW => {
-                        let f = 1.0 - cfg.lr * cfg.weight_decay;
-                        p.iter_mut().for_each(|w| *w *= f);
-                    }
-                    WeightDecayMode::Adam => {
-                        for (x, &w) in update.iter_mut().zip(p.iter()) {
-                            *x += cfg.weight_decay * w;
-                        }
-                    }
-                }
-            }
-            for (w, &x) in p.iter_mut().zip(update.iter()) {
-                *w -= cfg.lr * x;
-            }
+            return;
         }
+        let cfg = self.cfg.clone();
+        let ctxs: Vec<&mut Scratch> = self.scratch.iter_mut().collect();
+        parallel::run_per_tensor(&self.plan, params, grads, &mut self.states, ctxs, |scr, p, g, st| {
+            Self::update_tensor(&cfg, beta2, p, g, st, scr);
+        });
     }
 
     fn set_lr(&mut self, lr: f32) {
@@ -224,6 +266,14 @@ impl Optimizer for Came {
                 ((v + u + s.m.len()) * 4) as u64
             })
             .sum()
+    }
+
+    fn scratch_bytes(&self) -> u64 {
+        self.scratch.iter().map(|s| (s.len() * 4) as u64).sum()
+    }
+
+    fn partition(&self) -> Option<&ParamPartition> {
+        Some(&self.plan)
     }
 }
 
@@ -274,5 +324,49 @@ mod tests {
         // stable coordinate moved much further
         let d = p[0].data();
         assert!(d[0].abs() > 3.0 * d[1].abs(), "{:?}", d);
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        use crate::util::rng::Pcg32;
+        let shapes = vec![vec![24, 16], vec![40], vec![2, 4, 1, 1]];
+        let mut rng = Pcg32::new(31);
+        let init: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| {
+                let mut t = Tensor::zeros(s);
+                rng.fill_normal(t.data_mut(), 0.5);
+                t
+            })
+            .collect();
+        let grads: Vec<Vec<Tensor>> = (0..3)
+            .map(|_| {
+                shapes
+                    .iter()
+                    .map(|s| {
+                        let mut t = Tensor::zeros(s);
+                        rng.fill_normal(t.data_mut(), 0.1);
+                        t
+                    })
+                    .collect()
+            })
+            .collect();
+        let run = |threads: usize| -> Vec<Tensor> {
+            let cfg = OptimConfig {
+                lr: 0.05,
+                weight_decay: 0.01,
+                threads,
+                ..OptimConfig::paper_defaults(OptKind::Came)
+            };
+            let mut opt = Came::new(&shapes, &cfg);
+            let mut p = init.clone();
+            for g in &grads {
+                opt.step(&mut p, g);
+            }
+            p
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(2));
+        assert_eq!(serial, run(8));
     }
 }

@@ -14,6 +14,31 @@
 //! bytes; [`memory`] provides matching analytic accounting over bare shape
 //! inventories (used for the LLaMA-scale tables where instantiating state
 //! would need tens of GiB).
+//!
+//! # The parallel step engine
+//!
+//! Every optimizer dispatches `step()` over the work-sharding engine in
+//! [`parallel`] when [`OptimConfig::threads`] is greater than one: the
+//! parameter inventory is statically binned once at construction into
+//! cost-balanced shards ([`parallel::ParamPartition`]), large tensors are
+//! additionally split intra-tensor into contiguous row ranges of their
+//! update view, and each step runs the shards on scoped worker threads
+//! (std::thread only). Semantics:
+//!
+//! * `threads = 1` (the default) reproduces the serial path bit-for-bit —
+//!   it is exactly the pre-engine code.
+//! * Elementwise optimizers (Adam/AdamW, SGD, SMMF's dense fallback) and
+//!   the tensor-granular optimizers (Adafactor, CAME, SM3) are
+//!   bit-identical to the serial path at any thread count.
+//! * SMMF's fused factored path reduces per-item column partials in fixed
+//!   item order: results are bit-identical across any `threads >= 2`
+//!   (item boundaries do not depend on the thread count) and agree with
+//!   `threads = 1` to FP-reduction-order tolerance (~1e-7 relative).
+//!   Exception: SMMF's compress-first *ablation* scheme needs a
+//!   whole-tensor gradient pre-pass and always runs (and plans) serially.
+//!
+//! The knob plumbs through the TOML layer (`[optimizer] threads = N`) and
+//! the CLI (`--threads N`); see `coordinator::config`.
 
 pub mod adafactor;
 pub mod adam;
@@ -21,6 +46,7 @@ pub mod came;
 pub mod matricize;
 pub mod memory;
 pub mod nnmf;
+pub mod parallel;
 pub mod schedule;
 pub mod sgd;
 pub mod sm3;
@@ -155,6 +181,9 @@ pub struct OptimConfig {
     pub smmf_scheme: SmmfScheme,
     pub smmf_sign_mode: SignMode,
     pub smmf_matricize: MatricizeMode,
+    /// Worker threads for the parallel step engine ([`parallel`]).
+    /// `1` = serial (bit-identical to the pre-engine behavior).
+    pub threads: usize,
 }
 
 impl Default for OptimConfig {
@@ -178,6 +207,7 @@ impl Default for OptimConfig {
             smmf_scheme: SmmfScheme::DecompressFirst,
             smmf_sign_mode: SignMode::Bit1,
             smmf_matricize: MatricizeMode::Square,
+            threads: 1,
         }
     }
 }
@@ -229,6 +259,12 @@ pub trait Optimizer: Send {
     /// memory; reported separately for honesty).
     fn scratch_bytes(&self) -> u64 {
         0
+    }
+
+    /// The static shard plan `step()` dispatches over (see [`parallel`]).
+    /// `None` means the optimizer has no planned partition.
+    fn partition(&self) -> Option<&parallel::ParamPartition> {
+        None
     }
 }
 

@@ -1,0 +1,436 @@
+//! The parallel optimizer step engine: static work partitioning plus a
+//! scoped-thread execution primitive (std::thread only — no external
+//! dependencies).
+//!
+//! Every optimizer in this crate walks a fixed parameter inventory each
+//! step; on large models (`transformer_big` ≈ 210M params) a serial walk
+//! dominates step wall time. The engine splits that walk across worker
+//! threads in two stages:
+//!
+//! 1. **Planning** ([`ParamPartition::plan`]): the inventory is statically
+//!    binned once at optimizer construction. Each tensor contributes a
+//!    [`TensorGeom`] — a `(rows, cols)` view of its update loop, a row
+//!    alignment constraint, and a per-element FLOP weight. Tensors whose
+//!    estimated cost exceeds [`SPLIT_UNIT_COST`] are split intra-tensor
+//!    into contiguous row ranges of that view; all resulting
+//!    [`WorkItem`]s are then packed onto `threads` shards with an LPT
+//!    (longest-processing-time-first) greedy that balances total cost.
+//!    The plan is a pure function of the geometry — it does **not**
+//!    depend on timing, so repeated steps (and repeated runs) execute an
+//!    identical schedule, and the intra-tensor item boundaries do not
+//!    depend on the thread count (only the shard *assignment* does),
+//!    which is what makes results bit-reproducible across `threads >= 2`.
+//! 2. **Execution** ([`run_shards`]): each shard's items run on one
+//!    worker inside a `std::thread::scope`, so tasks may borrow the
+//!    parameter/gradient/state slices directly — no `'static` bounds, no
+//!    channels, no unsafe. Per-tensor kernels are plain `Send` functions
+//!    over `(param slice, grad slice, per-tensor state)`; the engine
+//!    never looks inside them.
+//!
+//! How each optimizer maps onto the engine:
+//!
+//! * **SMMF** (factored state): intra-tensor splitting over rows of the
+//!   square-matricized view. Each work item owns private column
+//!   accumulators; partials are reduced in fixed item order before
+//!   `nnmf::normalize_side`, so a fixed shard plan yields bit-identical
+//!   results regardless of how many workers execute it.
+//! * **Adam / SGD / SMMF dense fallback** (elementwise state): intra-
+//!   tensor splitting over flat element ranges. Elementwise updates have
+//!   no cross-element reductions, so any split is bit-identical to the
+//!   serial walk.
+//! * **Adafactor / CAME / SM3** (whole-tensor reductions: RMS update
+//!   clipping, row/col EMAs, min-max covers): tensor-granular items only
+//!   (`rows = 1`), one tensor per work item — again bit-identical to the
+//!   serial walk because every tensor is updated by exactly one worker
+//!   running the serial kernel.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+use std::ops::Range;
+
+/// Intra-tensor splitting threshold, in weighted-cost units
+/// (`elements * cost_per_elem`). Tensors cheaper than this stay whole;
+/// costlier tensors are chopped into roughly `cost / SPLIT_UNIT_COST`
+/// row ranges. Independent of the thread count by design (see module
+/// docs: plan items must not change when only `threads` changes).
+pub const SPLIT_UNIT_COST: u64 = 1 << 23;
+
+/// The update-loop geometry of one tensor, as seen by the planner.
+#[derive(Clone, Copy, Debug)]
+pub struct TensorGeom {
+    /// Number of divisible rows of the update view. `1` marks the tensor
+    /// unsplittable (whole-tensor kernels with cross-element reductions).
+    pub rows: usize,
+    /// Elements per row.
+    pub cols: usize,
+    /// Row-boundary alignment: intra-tensor splits only occur at row
+    /// indices that are multiples of this (e.g. SMMF's 1-bit sign matrix
+    /// requires splits on 64-bit word edges).
+    pub align: usize,
+    /// Relative per-element cost weight (FLOP estimate) used for balance.
+    pub cost_per_elem: u64,
+}
+
+impl TensorGeom {
+    /// Unsplittable whole-tensor unit of `numel` elements.
+    pub fn whole(numel: usize, cost_per_elem: u64) -> TensorGeom {
+        TensorGeom { rows: 1, cols: numel.max(1), align: 1, cost_per_elem }
+    }
+
+    /// Elementwise unit: splittable anywhere (16-element granularity to
+    /// keep sub-slices cache-line friendly).
+    pub fn elementwise(numel: usize, cost_per_elem: u64) -> TensorGeom {
+        TensorGeom { rows: numel.max(1), cols: 1, align: 16, cost_per_elem }
+    }
+
+    fn cost(&self) -> u64 {
+        (self.rows.max(1) * self.cols.max(1)) as u64 * self.cost_per_elem.max(1)
+    }
+}
+
+/// One contiguous row range `[row0, row1)` of one tensor's update view,
+/// assigned to a shard.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct WorkItem {
+    pub tensor: usize,
+    pub row0: usize,
+    pub row1: usize,
+    /// Which shard (worker) executes this item.
+    pub shard: usize,
+}
+
+/// A static, balanced partition of the parameter inventory.
+///
+/// Invariants (checked by the property tests below):
+/// * per tensor, the items tile `[0, rows)` exactly once — every element
+///   of the inventory is covered by exactly one item;
+/// * interior item boundaries are multiples of the tensor's `align`;
+/// * item boundaries depend only on the geometry, never on `threads`.
+#[derive(Clone, Debug)]
+pub struct ParamPartition {
+    n_shards: usize,
+    /// All items, sorted by `(tensor, row0)`.
+    items: Vec<WorkItem>,
+    /// `items` index range of each tensor.
+    tensor_ranges: Vec<Range<usize>>,
+    /// Per-item cost (same order as `items`).
+    costs: Vec<u64>,
+}
+
+impl ParamPartition {
+    /// Bin the inventory into at most `threads` balanced shards.
+    pub fn plan(geoms: &[TensorGeom], threads: usize) -> ParamPartition {
+        let threads = threads.max(1);
+        let mut items = Vec::new();
+        let mut costs = Vec::new();
+        let mut tensor_ranges = Vec::with_capacity(geoms.len());
+        for (k, g) in geoms.iter().enumerate() {
+            let start = items.len();
+            let rows = g.rows.max(1);
+            let cols = g.cols.max(1);
+            let align = g.align.max(1);
+            let cpe = g.cost_per_elem.max(1);
+            // How many chunks this tensor wants, by cost. threads == 1
+            // never splits, so the serial path sees one item per tensor.
+            let want = if threads == 1 { 1 } else { g.cost().div_ceil(SPLIT_UNIT_COST) as usize };
+            let chunks = want.clamp(1, rows.div_ceil(align));
+            let chunk_rows = rows.div_ceil(chunks).next_multiple_of(align);
+            let mut r0 = 0usize;
+            while r0 < rows {
+                let r1 = (r0 + chunk_rows).min(rows);
+                items.push(WorkItem { tensor: k, row0: r0, row1: r1, shard: 0 });
+                costs.push(((r1 - r0) * cols) as u64 * cpe);
+                r0 = r1;
+            }
+            tensor_ranges.push(start..items.len());
+        }
+
+        // LPT greedy: heaviest item first onto the least-loaded shard.
+        // Deterministic: stable sort (ties keep (tensor, row0) order) and
+        // the heap breaks load ties by the lowest shard index.
+        let mut order: Vec<usize> = (0..items.len()).collect();
+        order.sort_by_key(|&i| Reverse(costs[i]));
+        let mut heap: BinaryHeap<Reverse<(u64, usize)>> =
+            (0..threads).map(|s| Reverse((0u64, s))).collect();
+        for &i in &order {
+            let Reverse((load, shard)) = heap.pop().expect("non-empty heap");
+            items[i].shard = shard;
+            heap.push(Reverse((load + costs[i], shard)));
+        }
+
+        ParamPartition { n_shards: threads, items, tensor_ranges, costs }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.n_shards
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.items.len()
+    }
+
+    /// All items, sorted by `(tensor, row0)`.
+    pub fn items(&self) -> &[WorkItem] {
+        &self.items
+    }
+
+    /// The items covering one tensor, sorted by `row0`.
+    pub fn items_of(&self, tensor: usize) -> &[WorkItem] {
+        &self.items[self.tensor_ranges[tensor].clone()]
+    }
+
+    /// Total planned cost per shard (for balance diagnostics).
+    pub fn shard_costs(&self) -> Vec<u64> {
+        let mut loads = vec![0u64; self.n_shards];
+        for (it, &c) in self.items.iter().zip(&self.costs) {
+            loads[it.shard] += c;
+        }
+        loads
+    }
+}
+
+/// One worker's slice of the step: a per-shard context (e.g. reusable
+/// scratch buffers) plus the tasks assigned to it.
+pub struct Shard<C, T> {
+    pub ctx: C,
+    pub tasks: Vec<T>,
+}
+
+/// Distribute per-item tasks (built in `plan.items()` order) onto shards.
+/// `ctxs` supplies one context per shard.
+pub fn into_shards<C, T>(plan: &ParamPartition, ctxs: Vec<C>, tasks: Vec<T>) -> Vec<Shard<C, T>> {
+    assert_eq!(ctxs.len(), plan.n_shards(), "one context per shard");
+    assert_eq!(tasks.len(), plan.n_items(), "one task per work item");
+    let mut shards: Vec<Shard<C, T>> =
+        ctxs.into_iter().map(|ctx| Shard { ctx, tasks: Vec::new() }).collect();
+    for (item, task) in plan.items().iter().zip(tasks) {
+        shards[item.shard].tasks.push(task);
+    }
+    shards
+}
+
+/// Execute all shards, one scoped worker thread per non-empty shard (the
+/// calling thread doubles as the first worker). `f` must be a stateless
+/// kernel over `(shard context, task)`; borrows inside tasks are fine —
+/// the scope guarantees they outlive the workers.
+pub fn run_shards<C, T, F>(shards: &mut [Shard<C, T>], f: F)
+where
+    C: Send,
+    T: Send,
+    F: Fn(&mut C, &mut T) + Sync,
+{
+    let busy = shards.iter().filter(|s| !s.tasks.is_empty()).count();
+    if busy <= 1 {
+        for sh in shards.iter_mut() {
+            for t in &mut sh.tasks {
+                f(&mut sh.ctx, t);
+            }
+        }
+        return;
+    }
+    std::thread::scope(|scope| {
+        let mut iter = shards.iter_mut().filter(|s| !s.tasks.is_empty());
+        let first = iter.next().expect("busy >= 1");
+        for sh in iter {
+            let f = &f;
+            scope.spawn(move || {
+                for t in &mut sh.tasks {
+                    f(&mut sh.ctx, t);
+                }
+            });
+        }
+        for t in &mut first.tasks {
+            f(&mut first.ctx, t);
+        }
+    });
+}
+
+/// Tensor-granular dispatch for optimizers whose update has whole-tensor
+/// reductions ([`TensorGeom::whole`] plans: one work item per tensor).
+/// Each tensor is updated by exactly one worker running `kernel` over
+/// `(shard context, param slice, grad slice, per-tensor state)` — bit-
+/// identical to the serial walk at any thread count. Shared by
+/// Adafactor, CAME and SM3 so the shard plumbing lives once.
+pub fn run_per_tensor<S, C, F>(
+    plan: &ParamPartition,
+    params: &mut [crate::tensor::Tensor],
+    grads: &[crate::tensor::Tensor],
+    states: &mut [S],
+    ctxs: Vec<C>,
+    kernel: F,
+) where
+    S: Send,
+    C: Send,
+    F: Fn(&mut C, &mut [f32], &[f32], &mut S) + Sync,
+{
+    let tasks: Vec<(&mut [f32], &[f32], &mut S)> = params
+        .iter_mut()
+        .zip(grads)
+        .zip(states.iter_mut())
+        .map(|((p, g), st)| (p.data_mut(), g.data(), st))
+        .collect();
+    let mut shards = into_shards(plan, ctxs, tasks);
+    run_shards(&mut shards, |ctx, (p, g, st)| kernel(ctx, p, g, st));
+}
+
+/// Split `data` into one mutable sub-slice per work item of a tensor
+/// (`cols` elements per row). Items tile the tensor's rows, so the
+/// sub-slices tile `data` — the borrow checker enforces disjointness.
+pub fn split_rows_mut<'a, T>(
+    mut data: &'a mut [T],
+    items: &[WorkItem],
+    cols: usize,
+) -> Vec<&'a mut [T]> {
+    let mut out = Vec::with_capacity(items.len());
+    for it in items {
+        let len = (it.row1 - it.row0) * cols;
+        let (head, rest) = data.split_at_mut(len);
+        out.push(head);
+        data = rest;
+    }
+    debug_assert!(data.is_empty(), "items must tile the tensor");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn check_cover(plan: &ParamPartition, geoms: &[TensorGeom]) {
+        assert_eq!(plan.tensor_ranges.len(), geoms.len());
+        for (k, g) in geoms.iter().enumerate() {
+            let items = plan.items_of(k);
+            assert!(!items.is_empty(), "tensor {k} has no items");
+            let mut expect = 0usize;
+            for it in items {
+                assert_eq!(it.tensor, k);
+                assert_eq!(it.row0, expect, "gap/overlap in tensor {k}");
+                assert!(it.row1 > it.row0, "empty item in tensor {k}");
+                if it.row0 != 0 {
+                    assert_eq!(it.row0 % g.align.max(1), 0, "misaligned split in tensor {k}");
+                }
+                assert!(it.shard < plan.n_shards());
+                expect = it.row1;
+            }
+            assert_eq!(expect, g.rows.max(1), "tensor {k} not fully covered");
+        }
+        // Global view: every (tensor, row) exactly once.
+        let total_items: usize = (0..geoms.len()).map(|k| plan.items_of(k).len()).sum();
+        assert_eq!(total_items, plan.n_items());
+    }
+
+    #[test]
+    fn covers_adversarial_inventory_exactly_once() {
+        // 1-element biases next to 2048x2048 matrices, odd primes, and an
+        // aligned factored view — the shapes the issue calls out.
+        let geoms = vec![
+            TensorGeom { rows: 1, cols: 1, align: 1, cost_per_elem: 8 },
+            TensorGeom { rows: 2048, cols: 2048, align: 32, cost_per_elem: 8 },
+            TensorGeom { rows: 2048, cols: 2048, align: 1, cost_per_elem: 8 },
+            TensorGeom { rows: 5087, cols: 4608, align: 64, cost_per_elem: 8 },
+            TensorGeom { rows: 17, cols: 1, align: 16, cost_per_elem: 1 },
+            TensorGeom::whole(123_457, 6),
+            TensorGeom::elementwise(3_500_000, 2),
+            TensorGeom::elementwise(1, 1),
+        ];
+        for threads in [1, 2, 3, 4, 8, 19] {
+            let plan = ParamPartition::plan(&geoms, threads);
+            assert_eq!(plan.n_shards(), threads);
+            check_cover(&plan, &geoms);
+        }
+    }
+
+    #[test]
+    fn prop_random_inventories_cover_exactly_once() {
+        prop::cases(60, |rng| {
+            let n = 1 + rng.below(12);
+            let geoms: Vec<TensorGeom> = (0..n)
+                .map(|_| TensorGeom {
+                    rows: 1 + rng.below(5000),
+                    cols: 1 + rng.below(3000),
+                    align: [1, 2, 8, 16, 64][rng.below(5)],
+                    cost_per_elem: 1 + rng.below(9) as u64,
+                })
+                .collect();
+            let threads = 1 + rng.below(9);
+            let plan = ParamPartition::plan(&geoms, threads);
+            check_cover(&plan, &geoms);
+        });
+    }
+
+    #[test]
+    fn item_boundaries_do_not_depend_on_thread_count() {
+        // Only the shard assignment may change with `threads` — the item
+        // boundaries must be identical so results are bit-reproducible
+        // across thread counts (see module docs).
+        let geoms = vec![
+            TensorGeom { rows: 4096, cols: 1024, align: 8, cost_per_elem: 8 },
+            TensorGeom::elementwise(1_000_000, 1),
+            TensorGeom::whole(999, 4),
+        ];
+        let strip = |p: &ParamPartition| -> Vec<(usize, usize, usize)> {
+            p.items().iter().map(|i| (i.tensor, i.row0, i.row1)).collect()
+        };
+        let p2 = ParamPartition::plan(&geoms, 2);
+        let p4 = ParamPartition::plan(&geoms, 4);
+        let p8 = ParamPartition::plan(&geoms, 8);
+        assert_eq!(strip(&p2), strip(&p4));
+        assert_eq!(strip(&p4), strip(&p8));
+        // ...and planning is deterministic run-to-run, shard included.
+        assert_eq!(ParamPartition::plan(&geoms, 4).items(), p4.items());
+    }
+
+    #[test]
+    fn big_tensors_split_and_loads_balance() {
+        // One dominant tensor: without intra-tensor splitting the best
+        // possible 4-shard balance would put its whole cost on one shard.
+        let geoms = vec![
+            TensorGeom { rows: 8192, cols: 4096, align: 64, cost_per_elem: 8 },
+            TensorGeom::elementwise(100, 1),
+        ];
+        let plan = ParamPartition::plan(&geoms, 4);
+        assert!(plan.items_of(0).len() >= 4, "dominant tensor must split");
+        let loads = plan.shard_costs();
+        let (min, max) = (loads.iter().min().unwrap(), loads.iter().max().unwrap());
+        assert!(*max as f64 <= *min as f64 * 1.5 + SPLIT_UNIT_COST as f64, "{loads:?}");
+    }
+
+    #[test]
+    fn unsplittable_tensors_stay_whole() {
+        let geoms = vec![TensorGeom::whole(50_000_000, 10)];
+        let plan = ParamPartition::plan(&geoms, 8);
+        assert_eq!(plan.n_items(), 1);
+        assert_eq!(plan.items()[0].row1, 1);
+    }
+
+    #[test]
+    fn run_shards_executes_every_task_once() {
+        use std::sync::atomic::{AtomicU32, Ordering};
+        let geoms = vec![TensorGeom::elementwise(100_000, 1); 7];
+        let plan = ParamPartition::plan(&geoms, 4);
+        let hits: Vec<AtomicU32> = (0..plan.n_items()).map(|_| AtomicU32::new(0)).collect();
+        let tasks: Vec<usize> = (0..plan.n_items()).collect();
+        let mut shards = into_shards(&plan, vec![(); plan.n_shards()], tasks);
+        run_shards(&mut shards, |_, &mut i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::SeqCst), 1, "task {i}");
+        }
+    }
+
+    #[test]
+    fn split_rows_mut_tiles() {
+        let geoms = vec![TensorGeom { rows: 10, cols: 3, align: 4, cost_per_elem: 1 }];
+        // Force splits regardless of cost by planning through a fake
+        // heavy geometry with identical rows/align.
+        let heavy = vec![TensorGeom { rows: 10, cols: 3, align: 4, cost_per_elem: SPLIT_UNIT_COST }];
+        let plan = ParamPartition::plan(&heavy, 4);
+        check_cover(&plan, &geoms);
+        let mut data: Vec<u32> = (0..30).collect();
+        let parts = split_rows_mut(&mut data, plan.items_of(0), 3);
+        let flat: Vec<u32> = parts.iter().flat_map(|p| p.iter().copied()).collect();
+        assert_eq!(flat, (0..30).collect::<Vec<u32>>());
+    }
+}

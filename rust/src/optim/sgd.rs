@@ -1,5 +1,9 @@
 //! SGD with momentum — the zero/low-memory reference point.
+//!
+//! Elementwise update, so the parallel path (`OptimConfig::threads > 1`)
+//! splits flat element ranges and is bit-identical to the serial walk.
 
+use super::parallel::{self, ParamPartition, TensorGeom};
 use super::{OptimConfig, Optimizer, WeightDecayMode};
 use crate::tensor::Tensor;
 
@@ -7,6 +11,7 @@ pub struct Sgd {
     cfg: OptimConfig,
     m: Vec<Vec<f32>>, // empty when momentum == 0
     t: u64,
+    plan: ParamPartition,
 }
 
 impl Sgd {
@@ -16,7 +21,37 @@ impl Sgd {
         } else {
             Vec::new()
         };
-        Sgd { cfg: cfg.clone(), m, t: 0 }
+        let geoms: Vec<TensorGeom> = shapes
+            .iter()
+            .map(|s| TensorGeom::elementwise(s.iter().product(), 1))
+            .collect();
+        let plan = ParamPartition::plan(&geoms, cfg.threads);
+        Sgd { cfg: cfg.clone(), m, t: 0, plan }
+    }
+
+    /// Elementwise kernel over one chunk (`m` is `None` when momentum is
+    /// disabled).
+    fn update_chunk(cfg: &OptimConfig, p: &mut [f32], g: &[f32], m: Option<&mut [f32]>) {
+        if cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::AdamW {
+            let f = 1.0 - cfg.lr * cfg.weight_decay;
+            p.iter_mut().for_each(|w| *w *= f);
+        }
+        let couple = cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::Adam;
+        match m {
+            Some(m) => {
+                for ((w, &g0), mij) in p.iter_mut().zip(g).zip(m.iter_mut()) {
+                    let gij = if couple { g0 + cfg.weight_decay * *w } else { g0 };
+                    *mij = cfg.momentum * *mij + gij;
+                    *w -= cfg.lr * *mij;
+                }
+            }
+            None => {
+                for (w, &g0) in p.iter_mut().zip(g) {
+                    let gij = if couple { g0 + cfg.weight_decay * *w } else { g0 };
+                    *w -= cfg.lr * gij;
+                }
+            }
+        }
     }
 }
 
@@ -27,29 +62,43 @@ impl Optimizer for Sgd {
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
         self.t += 1;
-        let cfg = &self.cfg;
-        for (idx, (param, grad)) in params.iter_mut().zip(grads).enumerate() {
-            let p = param.data_mut();
-            let g = grad.data();
-            if cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::AdamW {
-                let f = 1.0 - cfg.lr * cfg.weight_decay;
-                p.iter_mut().for_each(|w| *w *= f);
+        let momentum = self.cfg.momentum != 0.0;
+        if self.cfg.threads <= 1 {
+            let cfg = &self.cfg;
+            for (idx, (param, grad)) in params.iter_mut().zip(grads).enumerate() {
+                let m = if momentum { Some(&mut self.m[idx][..]) } else { None };
+                Self::update_chunk(cfg, param.data_mut(), grad.data(), m);
             }
-            let couple = cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::Adam;
-            if cfg.momentum != 0.0 {
-                let m = &mut self.m[idx];
-                for ((w, &g0), mij) in p.iter_mut().zip(g).zip(m.iter_mut()) {
-                    let gij = if couple { g0 + cfg.weight_decay * *w } else { g0 };
-                    *mij = cfg.momentum * *mij + gij;
-                    *w -= cfg.lr * *mij;
-                }
+            return;
+        }
+
+        struct Task<'a> {
+            p: &'a mut [f32],
+            g: &'a [f32],
+            m: Option<&'a mut [f32]>,
+        }
+        let cfg = self.cfg.clone();
+        let plan = &self.plan;
+        let mut tasks: Vec<Task<'_>> = Vec::with_capacity(plan.n_items());
+        let mut m_iter = self.m.iter_mut();
+        for (idx, (param, grad)) in params.iter_mut().zip(grads).enumerate() {
+            let items = plan.items_of(idx);
+            let p_parts = parallel::split_rows_mut(param.data_mut(), items, 1);
+            let m_parts: Vec<Option<&mut [f32]>> = if momentum {
+                let m = m_iter.next().expect("momentum state per tensor");
+                parallel::split_rows_mut(m, items, 1).into_iter().map(Some).collect()
             } else {
-                for (w, &g0) in p.iter_mut().zip(g) {
-                    let gij = if couple { g0 + cfg.weight_decay * *w } else { g0 };
-                    *w -= cfg.lr * gij;
-                }
+                items.iter().map(|_| None).collect()
+            };
+            let g = grad.data();
+            for ((it, p), mm) in items.iter().zip(p_parts).zip(m_parts) {
+                tasks.push(Task { p, g: &g[it.row0..it.row1], m: mm });
             }
         }
+        let mut shards = parallel::into_shards(plan, vec![(); plan.n_shards()], tasks);
+        parallel::run_shards(&mut shards, |_, t| {
+            Self::update_chunk(&cfg, t.p, t.g, t.m.as_deref_mut());
+        });
     }
 
     fn set_lr(&mut self, lr: f32) {
@@ -58,6 +107,10 @@ impl Optimizer for Sgd {
 
     fn state_bytes(&self) -> u64 {
         self.m.iter().map(|x| (x.len() * 4) as u64).sum()
+    }
+
+    fn partition(&self) -> Option<&ParamPartition> {
+        Some(&self.plan)
     }
 }
 
@@ -81,5 +134,40 @@ mod tests {
         let g = vec![Tensor::from_vec(&[2], vec![2.0, -2.0])];
         opt.step(&mut p, &g);
         assert_eq!(p[0].data(), &[0.0, 3.0]);
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        use crate::util::rng::Pcg32;
+        let shapes = vec![vec![1000], vec![1], vec![31, 7]];
+        let mut rng = Pcg32::new(11);
+        let init: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| {
+                let mut t = Tensor::zeros(s);
+                rng.fill_normal(t.data_mut(), 0.5);
+                t
+            })
+            .collect();
+        let g: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| {
+                let mut t = Tensor::zeros(s);
+                rng.fill_normal(t.data_mut(), 0.1);
+                t
+            })
+            .collect();
+        for momentum in [0.0f32, 0.9] {
+            let run = |threads: usize| -> Vec<Tensor> {
+                let cfg = OptimConfig { lr: 0.1, momentum, weight_decay: 0.01, threads, ..Default::default() };
+                let mut opt = Sgd::new(&shapes, &cfg);
+                let mut p = init.clone();
+                for _ in 0..3 {
+                    opt.step(&mut p, &g);
+                }
+                p
+            };
+            assert_eq!(run(1), run(4));
+        }
     }
 }

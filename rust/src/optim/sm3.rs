@@ -6,7 +6,14 @@
 //! ν values (the min-max cover scheme). A dense momentum buffer (N floats)
 //! is kept because the paper runs SM3 with β1 = 0.9 (Appendix L) — which
 //! is also why SM3's memory in Table 1 is ≈ half of Adam's, not tiny.
+//!
+//! The min-max cover couples every element of a tensor through the
+//! per-axis accumulators, so the parallel path
+//! (`OptimConfig::threads > 1`) shards at tensor granularity — each
+//! tensor updated by exactly one worker, bit-identical to the serial
+//! walk.
 
+use super::parallel::{self, ParamPartition, TensorGeom};
 use super::{OptimConfig, Optimizer, WeightDecayMode};
 use crate::tensor::Tensor;
 
@@ -22,6 +29,7 @@ pub struct Sm3 {
     cfg: OptimConfig,
     states: Vec<PState>,
     t: u64,
+    plan: ParamPartition,
 }
 
 impl Sm3 {
@@ -38,7 +46,71 @@ impl Sm3 {
                 }
             })
             .collect();
-        Sm3 { cfg: cfg.clone(), states, t: 0 }
+        let geoms: Vec<TensorGeom> = shapes
+            .iter()
+            .map(|s| TensorGeom::whole(s.iter().product::<usize>().max(1), 4))
+            .collect();
+        let plan = ParamPartition::plan(&geoms, cfg.threads);
+        Sm3 { cfg: cfg.clone(), states, t: 0, plan }
+    }
+
+    /// The whole-tensor kernel (`Send` + stateless over per-tensor state).
+    fn update_tensor(cfg: &OptimConfig, p: &mut [f32], g: &[f32], st: &mut PState) {
+        if cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::AdamW {
+            let f = 1.0 - cfg.lr * cfg.weight_decay;
+            p.iter_mut().for_each(|w| *w *= f);
+        }
+        let rank = st.shape.len();
+        // Per-axis max of ν for the cover update, accumulated this step.
+        let mut new_max: Vec<Vec<f32>> = st.shape.iter().map(|&d| vec![0.0; d]).collect();
+        // Perf (§Perf): odometer multi-index (increment + carry)
+        // instead of div/mod per element, and the min over the leading
+        // rank-1 axes hoisted out of the innermost (last-axis) loop.
+        let mut idx = vec![0usize; rank];
+        let couple = cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::Adam;
+        let last_dim = *st.shape.last().unwrap();
+        let n = g.len();
+        let mut flat = 0;
+        while flat < n {
+            // min over the non-last axes is constant across this row
+            let mut vmin_head = f32::INFINITY;
+            for r in 0..rank - 1 {
+                vmin_head = vmin_head.min(st.acc[r][idx[r]]);
+            }
+            let acc_last = &st.acc[rank - 1];
+            let new_last = &mut new_max[rank - 1];
+            let mut row_max = 0.0f32; // max ν over this row (other axes)
+            for j in 0..last_dim {
+                let w = &mut p[flat + j];
+                let gij = if couple { g[flat + j] + cfg.weight_decay * *w } else { g[flat + j] };
+                // ν = min_r μ_r[i_r] + g²
+                let nu = vmin_head.min(acc_last[j]) + gij * gij;
+                new_last[j] = new_last[j].max(nu);
+                row_max = row_max.max(nu);
+                let update = gij / (nu.sqrt() + cfg.eps1.max(1e-30));
+                if let Some(m) = &mut st.m {
+                    let mij = &mut m[flat + j];
+                    *mij = cfg.beta1 * *mij + (1.0 - cfg.beta1) * update;
+                    *w -= cfg.lr * *mij;
+                } else {
+                    *w -= cfg.lr * update;
+                }
+            }
+            for r in 0..rank - 1 {
+                let e = &mut new_max[r][idx[r]];
+                *e = e.max(row_max);
+            }
+            // odometer carry over the leading axes
+            flat += last_dim;
+            for r in (0..rank.saturating_sub(1)).rev() {
+                idx[r] += 1;
+                if idx[r] < st.shape[r] {
+                    break;
+                }
+                idx[r] = 0;
+            }
+        }
+        st.acc = new_max;
     }
 }
 
@@ -49,68 +121,18 @@ impl Optimizer for Sm3 {
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
         self.t += 1;
-        let cfg = self.cfg.clone();
-        for ((param, grad), st) in params.iter_mut().zip(grads).zip(self.states.iter_mut()) {
-            let p = param.data_mut();
-            let g = grad.data();
-            if cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::AdamW {
-                let f = 1.0 - cfg.lr * cfg.weight_decay;
-                p.iter_mut().for_each(|w| *w *= f);
+        if self.cfg.threads <= 1 {
+            let cfg = self.cfg.clone();
+            for ((param, grad), st) in params.iter_mut().zip(grads).zip(self.states.iter_mut()) {
+                Self::update_tensor(&cfg, param.data_mut(), grad.data(), st);
             }
-            let rank = st.shape.len();
-            // Per-axis max of ν for the cover update, accumulated this step.
-            let mut new_max: Vec<Vec<f32>> =
-                st.shape.iter().map(|&d| vec![0.0; d]).collect();
-            // Perf (§Perf): odometer multi-index (increment + carry)
-            // instead of div/mod per element, and the min over the leading
-            // rank-1 axes hoisted out of the innermost (last-axis) loop.
-            let mut idx = vec![0usize; rank];
-            let couple =
-                cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::Adam;
-            let last_dim = *st.shape.last().unwrap();
-            let n = g.len();
-            let mut flat = 0;
-            while flat < n {
-                // min over the non-last axes is constant across this row
-                let mut vmin_head = f32::INFINITY;
-                for r in 0..rank - 1 {
-                    vmin_head = vmin_head.min(st.acc[r][idx[r]]);
-                }
-                let acc_last = &st.acc[rank - 1];
-                let new_last = &mut new_max[rank - 1];
-                let mut row_max = 0.0f32; // max ν over this row (other axes)
-                for j in 0..last_dim {
-                    let w = &mut p[flat + j];
-                    let gij = if couple { g[flat + j] + cfg.weight_decay * *w } else { g[flat + j] };
-                    // ν = min_r μ_r[i_r] + g²
-                    let nu = vmin_head.min(acc_last[j]) + gij * gij;
-                    new_last[j] = new_last[j].max(nu);
-                    row_max = row_max.max(nu);
-                    let update = gij / (nu.sqrt() + cfg.eps1.max(1e-30));
-                    if let Some(m) = &mut st.m {
-                        let mij = &mut m[flat + j];
-                        *mij = cfg.beta1 * *mij + (1.0 - cfg.beta1) * update;
-                        *w -= cfg.lr * *mij;
-                    } else {
-                        *w -= cfg.lr * update;
-                    }
-                }
-                for r in 0..rank - 1 {
-                    let e = &mut new_max[r][idx[r]];
-                    *e = e.max(row_max);
-                }
-                // odometer carry over the leading axes
-                flat += last_dim;
-                for r in (0..rank.saturating_sub(1)).rev() {
-                    idx[r] += 1;
-                    if idx[r] < st.shape[r] {
-                        break;
-                    }
-                    idx[r] = 0;
-                }
-            }
-            st.acc = new_max;
+            return;
         }
+        let cfg = self.cfg.clone();
+        let ctxs = vec![(); self.plan.n_shards()];
+        parallel::run_per_tensor(&self.plan, params, grads, &mut self.states, ctxs, |_, p, g, st| {
+            Self::update_tensor(&cfg, p, g, st);
+        });
     }
 
     fn set_lr(&mut self, lr: f32) {
@@ -125,6 +147,10 @@ impl Optimizer for Sm3 {
                 ((acc + s.m.as_ref().map_or(0, |m| m.len())) * 4) as u64
             })
             .sum()
+    }
+
+    fn partition(&self) -> Option<&ParamPartition> {
+        Some(&self.plan)
     }
 }
 
@@ -181,5 +207,44 @@ mod tests {
         let g = vec![Tensor::scalar(1.0)];
         opt.step(&mut p, &g);
         assert!(p[0].data()[0] < 4.0);
+    }
+
+    #[test]
+    fn parallel_is_bit_identical_to_serial() {
+        use crate::util::rng::Pcg32;
+        let shapes = vec![vec![13, 5, 3], vec![100], vec![], vec![8, 8]];
+        let mut rng = Pcg32::new(17);
+        let init: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| {
+                let mut t = Tensor::zeros(s);
+                rng.fill_normal(t.data_mut(), 0.5);
+                t
+            })
+            .collect();
+        let grads: Vec<Vec<Tensor>> = (0..3)
+            .map(|_| {
+                shapes
+                    .iter()
+                    .map(|s| {
+                        let mut t = Tensor::zeros(s);
+                        rng.fill_normal(t.data_mut(), 0.1);
+                        t
+                    })
+                    .collect()
+            })
+            .collect();
+        let run = |threads: usize| -> Vec<Tensor> {
+            let cfg = OptimConfig { lr: 0.1, threads, ..Default::default() };
+            let mut opt = Sm3::new(&shapes, &cfg);
+            let mut p = init.clone();
+            for g in &grads {
+                opt.step(&mut p, g);
+            }
+            p
+        };
+        let serial = run(1);
+        assert_eq!(serial, run(2));
+        assert_eq!(serial, run(4));
     }
 }

@@ -5,29 +5,88 @@
 //! factors): `2(n̂+m̂)` floats + `n̂·m̂` bits for a tensor of `n̂·m̂`
 //! elements — versus Adam's `2·n̂·m̂` floats.
 //!
-//! Two step implementations:
+//! Three step implementations:
 //!
-//! * [`Smmf::step`] — the production **fused** path: decompression, moment
-//!   update, re-compression reductions, update term and parameter write
-//!   happen in a *single pass* over each row of the matricized view, with
-//!   O(n̂+m̂) scratch. The full moment matrices are never materialized —
-//!   this beats even the paper's reference implementation, whose temporary
-//!   memory is O(n̂·m̂) (Appendix G).
+//! * [`Smmf::step`] with `threads == 1` — the fused **serial** path:
+//!   decompression, moment update, re-compression reductions, update term
+//!   and parameter write happen in a *single pass* over each row of the
+//!   matricized view, with O(n̂+m̂) scratch. The full moment matrices are
+//!   never materialized — this beats even the paper's reference
+//!   implementation, whose temporary memory is O(n̂·m̂) (Appendix G).
+//! * [`Smmf::step`] with `threads > 1` — the same fused kernel dispatched
+//!   over the [`super::parallel`] engine: the matricized view is split
+//!   into contiguous row ranges (sign-word aligned), each work item runs
+//!   the kernel over its rows with private column accumulators
+//!   (`acc_cm`/`acc_cv`), and the partials are reduced in fixed item
+//!   order before `nnmf::normalize_side`. For a fixed shard plan the
+//!   result is bit-identical no matter how many workers execute it; the
+//!   plan's item boundaries are thread-count independent, so any
+//!   `threads >= 2` produce bit-identical trajectories, and `threads = 1`
+//!   (one item per tensor) reproduces the serial path exactly.
 //! * [`Smmf::step_naive`] — a literal transcription of Algorithms 1/3/4
 //!   that materializes M and V; kept for differential testing and the
 //!   perf ablation bench.
 
 use super::matricize::{effective_shape, squeezed_rank};
 use super::nnmf;
+use super::parallel::{self, ParamPartition, TensorGeom, WorkItem};
 use super::schedule::{beta1_t, beta2_t};
 use super::{MatricizeMode, OptimConfig, Optimizer, SignMode, SmmfScheme, WeightDecayMode};
-use crate::tensor::{BitMatrix, Tensor};
+use crate::tensor::{word_chunk_get64, word_chunk_set64, BitMatrix, Tensor};
 
 /// Sign-matrix storage: 1-bit packed (the paper's memory claim) or one
 /// byte per element (the "8-bit S_M" timing variant of Table 5).
 pub enum SignStore {
     Bits(BitMatrix),
     Bytes(Vec<u8>),
+}
+
+/// A mutable view over the sign storage of a contiguous row range of one
+/// tensor (bit/byte index 0 = first element of the range). Row-range
+/// views are storage-disjoint — for the 1-bit store this requires splits
+/// on 64-bit word edges, which [`SignStore::row_align`] guarantees.
+pub enum SignViewMut<'a> {
+    Bits(&'a mut [u64]),
+    Bytes(&'a mut [u8]),
+}
+
+impl SignViewMut<'_> {
+    /// Read `len` (<=64) sign bits starting at `start` into a word.
+    #[inline]
+    fn get_chunk64(&self, start: usize, len: usize) -> u64 {
+        match self {
+            SignViewMut::Bits(words) => word_chunk_get64(words, start),
+            SignViewMut::Bytes(v) => {
+                let mut bits = 0u64;
+                for (k, &byte) in v[start..start + len].iter().enumerate() {
+                    bits |= ((byte != 0) as u64) << k;
+                }
+                bits
+            }
+        }
+    }
+
+    /// Write `len` (<=64) sign bits starting at `start` from a word.
+    #[inline]
+    fn set_chunk64(&mut self, start: usize, bits: u64, len: usize) {
+        match self {
+            SignViewMut::Bits(words) => word_chunk_set64(words, start, bits, len),
+            SignViewMut::Bytes(v) => {
+                for (k, byte) in v[start..start + len].iter_mut().enumerate() {
+                    *byte = ((bits >> k) & 1) as u8;
+                }
+            }
+        }
+    }
+}
+
+fn gcd(mut a: usize, mut b: usize) -> usize {
+    while b != 0 {
+        let t = a % b;
+        a = b;
+        b = t;
+    }
+    a
 }
 
 impl SignStore {
@@ -61,30 +120,56 @@ impl SignStore {
         }
     }
 
-    /// Read `len` (<=64) sign bits starting at `start` into a word.
-    #[inline]
-    fn get_chunk64(&self, start: usize, len: usize) -> u64 {
-        match self {
-            SignStore::Bits(b) => b.get_chunk64(start),
-            SignStore::Bytes(v) => {
-                let mut bits = 0u64;
-                for (k, &byte) in v[start..start + len].iter().enumerate() {
-                    bits |= ((byte != 0) as u64) << k;
-                }
-                bits
-            }
+    /// Minimum row granularity for storage-disjoint row-range views: the
+    /// 1-bit store requires range boundaries on 64-bit word edges, i.e.
+    /// row indices that are multiples of `64 / gcd(m, 64)`.
+    fn row_align(mode: SignMode, m: usize) -> usize {
+        match mode {
+            SignMode::Bit1 => 64 / gcd(m.max(1), 64),
+            SignMode::Byte8 => 1,
         }
     }
 
-    /// Write `len` (<=64) sign bits starting at `start` from a word.
-    #[inline]
-    fn set_chunk64(&mut self, start: usize, bits: u64, len: usize) {
+    /// View over the whole matrix (the serial path).
+    fn view_all(&mut self) -> SignViewMut<'_> {
         match self {
-            SignStore::Bits(b) => b.set_chunk64(start, bits, len),
-            SignStore::Bytes(v) => {
-                for (k, byte) in v[start..start + len].iter_mut().enumerate() {
-                    *byte = ((bits >> k) & 1) as u8;
+            SignStore::Bits(b) => SignViewMut::Bits(b.words_mut()),
+            SignStore::Bytes(v) => SignViewMut::Bytes(v),
+        }
+    }
+
+    /// One disjoint view per work item (items tile the rows; interior
+    /// boundaries are `row_align`-aligned by the shard planner).
+    fn views_mut<'a>(&'a mut self, items: &[WorkItem], m: usize) -> Vec<SignViewMut<'a>> {
+        match self {
+            SignStore::Bits(b) => {
+                let mut words: &mut [u64] = b.words_mut();
+                let mut out = Vec::with_capacity(items.len());
+                let mut consumed = 0usize; // words handed out so far
+                for (i, it) in items.iter().enumerate() {
+                    let take = if i + 1 == items.len() {
+                        words.len()
+                    } else {
+                        let bit_end = it.row1 * m;
+                        debug_assert_eq!(bit_end % 64, 0, "unaligned sign split");
+                        bit_end / 64 - consumed
+                    };
+                    let (head, rest) = words.split_at_mut(take);
+                    out.push(SignViewMut::Bits(head));
+                    words = rest;
+                    consumed += take;
                 }
+                out
+            }
+            SignStore::Bytes(v) => {
+                let mut bytes: &mut [u8] = v;
+                let mut out = Vec::with_capacity(items.len());
+                for it in items {
+                    let (head, rest) = bytes.split_at_mut((it.row1 - it.row0) * m);
+                    out.push(SignViewMut::Bytes(head));
+                    bytes = rest;
+                }
+                out
             }
         }
     }
@@ -117,14 +202,29 @@ impl State {
     }
 }
 
+/// Per-work-item scratch for the parallel path: private column
+/// accumulators (reduced after the join) and a weight-decay gradient
+/// buffer (Adam-coupled decay only; lazily grown).
+#[derive(Default)]
+struct ItemScratch {
+    acc_cm: Vec<f32>,
+    acc_cv: Vec<f32>,
+    g_wd: Vec<f32>,
+}
+
 pub struct Smmf {
     cfg: OptimConfig,
     states: Vec<State>,
     t: u64,
+    /// Static shard plan over the matricized views (see `optim::parallel`).
+    plan: ParamPartition,
     /// Reusable per-step scratch: column accumulators sized to max m̂.
     scratch_cm: Vec<f32>,
     scratch_cv: Vec<f32>,
-    /// Scratch for the naive path (lazily grown; only used by step_naive).
+    /// Parallel-path per-item scratch (empty when `threads == 1`).
+    item_scratch: Vec<ItemScratch>,
+    /// Scratch for the naive path (lazily grown; only used by step_naive)
+    /// and the compress-first ablation.
     scratch_mat: Vec<f32>,
     scratch_mat2: Vec<f32>,
 }
@@ -132,12 +232,14 @@ pub struct Smmf {
 impl Smmf {
     pub fn new(shapes: &[Vec<usize>], cfg: &OptimConfig) -> Smmf {
         let mut max_m = 0;
-        let states = shapes
+        let mut geoms = Vec::with_capacity(shapes.len());
+        let states: Vec<State> = shapes
             .iter()
             .map(|shape| {
                 let numel: usize = shape.iter().product();
                 assert!(numel > 0, "empty tensor {shape:?}");
                 if squeezed_rank(shape) == 1 && !cfg.vector_reshape {
+                    geoms.push(TensorGeom::elementwise(numel, 4));
                     State::Dense { m: vec![0.0; numel], v: vec![0.0; numel] }
                 } else {
                     let (n, m) = match cfg.smmf_matricize {
@@ -149,6 +251,12 @@ impl Smmf {
                         }
                     };
                     max_m = max_m.max(m);
+                    geoms.push(TensorGeom {
+                        rows: n,
+                        cols: m,
+                        align: SignStore::row_align(cfg.smmf_sign_mode, m),
+                        cost_per_elem: 8,
+                    });
                     State::Factored {
                         n,
                         m,
@@ -161,12 +269,36 @@ impl Smmf {
                 }
             })
             .collect();
+        // The compress-first ablation needs a whole-tensor gradient
+        // pre-pass, so it stays on the serial path (no item scratch) and
+        // plans serially too, so `partition()` reflects what actually runs.
+        let engine_threads =
+            if cfg.smmf_scheme == SmmfScheme::DecompressFirst { cfg.threads } else { 1 };
+        let plan = ParamPartition::plan(&geoms, engine_threads);
+        let item_scratch: Vec<ItemScratch> =
+            if engine_threads > 1 {
+                plan.items()
+                    .iter()
+                    .map(|it| match &states[it.tensor] {
+                        State::Factored { m, .. } => ItemScratch {
+                            acc_cm: vec![0.0; *m],
+                            acc_cv: vec![0.0; *m],
+                            g_wd: Vec::new(),
+                        },
+                        State::Dense { .. } => ItemScratch::default(),
+                    })
+                    .collect()
+            } else {
+                Vec::new()
+            };
         Smmf {
             cfg: cfg.clone(),
             states,
             t: 0,
+            plan,
             scratch_cm: vec![0.0; max_m],
             scratch_cv: vec![0.0; max_m],
+            item_scratch,
             scratch_mat: Vec::new(),
             scratch_mat2: Vec::new(),
         }
@@ -180,128 +312,198 @@ impl Smmf {
         )
     }
 
-    fn apply_weight_decay(cfg: &OptimConfig, p: &mut [f32], g: &[f32], g_wd: &mut Vec<f32>) -> bool {
-        // Returns true if g_wd holds the effective gradient (adam mode).
-        match cfg.weight_decay_mode {
-            WeightDecayMode::Adam if cfg.weight_decay != 0.0 => {
-                g_wd.clear();
-                g_wd.extend(g.iter().zip(p.iter()).map(|(&g, &w)| g + cfg.weight_decay * w));
-                true
+    /// Serial fused path (exactly the pre-engine behavior): one work unit
+    /// per tensor, column accumulators folded in place.
+    fn step_serial(&mut self, params: &mut [Tensor], grads: &[Tensor], beta_m: f32, beta_v: f32) {
+        let cfg = self.cfg.clone();
+        let mut g_wd: Vec<f32> = Vec::new();
+        for (idx, (param, grad)) in params.iter_mut().zip(grads).enumerate() {
+            debug_assert_eq!(param.numel(), grad.numel());
+            let p = param.data_mut();
+            let g = effective_grad(
+                p,
+                grad.data(),
+                cfg.weight_decay,
+                cfg.weight_decay_mode,
+                cfg.lr,
+                &mut g_wd,
+            );
+            match &mut self.states[idx] {
+                State::Factored { n, m, r_m, c_m, sign, r_v, c_v } => {
+                    let (n, m) = (*n, *m);
+                    let g: &[f32] = if cfg.smmf_scheme == SmmfScheme::CompressFirst {
+                        Self::compress_then_decompress(g, n, m, &mut self.scratch_mat);
+                        &self.scratch_mat
+                    } else {
+                        g
+                    };
+                    let mut view = sign.view_all();
+                    fused_rows(
+                        p,
+                        g,
+                        n,
+                        m,
+                        r_m,
+                        c_m,
+                        &mut view,
+                        r_v,
+                        c_v,
+                        beta_m,
+                        beta_v,
+                        cfg.lr,
+                        cfg.eps1,
+                        &mut self.scratch_cm,
+                        &mut self.scratch_cv,
+                    );
+                    c_m.copy_from_slice(&self.scratch_cm[..m]);
+                    c_v.copy_from_slice(&self.scratch_cv[..m]);
+                    nnmf::normalize_side(n, m, r_m, c_m);
+                    nnmf::normalize_side(n, m, r_v, c_v);
+                }
+                State::Dense { m, v } => {
+                    dense_update(p, g, m, v, beta_m, beta_v, cfg.lr, cfg.eps1);
+                }
             }
-            WeightDecayMode::AdamW if cfg.weight_decay != 0.0 => {
-                let f = 1.0 - cfg.lr * cfg.weight_decay;
-                p.iter_mut().for_each(|w| *w *= f);
-                false
-            }
-            _ => false,
         }
     }
 
-    /// Fused single-pass update of one factored tensor. See module docs.
-    #[allow(clippy::too_many_arguments)]
-    fn step_factored_fused(
-        p: &mut [f32],
-        g: &[f32],
-        n: usize,
-        m: usize,
-        r_m: &mut [f32],
-        c_m: &mut [f32],
-        sign: &mut SignStore,
-        r_v: &mut [f32],
-        c_v: &mut [f32],
-        beta_m: f32,
-        beta_v: f32,
-        lr: f32,
-        eps: f32,
-        acc_cm: &mut [f32],
-        acc_cv: &mut [f32],
-    ) {
-        debug_assert_eq!(p.len(), n * m);
-        let one_m = 1.0 - beta_m;
-        let one_v = 1.0 - beta_v;
-        let acc_cm = &mut acc_cm[..m];
-        let acc_cv = &mut acc_cv[..m];
-        acc_cm.iter_mut().for_each(|x| *x = 0.0);
-        acc_cv.iter_mut().for_each(|x| *x = 0.0);
-
-        for i in 0..n {
-            let ri_m = r_m[i];
-            let ri_v = r_v[i];
-            let row_p = &mut p[i * m..(i + 1) * m];
-            let row_g = &g[i * m..(i + 1) * m];
-            let mut rsum_m = 0.0f32;
-            let mut rsum_v = 0.0f32;
-            let base = i * m;
-            // Perf (§Perf in EXPERIMENTS.md): process 64-column chunks so
-            // the sign matrix is touched one word at a time, and keep the
-            // arithmetic branchless (sign via ±1 multiplier, bit build via
-            // bool cast) so the compiler can vectorize the FP work.
-            let mut m_buf = [0.0f32; 64];
-            let mut v_buf = [0.0f32; 64];
-            let mut j0 = 0;
-            while j0 < m {
-                let len = (m - j0).min(64);
-                let old_bits = sign.get_chunk64(base + j0, len);
-                // Phase 1 (vectorizable): decompress M̂/V̂ from the factors
-                // (sign-restored; bit=1 means positive) and apply the
-                // moment update with the intact gradient
-                // (decompression→compression scheme, §3.2).
-                for k in 0..len {
-                    let j = j0 + k;
-                    let s = f32::from_bits(
-                        0x3f80_0000 | ((((old_bits >> k) & 1) ^ 1) as u32) << 31,
-                    );
-                    let gij = row_g[j];
-                    m_buf[k] = beta_m * (ri_m * c_m[j] * s) + one_m * gij;
-                    v_buf[k] = beta_v * (ri_v * c_v[j]) + one_v * gij * gij;
-                }
-                // Phase 2: sign capture (integer bit chain, no FP).
-                let mut new_bits = 0u64;
-                for (k, &mk) in m_buf[..len].iter().enumerate() {
-                    new_bits |= ((mk > 0.0) as u64) << k;
-                }
-                sign.set_chunk64(base + j0, new_bits, len);
-                // Phase 3 (vectorizable): update term + parameter write;
-                // |M| computed once and reused by both reductions.
-                for k in 0..len {
-                    let j = j0 + k;
-                    row_p[j] -= lr * (m_buf[k] / (v_buf[k].sqrt() + eps));
-                    m_buf[k] = m_buf[k].abs();
-                    acc_cm[j] += m_buf[k];
-                    acc_cv[j] += v_buf[k];
-                }
-                // Phase 4: row reductions with 4-way partials (breaks the
-                // serial FP dependence chain).
-                let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0, 0.0, 0.0);
-                let (mut b0, mut b1, mut b2, mut b3) = (0.0f32, 0.0, 0.0, 0.0);
-                let mut k = 0;
-                while k + 4 <= len {
-                    a0 += m_buf[k];
-                    a1 += m_buf[k + 1];
-                    a2 += m_buf[k + 2];
-                    a3 += m_buf[k + 3];
-                    b0 += v_buf[k];
-                    b1 += v_buf[k + 1];
-                    b2 += v_buf[k + 2];
-                    b3 += v_buf[k + 3];
-                    k += 4;
-                }
-                while k < len {
-                    a0 += m_buf[k];
-                    b0 += v_buf[k];
-                    k += 1;
-                }
-                rsum_m += (a0 + a1) + (a2 + a3);
-                rsum_v += (b0 + b1) + (b2 + b3);
-                j0 += len;
-            }
-            r_m[i] = rsum_m;
-            r_v[i] = rsum_v;
+    /// Parallel fused path: dispatch the shard plan over the worker pool,
+    /// then reduce the per-item column partials in fixed item order.
+    fn step_parallel(&mut self, params: &mut [Tensor], grads: &[Tensor], beta_m: f32, beta_v: f32) {
+        enum Task<'a> {
+            Factored {
+                p: &'a mut [f32],
+                g: &'a [f32],
+                rows: usize,
+                m: usize,
+                r_m: &'a mut [f32],
+                r_v: &'a mut [f32],
+                c_m: &'a [f32],
+                c_v: &'a [f32],
+                sign: SignViewMut<'a>,
+                acc_cm: &'a mut [f32],
+                acc_cv: &'a mut [f32],
+                g_wd: &'a mut Vec<f32>,
+            },
+            Dense {
+                p: &'a mut [f32],
+                g: &'a [f32],
+                mom: &'a mut [f32],
+                vel: &'a mut [f32],
+                g_wd: &'a mut Vec<f32>,
+            },
         }
-        c_m.copy_from_slice(acc_cm);
-        c_v.copy_from_slice(acc_cv);
-        nnmf::normalize_side(n, m, r_m, c_m);
-        nnmf::normalize_side(n, m, r_v, c_v);
+
+        let plan = &self.plan;
+        let states = &mut self.states;
+        let item_scratch = &mut self.item_scratch;
+        let (lr, eps, wd, wd_mode) =
+            (self.cfg.lr, self.cfg.eps1, self.cfg.weight_decay, self.cfg.weight_decay_mode);
+
+        {
+            let mut tasks: Vec<Task<'_>> = Vec::with_capacity(plan.n_items());
+            let mut scratch_iter = item_scratch.iter_mut();
+            for (idx, ((param, grad), state)) in
+                params.iter_mut().zip(grads).zip(states.iter_mut()).enumerate()
+            {
+                debug_assert_eq!(param.numel(), grad.numel());
+                let items = plan.items_of(idx);
+                let p_full = param.data_mut();
+                let g_full = grad.data();
+                match state {
+                    State::Factored { m, r_m, c_m, sign, r_v, c_v, .. } => {
+                        let m = *m;
+                        let p_parts = parallel::split_rows_mut(p_full, items, m);
+                        let rm_parts = parallel::split_rows_mut(r_m, items, 1);
+                        let rv_parts = parallel::split_rows_mut(r_v, items, 1);
+                        let sign_views = sign.views_mut(items, m);
+                        let c_m_ro: &[f32] = c_m;
+                        let c_v_ro: &[f32] = c_v;
+                        for ((((it, p), rm), rv), sv) in items
+                            .iter()
+                            .zip(p_parts)
+                            .zip(rm_parts)
+                            .zip(rv_parts)
+                            .zip(sign_views)
+                        {
+                            let scr = scratch_iter.next().expect("one scratch per item");
+                            tasks.push(Task::Factored {
+                                p,
+                                g: &g_full[it.row0 * m..it.row1 * m],
+                                rows: it.row1 - it.row0,
+                                m,
+                                r_m: rm,
+                                r_v: rv,
+                                c_m: c_m_ro,
+                                c_v: c_v_ro,
+                                sign: sv,
+                                acc_cm: &mut scr.acc_cm,
+                                acc_cv: &mut scr.acc_cv,
+                                g_wd: &mut scr.g_wd,
+                            });
+                        }
+                    }
+                    State::Dense { m: mom, v: vel } => {
+                        let p_parts = parallel::split_rows_mut(p_full, items, 1);
+                        let m_parts = parallel::split_rows_mut(mom, items, 1);
+                        let v_parts = parallel::split_rows_mut(vel, items, 1);
+                        for (((it, p), mm), vv) in
+                            items.iter().zip(p_parts).zip(m_parts).zip(v_parts)
+                        {
+                            let scr = scratch_iter.next().expect("one scratch per item");
+                            tasks.push(Task::Dense {
+                                p,
+                                g: &g_full[it.row0..it.row1],
+                                mom: mm,
+                                vel: vv,
+                                g_wd: &mut scr.g_wd,
+                            });
+                        }
+                    }
+                }
+            }
+
+            let mut shards = parallel::into_shards(plan, vec![(); plan.n_shards()], tasks);
+            parallel::run_shards(&mut shards, |_, task| match task {
+                Task::Factored { p, g, rows, m, r_m, r_v, c_m, c_v, sign, acc_cm, acc_cv, g_wd } => {
+                    let g = effective_grad(p, g, wd, wd_mode, lr, g_wd);
+                    fused_rows(
+                        p, g, *rows, *m, r_m, c_m, sign, r_v, c_v, beta_m, beta_v, lr, eps,
+                        acc_cm, acc_cv,
+                    );
+                }
+                Task::Dense { p, g, mom, vel, g_wd } => {
+                    let g = effective_grad(p, g, wd, wd_mode, lr, g_wd);
+                    dense_update(p, g, mom, vel, beta_m, beta_v, lr, eps);
+                }
+            });
+        }
+
+        // Reduce the per-item column partials in fixed (tensor, row0)
+        // order — deterministic for a fixed shard plan — then fold into
+        // the factors and normalize.
+        let mut item_idx = 0usize;
+        for (idx, state) in states.iter_mut().enumerate() {
+            let n_items = plan.items_of(idx).len();
+            if let State::Factored { n, m, r_m, c_m, r_v, c_v, .. } = state {
+                let (n, m) = (*n, *m);
+                let cm_acc = &mut self.scratch_cm[..m];
+                let cv_acc = &mut self.scratch_cv[..m];
+                cm_acc.copy_from_slice(&item_scratch[item_idx].acc_cm);
+                cv_acc.copy_from_slice(&item_scratch[item_idx].acc_cv);
+                for scr in &item_scratch[item_idx + 1..item_idx + n_items] {
+                    for j in 0..m {
+                        cm_acc[j] += scr.acc_cm[j];
+                        cv_acc[j] += scr.acc_cv[j];
+                    }
+                }
+                c_m.copy_from_slice(cm_acc);
+                c_v.copy_from_slice(cv_acc);
+                nnmf::normalize_side(n, m, r_m, c_m);
+                nnmf::normalize_side(n, m, r_v, c_v);
+            }
+            item_idx += n_items;
+        }
     }
 
     /// Literal Algorithms 1/3/4 with materialized M, V (differential
@@ -313,8 +515,14 @@ impl Smmf {
         let mut g_wd: Vec<f32> = Vec::new();
         for (idx, (param, grad)) in params.iter_mut().zip(grads).enumerate() {
             let p = param.data_mut();
-            let use_wd = Self::apply_weight_decay(&cfg, p, grad.data(), &mut g_wd);
-            let g: &[f32] = if use_wd { &g_wd } else { grad.data() };
+            let g = effective_grad(
+                p,
+                grad.data(),
+                cfg.weight_decay,
+                cfg.weight_decay_mode,
+                cfg.lr,
+                &mut g_wd,
+            );
             match &mut self.states[idx] {
                 State::Factored { n, m, r_m, c_m, sign, r_v, c_v } => {
                     let (n, m) = (*n, *m);
@@ -387,6 +595,145 @@ impl Smmf {
     }
 }
 
+/// The fused decompress→update→compress kernel over a contiguous row
+/// range of one matricized tensor (`rows` rows of `m` columns). Column
+/// factors are read-only inputs; the caller owns the column-accumulator
+/// reduction and `normalize_side`. This single kernel serves both the
+/// serial path (one range covering all rows) and the parallel path (one
+/// range per work item), so the two compute identical per-row arithmetic.
+#[allow(clippy::too_many_arguments)]
+fn fused_rows(
+    p: &mut [f32],
+    g: &[f32],
+    rows: usize,
+    m: usize,
+    r_m: &mut [f32],
+    c_m: &[f32],
+    sign: &mut SignViewMut<'_>,
+    r_v: &mut [f32],
+    c_v: &[f32],
+    beta_m: f32,
+    beta_v: f32,
+    lr: f32,
+    eps: f32,
+    acc_cm: &mut [f32],
+    acc_cv: &mut [f32],
+) {
+    debug_assert_eq!(p.len(), rows * m);
+    debug_assert_eq!(g.len(), rows * m);
+    let one_m = 1.0 - beta_m;
+    let one_v = 1.0 - beta_v;
+    let acc_cm = &mut acc_cm[..m];
+    let acc_cv = &mut acc_cv[..m];
+    acc_cm.iter_mut().for_each(|x| *x = 0.0);
+    acc_cv.iter_mut().for_each(|x| *x = 0.0);
+
+    for i in 0..rows {
+        let ri_m = r_m[i];
+        let ri_v = r_v[i];
+        let row_p = &mut p[i * m..(i + 1) * m];
+        let row_g = &g[i * m..(i + 1) * m];
+        let mut rsum_m = 0.0f32;
+        let mut rsum_v = 0.0f32;
+        let base = i * m;
+        // Perf (§Perf in EXPERIMENTS.md): process 64-column chunks so
+        // the sign matrix is touched one word at a time, and keep the
+        // arithmetic branchless (sign via ±1 multiplier, bit build via
+        // bool cast) so the compiler can vectorize the FP work.
+        let mut m_buf = [0.0f32; 64];
+        let mut v_buf = [0.0f32; 64];
+        let mut j0 = 0;
+        while j0 < m {
+            let len = (m - j0).min(64);
+            let old_bits = sign.get_chunk64(base + j0, len);
+            // Phase 1 (vectorizable): decompress M̂/V̂ from the factors
+            // (sign-restored; bit=1 means positive) and apply the
+            // moment update with the intact gradient
+            // (decompression→compression scheme, §3.2).
+            for k in 0..len {
+                let j = j0 + k;
+                let s = f32::from_bits(
+                    0x3f80_0000 | ((((old_bits >> k) & 1) ^ 1) as u32) << 31,
+                );
+                let gij = row_g[j];
+                m_buf[k] = beta_m * (ri_m * c_m[j] * s) + one_m * gij;
+                v_buf[k] = beta_v * (ri_v * c_v[j]) + one_v * gij * gij;
+            }
+            // Phase 2: sign capture (integer bit chain, no FP).
+            let mut new_bits = 0u64;
+            for (k, &mk) in m_buf[..len].iter().enumerate() {
+                new_bits |= ((mk > 0.0) as u64) << k;
+            }
+            sign.set_chunk64(base + j0, new_bits, len);
+            // Phase 3 (vectorizable): update term + parameter write;
+            // |M| computed once and reused by both reductions.
+            for k in 0..len {
+                let j = j0 + k;
+                row_p[j] -= lr * (m_buf[k] / (v_buf[k].sqrt() + eps));
+                m_buf[k] = m_buf[k].abs();
+                acc_cm[j] += m_buf[k];
+                acc_cv[j] += v_buf[k];
+            }
+            // Phase 4: row reductions with 4-way partials (breaks the
+            // serial FP dependence chain).
+            let (mut a0, mut a1, mut a2, mut a3) = (0.0f32, 0.0, 0.0, 0.0);
+            let (mut b0, mut b1, mut b2, mut b3) = (0.0f32, 0.0, 0.0, 0.0);
+            let mut k = 0;
+            while k + 4 <= len {
+                a0 += m_buf[k];
+                a1 += m_buf[k + 1];
+                a2 += m_buf[k + 2];
+                a3 += m_buf[k + 3];
+                b0 += v_buf[k];
+                b1 += v_buf[k + 1];
+                b2 += v_buf[k + 2];
+                b3 += v_buf[k + 3];
+                k += 4;
+            }
+            while k < len {
+                a0 += m_buf[k];
+                b0 += v_buf[k];
+                k += 1;
+            }
+            rsum_m += (a0 + a1) + (a2 + a3);
+            rsum_v += (b0 + b1) + (b2 + b3);
+            j0 += len;
+        }
+        r_m[i] = rsum_m;
+        r_v[i] = rsum_v;
+    }
+}
+
+/// Weight decay over one chunk, shared by every step path (serial and
+/// naive: the whole tensor; parallel: one work item's rows — identical
+/// element arithmetic either way). AdamW decay scales the parameters in
+/// place and returns the gradient unchanged; Adam-coupled decay
+/// materializes the effective gradient into the caller's reusable buffer.
+fn effective_grad<'a>(
+    p: &mut [f32],
+    g: &'a [f32],
+    wd: f32,
+    mode: WeightDecayMode,
+    lr: f32,
+    g_wd: &'a mut Vec<f32>,
+) -> &'a [f32] {
+    if wd == 0.0 {
+        return g;
+    }
+    match mode {
+        WeightDecayMode::Adam => {
+            g_wd.clear();
+            g_wd.extend(g.iter().zip(p.iter()).map(|(&gij, &w)| gij + wd * w));
+            g_wd
+        }
+        WeightDecayMode::AdamW => {
+            let f = 1.0 - lr * wd;
+            p.iter_mut().for_each(|w| *w *= f);
+            g
+        }
+    }
+}
+
 fn dense_update(
     p: &mut [f32],
     g: &[f32],
@@ -413,43 +760,10 @@ impl Optimizer for Smmf {
         assert_eq!(params.len(), self.states.len());
         self.t += 1;
         let (beta_m, beta_v) = self.betas(self.t);
-        let cfg = self.cfg.clone();
-        let mut g_wd: Vec<f32> = Vec::new();
-        for (idx, (param, grad)) in params.iter_mut().zip(grads).enumerate() {
-            debug_assert_eq!(param.numel(), grad.numel());
-            let p = param.data_mut();
-            let use_wd = Self::apply_weight_decay(&cfg, p, grad.data(), &mut g_wd);
-            let g: &[f32] = if use_wd { &g_wd } else { grad.data() };
-            match &mut self.states[idx] {
-                State::Factored { n, m, r_m, c_m, sign, r_v, c_v } => {
-                    let g: &[f32] = if cfg.smmf_scheme == SmmfScheme::CompressFirst {
-                        Self::compress_then_decompress(g, *n, *m, &mut self.scratch_mat);
-                        &self.scratch_mat
-                    } else {
-                        g
-                    };
-                    Self::step_factored_fused(
-                        p,
-                        g,
-                        *n,
-                        *m,
-                        r_m,
-                        c_m,
-                        sign,
-                        r_v,
-                        c_v,
-                        beta_m,
-                        beta_v,
-                        cfg.lr,
-                        cfg.eps1,
-                        &mut self.scratch_cm,
-                        &mut self.scratch_cv,
-                    );
-                }
-                State::Dense { m, v } => {
-                    dense_update(p, g, m, v, beta_m, beta_v, cfg.lr, cfg.eps1);
-                }
-            }
+        if self.item_scratch.is_empty() {
+            self.step_serial(params, grads, beta_m, beta_v);
+        } else {
+            self.step_parallel(params, grads, beta_m, beta_v);
         }
     }
 
@@ -462,10 +776,20 @@ impl Optimizer for Smmf {
     }
 
     fn scratch_bytes(&self) -> u64 {
+        let items: usize = self
+            .item_scratch
+            .iter()
+            .map(|s| s.acc_cm.len() + s.acc_cv.len() + s.g_wd.len())
+            .sum();
         (4 * (self.scratch_cm.len()
             + self.scratch_cv.len()
             + self.scratch_mat.len()
-            + self.scratch_mat2.len())) as u64
+            + self.scratch_mat2.len()
+            + items)) as u64
+    }
+
+    fn partition(&self) -> Option<&ParamPartition> {
+        Some(&self.plan)
     }
 }
 
@@ -516,6 +840,71 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn parallel_matches_serial_trajectory() {
+        // threads = 4 vs threads = 1 over random shapes: the parallel
+        // engine only changes the column-partial reduction order, so
+        // trajectories agree to tight FP tolerance.
+        prop::cases(15, |rng| {
+            let n_tensors = 1 + rng.below(3);
+            let shapes: Vec<Vec<usize>> =
+                (0..n_tensors).map(|_| prop::gen_shape(rng, 4, 4096)).collect();
+            let cfg1 = OptimConfig {
+                lr: 0.01,
+                weight_decay: 0.01,
+                ..OptimConfig::paper_defaults(super::super::OptKind::Smmf)
+            };
+            let cfg4 = OptimConfig { threads: 4, ..cfg1.clone() };
+            let mut serial = Smmf::new(&shapes, &cfg1);
+            let mut par = Smmf::new(&shapes, &cfg4);
+            let mut p1 = rand_tensors(rng, &shapes, 1.0);
+            let mut p4 = p1.clone();
+            for _ in 0..3 {
+                let grads = rand_tensors(rng, &shapes, 1.0);
+                serial.step(&mut p1, &grads);
+                par.step(&mut p4, &grads);
+                for (a, b) in p1.iter().zip(&p4) {
+                    for (x, y) in a.data().iter().zip(b.data()) {
+                        assert!(
+                            (x - y).abs() <= 1e-6 * x.abs().max(1.0),
+                            "serial {x} vs parallel {y}"
+                        );
+                    }
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn parallel_bit_exact_across_thread_counts() {
+        // The shard plan's item boundaries are thread-count independent,
+        // and partials reduce in fixed item order: any threads >= 2 are
+        // bit-identical (the "fixed shard plan" guarantee). Exercised on
+        // a big-enough matrix that the plan really splits intra-tensor.
+        let shapes = vec![vec![1536, 1536], vec![128, 64], vec![7]];
+        let mut rng = Pcg32::new(42);
+        let p0 = rand_tensors(&mut rng, &shapes, 1.0);
+        let grads: Vec<Vec<Tensor>> =
+            (0..3).map(|_| rand_tensors(&mut rng, &shapes, 1.0)).collect();
+        let mut results = Vec::new();
+        for threads in [2usize, 4, 8] {
+            let cfg = OptimConfig {
+                lr: 0.01,
+                threads,
+                ..OptimConfig::paper_defaults(super::super::OptKind::Smmf)
+            };
+            let mut opt = Smmf::new(&shapes, &cfg);
+            assert!(opt.plan.items_of(0).len() > 1, "plan must split the 1536x1536 tensor");
+            let mut p = p0.clone();
+            for g in &grads {
+                opt.step(&mut p, g);
+            }
+            results.push(p);
+        }
+        assert_eq!(results[0], results[1], "threads=2 vs threads=4");
+        assert_eq!(results[1], results[2], "threads=4 vs threads=8");
     }
 
     #[test]
@@ -717,5 +1106,16 @@ mod tests {
         opt.step(&mut p, &g);
         // Fused path scratch: 2 column accumulators only.
         assert_eq!(opt.scratch_bytes(), 2 * 512 * 4);
+    }
+
+    #[test]
+    fn sign_row_alignment_lands_on_word_edges() {
+        // For the 1-bit store, a row boundary at any multiple of
+        // row_align must be a 64-bit word edge.
+        for m in [1usize, 3, 17, 48, 64, 100, 1000, 4608] {
+            let a = SignStore::row_align(SignMode::Bit1, m);
+            assert_eq!((a * m) % 64, 0, "m={m} align={a}");
+            assert_eq!(SignStore::row_align(SignMode::Byte8, m), 1);
+        }
     }
 }

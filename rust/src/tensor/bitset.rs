@@ -5,6 +5,39 @@
 //! largest component of SMMF's optimizer memory and must actually be
 //! bit-packed for the memory tables to mean anything.
 
+/// Read up to 64 bits starting at bit `start` from a packed word slice
+/// (bits beyond the slice read as zero). Shared by [`BitMatrix`] and the
+/// SMMF sign-view hot path, so the word/offset arithmetic lives once.
+#[inline]
+pub fn word_chunk_get64(words: &[u64], start: usize) -> u64 {
+    let w = start >> 6;
+    let o = start & 63;
+    let lo = words.get(w).copied().unwrap_or(0) >> o;
+    if o == 0 {
+        lo
+    } else {
+        let hi = words.get(w + 1).copied().unwrap_or(0) << (64 - o);
+        lo | hi
+    }
+}
+
+/// Write `len` (1..=64) bits starting at bit `start` into a packed word
+/// slice. The target words (including any spill word) must be in bounds.
+#[inline]
+pub fn word_chunk_set64(words: &mut [u64], start: usize, bits: u64, len: usize) {
+    debug_assert!(len >= 1 && len <= 64);
+    let mask = if len == 64 { u64::MAX } else { (1u64 << len) - 1 };
+    let bits = bits & mask;
+    let w = start >> 6;
+    let o = start & 63;
+    words[w] = (words[w] & !(mask << o)) | (bits << o);
+    let spill = (o + len).saturating_sub(64);
+    if spill > 0 {
+        let hi_mask = (1u64 << spill) - 1;
+        words[w + 1] = (words[w + 1] & !hi_mask) | (bits >> (len - spill));
+    }
+}
+
 /// Row-major packed bit matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct BitMatrix {
@@ -71,32 +104,14 @@ impl BitMatrix {
     /// replaces 64 `get` calls.
     #[inline]
     pub fn get_chunk64(&self, start: usize) -> u64 {
-        let w = start >> 6;
-        let o = start & 63;
-        let lo = self.words.get(w).copied().unwrap_or(0) >> o;
-        if o == 0 {
-            lo
-        } else {
-            let hi = self.words.get(w + 1).copied().unwrap_or(0) << (64 - o);
-            lo | hi
-        }
+        word_chunk_get64(&self.words, start)
     }
 
     /// Write `len` (<= 64) bits starting at bit `start`.
     #[inline]
     pub fn set_chunk64(&mut self, start: usize, bits: u64, len: usize) {
-        debug_assert!(len >= 1 && len <= 64);
         debug_assert!(start + len <= self.nbits().next_multiple_of(64));
-        let mask = if len == 64 { u64::MAX } else { (1u64 << len) - 1 };
-        let bits = bits & mask;
-        let w = start >> 6;
-        let o = start & 63;
-        self.words[w] = (self.words[w] & !(mask << o)) | (bits << o);
-        let spill = (o + len).saturating_sub(64);
-        if spill > 0 {
-            let hi_mask = (1u64 << spill) - 1;
-            self.words[w + 1] = (self.words[w + 1] & !hi_mask) | (bits >> (len - spill));
-        }
+        word_chunk_set64(&mut self.words, start, bits, len);
     }
 
     /// Raw words (for checkpointing).

@@ -7,7 +7,7 @@
 
 mod bitset;
 
-pub use bitset::BitMatrix;
+pub use bitset::{word_chunk_get64, word_chunk_set64, BitMatrix};
 
 /// A dense, contiguous, row-major f32 tensor.
 #[derive(Clone, Debug, PartialEq)]

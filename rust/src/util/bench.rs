@@ -3,8 +3,16 @@
 //! Warms up, auto-scales iteration counts to a target measurement time,
 //! reports median / mean / p10 / p90 over sample batches, and prints
 //! criterion-like one-line summaries. Used by `rust/benches/*`.
+//!
+//! [`JsonSink`] additionally emits a machine-readable report (one record
+//! per measurement: model, optimizer, thread count, median/p10/p90/mean
+//! nanoseconds) so the perf trajectory is tracked across PRs — wire it
+//! up with `SMMF_BENCH_JSON=<path>`.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use super::json::{Json, ObjBuilder};
 
 #[derive(Clone, Debug)]
 pub struct BenchStats {
@@ -106,6 +114,79 @@ impl Bencher {
     }
 }
 
+/// Machine-readable bench report writer (`BENCH_*.json`).
+///
+/// Collects one record per measurement and serializes
+/// `{ "benchmark": ..., "records": [...] }` with the in-tree JSON
+/// writer. Records carry the model, optimizer, engine thread count and
+/// median/p10/p90/mean nanoseconds, so successive PRs can diff the perf
+/// trajectory mechanically.
+pub struct JsonSink {
+    benchmark: String,
+    path: PathBuf,
+    records: Vec<Json>,
+}
+
+impl JsonSink {
+    pub fn new(benchmark: &str, path: impl AsRef<Path>) -> JsonSink {
+        JsonSink {
+            benchmark: benchmark.to_string(),
+            path: path.as_ref().to_path_buf(),
+            records: Vec::new(),
+        }
+    }
+
+    /// Construct from an environment variable holding the output path
+    /// (e.g. `SMMF_BENCH_JSON=BENCH_optimizer_step.json`); `None` when
+    /// the variable is unset or empty.
+    pub fn from_env(benchmark: &str, var: &str) -> Option<JsonSink> {
+        match std::env::var(var) {
+            Ok(path) if !path.is_empty() => Some(JsonSink::new(benchmark, path)),
+            _ => None,
+        }
+    }
+
+    /// Record one measurement.
+    pub fn record(&mut self, model: &str, optimizer: &str, threads: usize, stats: &BenchStats) {
+        let ns = |d: Duration| d.as_secs_f64() * 1e9;
+        self.records.push(
+            ObjBuilder::new()
+                .str("name", &stats.name)
+                .str("model", model)
+                .str("optimizer", optimizer)
+                .num("threads", threads as f64)
+                .num("median_ns", ns(stats.median))
+                .num("p10_ns", ns(stats.p10))
+                .num("p90_ns", ns(stats.p90))
+                .num("mean_ns", ns(stats.mean))
+                .num("iters_per_sample", stats.iters_per_sample as f64)
+                .num("samples", stats.samples.len() as f64)
+                .build(),
+        );
+    }
+
+    pub fn len(&self) -> usize {
+        self.records.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.records.is_empty()
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Serialize and write the report.
+    pub fn write(&self) -> std::io::Result<()> {
+        let doc = ObjBuilder::new()
+            .str("benchmark", &self.benchmark)
+            .val("records", Json::Arr(self.records.clone()))
+            .build();
+        std::fs::write(&self.path, doc.to_string() + "\n")
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -130,5 +211,27 @@ mod tests {
         assert!(stats.mean > Duration::ZERO);
         assert_eq!(stats.samples.len(), 3);
         assert!(stats.p10 <= stats.p90);
+    }
+
+    #[test]
+    fn json_sink_roundtrips() {
+        let b = Bencher {
+            warmup: Duration::from_millis(2),
+            target_sample: Duration::from_millis(1),
+            samples: 2,
+        };
+        let stats = b.bench("mobilenet_v2_imagenet/smmf", || std::hint::black_box(1 + 1));
+        let path = std::env::temp_dir().join(format!("smmf_bench_{}.json", std::process::id()));
+        let mut sink = JsonSink::new("optimizer_step", &path);
+        sink.record("mobilenet_v2_imagenet", "smmf", 4, &stats);
+        assert_eq!(sink.len(), 1);
+        sink.write().unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("benchmark").and_then(Json::as_str), Some("optimizer_step"));
+        let rec = &parsed.get("records").and_then(Json::as_arr).unwrap()[0];
+        assert_eq!(rec.get("optimizer").and_then(Json::as_str), Some("smmf"));
+        assert_eq!(rec.get("threads").and_then(Json::as_f64), Some(4.0));
+        assert!(rec.get("median_ns").and_then(Json::as_f64).unwrap() >= 0.0);
+        std::fs::remove_file(&path).unwrap();
     }
 }

@@ -56,6 +56,12 @@ impl Args {
         self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Like [`Args::usize_or`] but clamped to >= 1 — for count knobs
+    /// where 0 is meaningless (`--threads`, `--workers`).
+    pub fn positive_usize_or(&self, key: &str, default: usize) -> usize {
+        self.usize_or(key, default).max(1)
+    }
+
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
@@ -97,5 +103,13 @@ mod tests {
         let a = parse("");
         assert!(a.command.is_none());
         assert_eq!(a.str_or("x", "d"), "d");
+    }
+
+    #[test]
+    fn positive_usize_clamps_zero() {
+        let a = parse("run --threads 0 --workers 4");
+        assert_eq!(a.positive_usize_or("threads", 1), 1);
+        assert_eq!(a.positive_usize_or("workers", 1), 4);
+        assert_eq!(a.positive_usize_or("absent", 3), 3);
     }
 }

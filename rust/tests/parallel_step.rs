@@ -1,0 +1,193 @@
+//! Differential tests for the parallel optimizer step engine: for every
+//! optimizer in the suite, `threads = N` must reproduce `threads = 1`.
+//!
+//! * Elementwise and tensor-granular optimizers (Adam/AdamW, SGD,
+//!   Adafactor, CAME, SM3, SMMF's dense fallback): bit-exact.
+//! * SMMF's factored fused path: bit-exact across any `threads >= 2`
+//!   (fixed shard plan — item boundaries are thread-count independent),
+//!   and within 1e-6 relative of `threads = 1` (the serial path folds
+//!   the column accumulators in a single pass, so only the FP reduction
+//!   order differs).
+
+use smmf_repro::optim::{self, OptKind, OptimConfig, SignMode};
+use smmf_repro::tensor::Tensor;
+use smmf_repro::util::rng::Pcg32;
+
+fn rand_tensors(rng: &mut Pcg32, shapes: &[Vec<usize>], scale: f32) -> Vec<Tensor> {
+    shapes
+        .iter()
+        .map(|s| {
+            let mut t = Tensor::zeros(s);
+            rng.fill_normal(t.data_mut(), scale);
+            t
+        })
+        .collect()
+}
+
+/// Rank-1 / rank-2 / rank-4 shapes next to 1-element biases — the
+/// adversarial mix the partition planner must cover exactly once.
+fn shapes() -> Vec<Vec<usize>> {
+    vec![
+        vec![2048],          // rank 1
+        vec![1],             // 1-element bias
+        vec![96, 80],        // rank 2
+        vec![17, 3],         // odd rank 2
+        vec![16, 8, 3, 3],   // rank 4 (conv-like)
+        vec![4, 4, 1, 1],    // 1x1 conv pathology
+        vec![257],           // prime length vector
+    ]
+}
+
+fn run_trajectory(kind: OptKind, cfg: &OptimConfig, steps: usize) -> Vec<Tensor> {
+    let shapes = shapes();
+    let mut rng = Pcg32::new(0xabcd);
+    let mut params = rand_tensors(&mut rng, &shapes, 0.5);
+    let mut opt = optim::build(kind, &shapes, cfg);
+    assert!(opt.partition().is_some(), "{}: no shard plan", kind.name());
+    for _ in 0..steps {
+        let grads = rand_tensors(&mut rng, &shapes, 0.1);
+        opt.step(&mut params, &grads);
+    }
+    params
+}
+
+fn assert_close(kind: OptKind, a: &[Tensor], b: &[Tensor], tol: f32) {
+    for (ta, tb) in a.iter().zip(b) {
+        for (x, y) in ta.data().iter().zip(tb.data()) {
+            assert!(
+                (x - y).abs() <= tol * x.abs().max(1.0),
+                "{}: {x} vs {y} (tol {tol})",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn every_optimizer_matches_serial_under_threads() {
+    let kinds = [
+        OptKind::Sgd,
+        OptKind::Adam,
+        OptKind::AdamW,
+        OptKind::Adafactor,
+        OptKind::Sm3,
+        OptKind::Came,
+        OptKind::Smmf,
+    ];
+    for kind in kinds {
+        let base = OptimConfig {
+            lr: 0.01,
+            weight_decay: 0.01,
+            relative_step: false,
+            ..OptimConfig::paper_defaults(kind)
+        };
+        let serial = run_trajectory(kind, &base, 3);
+        for threads in [2usize, 4, 8] {
+            let par = run_trajectory(kind, &OptimConfig { threads, ..base.clone() }, 3);
+            if kind == OptKind::Smmf {
+                // Factored path: reduction-order tolerance vs serial...
+                assert_close(kind, &serial, &par, 1e-6);
+            } else {
+                // ...everything else is bit-exact.
+                assert_eq!(serial, par, "{} threads={threads}", kind.name());
+            }
+        }
+    }
+}
+
+#[test]
+fn smmf_parallel_bit_exact_for_fixed_plan() {
+    // Item boundaries are thread-count independent, so every threads >= 2
+    // executes the same shard plan and must agree bit-for-bit.
+    for sign_mode in [SignMode::Bit1, SignMode::Byte8] {
+        for vector_reshape in [true, false] {
+            let mk = |threads: usize| OptimConfig {
+                lr: 0.01,
+                weight_decay: 0.01,
+                smmf_sign_mode: sign_mode,
+                vector_reshape,
+                threads,
+                ..OptimConfig::paper_defaults(OptKind::Smmf)
+            };
+            let t2 = run_trajectory(OptKind::Smmf, &mk(2), 3);
+            let t4 = run_trajectory(OptKind::Smmf, &mk(4), 3);
+            let t8 = run_trajectory(OptKind::Smmf, &mk(8), 3);
+            assert_eq!(t2, t4, "sign={sign_mode:?} vr={vector_reshape}");
+            assert_eq!(t4, t8, "sign={sign_mode:?} vr={vector_reshape}");
+        }
+    }
+}
+
+#[test]
+fn smmf_variants_match_serial_under_threads() {
+    // Both sign widths and the dense rank-1 fallback, vs threads = 1.
+    // The dense fallback is elementwise, so with vector_reshape = false
+    // the rank-1 tensors are bit-exact; factored tensors stay within
+    // reduction-order tolerance.
+    for sign_mode in [SignMode::Bit1, SignMode::Byte8] {
+        for vector_reshape in [true, false] {
+            let mk = |threads: usize| OptimConfig {
+                lr: 0.01,
+                smmf_sign_mode: sign_mode,
+                vector_reshape,
+                threads,
+                ..OptimConfig::paper_defaults(OptKind::Smmf)
+            };
+            let serial = run_trajectory(OptKind::Smmf, &mk(1), 3);
+            let par = run_trajectory(OptKind::Smmf, &mk(4), 3);
+            assert_close(OptKind::Smmf, &serial, &par, 1e-6);
+        }
+    }
+}
+
+#[test]
+fn state_accounting_is_thread_invariant() {
+    // The engine adds transient scratch, never persistent state: the
+    // paper's memory tables must not depend on the thread count.
+    let shapes = shapes();
+    for kind in OptKind::all() {
+        let cfg1 = OptimConfig::paper_defaults(kind);
+        let cfg4 = OptimConfig { threads: 4, ..OptimConfig::paper_defaults(kind) };
+        let o1 = optim::build(kind, &shapes, &cfg1);
+        let o4 = optim::build(kind, &shapes, &cfg4);
+        assert_eq!(o1.state_bytes(), o4.state_bytes(), "{}", kind.name());
+    }
+}
+
+#[test]
+fn quadratic_minimization_still_works_parallel() {
+    // The mod.rs smoke test, under the engine: every optimizer reduces a
+    // convex quadratic with threads = 4.
+    let shapes = vec![vec![4, 3], vec![6]];
+    for kind in OptKind::all() {
+        let cfg = OptimConfig {
+            lr: 0.05,
+            relative_step: false,
+            threads: 4,
+            ..OptimConfig::paper_defaults(kind)
+        };
+        let mut opt = optim::build(kind, &shapes, &cfg);
+        let mut params: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| {
+                let n: usize = s.iter().product();
+                Tensor::from_vec(s, (0..n).map(|i| 1.0 + (i % 3) as f32).collect())
+            })
+            .collect();
+        let loss = |ps: &[Tensor]| -> f64 { ps.iter().map(|p| p.sq_norm()).sum() };
+        let initial = loss(&params);
+        for _ in 0..1500 {
+            let grads: Vec<Tensor> = params
+                .iter()
+                .map(|p| {
+                    let mut g = p.clone();
+                    g.scale(2.0);
+                    g
+                })
+                .collect();
+            opt.step(&mut params, &grads);
+        }
+        let fin = loss(&params);
+        assert!(fin < initial * 0.1, "{}: {initial} -> {fin}", kind.name());
+    }
+}

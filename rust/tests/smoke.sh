@@ -1,0 +1,25 @@
+#!/usr/bin/env bash
+# Pre-merge smoke: build, test, and quick-bench the optimizer suite so
+# regressions in the fused/parallel step paths are caught before merge.
+#
+#   bash rust/tests/smoke.sh            # from the repo root
+#   make smoke                          # equivalent
+#
+# The quick bench also refreshes BENCH_optimizer_step.json (the perf
+# trajectory tracked across PRs) unless SMMF_BENCH_JSON overrides the
+# output path.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."   # rust/
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== quick bench (SMMF_BENCH_QUICK=1) =="
+SMMF_BENCH_JSON="${SMMF_BENCH_JSON:-../BENCH_optimizer_step.json}" \
+SMMF_BENCH_QUICK=1 cargo bench --bench optimizer_step
+
+echo "smoke OK"
