@@ -2,12 +2,14 @@
 #
 #   make build     release build of the Rust crate
 #   make test      full test suite
-#   make smoke     build + test + quick bench (refreshes BENCH_*.json);
-#                  run this before merging optimizer/engine changes
+#   make smoke     build + test + checkpoint-roundtrip + quick bench
+#                  (refreshes BENCH_*.json); run before merging
+#                  optimizer/engine/checkpoint changes
 #   make bench     full optimizer-step bench (slow)
+#   make docs      rustdoc for the crate, warnings-clean (--no-deps)
 #   make artifacts AOT-lower the JAX/Pallas graphs (needs python + jax)
 
-.PHONY: build test smoke bench artifacts
+.PHONY: build test smoke bench docs artifacts
 
 build:
 	cd rust && cargo build --release
@@ -20,6 +22,9 @@ smoke:
 
 bench:
 	cd rust && SMMF_BENCH_JSON=../BENCH_optimizer_step.json cargo bench --bench optimizer_step
+
+docs:
+	cd rust && RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
 
 artifacts:
 	python3 python/compile/aot.py

@@ -20,10 +20,11 @@
 //! perf trajectory is tracked across PRs.
 
 use smmf_repro::models::inventory_by_name;
-use smmf_repro::optim::{self, OptKind, OptimConfig, Optimizer, Smmf};
+use smmf_repro::optim::{self, memory, OptKind, OptimConfig, Optimizer, Smmf};
 use smmf_repro::tensor::Tensor;
 use smmf_repro::util::bench::{Bencher, JsonSink};
 use smmf_repro::util::fmt;
+use smmf_repro::util::json::ObjBuilder;
 use smmf_repro::util::rng::Pcg32;
 
 fn rand_tensors(shapes: &[Vec<usize>], seed: u64, scale: f32) -> Vec<Tensor> {
@@ -139,6 +140,44 @@ fn main() {
             fmt::bytes(fused.scratch_bytes()),
             fmt::bytes(naive.scratch_bytes()),
         );
+    }
+
+    // Checkpoint size: the on-disk optimizer-state section of a SMMFCKPT
+    // v2 checkpoint (native StateSerde serialization, analytic mirror in
+    // optim::memory) for SMMF vs Adam over the same inventories. The
+    // SMMF-vs-Adam ratio goes into the JSON trajectory; the paper's
+    // memory claim must carry over to disk (ratio well under 0.10).
+    println!("\n== Checkpoint size: optimizer-state section, SMMF vs Adam ==");
+    for name in models {
+        let inv = inventory_by_name(name).unwrap();
+        let shapes = inv.shapes();
+        let smmf_b = memory::inventory_checkpoint_bytes(
+            OptKind::Smmf,
+            &shapes,
+            &OptimConfig::paper_defaults(OptKind::Smmf),
+        );
+        let adam_b = memory::inventory_checkpoint_bytes(
+            OptKind::Adam,
+            &shapes,
+            &OptimConfig::paper_defaults(OptKind::Adam),
+        );
+        let ratio = smmf_b as f64 / adam_b as f64;
+        println!(
+            "{name:<28} smmf {:>12}  adam {:>12}  ratio {ratio:.4}",
+            fmt::bytes(smmf_b),
+            fmt::bytes(adam_b),
+        );
+        if let Some(s) = sink.as_mut() {
+            s.push(
+                ObjBuilder::new()
+                    .str("name", &format!("checkpoint_size/{name}"))
+                    .str("model", name)
+                    .num("smmf_ckpt_bytes", smmf_b as f64)
+                    .num("adam_ckpt_bytes", adam_b as f64)
+                    .num("smmf_vs_adam_ratio", ratio)
+                    .build(),
+            );
+        }
     }
 
     if let Some(s) = sink {

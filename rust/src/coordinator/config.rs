@@ -21,6 +21,12 @@ pub struct ExperimentConfig {
     pub out_dir: String,
     pub schedule: LrSchedule,
     pub workers: usize,
+    /// Resume from this `SMMFCKPT` checkpoint before training
+    /// (`--resume <path>` / `[train] resume = "..."`).
+    pub resume: Option<String>,
+    /// Write `runs/<name>/checkpoint.bin` every N steps and at the end
+    /// (0 = checkpointing off; `--save-every N` / `[train] save_every`).
+    pub save_every: u64,
 }
 
 impl Default for ExperimentConfig {
@@ -36,6 +42,8 @@ impl Default for ExperimentConfig {
             out_dir: "runs".into(),
             schedule: LrSchedule::Constant,
             workers: 1,
+            resume: None,
+            save_every: 0,
         }
     }
 }
@@ -56,11 +64,28 @@ impl ExperimentConfig {
         if let Some(k) = doc.get("optimizer.kind").and_then(|v| v.as_str()) {
             self.set_optimizer(k)?;
         }
-        self.steps = doc.i64_or("steps", self.steps as i64) as u64;
-        self.seed = doc.i64_or("seed", self.seed as i64) as u64;
-        self.log_every = doc.i64_or("log_every", self.log_every as i64) as u64;
-        self.out_dir = doc.str_or("out_dir", &self.out_dir).to_string();
-        self.workers = doc.i64_or("workers", self.workers as i64) as usize;
+        // Train-loop knobs are accepted both at the top level (the
+        // historical spelling) and grouped under `[train]` — whichever
+        // grouping the user picks, no key is silently ignored. The
+        // `[train]` spelling wins when both are present.
+        let i64_either = |key: &str, current: i64| -> i64 {
+            doc.i64_or(&format!("train.{key}"), doc.i64_or(key, current))
+        };
+        self.steps = i64_either("steps", self.steps as i64) as u64;
+        self.seed = i64_either("seed", self.seed as i64) as u64;
+        self.log_every = i64_either("log_every", self.log_every as i64) as u64;
+        self.workers = i64_either("workers", self.workers as i64) as usize;
+        self.save_every = i64_either("save_every", self.save_every as i64).max(0) as u64;
+        self.out_dir = doc
+            .get("train.out_dir")
+            .and_then(|v| v.as_str())
+            .unwrap_or_else(|| doc.str_or("out_dir", &self.out_dir))
+            .to_string();
+        if let Some(path) =
+            doc.get("train.resume").or_else(|| doc.get("resume")).and_then(|v| v.as_str())
+        {
+            self.resume = Some(path.to_string());
+        }
         let o = &mut self.optim;
         o.lr = doc.f64_or("optimizer.lr", o.lr as f64) as f32;
         o.beta1 = doc.f64_or("optimizer.beta1", o.beta1 as f64) as f32;
@@ -115,6 +140,10 @@ impl ExperimentConfig {
         self.log_every = args.u64_or("log-every", self.log_every);
         self.workers = args.positive_usize_or("workers", self.workers);
         self.out_dir = args.str_or("out-dir", &self.out_dir);
+        if let Some(path) = args.opt("resume") {
+            self.resume = Some(path.to_string());
+        }
+        self.save_every = args.u64_or("save-every", self.save_every);
         self.optim.threads = args.positive_usize_or("threads", self.optim.threads);
         self.optim.lr = args.f64_or("lr", self.optim.lr as f64) as f32;
         self.optim.weight_decay = args.f64_or("weight-decay", self.optim.weight_decay as f64) as f32;
@@ -182,6 +211,50 @@ mod tests {
         let args = Args::parse(["--threads", "0"].iter().map(|s| s.to_string()));
         cfg.apply_args(&args).unwrap();
         assert_eq!(cfg.optim.threads, 1);
+    }
+
+    #[test]
+    fn resume_and_save_every_plumb_through() {
+        let doc = TomlDoc::parse(
+            "[train]\nresume = \"runs/a/checkpoint.bin\"\nsave_every = 50",
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        assert!(cfg.resume.is_none());
+        assert_eq!(cfg.save_every, 0);
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.resume.as_deref(), Some("runs/a/checkpoint.bin"));
+        assert_eq!(cfg.save_every, 50);
+        // CLI overrides the TOML values.
+        let args = Args::parse(
+            ["--resume", "other.bin", "--save-every", "10"].iter().map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.resume.as_deref(), Some("other.bin"));
+        assert_eq!(cfg.save_every, 10);
+        // absent flags leave the config untouched
+        cfg.apply_args(&Args::parse(std::iter::empty::<String>())).unwrap();
+        assert_eq!(cfg.resume.as_deref(), Some("other.bin"));
+        assert_eq!(cfg.save_every, 10);
+        // Top-level spelling (next to steps/log_every) works too.
+        let doc = TomlDoc::parse("steps = 7\nresume = \"top.bin\"\nsave_every = 3").unwrap();
+        let mut cfg2 = ExperimentConfig::default();
+        cfg2.apply_toml(&doc).unwrap();
+        assert_eq!(cfg2.resume.as_deref(), Some("top.bin"));
+        assert_eq!(cfg2.save_every, 3);
+        assert_eq!(cfg2.steps, 7);
+        // ...and grouping the sibling knobs under [train] is honored,
+        // not silently ignored.
+        let doc = TomlDoc::parse(
+            "[train]\nsteps = 500\nlog_every = 25\nout_dir = \"runs2\"\nsave_every = 50",
+        )
+        .unwrap();
+        let mut cfg3 = ExperimentConfig::default();
+        cfg3.apply_toml(&doc).unwrap();
+        assert_eq!(cfg3.steps, 500);
+        assert_eq!(cfg3.log_every, 25);
+        assert_eq!(cfg3.out_dir, "runs2");
+        assert_eq!(cfg3.save_every, 50);
     }
 
     #[test]

@@ -71,6 +71,16 @@ impl CharLmDataset {
         self.tokens.len()
     }
 
+    /// Sampling-RNG snapshot for checkpointing: restoring it resumes the
+    /// exact window stream, making resumed training runs bit-identical.
+    pub fn rng_state(&self) -> (u64, u64) {
+        self.rng.state()
+    }
+
+    pub fn set_rng_state(&mut self, state: u64, inc: u64) {
+        self.rng = Pcg32::from_state(state, inc);
+    }
+
     /// Fill `(batch, seq)` inputs and next-char targets.
     pub fn sample_batch(&mut self, batch: usize, inputs: &mut Vec<i32>, targets: &mut Vec<i32>) {
         inputs.clear();

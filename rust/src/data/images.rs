@@ -45,6 +45,16 @@ impl SyntheticImages {
             }
         }
     }
+
+    /// Sampling-RNG snapshot for checkpointing (mirrors
+    /// `CharLmDataset::rng_state`).
+    pub fn rng_state(&self) -> (u64, u64) {
+        self.rng.state()
+    }
+
+    pub fn set_rng_state(&mut self, state: u64, inc: u64) {
+        self.rng = Pcg32::from_state(state, inc);
+    }
 }
 
 #[cfg(test)]

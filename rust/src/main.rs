@@ -81,13 +81,17 @@ commands:
   fig1|fig2|fig4    optimizer-comparison training curves -> runs/
   e2e               end-to-end char-LM training with SMMF -> runs/e2e
   train             one training run (--artifact, --optimizer, --steps,
-                    --lr, --config file.toml, --out-dir)
+                    --lr, --config file.toml, --out-dir,
+                    --save-every N [writes runs/<name>/checkpoint.bin],
+                    --resume <checkpoint.bin> [bit-identical restart])
   dp --workers K    synchronous data-parallel training demo
   fused             compiled whole-train-step (Pallas SMMF) demo
   ablate            SMMF design ablations (scheme / sign width /
                     matricization / vector_reshape) on the LM workload
 common flags: --artifacts DIR (default ./artifacts), --seed N,
-              --threads N (parallel optimizer step engine; 1 = serial)";
+              --threads N (parallel optimizer step engine; 1 = serial),
+              --save-every N / --resume PATH (SMMFCKPT v2 checkpoints;
+              see docs/CHECKPOINT_FORMAT.md)";
 
 fn cmd_list(args: &Args) -> Result<()> {
     println!("model inventories (memory accounting):");

@@ -15,9 +15,12 @@
 //! is updated by exactly one worker running the serial kernel with that
 //! worker's private scratch — bit-identical to the serial walk.
 
+use anyhow::{bail, Result};
+
+use super::blob::{self, BlobReader, BlobWriter};
 use super::parallel::{self, ParamPartition, TensorGeom};
 use super::schedule::beta2_t;
-use super::{OptimConfig, Optimizer, WeightDecayMode};
+use super::{OptimConfig, Optimizer, StateSerde, WeightDecayMode};
 use crate::tensor::Tensor;
 
 enum VState {
@@ -191,6 +194,81 @@ impl Adafactor {
         for (w, &uij) in p.iter_mut().zip(u.iter()) {
             *w -= alpha * uij;
         }
+    }
+}
+
+impl StateSerde for Adafactor {
+    fn opt_step(&self) -> u64 {
+        self.t
+    }
+
+    fn set_opt_step(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    /// Blob (docs/CHECKPOINT_FORMAT.md, kind tag 4): the native factored
+    /// second moment — `exp_avg_sq_row` / `exp_avg_sq_col` accumulators
+    /// (Shazeer & Stern 2018) — or the dense fallback for rank-1 tensors,
+    /// followed by the optional dense first moment. The factored-or-dense
+    /// encoding is shared with CAME ([`blob::write_factored_or_dense`]).
+    fn state_blobs(&self) -> Vec<Vec<u8>> {
+        self.states
+            .iter()
+            .map(|st| {
+                let mut w = BlobWriter::new();
+                match &st.v {
+                    VState::Factored { row, col, .. } => {
+                        blob::write_factored_or_dense(&mut w, Some((row.as_slice(), col.as_slice())), &[])
+                    }
+                    VState::Dense(v) => blob::write_factored_or_dense(&mut w, None, v),
+                }
+                match &st.m {
+                    Some(m) => {
+                        w.u8(1);
+                        w.len_prefixed_f32s(m);
+                    }
+                    None => w.u8(0),
+                }
+                w.finish()
+            })
+            .collect()
+    }
+
+    fn load_state_blobs(&mut self, blobs: &[Vec<u8>]) -> Result<()> {
+        if blobs.len() != self.states.len() {
+            bail!(
+                "adafactor: checkpoint has {} tensors, optimizer has {}",
+                blobs.len(),
+                self.states.len()
+            );
+        }
+        for (idx, (b, st)) in blobs.iter().zip(self.states.iter_mut()).enumerate() {
+            let mut r = BlobReader::new(b);
+            let what = format!("adafactor tensor {idx} V");
+            match &mut st.v {
+                VState::Factored { row, col, .. } => blob::read_factored_or_dense(
+                    &mut r,
+                    Some((&mut row[..], &mut col[..])),
+                    &mut [],
+                    &what,
+                )?,
+                VState::Dense(v) => blob::read_factored_or_dense(&mut r, None, v, &what)?,
+            }
+            let has_m = r.u8()?;
+            match (has_m, &mut st.m) {
+                (1, Some(m)) => {
+                    r.expect_len(m.len(), &format!("adafactor tensor {idx} momentum"))?;
+                    r.f32s_into(m)?;
+                }
+                (0, None) => {}
+                (has, _) => bail!(
+                    "adafactor tensor {idx}: momentum mismatch (checkpoint has_m={has}; \
+                     β1 > 0 must agree between save and load configs)"
+                ),
+            }
+            r.finish()?;
+        }
+        Ok(())
     }
 }
 

@@ -9,8 +9,11 @@
 //! element-range splitting is bit-identical to the serial walk at any
 //! thread count.
 
+use anyhow::{bail, Result};
+
+use super::blob::{BlobReader, BlobWriter};
 use super::parallel::{self, ParamPartition, TensorGeom};
-use super::{OptimConfig, Optimizer, WeightDecayMode};
+use super::{OptimConfig, Optimizer, StateSerde, WeightDecayMode};
 use crate::tensor::Tensor;
 
 pub struct Adam {
@@ -60,6 +63,51 @@ impl Adam {
             *vij = b2 * *vij + (1.0 - b2) * gij * gij;
             *w -= lr_t * *mij / (vij.sqrt() + cfg.eps1);
         }
+    }
+}
+
+impl StateSerde for Adam {
+    fn opt_step(&self) -> u64 {
+        self.t
+    }
+
+    fn set_opt_step(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    /// Blob (docs/CHECKPOINT_FORMAT.md, kind tags 2/3): `u64 len`, then
+    /// the dense first and second moments as f32.
+    fn state_blobs(&self) -> Vec<Vec<u8>> {
+        self.m
+            .iter()
+            .zip(&self.v)
+            .map(|(m, v)| {
+                let mut w = BlobWriter::new();
+                w.u64(m.len() as u64);
+                w.f32s(m);
+                w.f32s(v);
+                w.finish()
+            })
+            .collect()
+    }
+
+    fn load_state_blobs(&mut self, blobs: &[Vec<u8>]) -> Result<()> {
+        if blobs.len() != self.m.len() {
+            bail!(
+                "{}: checkpoint has {} tensors, optimizer has {}",
+                self.name(),
+                blobs.len(),
+                self.m.len()
+            );
+        }
+        for (idx, blob) in blobs.iter().enumerate() {
+            let mut r = BlobReader::new(blob);
+            r.expect_len(self.m[idx].len(), &format!("adam tensor {idx} moments"))?;
+            r.f32s_into(&mut self.m[idx])?;
+            r.f32s_into(&mut self.v[idx])?;
+            r.finish()?;
+        }
+        Ok(())
     }
 }
 

@@ -1,0 +1,269 @@
+//! Little-endian binary blob encode/decode for optimizer-state
+//! serialization ([`super::StateSerde`]) and the checkpoint container
+//! (`train::checkpoint`).
+//!
+//! Writers are infallible appends; readers are strictly bounds-checked —
+//! every read validates the remaining length *before* touching the
+//! buffer, lengths read from the blob are never used to allocate without
+//! an explicit cap or an expected-size check, and [`BlobReader::finish`]
+//! rejects trailing garbage. This is what makes loading a truncated or
+//! corrupt checkpoint an error instead of a panic or an OOM.
+
+use anyhow::{bail, Result};
+
+/// Append-only little-endian encoder.
+#[derive(Default)]
+pub struct BlobWriter {
+    buf: Vec<u8>,
+}
+
+impl BlobWriter {
+    pub fn new() -> BlobWriter {
+        BlobWriter::default()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f32s(&mut self, v: &[f32]) {
+        self.buf.reserve(v.len() * 4);
+        for &x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+
+    /// `u64` element count followed by the f32 payload.
+    pub fn len_prefixed_f32s(&mut self, v: &[f32]) {
+        self.u64(v.len() as u64);
+        self.f32s(v);
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn finish(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked little-endian decoder over a borrowed byte slice.
+pub struct BlobReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> BlobReader<'a> {
+    pub fn new(buf: &'a [u8]) -> BlobReader<'a> {
+        BlobReader { buf, pos: 0 }
+    }
+
+    /// Bytes not yet consumed.
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            bail!(
+                "truncated: need {n} bytes at offset {}, only {} remain",
+                self.pos,
+                self.remaining()
+            );
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    /// Fill `out` exactly — the caller supplies the expected length
+    /// (state buffers are preallocated at optimizer construction, so a
+    /// checkpoint can never dictate an allocation size here).
+    pub fn f32s_into(&mut self, out: &mut [f32]) -> Result<()> {
+        let raw = self.take(out.len() * 4)?;
+        for (o, c) in out.iter_mut().zip(raw.chunks_exact(4)) {
+            *o = f32::from_le_bytes(c.try_into().unwrap());
+        }
+        Ok(())
+    }
+
+    /// Read a `u64` length prefix and require it to equal `expect`.
+    pub fn expect_len(&mut self, expect: usize, what: &str) -> Result<()> {
+        let got = self.u64()? as usize;
+        if got != expect {
+            bail!("{what}: blob has {got} elements, optimizer expects {expect}");
+        }
+        Ok(())
+    }
+
+    pub fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    /// Require the blob to be fully consumed (no trailing garbage).
+    pub fn finish(self) -> Result<()> {
+        if self.pos != self.buf.len() {
+            bail!("blob has {} trailing bytes", self.buf.len() - self.pos);
+        }
+        Ok(())
+    }
+}
+
+/// Shared factored-or-dense accumulator encoding (Adafactor's V, CAME's
+/// V and U — docs/CHECKPOINT_FORMAT.md): `u8` layout tag (1 = factored
+/// row/col pair, 0 = dense), then the length-prefixed payload(s). Pass
+/// `fact` when the accumulator is factored (dense is then ignored).
+pub fn write_factored_or_dense(w: &mut BlobWriter, fact: Option<(&[f32], &[f32])>, dense: &[f32]) {
+    match fact {
+        Some((row, col)) => {
+            w.u8(1);
+            w.len_prefixed_f32s(row);
+            w.len_prefixed_f32s(col);
+        }
+        None => {
+            w.u8(0);
+            w.len_prefixed_f32s(dense);
+        }
+    }
+}
+
+/// Inverse of [`write_factored_or_dense`]: the caller passes the layout
+/// its constructed state actually has; a blob with the other layout (or
+/// mismatched lengths) is rejected.
+pub fn read_factored_or_dense(
+    r: &mut BlobReader<'_>,
+    fact: Option<(&mut [f32], &mut [f32])>,
+    dense: &mut [f32],
+    what: &str,
+) -> Result<()> {
+    let tag = r.u8()?;
+    match (tag, fact) {
+        (1, Some((row, col))) => {
+            r.expect_len(row.len(), &format!("{what} row factor"))?;
+            r.f32s_into(row)?;
+            r.expect_len(col.len(), &format!("{what} col factor"))?;
+            r.f32s_into(col)?;
+        }
+        (0, None) => {
+            r.expect_len(dense.len(), &format!("{what} dense"))?;
+            r.f32s_into(dense)?;
+        }
+        (tag, _) => bail!(
+            "{what}: layout mismatch (blob tag {tag}; factored vs dense is decided by tensor rank)"
+        ),
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn factored_or_dense_roundtrip_and_mismatch() {
+        let mut w = BlobWriter::new();
+        write_factored_or_dense(&mut w, Some((&[1.0, 2.0], &[3.0])), &[]);
+        write_factored_or_dense(&mut w, None, &[4.0, 5.0]);
+        let blob = w.finish();
+
+        let (mut row, mut col, mut dense) = ([0.0f32; 2], [0.0f32; 1], [0.0f32; 2]);
+        let mut r = BlobReader::new(&blob);
+        read_factored_or_dense(&mut r, Some((&mut row[..], &mut col[..])), &mut [], "a").unwrap();
+        read_factored_or_dense(&mut r, None, &mut dense[..], "b").unwrap();
+        r.finish().unwrap();
+        assert_eq!((row, col, dense), ([1.0, 2.0], [3.0], [4.0, 5.0]));
+
+        // layout mismatch: factored blob read as dense
+        let mut r = BlobReader::new(&blob);
+        assert!(read_factored_or_dense(&mut r, None, &mut dense[..], "a").is_err());
+    }
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut w = BlobWriter::new();
+        w.u8(7);
+        w.u32(0xdead_beef);
+        w.u64(1 << 40);
+        w.f32(-1.5);
+        w.len_prefixed_f32s(&[1.0, 2.0, 3.0]);
+        w.bytes(&[9, 9]);
+        let blob = w.finish();
+
+        let mut r = BlobReader::new(&blob);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u32().unwrap(), 0xdead_beef);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f32().unwrap(), -1.5);
+        r.expect_len(3, "vec").unwrap();
+        let mut out = [0.0f32; 3];
+        r.f32s_into(&mut out).unwrap();
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+        assert_eq!(r.bytes(2).unwrap(), &[9, 9]);
+        r.finish().unwrap();
+    }
+
+    #[test]
+    fn truncated_reads_error_not_panic() {
+        let mut w = BlobWriter::new();
+        w.u32(5);
+        let blob = w.finish();
+        let mut r = BlobReader::new(&blob);
+        assert!(r.u64().is_err()); // 4 bytes present, 8 requested
+        let mut r = BlobReader::new(&blob[..2]);
+        assert!(r.u32().is_err());
+        let mut r = BlobReader::new(&[]);
+        assert!(r.u8().is_err());
+    }
+
+    #[test]
+    fn length_mismatch_and_trailing_bytes_error() {
+        let mut w = BlobWriter::new();
+        w.len_prefixed_f32s(&[1.0]);
+        w.u8(0);
+        let blob = w.finish();
+        let mut r = BlobReader::new(&blob);
+        assert!(r.expect_len(2, "vec").is_err());
+        let mut r = BlobReader::new(&blob);
+        r.expect_len(1, "vec").unwrap();
+        let mut out = [0.0f32; 1];
+        r.f32s_into(&mut out).unwrap();
+        assert!(r.finish().is_err()); // the trailing u8
+    }
+}

@@ -13,9 +13,12 @@
 //! tensor updated by one worker with private scratch, bit-identical to
 //! the serial walk.
 
+use anyhow::{bail, Result};
+
+use super::blob::{self, BlobReader, BlobWriter};
 use super::parallel::{self, ParamPartition, TensorGeom};
 use super::schedule::beta2_t;
-use super::{OptimConfig, Optimizer, WeightDecayMode};
+use super::{OptimConfig, Optimizer, StateSerde, WeightDecayMode};
 use crate::tensor::Tensor;
 
 struct Factored {
@@ -227,6 +230,69 @@ impl Came {
         for (w, &x) in p.iter_mut().zip(update.iter()) {
             *w -= cfg.lr * x;
         }
+    }
+}
+
+impl StateSerde for Came {
+    fn opt_step(&self) -> u64 {
+        self.t
+    }
+
+    fn set_opt_step(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    /// Blob (docs/CHECKPOINT_FORMAT.md, kind tag 6): the factored second
+    /// moment `V`, the factored confidence/instability matrix `U` (CAME's
+    /// extra state, Luo et al. 2023), then the dense momentum.
+    fn state_blobs(&self) -> Vec<Vec<u8>> {
+        self.states
+            .iter()
+            .map(|st| {
+                let mut w = BlobWriter::new();
+                blob::write_factored_or_dense(
+                    &mut w,
+                    st.v.as_ref().map(|f| (f.row.as_slice(), f.col.as_slice())),
+                    &st.v_dense,
+                );
+                blob::write_factored_or_dense(
+                    &mut w,
+                    st.u.as_ref().map(|f| (f.row.as_slice(), f.col.as_slice())),
+                    &st.u_dense,
+                );
+                w.len_prefixed_f32s(&st.m);
+                w.finish()
+            })
+            .collect()
+    }
+
+    fn load_state_blobs(&mut self, blobs: &[Vec<u8>]) -> Result<()> {
+        if blobs.len() != self.states.len() {
+            bail!(
+                "came: checkpoint has {} tensors, optimizer has {}",
+                blobs.len(),
+                self.states.len()
+            );
+        }
+        for (idx, (blob, st)) in blobs.iter().zip(self.states.iter_mut()).enumerate() {
+            let mut r = BlobReader::new(blob);
+            blob::read_factored_or_dense(
+                &mut r,
+                st.v.as_mut().map(|f| (&mut f.row[..], &mut f.col[..])),
+                &mut st.v_dense,
+                &format!("came tensor {idx} V"),
+            )?;
+            blob::read_factored_or_dense(
+                &mut r,
+                st.u.as_mut().map(|f| (&mut f.row[..], &mut f.col[..])),
+                &mut st.u_dense,
+                &format!("came tensor {idx} U"),
+            )?;
+            r.expect_len(st.m.len(), &format!("came tensor {idx} momentum"))?;
+            r.f32s_into(&mut st.m)?;
+            r.finish()?;
+        }
+        Ok(())
     }
 }
 

@@ -98,6 +98,81 @@ pub fn inventory_state_bytes(kind: OptKind, shapes: &[Vec<usize>], cfg: &OptimCo
     shapes.iter().map(|s| tensor_state_bytes(kind, s, cfg)).sum()
 }
 
+/// Serialized size in bytes of one tensor's `StateSerde` blob — the
+/// exact length `state_blobs()[i].len()` would report, mirrored
+/// analytically so on-disk checkpoint cost can be tabulated for
+/// inventories too large to instantiate (asserted against the live
+/// optimizers by `blob_bytes_match_live` below; layouts in
+/// docs/CHECKPOINT_FORMAT.md).
+pub fn tensor_blob_bytes(kind: OptKind, shape: &[usize], cfg: &OptimConfig) -> u64 {
+    let numel: u64 = shape.iter().product::<usize>() as u64;
+    let f = 4u64; // f32
+    let vec = |len: u64| 8 + len * f; // u64 length prefix + payload
+    match kind {
+        OptKind::Sgd => 1 + if cfg.momentum != 0.0 { vec(numel) } else { 0 },
+        OptKind::Adam | OptKind::AdamW => 8 + 2 * numel * f,
+        OptKind::Adafactor => {
+            let v = if shape.len() >= 2 {
+                let last = shape[shape.len() - 1] as u64;
+                let second = shape[shape.len() - 2] as u64;
+                let lead: u64 = shape[..shape.len() - 2].iter().product::<usize>() as u64;
+                vec(lead * second) + vec(lead * last)
+            } else {
+                vec(numel)
+            };
+            1 + v + 1 + if cfg.beta1 > 0.0 { vec(numel) } else { 0 }
+        }
+        OptKind::Sm3 => {
+            let shape_nz: Vec<usize> = if shape.is_empty() { vec![1] } else { shape.to_vec() };
+            let axes: u64 = shape_nz.iter().map(|&d| vec(d as u64)).sum();
+            4 + axes + 1 + if cfg.beta1 > 0.0 { vec(numel) } else { 0 }
+        }
+        OptKind::Came => {
+            let fact = if shape.len() >= 2 {
+                let last = shape[shape.len() - 1] as u64;
+                let second = shape[shape.len() - 2] as u64;
+                let lead: u64 = shape[..shape.len() - 2].iter().product::<usize>() as u64;
+                vec(lead * second) + vec(lead * last)
+            } else {
+                vec(numel)
+            };
+            (1 + fact) * 2 + vec(numel)
+        }
+        OptKind::Smmf => {
+            if squeezed_rank(shape) == 1 && !cfg.vector_reshape {
+                1 + 8 + 2 * numel * f
+            } else {
+                let (n, m) = match cfg.smmf_matricize {
+                    super::MatricizeMode::Square => effective_shape(numel as usize),
+                    super::MatricizeMode::FoldLast => {
+                        let last = *shape.last().unwrap_or(&1);
+                        (numel as usize / last, last)
+                    }
+                };
+                let (n, m) = (n as u64, m as u64);
+                let sign_bytes = match cfg.smmf_sign_mode {
+                    super::SignMode::Bit1 => (n * m).div_ceil(64) * 8,
+                    super::SignMode::Byte8 => n * m,
+                };
+                1 + 4 + 4 + 2 * (n + m) * f + 1 + 8 + sign_bytes
+            }
+        }
+    }
+}
+
+/// On-disk bytes of a whole inventory's optimizer-state section in a
+/// `SMMFCKPT` v2 checkpoint: the section payload is `u32` kind tag +
+/// `u64` step counter + `u32` tensor count + one length-prefixed blob
+/// per tensor (see `train::checkpoint`).
+pub fn inventory_checkpoint_bytes(kind: OptKind, shapes: &[Vec<usize>], cfg: &OptimConfig) -> u64 {
+    4 + 8
+        + 4
+        + shapes
+            .iter()
+            .map(|s| 8 + tensor_blob_bytes(kind, s, cfg))
+            .sum::<u64>()
+}
+
 /// CUDA-caching-allocator model: every allocation rounds up to 512 B.
 pub fn inventory_alloc_model_bytes(
     kind: OptKind,
@@ -123,6 +198,10 @@ pub struct MemoryReport {
     pub opt_bytes: u64,
     pub opt_alloc_model_bytes: u64,
     pub e2e_bytes: u64,
+    /// On-disk bytes of the optimizer-state checkpoint section
+    /// ([`inventory_checkpoint_bytes`]) — the native serialization keeps
+    /// this within framing overhead of `opt_bytes`.
+    pub ckpt_opt_bytes: u64,
 }
 
 pub fn report(kind: OptKind, shapes: &[Vec<usize>], cfg: &OptimConfig) -> MemoryReport {
@@ -135,6 +214,7 @@ pub fn report(kind: OptKind, shapes: &[Vec<usize>], cfg: &OptimConfig) -> Memory
         opt_bytes,
         opt_alloc_model_bytes: inventory_alloc_model_bytes(kind, shapes, cfg),
         e2e_bytes: opt_bytes + 2 * param_bytes, // params + grads + state
+        ckpt_opt_bytes: inventory_checkpoint_bytes(kind, shapes, cfg),
     }
 }
 
@@ -163,6 +243,47 @@ mod tests {
                 );
             }
         });
+    }
+
+    /// The analytic blob sizes must match the live serializers exactly.
+    #[test]
+    fn blob_bytes_match_live() {
+        use crate::optim::{OptKind, StateSerde};
+        prop::cases(25, |rng| {
+            let n_tensors = 1 + rng.below(4);
+            let shapes: Vec<Vec<usize>> =
+                (0..n_tensors).map(|_| prop::gen_shape(rng, 4, 4096)).collect();
+            for kind in OptKind::every() {
+                let cfg = OptimConfig::paper_defaults(kind);
+                let opt = build(kind, &shapes, &cfg);
+                let blobs = opt.state_blobs();
+                for (shape, blob) in shapes.iter().zip(&blobs) {
+                    assert_eq!(
+                        blob.len() as u64,
+                        tensor_blob_bytes(kind, shape, &cfg),
+                        "{} on {shape:?}",
+                        kind.name()
+                    );
+                }
+                let section: u64 =
+                    4 + 8 + 4 + blobs.iter().map(|b| 8 + b.len() as u64).sum::<u64>();
+                assert_eq!(section, inventory_checkpoint_bytes(kind, &shapes, &cfg));
+            }
+        });
+    }
+
+    #[test]
+    fn checkpoint_overhead_is_framing_only() {
+        // Native serialization: the on-disk section stays within the
+        // per-tensor/per-vector length prefixes of the in-RAM state.
+        let shapes = vec![vec![512, 512], vec![512]];
+        for kind in OptKind::all() {
+            let cfg = OptimConfig::paper_defaults(kind);
+            let ram = inventory_state_bytes(kind, &shapes, &cfg);
+            let disk = inventory_checkpoint_bytes(kind, &shapes, &cfg);
+            assert!(disk >= ram, "{}", kind.name());
+            assert!(disk - ram < 1024, "{}: ram={ram} disk={disk}", kind.name());
+        }
     }
 
     #[test]

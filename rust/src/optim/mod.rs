@@ -15,6 +15,80 @@
 //! inventories (used for the LLaMA-scale tables where instantiating state
 //! would need tens of GiB).
 //!
+//! # The SMMF pipeline: matricize → factorize → 1-bit signs
+//!
+//! SMMF keeps Adam-style first/second momenta in up to 96% less memory by
+//! composing three ideas, each visible as a module here:
+//!
+//! 1. **Square matricization** ([`matricize`], paper Algorithm 2): every
+//!    parameter tensor is viewed as the most nearly square `n̂ × m̂` matrix
+//!    with `n̂·m̂ = numel`, which minimizes `n̂ + m̂` — the size of the
+//!    factor vectors stored below (Theorem 3.2).
+//! 2. **Rank-1 NNMF factorization** ([`nnmf`], Algorithms 3–5): each
+//!    moment matrix is compressed to a row-mass vector and a column-mass
+//!    vector (`n̂ + m̂` floats instead of `n̂·m̂`). SMMF's ordering is
+//!    *decompress → update with the intact gradient → re-compress*
+//!    ([`SmmfScheme::DecompressFirst`]), which is what separates it from
+//!    the compress-first baselines it ablates against.
+//! 3. **1-bit sign planes** ([`crate::tensor::BitMatrix`]): NNMF needs a
+//!    non-negative matrix, so the first momentum's signs are stored
+//!    separately at one bit per element ([`SignMode::Bit1`]).
+//!
+//! Construct an optimizer with [`build`] and drive it with
+//! [`Optimizer::step`]:
+//!
+//! ```
+//! use smmf_repro::optim::{build, OptKind, OptimConfig, Optimizer};
+//! use smmf_repro::tensor::Tensor;
+//!
+//! let shapes = vec![vec![16, 16], vec![16]];
+//! let cfg = OptimConfig::paper_defaults(OptKind::Smmf);
+//! let mut opt = build(OptKind::Smmf, &shapes, &cfg);
+//!
+//! let mut params = vec![Tensor::zeros(&[16, 16]), Tensor::zeros(&[16])];
+//! let grads = vec![
+//!     Tensor::from_vec(&[16, 16], vec![0.01; 256]),
+//!     Tensor::from_vec(&[16], vec![0.01; 16]),
+//! ];
+//! opt.step(&mut params, &grads);
+//!
+//! // Factorized state: a fraction of Adam's 2 floats/param (2176 B here).
+//! assert!(opt.state_bytes() > 0 && opt.state_bytes() < 600);
+//! ```
+//!
+//! # Checkpointing: the [`StateSerde`] trait
+//!
+//! Every optimizer also implements [`StateSerde`], which serializes its
+//! state in the *native* compact representation — SMMF emits its factor
+//! vectors and packed sign planes without ever densifying the momenta, so
+//! a checkpoint costs what the in-RAM state costs (the paper's memory
+//! tables carry over to disk). Blob layouts are specified in
+//! `docs/CHECKPOINT_FORMAT.md`; the checkpoint container lives in
+//! `crate::train::checkpoint`.
+//!
+//! ```
+//! use smmf_repro::optim::{build, OptKind, OptimConfig, Optimizer, StateSerde};
+//! use smmf_repro::tensor::Tensor;
+//!
+//! let shapes = vec![vec![8, 8]];
+//! let cfg = OptimConfig::default();
+//! let mut opt = build(OptKind::Adam, &shapes, &cfg);
+//! let mut params = vec![Tensor::zeros(&[8, 8])];
+//! let grads = vec![Tensor::from_vec(&[8, 8], vec![0.5; 64])];
+//! opt.step(&mut params, &grads);
+//!
+//! // Save: one native blob per tensor + the step counter.
+//! let blobs = opt.state_blobs();
+//! let t = opt.opt_step();
+//!
+//! // Restore into a freshly built optimizer: bit-identical resume.
+//! let mut opt2 = build(OptKind::Adam, &shapes, &cfg);
+//! opt2.load_state_blobs(&blobs).unwrap();
+//! opt2.set_opt_step(t);
+//! assert_eq!(opt2.state_blobs(), blobs);
+//! assert_eq!(opt2.opt_step(), 1);
+//! ```
+//!
 //! # The parallel step engine
 //!
 //! Every optimizer dispatches `step()` over the work-sharding engine in
@@ -42,6 +116,7 @@
 
 pub mod adafactor;
 pub mod adam;
+pub mod blob;
 pub mod came;
 pub mod matricize;
 pub mod memory;
@@ -102,6 +177,48 @@ impl OptKind {
     pub fn all() -> [OptKind; 5] {
         // The paper's five evaluated optimizers.
         [OptKind::Adam, OptKind::Adafactor, OptKind::Sm3, OptKind::Came, OptKind::Smmf]
+    }
+
+    /// Every optimizer the library implements (the paper's five plus SGD
+    /// and decoupled AdamW) — the set covered by checkpointing tests.
+    pub fn every() -> [OptKind; 7] {
+        [
+            OptKind::Sgd,
+            OptKind::Adam,
+            OptKind::AdamW,
+            OptKind::Adafactor,
+            OptKind::Sm3,
+            OptKind::Came,
+            OptKind::Smmf,
+        ]
+    }
+
+    /// Stable numeric tag used by the `SMMFCKPT` v2 on-disk format
+    /// (docs/CHECKPOINT_FORMAT.md). Never renumber these.
+    pub fn tag(self) -> u32 {
+        match self {
+            OptKind::Sgd => 1,
+            OptKind::Adam => 2,
+            OptKind::AdamW => 3,
+            OptKind::Adafactor => 4,
+            OptKind::Sm3 => 5,
+            OptKind::Came => 6,
+            OptKind::Smmf => 7,
+        }
+    }
+
+    /// Inverse of [`OptKind::tag`]; `None` for unknown tags.
+    pub fn from_tag(tag: u32) -> Option<OptKind> {
+        Some(match tag {
+            1 => OptKind::Sgd,
+            2 => OptKind::Adam,
+            3 => OptKind::AdamW,
+            4 => OptKind::Adafactor,
+            5 => OptKind::Sm3,
+            6 => OptKind::Came,
+            7 => OptKind::Smmf,
+            _ => return None,
+        })
     }
 }
 
@@ -239,8 +356,49 @@ impl OptimConfig {
     }
 }
 
+/// Native-format optimizer-state (de)serialization for checkpointing.
+///
+/// Each optimizer emits one binary blob per registered parameter tensor,
+/// in its *native* compact representation — SMMF writes its `u`/`v`
+/// factor vectors as f32 plus the packed 1-bit sign plane and never
+/// densifies the momenta; Adafactor writes its row/column accumulators;
+/// SM3 its per-axis covers — so checkpoints cost what the in-RAM state
+/// costs. Byte layouts are specified per [`OptKind`] in
+/// `docs/CHECKPOINT_FORMAT.md` and must stay stable: they are the
+/// `SMMFCKPT` v2 on-disk schema.
+///
+/// Contract: calling [`StateSerde::load_state_blobs`] (and
+/// [`StateSerde::set_opt_step`]) on a freshly built optimizer over the
+/// same shapes and config, fed the output of
+/// [`StateSerde::state_blobs`]/[`StateSerde::opt_step`], restores the
+/// optimizer *bit-for-bit* — subsequent [`Optimizer::step`] trajectories
+/// are identical to never having serialized at all. Loading validates
+/// every length and tag against the constructed state and errors on any
+/// mismatch or truncation; after an error the state is unspecified and
+/// the optimizer should be rebuilt.
+pub trait StateSerde {
+    /// Internal step counter `t` (0 before the first `step` call). Drives
+    /// the β1/β2 schedules, bias correction and Adafactor's relative
+    /// step, so resume must restore it alongside the blobs.
+    fn opt_step(&self) -> u64;
+
+    /// Restore the internal step counter.
+    fn set_opt_step(&mut self, t: u64);
+
+    /// Serialize the persistent state: one native-format blob per
+    /// parameter tensor, in registration order.
+    fn state_blobs(&self) -> Vec<Vec<u8>>;
+
+    /// Inverse of [`StateSerde::state_blobs`] on an optimizer built over
+    /// the same shapes and config.
+    fn load_state_blobs(&mut self, blobs: &[Vec<u8>]) -> anyhow::Result<()>;
+}
+
 /// A stateful optimizer over a fixed set of parameter tensors.
-pub trait Optimizer: Send {
+///
+/// [`StateSerde`] is a supertrait so `Box<dyn Optimizer>` can be
+/// checkpointed and resumed without knowing the concrete type.
+pub trait Optimizer: Send + StateSerde {
     fn name(&self) -> &'static str;
 
     /// Apply one optimization step. `params[i]` and `grads[i]` must have
@@ -299,6 +457,21 @@ mod tests {
             assert_eq!(OptKind::parse(k.name()), Some(k));
         }
         assert_eq!(OptKind::parse("nope"), None);
+    }
+
+    #[test]
+    fn checkpoint_tags_are_stable_and_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for k in OptKind::every() {
+            let t = k.tag();
+            assert!(seen.insert(t), "duplicate tag {t}");
+            assert_eq!(OptKind::from_tag(t), Some(k));
+        }
+        // Pinned values: the on-disk format depends on them.
+        assert_eq!(OptKind::Sgd.tag(), 1);
+        assert_eq!(OptKind::Smmf.tag(), 7);
+        assert_eq!(OptKind::from_tag(0), None);
+        assert_eq!(OptKind::from_tag(99), None);
     }
 
     /// Shared smoke test: every optimizer reduces a convex quadratic.

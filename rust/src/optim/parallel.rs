@@ -169,6 +169,13 @@ impl ParamPartition {
         self.items.len()
     }
 
+    /// Number of tensors the plan covers (one entry per registered
+    /// parameter shape — used by stateless-per-tensor optimizers like
+    /// momentum-free SGD to recover the inventory size).
+    pub fn n_tensors(&self) -> usize {
+        self.tensor_ranges.len()
+    }
+
     /// All items, sorted by `(tensor, row0)`.
     pub fn items(&self) -> &[WorkItem] {
         &self.items

@@ -76,6 +76,33 @@ impl LrSchedule {
     }
 }
 
+impl LrSchedule {
+    /// Stable numeric encoding for the `SMMFCKPT` v2 SCHEDULE section
+    /// (docs/CHECKPOINT_FORMAT.md): `(kind tag, a, b, c)`. Unused fields
+    /// are zero. Never renumber the tags.
+    pub fn encode(&self) -> (u8, u64, u64, f32) {
+        match *self {
+            LrSchedule::Constant => (0, 0, 0, 0.0),
+            LrSchedule::Warmup { warmup } => (1, warmup, 0, 0.0),
+            LrSchedule::Linear { warmup, total } => (2, warmup, total, 0.0),
+            LrSchedule::InvSqrt { warmup } => (3, warmup, 0, 0.0),
+            LrSchedule::Cosine { warmup, total, floor } => (4, warmup, total, floor),
+        }
+    }
+
+    /// Inverse of [`LrSchedule::encode`]; `None` for unknown tags.
+    pub fn decode(tag: u8, a: u64, b: u64, c: f32) -> Option<LrSchedule> {
+        Some(match tag {
+            0 => LrSchedule::Constant,
+            1 => LrSchedule::Warmup { warmup: a },
+            2 => LrSchedule::Linear { warmup: a, total: b },
+            3 => LrSchedule::InvSqrt { warmup: a },
+            4 => LrSchedule::Cosine { warmup: a, total: b, floor: c },
+            _ => return None,
+        })
+    }
+}
+
 /// ReduceLROnPlateau (the paper's CNN training scheduler): multiply LR by
 /// `factor` when the monitored metric fails to improve for `patience`
 /// evaluations.
@@ -153,6 +180,21 @@ mod tests {
         let s = LrSchedule::InvSqrt { warmup: 100 };
         let peak = s.at(1.0, 100);
         assert!(s.at(1.0, 50) < peak && s.at(1.0, 400) < peak);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        for s in [
+            LrSchedule::Constant,
+            LrSchedule::Warmup { warmup: 10 },
+            LrSchedule::Linear { warmup: 5, total: 100 },
+            LrSchedule::InvSqrt { warmup: 400 },
+            LrSchedule::Cosine { warmup: 3, total: 50, floor: 0.1 },
+        ] {
+            let (tag, a, b, c) = s.encode();
+            assert_eq!(LrSchedule::decode(tag, a, b, c), Some(s));
+        }
+        assert_eq!(LrSchedule::decode(99, 0, 0, 0.0), None);
     }
 
     #[test]

@@ -3,8 +3,11 @@
 //! Elementwise update, so the parallel path (`OptimConfig::threads > 1`)
 //! splits flat element ranges and is bit-identical to the serial walk.
 
+use anyhow::{bail, Result};
+
+use super::blob::{BlobReader, BlobWriter};
 use super::parallel::{self, ParamPartition, TensorGeom};
-use super::{OptimConfig, Optimizer, WeightDecayMode};
+use super::{OptimConfig, Optimizer, StateSerde, WeightDecayMode};
 use crate::tensor::Tensor;
 
 pub struct Sgd {
@@ -52,6 +55,65 @@ impl Sgd {
                 }
             }
         }
+    }
+}
+
+impl StateSerde for Sgd {
+    fn opt_step(&self) -> u64 {
+        self.t
+    }
+
+    fn set_opt_step(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    /// Blob (docs/CHECKPOINT_FORMAT.md, kind tag 1): `u8 has_momentum`;
+    /// when 1, `u64 len` + the momentum buffer as f32. With momentum
+    /// disabled SGD is stateless and each blob is the single byte 0.
+    fn state_blobs(&self) -> Vec<Vec<u8>> {
+        (0..self.plan.n_tensors())
+            .map(|idx| {
+                let mut w = BlobWriter::new();
+                match self.m.get(idx) {
+                    Some(m) => {
+                        w.u8(1);
+                        w.u64(m.len() as u64);
+                        w.f32s(m);
+                    }
+                    None => w.u8(0),
+                }
+                w.finish()
+            })
+            .collect()
+    }
+
+    fn load_state_blobs(&mut self, blobs: &[Vec<u8>]) -> Result<()> {
+        if blobs.len() != self.plan.n_tensors() {
+            bail!(
+                "sgd: checkpoint has {} tensors, optimizer has {}",
+                blobs.len(),
+                self.plan.n_tensors()
+            );
+        }
+        let enabled = !self.m.is_empty();
+        for (idx, blob) in blobs.iter().enumerate() {
+            let mut r = BlobReader::new(blob);
+            let has_m = r.u8()?;
+            match (has_m, self.m.get_mut(idx)) {
+                (1, Some(m)) => {
+                    r.expect_len(m.len(), &format!("sgd tensor {idx} momentum"))?;
+                    r.f32s_into(m)?;
+                }
+                (0, None) => {}
+                (has, _) => bail!(
+                    "sgd tensor {idx}: momentum mismatch (checkpoint has_momentum={has}, \
+                     optimizer momentum {} — configs must agree)",
+                    if enabled { "enabled" } else { "disabled" }
+                ),
+            }
+            r.finish()?;
+        }
+        Ok(())
     }
 }
 

@@ -13,8 +13,11 @@
 //! tensor updated by exactly one worker, bit-identical to the serial
 //! walk.
 
+use anyhow::{bail, Result};
+
+use super::blob::{BlobReader, BlobWriter};
 use super::parallel::{self, ParamPartition, TensorGeom};
-use super::{OptimConfig, Optimizer, WeightDecayMode};
+use super::{OptimConfig, Optimizer, StateSerde, WeightDecayMode};
 use crate::tensor::Tensor;
 
 struct PState {
@@ -111,6 +114,78 @@ impl Sm3 {
             }
         }
         st.acc = new_max;
+    }
+}
+
+impl StateSerde for Sm3 {
+    fn opt_step(&self) -> u64 {
+        self.t
+    }
+
+    fn set_opt_step(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    /// Blob (docs/CHECKPOINT_FORMAT.md, kind tag 5): `u32 n_axes`, one
+    /// length-prefixed per-axis cover accumulator each, then the optional
+    /// dense momentum.
+    fn state_blobs(&self) -> Vec<Vec<u8>> {
+        self.states
+            .iter()
+            .map(|st| {
+                let mut w = BlobWriter::new();
+                w.u32(st.acc.len() as u32);
+                for axis in &st.acc {
+                    w.len_prefixed_f32s(axis);
+                }
+                match &st.m {
+                    Some(m) => {
+                        w.u8(1);
+                        w.len_prefixed_f32s(m);
+                    }
+                    None => w.u8(0),
+                }
+                w.finish()
+            })
+            .collect()
+    }
+
+    fn load_state_blobs(&mut self, blobs: &[Vec<u8>]) -> Result<()> {
+        if blobs.len() != self.states.len() {
+            bail!(
+                "sm3: checkpoint has {} tensors, optimizer has {}",
+                blobs.len(),
+                self.states.len()
+            );
+        }
+        for (idx, (blob, st)) in blobs.iter().zip(self.states.iter_mut()).enumerate() {
+            let mut r = BlobReader::new(blob);
+            let n_axes = r.u32()? as usize;
+            if n_axes != st.acc.len() {
+                bail!(
+                    "sm3 tensor {idx}: checkpoint has {n_axes} axes, optimizer expects {}",
+                    st.acc.len()
+                );
+            }
+            for (axis_idx, axis) in st.acc.iter_mut().enumerate() {
+                r.expect_len(axis.len(), &format!("sm3 tensor {idx} axis {axis_idx}"))?;
+                r.f32s_into(axis)?;
+            }
+            let has_m = r.u8()?;
+            match (has_m, &mut st.m) {
+                (1, Some(m)) => {
+                    r.expect_len(m.len(), &format!("sm3 tensor {idx} momentum"))?;
+                    r.f32s_into(m)?;
+                }
+                (0, None) => {}
+                (has, _) => bail!(
+                    "sm3 tensor {idx}: momentum mismatch (checkpoint has_m={has}; \
+                     β1 > 0 must agree between save and load configs)"
+                ),
+            }
+            r.finish()?;
+        }
+        Ok(())
     }
 }
 

@@ -27,11 +27,14 @@
 //!   that materializes M and V; kept for differential testing and the
 //!   perf ablation bench.
 
+use anyhow::{anyhow, bail, Result};
+
+use super::blob::{BlobReader, BlobWriter};
 use super::matricize::{effective_shape, squeezed_rank};
 use super::nnmf;
 use super::parallel::{self, ParamPartition, TensorGeom, WorkItem};
 use super::schedule::{beta1_t, beta2_t};
-use super::{MatricizeMode, OptimConfig, Optimizer, SignMode, SmmfScheme, WeightDecayMode};
+use super::{MatricizeMode, OptimConfig, Optimizer, SignMode, SmmfScheme, StateSerde, WeightDecayMode};
 use crate::tensor::{word_chunk_get64, word_chunk_set64, BitMatrix, Tensor};
 
 /// Sign-matrix storage: 1-bit packed (the paper's memory claim) or one
@@ -748,6 +751,116 @@ fn dense_update(
         *mij = beta_m * *mij + (1.0 - beta_m) * gij;
         *vij = beta_v * *vij + (1.0 - beta_v) * gij * gij;
         *w -= lr * (*mij / (vij.sqrt() + eps));
+    }
+}
+
+impl StateSerde for Smmf {
+    fn opt_step(&self) -> u64 {
+        self.t
+    }
+
+    fn set_opt_step(&mut self, t: u64) {
+        self.t = t;
+    }
+
+    /// Native blob (docs/CHECKPOINT_FORMAT.md, kind tag 7): the factor
+    /// vectors as f32 plus the sign plane in its stored width — the
+    /// momenta are *never* densified, so an SMMF checkpoint stays
+    /// `2(n̂+m̂)` floats + `n̂·m̂` bits per tensor.
+    fn state_blobs(&self) -> Vec<Vec<u8>> {
+        self.states
+            .iter()
+            .map(|st| {
+                let mut w = BlobWriter::new();
+                match st {
+                    State::Factored { n, m, r_m, c_m, sign, r_v, c_v } => {
+                        w.u8(1);
+                        w.u32(*n as u32);
+                        w.u32(*m as u32);
+                        w.f32s(r_m);
+                        w.f32s(c_m);
+                        w.f32s(r_v);
+                        w.f32s(c_v);
+                        match sign {
+                            SignStore::Bits(b) => {
+                                w.u8(0);
+                                let bytes = b.to_le_bytes();
+                                w.u64(bytes.len() as u64);
+                                w.bytes(&bytes);
+                            }
+                            SignStore::Bytes(v) => {
+                                w.u8(1);
+                                w.u64(v.len() as u64);
+                                w.bytes(v);
+                            }
+                        }
+                    }
+                    State::Dense { m, v } => {
+                        w.u8(0);
+                        w.u64(m.len() as u64);
+                        w.f32s(m);
+                        w.f32s(v);
+                    }
+                }
+                w.finish()
+            })
+            .collect()
+    }
+
+    fn load_state_blobs(&mut self, blobs: &[Vec<u8>]) -> Result<()> {
+        if blobs.len() != self.states.len() {
+            bail!("smmf: checkpoint has {} tensors, optimizer has {}", blobs.len(), self.states.len());
+        }
+        for (idx, (blob, st)) in blobs.iter().zip(self.states.iter_mut()).enumerate() {
+            let mut r = BlobReader::new(blob);
+            let tag = r.u8()?;
+            match (tag, st) {
+                (1, State::Factored { n, m, r_m, c_m, sign, r_v, c_v }) => {
+                    let (bn, bm) = (r.u32()? as usize, r.u32()? as usize);
+                    if (bn, bm) != (*n, *m) {
+                        bail!("smmf tensor {idx}: checkpoint is {bn}x{bm}, optimizer expects {n}x{m}");
+                    }
+                    r.f32s_into(r_m)?;
+                    r.f32s_into(c_m)?;
+                    r.f32s_into(r_v)?;
+                    r.f32s_into(c_v)?;
+                    let mode = r.u8()?;
+                    let len = r.u64()? as usize;
+                    let payload = r.bytes(len)?;
+                    match (mode, sign) {
+                        (0, SignStore::Bits(b)) => {
+                            b.copy_from_le_bytes(payload)
+                                .map_err(|e| anyhow!("smmf tensor {idx}: {e}"))?;
+                        }
+                        (1, SignStore::Bytes(v)) => {
+                            if payload.len() != v.len() {
+                                bail!(
+                                    "smmf tensor {idx}: byte sign plane has {} bytes, expects {}",
+                                    payload.len(),
+                                    v.len()
+                                );
+                            }
+                            v.copy_from_slice(payload);
+                        }
+                        (mode, _) => bail!(
+                            "smmf tensor {idx}: sign mode mismatch (checkpoint mode {mode}, \
+                             see OptimConfig::smmf_sign_mode)"
+                        ),
+                    }
+                }
+                (0, State::Dense { m, v }) => {
+                    r.expect_len(m.len(), &format!("smmf tensor {idx} dense state"))?;
+                    r.f32s_into(m)?;
+                    r.f32s_into(v)?;
+                }
+                (tag, _) => bail!(
+                    "smmf tensor {idx}: state kind mismatch (blob tag {tag}; factored vs dense \
+                     is decided by shape and OptimConfig::vector_reshape)"
+                ),
+            }
+            r.finish()?;
+        }
+        Ok(())
     }
 }
 

@@ -123,6 +123,46 @@ impl BitMatrix {
         &mut self.words
     }
 
+    /// Serialize the packed words as little-endian bytes (`words * 8`
+    /// bytes; rows/cols are carried by the caller). Trailing bits past
+    /// `nbits()` in the last word are always zero, so the encoding is
+    /// canonical and roundtrips bit-exactly.
+    pub fn to_le_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.words.len() * 8);
+        for &w in &self.words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+
+    /// Overwrite the packed words from [`BitMatrix::to_le_bytes`] output.
+    /// The matrix keeps its dimensions; errors (without modifying `self`)
+    /// when `bytes` does not match the word storage exactly. Bits past
+    /// `nbits()` in the last word are masked to zero on load, so the
+    /// canonical-encoding invariant holds even for a bit-rotted input
+    /// (`count_ones`, equality and re-serialization stay exact).
+    pub fn copy_from_le_bytes(&mut self, bytes: &[u8]) -> Result<(), String> {
+        if bytes.len() != self.words.len() * 8 {
+            return Err(format!(
+                "sign-plane size mismatch: {} bytes for a {}x{} matrix ({} expected)",
+                bytes.len(),
+                self.rows,
+                self.cols,
+                self.words.len() * 8
+            ));
+        }
+        for (w, c) in self.words.iter_mut().zip(bytes.chunks_exact(8)) {
+            *w = u64::from_le_bytes(c.try_into().unwrap());
+        }
+        let tail = self.nbits() % 64;
+        if tail != 0 {
+            if let Some(last) = self.words.last_mut() {
+                *last &= (1u64 << tail) - 1;
+            }
+        }
+        Ok(())
+    }
+
     pub fn count_ones(&self) -> usize {
         self.words.iter().map(|w| w.count_ones() as usize).sum()
     }
@@ -200,6 +240,31 @@ mod tests {
                 }
             }
         });
+    }
+
+    #[test]
+    fn le_bytes_roundtrip_and_mismatch() {
+        let mut a = BitMatrix::zeros(5, 13); // 65 bits -> 2 words
+        a.set(0, true);
+        a.set(37, true);
+        a.set(64, true);
+        let bytes = a.to_le_bytes();
+        assert_eq!(bytes.len(), 16);
+        let mut b = BitMatrix::zeros(5, 13);
+        b.copy_from_le_bytes(&bytes).unwrap();
+        assert_eq!(a, b);
+        // wrong payload size: error, matrix untouched
+        let before = b.clone();
+        assert!(b.copy_from_le_bytes(&bytes[..8]).is_err());
+        assert_eq!(b, before);
+        // garbage past nbits() in the last word is masked on load: the
+        // canonical encoding survives bit-rotted input.
+        let mut dirty = bytes.clone();
+        dirty[15] = 0xff; // 65 bits used -> bits 65..128 are tail
+        let mut c = BitMatrix::zeros(5, 13);
+        c.copy_from_le_bytes(&dirty).unwrap();
+        assert_eq!(a, c);
+        assert_eq!(c.to_le_bytes(), bytes);
     }
 
     #[test]

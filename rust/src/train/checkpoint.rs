@@ -1,106 +1,554 @@
-//! Checkpointing: parameters (and trainer step) in a simple binary format.
+//! Checkpointing: the versioned `SMMFCKPT` binary container.
 //!
-//! Layout (little-endian):
-//! `b"SMMFCKPT" | u32 version | u64 step | u32 n_tensors |`
-//! per tensor: `u32 name_len | name | u32 rank | u64 dims[rank] | f32 data[]`.
+//! Two on-disk versions (full byte-level spec in
+//! `docs/CHECKPOINT_FORMAT.md`):
+//!
+//! * **v1** (legacy, still readable): parameters and the trainer step
+//!   only — `b"SMMFCKPT" | u32 version=1 | u64 step | tensor table`.
+//!   Resuming from a v1 file restarts all optimizer state cold.
+//! * **v2** (written by [`save_v2`]): `b"SMMFCKPT" | u32 version=2 |
+//!   u32 n_sections`, then tagged length-prefixed sections — parameters,
+//!   trainer step + data-RNG snapshot, LR-schedule position, and one
+//!   native [`crate::optim::StateSerde`] blob per tensor tagged by
+//!   [`OptKind`]. Unknown section tags are skipped, so older readers of
+//!   future versions degrade gracefully.
+//!
+//! All multi-byte values are little-endian. Loading is strictly
+//! validated: magic/version/section bounds, name UTF-8 and length caps,
+//! rank caps, and per-tensor element counts checked against the actual
+//! remaining bytes *before* any allocation — a truncated or corrupt file
+//! produces a context-rich error, never a panic or a blind multi-GiB
+//! allocation.
 
 use anyhow::{bail, Context, Result};
-use std::io::{BufReader, BufWriter, Read, Write};
+use std::io::{BufWriter, Write};
 use std::path::Path;
 
+use crate::optim::blob::BlobWriter;
+use crate::optim::schedule::LrSchedule;
+use crate::optim::OptKind;
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 8] = b"SMMFCKPT";
-const VERSION: u32 = 1;
+pub const VERSION_V1: u32 = 1;
+pub const VERSION_V2: u32 = 2;
 
+/// v2 section tags (never renumber).
+const SEC_PARAMS: u32 = 1;
+const SEC_TRAINER: u32 = 2;
+const SEC_SCHEDULE: u32 = 3;
+const SEC_OPT: u32 = 4;
+
+/// Sanity caps for untrusted header fields.
+const MAX_NAME_LEN: usize = 4096;
+const MAX_RANK: usize = 16;
+const MAX_TENSORS: usize = 1 << 20;
+const MAX_DIM: u64 = 1 << 40;
+
+/// Native optimizer state: the `OptKind`, its internal step counter, and
+/// one [`crate::optim::StateSerde`] blob per parameter tensor.
+#[derive(Clone, Debug, PartialEq)]
+pub struct OptSection {
+    pub kind: OptKind,
+    pub opt_step: u64,
+    pub blobs: Vec<Vec<u8>>,
+}
+
+/// LR-schedule position: the base LR and the schedule shape. Combined
+/// with the trainer step this pins the resumed LR exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScheduleSection {
+    pub base_lr: f32,
+    pub schedule: LrSchedule,
+}
+
+/// Everything a checkpoint can carry. v1 files populate only
+/// `step`/`names`/`params`.
+#[derive(Debug)]
+pub struct Checkpoint {
+    pub version: u32,
+    pub step: u64,
+    pub names: Vec<String>,
+    pub params: Vec<Tensor>,
+    /// Data-stream RNG snapshot `(state, inc)` (see `util::rng::Pcg32`).
+    pub rng: Option<(u64, u64)>,
+    pub schedule: Option<ScheduleSection>,
+    pub opt: Option<OptSection>,
+}
+
+// ---------------------------------------------------------------------------
+// Saving
+// ---------------------------------------------------------------------------
+
+/// Save a v1 (params-only) checkpoint. Kept for compatibility and for
+/// producing fixtures; new code should use [`save_v2`].
 pub fn save(path: &Path, step: u64, names: &[String], tensors: &[Tensor]) -> Result<()> {
     assert_eq!(names.len(), tensors.len());
-    let mut w = BufWriter::new(std::fs::File::create(path).with_context(|| format!("{path:?}"))?);
-    w.write_all(MAGIC)?;
-    w.write_all(&VERSION.to_le_bytes())?;
-    w.write_all(&step.to_le_bytes())?;
-    w.write_all(&(tensors.len() as u32).to_le_bytes())?;
-    for (name, t) in names.iter().zip(tensors) {
-        w.write_all(&(name.len() as u32).to_le_bytes())?;
-        w.write_all(name.as_bytes())?;
-        w.write_all(&(t.shape().len() as u32).to_le_bytes())?;
-        for &d in t.shape() {
-            w.write_all(&(d as u64).to_le_bytes())?;
+    atomic_write(path, |w| {
+        w.write_all(MAGIC)?;
+        w_u32(w, VERSION_V1)?;
+        w_u64(w, step)?;
+        stream_tensor_table(w, names, tensors)
+    })
+}
+
+/// Save a v2 checkpoint: parameters + trainer step, optional data-RNG
+/// snapshot, optional LR-schedule position, optional native optimizer
+/// state.
+///
+/// The large payloads (tensor data, optimizer blobs) stream straight to
+/// the file — section lengths are computed up front, so no whole-section
+/// buffer is materialized — and the write is atomic (temp file + rename),
+/// so a crash mid-save never destroys the previous checkpoint.
+pub fn save_v2(
+    path: &Path,
+    step: u64,
+    names: &[String],
+    params: &[Tensor],
+    rng: Option<(u64, u64)>,
+    schedule: Option<&ScheduleSection>,
+    opt: Option<&OptSection>,
+) -> Result<()> {
+    assert_eq!(names.len(), params.len());
+
+    // Small sections are assembled in memory; PARAMS/OPT stream.
+    let mut t = BlobWriter::new();
+    t.u64(step);
+    match rng {
+        Some((state, inc)) => {
+            t.u8(1);
+            t.u64(state);
+            t.u64(inc);
         }
-        for &v in t.data() {
-            w.write_all(&v.to_le_bytes())?;
+        None => t.u8(0),
+    }
+    let trainer_payload = t.finish();
+
+    let sched_payload = schedule.map(|s| {
+        let mut w = BlobWriter::new();
+        w.f32(s.base_lr);
+        let (tag, a, b, c) = s.schedule.encode();
+        w.u8(tag);
+        w.u64(a);
+        w.u64(b);
+        w.f32(c);
+        w.finish()
+    });
+
+    let n_sections = 2 + sched_payload.is_some() as u32 + opt.is_some() as u32;
+    atomic_write(path, |w| {
+        w.write_all(MAGIC)?;
+        w_u32(w, VERSION_V2)?;
+        w_u32(w, n_sections)?;
+
+        w_u32(w, SEC_PARAMS)?;
+        w_u64(w, tensor_table_len(names, params))?;
+        stream_tensor_table(w, names, params)?;
+
+        w_u32(w, SEC_TRAINER)?;
+        w_u64(w, trainer_payload.len() as u64)?;
+        w.write_all(&trainer_payload)?;
+
+        if let Some(p) = &sched_payload {
+            w_u32(w, SEC_SCHEDULE)?;
+            w_u64(w, p.len() as u64)?;
+            w.write_all(p)?;
         }
+
+        if let Some(o) = opt {
+            w_u32(w, SEC_OPT)?;
+            let len: u64 =
+                4 + 8 + 4 + o.blobs.iter().map(|b| 8 + b.len() as u64).sum::<u64>();
+            w_u64(w, len)?;
+            w_u32(w, o.kind.tag())?;
+            w_u64(w, o.opt_step)?;
+            w_u32(w, o.blobs.len() as u32)?;
+            for blob in &o.blobs {
+                w_u64(w, blob.len() as u64)?;
+                w.write_all(blob)?;
+            }
+        }
+        Ok(())
+    })
+}
+
+/// Stream the writer's output to `<path>.tmp` in the same directory,
+/// fsync, then atomically rename over `path` — a crash mid-save can
+/// never destroy the previous checkpoint (the whole point of
+/// checkpointing).
+fn atomic_write(
+    path: &Path,
+    f: impl FnOnce(&mut BufWriter<std::fs::File>) -> std::io::Result<()>,
+) -> Result<()> {
+    let mut tmp_name =
+        path.file_name().map(|n| n.to_os_string()).unwrap_or_else(|| "checkpoint".into());
+    tmp_name.push(".tmp");
+    let tmp = path.with_file_name(tmp_name);
+    let write_all = || -> std::io::Result<()> {
+        let mut w = BufWriter::new(std::fs::File::create(&tmp)?);
+        f(&mut w)?;
+        w.flush()?;
+        w.into_inner().map_err(|e| e.into_error())?.sync_all()
+    };
+    if let Err(e) = write_all() {
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("writing {tmp:?}"));
+    }
+    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} over {path:?}"))
+}
+
+/// Byte length of the streamed tensor table (the PARAMS section payload).
+fn tensor_table_len(names: &[String], tensors: &[Tensor]) -> u64 {
+    4 + names
+        .iter()
+        .zip(tensors)
+        .map(|(n, t)| 4 + n.len() as u64 + 4 + 8 * t.shape().len() as u64 + 4 * t.numel() as u64)
+        .sum::<u64>()
+}
+
+fn w_u32(w: &mut impl Write, v: u32) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn w_u64(w: &mut impl Write, v: u64) -> std::io::Result<()> {
+    w.write_all(&v.to_le_bytes())
+}
+
+fn w_f32s(w: &mut impl Write, vals: &[f32]) -> std::io::Result<()> {
+    // Encode in 4 KiB chunks so the hot path is memcpy, not per-element
+    // write_all bookkeeping.
+    let mut buf = [0u8; 4096];
+    for chunk in vals.chunks(1024) {
+        let mut n = 0;
+        for &v in chunk {
+            buf[n..n + 4].copy_from_slice(&v.to_le_bytes());
+            n += 4;
+        }
+        w.write_all(&buf[..n])?;
     }
     Ok(())
 }
 
-pub fn load(path: &Path) -> Result<(u64, Vec<String>, Vec<Tensor>)> {
-    let mut r = BufReader::new(std::fs::File::open(path).with_context(|| format!("{path:?}"))?);
-    let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
-    if &magic != MAGIC {
-        bail!("not a SMMF checkpoint: {path:?}");
-    }
-    let version = read_u32(&mut r)?;
-    if version != VERSION {
-        bail!("unsupported checkpoint version {version}");
-    }
-    let step = read_u64(&mut r)?;
-    let n = read_u32(&mut r)? as usize;
-    let mut names = Vec::with_capacity(n);
-    let mut tensors = Vec::with_capacity(n);
-    for _ in 0..n {
-        let name_len = read_u32(&mut r)? as usize;
-        if name_len > 4096 {
-            bail!("corrupt checkpoint: name_len {name_len}");
+fn stream_tensor_table(
+    w: &mut impl Write,
+    names: &[String],
+    tensors: &[Tensor],
+) -> std::io::Result<()> {
+    w_u32(w, tensors.len() as u32)?;
+    for (name, t) in names.iter().zip(tensors) {
+        w_u32(w, name.len() as u32)?;
+        w.write_all(name.as_bytes())?;
+        w_u32(w, t.shape().len() as u32)?;
+        for &d in t.shape() {
+            w_u64(w, d as u64)?;
         }
-        let mut name = vec![0u8; name_len];
-        r.read_exact(&mut name)?;
-        let rank = read_u32(&mut r)? as usize;
-        if rank > 16 {
-            bail!("corrupt checkpoint: rank {rank}");
+        w_f32s(w, t.data())?;
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Loading
+// ---------------------------------------------------------------------------
+
+/// Load a checkpoint of any supported version. Tensor data and optimizer
+/// blobs stream from the file straight into their final buffers — peak
+/// transient memory is one 4 KiB chunk, not a second copy of the file.
+pub fn load_any(path: &Path) -> Result<Checkpoint> {
+    let total = std::fs::metadata(path).with_context(|| format!("reading {path:?}"))?.len();
+    let file = std::fs::File::open(path).with_context(|| format!("reading {path:?}"))?;
+    parse(std::io::BufReader::new(file), total)
+        .with_context(|| format!("corrupt checkpoint {path:?}"))
+}
+
+/// Legacy v1 loader signature: `(step, names, params)` of any readable
+/// checkpoint (v2 files simply drop the extra sections).
+pub fn load(path: &Path) -> Result<(u64, Vec<String>, Vec<Tensor>)> {
+    let ck = load_any(path)?;
+    Ok((ck.step, ck.names, ck.params))
+}
+
+/// Bounded streaming reader: every read (and every allocation) is
+/// validated against the bytes actually remaining in the file first, so
+/// a corrupt length field can produce an error but never an OOM.
+struct Src<R> {
+    r: R,
+    left: u64,
+}
+
+impl<R: std::io::Read> Src<R> {
+    fn take_into(&mut self, buf: &mut [u8], what: &str) -> Result<()> {
+        if (buf.len() as u64) > self.left {
+            bail!("truncated: need {} bytes for {what}, only {} remain", buf.len(), self.left);
+        }
+        self.r.read_exact(buf).with_context(|| format!("reading {what}"))?;
+        self.left -= buf.len() as u64;
+        Ok(())
+    }
+
+    fn u8(&mut self, what: &str) -> Result<u8> {
+        let mut b = [0u8; 1];
+        self.take_into(&mut b, what)?;
+        Ok(b[0])
+    }
+
+    fn u32(&mut self, what: &str) -> Result<u32> {
+        let mut b = [0u8; 4];
+        self.take_into(&mut b, what)?;
+        Ok(u32::from_le_bytes(b))
+    }
+
+    fn u64(&mut self, what: &str) -> Result<u64> {
+        let mut b = [0u8; 8];
+        self.take_into(&mut b, what)?;
+        Ok(u64::from_le_bytes(b))
+    }
+
+    fn f32(&mut self, what: &str) -> Result<f32> {
+        let mut b = [0u8; 4];
+        self.take_into(&mut b, what)?;
+        Ok(f32::from_le_bytes(b))
+    }
+
+    fn bytes_vec(&mut self, n: usize, what: &str) -> Result<Vec<u8>> {
+        if (n as u64) > self.left {
+            bail!("{what}: claims {n} bytes, only {} remain", self.left);
+        }
+        let mut v = vec![0u8; n];
+        self.r.read_exact(&mut v).with_context(|| format!("reading {what}"))?;
+        self.left -= n as u64;
+        Ok(v)
+    }
+
+    /// Read `numel` little-endian f32s in 4 KiB chunks.
+    fn f32s_vec(&mut self, numel: usize, what: &str) -> Result<Vec<f32>> {
+        if (numel as u64) > self.left / 4 {
+            bail!("{what}: claims {numel} f32 elements but only {} bytes remain", self.left);
+        }
+        let mut out = Vec::with_capacity(numel);
+        let mut buf = [0u8; 4096];
+        let mut rem = numel;
+        while rem > 0 {
+            let take = rem.min(1024);
+            let bytes = &mut buf[..take * 4];
+            self.r.read_exact(bytes).with_context(|| format!("reading {what}"))?;
+            self.left -= (take as u64) * 4;
+            for c in bytes.chunks_exact(4) {
+                out.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+            rem -= take;
+        }
+        Ok(out)
+    }
+
+    fn skip(&mut self, mut n: u64, what: &str) -> Result<()> {
+        if n > self.left {
+            bail!("{what}: claims {n} bytes, only {} remain", self.left);
+        }
+        let mut buf = [0u8; 4096];
+        while n > 0 {
+            let take = n.min(4096) as usize;
+            self.r.read_exact(&mut buf[..take]).with_context(|| format!("skipping {what}"))?;
+            self.left -= take as u64;
+            n -= take as u64;
+        }
+        Ok(())
+    }
+
+    /// Require the source to be fully consumed (no trailing garbage).
+    fn finish(self) -> Result<()> {
+        if self.left != 0 {
+            bail!("checkpoint has {} trailing bytes", self.left);
+        }
+        Ok(())
+    }
+}
+
+fn parse<R: std::io::Read>(r: R, total: u64) -> Result<Checkpoint> {
+    let mut s = Src { r, left: total };
+    let mut magic = [0u8; 8];
+    s.take_into(&mut magic, "magic")?;
+    if &magic != MAGIC {
+        bail!("not a SMMF checkpoint (bad magic)");
+    }
+    let version = s.u32("version")?;
+    match version {
+        VERSION_V1 => parse_v1(s),
+        VERSION_V2 => parse_v2(s),
+        other => bail!("unsupported checkpoint version {other} (supported: 1, 2)"),
+    }
+}
+
+fn parse_v1<R: std::io::Read>(mut s: Src<R>) -> Result<Checkpoint> {
+    let step = s.u64("step")?;
+    let (names, params) = read_tensor_table(&mut s)?;
+    s.finish()?;
+    Ok(Checkpoint {
+        version: VERSION_V1,
+        step,
+        names,
+        params,
+        rng: None,
+        schedule: None,
+        opt: None,
+    })
+}
+
+fn parse_v2<R: std::io::Read>(mut s: Src<R>) -> Result<Checkpoint> {
+    let n_sections = s.u32("section count")? as usize;
+    if n_sections > 64 {
+        bail!("implausible section count {n_sections}");
+    }
+    let mut ck = Checkpoint {
+        version: VERSION_V2,
+        step: 0,
+        names: Vec::new(),
+        params: Vec::new(),
+        rng: None,
+        schedule: None,
+        opt: None,
+    };
+    // Known tags may appear at most once; TRAINER and PARAMS must both
+    // be present (a corrupt tag could otherwise drop the step silently
+    // and resume would retrain from step 0 on trained parameters).
+    let mut seen = [false; 5];
+    for i in 0..n_sections {
+        let tag = s.u32(&format!("section {i} tag"))?;
+        if let Some(flag) = seen.get_mut(tag as usize) {
+            if *flag {
+                bail!("duplicate section tag {tag}");
+            }
+            *flag = true;
+        }
+        let len = s.u64(&format!("section {i} length"))?;
+        if len > s.left {
+            bail!("section {i} (tag {tag}) claims {len} bytes, only {} remain", s.left);
+        }
+        let end = s.left - len;
+        match tag {
+            SEC_PARAMS => {
+                let (names, params) = read_tensor_table(&mut s).context("PARAMS section")?;
+                ck.names = names;
+                ck.params = params;
+            }
+            SEC_TRAINER => {
+                ck.step = s.u64("TRAINER step")?;
+                if s.u8("TRAINER rng flag")? == 1 {
+                    ck.rng = Some((s.u64("TRAINER rng state")?, s.u64("TRAINER rng inc")?));
+                }
+            }
+            SEC_SCHEDULE => {
+                let base_lr = s.f32("SCHEDULE base_lr")?;
+                let stag = s.u8("SCHEDULE kind")?;
+                let a = s.u64("SCHEDULE a")?;
+                let b = s.u64("SCHEDULE b")?;
+                let c = s.f32("SCHEDULE c")?;
+                let schedule = LrSchedule::decode(stag, a, b, c)
+                    .with_context(|| format!("unknown schedule tag {stag}"))?;
+                ck.schedule = Some(ScheduleSection { base_lr, schedule });
+            }
+            SEC_OPT => {
+                let ktag = s.u32("OPT kind tag")?;
+                let kind = OptKind::from_tag(ktag)
+                    .with_context(|| format!("unknown optimizer tag {ktag}"))?;
+                let opt_step = s.u64("OPT step")?;
+                let n = s.u32("OPT tensor count")? as usize;
+                if n > MAX_TENSORS {
+                    bail!("OPT section claims {n} tensors (max {MAX_TENSORS})");
+                }
+                let mut blobs = Vec::with_capacity(n.min(1024));
+                for b in 0..n {
+                    let blen = s.u64(&format!("OPT blob {b} length"))? as usize;
+                    blobs.push(s.bytes_vec(blen, &format!("OPT blob {b}"))?);
+                }
+                ck.opt = Some(OptSection { kind, opt_step, blobs });
+            }
+            // unknown section: forward-compatible skip
+            _ => s.skip(len, &format!("section {i} (tag {tag})"))?,
+        }
+        if s.left != end {
+            bail!(
+                "section {i} (tag {tag}): declared {len} bytes but {} were consumed",
+                (end + len) - s.left
+            );
+        }
+    }
+    s.finish()?;
+    if !seen[SEC_PARAMS as usize] {
+        bail!("checkpoint has no PARAMS section");
+    }
+    if !seen[SEC_TRAINER as usize] {
+        bail!("checkpoint has no TRAINER section");
+    }
+    Ok(ck)
+}
+
+fn read_tensor_table<R: std::io::Read>(s: &mut Src<R>) -> Result<(Vec<String>, Vec<Tensor>)> {
+    let n = s.u32("tensor count")? as usize;
+    if n > MAX_TENSORS {
+        bail!("tensor count {n} exceeds the sanity cap ({MAX_TENSORS})");
+    }
+    let mut names = Vec::with_capacity(n.min(1024));
+    let mut tensors = Vec::with_capacity(n.min(1024));
+    for i in 0..n {
+        let name_len = s.u32(&format!("tensor {i}: name length"))? as usize;
+        if name_len > MAX_NAME_LEN {
+            bail!("tensor {i}: name length {name_len} exceeds the cap ({MAX_NAME_LEN})");
+        }
+        let name = String::from_utf8(s.bytes_vec(name_len, &format!("tensor {i} name"))?)
+            .with_context(|| format!("tensor {i}: name is not valid UTF-8"))?;
+        let rank = s.u32(&format!("tensor {i} ({name}): rank"))? as usize;
+        if rank > MAX_RANK {
+            bail!("tensor {i} ({name}): rank {rank} exceeds the cap ({MAX_RANK})");
         }
         let mut shape = Vec::with_capacity(rank);
-        for _ in 0..rank {
-            shape.push(read_u64(&mut r)? as usize);
+        let mut numel: usize = 1;
+        for a in 0..rank {
+            let d = s.u64(&format!("tensor {i} ({name}): dim {a}"))?;
+            if d > MAX_DIM {
+                bail!("tensor {i} ({name}): dim {a} = {d} exceeds the cap ({MAX_DIM})");
+            }
+            numel = numel
+                .checked_mul(d as usize)
+                .with_context(|| format!("tensor {i} ({name}): element count overflows"))?;
+            shape.push(d as usize);
         }
-        let numel: usize = shape.iter().product();
-        let mut data = vec![0f32; numel];
-        let mut buf = [0u8; 4];
-        for v in data.iter_mut() {
-            r.read_exact(&mut buf)?;
-            *v = f32::from_le_bytes(buf);
-        }
-        names.push(String::from_utf8(name)?);
+        // f32s_vec validates the claimed payload against the bytes
+        // actually remaining BEFORE allocating — a corrupt header can
+        // not force an OOM.
+        let data = s.f32s_vec(numel, &format!("tensor {i} ({name})"))?;
+        names.push(name);
         tensors.push(Tensor::from_vec(&shape, data));
     }
-    Ok((step, names, tensors))
-}
-
-fn read_u32(r: &mut impl Read) -> Result<u32> {
-    let mut b = [0u8; 4];
-    r.read_exact(&mut b)?;
-    Ok(u32::from_le_bytes(b))
-}
-
-fn read_u64(r: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    r.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
+    Ok((names, tensors))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("smmf_ckpt_{tag}_{}.bin", std::process::id()))
+    }
+
+    fn parse_bytes(data: &[u8]) -> Result<Checkpoint> {
+        super::parse(data, data.len() as u64)
+    }
+
+    fn sample_tensors() -> (Vec<String>, Vec<Tensor>) {
+        (
+            vec!["w1".to_string(), "b1".to_string()],
+            vec![
+                Tensor::from_vec(&[2, 3], vec![1., -2., 3., 4., 5.5, -6.]),
+                Tensor::from_vec(&[3], vec![0.1, 0.2, 0.3]),
+            ],
+        )
+    }
+
     #[test]
     fn roundtrip() {
-        let tmp = std::env::temp_dir().join(format!("smmf_ckpt_{}.bin", std::process::id()));
-        let names = vec!["w1".to_string(), "b1".to_string()];
-        let tensors = vec![
-            Tensor::from_vec(&[2, 3], vec![1., -2., 3., 4., 5.5, -6.]),
-            Tensor::from_vec(&[3], vec![0.1, 0.2, 0.3]),
-        ];
+        let tmp = tmp("v1");
+        let (names, tensors) = sample_tensors();
         save(&tmp, 42, &names, &tensors).unwrap();
         let (step, n2, t2) = load(&tmp).unwrap();
         assert_eq!(step, 42);
@@ -110,10 +558,196 @@ mod tests {
     }
 
     #[test]
+    fn v2_roundtrip_all_sections() {
+        let tmp = tmp("v2");
+        let (names, tensors) = sample_tensors();
+        let sched = ScheduleSection {
+            base_lr: 1e-3,
+            schedule: LrSchedule::Cosine { warmup: 10, total: 100, floor: 0.05 },
+        };
+        let opt = OptSection {
+            kind: OptKind::Smmf,
+            opt_step: 17,
+            blobs: vec![vec![1, 2, 3], vec![]],
+        };
+        save_v2(&tmp, 17, &names, &tensors, Some((99, 7)), Some(&sched), Some(&opt)).unwrap();
+        let ck = load_any(&tmp).unwrap();
+        assert_eq!(ck.version, VERSION_V2);
+        assert_eq!(ck.step, 17);
+        assert_eq!(ck.names, names);
+        assert_eq!(ck.params, tensors);
+        assert_eq!(ck.rng, Some((99, 7)));
+        assert_eq!(ck.schedule, Some(sched));
+        assert_eq!(ck.opt, Some(opt));
+        // legacy signature also reads v2
+        let (step, n2, t2) = load(&tmp).unwrap();
+        assert_eq!((step, n2, t2), (17, names, tensors));
+        std::fs::remove_file(&tmp).unwrap();
+    }
+
+    #[test]
+    fn v1_file_loads_through_load_any() {
+        let tmp = tmp("v1_compat");
+        let (names, tensors) = sample_tensors();
+        save(&tmp, 5, &names, &tensors).unwrap();
+        let ck = load_any(&tmp).unwrap();
+        assert_eq!(ck.version, VERSION_V1);
+        assert_eq!(ck.step, 5);
+        assert_eq!(ck.params, tensors);
+        assert!(ck.rng.is_none() && ck.schedule.is_none() && ck.opt.is_none());
+        std::fs::remove_file(&tmp).unwrap();
+    }
+
+    #[test]
+    fn save_overwrites_atomically_without_tmp_residue() {
+        let path = tmp("atomic");
+        let (names, tensors) = sample_tensors();
+        save_v2(&path, 1, &names, &tensors, None, None, None).unwrap();
+        // Overwriting an existing checkpoint goes through rename, leaves
+        // no .tmp sibling, and the declared PARAMS length matches the
+        // streamed bytes exactly (parse's finish() would reject drift).
+        save_v2(&path, 2, &names, &tensors, None, None, None).unwrap();
+        assert_eq!(load_any(&path).unwrap().step, 2);
+        let mut side = path.file_name().unwrap().to_os_string();
+        side.push(".tmp");
+        assert!(!path.with_file_name(side).exists());
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
     fn rejects_garbage() {
-        let tmp = std::env::temp_dir().join(format!("smmf_bad_{}.bin", std::process::id()));
+        let tmp = tmp("bad");
         std::fs::write(&tmp, b"not a checkpoint").unwrap();
         assert!(load(&tmp).is_err());
         std::fs::remove_file(&tmp).unwrap();
+    }
+
+    #[test]
+    fn rejects_truncation_at_every_prefix() {
+        // Every strict prefix of a valid v2 file must error cleanly.
+        let tmp = tmp("trunc");
+        let (names, tensors) = sample_tensors();
+        let opt =
+            OptSection { kind: OptKind::Adam, opt_step: 3, blobs: vec![vec![0u8; 16], vec![]] };
+        save_v2(&tmp, 3, &names, &tensors, Some((1, 2)), None, Some(&opt)).unwrap();
+        let full = std::fs::read(&tmp).unwrap();
+        for cut in 0..full.len() {
+            assert!(parse_bytes(&full[..cut]).is_err(), "prefix of {cut} bytes parsed");
+        }
+        assert!(parse_bytes(&full).is_ok());
+        std::fs::remove_file(&tmp).unwrap();
+    }
+
+    #[test]
+    fn rejects_oversized_and_non_utf8_fields() {
+        // Hand-build hostile v1 files: the loader must refuse before
+        // allocating.
+        let mut w = BlobWriter::new();
+        w.bytes(MAGIC);
+        w.u32(VERSION_V1);
+        w.u64(0);
+        w.u32(1); // one tensor
+        w.u32(u32::MAX); // absurd name length
+        let e = parse_bytes(&w.finish()).unwrap_err();
+        assert!(format!("{e:#}").contains("name length"), "{e:#}");
+
+        let mut w = BlobWriter::new();
+        w.bytes(MAGIC);
+        w.u32(VERSION_V1);
+        w.u64(0);
+        w.u32(1);
+        w.u32(2);
+        w.bytes(&[0xff, 0xfe]); // invalid UTF-8 name
+        w.u32(0);
+        let e = parse_bytes(&w.finish()).unwrap_err();
+        assert!(format!("{e:#}").contains("UTF-8"), "{e:#}");
+
+        let mut w = BlobWriter::new();
+        w.bytes(MAGIC);
+        w.u32(VERSION_V1);
+        w.u64(0);
+        w.u32(1);
+        w.u32(1);
+        w.bytes(b"w");
+        w.u32(99); // absurd rank
+        let e = parse_bytes(&w.finish()).unwrap_err();
+        assert!(format!("{e:#}").contains("rank"), "{e:#}");
+
+        // Huge claimed dims: must be caught by the remaining-bytes check
+        // (or the dim cap), never by an allocation attempt.
+        let mut w = BlobWriter::new();
+        w.bytes(MAGIC);
+        w.u32(VERSION_V1);
+        w.u64(0);
+        w.u32(1);
+        w.u32(1);
+        w.bytes(b"w");
+        w.u32(2);
+        w.u64(1 << 30);
+        w.u64(1 << 30);
+        let e = parse_bytes(&w.finish()).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(msg.contains("remain") || msg.contains("overflow"), "{msg}");
+    }
+
+    #[test]
+    fn unknown_version_and_sections() {
+        let mut w = BlobWriter::new();
+        w.bytes(MAGIC);
+        w.u32(99);
+        assert!(parse_bytes(&w.finish()).is_err());
+
+        // Unknown section tag is skipped; params still load.
+        let (names, tensors) = sample_tensors();
+        let mut params = Vec::new();
+        super::stream_tensor_table(&mut params, &names, &tensors).unwrap();
+        let trainer: &[u8] = &[3, 0, 0, 0, 0, 0, 0, 0, 0]; // step=3, no rng
+        let mut w = BlobWriter::new();
+        w.bytes(MAGIC);
+        w.u32(VERSION_V2);
+        w.u32(3);
+        w.u32(777); // future section
+        w.u64(3);
+        w.bytes(&[1, 2, 3]);
+        w.u32(SEC_PARAMS);
+        w.u64(params.len() as u64);
+        w.bytes(&params);
+        w.u32(SEC_TRAINER);
+        w.u64(trainer.len() as u64);
+        w.bytes(trainer);
+        let ck = parse_bytes(&w.finish()).unwrap();
+        assert_eq!(ck.params, tensors);
+        assert_eq!(ck.step, 3);
+
+        // A v2 file missing the TRAINER section must be rejected — step
+        // would silently default to 0 and resume would retrain from the
+        // start on already-trained parameters.
+        let mut w = BlobWriter::new();
+        w.bytes(MAGIC);
+        w.u32(VERSION_V2);
+        w.u32(1);
+        w.u32(SEC_PARAMS);
+        w.u64(params.len() as u64);
+        w.bytes(&params);
+        let e = parse_bytes(&w.finish()).unwrap_err();
+        assert!(format!("{e:#}").contains("TRAINER"), "{e:#}");
+
+        // Duplicate known tags are rejected (last-wins would mask a
+        // corrupt tag byte).
+        let mut w = BlobWriter::new();
+        w.bytes(MAGIC);
+        w.u32(VERSION_V2);
+        w.u32(3);
+        w.u32(SEC_PARAMS);
+        w.u64(params.len() as u64);
+        w.bytes(&params);
+        w.u32(SEC_TRAINER);
+        w.u64(trainer.len() as u64);
+        w.bytes(trainer);
+        w.u32(SEC_TRAINER);
+        w.u64(trainer.len() as u64);
+        w.bytes(trainer);
+        let e = parse_bytes(&w.finish()).unwrap_err();
+        assert!(format!("{e:#}").contains("duplicate"), "{e:#}");
     }
 }

@@ -17,13 +17,56 @@ pub struct RunLogger {
 }
 
 impl RunLogger {
-    /// Create `runs/<name>/` with `metrics.jsonl` and `metrics.csv`.
+    /// Create `runs/<name>/` with fresh `metrics.jsonl` and `metrics.csv`
+    /// (truncating any previous run of the same name).
     pub fn create(root: impl AsRef<Path>, name: &str) -> Result<RunLogger> {
+        Self::open(root, name, false)
+    }
+
+    /// Open `runs/<name>/` keeping existing metrics and appending — used
+    /// by resumed runs so the pre-checkpoint history (the training
+    /// curves) survives the restart. Rows logged *after* `resume_step`
+    /// are pruned first: a run killed between its last checkpoint and
+    /// its last log line would otherwise leave rows the resumed run
+    /// re-logs, producing duplicate steps in the curves. The CSV header
+    /// is only emitted when the file is new/empty.
+    pub fn append(root: impl AsRef<Path>, name: &str, resume_step: u64) -> Result<RunLogger> {
+        let dir = root.as_ref().join(name);
+        prune_rows_after(&dir.join("metrics.jsonl"), resume_step, |line| {
+            crate::util::json::Json::parse(line)
+                .ok()
+                .and_then(|j| j.get("step").and_then(crate::util::json::Json::as_f64))
+                .map(|s| s as u64)
+        })?;
+        prune_rows_after(&dir.join("metrics.csv"), resume_step, |line| {
+            // header ("step,...") fails the parse and is kept
+            line.split(',').next().and_then(|f| f.parse::<u64>().ok())
+        })?;
+        Self::open(root, name, true)
+    }
+
+    fn open(root: impl AsRef<Path>, name: &str, append: bool) -> Result<RunLogger> {
         let dir = root.as_ref().join(name);
         fs::create_dir_all(&dir).with_context(|| format!("mkdir {dir:?}"))?;
-        let jsonl = BufWriter::new(File::create(dir.join("metrics.jsonl"))?);
-        let csv = BufWriter::new(File::create(dir.join("metrics.csv"))?);
-        Ok(RunLogger { dir, jsonl, csv, csv_header_written: false, started: Instant::now() })
+        let open_log = |file: &str| -> Result<(File, bool)> {
+            let path = dir.join(file);
+            if append {
+                let f = fs::OpenOptions::new().create(true).append(true).open(&path)?;
+                let nonempty = f.metadata()?.len() > 0;
+                Ok((f, nonempty))
+            } else {
+                Ok((File::create(&path)?, false))
+            }
+        };
+        let (jsonl, _) = open_log("metrics.jsonl")?;
+        let (csv, csv_nonempty) = open_log("metrics.csv")?;
+        Ok(RunLogger {
+            dir,
+            jsonl: BufWriter::new(jsonl),
+            csv: BufWriter::new(csv),
+            csv_header_written: csv_nonempty,
+            started: Instant::now(),
+        })
     }
 
     /// Log one step record: fixed fields + extra named values.
@@ -72,6 +115,37 @@ impl Drop for RunLogger {
     }
 }
 
+/// Drop lines whose parsed step exceeds `resume_step` (lines that don't
+/// parse — headers — are kept), plus any unterminated final line: a run
+/// killed mid-write leaves a partial record with no trailing newline,
+/// and appending onto it would corrupt the file. Missing files are a
+/// no-op.
+fn prune_rows_after(
+    path: &Path,
+    resume_step: u64,
+    step_of: impl Fn(&str) -> Option<u64>,
+) -> Result<()> {
+    let Ok(text) = fs::read_to_string(path) else {
+        return Ok(());
+    };
+    let complete = text.is_empty() || text.ends_with('\n');
+    let mut lines: Vec<&str> = text.lines().collect();
+    if !complete {
+        lines.pop(); // partial trailing record from a mid-write crash
+    }
+    let before = lines.len();
+    let kept: Vec<&str> =
+        lines.into_iter().filter(|l| step_of(l).map_or(true, |s| s <= resume_step)).collect();
+    if !complete || kept.len() != before {
+        let mut out = kept.join("\n");
+        if !out.is_empty() {
+            out.push('\n');
+        }
+        fs::write(path, out).with_context(|| format!("pruning {path:?}"))?;
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -93,6 +167,58 @@ mod tests {
         assert_eq!(rec.get("loss").unwrap().as_f64(), Some(2.5));
         let csv = std::fs::read_to_string(tmp.join("t1/metrics.csv")).unwrap();
         assert!(csv.starts_with("step,loss,elapsed_s,lr"));
+        std::fs::remove_dir_all(&tmp).unwrap();
+    }
+
+    #[test]
+    fn append_keeps_history_prunes_post_checkpoint_rows_and_skips_duplicate_header() {
+        let tmp = std::env::temp_dir().join(format!("smmf_metrics_app_{}", std::process::id()));
+        {
+            let mut log = RunLogger::create(&tmp, "t2").unwrap();
+            log.log(1, 2.5, &[("lr", 1e-3)]).unwrap();
+            // Simulates a crash after the step-1 checkpoint: steps 2-3
+            // were logged but never checkpointed.
+            log.log(2, 2.0, &[("lr", 1e-3)]).unwrap();
+            log.log(3, 1.8, &[("lr", 1e-3)]).unwrap();
+        }
+        // Resume from the step-1 checkpoint: rows > 1 are pruned, the
+        // surviving history is kept, and the re-run rows append cleanly.
+        {
+            let mut log = RunLogger::append(&tmp, "t2", 1).unwrap();
+            log.log(2, 2.0, &[("lr", 1e-3)]).unwrap();
+        }
+        let jsonl = std::fs::read_to_string(tmp.join("t2/metrics.jsonl")).unwrap();
+        let steps: Vec<f64> = jsonl
+            .lines()
+            .map(|l| Json::parse(l).unwrap().get("step").unwrap().as_f64().unwrap())
+            .collect();
+        assert_eq!(steps, vec![1.0, 2.0], "no duplicate steps: {jsonl}");
+        let csv = std::fs::read_to_string(tmp.join("t2/metrics.csv")).unwrap();
+        let headers = csv.lines().filter(|l| l.starts_with("step,")).count();
+        assert_eq!(headers, 1, "{csv}");
+        assert_eq!(csv.lines().count(), 3); // header + steps 1, 2
+        // Appending into a fresh dir still writes the header.
+        {
+            let mut log = RunLogger::append(&tmp, "t3", 0).unwrap();
+            log.log(1, 1.0, &[("lr", 1e-3)]).unwrap();
+        }
+        let csv3 = std::fs::read_to_string(tmp.join("t3/metrics.csv")).unwrap();
+        assert!(csv3.starts_with("step,loss,elapsed_s,lr"));
+        // A partial trailing record (crash mid-write, no newline) is
+        // dropped before appending — the file stays line-parseable.
+        let jsonl_path = tmp.join("t3/metrics.jsonl");
+        let mut contents = std::fs::read_to_string(&jsonl_path).unwrap();
+        contents.push_str("{\"step\":2,\"lo"); // unterminated
+        std::fs::write(&jsonl_path, contents).unwrap();
+        {
+            let mut log = RunLogger::append(&tmp, "t3", 1).unwrap();
+            log.log(2, 0.9, &[("lr", 1e-3)]).unwrap();
+        }
+        let fixed = std::fs::read_to_string(&jsonl_path).unwrap();
+        assert_eq!(fixed.lines().count(), 2);
+        for line in fixed.lines() {
+            Json::parse(line).expect("every line parses");
+        }
         std::fs::remove_dir_all(&tmp).unwrap();
     }
 }

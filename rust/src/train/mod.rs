@@ -10,16 +10,23 @@
 //!   the SMMF update (through the L1 Pallas kernel) is one XLA program;
 //!   Rust only feeds batches and carries the factorized state between
 //!   calls. Used by the quickstart and the L1/L2 perf benches.
+//!
+//! [`Trainer::save_checkpoint`] / [`Trainer::resume_from`] persist and
+//! restore the full training state (parameters, step, data-RNG position,
+//! LR schedule, native optimizer state) through the versioned
+//! [`checkpoint`] container, making long runs restart-safe with
+//! bit-identical trajectories.
 
 pub mod checkpoint;
 pub mod metrics;
 
 pub use metrics::RunLogger;
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
+use std::path::Path;
 
 use crate::optim::schedule::LrSchedule;
-use crate::optim::Optimizer;
+use crate::optim::{Optimizer, StateSerde};
 use crate::runtime::{
     init_params, lit_f32, lit_scalar_f32, lit_to_scalar_f32, lit_to_vec_f32, lit_zeros, Dtype,
     Graph, Runtime,
@@ -129,6 +136,102 @@ impl Trainer {
 
     pub fn optimizer_state_bytes(&self) -> u64 {
         self.opt.state_bytes()
+    }
+
+    /// Parameter names from the artifact spec, in registration order
+    /// (the tensor names written to checkpoints).
+    pub fn param_names(&self) -> Vec<String> {
+        self.graph.spec().params.iter().map(|p| p.name.clone()).collect()
+    }
+
+    /// Write a `SMMFCKPT` v2 checkpoint: parameters, trainer step, the
+    /// data-stream RNG snapshot (if the caller has one), the LR-schedule
+    /// position, and the optimizer's native state blobs — everything a
+    /// bit-identical resume needs.
+    pub fn save_checkpoint(&self, path: &Path, rng: Option<(u64, u64)>) -> Result<()> {
+        let names = self.param_names();
+        let sched = checkpoint::ScheduleSection {
+            base_lr: self.base_lr,
+            schedule: self.schedule.clone(),
+        };
+        let kind = crate::optim::OptKind::parse(self.opt.name())
+            .expect("optimizer name always parses back to its kind");
+        let opt = checkpoint::OptSection {
+            kind,
+            opt_step: self.opt.opt_step(),
+            blobs: self.opt.state_blobs(),
+        };
+        checkpoint::save_v2(path, self.step, &names, &self.params, rng, Some(&sched), Some(&opt))
+    }
+
+    /// Resume from a checkpoint written by [`Trainer::save_checkpoint`]
+    /// (or a legacy v1 file — parameters restore, optimizer momentum
+    /// restarts cold with a warning). Validates tensor names/shapes, the
+    /// optimizer kind and the LR schedule against this trainer's
+    /// configuration and errors on any mismatch. Returns the data-RNG
+    /// snapshot for the caller to restore into its batch source.
+    ///
+    /// Caveat: optimizer *hyperparameters* (β1/β2/ε/weight-decay/…) are
+    /// not stored in the v2 format, so a changed recipe beyond lr and
+    /// schedule cannot be detected here — state-layout disagreements
+    /// (momentum on/off, sign width, factored-vs-dense) still fail at
+    /// blob load. Bit-identical resume requires an unchanged config;
+    /// see docs/CHECKPOINT_FORMAT.md § Compatibility rules.
+    pub fn resume_from(&mut self, path: &Path) -> Result<Option<(u64, u64)>> {
+        let ck = checkpoint::load_any(path)?;
+        let names = self.param_names();
+        if ck.names != names {
+            bail!(
+                "checkpoint {path:?} holds tensors {:?}, artifact expects {:?}",
+                ck.names,
+                names
+            );
+        }
+        for ((name, have), want) in names.iter().zip(&ck.params).zip(&self.params) {
+            if have.shape() != want.shape() {
+                bail!(
+                    "checkpoint {path:?}: tensor {name} has shape {:?}, artifact expects {:?}",
+                    have.shape(),
+                    want.shape()
+                );
+            }
+        }
+        if let Some(s) = &ck.schedule {
+            if s.schedule != self.schedule || s.base_lr != self.base_lr {
+                bail!(
+                    "checkpoint {path:?} was written with lr={} schedule={:?}, this run is \
+                     configured with lr={} schedule={:?} — resumes must keep the recipe \
+                     (pass matching --lr / [schedule])",
+                    s.base_lr,
+                    s.schedule,
+                    self.base_lr,
+                    self.schedule
+                );
+            }
+        }
+        match &ck.opt {
+            Some(o) => {
+                if o.kind.name() != self.opt.name() {
+                    bail!(
+                        "checkpoint {path:?} holds {} state, this run uses {}",
+                        o.kind.name(),
+                        self.opt.name()
+                    );
+                }
+                self.opt
+                    .load_state_blobs(&o.blobs)
+                    .with_context(|| format!("restoring optimizer state from {path:?}"))?;
+                self.opt.set_opt_step(o.opt_step);
+            }
+            None => eprintln!(
+                "warning: {path:?} is a v{} checkpoint with no optimizer state — \
+                 momentum restarts cold",
+                ck.version
+            ),
+        }
+        self.params = ck.params;
+        self.step = ck.step;
+        Ok(ck.rng)
     }
 }
 

@@ -165,6 +165,14 @@ impl JsonSink {
         );
     }
 
+    /// Record an arbitrary pre-built JSON object — for non-timing
+    /// measurements tracked alongside the perf trajectory (e.g. the
+    /// SMMF-vs-Adam checkpoint size ratio emitted by the optimizer
+    /// bench).
+    pub fn push(&mut self, record: Json) {
+        self.records.push(record);
+    }
+
     pub fn len(&self) -> usize {
         self.records.len()
     }
@@ -225,13 +233,22 @@ mod tests {
         let mut sink = JsonSink::new("optimizer_step", &path);
         sink.record("mobilenet_v2_imagenet", "smmf", 4, &stats);
         assert_eq!(sink.len(), 1);
+        sink.push(
+            ObjBuilder::new()
+                .str("name", "checkpoint_size/mobilenet_v2_imagenet")
+                .num("smmf_vs_adam_ratio", 0.02)
+                .build(),
+        );
+        assert_eq!(sink.len(), 2);
         sink.write().unwrap();
         let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
         assert_eq!(parsed.get("benchmark").and_then(Json::as_str), Some("optimizer_step"));
-        let rec = &parsed.get("records").and_then(Json::as_arr).unwrap()[0];
+        let recs = parsed.get("records").and_then(Json::as_arr).unwrap();
+        let rec = &recs[0];
         assert_eq!(rec.get("optimizer").and_then(Json::as_str), Some("smmf"));
         assert_eq!(rec.get("threads").and_then(Json::as_f64), Some(4.0));
         assert!(rec.get("median_ns").and_then(Json::as_f64).unwrap() >= 0.0);
+        assert_eq!(recs[1].get("smmf_vs_adam_ratio").and_then(Json::as_f64), Some(0.02));
         std::fs::remove_file(&path).unwrap();
     }
 }

@@ -79,7 +79,12 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literals; emit null so the
+                    // output always reparses (e.g. a resumed run whose
+                    // loop never executed leaves summary losses as NaN).
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{n}");
@@ -328,6 +333,22 @@ impl<'a> Parser<'a> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn non_finite_numbers_serialize_as_null() {
+        // JSON has no NaN/Infinity: the writer must stay parseable even
+        // when a metric is undefined (e.g. a resumed run with no steps).
+        let doc = ObjBuilder::new()
+            .num("nan", f64::NAN)
+            .num("inf", f64::INFINITY)
+            .num("ok", 1.5)
+            .build();
+        let text = doc.to_string();
+        let parsed = Json::parse(&text).expect("writer output must reparse");
+        assert!(matches!(parsed.get("nan"), Some(Json::Null)));
+        assert!(matches!(parsed.get("inf"), Some(Json::Null)));
+        assert_eq!(parsed.get("ok").and_then(Json::as_f64), Some(1.5));
+    }
 
     #[test]
     fn roundtrip_manifest_like() {

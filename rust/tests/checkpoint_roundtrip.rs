@@ -1,0 +1,268 @@
+//! Checkpoint/resume correctness over the whole optimizer library.
+//!
+//! The acceptance bar (ISSUE 2): training 2N steps in one go must equal
+//! N steps + save + load into a fresh process-worth of state + N more
+//! steps, *bit for bit*, for all six optimizers, at `threads ∈ {1, 4}`
+//! — plus v1-file compatibility, corrupt-file error paths, and the
+//! on-disk SMMF-vs-Adam size ratio.
+//!
+//! The gradient stream is driven by a seeded `Pcg32` whose state is
+//! saved in the checkpoint's TRAINER section, exactly as the train
+//! loop's `BatchSource` RNG is — so the resumed scenario replays the
+//! same "data" without rerunning the first half.
+
+use std::path::PathBuf;
+
+use smmf_repro::models::inventory_by_name;
+use smmf_repro::optim::schedule::LrSchedule;
+use smmf_repro::optim::{build, memory, OptKind, OptimConfig, Optimizer, SignMode, StateSerde};
+use smmf_repro::tensor::Tensor;
+use smmf_repro::train::checkpoint::{self, OptSection, ScheduleSection};
+use smmf_repro::util::rng::Pcg32;
+
+fn test_shapes() -> Vec<Vec<usize>> {
+    // A mix that exercises every state layout: square-matricizable 2-D,
+    // an odd-length vector (word-unaligned sign rows), a conv-ish rank-4,
+    // a 1x1-conv pathology, and a scalar-ish tensor.
+    vec![vec![24, 16], vec![65], vec![4, 3, 2, 2], vec![6, 4, 1, 1], vec![1]]
+}
+
+fn cfg_for(kind: OptKind, threads: usize) -> OptimConfig {
+    OptimConfig {
+        lr: 0.01,
+        weight_decay: 0.01,
+        threads,
+        ..OptimConfig::paper_defaults(kind)
+    }
+}
+
+fn rand_tensors(rng: &mut Pcg32, shapes: &[Vec<usize>], scale: f32) -> Vec<Tensor> {
+    shapes
+        .iter()
+        .map(|s| {
+            let mut t = Tensor::zeros(s);
+            rng.fill_normal(t.data_mut(), scale);
+            t
+        })
+        .collect()
+}
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("smmf_ckpt_it_{tag}_{}.bin", std::process::id()))
+}
+
+/// Train `steps` steps from scratch; returns the final parameters.
+fn run_straight(kind: OptKind, threads: usize, steps: usize) -> Vec<Tensor> {
+    let shapes = test_shapes();
+    let cfg = cfg_for(kind, threads);
+    let mut opt = build(kind, &shapes, &cfg);
+    let mut init_rng = Pcg32::new(7);
+    let mut params = rand_tensors(&mut init_rng, &shapes, 0.5);
+    let mut data_rng = Pcg32::new(123);
+    for _ in 0..steps {
+        let grads = rand_tensors(&mut data_rng, &shapes, 0.1);
+        opt.step(&mut params, &grads);
+    }
+    params
+}
+
+/// Train `half` steps, checkpoint through an actual v2 file, rebuild
+/// everything from the file alone, train to `total`.
+fn run_resumed(kind: OptKind, threads: usize, half: usize, total: usize) -> Vec<Tensor> {
+    let shapes = test_shapes();
+    let cfg = cfg_for(kind, threads);
+    let names: Vec<String> = (0..shapes.len()).map(|i| format!("p{i}")).collect();
+    let path = tmp(&format!("{}_t{threads}", kind.name()));
+
+    {
+        let mut opt = build(kind, &shapes, &cfg);
+        let mut init_rng = Pcg32::new(7);
+        let mut params = rand_tensors(&mut init_rng, &shapes, 0.5);
+        let mut data_rng = Pcg32::new(123);
+        for _ in 0..half {
+            let grads = rand_tensors(&mut data_rng, &shapes, 0.1);
+            opt.step(&mut params, &grads);
+        }
+        let sched = ScheduleSection { base_lr: cfg.lr, schedule: LrSchedule::Constant };
+        let opt_sec =
+            OptSection { kind, opt_step: opt.opt_step(), blobs: opt.state_blobs() };
+        checkpoint::save_v2(
+            &path,
+            half as u64,
+            &names,
+            &params,
+            Some(data_rng.state()),
+            Some(&sched),
+            Some(&opt_sec),
+        )
+        .unwrap();
+        // first-half state dropped here: the file is all that survives
+    }
+
+    let ck = checkpoint::load_any(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(ck.step, half as u64);
+    assert_eq!(ck.names, names);
+    let o = ck.opt.expect("v2 checkpoint carries optimizer state");
+    assert_eq!(o.kind, kind);
+    let mut opt = build(kind, &shapes, &cfg);
+    opt.load_state_blobs(&o.blobs).unwrap();
+    opt.set_opt_step(o.opt_step);
+    let mut params = ck.params;
+    let (state, inc) = ck.rng.expect("v2 checkpoint carries the data-RNG snapshot");
+    let mut data_rng = Pcg32::from_state(state, inc);
+    for _ in half..total {
+        let grads = rand_tensors(&mut data_rng, &shapes, 0.1);
+        opt.step(&mut params, &grads);
+    }
+    params
+}
+
+#[test]
+fn resume_is_bit_identical_for_every_optimizer_at_1_and_4_threads() {
+    let (half, total) = (4usize, 8usize);
+    for kind in OptKind::every() {
+        for threads in [1usize, 4] {
+            let straight = run_straight(kind, threads, total);
+            let resumed = run_resumed(kind, threads, half, total);
+            assert_eq!(
+                straight,
+                resumed,
+                "{} at threads={threads}: resume diverged",
+                kind.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn state_blobs_roundtrip_identically() {
+    // save -> load -> save must be a fixed point for every optimizer.
+    let shapes = test_shapes();
+    let mut rng = Pcg32::new(42);
+    for kind in OptKind::every() {
+        let cfg = cfg_for(kind, 1);
+        let mut opt = build(kind, &shapes, &cfg);
+        let mut params = rand_tensors(&mut rng, &shapes, 0.5);
+        for _ in 0..3 {
+            let grads = rand_tensors(&mut rng, &shapes, 0.1);
+            opt.step(&mut params, &grads);
+        }
+        let blobs = opt.state_blobs();
+        let mut fresh = build(kind, &shapes, &cfg);
+        fresh.load_state_blobs(&blobs).unwrap();
+        fresh.set_opt_step(opt.opt_step());
+        assert_eq!(fresh.state_blobs(), blobs, "{}", kind.name());
+        assert_eq!(fresh.opt_step(), 3, "{}", kind.name());
+    }
+}
+
+#[test]
+fn v1_checkpoint_still_reads_params() {
+    let shapes = test_shapes();
+    let mut rng = Pcg32::new(5);
+    let params = rand_tensors(&mut rng, &shapes, 0.5);
+    let names: Vec<String> = (0..shapes.len()).map(|i| format!("p{i}")).collect();
+    let path = tmp("v1_compat");
+    checkpoint::save(&path, 9, &names, &params).unwrap();
+    let ck = checkpoint::load_any(&path).unwrap();
+    std::fs::remove_file(&path).unwrap();
+    assert_eq!(ck.version, checkpoint::VERSION_V1);
+    assert_eq!(ck.step, 9);
+    assert_eq!(ck.names, names);
+    assert_eq!(ck.params, params);
+    assert!(ck.opt.is_none(), "v1 has no optimizer state");
+}
+
+#[test]
+fn truncated_and_corrupt_checkpoints_error_cleanly() {
+    let shapes = vec![vec![8, 8]];
+    let cfg = cfg_for(OptKind::Smmf, 1);
+    let mut opt = build(OptKind::Smmf, &shapes, &cfg);
+    let mut rng = Pcg32::new(1);
+    let mut params = rand_tensors(&mut rng, &shapes, 0.5);
+    let grads = rand_tensors(&mut rng, &shapes, 0.1);
+    opt.step(&mut params, &grads);
+    let names = vec!["w".to_string()];
+    let opt_sec =
+        OptSection { kind: OptKind::Smmf, opt_step: 1, blobs: opt.state_blobs() };
+    let path = tmp("trunc");
+    checkpoint::save_v2(&path, 1, &names, &params, None, None, Some(&opt_sec)).unwrap();
+    let full = std::fs::read(&path).unwrap();
+
+    // Truncations at a spread of prefixes must all error (never panic).
+    for frac in [0usize, 4, 9, 17, 33, 50, 75, 99] {
+        let cut = full.len() * frac / 100;
+        std::fs::write(&path, &full[..cut]).unwrap();
+        assert!(checkpoint::load_any(&path).is_err(), "prefix {cut} parsed");
+    }
+    // Flip a magic byte.
+    let mut bad = full.clone();
+    bad[0] ^= 0xff;
+    std::fs::write(&path, &bad).unwrap();
+    assert!(checkpoint::load_any(&path).is_err());
+    // Intact file still loads.
+    std::fs::write(&path, &full).unwrap();
+    assert!(checkpoint::load_any(&path).is_ok());
+    std::fs::remove_file(&path).unwrap();
+}
+
+#[test]
+fn mismatched_optimizer_state_is_rejected() {
+    let shapes = test_shapes();
+    let cfg = cfg_for(OptKind::Adam, 1);
+    let mut adam = build(OptKind::Adam, &shapes, &cfg);
+    let mut rng = Pcg32::new(2);
+    let mut params = rand_tensors(&mut rng, &shapes, 0.5);
+    let grads = rand_tensors(&mut rng, &shapes, 0.1);
+    adam.step(&mut params, &grads);
+    let blobs = adam.state_blobs();
+
+    // Wrong optimizer family.
+    let mut sgd = build(OptKind::Sgd, &shapes, &cfg_for(OptKind::Sgd, 1));
+    assert!(sgd.load_state_blobs(&blobs).is_err());
+    // Wrong tensor count.
+    let mut adam2 = build(OptKind::Adam, &shapes[..2], &cfg);
+    assert!(adam2.load_state_blobs(&blobs).is_err());
+    // Sign-width config mismatch for SMMF.
+    let smmf_cfg = cfg_for(OptKind::Smmf, 1);
+    let mut smmf = build(OptKind::Smmf, &shapes, &smmf_cfg);
+    smmf.step(&mut params, &grads);
+    let smmf_blobs = smmf.state_blobs();
+    let byte_cfg = OptimConfig { smmf_sign_mode: SignMode::Byte8, ..smmf_cfg };
+    let mut smmf8 = build(OptKind::Smmf, &shapes, &byte_cfg);
+    assert!(smmf8.load_state_blobs(&smmf_blobs).is_err());
+}
+
+#[test]
+fn smmf_checkpoint_is_at_most_10pct_of_adams() {
+    // Live serialized bytes on a moderate inventory…
+    let shapes = vec![vec![512, 512], vec![256, 128], vec![768]];
+    let smmf = build(OptKind::Smmf, &shapes, &OptimConfig::paper_defaults(OptKind::Smmf));
+    let adam = build(OptKind::Adam, &shapes, &OptimConfig::paper_defaults(OptKind::Adam));
+    let bytes = |o: &Box<dyn Optimizer>| -> u64 {
+        o.state_blobs().iter().map(|b| b.len() as u64).sum()
+    };
+    assert!(
+        10 * bytes(&smmf) <= bytes(&adam),
+        "smmf {} vs adam {}",
+        bytes(&smmf),
+        bytes(&adam)
+    );
+    // …and analytically on a full paper inventory (too big to build).
+    for model in ["transformer_base", "resnet50_imagenet", "gpt2_124m"] {
+        let inv = inventory_by_name(model).unwrap();
+        let shapes = inv.shapes();
+        let s = memory::inventory_checkpoint_bytes(
+            OptKind::Smmf,
+            &shapes,
+            &OptimConfig::paper_defaults(OptKind::Smmf),
+        );
+        let a = memory::inventory_checkpoint_bytes(
+            OptKind::Adam,
+            &shapes,
+            &OptimConfig::paper_defaults(OptKind::Adam),
+        );
+        assert!(10 * s <= a, "{model}: smmf {s} vs adam {a}");
+    }
+}

@@ -1,13 +1,15 @@
 #!/usr/bin/env bash
-# Pre-merge smoke: build, test, and quick-bench the optimizer suite so
-# regressions in the fused/parallel step paths are caught before merge.
+# Pre-merge smoke: build, test, checkpoint-roundtrip, and quick-bench the
+# optimizer suite so regressions in the fused/parallel step paths and the
+# checkpoint/resume subsystem are caught before merge.
 #
 #   bash rust/tests/smoke.sh            # from the repo root
 #   make smoke                          # equivalent
 #
 # The quick bench also refreshes BENCH_optimizer_step.json (the perf
-# trajectory tracked across PRs) unless SMMF_BENCH_JSON overrides the
-# output path.
+# trajectory tracked across PRs, now including the SMMF-vs-Adam
+# checkpoint size ratio) unless SMMF_BENCH_JSON overrides the output
+# path.
 set -euo pipefail
 
 cd "$(dirname "$0")/.."   # rust/
@@ -17,6 +19,9 @@ cargo build --release
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== checkpoint-roundtrip (bit-identical resume, all optimizers) =="
+cargo test --release --test checkpoint_roundtrip
 
 echo "== quick bench (SMMF_BENCH_QUICK=1) =="
 SMMF_BENCH_JSON="${SMMF_BENCH_JSON:-../BENCH_optimizer_step.json}" \
