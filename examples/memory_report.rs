@@ -96,5 +96,54 @@ fn main() -> Result<()> {
         "on-disk:  SMMF checkpoint optimizer-state section on ResNet-50 = {:.1}% of Adam's (acceptance: <= 10%)",
         100.0 * ck("smmf") / ck("adam")
     );
+
+    // Per-group accounting: the paper-faithful grouped recipe (bias/norm
+    // weight-decay exemption, dense Adam-style state for those tiny
+    // tensors, embeddings at half LR) on Transformer-base — one row per
+    // resolved group, so the cost of a per-group state policy is visible
+    // before a run starts.
+    use smmf_repro::models::inventory_by_name;
+    use smmf_repro::optim::group::{GroupedConfig, ParamRole};
+    use smmf_repro::optim::{memory, GroupPolicy, OptKind, OptimConfig, StatePolicy};
+    println!("\n== per-group SMMF memory: transformer_base, grouped recipe ==");
+    let inv = inventory_by_name("transformer_base").expect("known inventory");
+    let mut gcfg =
+        GroupedConfig::uniform(&OptimConfig::paper_defaults(OptKind::Smmf));
+    gcfg.base.weight_decay = 0.01;
+    gcfg.groups.push(GroupPolicy {
+        name: "no_decay".into(),
+        match_roles: vec![ParamRole::Bias, ParamRole::Norm],
+        weight_decay: Some(0.0),
+        state: StatePolicy::Dense,
+        ..GroupPolicy::default()
+    });
+    gcfg.groups.push(GroupPolicy {
+        name: "emb".into(),
+        match_roles: vec![ParamRole::Embedding],
+        lr_scale: 0.5,
+        ..GroupPolicy::default()
+    });
+    let grows = memory::grouped_report(OptKind::Smmf, &inv.param_specs(), &gcfg);
+    let body: Vec<Vec<String>> = grows
+        .iter()
+        .map(|r| {
+            vec![
+                r.group.clone(),
+                r.tensors.to_string(),
+                fmt::count(r.params),
+                format!("{:.3}", fmt::mib(r.opt_bytes)),
+                format!("{:.3}", fmt::mib(r.ckpt_opt_bytes)),
+                r.state.name().to_string(),
+                if r.frozen { "yes" } else { "no" }.to_string(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        fmt::render_table(
+            &["group", "tensors", "params", "opt MiB", "ckpt MiB", "state", "frozen"],
+            &body
+        )
+    );
     Ok(())
 }

@@ -20,7 +20,8 @@
 //! perf trajectory is tracked across PRs.
 
 use smmf_repro::models::inventory_by_name;
-use smmf_repro::optim::{self, memory, OptKind, OptimConfig, Optimizer, Smmf};
+use smmf_repro::optim::group::{GroupedConfig, ParamRole};
+use smmf_repro::optim::{self, memory, GroupPolicy, OptKind, OptimConfig, Optimizer, Smmf, StatePolicy};
 use smmf_repro::tensor::Tensor;
 use smmf_repro::util::bench::{Bencher, JsonSink};
 use smmf_repro::util::fmt;
@@ -108,6 +109,61 @@ fn main() {
                 }
                 println!("{}   ({:.2}x vs serial)", stats.summary(), serial_ms / ms);
             }
+        }
+        println!();
+    }
+
+    // Grouped vs uniform: the paper-faithful recipe (bias/norm
+    // weight-decay exemption + dense Adam-style state for rank-1
+    // tensors) against the flat config, on the same inventory. The
+    // ratio lands in the JSON trajectory: group resolution is
+    // construction-time work, so the grouped step should cost ~the
+    // uniform step (dense rank-1 state trades factor math for moment
+    // math on a tiny fraction of the elements).
+    println!("== Grouped vs uniform SMMF step (bias/norm wd-exempt, dense rank-1) ==");
+    {
+        let name = "mobilenet_v2_imagenet";
+        let inv = inventory_by_name(name).unwrap();
+        let shapes = inv.shapes();
+        let specs = inv.param_specs();
+        let mut params = rand_tensors(&shapes, 1, 0.05);
+        let grads = rand_tensors(&shapes, 2, 0.01);
+        let base = OptimConfig {
+            weight_decay: 1e-4,
+            ..OptimConfig::paper_defaults(OptKind::Smmf)
+        };
+        let mut uniform = optim::build(OptKind::Smmf, &shapes, &base);
+        let s_uniform = bencher.bench(&format!("{name}/smmf_uniform"), || {
+            uniform.step(&mut params, &grads)
+        });
+        println!("{}", s_uniform.summary());
+        let mut gcfg = GroupedConfig::uniform(&base);
+        gcfg.groups.push(GroupPolicy {
+            name: "no_decay_dense".into(),
+            match_roles: vec![ParamRole::Bias, ParamRole::Norm],
+            weight_decay: Some(0.0),
+            state: StatePolicy::Dense,
+            ..GroupPolicy::default()
+        });
+        let mut grouped = optim::build_grouped(OptKind::Smmf, &specs, &gcfg);
+        let s_grouped = bencher.bench(&format!("{name}/smmf_grouped"), || {
+            grouped.step(&mut params, &grads)
+        });
+        let ratio =
+            s_grouped.median.as_secs_f64() / s_uniform.median.as_secs_f64();
+        println!("{}   ({ratio:.2}x vs uniform)", s_grouped.summary());
+        if let Some(s) = sink.as_mut() {
+            s.record(name, "smmf_uniform", 1, &s_uniform);
+            s.record(name, "smmf_grouped", 1, &s_grouped);
+            s.push(
+                ObjBuilder::new()
+                    .str("name", &format!("grouped_vs_uniform/{name}"))
+                    .str("model", name)
+                    .num("uniform_median_ns", s_uniform.median.as_secs_f64() * 1e9)
+                    .num("grouped_median_ns", s_grouped.median.as_secs_f64() * 1e9)
+                    .num("grouped_vs_uniform_ratio", ratio)
+                    .build(),
+            );
         }
         println!();
     }

@@ -3,6 +3,7 @@
 use anyhow::{anyhow, Result};
 use std::path::Path;
 
+use crate::optim::group::{GroupPolicy, GroupedConfig, ParamRole, StatePolicy};
 use crate::optim::{OptKind, OptimConfig, WeightDecayMode};
 use crate::optim::schedule::LrSchedule;
 use crate::util::cli::Args;
@@ -15,6 +16,9 @@ pub struct ExperimentConfig {
     pub artifact: String,
     pub optimizer: OptKind,
     pub optim: OptimConfig,
+    /// Param-group matcher blocks (`[[optimizer.group]]` / `--group`),
+    /// resolved against the inventory at build time (first match wins).
+    pub groups: Vec<GroupPolicy>,
     pub steps: u64,
     pub seed: u64,
     pub log_every: u64,
@@ -36,6 +40,7 @@ impl Default for ExperimentConfig {
             artifact: "lm_tiny_grads".into(),
             optimizer: OptKind::Smmf,
             optim: OptimConfig::paper_defaults(OptKind::Smmf),
+            groups: Vec::new(),
             steps: 200,
             seed: 0,
             log_every: 10,
@@ -86,6 +91,42 @@ impl ExperimentConfig {
         {
             self.resume = Some(path.to_string());
         }
+        // `[[optimizer.group]]` matcher blocks (name-glob / role
+        // selectors + per-group overrides). When present they replace the
+        // current group list, so a TOML file fully specifies its groups.
+        let n_groups = doc.array_len("optimizer.group");
+        if n_groups > 0 {
+            let mut groups = Vec::with_capacity(n_groups);
+            for i in 0..n_groups {
+                let pre = format!("optimizer.group.{i}");
+                let mut g = GroupPolicy {
+                    name: doc.str_or(&format!("{pre}.name"), &format!("group{i}")).to_string(),
+                    ..GroupPolicy::default()
+                };
+                if let Some(roles) = doc.str_list(&format!("{pre}.match_role")) {
+                    for r in roles {
+                        let role = ParamRole::parse(&r)
+                            .ok_or_else(|| anyhow!("group {i}: unknown role {r}"))?;
+                        g.match_roles.push(role);
+                    }
+                }
+                if let Some(names) = doc.str_list(&format!("{pre}.match_name")) {
+                    g.match_names = names;
+                }
+                g.lr_scale = doc.f64_or(&format!("{pre}.lr_scale"), g.lr_scale as f64) as f32;
+                if let Some(wd) = doc.get(&format!("{pre}.weight_decay")).and_then(|v| v.as_f64())
+                {
+                    g.weight_decay = Some(wd as f32);
+                }
+                g.frozen = doc.bool_or(&format!("{pre}.frozen"), g.frozen);
+                if let Some(s) = doc.get(&format!("{pre}.state")).and_then(|v| v.as_str()) {
+                    g.state = StatePolicy::parse(s)
+                        .ok_or_else(|| anyhow!("group {}: unknown state policy {s}", g.name))?;
+                }
+                groups.push(g);
+            }
+            self.groups = groups;
+        }
         let o = &mut self.optim;
         o.lr = doc.f64_or("optimizer.lr", o.lr as f64) as f32;
         o.beta1 = doc.f64_or("optimizer.beta1", o.beta1 as f64) as f32;
@@ -94,6 +135,9 @@ impl ExperimentConfig {
         o.decay_rate = doc.f64_or("optimizer.decay_rate", o.decay_rate as f64) as f32;
         o.growth_rate = doc.f64_or("optimizer.growth_rate", o.growth_rate as f64) as f32;
         o.vector_reshape = doc.bool_or("optimizer.vector_reshape", o.vector_reshape);
+        // Paper defaults disable Adam/AdamW bias correction (pre-training
+        // configs); this key opts back in per run.
+        o.bias_correction = doc.bool_or("optimizer.bias_correction", o.bias_correction);
         // Parallel step engine worker threads (>= 1; 1 = serial).
         o.threads = (doc.i64_or("optimizer.threads", o.threads as i64).max(1)) as usize;
         if let Some(mode) = doc.get("optimizer.weight_decay_mode").and_then(|v| v.as_str()) {
@@ -144,11 +188,28 @@ impl ExperimentConfig {
             self.resume = Some(path.to_string());
         }
         self.save_every = args.u64_or("save-every", self.save_every);
+        // `--group "name=no_decay,role=bias|norm,wd=0; match=*emb*,lr_scale=0.5"`
+        // replaces any TOML-defined groups (CLI wins, like every other knob).
+        if let Some(specs) = args.opt("group") {
+            self.groups = GroupPolicy::parse_cli_list(specs).map_err(|e| anyhow!("--group: {e}"))?;
+        }
         self.optim.threads = args.positive_usize_or("threads", self.optim.threads);
         self.optim.lr = args.f64_or("lr", self.optim.lr as f64) as f32;
         self.optim.weight_decay = args.f64_or("weight-decay", self.optim.weight_decay as f64) as f32;
         self.optim.decay_rate = args.f64_or("decay-rate", self.optim.decay_rate as f64) as f32;
+        if let Some(v) = args.opt("bias-correction") {
+            self.optim.bias_correction = match v {
+                "true" | "1" | "on" => true,
+                "false" | "0" | "off" => false,
+                other => return Err(anyhow!("bad --bias-correction {other} (true/false)")),
+            };
+        }
         Ok(())
+    }
+
+    /// The grouped optimizer config this experiment resolves to.
+    pub fn grouped(&self) -> GroupedConfig {
+        GroupedConfig { base: self.optim.clone(), groups: self.groups.clone() }
     }
 
     fn set_optimizer(&mut self, kind: &str) -> Result<()> {
@@ -255,6 +316,71 @@ mod tests {
         assert_eq!(cfg3.log_every, 25);
         assert_eq!(cfg3.out_dir, "runs2");
         assert_eq!(cfg3.save_every, 50);
+    }
+
+    #[test]
+    fn groups_plumb_through_toml_and_cli() {
+        let doc = TomlDoc::parse(
+            "[optimizer]\nkind = \"smmf\"\nweight_decay = 0.01\n\
+             [[optimizer.group]]\nname = \"no_decay\"\nmatch_role = [\"bias\", \"norm\"]\nweight_decay = 0.0\n\
+             [[optimizer.group]]\nname = \"emb\"\nmatch_name = \"*emb*\"\nlr_scale = 0.5\nstate = \"dense\"\n",
+        )
+        .unwrap();
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_toml(&doc).unwrap();
+        assert_eq!(cfg.groups.len(), 2);
+        assert_eq!(cfg.groups[0].name, "no_decay");
+        assert_eq!(cfg.groups[0].match_roles, vec![ParamRole::Bias, ParamRole::Norm]);
+        assert_eq!(cfg.groups[0].weight_decay, Some(0.0));
+        assert_eq!(cfg.groups[1].match_names, vec!["*emb*".to_string()]);
+        assert_eq!(cfg.groups[1].state, StatePolicy::Dense);
+        assert!((cfg.groups[1].lr_scale - 0.5).abs() < 1e-9);
+        // switching the optimizer keeps the groups (recipe-independent)
+        let args = Args::parse(["--optimizer", "adam"].iter().map(|s| s.to_string()));
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.groups.len(), 2);
+        // --group replaces the TOML groups
+        let args = Args::parse(
+            ["--group", "name=cli,role=bias,wd=0;match=head.*,frozen"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.groups.len(), 2);
+        assert_eq!(cfg.groups[0].name, "cli");
+        assert!(cfg.groups[1].frozen);
+        // grouped() carries base + groups
+        let g = cfg.grouped();
+        assert_eq!(g.groups.len(), 2);
+        // bad specs error
+        let args = Args::parse(["--group", "role=nope"].iter().map(|s| s.to_string()));
+        assert!(cfg.apply_args(&args).is_err());
+        // bad TOML role errors
+        let doc = TomlDoc::parse("[[optimizer.group]]\nmatch_role = \"bogus\"\n").unwrap();
+        assert!(ExperimentConfig::default().apply_toml(&doc).is_err());
+    }
+
+    #[test]
+    fn bias_correction_knob_plumbs_through() {
+        // paper defaults: off for Adam/AdamW (pre-training configs)
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_args(&Args::parse(["--optimizer", "adam"].iter().map(|s| s.to_string())))
+            .unwrap();
+        assert!(!cfg.optim.bias_correction);
+        // TOML opts back in
+        let doc = TomlDoc::parse("[optimizer]\nkind = \"adam\"\nbias_correction = true").unwrap();
+        let mut cfg2 = ExperimentConfig::default();
+        cfg2.apply_toml(&doc).unwrap();
+        assert!(cfg2.optim.bias_correction);
+        // CLI wins over TOML
+        cfg2.apply_args(&Args::parse(
+            ["--bias-correction", "false"].iter().map(|s| s.to_string()),
+        ))
+        .unwrap();
+        assert!(!cfg2.optim.bias_correction);
+        assert!(cfg2
+            .apply_args(&Args::parse(["--bias-correction", "maybe"].iter().map(|s| s.to_string())))
+            .is_err());
     }
 
     #[test]

@@ -6,10 +6,11 @@ use std::time::Instant;
 use crate::coordinator::config::ExperimentConfig;
 use crate::data::{CharLmDataset, SyntheticImages, TINY_CORPUS};
 use crate::models::inventory_by_name;
+use crate::optim::group::{self, ParamSpec};
 use crate::optim::{self, memory, OptKind, OptimConfig};
 use crate::runtime::{lit_f32, lit_i32, ArtifactSpec, Runtime};
 use crate::tensor::Tensor;
-use crate::train::{RunLogger, TrainGraph, Trainer};
+use crate::train::{checkpoint, RunLogger, TrainGraph, Trainer};
 use crate::util::fmt;
 use crate::util::rng::Pcg32;
 
@@ -164,10 +165,38 @@ pub struct RunSummary {
 /// bit-identical trajectories.
 pub fn run_experiment(rt: &Runtime, cfg: &ExperimentConfig) -> Result<RunSummary> {
     let graph = TrainGraph::load(rt, &cfg.artifact)?;
+    // Grouped construction: roles inferred from the artifact's HF-style
+    // tensor names, group matchers resolved once, and the resolved
+    // fingerprint registered with the trainer (checkpoint CONFIG
+    // section + resume cross-check).
+    let specs: Vec<ParamSpec> = graph
+        .spec()
+        .params
+        .iter()
+        .map(|p| ParamSpec::inferred(p.name.clone(), &p.shape))
+        .collect();
+    let gcfg = cfg.grouped();
+    let res = group::resolve(&specs, &gcfg);
     let shapes = graph.param_shapes();
-    let opt = optim::build(cfg.optimizer, &shapes, &cfg.optim);
+    let opt = optim::build_with_policies(cfg.optimizer, &shapes, &cfg.optim, &res.tensor);
+    if !cfg.groups.is_empty() {
+        for g in res.groups.iter().filter(|g| g.tensors > 0) {
+            println!(
+                "[{}] group {:<12} {:>3} tensors  {:>10} params  lr_scale {}  wd {}  state {}{}",
+                cfg.name,
+                g.name,
+                g.tensors,
+                fmt::count(g.params),
+                g.lr_scale,
+                g.weight_decay,
+                g.state.name(),
+                if g.frozen { "  (frozen)" } else { "" },
+            );
+        }
+    }
     let mut source = BatchSource::for_spec(graph.spec(), cfg.seed ^ 0xda7a)?;
     let mut trainer = Trainer::new(graph, opt, cfg.seed, cfg.optim.lr, cfg.schedule.clone());
+    trainer.set_config_section(checkpoint::ConfigSection::from_config(&cfg.optim, &res));
     if let Some(path) = &cfg.resume {
         let rng = trainer.resume_from(std::path::Path::new(path))?;
         if let Some((state, inc)) = rng {
@@ -238,6 +267,12 @@ pub fn run_experiment(rt: &Runtime, cfg: &ExperimentConfig) -> Result<RunSummary
             .num("final_loss", summary.final_loss as f64)
             .num("mean_step_ms", summary.mean_step_ms)
             .num("opt_state_bytes", summary.opt_state_bytes as f64)
+            // Auditability: surface the recipe knobs that silently shape
+            // trajectories (the paper's pre-training Adam runs disable
+            // bias correction) and the group layout.
+            .bool("bias_correction", cfg.optim.bias_correction)
+            .num("weight_decay", cfg.optim.weight_decay as f64)
+            .num("param_groups", res.groups.iter().filter(|g| g.tensors > 0).count() as f64)
             .build(),
     )?;
     Ok(summary)

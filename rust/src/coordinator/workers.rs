@@ -15,6 +15,7 @@ use std::thread;
 use crate::coordinator::config::ExperimentConfig;
 use crate::coordinator::experiments::BatchSource;
 use crate::optim;
+use crate::optim::group::{self, ParamSpec};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::train::TrainGraph;
@@ -40,7 +41,16 @@ pub fn train_data_parallel(
     let rt = Runtime::open(artifact_dir)?;
     let graph = TrainGraph::load(&rt, &cfg.artifact)?;
     let shapes = graph.param_shapes();
-    let mut opt = optim::build(cfg.optimizer, &shapes, &cfg.optim);
+    // Same grouped construction as `run_experiment`: param-group
+    // overrides apply to the leader's optimizer step here too.
+    let specs: Vec<ParamSpec> = graph
+        .spec()
+        .params
+        .iter()
+        .map(|p| ParamSpec::inferred(p.name.clone(), &p.shape))
+        .collect();
+    let res = group::resolve(&specs, &cfg.grouped());
+    let mut opt = optim::build_with_policies(cfg.optimizer, &shapes, &cfg.optim, &res.tensor);
     let mut params = graph.init_params(cfg.seed);
     drop(graph);
     drop(rt);

@@ -74,7 +74,7 @@ fn run(args: &Args) -> Result<()> {
 
 const HELP: &str = "repro — SMMF (AAAI 2025) reproduction
 commands:
-  list              artifacts and model inventories
+  list              artifacts and model inventories (+ per-role breakdown)
   memory --table T  memory columns (table1..table4, table6..table13, all)
   tableN            shortcut for `memory --table tableN`
   table5 [--quick]  optimizer step-time measurements
@@ -91,13 +91,27 @@ commands:
 common flags: --artifacts DIR (default ./artifacts), --seed N,
               --threads N (parallel optimizer step engine; 1 = serial),
               --save-every N / --resume PATH (SMMFCKPT v2 checkpoints;
-              see docs/CHECKPOINT_FORMAT.md)";
+              see docs/CHECKPOINT_FORMAT.md),
+              --bias-correction true|false (Adam/AdamW; paper defaults
+              disable it for pre-training — surfaced in summary.json)
+param groups: --group \"name=no_decay,role=bias|norm,wd=0; match=*emb*,
+              lr_scale=0.5,state=dense\" — per-group hyperparameter
+              overrides (role/name-glob matchers, first match wins;
+              state=factored|dense|none, frozen). TOML spelling:
+              [[optimizer.group]] blocks (see README quickstart)";
 
 fn cmd_list(args: &Args) -> Result<()> {
     println!("model inventories (memory accounting):");
+    println!("  (role rows: tensors/params per role — sanity-check [[optimizer.group]] matchers)");
     for (name, ctx) in models::list_inventories() {
         let inv = models::inventory_by_name(name).unwrap();
         println!("  {name:<26} {:>8} params   {ctx}", fmt::count(inv.param_count()));
+        let roles: Vec<String> = inv
+            .role_breakdown()
+            .iter()
+            .map(|(role, count, params)| format!("{} {}/{}", role.name(), count, fmt::count(*params)))
+            .collect();
+        println!("  {:<26} {}", "", roles.join("  "));
     }
     let dir = artifacts_dir(args);
     match Runtime::open(&dir) {

@@ -20,11 +20,16 @@ pub mod yolo;
 
 pub use registry::{inventory_by_name, list_inventories};
 
-/// One named parameter tensor.
+use crate::optim::group::{ParamRole, ParamSpec};
+
+/// One named parameter tensor with its model role (see
+/// [`crate::optim::group::ParamRole`]) — the helpers below set roles
+/// explicitly; raw [`Inventory::push`] infers them from the name/shape.
 #[derive(Clone, Debug)]
 pub struct ParamTensor {
     pub name: String,
     pub shape: Vec<usize>,
+    pub role: ParamRole,
 }
 
 impl ParamTensor {
@@ -49,45 +54,53 @@ impl Inventory {
         Inventory { name: name.to_string(), tensors: Vec::new(), frozen_bytes: 0 }
     }
 
+    /// Push with the role inferred from the name/shape (HF conventions).
     pub fn push(&mut self, name: impl Into<String>, shape: &[usize]) {
-        self.tensors.push(ParamTensor { name: name.into(), shape: shape.to_vec() });
+        let name = name.into();
+        let role = ParamRole::infer(&name, shape);
+        self.tensors.push(ParamTensor { name, shape: shape.to_vec(), role });
+    }
+
+    /// Push with an explicit role (used by all the helpers below).
+    pub fn push_as(&mut self, name: impl Into<String>, shape: &[usize], role: ParamRole) {
+        self.tensors.push(ParamTensor { name: name.into(), shape: shape.to_vec(), role });
     }
 
     /// conv weight (Cout, Cin, k, k)
     pub fn conv(&mut self, name: &str, cout: usize, cin: usize, k: usize) {
-        self.push(format!("{name}.weight"), &[cout, cin, k, k]);
+        self.push_as(format!("{name}.weight"), &[cout, cin, k, k], ParamRole::Kernel);
     }
 
     /// depthwise conv weight (C, 1, k, k)
     pub fn dwconv(&mut self, name: &str, c: usize, k: usize) {
-        self.push(format!("{name}.weight"), &[c, 1, k, k]);
+        self.push_as(format!("{name}.weight"), &[c, 1, k, k], ParamRole::Kernel);
     }
 
     /// batch-norm / layer-norm scale + shift
     pub fn norm(&mut self, name: &str, c: usize) {
-        self.push(format!("{name}.weight"), &[c]);
-        self.push(format!("{name}.bias"), &[c]);
+        self.push_as(format!("{name}.weight"), &[c], ParamRole::Norm);
+        self.push_as(format!("{name}.bias"), &[c], ParamRole::Norm);
     }
 
     /// norm with scale only (T5 RMSNorm, LLaMA RMSNorm)
     pub fn rmsnorm(&mut self, name: &str, c: usize) {
-        self.push(format!("{name}.weight"), &[c]);
+        self.push_as(format!("{name}.weight"), &[c], ParamRole::Norm);
     }
 
     /// linear layer with bias
     pub fn linear(&mut self, name: &str, inf: usize, outf: usize) {
-        self.push(format!("{name}.weight"), &[outf, inf]);
-        self.push(format!("{name}.bias"), &[outf]);
+        self.push_as(format!("{name}.weight"), &[outf, inf], ParamRole::Kernel);
+        self.push_as(format!("{name}.bias"), &[outf], ParamRole::Bias);
     }
 
     /// linear layer without bias
     pub fn linear_nb(&mut self, name: &str, inf: usize, outf: usize) {
-        self.push(format!("{name}.weight"), &[outf, inf]);
+        self.push_as(format!("{name}.weight"), &[outf, inf], ParamRole::Kernel);
     }
 
     /// embedding table
     pub fn embedding(&mut self, name: &str, vocab: usize, dim: usize) {
-        self.push(format!("{name}.weight"), &[vocab, dim]);
+        self.push_as(format!("{name}.weight"), &[vocab, dim], ParamRole::Embedding);
     }
 
     pub fn param_count(&self) -> u64 {
@@ -96,6 +109,34 @@ impl Inventory {
 
     pub fn shapes(&self) -> Vec<Vec<usize>> {
         self.tensors.iter().map(|t| t.shape.clone()).collect()
+    }
+
+    /// The inventory as grouped-API registration specs (name + shape +
+    /// role), consumed by [`crate::optim::build_grouped`] and the
+    /// per-group memory reports.
+    pub fn param_specs(&self) -> Vec<ParamSpec> {
+        self.tensors
+            .iter()
+            .map(|t| ParamSpec::new(t.name.clone(), &t.shape, t.role))
+            .collect()
+    }
+
+    /// `(role, tensor count, param count)` per role that occurs in the
+    /// inventory, in [`ParamRole::all`] order — used by `repro list` so
+    /// group matchers can be sanity-checked against real inventories.
+    pub fn role_breakdown(&self) -> Vec<(ParamRole, usize, u64)> {
+        ParamRole::all()
+            .into_iter()
+            .map(|role| {
+                let (mut count, mut params) = (0usize, 0u64);
+                for t in self.tensors.iter().filter(|t| t.role == role) {
+                    count += 1;
+                    params += t.numel();
+                }
+                (role, count, params)
+            })
+            .filter(|&(_, count, _)| count > 0)
+            .collect()
     }
 
     pub fn param_bytes(&self) -> u64 {
@@ -129,6 +170,43 @@ mod tests {
         assert_eq!(inv.param_count(), (8 * 3 * 9 + 16 + 8 * 2 + 2) as u64);
         assert_eq!(inv.tensors.len(), 5);
         assert_eq!(inv.tensors[0].shape, vec![8, 3, 3, 3]);
+    }
+
+    #[test]
+    fn helpers_tag_roles_and_breakdown_counts() {
+        let mut inv = Inventory::new("toy");
+        inv.conv("c1", 8, 3, 3);
+        inv.norm("bn1", 8);
+        inv.linear("fc", 8, 2);
+        inv.embedding("emb", 10, 4);
+        inv.push("head.bias", &[2]); // raw push: role inferred
+        let roles: Vec<ParamRole> = inv.tensors.iter().map(|t| t.role).collect();
+        assert_eq!(
+            roles,
+            vec![
+                ParamRole::Kernel,
+                ParamRole::Norm,
+                ParamRole::Norm,
+                ParamRole::Kernel,
+                ParamRole::Bias,
+                ParamRole::Embedding,
+                ParamRole::Bias,
+            ]
+        );
+        let bd = inv.role_breakdown();
+        let get = |r: ParamRole| bd.iter().find(|&&(role, ..)| role == r).copied().unwrap();
+        assert_eq!(get(ParamRole::Kernel), (ParamRole::Kernel, 2, (8 * 3 * 9 + 16) as u64));
+        assert_eq!(get(ParamRole::Norm), (ParamRole::Norm, 2, 16));
+        assert_eq!(get(ParamRole::Bias), (ParamRole::Bias, 2, 4));
+        assert_eq!(get(ParamRole::Embedding), (ParamRole::Embedding, 1, 40));
+        assert!(bd.iter().all(|&(r, ..)| r != ParamRole::Other));
+        let specs = inv.param_specs();
+        assert_eq!(specs.len(), inv.tensors.len());
+        assert_eq!(specs[0].role, ParamRole::Kernel);
+        assert_eq!(specs[0].name, "c1.weight");
+        // breakdown totals cover the whole inventory
+        let total: u64 = bd.iter().map(|&(_, _, p)| p).sum();
+        assert_eq!(total, inv.param_count());
     }
 
     #[test]

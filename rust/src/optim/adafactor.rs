@@ -18,6 +18,7 @@
 use anyhow::{bail, Result};
 
 use super::blob::{self, BlobReader, BlobWriter};
+use super::group::{self, StatePolicy, TensorPolicy};
 use super::parallel::{self, ParamPartition, TensorGeom};
 use super::schedule::beta2_t;
 use super::{OptimConfig, Optimizer, StateSerde, WeightDecayMode};
@@ -26,11 +27,15 @@ use crate::tensor::Tensor;
 enum VState {
     Factored { row: Vec<f32>, col: Vec<f32>, last: usize, second: usize, lead: usize },
     Dense(Vec<f32>),
+    /// `StatePolicy::None` / frozen: no accumulator at all.
+    None,
 }
 
 struct PState {
     v: VState,
     m: Option<Vec<f32>>,
+    /// Effective group policy for this tensor.
+    pol: TensorPolicy,
 }
 
 /// Per-worker scratch: the update buffer and the per-row rsqrt(col-factor)
@@ -60,11 +65,24 @@ fn rms(x: &[f32]) -> f32 {
 
 impl Adafactor {
     pub fn new(shapes: &[Vec<usize>], cfg: &OptimConfig) -> Adafactor {
+        Self::with_policies(shapes, cfg, &vec![TensorPolicy::uniform(cfg); shapes.len()])
+    }
+
+    pub fn with_policies(
+        shapes: &[Vec<usize>],
+        cfg: &OptimConfig,
+        policies: &[TensorPolicy],
+    ) -> Adafactor {
+        assert_eq!(shapes.len(), policies.len());
         let states = shapes
             .iter()
-            .map(|shape| {
+            .zip(policies)
+            .map(|(shape, pol)| {
                 let numel: usize = shape.iter().product();
-                let v = if shape.len() >= 2 {
+                if pol.stateless() {
+                    return PState { v: VState::None, m: None, pol: *pol };
+                }
+                let v = if pol.state != StatePolicy::Dense && shape.len() >= 2 {
                     let last = shape[shape.len() - 1];
                     let second = shape[shape.len() - 2];
                     let lead: usize = shape[..shape.len() - 2].iter().product();
@@ -79,11 +97,16 @@ impl Adafactor {
                     VState::Dense(vec![0.0; numel])
                 };
                 let m = (cfg.beta1 > 0.0).then(|| vec![0.0; numel]);
-                PState { v, m }
+                PState { v, m, pol: *pol }
             })
             .collect();
-        let geoms: Vec<TensorGeom> =
-            shapes.iter().map(|s| TensorGeom::whole(s.iter().product(), 6)).collect();
+        let geoms: Vec<TensorGeom> = shapes
+            .iter()
+            .zip(policies)
+            .map(|(s, pol)| {
+                TensorGeom::whole(s.iter().product(), if pol.stateless() { 1 } else { 6 })
+            })
+            .collect();
         let plan = ParamPartition::plan(&geoms, cfg.threads);
         let scratch = (0..plan.n_shards()).map(|_| Scratch::default()).collect();
         Adafactor { cfg: cfg.clone(), states, t: 0, plan, scratch }
@@ -100,12 +123,21 @@ impl Adafactor {
         st: &mut PState,
         scr: &mut Scratch,
     ) {
+        if st.pol.frozen {
+            return;
+        }
         let alpha = if cfg.relative_step {
             let rel = (1.0f32 / (t as f32).sqrt()).min(1e-2);
             rel * rms(p).max(cfg.eps2)
         } else {
             cfg.lr
         };
+        let alpha = alpha * st.pol.lr_scale;
+        let wd = st.pol.weight_decay;
+        if let VState::None = st.v {
+            group::stateless_update(p, g, alpha, wd, cfg.weight_decay_mode);
+            return;
+        }
         // update = g / sqrt(v̂); factored v̂ via the HF approximation.
         scr.u.clear();
         scr.u.extend_from_slice(g);
@@ -166,6 +198,7 @@ impl Adafactor {
                     *uij /= vij.sqrt().max(1e-30);
                 }
             }
+            VState::None => unreachable!("handled above"),
         }
         // Clip by RMS(update)/d.
         let denom = (rms(u) / cfg.clip_threshold).max(1.0);
@@ -178,15 +211,15 @@ impl Adafactor {
             u.copy_from_slice(m);
         }
         // Weight decay + apply.
-        if cfg.weight_decay != 0.0 {
+        if wd != 0.0 {
             match cfg.weight_decay_mode {
                 WeightDecayMode::AdamW => {
-                    let f = 1.0 - alpha * cfg.weight_decay;
+                    let f = 1.0 - alpha * wd;
                     p.iter_mut().for_each(|w| *w *= f);
                 }
                 WeightDecayMode::Adam => {
                     for (uij, &w) in u.iter_mut().zip(p.iter()) {
-                        *uij += cfg.weight_decay * w;
+                        *uij += wd * w;
                     }
                 }
             }
@@ -221,6 +254,8 @@ impl StateSerde for Adafactor {
                         blob::write_factored_or_dense(&mut w, Some((row.as_slice(), col.as_slice())), &[])
                     }
                     VState::Dense(v) => blob::write_factored_or_dense(&mut w, None, v),
+                    // stateless: dense layout with zero elements
+                    VState::None => blob::write_factored_or_dense(&mut w, None, &[]),
                 }
                 match &st.m {
                     Some(m) => {
@@ -253,6 +288,7 @@ impl StateSerde for Adafactor {
                     &what,
                 )?,
                 VState::Dense(v) => blob::read_factored_or_dense(&mut r, None, v, &what)?,
+                VState::None => blob::read_factored_or_dense(&mut r, None, &mut [], &what)?,
             }
             let has_m = r.u8()?;
             match (has_m, &mut st.m) {
@@ -308,6 +344,7 @@ impl Optimizer for Adafactor {
                 let v = match &s.v {
                     VState::Factored { row, col, .. } => row.len() + col.len(),
                     VState::Dense(v) => v.len(),
+                    VState::None => 0,
                 };
                 ((v + s.m.as_ref().map_or(0, |m| m.len())) * 4) as u64
             })

@@ -12,6 +12,7 @@
 use anyhow::{bail, Result};
 
 use super::blob::{BlobReader, BlobWriter};
+use super::group::{self, StatePolicy, TensorPolicy};
 use super::parallel::{self, ParamPartition, TensorGeom};
 use super::{OptimConfig, Optimizer, StateSerde, WeightDecayMode};
 use crate::tensor::Tensor;
@@ -19,6 +20,10 @@ use crate::tensor::Tensor;
 pub struct Adam {
     cfg: OptimConfig,
     decoupled: bool, // AdamW
+    /// Effective per-tensor policy (lr scale, weight decay, frozen,
+    /// state) resolved from the group table; `m`/`v` are empty for
+    /// stateless (`StatePolicy::None`) and frozen tensors.
+    policies: Vec<TensorPolicy>,
     m: Vec<Vec<f32>>,
     v: Vec<Vec<f32>>,
     t: u64,
@@ -27,33 +32,60 @@ pub struct Adam {
 
 impl Adam {
     pub fn new(shapes: &[Vec<usize>], cfg: &OptimConfig, decoupled: bool) -> Adam {
-        let m = shapes.iter().map(|s| vec![0.0; s.iter().product()]).collect();
-        let v = shapes.iter().map(|s| vec![0.0; s.iter().product()]).collect();
+        Self::with_policies(shapes, cfg, decoupled, &vec![TensorPolicy::uniform(cfg); shapes.len()])
+    }
+
+    pub fn with_policies(
+        shapes: &[Vec<usize>],
+        cfg: &OptimConfig,
+        decoupled: bool,
+        policies: &[TensorPolicy],
+    ) -> Adam {
+        assert_eq!(shapes.len(), policies.len());
+        let state_len = |s: &Vec<usize>, pol: &TensorPolicy| -> usize {
+            if pol.stateless() {
+                0
+            } else {
+                s.iter().product()
+            }
+        };
+        let m: Vec<Vec<f32>> =
+            shapes.iter().zip(policies).map(|(s, p)| vec![0.0; state_len(s, p)]).collect();
+        let v: Vec<Vec<f32>> =
+            shapes.iter().zip(policies).map(|(s, p)| vec![0.0; state_len(s, p)]).collect();
         let geoms: Vec<TensorGeom> = shapes
             .iter()
-            .map(|s| TensorGeom::elementwise(s.iter().product(), 2))
+            .zip(policies)
+            .map(|(s, p)| {
+                // Group-aware planning: stateless/frozen tensors cost a
+                // fraction of a full moment update.
+                TensorGeom::elementwise(s.iter().product(), if p.stateless() { 1 } else { 2 })
+            })
             .collect();
         let plan = ParamPartition::plan(&geoms, cfg.threads);
-        Adam { cfg: cfg.clone(), decoupled, m, v, t: 0, plan }
+        Adam { cfg: cfg.clone(), decoupled, policies: policies.to_vec(), m, v, t: 0, plan }
     }
 
     /// The per-chunk elementwise kernel (`Send` + stateless): identical
     /// arithmetic whether the chunk is a whole tensor (serial path) or a
-    /// planned sub-range (parallel path).
+    /// planned sub-range (parallel path). `lr` is the group-effective
+    /// base LR (drives decoupled decay), `lr_t` the bias-corrected step
+    /// size, `wd` the group-effective weight decay.
     #[allow(clippy::too_many_arguments)]
     fn update_chunk(
         cfg: &OptimConfig,
         decoupled: bool,
+        lr: f32,
         lr_t: f32,
+        wd: f32,
         p: &mut [f32],
         g: &[f32],
         m: &mut [f32],
         v: &mut [f32],
     ) {
         let (b1, b2) = (cfg.beta1, cfg.beta2);
-        let wd = cfg.weight_decay;
         if wd != 0.0 && decoupled {
-            let f = 1.0 - cfg.lr * wd;
+            let f = 1.0 - lr * wd;
             p.iter_mut().for_each(|w| *w *= f);
         }
         let couple = wd != 0.0 && !decoupled && cfg.weight_decay_mode == WeightDecayMode::Adam;
@@ -62,6 +94,34 @@ impl Adam {
             *mij = b1 * *mij + (1.0 - b1) * gij;
             *vij = b2 * *vij + (1.0 - b2) * gij * gij;
             *w -= lr_t * *mij / (vij.sqrt() + cfg.eps1);
+        }
+    }
+
+    /// Weight-decay behavior for a `StatePolicy::None` tensor, mirroring
+    /// exactly what [`Adam::update_chunk`] does for the same (kind,
+    /// mode): AdamW decays decoupled, plain Adam couples only under
+    /// `WeightDecayMode::Adam` and otherwise applies no decay at all —
+    /// so stateless tensors never decay when their stateful siblings
+    /// would not.
+    fn stateless_decay(decoupled: bool, mode: WeightDecayMode, wd: f32) -> (f32, WeightDecayMode) {
+        if decoupled {
+            (wd, WeightDecayMode::AdamW)
+        } else if mode == WeightDecayMode::Adam {
+            (wd, WeightDecayMode::Adam)
+        } else {
+            (0.0, WeightDecayMode::AdamW)
+        }
+    }
+
+    /// Bias-corrected step size for a group-effective base LR, matching
+    /// the pre-group arithmetic exactly (`lr * sqrt(bc2) / bc1`).
+    fn lr_t(&self, lr_eff: f32) -> f32 {
+        if self.cfg.bias_correction {
+            let bc1 = 1.0 - self.cfg.beta1.powi(self.t as i32);
+            let bc2 = 1.0 - self.cfg.beta2.powi(self.t as i32);
+            lr_eff * bc2.sqrt() / bc1
+        } else {
+            lr_eff
         }
     }
 }
@@ -122,21 +182,43 @@ impl Optimizer for Adam {
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
         self.t += 1;
-        // Bias-correction folded into a step-size scale.
-        let lr_t = if self.cfg.bias_correction {
-            let bc1 = 1.0 - self.cfg.beta1.powi(self.t as i32);
-            let bc2 = 1.0 - self.cfg.beta2.powi(self.t as i32);
-            self.cfg.lr * bc2.sqrt() / bc1
-        } else {
-            self.cfg.lr
-        };
         let decoupled = self.decoupled;
         if self.cfg.threads <= 1 {
-            let cfg = &self.cfg;
-            for ((param, grad), (m, v)) in
-                params.iter_mut().zip(grads).zip(self.m.iter_mut().zip(self.v.iter_mut()))
+            let cfg = self.cfg.clone();
+            let lr_ts: Vec<f32> =
+                self.policies.iter().map(|pol| self.lr_t(cfg.lr * pol.lr_scale)).collect();
+            for (idx, ((param, grad), (m, v))) in params
+                .iter_mut()
+                .zip(grads)
+                .zip(self.m.iter_mut().zip(self.v.iter_mut()))
+                .enumerate()
             {
-                Self::update_chunk(cfg, decoupled, lr_t, param.data_mut(), grad.data(), m, v);
+                let pol = self.policies[idx];
+                if pol.frozen {
+                    continue;
+                }
+                let lr_eff = cfg.lr * pol.lr_scale;
+                if pol.state == StatePolicy::None {
+                    let (wd, mode) = Self::stateless_decay(
+                        decoupled,
+                        cfg.weight_decay_mode,
+                        pol.weight_decay,
+                    );
+                    group::stateless_update(param.data_mut(), grad.data(), lr_eff, wd, mode);
+                    continue;
+                }
+                let lr_t = lr_ts[idx];
+                Self::update_chunk(
+                    &cfg,
+                    decoupled,
+                    lr_eff,
+                    lr_t,
+                    pol.weight_decay,
+                    param.data_mut(),
+                    grad.data(),
+                    m,
+                    v,
+                );
             }
             return;
         }
@@ -144,10 +226,16 @@ impl Optimizer for Adam {
         struct Task<'a> {
             p: &'a mut [f32],
             g: &'a [f32],
-            m: &'a mut [f32],
-            v: &'a mut [f32],
+            /// `(m, v)` sub-ranges; `None` for stateless/frozen tensors.
+            state: Option<(&'a mut [f32], &'a mut [f32])>,
+            lr: f32,
+            lr_t: f32,
+            wd: f32,
+            frozen: bool,
         }
         let cfg = self.cfg.clone();
+        let lr_ts: Vec<f32> =
+            self.policies.iter().map(|pol| self.lr_t(cfg.lr * pol.lr_scale)).collect();
         let plan = &self.plan;
         let mut tasks: Vec<Task<'_>> = Vec::with_capacity(plan.n_items());
         for (idx, ((param, grad), (m, v))) in params
@@ -156,18 +244,46 @@ impl Optimizer for Adam {
             .zip(self.m.iter_mut().zip(self.v.iter_mut()))
             .enumerate()
         {
+            let pol = self.policies[idx];
             let items = plan.items_of(idx);
             let p_parts = parallel::split_rows_mut(param.data_mut(), items, 1);
-            let m_parts = parallel::split_rows_mut(m, items, 1);
-            let v_parts = parallel::split_rows_mut(v, items, 1);
+            let state_parts: Vec<Option<(&mut [f32], &mut [f32])>> = if pol.stateless() {
+                items.iter().map(|_| None).collect()
+            } else {
+                parallel::split_rows_mut(m, items, 1)
+                    .into_iter()
+                    .zip(parallel::split_rows_mut(v, items, 1))
+                    .map(Some)
+                    .collect()
+            };
             let g = grad.data();
-            for (((it, p), mm), vv) in items.iter().zip(p_parts).zip(m_parts).zip(v_parts) {
-                tasks.push(Task { p, g: &g[it.row0..it.row1], m: mm, v: vv });
+            for ((it, p), st) in items.iter().zip(p_parts).zip(state_parts) {
+                tasks.push(Task {
+                    p,
+                    g: &g[it.row0..it.row1],
+                    state: st,
+                    lr: cfg.lr * pol.lr_scale,
+                    lr_t: lr_ts[idx],
+                    wd: pol.weight_decay,
+                    frozen: pol.frozen,
+                });
             }
         }
         let mut shards = parallel::into_shards(plan, vec![(); plan.n_shards()], tasks);
         parallel::run_shards(&mut shards, |_, t| {
-            Self::update_chunk(&cfg, decoupled, lr_t, t.p, t.g, t.m, t.v);
+            if t.frozen {
+                return;
+            }
+            match &mut t.state {
+                Some((m, v)) => {
+                    Self::update_chunk(&cfg, decoupled, t.lr, t.lr_t, t.wd, t.p, t.g, m, v)
+                }
+                None => {
+                    let (wd, mode) =
+                        Self::stateless_decay(decoupled, cfg.weight_decay_mode, t.wd);
+                    group::stateless_update(t.p, t.g, t.lr, wd, mode);
+                }
+            }
         });
     }
 

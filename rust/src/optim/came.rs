@@ -16,6 +16,7 @@
 use anyhow::{bail, Result};
 
 use super::blob::{self, BlobReader, BlobWriter};
+use super::group::{self, StatePolicy, TensorPolicy};
 use super::parallel::{self, ParamPartition, TensorGeom};
 use super::schedule::beta2_t;
 use super::{OptimConfig, Optimizer, StateSerde, WeightDecayMode};
@@ -94,10 +95,14 @@ impl Factored {
 
 struct PState {
     v: Option<Factored>,
-    v_dense: Vec<f32>, // used when rank < 2
+    /// Dense V: rank < 2 tensors or `StatePolicy::Dense` groups.
+    v_dense: Vec<f32>,
     u: Option<Factored>,
     u_dense: Vec<f32>,
+    /// Dense momentum; empty for stateless/frozen tensors.
     m: Vec<f32>,
+    /// Effective group policy for this tensor.
+    pol: TensorPolicy,
 }
 
 /// Per-worker scratch buffers (perf: no per-step allocs).
@@ -134,23 +139,52 @@ fn rms(x: &[f32]) -> f32 {
 
 impl Came {
     pub fn new(shapes: &[Vec<usize>], cfg: &OptimConfig) -> Came {
+        Self::with_policies(shapes, cfg, &vec![TensorPolicy::uniform(cfg); shapes.len()])
+    }
+
+    pub fn with_policies(
+        shapes: &[Vec<usize>],
+        cfg: &OptimConfig,
+        policies: &[TensorPolicy],
+    ) -> Came {
+        assert_eq!(shapes.len(), policies.len());
         let states = shapes
             .iter()
-            .map(|shape| {
+            .zip(policies)
+            .map(|(shape, pol)| {
                 let numel: usize = shape.iter().product();
-                let v = Factored::new(shape);
-                let u = Factored::new(shape);
+                if pol.stateless() {
+                    return PState {
+                        v: None,
+                        v_dense: Vec::new(),
+                        u: None,
+                        u_dense: Vec::new(),
+                        m: Vec::new(),
+                        pol: *pol,
+                    };
+                }
+                let (v, u) = if pol.state == StatePolicy::Dense {
+                    (None, None)
+                } else {
+                    (Factored::new(shape), Factored::new(shape))
+                };
                 PState {
                     v_dense: if v.is_none() { vec![0.0; numel] } else { Vec::new() },
                     u_dense: if u.is_none() { vec![0.0; numel] } else { Vec::new() },
                     v,
                     u,
                     m: vec![0.0; numel],
+                    pol: *pol,
                 }
             })
             .collect();
-        let geoms: Vec<TensorGeom> =
-            shapes.iter().map(|s| TensorGeom::whole(s.iter().product(), 10)).collect();
+        let geoms: Vec<TensorGeom> = shapes
+            .iter()
+            .zip(policies)
+            .map(|(s, pol)| {
+                TensorGeom::whole(s.iter().product(), if pol.stateless() { 1 } else { 10 })
+            })
+            .collect();
         let plan = ParamPartition::plan(&geoms, cfg.threads);
         let scratch = (0..plan.n_shards()).map(|_| Scratch::default()).collect();
         Came { cfg: cfg.clone(), states, t: 0, plan, scratch }
@@ -166,6 +200,15 @@ impl Came {
         st: &mut PState,
         scr: &mut Scratch,
     ) {
+        if st.pol.frozen {
+            return;
+        }
+        let lr = cfg.lr * st.pol.lr_scale;
+        let wd = st.pol.weight_decay;
+        if st.pol.stateless() {
+            group::stateless_update(p, g, lr, wd, cfg.weight_decay_mode);
+            return;
+        }
         // û = g / sqrt(V̂ + eps1)
         scr.uhat.clear();
         scr.uhat.extend_from_slice(g);
@@ -214,21 +257,21 @@ impl Came {
             }
         }
         // weight decay + apply
-        if cfg.weight_decay != 0.0 {
+        if wd != 0.0 {
             match cfg.weight_decay_mode {
                 WeightDecayMode::AdamW => {
-                    let f = 1.0 - cfg.lr * cfg.weight_decay;
+                    let f = 1.0 - lr * wd;
                     p.iter_mut().for_each(|w| *w *= f);
                 }
                 WeightDecayMode::Adam => {
                     for (x, &w) in update.iter_mut().zip(p.iter()) {
-                        *x += cfg.weight_decay * w;
+                        *x += wd * w;
                     }
                 }
             }
         }
         for (w, &x) in p.iter_mut().zip(update.iter()) {
-            *w -= cfg.lr * x;
+            *w -= lr * x;
         }
     }
 }

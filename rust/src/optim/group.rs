@@ -1,0 +1,671 @@
+//! Param groups: per-group hyperparameters and state policies.
+//!
+//! Every training recipe the paper evaluates treats parameters
+//! non-uniformly — bias/LayerNorm tensors are exempt from weight decay,
+//! embeddings get scaled learning rates, tiny vectors may carry dense
+//! (or no) optimizer state. This module is the vocabulary for expressing
+//! that:
+//!
+//! * [`ParamSpec`] — a named, shaped, role-tagged parameter tensor
+//!   (roles: [`ParamRole`]), emitted by every model inventory in
+//!   `crate::models` and derivable from artifact specs via
+//!   [`ParamRole::infer`].
+//! * [`GroupPolicy`] — one matcher block (`[[optimizer.group]]` in TOML):
+//!   name globs and/or role selectors, plus the per-group overrides
+//!   `lr_scale`, `weight_decay`, `frozen` and a [`StatePolicy`].
+//! * [`GroupedConfig`] — the base [`OptimConfig`] plus an ordered list of
+//!   group policies (first match wins; unmatched tensors fall into the
+//!   implicit `default` group carrying the base config).
+//! * [`resolve`] — flattens specs × policies into a [`Resolution`]: a
+//!   group table plus one effective [`TensorPolicy`] per tensor, which is
+//!   what the optimizer constructors actually consume.
+//!
+//! Construct through [`crate::optim::build_grouped`]:
+//!
+//! ```
+//! use smmf_repro::optim::group::{GroupPolicy, GroupedConfig, ParamRole, ParamSpec, StatePolicy};
+//! use smmf_repro::optim::{build_grouped, OptKind, OptimConfig, Optimizer};
+//! use smmf_repro::tensor::Tensor;
+//!
+//! let specs = vec![
+//!     ParamSpec::new("fc.weight", &[16, 16], ParamRole::Kernel),
+//!     ParamSpec::new("fc.bias", &[16], ParamRole::Bias),
+//! ];
+//! let mut gcfg = GroupedConfig::uniform(&OptimConfig {
+//!     weight_decay: 0.01,
+//!     ..OptimConfig::paper_defaults(OptKind::Smmf)
+//! });
+//! // Exempt biases from weight decay and keep their state dense.
+//! gcfg.groups.push(GroupPolicy {
+//!     name: "no_decay".into(),
+//!     match_roles: vec![ParamRole::Bias, ParamRole::Norm],
+//!     weight_decay: Some(0.0),
+//!     state: StatePolicy::Dense,
+//!     ..GroupPolicy::default()
+//! });
+//! let mut opt = build_grouped(OptKind::Smmf, &specs, &gcfg);
+//! let mut params = vec![Tensor::zeros(&[16, 16]), Tensor::zeros(&[16])];
+//! let grads = vec![
+//!     Tensor::from_vec(&[16, 16], vec![0.01; 256]),
+//!     Tensor::from_vec(&[16], vec![0.01; 16]),
+//! ];
+//! opt.step(&mut params, &grads);
+//! assert!(opt.state_bytes() > 0);
+//! ```
+
+use super::{OptimConfig, WeightDecayMode};
+
+/// The role a parameter tensor plays in its model. Emitted by the
+/// inventory builders in `crate::models`; inferable from HF-style tensor
+/// names via [`ParamRole::infer`] for artifact-derived inventories.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ParamRole {
+    /// Dense/conv/attention weight matrices (rank >= 2, decayed).
+    Kernel,
+    /// Additive bias vectors (conventionally weight-decay exempt).
+    Bias,
+    /// LayerNorm/BatchNorm/RMSNorm scales and shifts (decay exempt).
+    Norm,
+    /// Embedding tables (often LR-rescaled).
+    Embedding,
+    /// Anything else (scalars, odd buffers).
+    Other,
+}
+
+impl ParamRole {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ParamRole::Kernel => "kernel",
+            ParamRole::Bias => "bias",
+            ParamRole::Norm => "norm",
+            ParamRole::Embedding => "embedding",
+            ParamRole::Other => "other",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<ParamRole> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "kernel" => ParamRole::Kernel,
+            "bias" => ParamRole::Bias,
+            "norm" => ParamRole::Norm,
+            "embedding" => ParamRole::Embedding,
+            "other" => ParamRole::Other,
+            _ => return None,
+        })
+    }
+
+    pub fn all() -> [ParamRole; 5] {
+        [ParamRole::Kernel, ParamRole::Bias, ParamRole::Norm, ParamRole::Embedding, ParamRole::Other]
+    }
+
+    /// Infer a role from an HF/torchvision-style tensor name plus its
+    /// shape — the fallback for inventories that only carry names (AOT
+    /// artifact specs). The explicit roles set by `crate::models` builders
+    /// take precedence over this heuristic.
+    pub fn infer(name: &str, shape: &[usize]) -> ParamRole {
+        let lower = name.to_ascii_lowercase();
+        let base = lower.rsplit('.').next().unwrap_or(&lower);
+        let numbered = |seg: &str, prefix: &str| {
+            seg.len() > prefix.len()
+                && seg.starts_with(prefix)
+                && seg[prefix.len()..].chars().all(|c| c.is_ascii_digit())
+        };
+        let norm_ctx = lower.split('.').any(|seg| {
+            seg.contains("norm")
+                || seg == "ln"
+                || seg.starts_with("ln_")
+                || numbered(seg, "ln")
+                || numbered(seg, "bn")
+        });
+        if norm_ctx {
+            return ParamRole::Norm;
+        }
+        if base.ends_with("bias") || base == "b" {
+            return ParamRole::Bias;
+        }
+        if lower.contains("emb") || base == "wte" || base == "wpe" || base == "shared" {
+            return ParamRole::Embedding;
+        }
+        // Declared rank, not squeezed rank: a [1, 512] projection is a
+        // real weight matrix, only genuinely 1-D "weight"s are norm
+        // scales in the conventions we model.
+        if shape.len() >= 2 {
+            ParamRole::Kernel
+        } else if base == "weight" || base == "g" || base == "gamma" || base == "scale" {
+            ParamRole::Norm
+        } else {
+            ParamRole::Other
+        }
+    }
+}
+
+/// One named, shaped, role-tagged parameter tensor — the registration
+/// unit of the grouped optimizer API.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub role: ParamRole,
+}
+
+impl ParamSpec {
+    pub fn new(name: impl Into<String>, shape: &[usize], role: ParamRole) -> ParamSpec {
+        ParamSpec { name: name.into(), shape: shape.to_vec(), role }
+    }
+
+    /// Build a spec with the role inferred from the name/shape.
+    pub fn inferred(name: impl Into<String>, shape: &[usize]) -> ParamSpec {
+        let name = name.into();
+        let role = ParamRole::infer(&name, shape);
+        ParamSpec { name, shape: shape.to_vec(), role }
+    }
+
+    pub fn numel(&self) -> u64 {
+        self.shape.iter().product::<usize>() as u64
+    }
+}
+
+/// Per-group optimizer-state policy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StatePolicy {
+    /// The optimizer's native layout — factored for SMMF / Adafactor /
+    /// CAME, dense moments for Adam, covers for SM3, momentum for SGD.
+    /// This is the default and reproduces the ungrouped behavior exactly.
+    Factored,
+    /// Force dense per-element state: SMMF keeps dense Adam-style
+    /// first/second moments for the group, Adafactor a dense V, CAME
+    /// dense V and U. Optimizers whose state is already element-dense or
+    /// axis-wise (Adam, AdamW, SGD, SM3) treat this as `Factored`.
+    Dense,
+    /// No persistent state for the group: the update degenerates to plain
+    /// `w -= lr · g` (with the group's weight decay). Zero state bytes.
+    None,
+}
+
+impl StatePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StatePolicy::Factored => "factored",
+            StatePolicy::Dense => "dense",
+            StatePolicy::None => "none",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<StatePolicy> {
+        Some(match s.to_ascii_lowercase().as_str() {
+            "factored" | "native" | "default" => StatePolicy::Factored,
+            "dense" => StatePolicy::Dense,
+            "none" | "stateless" => StatePolicy::None,
+            _ => return None,
+        })
+    }
+
+    /// Stable numeric tag for the checkpoint CONFIG section.
+    pub fn tag(self) -> u8 {
+        match self {
+            StatePolicy::Factored => 0,
+            StatePolicy::Dense => 1,
+            StatePolicy::None => 2,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<StatePolicy> {
+        Some(match tag {
+            0 => StatePolicy::Factored,
+            1 => StatePolicy::Dense,
+            2 => StatePolicy::None,
+            _ => return None,
+        })
+    }
+}
+
+/// One `[[optimizer.group]]` matcher block: which tensors it captures
+/// (name globs and/or roles; a tensor must satisfy both non-empty
+/// selector lists; two empty lists match everything) and the per-group
+/// hyperparameter overrides.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupPolicy {
+    /// Label used in reports and the checkpoint CONFIG section.
+    pub name: String,
+    /// Name globs (`*` any substring, `?` any char); empty = match all.
+    pub match_names: Vec<String>,
+    /// Role selectors; empty = match all.
+    pub match_roles: Vec<ParamRole>,
+    /// Multiplies the (scheduled) base learning rate for the group.
+    pub lr_scale: f32,
+    /// Overrides the base weight decay; `None` inherits it.
+    pub weight_decay: Option<f32>,
+    /// Frozen tensors receive no updates and carry no optimizer state.
+    pub frozen: bool,
+    pub state: StatePolicy,
+}
+
+impl Default for GroupPolicy {
+    fn default() -> Self {
+        GroupPolicy {
+            name: "group".into(),
+            match_names: Vec::new(),
+            match_roles: Vec::new(),
+            lr_scale: 1.0,
+            weight_decay: None,
+            frozen: false,
+            state: StatePolicy::Factored,
+        }
+    }
+}
+
+impl GroupPolicy {
+    /// Does this policy capture the given spec?
+    pub fn matches(&self, spec: &ParamSpec) -> bool {
+        let role_ok =
+            self.match_roles.is_empty() || self.match_roles.contains(&spec.role);
+        let name_ok = self.match_names.is_empty()
+            || self.match_names.iter().any(|p| glob_match(p, &spec.name));
+        role_ok && name_ok
+    }
+
+    /// Parse the compact CLI spelling: comma-separated `key=value` fields
+    /// (`name=`, `role=bias|norm`, `match=*.bias|*ln*`, `lr_scale=`,
+    /// `wd=`/`weight_decay=`, `state=factored|dense|none`, `frozen`).
+    pub fn parse_cli(spec: &str) -> Result<GroupPolicy, String> {
+        let mut g = GroupPolicy::default();
+        for field in spec.split(',').map(str::trim).filter(|f| !f.is_empty()) {
+            let (key, value) = field.split_once('=').unwrap_or((field, ""));
+            match key {
+                "name" => g.name = value.to_string(),
+                "role" => {
+                    for r in value.split('|') {
+                        g.match_roles
+                            .push(ParamRole::parse(r).ok_or_else(|| format!("unknown role {r}"))?);
+                    }
+                }
+                "match" => g.match_names.extend(value.split('|').map(String::from)),
+                "lr_scale" => {
+                    g.lr_scale =
+                        value.parse().map_err(|_| format!("bad lr_scale {value}"))?
+                }
+                "wd" | "weight_decay" => {
+                    g.weight_decay =
+                        Some(value.parse().map_err(|_| format!("bad weight_decay {value}"))?)
+                }
+                "state" => {
+                    g.state = StatePolicy::parse(value)
+                        .ok_or_else(|| format!("unknown state policy {value}"))?
+                }
+                "frozen" => g.frozen = value.is_empty() || value == "true",
+                other => return Err(format!("unknown group field {other}")),
+            }
+        }
+        Ok(g)
+    }
+
+    /// Parse a `;`-separated list of CLI group specs.
+    pub fn parse_cli_list(specs: &str) -> Result<Vec<GroupPolicy>, String> {
+        specs
+            .split(';')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .map(GroupPolicy::parse_cli)
+            .collect()
+    }
+}
+
+/// Base config + ordered group policies (first match wins).
+#[derive(Clone, Debug)]
+pub struct GroupedConfig {
+    pub base: OptimConfig,
+    pub groups: Vec<GroupPolicy>,
+}
+
+impl GroupedConfig {
+    /// A grouped config with no groups: every tensor lands in the default
+    /// group and behavior is identical to the legacy flat-config path.
+    pub fn uniform(cfg: &OptimConfig) -> GroupedConfig {
+        GroupedConfig { base: cfg.clone(), groups: Vec::new() }
+    }
+}
+
+/// The effective per-tensor knobs an optimizer consults at construction
+/// (state layout) and every step (lr scale, weight decay, frozen).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TensorPolicy {
+    /// Index into [`Resolution::groups`] (0 = the implicit default).
+    pub group: usize,
+    pub lr_scale: f32,
+    pub weight_decay: f32,
+    pub frozen: bool,
+    pub state: StatePolicy,
+}
+
+impl TensorPolicy {
+    /// The default-group policy: behaviorally identical to the flat
+    /// config (`lr_scale` 1, base weight decay, native state).
+    pub fn uniform(cfg: &OptimConfig) -> TensorPolicy {
+        TensorPolicy {
+            group: 0,
+            lr_scale: 1.0,
+            weight_decay: cfg.weight_decay,
+            frozen: false,
+            state: StatePolicy::Factored,
+        }
+    }
+
+    /// True when the tensor carries no persistent optimizer state.
+    pub fn stateless(&self) -> bool {
+        self.frozen || self.state == StatePolicy::None
+    }
+}
+
+/// One row of the resolved group table.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResolvedGroup {
+    pub name: String,
+    pub lr_scale: f32,
+    pub weight_decay: f32,
+    pub frozen: bool,
+    pub state: StatePolicy,
+    /// Tensors captured by this group.
+    pub tensors: usize,
+    /// Total parameter count captured by this group.
+    pub params: u64,
+}
+
+/// Specs × policies, flattened: the group table plus one effective
+/// [`TensorPolicy`] per tensor in registration order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Resolution {
+    /// Index 0 is always the implicit default group.
+    pub groups: Vec<ResolvedGroup>,
+    pub tensor: Vec<TensorPolicy>,
+}
+
+impl Resolution {
+    /// All-default resolution over `n` tensors (the legacy `build`
+    /// path). Note: this shortcut has no shapes, so the default group's
+    /// `params` diagnostic is 0 — use [`resolve`] with real specs when
+    /// the group table feeds reports or the checkpoint CONFIG section.
+    pub fn uniform(cfg: &OptimConfig, n: usize) -> Resolution {
+        Resolution {
+            groups: vec![ResolvedGroup {
+                name: "default".into(),
+                lr_scale: 1.0,
+                weight_decay: cfg.weight_decay,
+                frozen: false,
+                state: StatePolicy::Factored,
+                tensors: n,
+                params: 0,
+            }],
+            tensor: vec![TensorPolicy::uniform(cfg); n],
+        }
+    }
+}
+
+/// Resolve a grouped config over a parameter inventory. Policies are
+/// tried in order, first match wins; unmatched tensors fall into the
+/// implicit `default` group (index 0) carrying the base config.
+pub fn resolve(specs: &[ParamSpec], gcfg: &GroupedConfig) -> Resolution {
+    let base = &gcfg.base;
+    let mut groups = vec![ResolvedGroup {
+        name: "default".into(),
+        lr_scale: 1.0,
+        weight_decay: base.weight_decay,
+        frozen: false,
+        state: StatePolicy::Factored,
+        tensors: 0,
+        params: 0,
+    }];
+    for g in &gcfg.groups {
+        groups.push(ResolvedGroup {
+            name: g.name.clone(),
+            lr_scale: g.lr_scale,
+            weight_decay: g.weight_decay.unwrap_or(base.weight_decay),
+            frozen: g.frozen,
+            state: g.state,
+            tensors: 0,
+            params: 0,
+        });
+    }
+    let mut tensor = Vec::with_capacity(specs.len());
+    for spec in specs {
+        let gi = gcfg
+            .groups
+            .iter()
+            .position(|g| g.matches(spec))
+            .map(|i| i + 1)
+            .unwrap_or(0);
+        let g = &groups[gi];
+        let pol = TensorPolicy {
+            group: gi,
+            lr_scale: g.lr_scale,
+            weight_decay: g.weight_decay,
+            frozen: g.frozen,
+            state: g.state,
+        };
+        groups[gi].tensors += 1;
+        groups[gi].params += spec.numel();
+        tensor.push(pol);
+    }
+    Resolution { groups, tensor }
+}
+
+/// Plain `w -= lr · g` update with weight decay, shared by every
+/// optimizer for `StatePolicy::None` tensors.
+pub(crate) fn stateless_update(
+    p: &mut [f32],
+    g: &[f32],
+    lr: f32,
+    wd: f32,
+    mode: WeightDecayMode,
+) {
+    if wd != 0.0 && mode == WeightDecayMode::AdamW {
+        let f = 1.0 - lr * wd;
+        p.iter_mut().for_each(|w| *w *= f);
+    }
+    let couple = wd != 0.0 && mode == WeightDecayMode::Adam;
+    for (w, &g0) in p.iter_mut().zip(g) {
+        let gij = if couple { g0 + wd * *w } else { g0 };
+        *w -= lr * gij;
+    }
+}
+
+/// Glob match with `*` (any substring, including empty) and `?` (any
+/// single char); everything else is literal. Iterative backtracking —
+/// linear in practice, no recursion.
+pub fn glob_match(pattern: &str, text: &str) -> bool {
+    let p: Vec<char> = pattern.chars().collect();
+    let t: Vec<char> = text.chars().collect();
+    let (mut pi, mut ti) = (0usize, 0usize);
+    let (mut star_p, mut star_t) = (usize::MAX, 0usize);
+    while ti < t.len() {
+        if pi < p.len() && (p[pi] == '?' || p[pi] == t[ti]) {
+            pi += 1;
+            ti += 1;
+        } else if pi < p.len() && p[pi] == '*' {
+            star_p = pi;
+            star_t = ti;
+            pi += 1;
+        } else if star_p != usize::MAX {
+            pi = star_p + 1;
+            star_t += 1;
+            ti = star_t;
+        } else {
+            return false;
+        }
+    }
+    while pi < p.len() && p[pi] == '*' {
+        pi += 1;
+    }
+    pi == p.len()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<ParamSpec> {
+        vec![
+            ParamSpec::new("encoder.0.attn.q.weight", &[64, 64], ParamRole::Kernel),
+            ParamSpec::new("encoder.0.attn.q.bias", &[64], ParamRole::Bias),
+            ParamSpec::new("encoder.0.ln1.weight", &[64], ParamRole::Norm),
+            ParamSpec::new("encoder.0.ln1.bias", &[64], ParamRole::Norm),
+            ParamSpec::new("tok_emb.weight", &[1000, 64], ParamRole::Embedding),
+        ]
+    }
+
+    #[test]
+    fn glob_basics() {
+        assert!(glob_match("*", ""));
+        assert!(glob_match("*", "anything"));
+        assert!(glob_match("*.bias", "a.b.bias"));
+        assert!(!glob_match("*.bias", "a.b.weight"));
+        assert!(glob_match("encoder.*.ln?.weight", "encoder.11.ln2.weight"));
+        assert!(!glob_match("encoder.*.ln?.weight", "decoder.11.ln2.weight"));
+        assert!(glob_match("a*b*c", "axxbyyc"));
+        assert!(!glob_match("a*b*c", "axxbyy"));
+        assert!(glob_match("exact", "exact"));
+        assert!(!glob_match("exact", "exact2"));
+    }
+
+    #[test]
+    fn role_inference_heuristics() {
+        assert_eq!(ParamRole::infer("encoder.0.attn.q.weight", &[64, 64]), ParamRole::Kernel);
+        assert_eq!(ParamRole::infer("encoder.0.attn.q.bias", &[64]), ParamRole::Bias);
+        assert_eq!(ParamRole::infer("encoder.0.ln1.weight", &[64]), ParamRole::Norm);
+        assert_eq!(ParamRole::infer("encoder.0.ln1.bias", &[64]), ParamRole::Norm);
+        assert_eq!(ParamRole::infer("bn3.weight", &[32]), ParamRole::Norm);
+        assert_eq!(ParamRole::infer("final_layernorm.weight", &[32]), ParamRole::Norm);
+        assert_eq!(ParamRole::infer("tok_emb.weight", &[1000, 64]), ParamRole::Embedding);
+        assert_eq!(ParamRole::infer("wte", &[1000, 64]), ParamRole::Embedding);
+        assert_eq!(ParamRole::infer("conv1.weight", &[8, 3, 3, 3]), ParamRole::Kernel);
+        assert_eq!(ParamRole::infer("detect.m.0.bias", &[18]), ParamRole::Bias);
+        assert_eq!(ParamRole::infer("temperature", &[1]), ParamRole::Other);
+        // declared rank wins: squeezed-rank-1 matrices are still kernels
+        assert_eq!(ParamRole::infer("proj.weight", &[1, 512]), ParamRole::Kernel);
+        assert_eq!(ParamRole::infer("scale.weight", &[512]), ParamRole::Norm);
+    }
+
+    #[test]
+    fn role_roundtrip() {
+        for r in ParamRole::all() {
+            assert_eq!(ParamRole::parse(r.name()), Some(r));
+        }
+        assert_eq!(ParamRole::parse("nope"), None);
+    }
+
+    #[test]
+    fn state_policy_tags_stable() {
+        for s in [StatePolicy::Factored, StatePolicy::Dense, StatePolicy::None] {
+            assert_eq!(StatePolicy::from_tag(s.tag()), Some(s));
+            assert_eq!(StatePolicy::parse(s.name()), Some(s));
+        }
+        assert_eq!(StatePolicy::from_tag(9), None);
+    }
+
+    #[test]
+    fn first_match_wins_and_default_catches_rest() {
+        let cfg = OptimConfig { weight_decay: 0.1, ..OptimConfig::default() };
+        let gcfg = GroupedConfig {
+            base: cfg,
+            groups: vec![
+                GroupPolicy {
+                    name: "no_decay".into(),
+                    match_roles: vec![ParamRole::Bias, ParamRole::Norm],
+                    weight_decay: Some(0.0),
+                    ..GroupPolicy::default()
+                },
+                GroupPolicy {
+                    name: "emb".into(),
+                    match_names: vec!["*emb*".into()],
+                    lr_scale: 0.5,
+                    state: StatePolicy::Dense,
+                    ..GroupPolicy::default()
+                },
+                // would also match the biases, but no_decay wins
+                GroupPolicy {
+                    name: "late".into(),
+                    match_names: vec!["*.bias".into()],
+                    lr_scale: 7.0,
+                    ..GroupPolicy::default()
+                },
+            ],
+        };
+        let res = resolve(&specs(), &gcfg);
+        assert_eq!(res.groups.len(), 4);
+        assert_eq!(res.groups[0].name, "default");
+        // kernel -> default, bias/norms -> no_decay, emb -> emb
+        assert_eq!(
+            res.tensor.iter().map(|t| t.group).collect::<Vec<_>>(),
+            vec![0, 1, 1, 1, 2]
+        );
+        assert_eq!(res.tensor[0].weight_decay, 0.1);
+        assert_eq!(res.tensor[1].weight_decay, 0.0);
+        assert_eq!(res.tensor[4].lr_scale, 0.5);
+        assert_eq!(res.tensor[4].state, StatePolicy::Dense);
+        assert_eq!(res.groups[1].tensors, 3);
+        assert_eq!(res.groups[2].params, 1000 * 64);
+        assert_eq!(res.groups[3].tensors, 0, "shadowed group captures nothing");
+        assert_eq!(res.groups[0].tensors, 1);
+    }
+
+    #[test]
+    fn uniform_resolution_is_all_default() {
+        let cfg = OptimConfig { weight_decay: 0.02, ..OptimConfig::default() };
+        let res = resolve(&specs(), &GroupedConfig::uniform(&cfg));
+        assert_eq!(res.groups.len(), 1);
+        for t in &res.tensor {
+            assert_eq!(*t, TensorPolicy::uniform(&cfg));
+        }
+        // and matches the shortcut constructor
+        let short = Resolution::uniform(&cfg, specs().len());
+        assert_eq!(short.tensor, res.tensor);
+    }
+
+    #[test]
+    fn both_selector_kinds_must_agree() {
+        let g = GroupPolicy {
+            match_names: vec!["encoder.*".into()],
+            match_roles: vec![ParamRole::Bias],
+            ..GroupPolicy::default()
+        };
+        let s = specs();
+        assert!(g.matches(&s[1])); // encoder bias
+        assert!(!g.matches(&s[0])); // encoder kernel: role fails
+        assert!(!g.matches(&s[4])); // embedding: name fails
+        // empty selectors match everything
+        assert!(GroupPolicy::default().matches(&s[0]));
+    }
+
+    #[test]
+    fn cli_spec_parses() {
+        let gs = GroupPolicy::parse_cli_list(
+            "name=no_decay,role=bias|norm,wd=0; match=*emb*,lr_scale=0.5,state=dense; role=other,frozen",
+        )
+        .unwrap();
+        assert_eq!(gs.len(), 3);
+        assert_eq!(gs[0].name, "no_decay");
+        assert_eq!(gs[0].match_roles, vec![ParamRole::Bias, ParamRole::Norm]);
+        assert_eq!(gs[0].weight_decay, Some(0.0));
+        assert_eq!(gs[1].match_names, vec!["*emb*".to_string()]);
+        assert_eq!(gs[1].lr_scale, 0.5);
+        assert_eq!(gs[1].state, StatePolicy::Dense);
+        assert!(gs[2].frozen);
+        assert!(GroupPolicy::parse_cli("role=nope").is_err());
+        assert!(GroupPolicy::parse_cli("bogus=1").is_err());
+    }
+
+    #[test]
+    fn stateless_update_matches_plain_sgd() {
+        let mut p = vec![1.0f32, -2.0, 3.0];
+        let g = vec![0.5f32, 0.5, 0.5];
+        stateless_update(&mut p, &g, 0.1, 0.0, WeightDecayMode::AdamW);
+        assert_eq!(p, vec![0.95, -2.05, 2.95]);
+        // AdamW decay scales first
+        let mut p2 = vec![1.0f32];
+        stateless_update(&mut p2, &[0.0], 0.1, 0.5, WeightDecayMode::AdamW);
+        assert!((p2[0] - 0.95).abs() < 1e-6);
+        // Adam-coupled decay folds into the gradient
+        let mut p3 = vec![1.0f32];
+        stateless_update(&mut p3, &[0.0], 0.1, 0.5, WeightDecayMode::Adam);
+        assert!((p3[0] - 0.95).abs() < 1e-6);
+    }
+}

@@ -12,14 +12,33 @@
 //!   model (every tensor rounded up to 512 B blocks), approximating what
 //!   `torch.cuda.memory_allocated` reports in the paper's setup.
 
+use super::group::{self, GroupedConfig, ParamSpec, StatePolicy, TensorPolicy};
 use super::matricize::{effective_shape, squeezed_rank};
 use super::{OptKind, OptimConfig};
 
 /// Per-tensor persistent state: sizes in bytes of each separately
-/// allocated state tensor.
+/// allocated state tensor, under the native (ungrouped) policy.
 pub fn state_allocs(kind: OptKind, shape: &[usize], cfg: &OptimConfig) -> Vec<u64> {
+    state_allocs_with(kind, shape, cfg, &TensorPolicy::uniform(cfg))
+}
+
+/// Per-tensor persistent state under a resolved group policy: frozen and
+/// `StatePolicy::None` tensors hold nothing; `StatePolicy::Dense` forces
+/// the dense fallback where the optimizer has one (SMMF: 2N Adam-style
+/// moments; Adafactor: dense V; CAME: dense V and U). Mirrors the live
+/// `with_policies` constructors byte-for-byte (asserted by tests).
+pub fn state_allocs_with(
+    kind: OptKind,
+    shape: &[usize],
+    cfg: &OptimConfig,
+    pol: &TensorPolicy,
+) -> Vec<u64> {
     let numel: u64 = shape.iter().product::<usize>() as u64;
     let f = 4u64; // f32
+    if pol.stateless() {
+        return Vec::new();
+    }
+    let dense = pol.state == StatePolicy::Dense;
     match kind {
         OptKind::Sgd => {
             if cfg.momentum != 0.0 {
@@ -31,7 +50,7 @@ pub fn state_allocs(kind: OptKind, shape: &[usize], cfg: &OptimConfig) -> Vec<u6
         OptKind::Adam | OptKind::AdamW => vec![numel * f, numel * f],
         OptKind::Adafactor => {
             let mut out = Vec::new();
-            if shape.len() >= 2 {
+            if !dense && shape.len() >= 2 {
                 let last = shape[shape.len() - 1] as u64;
                 let second = shape[shape.len() - 2] as u64;
                 let lead: u64 = shape[..shape.len() - 2].iter().product::<usize>() as u64;
@@ -55,7 +74,7 @@ pub fn state_allocs(kind: OptKind, shape: &[usize], cfg: &OptimConfig) -> Vec<u6
         }
         OptKind::Came => {
             let mut out = vec![numel * f]; // momentum
-            if shape.len() >= 2 {
+            if !dense && shape.len() >= 2 {
                 let last = shape[shape.len() - 1] as u64;
                 let second = shape[shape.len() - 2] as u64;
                 let lead: u64 = shape[..shape.len() - 2].iter().product::<usize>() as u64;
@@ -67,7 +86,7 @@ pub fn state_allocs(kind: OptKind, shape: &[usize], cfg: &OptimConfig) -> Vec<u6
             out
         }
         OptKind::Smmf => {
-            if squeezed_rank(shape) == 1 && !cfg.vector_reshape {
+            if dense || (squeezed_rank(shape) == 1 && !cfg.vector_reshape) {
                 vec![numel * f, numel * f]
             } else {
                 let (n, m) = match cfg.smmf_matricize {
@@ -105,14 +124,39 @@ pub fn inventory_state_bytes(kind: OptKind, shapes: &[Vec<usize>], cfg: &OptimCo
 /// optimizers by `blob_bytes_match_live` below; layouts in
 /// docs/CHECKPOINT_FORMAT.md).
 pub fn tensor_blob_bytes(kind: OptKind, shape: &[usize], cfg: &OptimConfig) -> u64 {
+    tensor_blob_bytes_with(kind, shape, cfg, &TensorPolicy::uniform(cfg))
+}
+
+/// [`tensor_blob_bytes`] under a resolved group policy: stateless/frozen
+/// tensors shrink to their framing bytes, `StatePolicy::Dense` switches
+/// to the dense blob layout.
+pub fn tensor_blob_bytes_with(
+    kind: OptKind,
+    shape: &[usize],
+    cfg: &OptimConfig,
+    pol: &TensorPolicy,
+) -> u64 {
     let numel: u64 = shape.iter().product::<usize>() as u64;
     let f = 4u64; // f32
     let vec = |len: u64| 8 + len * f; // u64 length prefix + payload
+    let stateless = pol.stateless();
+    let dense = pol.state == StatePolicy::Dense;
+    if stateless {
+        // Framing-only blobs, per docs/CHECKPOINT_FORMAT.md.
+        return match kind {
+            OptKind::Sgd => 1,                     // has_momentum = 0
+            OptKind::Adam | OptKind::AdamW => 8,   // numel = 0
+            OptKind::Adafactor => 1 + 8 + 1,       // dense V len 0, has_m 0
+            OptKind::Sm3 => 4 + 1,                 // n_axes 0, has_m 0
+            OptKind::Came => (1 + 8) * 2 + 8,      // dense V/U len 0, m len 0
+            OptKind::Smmf => 1,                    // state kind tag 2
+        };
+    }
     match kind {
         OptKind::Sgd => 1 + if cfg.momentum != 0.0 { vec(numel) } else { 0 },
         OptKind::Adam | OptKind::AdamW => 8 + 2 * numel * f,
         OptKind::Adafactor => {
-            let v = if shape.len() >= 2 {
+            let v = if !dense && shape.len() >= 2 {
                 let last = shape[shape.len() - 1] as u64;
                 let second = shape[shape.len() - 2] as u64;
                 let lead: u64 = shape[..shape.len() - 2].iter().product::<usize>() as u64;
@@ -128,7 +172,7 @@ pub fn tensor_blob_bytes(kind: OptKind, shape: &[usize], cfg: &OptimConfig) -> u
             4 + axes + 1 + if cfg.beta1 > 0.0 { vec(numel) } else { 0 }
         }
         OptKind::Came => {
-            let fact = if shape.len() >= 2 {
+            let fact = if !dense && shape.len() >= 2 {
                 let last = shape[shape.len() - 1] as u64;
                 let second = shape[shape.len() - 2] as u64;
                 let lead: u64 = shape[..shape.len() - 2].iter().product::<usize>() as u64;
@@ -139,7 +183,7 @@ pub fn tensor_blob_bytes(kind: OptKind, shape: &[usize], cfg: &OptimConfig) -> u
             (1 + fact) * 2 + vec(numel)
         }
         OptKind::Smmf => {
-            if squeezed_rank(shape) == 1 && !cfg.vector_reshape {
+            if dense || (squeezed_rank(shape) == 1 && !cfg.vector_reshape) {
                 1 + 8 + 2 * numel * f
             } else {
                 let (n, m) = match cfg.smmf_matricize {
@@ -202,6 +246,66 @@ pub struct MemoryReport {
     /// ([`inventory_checkpoint_bytes`]) — the native serialization keeps
     /// this within framing overhead of `opt_bytes`.
     pub ckpt_opt_bytes: u64,
+}
+
+/// Policy-aware inventory totals (one resolved policy per tensor).
+pub fn inventory_state_bytes_with(
+    kind: OptKind,
+    shapes: &[Vec<usize>],
+    cfg: &OptimConfig,
+    policies: &[TensorPolicy],
+) -> u64 {
+    shapes
+        .iter()
+        .zip(policies)
+        .map(|(s, p)| state_allocs_with(kind, s, cfg, p).iter().sum::<u64>())
+        .sum()
+}
+
+/// One memory-accounting row per resolved param group: how many tensors
+/// and parameters the group captures and what its optimizer state costs
+/// in RAM and on disk (`SMMFCKPT` OPT-section blob bytes).
+#[derive(Clone, Debug)]
+pub struct GroupMemoryRow {
+    pub group: String,
+    pub tensors: usize,
+    pub params: u64,
+    pub opt_bytes: u64,
+    pub ckpt_opt_bytes: u64,
+    pub frozen: bool,
+    pub state: StatePolicy,
+}
+
+/// Per-group memory breakdown of a grouped config over a role-tagged
+/// inventory — the grouped counterpart of [`report`]. Row order matches
+/// the resolved group table (index 0 = the implicit default group).
+pub fn grouped_report(
+    kind: OptKind,
+    specs: &[ParamSpec],
+    gcfg: &GroupedConfig,
+) -> Vec<GroupMemoryRow> {
+    let res = group::resolve(specs, gcfg);
+    let mut rows: Vec<GroupMemoryRow> = res
+        .groups
+        .iter()
+        .map(|g| GroupMemoryRow {
+            group: g.name.clone(),
+            tensors: g.tensors,
+            params: g.params,
+            opt_bytes: 0,
+            ckpt_opt_bytes: 0,
+            frozen: g.frozen,
+            state: g.state,
+        })
+        .collect();
+    for (spec, pol) in specs.iter().zip(&res.tensor) {
+        let row = &mut rows[pol.group];
+        row.opt_bytes +=
+            state_allocs_with(kind, &spec.shape, &gcfg.base, pol).iter().sum::<u64>();
+        // + u64 per-blob length prefix, as in the OPT section framing.
+        row.ckpt_opt_bytes += 8 + tensor_blob_bytes_with(kind, &spec.shape, &gcfg.base, pol);
+    }
+    rows
 }
 
 pub fn report(kind: OptKind, shapes: &[Vec<usize>], cfg: &OptimConfig) -> MemoryReport {
@@ -270,6 +374,71 @@ mod tests {
                 assert_eq!(section, inventory_checkpoint_bytes(kind, &shapes, &cfg));
             }
         });
+    }
+
+    /// Grouped analytic rules must match the live `with_policies`
+    /// optimizers byte-for-byte, for state and serialized blobs alike.
+    #[test]
+    fn grouped_analytic_matches_live() {
+        use crate::optim::group::{GroupPolicy, ParamRole};
+        use crate::optim::{build_grouped, StateSerde};
+        let specs = vec![
+            ParamSpec::new("w1", &[48, 32], ParamRole::Kernel),
+            ParamSpec::new("b1", &[48], ParamRole::Bias),
+            ParamSpec::new("ln.weight", &[48], ParamRole::Norm),
+            ParamSpec::new("emb.weight", &[64, 16], ParamRole::Embedding),
+            ParamSpec::new("head.weight", &[10, 16], ParamRole::Kernel),
+        ];
+        let shapes: Vec<Vec<usize>> = specs.iter().map(|s| s.shape.clone()).collect();
+        for kind in OptKind::every() {
+            let mut gcfg = GroupedConfig::uniform(&OptimConfig::paper_defaults(kind));
+            gcfg.base.weight_decay = 0.01;
+            gcfg.groups.push(GroupPolicy {
+                name: "dense_no_decay".into(),
+                match_roles: vec![ParamRole::Bias, ParamRole::Norm],
+                weight_decay: Some(0.0),
+                state: StatePolicy::Dense,
+                ..GroupPolicy::default()
+            });
+            gcfg.groups.push(GroupPolicy {
+                name: "frozen_emb".into(),
+                match_roles: vec![ParamRole::Embedding],
+                frozen: true,
+                ..GroupPolicy::default()
+            });
+            gcfg.groups.push(GroupPolicy {
+                name: "stateless_head".into(),
+                match_names: vec!["head.*".into()],
+                state: StatePolicy::None,
+                ..GroupPolicy::default()
+            });
+            let res = group::resolve(&specs, &gcfg);
+            let opt = build_grouped(kind, &specs, &gcfg);
+            assert_eq!(
+                opt.state_bytes(),
+                inventory_state_bytes_with(kind, &shapes, &gcfg.base, &res.tensor),
+                "{}",
+                kind.name()
+            );
+            for ((spec, pol), blob) in
+                specs.iter().zip(&res.tensor).zip(&opt.state_blobs())
+            {
+                assert_eq!(
+                    blob.len() as u64,
+                    tensor_blob_bytes_with(kind, &spec.shape, &gcfg.base, pol),
+                    "{} {}",
+                    kind.name(),
+                    spec.name
+                );
+            }
+            let rows = grouped_report(kind, &specs, &gcfg);
+            assert_eq!(rows.len(), 4);
+            assert_eq!(rows.iter().map(|r| r.opt_bytes).sum::<u64>(), opt.state_bytes());
+            assert_eq!(rows.iter().map(|r| r.params).sum::<u64>(), 48 * 32 + 48 + 48 + 64 * 16 + 160);
+            // frozen/stateless groups hold zero state
+            assert_eq!(rows[2].opt_bytes, 0, "{}", kind.name());
+            assert_eq!(rows[3].opt_bytes, 0, "{}", kind.name());
+        }
     }
 
     #[test]

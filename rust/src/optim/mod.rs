@@ -89,6 +89,31 @@
 //! assert_eq!(opt2.opt_step(), 1);
 //! ```
 //!
+//! # Param groups: per-group hyperparameters and state policies
+//!
+//! Real recipes treat parameters non-uniformly: bias/LayerNorm tensors
+//! are weight-decay exempt, embeddings get scaled LRs, tiny vectors may
+//! carry dense (or no) state. The grouped API ([`group`]) expresses this:
+//! register tensors as [`ParamSpec`]s (name + shape + [`ParamRole`]),
+//! describe groups with [`GroupPolicy`] matcher blocks (name globs and/or
+//! role selectors; `lr_scale`, `weight_decay`, `frozen`,
+//! [`StatePolicy`]), and construct with [`build_grouped`]. Every
+//! optimizer resolves its effective per-tensor hyperparameters through
+//! the group table at construction; [`memory`] mirrors the accounting
+//! per group, and checkpoints record the resolved layout (CONFIG
+//! section, `docs/CHECKPOINT_FORMAT.md`) so `--resume` can cross-check
+//! it.
+//!
+//! **Migration note.** The pre-group API `build(kind, shapes, cfg)` is
+//! now a thin shim that places every tensor in a single default group —
+//! it remains bit-identical to the pre-group behavior and is fine for
+//! uniform recipes and tests. New code that knows tensor names/roles
+//! (model inventories expose [`crate::models::Inventory::param_specs`];
+//! artifact-driven callers can use [`group::ParamRole::infer`]) should
+//! construct through [`build_grouped`], which is what `train`,
+//! `coordinator` and the CLI do. TOML configs gain `[[optimizer.group]]`
+//! blocks and the CLI a `--group` flag (see `coordinator::config`).
+//!
 //! # The parallel step engine
 //!
 //! Every optimizer dispatches `step()` over the work-sharding engine in
@@ -118,6 +143,7 @@ pub mod adafactor;
 pub mod adam;
 pub mod blob;
 pub mod came;
+pub mod group;
 pub mod matricize;
 pub mod memory;
 pub mod nnmf;
@@ -130,6 +156,7 @@ pub mod smmf;
 pub use adafactor::Adafactor;
 pub use adam::Adam;
 pub use came::Came;
+pub use group::{GroupPolicy, GroupedConfig, ParamRole, ParamSpec, StatePolicy, TensorPolicy};
 pub use sgd::Sgd;
 pub use sm3::Sm3;
 pub use smmf::Smmf;
@@ -338,6 +365,12 @@ impl OptimConfig {
             OptKind::Smmf => {
                 c.eps1 = 1e-8;
             }
+            // The paper's Adam/AdamW pre-training configs run without
+            // bias correction (Table 3 setup); surfaced in summary.json
+            // so run configs stay auditable.
+            OptKind::Adam | OptKind::AdamW => {
+                c.bias_correction = false;
+            }
             OptKind::Adafactor => {
                 c.eps1 = 1e-30;
                 c.eps2 = 1e-3;
@@ -426,16 +459,50 @@ pub trait Optimizer: Send + StateSerde {
     }
 }
 
-/// Construct an optimizer for a set of parameter shapes.
+/// Construct an optimizer for a set of bare parameter shapes with one
+/// flat config — the legacy entry point, kept as a thin shim over the
+/// grouped path: every tensor lands in a single default group, which is
+/// bit-identical to the pre-group behavior. New callers that know tensor
+/// names/roles should use [`build_grouped`].
 pub fn build(kind: OptKind, shapes: &[Vec<usize>], cfg: &OptimConfig) -> Box<dyn Optimizer> {
+    let policies = vec![TensorPolicy::uniform(cfg); shapes.len()];
+    build_with_policies(kind, shapes, cfg, &policies)
+}
+
+/// Construct an optimizer over a role-tagged parameter inventory with
+/// per-group hyperparameter overrides (see [`group`]). Group policies
+/// are resolved once here; each optimizer then reads its effective
+/// per-tensor `lr_scale` / `weight_decay` / `frozen` / [`StatePolicy`]
+/// from the resolved table at construction and every step.
+pub fn build_grouped(
+    kind: OptKind,
+    specs: &[ParamSpec],
+    gcfg: &GroupedConfig,
+) -> Box<dyn Optimizer> {
+    let res = group::resolve(specs, gcfg);
+    let shapes: Vec<Vec<usize>> = specs.iter().map(|s| s.shape.clone()).collect();
+    build_with_policies(kind, &shapes, &gcfg.base, &res.tensor)
+}
+
+/// Construct from an already-resolved per-tensor policy table (the
+/// common substrate of [`build`] and [`build_grouped`]; useful when the
+/// caller also needs the [`group::Resolution`] — e.g. for the checkpoint
+/// CONFIG section or per-group memory reports).
+pub fn build_with_policies(
+    kind: OptKind,
+    shapes: &[Vec<usize>],
+    cfg: &OptimConfig,
+    policies: &[TensorPolicy],
+) -> Box<dyn Optimizer> {
+    assert_eq!(shapes.len(), policies.len(), "one policy per tensor");
     match kind {
-        OptKind::Sgd => Box::new(Sgd::new(shapes, cfg)),
-        OptKind::Adam => Box::new(Adam::new(shapes, cfg, false)),
-        OptKind::AdamW => Box::new(Adam::new(shapes, cfg, true)),
-        OptKind::Adafactor => Box::new(Adafactor::new(shapes, cfg)),
-        OptKind::Sm3 => Box::new(Sm3::new(shapes, cfg)),
-        OptKind::Came => Box::new(Came::new(shapes, cfg)),
-        OptKind::Smmf => Box::new(Smmf::new(shapes, cfg)),
+        OptKind::Sgd => Box::new(Sgd::with_policies(shapes, cfg, policies)),
+        OptKind::Adam => Box::new(Adam::with_policies(shapes, cfg, false, policies)),
+        OptKind::AdamW => Box::new(Adam::with_policies(shapes, cfg, true, policies)),
+        OptKind::Adafactor => Box::new(Adafactor::with_policies(shapes, cfg, policies)),
+        OptKind::Sm3 => Box::new(Sm3::with_policies(shapes, cfg, policies)),
+        OptKind::Came => Box::new(Came::with_policies(shapes, cfg, policies)),
+        OptKind::Smmf => Box::new(Smmf::with_policies(shapes, cfg, policies)),
     }
 }
 

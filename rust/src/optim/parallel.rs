@@ -43,6 +43,15 @@
 //!   (`rows = 1`), one tensor per work item — again bit-identical to the
 //!   serial walk because every tensor is updated by exactly one worker
 //!   running the serial kernel.
+//!
+//! Planning is **group-aware**: each optimizer derives its `TensorGeom`s
+//! from the resolved per-tensor policies (`optim::group`), so a tensor
+//! whose group forces dense state plans with the dense-kernel geometry,
+//! and stateless/frozen tensors carry a reduced `cost_per_elem` — the
+//! LPT packing balances the *effective* per-group work, not a uniform
+//! estimate. Policy changes never alter item boundaries for unaffected
+//! tensors of the same geometry, preserving the bit-reproducibility
+//! guarantees above.
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;

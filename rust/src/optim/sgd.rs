@@ -6,52 +6,80 @@
 use anyhow::{bail, Result};
 
 use super::blob::{BlobReader, BlobWriter};
+use super::group::TensorPolicy;
 use super::parallel::{self, ParamPartition, TensorGeom};
 use super::{OptimConfig, Optimizer, StateSerde, WeightDecayMode};
 use crate::tensor::Tensor;
 
 pub struct Sgd {
     cfg: OptimConfig,
-    m: Vec<Vec<f32>>, // empty when momentum == 0
+    /// Effective per-tensor policy resolved from the group table.
+    policies: Vec<TensorPolicy>,
+    /// One momentum buffer per tensor; empty when momentum is disabled
+    /// globally or per group (`StatePolicy::None` / frozen).
+    m: Vec<Vec<f32>>,
     t: u64,
     plan: ParamPartition,
 }
 
 impl Sgd {
     pub fn new(shapes: &[Vec<usize>], cfg: &OptimConfig) -> Sgd {
-        let m = if cfg.momentum != 0.0 {
-            shapes.iter().map(|s| vec![0.0; s.iter().product()]).collect()
-        } else {
-            Vec::new()
-        };
+        Self::with_policies(shapes, cfg, &vec![TensorPolicy::uniform(cfg); shapes.len()])
+    }
+
+    pub fn with_policies(
+        shapes: &[Vec<usize>],
+        cfg: &OptimConfig,
+        policies: &[TensorPolicy],
+    ) -> Sgd {
+        assert_eq!(shapes.len(), policies.len());
+        let m: Vec<Vec<f32>> = shapes
+            .iter()
+            .zip(policies)
+            .map(|(s, pol)| {
+                if cfg.momentum != 0.0 && !pol.stateless() {
+                    vec![0.0; s.iter().product()]
+                } else {
+                    Vec::new()
+                }
+            })
+            .collect();
         let geoms: Vec<TensorGeom> = shapes
             .iter()
             .map(|s| TensorGeom::elementwise(s.iter().product(), 1))
             .collect();
         let plan = ParamPartition::plan(&geoms, cfg.threads);
-        Sgd { cfg: cfg.clone(), m, t: 0, plan }
+        Sgd { cfg: cfg.clone(), policies: policies.to_vec(), m, t: 0, plan }
     }
 
     /// Elementwise kernel over one chunk (`m` is `None` when momentum is
-    /// disabled).
-    fn update_chunk(cfg: &OptimConfig, p: &mut [f32], g: &[f32], m: Option<&mut [f32]>) {
-        if cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::AdamW {
-            let f = 1.0 - cfg.lr * cfg.weight_decay;
+    /// disabled for the tensor). `lr`/`wd` are the group-effective
+    /// values.
+    fn update_chunk(
+        cfg: &OptimConfig,
+        lr: f32,
+        wd: f32,
+        p: &mut [f32],
+        g: &[f32],
+        m: Option<&mut [f32]>,
+    ) {
+        if wd != 0.0 && cfg.weight_decay_mode == WeightDecayMode::AdamW {
+            let f = 1.0 - lr * wd;
             p.iter_mut().for_each(|w| *w *= f);
         }
-        let couple = cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::Adam;
+        let couple = wd != 0.0 && cfg.weight_decay_mode == WeightDecayMode::Adam;
         match m {
             Some(m) => {
                 for ((w, &g0), mij) in p.iter_mut().zip(g).zip(m.iter_mut()) {
-                    let gij = if couple { g0 + cfg.weight_decay * *w } else { g0 };
+                    let gij = if couple { g0 + wd * *w } else { g0 };
                     *mij = cfg.momentum * *mij + gij;
-                    *w -= cfg.lr * *mij;
+                    *w -= lr * *mij;
                 }
             }
             None => {
                 for (w, &g0) in p.iter_mut().zip(g) {
-                    let gij = if couple { g0 + cfg.weight_decay * *w } else { g0 };
-                    *w -= cfg.lr * gij;
+                    let gij = if couple { g0 + wd * *w } else { g0 };
+                    *w -= lr * gij;
                 }
             }
         }
@@ -68,19 +96,20 @@ impl StateSerde for Sgd {
     }
 
     /// Blob (docs/CHECKPOINT_FORMAT.md, kind tag 1): `u8 has_momentum`;
-    /// when 1, `u64 len` + the momentum buffer as f32. With momentum
-    /// disabled SGD is stateless and each blob is the single byte 0.
+    /// when 1, `u64 len` + the momentum buffer as f32. Tensors without
+    /// momentum (globally disabled, `StatePolicy::None`, or frozen) emit
+    /// the single byte 0.
     fn state_blobs(&self) -> Vec<Vec<u8>> {
-        (0..self.plan.n_tensors())
-            .map(|idx| {
+        self.m
+            .iter()
+            .map(|m| {
                 let mut w = BlobWriter::new();
-                match self.m.get(idx) {
-                    Some(m) => {
-                        w.u8(1);
-                        w.u64(m.len() as u64);
-                        w.f32s(m);
-                    }
-                    None => w.u8(0),
+                if m.is_empty() {
+                    w.u8(0);
+                } else {
+                    w.u8(1);
+                    w.u64(m.len() as u64);
+                    w.f32s(m);
                 }
                 w.finish()
             })
@@ -88,27 +117,26 @@ impl StateSerde for Sgd {
     }
 
     fn load_state_blobs(&mut self, blobs: &[Vec<u8>]) -> Result<()> {
-        if blobs.len() != self.plan.n_tensors() {
+        if blobs.len() != self.m.len() {
             bail!(
                 "sgd: checkpoint has {} tensors, optimizer has {}",
                 blobs.len(),
-                self.plan.n_tensors()
+                self.m.len()
             );
         }
-        let enabled = !self.m.is_empty();
-        for (idx, blob) in blobs.iter().enumerate() {
+        for (idx, (blob, m)) in blobs.iter().zip(self.m.iter_mut()).enumerate() {
             let mut r = BlobReader::new(blob);
             let has_m = r.u8()?;
-            match (has_m, self.m.get_mut(idx)) {
-                (1, Some(m)) => {
+            match (has_m, m.is_empty()) {
+                (1, false) => {
                     r.expect_len(m.len(), &format!("sgd tensor {idx} momentum"))?;
                     r.f32s_into(m)?;
                 }
-                (0, None) => {}
-                (has, _) => bail!(
+                (0, true) => {}
+                (has, empty) => bail!(
                     "sgd tensor {idx}: momentum mismatch (checkpoint has_momentum={has}, \
-                     optimizer momentum {} — configs must agree)",
-                    if enabled { "enabled" } else { "disabled" }
+                     optimizer momentum {} — momentum/group configs must agree)",
+                    if empty { "disabled" } else { "enabled" }
                 ),
             }
             r.finish()?;
@@ -124,12 +152,24 @@ impl Optimizer for Sgd {
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
         self.t += 1;
-        let momentum = self.cfg.momentum != 0.0;
         if self.cfg.threads <= 1 {
-            let cfg = &self.cfg;
-            for (idx, (param, grad)) in params.iter_mut().zip(grads).enumerate() {
-                let m = if momentum { Some(&mut self.m[idx][..]) } else { None };
-                Self::update_chunk(cfg, param.data_mut(), grad.data(), m);
+            let cfg = self.cfg.clone();
+            for (idx, ((param, grad), m)) in
+                params.iter_mut().zip(grads).zip(self.m.iter_mut()).enumerate()
+            {
+                let pol = self.policies[idx];
+                if pol.frozen {
+                    continue;
+                }
+                let mm = if m.is_empty() { None } else { Some(&mut m[..]) };
+                Self::update_chunk(
+                    &cfg,
+                    cfg.lr * pol.lr_scale,
+                    pol.weight_decay,
+                    param.data_mut(),
+                    grad.data(),
+                    mm,
+                );
             }
             return;
         }
@@ -138,28 +178,42 @@ impl Optimizer for Sgd {
             p: &'a mut [f32],
             g: &'a [f32],
             m: Option<&'a mut [f32]>,
+            lr: f32,
+            wd: f32,
+            frozen: bool,
         }
         let cfg = self.cfg.clone();
         let plan = &self.plan;
         let mut tasks: Vec<Task<'_>> = Vec::with_capacity(plan.n_items());
-        let mut m_iter = self.m.iter_mut();
-        for (idx, (param, grad)) in params.iter_mut().zip(grads).enumerate() {
+        for (idx, ((param, grad), m)) in
+            params.iter_mut().zip(grads).zip(self.m.iter_mut()).enumerate()
+        {
+            let pol = self.policies[idx];
             let items = plan.items_of(idx);
             let p_parts = parallel::split_rows_mut(param.data_mut(), items, 1);
-            let m_parts: Vec<Option<&mut [f32]>> = if momentum {
-                let m = m_iter.next().expect("momentum state per tensor");
-                parallel::split_rows_mut(m, items, 1).into_iter().map(Some).collect()
-            } else {
+            let m_parts: Vec<Option<&mut [f32]>> = if m.is_empty() {
                 items.iter().map(|_| None).collect()
+            } else {
+                parallel::split_rows_mut(m, items, 1).into_iter().map(Some).collect()
             };
             let g = grad.data();
             for ((it, p), mm) in items.iter().zip(p_parts).zip(m_parts) {
-                tasks.push(Task { p, g: &g[it.row0..it.row1], m: mm });
+                tasks.push(Task {
+                    p,
+                    g: &g[it.row0..it.row1],
+                    m: mm,
+                    lr: cfg.lr * pol.lr_scale,
+                    wd: pol.weight_decay,
+                    frozen: pol.frozen,
+                });
             }
         }
         let mut shards = parallel::into_shards(plan, vec![(); plan.n_shards()], tasks);
         parallel::run_shards(&mut shards, |_, t| {
-            Self::update_chunk(&cfg, t.p, t.g, t.m.as_deref_mut());
+            if t.frozen {
+                return;
+            }
+            Self::update_chunk(&cfg, t.lr, t.wd, t.p, t.g, t.m.as_deref_mut());
         });
     }
 

@@ -16,16 +16,22 @@
 use anyhow::{bail, Result};
 
 use super::blob::{BlobReader, BlobWriter};
+use super::group::{self, TensorPolicy};
 use super::parallel::{self, ParamPartition, TensorGeom};
 use super::{OptimConfig, Optimizer, StateSerde, WeightDecayMode};
 use crate::tensor::Tensor;
 
 struct PState {
     shape: Vec<usize>,
-    /// One accumulator per axis.
+    /// One accumulator per axis; empty for stateless/frozen tensors.
     acc: Vec<Vec<f32>>,
     /// Dense momentum (β1 > 0).
     m: Option<Vec<f32>>,
+    /// Effective group policy for this tensor. SM3 has no dense-vs-
+    /// factored distinction (its covers are already axis-wise), so
+    /// `StatePolicy::Dense` behaves like `Factored`; `None`/frozen drop
+    /// the state entirely.
+    pol: TensorPolicy,
 }
 
 pub struct Sm3 {
@@ -37,21 +43,41 @@ pub struct Sm3 {
 
 impl Sm3 {
     pub fn new(shapes: &[Vec<usize>], cfg: &OptimConfig) -> Sm3 {
+        Self::with_policies(shapes, cfg, &vec![TensorPolicy::uniform(cfg); shapes.len()])
+    }
+
+    pub fn with_policies(
+        shapes: &[Vec<usize>],
+        cfg: &OptimConfig,
+        policies: &[TensorPolicy],
+    ) -> Sm3 {
+        assert_eq!(shapes.len(), policies.len());
         let states = shapes
             .iter()
-            .map(|shape| {
+            .zip(policies)
+            .map(|(shape, pol)| {
                 let numel: usize = shape.iter().product();
                 let shape = if shape.is_empty() { vec![1] } else { shape.clone() };
+                if pol.stateless() {
+                    return PState { acc: Vec::new(), m: None, shape, pol: *pol };
+                }
                 PState {
                     acc: shape.iter().map(|&d| vec![0.0; d]).collect(),
                     m: (cfg.beta1 > 0.0).then(|| vec![0.0; numel]),
                     shape,
+                    pol: *pol,
                 }
             })
             .collect();
         let geoms: Vec<TensorGeom> = shapes
             .iter()
-            .map(|s| TensorGeom::whole(s.iter().product::<usize>().max(1), 4))
+            .zip(policies)
+            .map(|(s, pol)| {
+                TensorGeom::whole(
+                    s.iter().product::<usize>().max(1),
+                    if pol.stateless() { 1 } else { 4 },
+                )
+            })
             .collect();
         let plan = ParamPartition::plan(&geoms, cfg.threads);
         Sm3 { cfg: cfg.clone(), states, t: 0, plan }
@@ -59,8 +85,17 @@ impl Sm3 {
 
     /// The whole-tensor kernel (`Send` + stateless over per-tensor state).
     fn update_tensor(cfg: &OptimConfig, p: &mut [f32], g: &[f32], st: &mut PState) {
-        if cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::AdamW {
-            let f = 1.0 - cfg.lr * cfg.weight_decay;
+        if st.pol.frozen {
+            return;
+        }
+        let lr = cfg.lr * st.pol.lr_scale;
+        let wd = st.pol.weight_decay;
+        if st.pol.stateless() {
+            group::stateless_update(p, g, lr, wd, cfg.weight_decay_mode);
+            return;
+        }
+        if wd != 0.0 && cfg.weight_decay_mode == WeightDecayMode::AdamW {
+            let f = 1.0 - lr * wd;
             p.iter_mut().for_each(|w| *w *= f);
         }
         let rank = st.shape.len();
@@ -70,7 +105,7 @@ impl Sm3 {
         // instead of div/mod per element, and the min over the leading
         // rank-1 axes hoisted out of the innermost (last-axis) loop.
         let mut idx = vec![0usize; rank];
-        let couple = cfg.weight_decay != 0.0 && cfg.weight_decay_mode == WeightDecayMode::Adam;
+        let couple = wd != 0.0 && cfg.weight_decay_mode == WeightDecayMode::Adam;
         let last_dim = *st.shape.last().unwrap();
         let n = g.len();
         let mut flat = 0;
@@ -85,7 +120,7 @@ impl Sm3 {
             let mut row_max = 0.0f32; // max ν over this row (other axes)
             for j in 0..last_dim {
                 let w = &mut p[flat + j];
-                let gij = if couple { g[flat + j] + cfg.weight_decay * *w } else { g[flat + j] };
+                let gij = if couple { g[flat + j] + wd * *w } else { g[flat + j] };
                 // ν = min_r μ_r[i_r] + g²
                 let nu = vmin_head.min(acc_last[j]) + gij * gij;
                 new_last[j] = new_last[j].max(nu);
@@ -94,9 +129,9 @@ impl Sm3 {
                 if let Some(m) = &mut st.m {
                     let mij = &mut m[flat + j];
                     *mij = cfg.beta1 * *mij + (1.0 - cfg.beta1) * update;
-                    *w -= cfg.lr * *mij;
+                    *w -= lr * *mij;
                 } else {
-                    *w -= cfg.lr * update;
+                    *w -= lr * update;
                 }
             }
             for r in 0..rank - 1 {

@@ -30,6 +30,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::blob::{BlobReader, BlobWriter};
+use super::group::{self, StatePolicy, TensorPolicy};
 use super::matricize::{effective_shape, squeezed_rank};
 use super::nnmf;
 use super::parallel::{self, ParamPartition, TensorGeom, WorkItem};
@@ -189,8 +190,13 @@ enum State {
         r_v: Vec<f32>,
         c_v: Vec<f32>,
     },
-    /// Dense fallback for rank-1 tensors when `vector_reshape = false`.
+    /// Dense Adam-style moments: rank-1 tensors when
+    /// `vector_reshape = false`, or any tensor whose group declares
+    /// `StatePolicy::Dense`.
     Dense { m: Vec<f32>, v: Vec<f32> },
+    /// No persistent state (`StatePolicy::None` or frozen groups): the
+    /// update degenerates to plain `w -= lr · g` (frozen: no update).
+    Stateless,
 }
 
 impl State {
@@ -201,6 +207,7 @@ impl State {
                     + sign.heap_bytes()
             }
             State::Dense { m, v } => (4 * (m.len() + v.len())) as u64,
+            State::Stateless => 0,
         }
     }
 }
@@ -217,6 +224,8 @@ struct ItemScratch {
 
 pub struct Smmf {
     cfg: OptimConfig,
+    /// Effective per-tensor policy resolved from the group table.
+    policies: Vec<TensorPolicy>,
     states: Vec<State>,
     t: u64,
     /// Static shard plan over the matricized views (see `optim::parallel`).
@@ -234,14 +243,29 @@ pub struct Smmf {
 
 impl Smmf {
     pub fn new(shapes: &[Vec<usize>], cfg: &OptimConfig) -> Smmf {
+        Self::with_policies(shapes, cfg, &vec![TensorPolicy::uniform(cfg); shapes.len()])
+    }
+
+    pub fn with_policies(
+        shapes: &[Vec<usize>],
+        cfg: &OptimConfig,
+        policies: &[TensorPolicy],
+    ) -> Smmf {
+        assert_eq!(shapes.len(), policies.len());
         let mut max_m = 0;
         let mut geoms = Vec::with_capacity(shapes.len());
         let states: Vec<State> = shapes
             .iter()
-            .map(|shape| {
+            .zip(policies)
+            .map(|(shape, pol)| {
                 let numel: usize = shape.iter().product();
                 assert!(numel > 0, "empty tensor {shape:?}");
-                if squeezed_rank(shape) == 1 && !cfg.vector_reshape {
+                if pol.stateless() {
+                    geoms.push(TensorGeom::elementwise(numel, 1));
+                    State::Stateless
+                } else if pol.state == StatePolicy::Dense
+                    || (squeezed_rank(shape) == 1 && !cfg.vector_reshape)
+                {
                     geoms.push(TensorGeom::elementwise(numel, 4));
                     State::Dense { m: vec![0.0; numel], v: vec![0.0; numel] }
                 } else {
@@ -288,7 +312,7 @@ impl Smmf {
                             acc_cv: vec![0.0; *m],
                             g_wd: Vec::new(),
                         },
-                        State::Dense { .. } => ItemScratch::default(),
+                        State::Dense { .. } | State::Stateless => ItemScratch::default(),
                     })
                     .collect()
             } else {
@@ -296,6 +320,7 @@ impl Smmf {
             };
         Smmf {
             cfg: cfg.clone(),
+            policies: policies.to_vec(),
             states,
             t: 0,
             plan,
@@ -322,15 +347,18 @@ impl Smmf {
         let mut g_wd: Vec<f32> = Vec::new();
         for (idx, (param, grad)) in params.iter_mut().zip(grads).enumerate() {
             debug_assert_eq!(param.numel(), grad.numel());
+            let pol = self.policies[idx];
+            if pol.frozen {
+                continue;
+            }
+            let lr = cfg.lr * pol.lr_scale;
+            let wd = pol.weight_decay;
             let p = param.data_mut();
-            let g = effective_grad(
-                p,
-                grad.data(),
-                cfg.weight_decay,
-                cfg.weight_decay_mode,
-                cfg.lr,
-                &mut g_wd,
-            );
+            if matches!(self.states[idx], State::Stateless) {
+                group::stateless_update(p, grad.data(), lr, wd, cfg.weight_decay_mode);
+                continue;
+            }
+            let g = effective_grad(p, grad.data(), wd, cfg.weight_decay_mode, lr, &mut g_wd);
             match &mut self.states[idx] {
                 State::Factored { n, m, r_m, c_m, sign, r_v, c_v } => {
                     let (n, m) = (*n, *m);
@@ -353,7 +381,7 @@ impl Smmf {
                         c_v,
                         beta_m,
                         beta_v,
-                        cfg.lr,
+                        lr,
                         cfg.eps1,
                         &mut self.scratch_cm,
                         &mut self.scratch_cv,
@@ -364,8 +392,9 @@ impl Smmf {
                     nnmf::normalize_side(n, m, r_v, c_v);
                 }
                 State::Dense { m, v } => {
-                    dense_update(p, g, m, v, beta_m, beta_v, cfg.lr, cfg.eps1);
+                    dense_update(p, g, m, v, beta_m, beta_v, lr, cfg.eps1);
                 }
+                State::Stateless => unreachable!("handled above"),
             }
         }
     }
@@ -387,6 +416,8 @@ impl Smmf {
                 acc_cm: &'a mut [f32],
                 acc_cv: &'a mut [f32],
                 g_wd: &'a mut Vec<f32>,
+                lr: f32,
+                wd: f32,
             },
             Dense {
                 p: &'a mut [f32],
@@ -394,14 +425,25 @@ impl Smmf {
                 mom: &'a mut [f32],
                 vel: &'a mut [f32],
                 g_wd: &'a mut Vec<f32>,
+                lr: f32,
+                wd: f32,
             },
+            Stateless {
+                p: &'a mut [f32],
+                g: &'a [f32],
+                lr: f32,
+                wd: f32,
+            },
+            /// Frozen tensors: the item exists (plans tile every tensor)
+            /// but the worker does nothing.
+            Skip,
         }
 
         let plan = &self.plan;
         let states = &mut self.states;
+        let policies = &self.policies;
         let item_scratch = &mut self.item_scratch;
-        let (lr, eps, wd, wd_mode) =
-            (self.cfg.lr, self.cfg.eps1, self.cfg.weight_decay, self.cfg.weight_decay_mode);
+        let (lr_base, eps, wd_mode) = (self.cfg.lr, self.cfg.eps1, self.cfg.weight_decay_mode);
 
         {
             let mut tasks: Vec<Task<'_>> = Vec::with_capacity(plan.n_items());
@@ -410,6 +452,9 @@ impl Smmf {
                 params.iter_mut().zip(grads).zip(states.iter_mut()).enumerate()
             {
                 debug_assert_eq!(param.numel(), grad.numel());
+                let pol = policies[idx];
+                let lr = lr_base * pol.lr_scale;
+                let wd = pol.weight_decay;
                 let items = plan.items_of(idx);
                 let p_full = param.data_mut();
                 let g_full = grad.data();
@@ -443,6 +488,8 @@ impl Smmf {
                                 acc_cm: &mut scr.acc_cm,
                                 acc_cv: &mut scr.acc_cv,
                                 g_wd: &mut scr.g_wd,
+                                lr,
+                                wd,
                             });
                         }
                     }
@@ -460,6 +507,26 @@ impl Smmf {
                                 mom: mm,
                                 vel: vv,
                                 g_wd: &mut scr.g_wd,
+                                lr,
+                                wd,
+                            });
+                        }
+                    }
+                    State::Stateless if pol.frozen => {
+                        for _ in items {
+                            let _ = scratch_iter.next().expect("one scratch per item");
+                            tasks.push(Task::Skip);
+                        }
+                    }
+                    State::Stateless => {
+                        let p_parts = parallel::split_rows_mut(p_full, items, 1);
+                        for (it, p) in items.iter().zip(p_parts) {
+                            let _ = scratch_iter.next().expect("one scratch per item");
+                            tasks.push(Task::Stateless {
+                                p,
+                                g: &g_full[it.row0..it.row1],
+                                lr,
+                                wd,
                             });
                         }
                     }
@@ -468,17 +535,23 @@ impl Smmf {
 
             let mut shards = parallel::into_shards(plan, vec![(); plan.n_shards()], tasks);
             parallel::run_shards(&mut shards, |_, task| match task {
-                Task::Factored { p, g, rows, m, r_m, r_v, c_m, c_v, sign, acc_cm, acc_cv, g_wd } => {
-                    let g = effective_grad(p, g, wd, wd_mode, lr, g_wd);
+                Task::Factored {
+                    p, g, rows, m, r_m, r_v, c_m, c_v, sign, acc_cm, acc_cv, g_wd, lr, wd,
+                } => {
+                    let g = effective_grad(p, g, *wd, wd_mode, *lr, g_wd);
                     fused_rows(
-                        p, g, *rows, *m, r_m, c_m, sign, r_v, c_v, beta_m, beta_v, lr, eps,
+                        p, g, *rows, *m, r_m, c_m, sign, r_v, c_v, beta_m, beta_v, *lr, eps,
                         acc_cm, acc_cv,
                     );
                 }
-                Task::Dense { p, g, mom, vel, g_wd } => {
-                    let g = effective_grad(p, g, wd, wd_mode, lr, g_wd);
-                    dense_update(p, g, mom, vel, beta_m, beta_v, lr, eps);
+                Task::Dense { p, g, mom, vel, g_wd, lr, wd } => {
+                    let g = effective_grad(p, g, *wd, wd_mode, *lr, g_wd);
+                    dense_update(p, g, mom, vel, beta_m, beta_v, *lr, eps);
                 }
+                Task::Stateless { p, g, lr, wd } => {
+                    group::stateless_update(p, g, *lr, *wd, wd_mode);
+                }
+                Task::Skip => {}
             });
         }
 
@@ -517,15 +590,18 @@ impl Smmf {
         let cfg = self.cfg.clone();
         let mut g_wd: Vec<f32> = Vec::new();
         for (idx, (param, grad)) in params.iter_mut().zip(grads).enumerate() {
+            let pol = self.policies[idx];
+            if pol.frozen {
+                continue;
+            }
+            let lr = cfg.lr * pol.lr_scale;
+            let wd = pol.weight_decay;
             let p = param.data_mut();
-            let g = effective_grad(
-                p,
-                grad.data(),
-                cfg.weight_decay,
-                cfg.weight_decay_mode,
-                cfg.lr,
-                &mut g_wd,
-            );
+            if matches!(self.states[idx], State::Stateless) {
+                group::stateless_update(p, grad.data(), lr, wd, cfg.weight_decay_mode);
+                continue;
+            }
+            let g = effective_grad(p, grad.data(), wd, cfg.weight_decay_mode, lr, &mut g_wd);
             match &mut self.states[idx] {
                 State::Factored { n, m, r_m, c_m, sign, r_v, c_v } => {
                     let (n, m) = (*n, *m);
@@ -555,12 +631,13 @@ impl Smmf {
                     nnmf::compress(vv, n, m, r_v, c_v);
                     // Weight update.
                     for ((w, &mij), &vij) in p.iter_mut().zip(mm.iter()).zip(vv.iter()) {
-                        *w -= cfg.lr * (mij / (vij.sqrt() + cfg.eps1));
+                        *w -= lr * (mij / (vij.sqrt() + cfg.eps1));
                     }
                 }
                 State::Dense { m, v } => {
-                    dense_update(p, g, m, v, beta_m, beta_v, cfg.lr, cfg.eps1);
+                    dense_update(p, g, m, v, beta_m, beta_v, lr, cfg.eps1);
                 }
+                State::Stateless => unreachable!("handled above"),
             }
         }
     }
@@ -801,6 +878,8 @@ impl StateSerde for Smmf {
                         w.f32s(m);
                         w.f32s(v);
                     }
+                    // StatePolicy::None / frozen: nothing to persist.
+                    State::Stateless => w.u8(2),
                 }
                 w.finish()
             })
@@ -853,9 +932,11 @@ impl StateSerde for Smmf {
                     r.f32s_into(m)?;
                     r.f32s_into(v)?;
                 }
+                (2, State::Stateless) => {}
                 (tag, _) => bail!(
                     "smmf tensor {idx}: state kind mismatch (blob tag {tag}; factored vs dense \
-                     is decided by shape and OptimConfig::vector_reshape)"
+                     vs stateless is decided by shape, OptimConfig::vector_reshape and the \
+                     group StatePolicy)"
                 ),
             }
             r.finish()?;
@@ -1109,7 +1190,7 @@ mod tests {
                         );
                     }
                 }
-                State::Dense { .. } => unreachable!(),
+                _ => unreachable!(),
             }
         });
     }
@@ -1219,6 +1300,40 @@ mod tests {
         opt.step(&mut p, &g);
         // Fused path scratch: 2 column accumulators only.
         assert_eq!(opt.scratch_bytes(), 2 * 512 * 4);
+    }
+
+    #[test]
+    fn group_policies_change_state_layout_and_freeze() {
+        let shapes = vec![vec![32, 32], vec![64]];
+        let cfg = OptimConfig::default();
+        let mut pols = vec![TensorPolicy::uniform(&cfg); 2];
+        pols[0].state = StatePolicy::None;
+        pols[1].state = StatePolicy::Dense;
+        let opt = Smmf::with_policies(&shapes, &cfg, &pols);
+        // tensor 0 carries no state; tensor 1 dense Adam-style 2N floats
+        assert_eq!(opt.state_bytes(), (2 * 64 * 4) as u64);
+
+        let mut pols2 = vec![TensorPolicy::uniform(&cfg); 2];
+        pols2[0].frozen = true;
+        for threads in [1usize, 4] {
+            let cfg_t = OptimConfig { threads, ..cfg.clone() };
+            let mut opt2 = Smmf::with_policies(&shapes, &cfg_t, &pols2);
+            let mut p =
+                vec![Tensor::from_vec(&[32, 32], vec![1.0; 1024]), Tensor::zeros(&[64])];
+            let g = vec![
+                Tensor::from_vec(&[32, 32], vec![0.5; 1024]),
+                Tensor::from_vec(&[64], vec![0.5; 64]),
+            ];
+            opt2.step(&mut p, &g);
+            assert!(
+                p[0].data().iter().all(|&x| x == 1.0),
+                "frozen tensor must not move (threads={threads})"
+            );
+            assert!(p[1].data().iter().any(|&x| x != 0.0));
+            // frozen tensor holds nothing; the 64-vector matricizes to
+            // 8x8: 4 factor vectors of 8 f32 + one 64-bit sign word.
+            assert_eq!(opt2.state_bytes(), (4 * 4 * 8 + 8) as u64);
+        }
     }
 
     #[test]

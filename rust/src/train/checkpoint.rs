@@ -25,8 +25,11 @@ use std::io::{BufWriter, Write};
 use std::path::Path;
 
 use crate::optim::blob::BlobWriter;
+use crate::optim::group::Resolution;
 use crate::optim::schedule::LrSchedule;
-use crate::optim::OptKind;
+use crate::optim::{
+    MatricizeMode, OptKind, OptimConfig, SignMode, SmmfScheme, WeightDecayMode,
+};
 use crate::tensor::Tensor;
 
 const MAGIC: &[u8; 8] = b"SMMFCKPT";
@@ -38,12 +41,14 @@ const SEC_PARAMS: u32 = 1;
 const SEC_TRAINER: u32 = 2;
 const SEC_SCHEDULE: u32 = 3;
 const SEC_OPT: u32 = 4;
+const SEC_CONFIG: u32 = 5;
 
 /// Sanity caps for untrusted header fields.
 const MAX_NAME_LEN: usize = 4096;
 const MAX_RANK: usize = 16;
 const MAX_TENSORS: usize = 1 << 20;
 const MAX_DIM: u64 = 1 << 40;
+const MAX_GROUPS: usize = 4096;
 
 /// Native optimizer state: the `OptKind`, its internal step counter, and
 /// one [`crate::optim::StateSerde`] blob per parameter tensor.
@@ -62,6 +67,207 @@ pub struct ScheduleSection {
     pub schedule: LrSchedule,
 }
 
+/// One resolved param group as recorded in the CONFIG section.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GroupRecord {
+    pub name: String,
+    pub lr_scale: f32,
+    pub weight_decay: f32,
+    pub frozen: bool,
+    /// `StatePolicy` tag (see `optim::group::StatePolicy::tag`).
+    pub state: u8,
+}
+
+/// Resolved hyperparameter + group-layout fingerprint (CONFIG, tag 5).
+///
+/// Closes the PR 2 limitation that scalar hyperparameters were not
+/// cross-checkable on resume: every knob that shapes the trajectory but
+/// not the state layout is recorded (the LR itself lives in SCHEDULE),
+/// plus the resolved group table and the per-tensor group assignment
+/// (the group layout of every OPT blob). `Trainer::resume_from`
+/// compares this section field-by-field against the running
+/// configuration and errors on any drift; files without it (pre-group
+/// v2, or v1) are accepted with a warning.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ConfigSection {
+    pub beta1: f32,
+    pub beta2: f32,
+    pub beta3: f32,
+    pub eps1: f32,
+    pub eps2: f32,
+    pub weight_decay: f32,
+    /// 0 = Adam-coupled, 1 = AdamW-decoupled.
+    pub weight_decay_mode: u8,
+    pub decay_rate: f32,
+    pub growth_rate: f32,
+    pub clip_threshold: f32,
+    pub momentum: f32,
+    pub bias_correction: bool,
+    pub relative_step: bool,
+    pub vector_reshape: bool,
+    /// 0 = DecompressFirst, 1 = CompressFirst.
+    pub smmf_scheme: u8,
+    /// 0 = Bit1, 1 = Byte8.
+    pub smmf_sign_mode: u8,
+    /// 0 = Square, 1 = FoldLast.
+    pub smmf_matricize: u8,
+    /// Resolved group table (index 0 = default group).
+    pub groups: Vec<GroupRecord>,
+    /// Per-tensor group index, in PARAMS tensor order.
+    pub assign: Vec<u32>,
+}
+
+impl ConfigSection {
+    /// Fingerprint a flat config + resolved group table.
+    pub fn from_config(cfg: &OptimConfig, res: &Resolution) -> ConfigSection {
+        ConfigSection {
+            beta1: cfg.beta1,
+            beta2: cfg.beta2,
+            beta3: cfg.beta3,
+            eps1: cfg.eps1,
+            eps2: cfg.eps2,
+            weight_decay: cfg.weight_decay,
+            weight_decay_mode: match cfg.weight_decay_mode {
+                WeightDecayMode::Adam => 0,
+                WeightDecayMode::AdamW => 1,
+            },
+            decay_rate: cfg.decay_rate,
+            growth_rate: cfg.growth_rate,
+            clip_threshold: cfg.clip_threshold,
+            momentum: cfg.momentum,
+            bias_correction: cfg.bias_correction,
+            relative_step: cfg.relative_step,
+            vector_reshape: cfg.vector_reshape,
+            smmf_scheme: match cfg.smmf_scheme {
+                SmmfScheme::DecompressFirst => 0,
+                SmmfScheme::CompressFirst => 1,
+            },
+            smmf_sign_mode: match cfg.smmf_sign_mode {
+                SignMode::Bit1 => 0,
+                SignMode::Byte8 => 1,
+            },
+            smmf_matricize: match cfg.smmf_matricize {
+                MatricizeMode::Square => 0,
+                MatricizeMode::FoldLast => 1,
+            },
+            groups: res
+                .groups
+                .iter()
+                .map(|g| GroupRecord {
+                    name: g.name.clone(),
+                    lr_scale: g.lr_scale,
+                    weight_decay: g.weight_decay,
+                    frozen: g.frozen,
+                    state: g.state.tag(),
+                })
+                .collect(),
+            assign: res.tensor.iter().map(|t| t.group as u32).collect(),
+        }
+    }
+
+    /// Human-readable field-level differences (empty = identical).
+    /// `self` is the checkpoint side, `other` the running config.
+    pub fn mismatches(&self, other: &ConfigSection) -> Vec<String> {
+        let mut out = Vec::new();
+        let mut f32_field = |name: &str, a: f32, b: f32| {
+            if a.to_bits() != b.to_bits() {
+                out.push(format!("{name}: checkpoint {a} vs run {b}"));
+            }
+        };
+        f32_field("beta1", self.beta1, other.beta1);
+        f32_field("beta2", self.beta2, other.beta2);
+        f32_field("beta3", self.beta3, other.beta3);
+        f32_field("eps1", self.eps1, other.eps1);
+        f32_field("eps2", self.eps2, other.eps2);
+        f32_field("weight_decay", self.weight_decay, other.weight_decay);
+        f32_field("decay_rate", self.decay_rate, other.decay_rate);
+        f32_field("growth_rate", self.growth_rate, other.growth_rate);
+        f32_field("clip_threshold", self.clip_threshold, other.clip_threshold);
+        f32_field("momentum", self.momentum, other.momentum);
+        let mut tag_field = |name: &str, a: u8, b: u8| {
+            if a != b {
+                out.push(format!("{name}: checkpoint {a} vs run {b}"));
+            }
+        };
+        tag_field("weight_decay_mode", self.weight_decay_mode, other.weight_decay_mode);
+        tag_field("bias_correction", self.bias_correction as u8, other.bias_correction as u8);
+        tag_field("relative_step", self.relative_step as u8, other.relative_step as u8);
+        tag_field("vector_reshape", self.vector_reshape as u8, other.vector_reshape as u8);
+        tag_field("smmf_scheme", self.smmf_scheme, other.smmf_scheme);
+        tag_field("smmf_sign_mode", self.smmf_sign_mode, other.smmf_sign_mode);
+        tag_field("smmf_matricize", self.smmf_matricize, other.smmf_matricize);
+        if self.groups.len() != other.groups.len() {
+            out.push(format!(
+                "group count: checkpoint {} vs run {}",
+                self.groups.len(),
+                other.groups.len()
+            ));
+        } else {
+            for (i, (a, b)) in self.groups.iter().zip(&other.groups).enumerate() {
+                if a != b {
+                    out.push(format!("group {i}: checkpoint {a:?} vs run {b:?}"));
+                }
+            }
+        }
+        if self.assign != other.assign {
+            let where_ = self
+                .assign
+                .iter()
+                .zip(&other.assign)
+                .position(|(a, b)| a != b)
+                .map(|i| format!("first differs at tensor {i}"))
+                .unwrap_or_else(|| {
+                    format!("lengths {} vs {}", self.assign.len(), other.assign.len())
+                });
+            out.push(format!("per-tensor group assignment: {where_}"));
+        }
+        out
+    }
+
+    fn payload(&self) -> Vec<u8> {
+        let mut w = BlobWriter::new();
+        for v in [
+            self.beta1,
+            self.beta2,
+            self.beta3,
+            self.eps1,
+            self.eps2,
+            self.weight_decay,
+            self.decay_rate,
+            self.growth_rate,
+            self.clip_threshold,
+            self.momentum,
+        ] {
+            w.f32(v);
+        }
+        for v in [
+            self.weight_decay_mode,
+            self.bias_correction as u8,
+            self.relative_step as u8,
+            self.vector_reshape as u8,
+            self.smmf_scheme,
+            self.smmf_sign_mode,
+            self.smmf_matricize,
+        ] {
+            w.u8(v);
+        }
+        w.u32(self.groups.len() as u32);
+        for g in &self.groups {
+            w.u32(g.name.len() as u32);
+            w.bytes(g.name.as_bytes());
+            w.f32(g.lr_scale);
+            w.f32(g.weight_decay);
+            w.u8(g.frozen as u8);
+            w.u8(g.state);
+        }
+        w.u32(self.assign.len() as u32);
+        for &a in &self.assign {
+            w.u32(a);
+        }
+        w.finish()
+    }
+}
+
 /// Everything a checkpoint can carry. v1 files populate only
 /// `step`/`names`/`params`.
 #[derive(Debug)]
@@ -74,6 +280,7 @@ pub struct Checkpoint {
     pub rng: Option<(u64, u64)>,
     pub schedule: Option<ScheduleSection>,
     pub opt: Option<OptSection>,
+    pub config: Option<ConfigSection>,
 }
 
 // ---------------------------------------------------------------------------
@@ -94,7 +301,7 @@ pub fn save(path: &Path, step: u64, names: &[String], tensors: &[Tensor]) -> Res
 
 /// Save a v2 checkpoint: parameters + trainer step, optional data-RNG
 /// snapshot, optional LR-schedule position, optional native optimizer
-/// state.
+/// state, optional resolved config fingerprint (CONFIG section).
 ///
 /// The large payloads (tensor data, optimizer blobs) stream straight to
 /// the file — section lengths are computed up front, so no whole-section
@@ -108,6 +315,7 @@ pub fn save_v2(
     rng: Option<(u64, u64)>,
     schedule: Option<&ScheduleSection>,
     opt: Option<&OptSection>,
+    config: Option<&ConfigSection>,
 ) -> Result<()> {
     assert_eq!(names.len(), params.len());
 
@@ -135,7 +343,12 @@ pub fn save_v2(
         w.finish()
     });
 
-    let n_sections = 2 + sched_payload.is_some() as u32 + opt.is_some() as u32;
+    let config_payload = config.map(|c| c.payload());
+
+    let n_sections = 2
+        + sched_payload.is_some() as u32
+        + opt.is_some() as u32
+        + config_payload.is_some() as u32;
     atomic_write(path, |w| {
         w.write_all(MAGIC)?;
         w_u32(w, VERSION_V2)?;
@@ -167,6 +380,12 @@ pub fn save_v2(
                 w_u64(w, blob.len() as u64)?;
                 w.write_all(blob)?;
             }
+        }
+
+        if let Some(p) = &config_payload {
+            w_u32(w, SEC_CONFIG)?;
+            w_u64(w, p.len() as u64)?;
+            w.write_all(p)?;
         }
         Ok(())
     })
@@ -391,6 +610,7 @@ fn parse_v1<R: std::io::Read>(mut s: Src<R>) -> Result<Checkpoint> {
         rng: None,
         schedule: None,
         opt: None,
+        config: None,
     })
 }
 
@@ -407,11 +627,12 @@ fn parse_v2<R: std::io::Read>(mut s: Src<R>) -> Result<Checkpoint> {
         rng: None,
         schedule: None,
         opt: None,
+        config: None,
     };
     // Known tags may appear at most once; TRAINER and PARAMS must both
     // be present (a corrupt tag could otherwise drop the step silently
     // and resume would retrain from step 0 on trained parameters).
-    let mut seen = [false; 5];
+    let mut seen = [false; 6];
     for i in 0..n_sections {
         let tag = s.u32(&format!("section {i} tag"))?;
         if let Some(flag) = seen.get_mut(tag as usize) {
@@ -463,6 +684,7 @@ fn parse_v2<R: std::io::Read>(mut s: Src<R>) -> Result<Checkpoint> {
                 }
                 ck.opt = Some(OptSection { kind, opt_step, blobs });
             }
+            SEC_CONFIG => ck.config = Some(read_config_section(&mut s)?),
             // unknown section: forward-compatible skip
             _ => s.skip(len, &format!("section {i} (tag {tag})"))?,
         }
@@ -480,7 +702,87 @@ fn parse_v2<R: std::io::Read>(mut s: Src<R>) -> Result<Checkpoint> {
     if !seen[SEC_TRAINER as usize] {
         bail!("checkpoint has no TRAINER section");
     }
+    // Sections may arrive in any order, so cross-section invariants are
+    // checked once everything is read: the CONFIG per-tensor group
+    // assignment must cover exactly the PARAMS tensors.
+    if let Some(c) = &ck.config {
+        if c.assign.len() != ck.params.len() {
+            bail!(
+                "CONFIG assigns groups to {} tensors but PARAMS holds {}",
+                c.assign.len(),
+                ck.params.len()
+            );
+        }
+    }
     Ok(ck)
+}
+
+fn read_config_section<R: std::io::Read>(s: &mut Src<R>) -> Result<ConfigSection> {
+    let mut f = |what: &str| s.f32(&format!("CONFIG {what}"));
+    let (beta1, beta2, beta3) = (f("beta1")?, f("beta2")?, f("beta3")?);
+    let (eps1, eps2) = (f("eps1")?, f("eps2")?);
+    let weight_decay = f("weight_decay")?;
+    let (decay_rate, growth_rate) = (f("decay_rate")?, f("growth_rate")?);
+    let (clip_threshold, momentum) = (f("clip_threshold")?, f("momentum")?);
+    let mut b = |what: &str| s.u8(&format!("CONFIG {what}"));
+    let weight_decay_mode = b("weight_decay_mode")?;
+    let bias_correction = b("bias_correction")? != 0;
+    let relative_step = b("relative_step")? != 0;
+    let vector_reshape = b("vector_reshape")? != 0;
+    let smmf_scheme = b("smmf_scheme")?;
+    let smmf_sign_mode = b("smmf_sign_mode")?;
+    let smmf_matricize = b("smmf_matricize")?;
+    let n_groups = s.u32("CONFIG group count")? as usize;
+    if n_groups > MAX_GROUPS {
+        bail!("CONFIG claims {n_groups} groups (max {MAX_GROUPS})");
+    }
+    let mut groups = Vec::with_capacity(n_groups);
+    for i in 0..n_groups {
+        let name_len = s.u32(&format!("CONFIG group {i} name length"))? as usize;
+        if name_len > MAX_NAME_LEN {
+            bail!("CONFIG group {i}: name length {name_len} exceeds the cap ({MAX_NAME_LEN})");
+        }
+        let name = String::from_utf8(s.bytes_vec(name_len, &format!("CONFIG group {i} name"))?)
+            .with_context(|| format!("CONFIG group {i}: name is not valid UTF-8"))?;
+        let lr_scale = s.f32(&format!("CONFIG group {i} lr_scale"))?;
+        let weight_decay = s.f32(&format!("CONFIG group {i} weight_decay"))?;
+        let frozen = s.u8(&format!("CONFIG group {i} frozen"))? != 0;
+        let state = s.u8(&format!("CONFIG group {i} state"))?;
+        groups.push(GroupRecord { name, lr_scale, weight_decay, frozen, state });
+    }
+    let n_tensors = s.u32("CONFIG tensor count")? as usize;
+    if n_tensors > MAX_TENSORS {
+        bail!("CONFIG claims {n_tensors} tensors (max {MAX_TENSORS})");
+    }
+    let mut assign = Vec::with_capacity(n_tensors.min(1024));
+    for i in 0..n_tensors {
+        let g = s.u32(&format!("CONFIG tensor {i} group index"))?;
+        if g as usize >= groups.len().max(1) {
+            bail!("CONFIG tensor {i}: group index {g} out of range ({} groups)", groups.len());
+        }
+        assign.push(g);
+    }
+    Ok(ConfigSection {
+        beta1,
+        beta2,
+        beta3,
+        eps1,
+        eps2,
+        weight_decay,
+        weight_decay_mode,
+        decay_rate,
+        growth_rate,
+        clip_threshold,
+        momentum,
+        bias_correction,
+        relative_step,
+        vector_reshape,
+        smmf_scheme,
+        smmf_sign_mode,
+        smmf_matricize,
+        groups,
+        assign,
+    })
 }
 
 fn read_tensor_table<R: std::io::Read>(s: &mut Src<R>) -> Result<(Vec<String>, Vec<Tensor>)> {
@@ -557,6 +859,27 @@ mod tests {
         std::fs::remove_file(&tmp).unwrap();
     }
 
+    fn sample_config() -> ConfigSection {
+        use crate::optim::group::{GroupedConfig, ParamRole, ParamSpec, StatePolicy};
+        use crate::optim::{group, GroupPolicy};
+        let specs = vec![
+            ParamSpec::new("w1", &[2, 3], ParamRole::Kernel),
+            ParamSpec::new("b1", &[3], ParamRole::Bias),
+        ];
+        let mut gcfg = GroupedConfig::uniform(&OptimConfig {
+            weight_decay: 0.01,
+            ..OptimConfig::default()
+        });
+        gcfg.groups.push(GroupPolicy {
+            name: "no_decay".into(),
+            match_roles: vec![ParamRole::Bias],
+            weight_decay: Some(0.0),
+            state: StatePolicy::Dense,
+            ..GroupPolicy::default()
+        });
+        ConfigSection::from_config(&gcfg.base, &group::resolve(&specs, &gcfg))
+    }
+
     #[test]
     fn v2_roundtrip_all_sections() {
         let tmp = tmp("v2");
@@ -570,7 +893,18 @@ mod tests {
             opt_step: 17,
             blobs: vec![vec![1, 2, 3], vec![]],
         };
-        save_v2(&tmp, 17, &names, &tensors, Some((99, 7)), Some(&sched), Some(&opt)).unwrap();
+        let config = sample_config();
+        save_v2(
+            &tmp,
+            17,
+            &names,
+            &tensors,
+            Some((99, 7)),
+            Some(&sched),
+            Some(&opt),
+            Some(&config),
+        )
+        .unwrap();
         let ck = load_any(&tmp).unwrap();
         assert_eq!(ck.version, VERSION_V2);
         assert_eq!(ck.step, 17);
@@ -579,6 +913,21 @@ mod tests {
         assert_eq!(ck.rng, Some((99, 7)));
         assert_eq!(ck.schedule, Some(sched));
         assert_eq!(ck.opt, Some(opt));
+        // CONFIG roundtrips bit-exactly and self-compares clean
+        let loaded = ck.config.expect("CONFIG section present");
+        assert_eq!(loaded, config);
+        assert!(loaded.mismatches(&config).is_empty());
+        assert_eq!(loaded.groups.len(), 2);
+        assert_eq!(loaded.groups[1].name, "no_decay");
+        assert_eq!(loaded.assign, vec![0, 1]);
+        // a drifted run config is caught field-by-field
+        let mut drifted = config.clone();
+        drifted.beta2 = 0.5;
+        drifted.groups[1].weight_decay = 0.1;
+        let diffs = loaded.mismatches(&drifted);
+        assert_eq!(diffs.len(), 2, "{diffs:?}");
+        assert!(diffs[0].contains("beta2"), "{diffs:?}");
+        assert!(diffs[1].contains("group 1"), "{diffs:?}");
         // legacy signature also reads v2
         let (step, n2, t2) = load(&tmp).unwrap();
         assert_eq!((step, n2, t2), (17, names, tensors));
@@ -602,11 +951,11 @@ mod tests {
     fn save_overwrites_atomically_without_tmp_residue() {
         let path = tmp("atomic");
         let (names, tensors) = sample_tensors();
-        save_v2(&path, 1, &names, &tensors, None, None, None).unwrap();
+        save_v2(&path, 1, &names, &tensors, None, None, None, None).unwrap();
         // Overwriting an existing checkpoint goes through rename, leaves
         // no .tmp sibling, and the declared PARAMS length matches the
         // streamed bytes exactly (parse's finish() would reject drift).
-        save_v2(&path, 2, &names, &tensors, None, None, None).unwrap();
+        save_v2(&path, 2, &names, &tensors, None, None, None, None).unwrap();
         assert_eq!(load_any(&path).unwrap().step, 2);
         let mut side = path.file_name().unwrap().to_os_string();
         side.push(".tmp");
@@ -629,7 +978,9 @@ mod tests {
         let (names, tensors) = sample_tensors();
         let opt =
             OptSection { kind: OptKind::Adam, opt_step: 3, blobs: vec![vec![0u8; 16], vec![]] };
-        save_v2(&tmp, 3, &names, &tensors, Some((1, 2)), None, Some(&opt)).unwrap();
+        let config = sample_config();
+        save_v2(&tmp, 3, &names, &tensors, Some((1, 2)), None, Some(&opt), Some(&config))
+            .unwrap();
         let full = std::fs::read(&tmp).unwrap();
         for cut in 0..full.len() {
             assert!(parse_bytes(&full[..cut]).is_err(), "prefix of {cut} bytes parsed");

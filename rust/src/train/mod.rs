@@ -102,6 +102,11 @@ pub struct Trainer {
     pub step: u64,
     pub base_lr: f32,
     pub schedule: LrSchedule,
+    /// Resolved hyperparameter/group fingerprint written into the
+    /// checkpoint CONFIG section and cross-checked on resume (set via
+    /// [`Trainer::set_config_section`]; `None` = legacy caller, no
+    /// cross-check).
+    pub config: Option<checkpoint::ConfigSection>,
 }
 
 impl Trainer {
@@ -113,7 +118,23 @@ impl Trainer {
         schedule: LrSchedule,
     ) -> Trainer {
         let params = graph.init_params(seed);
-        Trainer { graph, opt, params, grads: Vec::new(), step: 0, base_lr, schedule }
+        Trainer {
+            graph,
+            opt,
+            params,
+            grads: Vec::new(),
+            step: 0,
+            base_lr,
+            schedule,
+            config: None,
+        }
+    }
+
+    /// Register the resolved config fingerprint (see
+    /// [`checkpoint::ConfigSection::from_config`]) so checkpoints carry
+    /// it and resumes validate against it.
+    pub fn set_config_section(&mut self, config: checkpoint::ConfigSection) {
+        self.config = Some(config);
     }
 
     /// One optimization step on a batch; returns the loss.
@@ -146,8 +167,9 @@ impl Trainer {
 
     /// Write a `SMMFCKPT` v2 checkpoint: parameters, trainer step, the
     /// data-stream RNG snapshot (if the caller has one), the LR-schedule
-    /// position, and the optimizer's native state blobs — everything a
-    /// bit-identical resume needs.
+    /// position, the optimizer's native state blobs, and (when
+    /// registered) the resolved config/group fingerprint — everything a
+    /// bit-identical, cross-checked resume needs.
     pub fn save_checkpoint(&self, path: &Path, rng: Option<(u64, u64)>) -> Result<()> {
         let names = self.param_names();
         let sched = checkpoint::ScheduleSection {
@@ -161,7 +183,16 @@ impl Trainer {
             opt_step: self.opt.opt_step(),
             blobs: self.opt.state_blobs(),
         };
-        checkpoint::save_v2(path, self.step, &names, &self.params, rng, Some(&sched), Some(&opt))
+        checkpoint::save_v2(
+            path,
+            self.step,
+            &names,
+            &self.params,
+            rng,
+            Some(&sched),
+            Some(&opt),
+            self.config.as_ref(),
+        )
     }
 
     /// Resume from a checkpoint written by [`Trainer::save_checkpoint`]
@@ -171,14 +202,32 @@ impl Trainer {
     /// configuration and errors on any mismatch. Returns the data-RNG
     /// snapshot for the caller to restore into its batch source.
     ///
-    /// Caveat: optimizer *hyperparameters* (β1/β2/ε/weight-decay/…) are
-    /// not stored in the v2 format, so a changed recipe beyond lr and
-    /// schedule cannot be detected here — state-layout disagreements
+    /// Hyperparameter/group cross-check: checkpoints written with a
+    /// CONFIG section (any grouped-API run) are validated field-by-field
+    /// against this trainer's registered fingerprint and rejected with a
+    /// per-field diff on drift. Files without the section (pre-group v2,
+    /// or v1) are accepted with a warning — state-layout disagreements
     /// (momentum on/off, sign width, factored-vs-dense) still fail at
-    /// blob load. Bit-identical resume requires an unchanged config;
-    /// see docs/CHECKPOINT_FORMAT.md § Compatibility rules.
+    /// blob load. See docs/CHECKPOINT_FORMAT.md § Compatibility rules.
     pub fn resume_from(&mut self, path: &Path) -> Result<Option<(u64, u64)>> {
         let ck = checkpoint::load_any(path)?;
+        match (&self.config, &ck.config) {
+            (Some(mine), Some(theirs)) => {
+                let diffs = theirs.mismatches(mine);
+                if !diffs.is_empty() {
+                    bail!(
+                        "checkpoint {path:?} was written under a different optimizer \
+                         config/group layout — resumes must keep the recipe:\n  {}",
+                        diffs.join("\n  ")
+                    );
+                }
+            }
+            (Some(_), None) => eprintln!(
+                "warning: {path:?} carries no CONFIG section (pre-group checkpoint) — \
+                 hyperparameters and group layout not cross-checked"
+            ),
+            (None, _) => {}
+        }
         let names = self.param_names();
         if ck.names != names {
             bail!(

@@ -1,9 +1,12 @@
 //! TOML-subset parser for experiment configs.
 //!
-//! Supports: `[section]` / `[a.b]` headers, `key = value` with string,
-//! integer, float, boolean and flat-array values, `#` comments. This covers
-//! every config shipped under `configs/`; exotic TOML (dates, inline
-//! tables, multiline strings) is intentionally rejected with an error.
+//! Supports: `[section]` / `[a.b]` headers, `[[a.b]]` array-of-tables
+//! headers (each occurrence appends an indexed table; values land under
+//! `a.b.<index>.key`, enumerable via [`TomlDoc::array_len`]), `key =
+//! value` with string, integer, float, boolean and flat-array values,
+//! `#` comments. This covers every config shipped under `configs/`;
+//! exotic TOML (dates, inline tables, multiline strings) is
+//! intentionally rejected with an error.
 
 use std::collections::BTreeMap;
 
@@ -45,9 +48,12 @@ impl TomlValue {
 }
 
 /// A parsed config: dotted-path key -> value (e.g. "optimizer.lr").
+/// Array-of-tables entries are flattened to `name.<index>.key`; the
+/// per-name occurrence counts live in `arrays`.
 #[derive(Clone, Debug, Default)]
 pub struct TomlDoc {
     pub values: BTreeMap<String, TomlValue>,
+    pub arrays: BTreeMap<String, usize>,
 }
 
 impl TomlDoc {
@@ -57,6 +63,19 @@ impl TomlDoc {
         for (lineno, raw) in text.lines().enumerate() {
             let line = strip_comment(raw).trim();
             if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("[[") {
+                let name = rest
+                    .strip_suffix("]]")
+                    .ok_or_else(|| format!("line {}: unterminated table array", lineno + 1))?
+                    .trim();
+                if name.is_empty() {
+                    return Err(format!("line {}: empty table-array name", lineno + 1));
+                }
+                let idx = doc.arrays.entry(name.to_string()).or_insert(0);
+                prefix = format!("{name}.{idx}.");
+                *idx += 1;
                 continue;
             }
             if let Some(rest) = line.strip_prefix('[') {
@@ -102,6 +121,25 @@ impl TomlDoc {
 
     pub fn bool_or(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
+    }
+
+    /// Number of `[[name]]` table-array occurrences (0 when absent).
+    pub fn array_len(&self, name: &str) -> usize {
+        self.arrays.get(name).copied().unwrap_or(0)
+    }
+
+    /// A key's value as a list of strings: either a TOML array of
+    /// strings or a single bare string. `None` when absent or not
+    /// string-valued.
+    pub fn str_list(&self, key: &str) -> Option<Vec<String>> {
+        match self.get(key)? {
+            TomlValue::Str(s) => Some(vec![s.clone()]),
+            TomlValue::Arr(items) => items
+                .iter()
+                .map(|v| v.as_str().map(String::from))
+                .collect::<Option<Vec<String>>>(),
+            _ => None,
+        }
     }
 }
 
@@ -215,6 +253,44 @@ sizes = [128, 256]
         assert!(TomlDoc::parse("[unterminated").is_err());
         assert!(TomlDoc::parse("keyonly").is_err());
         assert!(TomlDoc::parse("k = @oops").is_err());
+    }
+
+    #[test]
+    fn array_of_tables_flattens_with_indices() {
+        let text = r#"
+[optimizer]
+kind = "smmf"
+
+[[optimizer.group]]
+name = "no_decay"
+match_role = ["bias", "norm"]
+weight_decay = 0.0
+
+[[optimizer.group]]
+name = "emb"
+match_name = "*emb*"
+lr_scale = 0.5
+state = "dense"
+"#;
+        let doc = TomlDoc::parse(text).unwrap();
+        assert_eq!(doc.array_len("optimizer.group"), 2);
+        assert_eq!(doc.array_len("absent"), 0);
+        assert_eq!(doc.str_or("optimizer.group.0.name", ""), "no_decay");
+        assert_eq!(doc.f64_or("optimizer.group.0.weight_decay", 1.0), 0.0);
+        assert_eq!(
+            doc.str_list("optimizer.group.0.match_role"),
+            Some(vec!["bias".to_string(), "norm".to_string()])
+        );
+        assert_eq!(
+            doc.str_list("optimizer.group.1.match_name"),
+            Some(vec!["*emb*".to_string()])
+        );
+        assert_eq!(doc.f64_or("optimizer.group.1.lr_scale", 0.0), 0.5);
+        assert_eq!(doc.str_or("optimizer.group.1.state", ""), "dense");
+        // plain section parsing is unaffected
+        assert_eq!(doc.str_or("optimizer.kind", ""), "smmf");
+        assert!(TomlDoc::parse("[[oops]").is_err());
+        assert!(TomlDoc::parse("[[]]").is_err());
     }
 
     #[test]

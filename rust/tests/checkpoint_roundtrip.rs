@@ -94,6 +94,7 @@ fn run_resumed(kind: OptKind, threads: usize, half: usize, total: usize) -> Vec<
             Some(data_rng.state()),
             Some(&sched),
             Some(&opt_sec),
+            None,
         )
         .unwrap();
         // first-half state dropped here: the file is all that survives
@@ -187,7 +188,7 @@ fn truncated_and_corrupt_checkpoints_error_cleanly() {
     let opt_sec =
         OptSection { kind: OptKind::Smmf, opt_step: 1, blobs: opt.state_blobs() };
     let path = tmp("trunc");
-    checkpoint::save_v2(&path, 1, &names, &params, None, None, Some(&opt_sec)).unwrap();
+    checkpoint::save_v2(&path, 1, &names, &params, None, None, Some(&opt_sec), None).unwrap();
     let full = std::fs::read(&path).unwrap();
 
     // Truncations at a spread of prefixes must all error (never panic).

@@ -23,6 +23,23 @@ cargo test -q
 echo "== checkpoint-roundtrip (bit-identical resume, all optimizers) =="
 cargo test --release --test checkpoint_roundtrip
 
+echo "== grouped API (default-group bit-identity, wd exemption, grouped resume) =="
+cargo test --release --test grouped_build
+
+# Grouped end-to-end: train -> save -> resume with a bias/norm-exempt
+# group config through the real CLI. Needs AOT artifacts (make
+# artifacts); self-skips when they are absent, matching the other
+# artifact-gated surfaces.
+if [ -d artifacts ]; then
+  echo "== grouped config train -> save -> resume (lm_tiny_grads) =="
+  rm -rf runs/grouped_smoke
+  cargo run --release -- train --config tests/grouped_smoke.toml
+  cargo run --release -- train --config tests/grouped_smoke.toml \
+    --resume runs/grouped_smoke/checkpoint.bin --steps 60
+else
+  echo "== grouped config train skipped (no artifacts/ — run make artifacts) =="
+fi
+
 echo "== quick bench (SMMF_BENCH_QUICK=1) =="
 SMMF_BENCH_JSON="${SMMF_BENCH_JSON:-../BENCH_optimizer_step.json}" \
 SMMF_BENCH_QUICK=1 cargo bench --bench optimizer_step
