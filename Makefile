@@ -1,15 +1,21 @@
 # Convenience targets for the SMMF reproduction.
 #
-#   make build     release build of the Rust crate
-#   make test      full test suite
-#   make smoke     build + test + checkpoint-roundtrip + quick bench
-#                  (refreshes BENCH_*.json); run before merging
-#                  optimizer/engine/checkpoint changes
-#   make bench     full optimizer-step bench (slow)
-#   make docs      rustdoc for the crate, warnings-clean (--no-deps)
-#   make artifacts AOT-lower the JAX/Pallas graphs (needs python + jax)
+#   make build       release build of the Rust crate
+#   make test        full test suite
+#   make smoke       build + test + checkpoint-roundtrip + suite smoke +
+#                    quick bench (refreshes BENCH_*.json); run before
+#                    merging optimizer/engine/checkpoint changes
+#   make suite-smoke tiny 2-optimizer × 1-model × 2-seed suite (pure
+#                    Rust, no artifacts) run twice; asserts the report
+#                    is byte-identical across re-entry
+#   make docs-check  regenerate docs/RESULTS.md from the checked-in
+#                    fixture summaries, fail on diff, and verify every
+#                    docs link / file:line anchor
+#   make bench       full optimizer-step bench (slow)
+#   make docs        rustdoc for the crate, warnings-clean (--no-deps)
+#   make artifacts   AOT-lower the JAX/Pallas graphs (needs python + jax)
 
-.PHONY: build test smoke bench docs artifacts
+.PHONY: build test smoke suite-smoke docs-check bench docs artifacts
 
 build:
 	cd rust && cargo build --release
@@ -19,6 +25,29 @@ test:
 
 smoke:
 	bash rust/tests/smoke.sh
+
+suite-smoke:
+	rm -rf runs/smoke
+	cd rust && cargo run --release -- suite tests/suite_smoke.toml \
+	  --out-dir ../runs --docs ../runs/smoke/RESULTS.md \
+	  --bench-json ../runs/smoke/BENCH_suite.json
+	cd rust && cargo run --release -- suite tests/suite_smoke.toml \
+	  --out-dir ../runs --docs ../runs/smoke/RESULTS.2.md \
+	  --bench-json ../runs/smoke/BENCH_suite.2.json
+	cmp runs/smoke/RESULTS.md runs/smoke/RESULTS.2.md
+	@echo "suite-smoke OK: report byte-identical across re-entry"
+
+docs-check:
+	cd rust && cargo run --release -- report tests/fixtures/suite_report/smoke \
+	  --docs target/docs-check/RESULTS.md --bench-json target/docs-check/BENCH_suite.json
+	cmp docs/RESULTS.md rust/target/docs-check/RESULTS.md || { \
+	  echo "docs/RESULTS.md is stale vs the report generator —"; \
+	  echo "regenerate with: cd rust && cargo run --release -- report \\"; \
+	  echo "  tests/fixtures/suite_report/smoke --docs ../docs/RESULTS.md \\"; \
+	  echo "  --bench-json target/docs-check/BENCH_suite.json"; \
+	  exit 1; }
+	bash rust/tests/check_docs_links.sh
+	@echo "docs-check OK"
 
 bench:
 	cd rust && SMMF_BENCH_JSON=../BENCH_optimizer_step.json cargo bench --bench optimizer_step

@@ -1,0 +1,58 @@
+//! Run the smoke experiment suite end-to-end, pure Rust, and print the
+//! generated paper-style report — the smallest demonstration of the
+//! suite subsystem (`repro suite` is the CLI spelling).
+//!
+//! ```bash
+//! cargo run --release --example suite_smoke
+//! ```
+//!
+//! Everything here is artifact-free: the cells train the `synthetic:`
+//! quadratic workload over the `tiny_lm` inventory, so this runs in
+//! well under a second with no PJRT and no `make artifacts`. The suite
+//! is executed twice into a temp directory to demonstrate resume-aware
+//! re-entry: the second pass skips every cached cell and re-renders a
+//! byte-identical report.
+
+use anyhow::{bail, Result};
+
+use smmf_repro::coordinator::report;
+use smmf_repro::coordinator::suite::{run_suite, SuiteOptions};
+use smmf_repro::coordinator::SuiteConfig;
+
+const SUITE: &str = r#"
+[suite]
+name = "example"
+seeds = [0, 1]
+
+[optimizer]
+lr = 0.05
+
+[train]
+steps = 20
+log_every = 10
+
+[[suite.run]]
+optimizers = ["adam", "adafactor", "smmf"]
+models = ["synthetic:tiny_lm"]
+"#;
+
+fn main() -> Result<()> {
+    let mut cfg = SuiteConfig::parse(SUITE, "example")?;
+    let tmp = std::env::temp_dir().join(format!("smmf_suite_example_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&tmp);
+    cfg.out_dir = tmp.to_str().unwrap().to_string();
+
+    let first = run_suite(&cfg, &SuiteOptions::default())?;
+    let second = run_suite(&cfg, &SuiteOptions::default())?;
+    let (_, skipped, failed) = second.counts();
+    if failed > 0 || skipped != first.cells.len() {
+        bail!("re-entry should skip every cached cell");
+    }
+
+    let cells = report::collect(&first.suite_dir)?;
+    let (md, records) = report::generate(&cfg.name, &cells);
+    println!("\n{md}");
+    println!("({} machine-readable records would land in BENCH_suite.json)", records.len());
+    let _ = std::fs::remove_dir_all(&tmp);
+    Ok(())
+}

@@ -78,7 +78,9 @@ impl ExperimentConfig {
         };
         self.steps = i64_either("steps", self.steps as i64) as u64;
         self.seed = i64_either("seed", self.seed as i64) as u64;
-        self.log_every = i64_either("log_every", self.log_every as i64) as u64;
+        // Clamped to >= 1: the training loops take `step % log_every`,
+        // and a panicking cell would tear down a whole suite pool.
+        self.log_every = i64_either("log_every", self.log_every as i64).max(1) as u64;
         self.workers = i64_either("workers", self.workers as i64) as usize;
         self.save_every = i64_either("save_every", self.save_every as i64).max(0) as u64;
         self.out_dir = doc
@@ -181,7 +183,7 @@ impl ExperimentConfig {
         }
         self.steps = args.u64_or("steps", self.steps);
         self.seed = args.u64_or("seed", self.seed);
-        self.log_every = args.u64_or("log-every", self.log_every);
+        self.log_every = args.u64_or("log-every", self.log_every).max(1);
         self.workers = args.positive_usize_or("workers", self.workers);
         self.out_dir = args.str_or("out-dir", &self.out_dir);
         if let Some(path) = args.opt("resume") {
@@ -212,6 +214,23 @@ impl ExperimentConfig {
         GroupedConfig { base: self.optim.clone(), groups: self.groups.clone() }
     }
 
+    /// Switch the target optimizer, re-deriving its paper defaults
+    /// (Appendix L β/ε tables) while preserving the recipe-shared knobs:
+    /// lr, γ (`decay_rate`), weight decay + coupling mode, and engine
+    /// threads. This is the substitution rule the figure comparisons and
+    /// the suite expander share — "same workload recipe, different
+    /// optimizer".
+    pub fn retarget_optimizer(&mut self, kind: OptKind) {
+        let o = self.optim.clone();
+        self.optimizer = kind;
+        self.optim = OptimConfig::paper_defaults(kind);
+        self.optim.lr = o.lr;
+        self.optim.decay_rate = o.decay_rate;
+        self.optim.weight_decay = o.weight_decay;
+        self.optim.weight_decay_mode = o.weight_decay_mode;
+        self.optim.threads = o.threads;
+    }
+
     fn set_optimizer(&mut self, kind: &str) -> Result<()> {
         let k = OptKind::parse(kind).ok_or_else(|| anyhow!("unknown optimizer {kind}"))?;
         // Re-derive paper defaults for the new kind, preserving the
@@ -223,6 +242,291 @@ impl ExperimentConfig {
         self.optim.lr = lr;
         self.optim.threads = threads;
         Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Experiment suites: declarative optimizer × model sweeps
+// ---------------------------------------------------------------------------
+
+/// One `[[suite.run]]` block before expansion: a cartesian
+/// `optimizers × models × seeds` sweep sharing per-block overrides.
+/// `models` entries are AOT artifact names (`lm_tiny_grads`, …) or
+/// `synthetic:<inventory>` for the artifact-free quadratic workload.
+#[derive(Clone, Debug, Default)]
+pub struct SuiteRunBlock {
+    /// Optional block label, prefixed onto every cell's run name
+    /// (required to disambiguate blocks that expand to the same cells).
+    pub label: String,
+    /// Optimizer kinds to sweep (required, non-empty).
+    pub optimizers: Vec<OptKind>,
+    /// Workloads to sweep (required, non-empty).
+    pub models: Vec<String>,
+    /// Per-block seed list; `None` inherits `[suite] seeds`.
+    pub seeds: Option<Vec<u64>>,
+    /// Per-block overrides on top of the suite's base config.
+    pub steps: Option<u64>,
+    /// Base learning rate override.
+    pub lr: Option<f64>,
+    /// Weight-decay override.
+    pub weight_decay: Option<f64>,
+    /// γ (2nd-moment schedule exponent) override.
+    pub decay_rate: Option<f64>,
+    /// Parallel step-engine threads override.
+    pub threads: Option<usize>,
+    /// Metrics cadence override.
+    pub log_every: Option<u64>,
+    /// Checkpoint cadence override (artifact workloads only).
+    pub save_every: Option<u64>,
+}
+
+/// A parsed suite file: `[suite]` header + shared base config (the
+/// regular `[optimizer]` / `[train]` / `[schedule]` / `[[optimizer.group]]`
+/// sections) + `[[suite.run]]` sweep blocks. See
+/// `rust/tests/suite_smoke.toml` and the README's "Reproduce the paper
+/// tables" quickstart.
+#[derive(Clone, Debug)]
+pub struct SuiteConfig {
+    /// Suite name — artifacts land under `<out_dir>/<name>/<run>/`.
+    pub name: String,
+    /// Root artifacts directory (default `runs`).
+    pub out_dir: String,
+    /// Default seed list for repeat-aggregation (default `[0]`).
+    pub seeds: Vec<u64>,
+    /// Worker-pool width for scheduling independent cells (default 1).
+    pub workers: usize,
+    /// Shared base experiment config every cell starts from.
+    pub base: ExperimentConfig,
+    /// The sweep blocks, in file order.
+    pub runs: Vec<SuiteRunBlock>,
+}
+
+/// One expanded suite cell: a fully resolved experiment plus the
+/// bookkeeping the scheduler and report generator need.
+#[derive(Clone, Debug)]
+pub struct SuiteCell {
+    /// Cell directory name under `<out_dir>/<suite>/`.
+    pub run: String,
+    /// The workload as written in the suite file.
+    pub model: String,
+    /// Optimizer under test.
+    pub optimizer: OptKind,
+    /// Data/init seed for this repeat.
+    pub seed: u64,
+    /// The resolved per-cell experiment config
+    /// (`cfg.name = "<suite>/<run>"`, `cfg.out_dir = <out_dir>`).
+    pub cfg: ExperimentConfig,
+}
+
+const SUITE_KEYS: &[&str] = &["name", "out_dir", "seeds", "workers"];
+const RUN_KEYS: &[&str] = &[
+    "label", "optimizers", "models", "seeds", "steps", "lr", "weight_decay", "decay_rate",
+    "threads", "log_every", "save_every",
+];
+
+impl SuiteConfig {
+    /// Load and validate a suite file; the file stem is the default
+    /// suite name.
+    pub fn from_toml(path: &Path) -> Result<SuiteConfig> {
+        let text =
+            std::fs::read_to_string(path).map_err(|e| anyhow!("reading {path:?}: {e}"))?;
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("suite");
+        Self::parse(&text, stem).map_err(|e| anyhow!("{path:?}: {e}"))
+    }
+
+    /// Parse suite TOML. Unknown `[suite]` / `[[suite.run]]` keys are
+    /// rejected (typos must not silently drop a sweep dimension); the
+    /// base sections reuse [`ExperimentConfig::apply_toml`] verbatim.
+    pub fn parse(text: &str, default_name: &str) -> Result<SuiteConfig> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow!(e))?;
+        let mut base = ExperimentConfig::default();
+        base.apply_toml(&doc)?;
+        for key in doc.keys_under("suite") {
+            if key.starts_with("run.") {
+                continue; // validated per block below
+            }
+            if !SUITE_KEYS.contains(&key) {
+                return Err(anyhow!("[suite]: unknown key {key} (known: {})", SUITE_KEYS.join(", ")));
+            }
+        }
+        let name = doc.str_or("suite.name", default_name).to_string();
+        if name.is_empty() || name.contains('/') || name.contains("..") {
+            return Err(anyhow!("bad suite name {name:?} (no slashes or '..')"));
+        }
+        let seeds = match doc.get("suite.seeds") {
+            None => vec![0],
+            Some(_) => parse_seed_list(&doc, "suite.seeds")
+                .ok_or_else(|| anyhow!("[suite]: seeds must be a non-empty list of integers >= 0"))?,
+        };
+        let n = doc.array_len("suite.run");
+        if n == 0 {
+            return Err(anyhow!("suite file has no [[suite.run]] blocks"));
+        }
+        let mut runs = Vec::with_capacity(n);
+        for i in 0..n {
+            let pre = format!("suite.run.{i}");
+            for key in doc.keys_under(&pre) {
+                if !RUN_KEYS.contains(&key) {
+                    return Err(anyhow!(
+                        "[[suite.run]] #{i}: unknown key {key} (known: {})",
+                        RUN_KEYS.join(", ")
+                    ));
+                }
+            }
+            let take_i64 = |k: &str| -> Result<Option<i64>> {
+                match doc.get(&format!("{pre}.{k}")) {
+                    None => Ok(None),
+                    Some(v) => match v.as_i64() {
+                        Some(x) => Ok(Some(x)),
+                        None => Err(anyhow!("[[suite.run]] #{i}: {k} must be an integer")),
+                    },
+                }
+            };
+            let take_f64 = |k: &str| -> Result<Option<f64>> {
+                match doc.get(&format!("{pre}.{k}")) {
+                    None => Ok(None),
+                    Some(v) => match v.as_f64() {
+                        Some(x) => Ok(Some(x)),
+                        None => Err(anyhow!("[[suite.run]] #{i}: {k} must be a number")),
+                    },
+                }
+            };
+            let opt_names = doc
+                .str_list(&format!("{pre}.optimizers"))
+                .ok_or_else(|| anyhow!("[[suite.run]] #{i}: missing optimizers = [\"…\"]"))?;
+            let mut optimizers = Vec::with_capacity(opt_names.len());
+            for o in &opt_names {
+                optimizers.push(
+                    OptKind::parse(o)
+                        .ok_or_else(|| anyhow!("[[suite.run]] #{i}: unknown optimizer {o}"))?,
+                );
+            }
+            if optimizers.is_empty() {
+                return Err(anyhow!("[[suite.run]] #{i}: optimizers must be non-empty"));
+            }
+            let models = doc
+                .str_list(&format!("{pre}.models"))
+                .ok_or_else(|| anyhow!("[[suite.run]] #{i}: missing models = [\"…\"]"))?;
+            if models.is_empty() {
+                return Err(anyhow!("[[suite.run]] #{i}: models must be non-empty"));
+            }
+            let seeds = match doc.get(&format!("{pre}.seeds")) {
+                None => None,
+                Some(_) => Some(parse_seed_list(&doc, &format!("{pre}.seeds")).ok_or_else(
+                    || anyhow!("[[suite.run]] #{i}: seeds must be a non-empty list of integers >= 0"),
+                )?),
+            };
+            let steps = take_i64("steps")?;
+            if matches!(steps, Some(s) if s <= 0) {
+                return Err(anyhow!("[[suite.run]] #{i}: steps must be > 0"));
+            }
+            let label = doc.str_or(&format!("{pre}.label"), "").to_string();
+            if !label.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+                return Err(anyhow!("[[suite.run]] #{i}: label must be [A-Za-z0-9_-]"));
+            }
+            runs.push(SuiteRunBlock {
+                label,
+                optimizers,
+                models,
+                seeds,
+                steps: steps.map(|s| s as u64),
+                lr: take_f64("lr")?,
+                weight_decay: take_f64("weight_decay")?,
+                decay_rate: take_f64("decay_rate")?,
+                threads: take_i64("threads")?.map(|t| (t.max(1)) as usize),
+                log_every: take_i64("log_every")?.map(|v| v.max(1) as u64),
+                save_every: take_i64("save_every")?.map(|v| v.max(0) as u64),
+            });
+        }
+        let workers = doc.i64_or("suite.workers", 1).max(1) as usize;
+        let out_dir = doc.str_or("suite.out_dir", &base.out_dir).to_string();
+        Ok(SuiteConfig { name, out_dir, seeds, workers, base, runs })
+    }
+
+    /// Expand every block into its cartesian `optimizers × models ×
+    /// seeds` cell list. Cell configs re-derive per-optimizer paper
+    /// defaults via [`ExperimentConfig::retarget_optimizer`], then apply
+    /// the block overrides; duplicate run names across blocks are an
+    /// error (add `label` to disambiguate).
+    pub fn expand(&self) -> Result<Vec<SuiteCell>> {
+        let mut cells = Vec::new();
+        let mut names = std::collections::BTreeSet::new();
+        for (bi, block) in self.runs.iter().enumerate() {
+            let seeds = block.seeds.as_ref().unwrap_or(&self.seeds);
+            for model in &block.models {
+                for &opt in &block.optimizers {
+                    for &seed in seeds {
+                        let mut cfg = self.base.clone();
+                        cfg.retarget_optimizer(opt);
+                        cfg.artifact = model.clone();
+                        cfg.seed = seed;
+                        cfg.resume = None;
+                        if let Some(v) = block.steps {
+                            cfg.steps = v;
+                        }
+                        if let Some(v) = block.lr {
+                            cfg.optim.lr = v as f32;
+                        }
+                        if let Some(v) = block.weight_decay {
+                            cfg.optim.weight_decay = v as f32;
+                        }
+                        if let Some(v) = block.decay_rate {
+                            cfg.optim.decay_rate = v as f32;
+                        }
+                        if let Some(v) = block.threads {
+                            cfg.optim.threads = v;
+                        }
+                        if let Some(v) = block.log_every {
+                            cfg.log_every = v;
+                        }
+                        if let Some(v) = block.save_every {
+                            cfg.save_every = v;
+                        }
+                        let run = cell_run_name(&block.label, model, opt, seed);
+                        if !names.insert(run.clone()) {
+                            return Err(anyhow!(
+                                "suite {}: [[suite.run]] #{bi} re-expands cell {run} — \
+                                 add a distinct `label` to overlapping blocks",
+                                self.name
+                            ));
+                        }
+                        cfg.name = format!("{}/{run}", self.name);
+                        cfg.out_dir = self.out_dir.clone();
+                        cells.push(SuiteCell {
+                            run,
+                            model: model.clone(),
+                            optimizer: opt,
+                            seed,
+                            cfg,
+                        });
+                    }
+                }
+            }
+        }
+        Ok(cells)
+    }
+}
+
+fn parse_seed_list(doc: &TomlDoc, key: &str) -> Option<Vec<u64>> {
+    let raw = doc.i64_list(key)?;
+    if raw.is_empty() || raw.iter().any(|&s| s < 0) {
+        return None;
+    }
+    Some(raw.into_iter().map(|s| s as u64).collect())
+}
+
+/// `<label->?<model>-<optimizer>-s<seed>` with the `synthetic:` prefix
+/// stripped and path-hostile characters sanitized.
+fn cell_run_name(label: &str, model: &str, opt: OptKind, seed: u64) -> String {
+    let model = model.strip_prefix("synthetic:").unwrap_or(model);
+    let sanitized: String = model
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' { c } else { '-' })
+        .collect();
+    if label.is_empty() {
+        format!("{sanitized}-{}-s{seed}", opt.name())
+    } else {
+        format!("{label}-{sanitized}-{}-s{seed}", opt.name())
     }
 }
 

@@ -155,6 +155,34 @@ pub struct RunSummary {
     pub opt_state_bytes: u64,
 }
 
+/// Serialize a run summary to the `summary.json` schema the suite
+/// report generator (`coordinator::report`) aggregates: the RunSummary
+/// fields plus the sweep coordinates (`model`, `seed`), the trainable
+/// `param_count`, and the recipe knobs that silently shape trajectories.
+fn summary_json(
+    s: &RunSummary,
+    cfg: &ExperimentConfig,
+    model: &str,
+    param_count: u64,
+    param_groups: usize,
+) -> crate::util::json::Json {
+    crate::util::json::ObjBuilder::new()
+        .str("name", &s.name)
+        .str("optimizer", &s.optimizer)
+        .str("model", model)
+        .num("seed", cfg.seed as f64)
+        .num("steps", s.steps as f64)
+        .num("param_count", param_count as f64)
+        .num("first_loss", s.first_loss as f64)
+        .num("final_loss", s.final_loss as f64)
+        .num("mean_step_ms", s.mean_step_ms)
+        .num("opt_state_bytes", s.opt_state_bytes as f64)
+        .bool("bias_correction", cfg.optim.bias_correction)
+        .num("weight_decay", cfg.optim.weight_decay as f64)
+        .num("param_groups", param_groups as f64)
+        .build()
+}
+
 /// Train one configuration through the AOT path, logging to
 /// `runs/<name>/`. This is the workhorse behind fig1/fig2/fig4/e2e.
 ///
@@ -258,23 +286,107 @@ pub fn run_experiment(rt: &Runtime, cfg: &ExperimentConfig) -> Result<RunSummary
             / cfg.steps.saturating_sub(start_step).max(1) as f64,
         opt_state_bytes: trainer.optimizer_state_bytes(),
     };
-    logger.write_summary(
-        &crate::util::json::ObjBuilder::new()
-            .str("name", &summary.name)
-            .str("optimizer", &summary.optimizer)
-            .num("steps", summary.steps as f64)
-            .num("first_loss", summary.first_loss as f64)
-            .num("final_loss", summary.final_loss as f64)
-            .num("mean_step_ms", summary.mean_step_ms)
-            .num("opt_state_bytes", summary.opt_state_bytes as f64)
-            // Auditability: surface the recipe knobs that silently shape
-            // trajectories (the paper's pre-training Adam runs disable
-            // bias correction) and the group layout.
-            .bool("bias_correction", cfg.optim.bias_correction)
-            .num("weight_decay", cfg.optim.weight_decay as f64)
-            .num("param_groups", res.groups.iter().filter(|g| g.tensors > 0).count() as f64)
-            .build(),
-    )?;
+    let param_count: u64 = shapes.iter().map(|s| s.iter().product::<usize>() as u64).sum();
+    logger.write_summary(&summary_json(
+        &summary,
+        cfg,
+        &cfg.artifact,
+        param_count,
+        res.groups.iter().filter(|g| g.tensors > 0).count(),
+    ))?;
+    Ok(summary)
+}
+
+// ---------------------------------------------------------------------------
+// Synthetic workload (artifact-free suite cells)
+// ---------------------------------------------------------------------------
+
+/// Train a `synthetic:<inventory>` suite cell: a noisy quadratic well
+/// over a real model inventory, driven entirely in Rust (no AOT
+/// artifacts, no PJRT).
+///
+/// The objective is `L(θ) = Σ ½(θ − θ*)² / N` with a fixed random
+/// target `θ*`; each step feeds the optimizer the per-element residual
+/// gradient `g = (θ − θ*) + σ·ξ` with deterministic Gaussian noise `ξ`
+/// (σ = 0.01) from the cell's data RNG. That is enough to exercise the
+/// full optimizer state machinery — matricized momenta, sign planes,
+/// group policies, the parallel step engine — with bit-reproducible
+/// trajectories per seed, so suite quality cells aggregate cleanly and
+/// memory/throughput cells measure the real optimizer hot path.
+///
+/// Artifacts mirror [`run_experiment`]: `runs/<name>/metrics.{jsonl,csv}`
+/// plus `summary.json`. Checkpointing (`save_every`) is not wired for
+/// synthetic cells — runs are cheap to restart from scratch.
+pub fn run_synthetic_experiment(cfg: &ExperimentConfig, inventory: &str) -> Result<RunSummary> {
+    let inv = inventory_by_name(inventory)
+        .ok_or_else(|| anyhow!("unknown synthetic inventory {inventory}"))?;
+    let specs = inv.param_specs();
+    let shapes = inv.shapes();
+    let gcfg = cfg.grouped();
+    let res = group::resolve(&specs, &gcfg);
+    let mut opt = optim::build_with_policies(cfg.optimizer, &shapes, &cfg.optim, &res.tensor);
+
+    // Deterministic init: params at the origin, targets ~ N(0, 0.5²).
+    let mut params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+    let mut target_rng = Pcg32::new(cfg.seed ^ 0x7a67);
+    let targets: Vec<Tensor> = shapes
+        .iter()
+        .map(|s| {
+            let mut t = Tensor::zeros(s);
+            target_rng.fill_normal(t.data_mut(), 0.5);
+            t
+        })
+        .collect();
+    let mut noise = Pcg32::new(cfg.seed ^ 0xda7a);
+    let n_total: f64 = shapes.iter().map(|s| s.iter().product::<usize>() as f64).sum();
+
+    let mut logger = RunLogger::create(&cfg.out_dir, &cfg.name)?;
+    let mut grads: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+    let (mut first_loss, mut final_loss) = (f32::NAN, f32::NAN);
+    let t0 = Instant::now();
+    for step in 1..=cfg.steps {
+        let mut loss_acc = 0.0f64;
+        for ((p, t), g) in params.iter().zip(&targets).zip(grads.iter_mut()) {
+            let (pd, td, gd) = (p.data(), t.data(), g.data_mut());
+            for i in 0..pd.len() {
+                let r = pd[i] - td[i];
+                loss_acc += 0.5 * (r as f64) * (r as f64);
+                gd[i] = r + 0.01 * noise.normal();
+            }
+        }
+        let loss = (loss_acc / n_total) as f32;
+        if step == 1 {
+            first_loss = loss;
+        }
+        final_loss = loss;
+        opt.set_lr(cfg.schedule.at(cfg.optim.lr, step));
+        opt.step(&mut params, &grads);
+        if step % cfg.log_every == 0 || step == 1 || step == cfg.steps {
+            let ms = t0.elapsed().as_secs_f64() * 1e3 / step as f64;
+            logger.log(
+                step,
+                loss,
+                &[("step_ms", ms), ("opt_mib", fmt::mib(opt.state_bytes()))],
+            )?;
+        }
+    }
+    logger.flush()?;
+    let summary = RunSummary {
+        name: cfg.name.clone(),
+        optimizer: cfg.optimizer.name().into(),
+        steps: cfg.steps,
+        first_loss,
+        final_loss,
+        mean_step_ms: t0.elapsed().as_secs_f64() * 1e3 / cfg.steps.max(1) as f64,
+        opt_state_bytes: opt.state_bytes(),
+    };
+    logger.write_summary(&summary_json(
+        &summary,
+        cfg,
+        &format!("synthetic:{inventory}"),
+        n_total as u64,
+        res.groups.iter().filter(|g| g.tensors > 0).count(),
+    ))?;
     Ok(summary)
 }
 
@@ -289,19 +401,10 @@ pub fn run_comparison(
     let mut out = Vec::new();
     for kind in kinds {
         let mut cfg = base.clone();
-        cfg.optimizer = *kind;
-        let base_o = &base.optim;
-        cfg.optim = OptimConfig::paper_defaults(*kind);
-        // Shared recipe knobs follow the base config; per-optimizer ε/β
-        // defaults come from the paper (Appendix L).
-        cfg.optim.lr = base_o.lr;
-        // γ = -0.5 for CNNs, -0.8 for transformers (Appendix F).
-        cfg.optim.decay_rate = base_o.decay_rate;
-        cfg.optim.weight_decay = base_o.weight_decay;
-        cfg.optim.weight_decay_mode = base_o.weight_decay_mode;
-        // Engine threads are recipe-independent (same rule as
-        // ExperimentConfig::set_optimizer): keep the base setting.
-        cfg.optim.threads = base_o.threads;
+        // Shared recipe knobs (lr, γ, weight decay, engine threads)
+        // follow the base config; per-optimizer ε/β defaults come from
+        // the paper (Appendix L). Same rule as the suite expander.
+        cfg.retarget_optimizer(*kind);
         cfg.name = format!("{group}/{}", kind.name());
         println!("[{} | {}] {} steps on {}", group, kind.name(), cfg.steps, cfg.artifact);
         let s = run_experiment(rt, &cfg)?;

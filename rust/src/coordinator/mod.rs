@@ -1,13 +1,23 @@
-//! The experiment coordinator: config, experiment registry, launcher and
-//! the multi-worker data-parallel runtime.
+//! The experiment coordinator: config, experiment registry, launcher,
+//! the multi-worker pools, and the suite/report subsystem.
 //!
 //! Every table and figure of the paper maps to a runner here (see
 //! DESIGN.md §3); `repro <experiment>` regenerates it. The coordinator
 //! owns process topology (worker threads for data-parallel gradient
-//! averaging), metrics, and the CLI surface.
+//! averaging and for suite-cell fan-out), metrics, and the CLI surface.
+//!
+//! The suite subsystem turns the one-run-at-a-time harness declarative:
+//! [`config::SuiteConfig`] parses a `[[suite.run]]` sweep file,
+//! [`suite::run_suite`] schedules the expanded optimizer × model × seed
+//! matrix over [`workers::fan_out`] with failure isolation and
+//! resume-aware re-entry, and [`report`] aggregates the per-cell
+//! summaries into the paper-style memory/quality/throughput tables
+//! (`docs/RESULTS.md`, `BENCH_suite.json`).
 
 pub mod config;
 pub mod experiments;
+pub mod report;
+pub mod suite;
 pub mod workers;
 
-pub use config::ExperimentConfig;
+pub use config::{ExperimentConfig, SuiteConfig};

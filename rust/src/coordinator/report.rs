@@ -1,0 +1,398 @@
+//! Paper-style report generation from suite artifacts.
+//!
+//! [`collect`] scans `<out_dir>/<suite>/` for per-cell `summary.json` /
+//! `FAILED` files, [`generate`] aggregates them into the three tables the
+//! paper leads with — optimizer-state **memory** (with a ratio-vs-Adam
+//! column), **quality** (final loss, mean ± spread over seed repeats) and
+//! **throughput** (ms/step, steps/s) — and [`write_report`] emits them as
+//! Markdown (`docs/RESULTS.md`) plus a machine-readable record stream
+//! (`BENCH_suite.json`, via [`crate::util::bench::JsonSink`]).
+//!
+//! Determinism contract: the generated Markdown is a pure function of
+//! the collected records — rows are fully sorted, floats use fixed-width
+//! formatting, and nothing environmental (timestamps, paths, hostnames)
+//! is embedded. Re-rendering a finished suite therefore reproduces the
+//! report byte-for-byte, which `make docs-check` and the golden test in
+//! `rust/tests/suite.rs` pin.
+
+use anyhow::{anyhow, Result};
+use std::path::{Path, PathBuf};
+
+use crate::models::inventory_by_name;
+use crate::optim::{memory, OptKind, OptimConfig};
+use crate::train::metrics;
+use crate::util::bench::JsonSink;
+use crate::util::fmt;
+use crate::util::json::{Json, ObjBuilder};
+
+/// One suite cell as read back from disk.
+#[derive(Clone, Debug)]
+pub struct CellRecord {
+    /// Cell directory name under the suite dir.
+    pub run: String,
+    /// Workload (`synthetic:<inventory>` or artifact name).
+    pub model: String,
+    /// Optimizer name (`adam`, `smmf`, …).
+    pub optimizer: String,
+    /// Seed of this repeat.
+    pub seed: u64,
+    /// Steps the cell trained for.
+    pub steps: u64,
+    /// Loss at the first step, when finite.
+    pub first_loss: Option<f64>,
+    /// Loss at the last step, when finite.
+    pub final_loss: Option<f64>,
+    /// Mean wall-clock per training step.
+    pub mean_step_ms: f64,
+    /// Persistent optimizer-state bytes (identical across seeds).
+    pub opt_state_bytes: u64,
+    /// Trainable parameter count, when the summary records it.
+    pub param_count: Option<u64>,
+    /// Failure note (from the `FAILED` marker, or a summary with no
+    /// finite final loss); failed cells are excluded from aggregates.
+    pub failed: Option<String>,
+}
+
+/// Scan a suite directory into sorted [`CellRecord`]s. Subdirectories
+/// with neither a `summary.json` nor a `FAILED` marker are ignored (they
+/// are not cells). Sort order: ok cells first, then by model, paper
+/// optimizer order, seed — the row order of every generated table.
+pub fn collect(suite_dir: &Path) -> Result<Vec<CellRecord>> {
+    let entries = std::fs::read_dir(suite_dir)
+        .map_err(|e| anyhow!("reading suite dir {suite_dir:?}: {e}"))?;
+    let mut dirs: Vec<PathBuf> =
+        entries.filter_map(|e| e.ok()).map(|e| e.path()).filter(|p| p.is_dir()).collect();
+    dirs.sort();
+    let mut recs = Vec::new();
+    for dir in dirs {
+        let run = dir.file_name().and_then(|s| s.to_str()).unwrap_or("?").to_string();
+        let failed = std::fs::read_to_string(dir.join("FAILED"))
+            .ok()
+            .map(|t| t.lines().next().unwrap_or("(no error recorded)").to_string());
+        if let Ok(json) = metrics::read_summary(&dir) {
+            let s = |k: &str| json.get(k).and_then(Json::as_str).unwrap_or("?").to_string();
+            let n = |k: &str| json.get(k).and_then(Json::as_f64);
+            let final_loss = n("final_loss").filter(|v| v.is_finite());
+            let failed = failed.or_else(|| {
+                final_loss.is_none().then(|| "summary has no finite final loss".to_string())
+            });
+            recs.push(CellRecord {
+                run,
+                model: s("model"),
+                optimizer: s("optimizer"),
+                seed: n("seed").unwrap_or(0.0) as u64,
+                steps: n("steps").unwrap_or(0.0) as u64,
+                first_loss: n("first_loss").filter(|v| v.is_finite()),
+                final_loss,
+                mean_step_ms: n("mean_step_ms").unwrap_or(f64::NAN),
+                opt_state_bytes: n("opt_state_bytes").unwrap_or(0.0) as u64,
+                param_count: n("param_count").map(|v| v as u64),
+                failed,
+            });
+        } else {
+            // No parseable summary: a FAILED marker names the error; a
+            // summary file that *exists* but doesn't parse (e.g. a
+            // pre-atomic-write truncation) is surfaced as a failed cell
+            // rather than silently dropped from the report.
+            let failed = failed.or_else(|| {
+                dir.join("summary.json")
+                    .exists()
+                    .then(|| "unreadable summary.json (delete the cell dir to re-run)".to_string())
+            });
+            if failed.is_some() {
+                recs.push(CellRecord {
+                    run,
+                    model: String::new(),
+                    optimizer: String::new(),
+                    seed: 0,
+                    steps: 0,
+                    first_loss: None,
+                    final_loss: None,
+                    mean_step_ms: f64::NAN,
+                    opt_state_bytes: 0,
+                    param_count: None,
+                    failed,
+                });
+            }
+        }
+    }
+    recs.sort_by(|a, b| {
+        (a.failed.is_some(), &a.model, opt_rank(&a.optimizer), &a.optimizer, a.seed, &a.run).cmp(
+            &(b.failed.is_some(), &b.model, opt_rank(&b.optimizer), &b.optimizer, b.seed, &b.run),
+        )
+    });
+    Ok(recs)
+}
+
+/// Paper table ordering: baselines first, SMMF (the contribution) last.
+fn opt_rank(name: &str) -> usize {
+    match name {
+        "sgd" => 0,
+        "adam" => 1,
+        "adamw" => 2,
+        "adafactor" => 3,
+        "sm3" => 4,
+        "came" => 5,
+        "smmf" => 6,
+        _ => 7,
+    }
+}
+
+/// One `(model, optimizer)` aggregate over its seed repeats.
+struct Agg {
+    model: String,
+    optimizer: String,
+    n: usize,
+    first_mean: Option<f64>,
+    final_mean: Option<f64>,
+    final_spread: f64,
+    ms_mean: Option<f64>,
+    sps_mean: Option<f64>,
+    bytes: u64,
+    params: Option<u64>,
+}
+
+fn aggregate(ok: &[&CellRecord]) -> Vec<Agg> {
+    let mut aggs = Vec::new();
+    let mut i = 0;
+    while i < ok.len() {
+        let j = i + ok[i..]
+            .iter()
+            .take_while(|c| c.model == ok[i].model && c.optimizer == ok[i].optimizer)
+            .count();
+        let grp = &ok[i..j];
+        let mean = |vals: &[f64]| -> Option<f64> {
+            (!vals.is_empty()).then(|| vals.iter().sum::<f64>() / vals.len() as f64)
+        };
+        let finals: Vec<f64> = grp.iter().filter_map(|c| c.final_loss).collect();
+        let firsts: Vec<f64> = grp.iter().filter_map(|c| c.first_loss).collect();
+        let mss: Vec<f64> =
+            grp.iter().map(|c| c.mean_step_ms).filter(|v| v.is_finite() && *v > 0.0).collect();
+        let spss: Vec<f64> = mss.iter().map(|ms| 1e3 / ms).collect();
+        let spread = if finals.len() >= 2 {
+            let lo = finals.iter().cloned().fold(f64::INFINITY, f64::min);
+            let hi = finals.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+            hi - lo
+        } else {
+            0.0
+        };
+        aggs.push(Agg {
+            model: grp[0].model.clone(),
+            optimizer: grp[0].optimizer.clone(),
+            n: grp.len(),
+            first_mean: mean(&firsts),
+            final_mean: mean(&finals),
+            final_spread: spread,
+            ms_mean: mean(&mss),
+            sps_mean: mean(&spss),
+            bytes: grp[0].opt_state_bytes,
+            params: grp[0].param_count,
+        });
+        i = j;
+    }
+    aggs
+}
+
+/// Adam's optimizer-state bytes for a model, for the ratio column: a
+/// measured adam aggregate when the suite ran one, else the analytic
+/// accounting over the model's inventory (`optim::memory`), else `None`
+/// (artifact-only model with no adam cell).
+fn adam_reference(model: &str, aggs: &[Agg]) -> Option<u64> {
+    if let Some(a) = aggs.iter().find(|a| a.model == model && a.optimizer == "adam") {
+        return Some(a.bytes);
+    }
+    let inv = inventory_by_name(model.strip_prefix("synthetic:").unwrap_or(model))?;
+    Some(memory::inventory_state_bytes(
+        OptKind::Adam,
+        &inv.shapes(),
+        &OptimConfig::paper_defaults(OptKind::Adam),
+    ))
+}
+
+fn md_escape(s: &str) -> String {
+    s.replace('|', "\\|")
+}
+
+fn opt_f(v: Option<f64>, prec: usize) -> String {
+    match v {
+        Some(v) => format!("{v:.prec$}"),
+        None => "—".into(),
+    }
+}
+
+/// Render the Markdown report and the matching `BENCH_suite.json`
+/// records from collected cells. Pure and deterministic — see the
+/// module docs.
+pub fn generate(suite: &str, cells: &[CellRecord]) -> (String, Vec<Json>) {
+    let ok: Vec<&CellRecord> = cells.iter().filter(|c| c.failed.is_none()).collect();
+    let failed: Vec<&CellRecord> = cells.iter().filter(|c| c.failed.is_some()).collect();
+    let aggs = aggregate(&ok);
+
+    let mut md = String::new();
+    md.push_str(&format!("# Generated results — suite `{suite}`\n"));
+    md.push_str("\n");
+    md.push_str("Auto-generated by `repro suite` / `repro report` — do not edit by hand.\n");
+    md.push_str("Cells whose `summary.json` already exists are reused on re-entry, so a\n");
+    md.push_str("finished suite re-renders this file byte-for-byte; `make docs-check` pins\n");
+    md.push_str("the checked-in copy to the fixture suite under\n");
+    md.push_str("`rust/tests/fixtures/suite_report/`.\n");
+    md.push_str("\n");
+    md.push_str(&format!("Cells: {} ok, {} failed.\n", ok.len(), failed.len()));
+    md.push_str("\n");
+
+    md.push_str("## Optimizer-state memory\n");
+    md.push_str("\n");
+    md.push_str("Persistent optimizer-state bytes per (model, optimizer) — the paper's\n");
+    md.push_str("headline claim is the `smmf` row at a small fraction of `adam` (up to\n");
+    md.push_str("96% smaller, PAPER.md).\n");
+    md.push_str("\n");
+    md.push_str("| model | optimizer | params | opt state | bytes | vs adam |\n");
+    md.push_str("|---|---|---:|---:|---:|---:|\n");
+    for a in &aggs {
+        let ratio = match adam_reference(&a.model, &aggs) {
+            Some(adam) if adam > 0 => format!("{:.3}x", a.bytes as f64 / adam as f64),
+            _ => "—".into(),
+        };
+        let params = match a.params {
+            Some(p) => fmt::count(p),
+            None => "—".into(),
+        };
+        md.push_str(&format!(
+            "| {} | {} | {} | {} | {} | {} |\n",
+            md_escape(&a.model),
+            md_escape(&a.optimizer),
+            params,
+            fmt::bytes(a.bytes),
+            a.bytes,
+            ratio
+        ));
+    }
+    md.push_str("\n");
+
+    md.push_str("## Quality — final loss\n");
+    md.push_str("\n");
+    md.push_str("Mean ± spread (max − min) over the seed repeats of each cell.\n");
+    md.push_str("\n");
+    md.push_str("| model | optimizer | seeds | first loss | final loss |\n");
+    md.push_str("|---|---|---:|---:|---:|\n");
+    for a in &aggs {
+        let final_cell = match a.final_mean {
+            Some(m) if a.n >= 2 => format!("{m:.4} ± {:.4}", a.final_spread),
+            Some(m) => format!("{m:.4}"),
+            None => "—".into(),
+        };
+        md.push_str(&format!(
+            "| {} | {} | {} | {} | {} |\n",
+            md_escape(&a.model),
+            md_escape(&a.optimizer),
+            a.n,
+            opt_f(a.first_mean, 4),
+            final_cell
+        ));
+    }
+    md.push_str("\n");
+
+    md.push_str("## Throughput — optimizer step time\n");
+    md.push_str("\n");
+    md.push_str("Wall-clock per training step, averaged over seeds. Machine-dependent:\n");
+    md.push_str("regenerate locally before comparing numbers across machines.\n");
+    md.push_str("\n");
+    md.push_str("| model | optimizer | ms/step | steps/s |\n");
+    md.push_str("|---|---|---:|---:|\n");
+    for a in &aggs {
+        md.push_str(&format!(
+            "| {} | {} | {} | {} |\n",
+            md_escape(&a.model),
+            md_escape(&a.optimizer),
+            opt_f(a.ms_mean, 2),
+            opt_f(a.sps_mean, 0)
+        ));
+    }
+    md.push_str("\n");
+
+    md.push_str("## Failed cells\n");
+    md.push_str("\n");
+    if failed.is_empty() {
+        md.push_str("(none)\n");
+    } else {
+        md.push_str("| run | error |\n");
+        md.push_str("|---|---|\n");
+        for c in &failed {
+            md.push_str(&format!(
+                "| {} | {} |\n",
+                md_escape(&c.run),
+                md_escape(c.failed.as_deref().unwrap_or("?"))
+            ));
+        }
+    }
+
+    let mut records = Vec::new();
+    for c in &ok {
+        records.push(
+            ObjBuilder::new()
+                .str("record", "cell")
+                .str("run", &c.run)
+                .str("model", &c.model)
+                .str("optimizer", &c.optimizer)
+                .num("seed", c.seed as f64)
+                .num("steps", c.steps as f64)
+                .num("first_loss", c.first_loss.unwrap_or(f64::NAN))
+                .num("final_loss", c.final_loss.unwrap_or(f64::NAN))
+                .num("mean_step_ms", c.mean_step_ms)
+                .num("opt_state_bytes", c.opt_state_bytes as f64)
+                .build(),
+        );
+    }
+    for a in &aggs {
+        let mut b = ObjBuilder::new()
+            .str("record", "aggregate")
+            .str("model", &a.model)
+            .str("optimizer", &a.optimizer)
+            .num("seeds", a.n as f64)
+            .num("final_loss_mean", a.final_mean.unwrap_or(f64::NAN))
+            .num("final_loss_spread", a.final_spread)
+            .num("mean_step_ms", a.ms_mean.unwrap_or(f64::NAN))
+            .num("steps_per_s", a.sps_mean.unwrap_or(f64::NAN))
+            .num("opt_state_bytes", a.bytes as f64);
+        if let Some(adam) = adam_reference(&a.model, &aggs).filter(|&x| x > 0) {
+            b = b.num("vs_adam", a.bytes as f64 / adam as f64);
+        }
+        records.push(b.build());
+    }
+    for c in &failed {
+        records.push(
+            ObjBuilder::new()
+                .str("record", "failed")
+                .str("run", &c.run)
+                .str("error", c.failed.as_deref().unwrap_or("?"))
+                .build(),
+        );
+    }
+    (md, records)
+}
+
+/// Collect + generate + write: `docs_path` gets the Markdown,
+/// `bench_path` the JSON record stream. Parent directories are created.
+/// Returns the number of cells that went into the report.
+pub fn write_report(
+    suite: &str,
+    suite_dir: &Path,
+    docs_path: &Path,
+    bench_path: &Path,
+) -> Result<usize> {
+    let cells = collect(suite_dir)?;
+    let (md, records) = generate(suite, &cells);
+    if let Some(parent) = docs_path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(docs_path, &md).map_err(|e| anyhow!("writing {docs_path:?}: {e}"))?;
+    if let Some(parent) = bench_path.parent().filter(|p| !p.as_os_str().is_empty()) {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut sink = JsonSink::new(&format!("suite:{suite}"), bench_path);
+    for r in records {
+        sink.push(r);
+    }
+    sink.write().map_err(|e| anyhow!("writing {bench_path:?}: {e}"))?;
+    Ok(cells.len())
+}

@@ -1,0 +1,143 @@
+//! Suite scheduler: expand a [`SuiteConfig`] run matrix and schedule the
+//! independent cells over the [`workers::fan_out`] pool.
+//!
+//! Each expanded cell trains one `(model, optimizer, seed)` combination
+//! into `<out_dir>/<suite>/<run>/` with the same artifacts a standalone
+//! `repro train` run leaves (`metrics.{jsonl,csv}`, `summary.json`).
+//! Three properties make suites safe to run repeatedly:
+//!
+//! * **Resume-aware re-entry** — a cell whose `summary.json` already
+//!   exists is skipped (`CellStatus::Skipped`), so an interrupted suite
+//!   picks up where it left off and a completed suite is a no-op that
+//!   just re-renders the report from identical inputs (this is what
+//!   makes `docs/RESULTS.md` reproducible byte-for-byte).
+//! * **Failure isolation** — a cell that errors or diverges writes a
+//!   `FAILED` marker (first line = the error) and the suite carries on;
+//!   failed cells are retried on the next invocation and listed in the
+//!   report instead of poisoning the aggregate tables.
+//! * **Independence** — cells never share mutable state: artifact cells
+//!   open their own [`Runtime`] inside the worker (exactly like the
+//!   data-parallel workers), synthetic cells are pure Rust.
+
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+
+use crate::coordinator::config::{SuiteCell, SuiteConfig};
+use crate::coordinator::{experiments, workers};
+use crate::runtime::Runtime;
+use crate::train::metrics;
+
+/// Scheduler knobs for one `repro suite` invocation.
+#[derive(Clone, Debug)]
+pub struct SuiteOptions {
+    /// Re-run cells even when their `summary.json` already exists.
+    pub force: bool,
+    /// Worker-pool width override (`0` = use `[suite] workers`).
+    pub workers: usize,
+    /// AOT artifacts directory for artifact-backed cells.
+    pub artifacts_dir: String,
+}
+
+impl Default for SuiteOptions {
+    fn default() -> Self {
+        Self { force: false, workers: 0, artifacts_dir: "artifacts".into() }
+    }
+}
+
+/// What happened to one expanded cell.
+#[derive(Clone, Debug, PartialEq)]
+pub enum CellStatus {
+    /// Trained in this invocation and left a finite-loss summary.
+    Ran,
+    /// `summary.json` already existed — reused (resume-aware re-entry).
+    Skipped,
+    /// Errored or diverged; the note is mirrored into the `FAILED`
+    /// marker file and the rest of the suite kept running.
+    Failed(String),
+}
+
+/// The per-cell outcomes of one suite invocation, in expansion order.
+pub struct SuiteOutcome {
+    /// `<out_dir>/<suite>/` — where the cells (and usually the report)
+    /// live.
+    pub suite_dir: PathBuf,
+    /// One `(cell, status)` per expanded cell.
+    pub cells: Vec<(SuiteCell, CellStatus)>,
+}
+
+impl SuiteOutcome {
+    /// `(ran, skipped, failed)` cell counts.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for (_, s) in &self.cells {
+            match s {
+                CellStatus::Ran => c.0 += 1,
+                CellStatus::Skipped => c.1 += 1,
+                CellStatus::Failed(_) => c.2 += 1,
+            }
+        }
+        c
+    }
+}
+
+/// Expand and run a suite. Errors only on setup problems (bad expansion,
+/// unwritable out dir) — per-cell failures are isolated into
+/// [`CellStatus::Failed`].
+pub fn run_suite(suite: &SuiteConfig, opts: &SuiteOptions) -> Result<SuiteOutcome> {
+    let cells = suite.expand()?;
+    let suite_dir = Path::new(&suite.out_dir).join(&suite.name);
+    std::fs::create_dir_all(&suite_dir)?;
+    let n_workers = if opts.workers > 0 { opts.workers } else { suite.workers };
+    let total = cells.len();
+    println!(
+        "[suite {}] {total} cells over {n_workers} worker(s) -> {}",
+        suite.name,
+        suite_dir.display()
+    );
+    let statuses = workers::fan_out(cells.clone(), n_workers, |i, cell| {
+        run_cell(i, total, &cell, opts)
+    });
+    Ok(SuiteOutcome { suite_dir, cells: cells.into_iter().zip(statuses).collect() })
+}
+
+fn run_cell(idx: usize, total: usize, cell: &SuiteCell, opts: &SuiteOptions) -> CellStatus {
+    let tag = format!("[suite] ({}/{total}) {}", idx + 1, cell.run);
+    let dir = Path::new(&cell.cfg.out_dir).join(&cell.cfg.name);
+    let summary = metrics::summary_path(&cell.cfg.out_dir, &cell.cfg.name);
+    let failed_marker = dir.join("FAILED");
+    if !opts.force && summary.exists() && !failed_marker.exists() {
+        println!("{tag}: cached (summary.json exists — use --force to re-run)");
+        return CellStatus::Skipped;
+    }
+    // A retry owns the cell directory's verdict files again.
+    let _ = std::fs::remove_file(&failed_marker);
+    if opts.force {
+        let _ = std::fs::remove_file(&summary);
+    }
+    let result = if let Some(inv) = cell.model.strip_prefix("synthetic:") {
+        experiments::run_synthetic_experiment(&cell.cfg, inv)
+    } else {
+        Runtime::open(&opts.artifacts_dir)
+            .and_then(|rt| experiments::run_experiment(&rt, &cell.cfg))
+    };
+    match result {
+        Ok(s) if s.final_loss.is_finite() => {
+            println!(
+                "{tag}: ok — loss {:.4} -> {:.4}, {:.2} ms/step",
+                s.first_loss, s.final_loss, s.mean_step_ms
+            );
+            CellStatus::Ran
+        }
+        Ok(s) => fail_cell(&tag, &dir, format!("diverged: non-finite loss after {} steps", s.steps)),
+        Err(e) => fail_cell(&tag, &dir, format!("{e:#}")),
+    }
+}
+
+fn fail_cell(tag: &str, dir: &Path, note: String) -> CellStatus {
+    println!("{tag}: FAILED — {note}");
+    // Best-effort marker: the suite keeps going even if the cell dir is
+    // unwritable (the report then lists the cell as incomplete instead).
+    let _ = std::fs::create_dir_all(dir);
+    let _ = std::fs::write(dir.join("FAILED"), note.clone() + "\n");
+    CellStatus::Failed(note)
+}

@@ -1,15 +1,24 @@
-//! Multi-worker data-parallel training (std::thread).
+//! Multi-worker pools (std::thread): the data-parallel trainer and the
+//! generic task fan-out the experiment-suite scheduler reuses.
 //!
-//! Leader/worker topology: each worker owns its own PJRT client and
-//! compiled executable, receives the current parameters, computes
-//! gradients on its private shard of the batch stream, and sends them
-//! back; the leader averages gradients and applies one optimizer step
-//! (synchronous data parallelism). This exercises the framework's
-//! distributed shape on a single host; on this testbed (1 core) it is a
-//! correctness/topology feature, not a speedup.
+//! Two topologies share this module:
+//!
+//! * [`train_data_parallel`] — lockstep leader/worker data parallelism:
+//!   each worker owns its own PJRT client and compiled executable,
+//!   receives the current parameters, computes gradients on its private
+//!   shard of the batch stream, and sends them back; the leader averages
+//!   gradients and applies one optimizer step. This exercises the
+//!   framework's distributed shape on a single host; on this testbed
+//!   (1 core) it is a correctness/topology feature, not a speedup.
+//! * [`fan_out`] — an order-preserving work-stealing pool for
+//!   *independent* tasks (no per-step barrier). `repro suite` schedules
+//!   its expanded run matrix over it; each suite cell opens its own
+//!   runtime inside the worker, exactly like the data-parallel workers
+//!   do.
 
 use anyhow::{anyhow, Result};
-use std::sync::mpsc;
+use std::collections::VecDeque;
+use std::sync::{mpsc, Mutex};
 use std::thread;
 
 use crate::coordinator::config::ExperimentConfig;
@@ -19,6 +28,53 @@ use crate::optim::group::{self, ParamSpec};
 use crate::runtime::Runtime;
 use crate::tensor::Tensor;
 use crate::train::TrainGraph;
+
+/// Run `tasks` over a pool of `n_workers` scoped threads and return the
+/// results in task order. Workers pull from a shared queue, so uneven
+/// task costs balance automatically; `f` receives `(task index, task)`.
+/// Failure isolation is the *caller's* job: have `f` return a
+/// `Result`-like value rather than panic (a panicking task tears down
+/// the whole pool, like any thread panic).
+pub fn fan_out<T, R>(
+    tasks: Vec<T>,
+    n_workers: usize,
+    f: impl Fn(usize, T) -> R + Sync,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+{
+    let n = tasks.len();
+    let n_workers = n_workers.max(1).min(n.max(1));
+    let queue: Mutex<VecDeque<(usize, T)>> = Mutex::new(tasks.into_iter().enumerate().collect());
+    let (tx, rx) = mpsc::channel::<(usize, R)>();
+    thread::scope(|s| {
+        for _ in 0..n_workers {
+            let tx = tx.clone();
+            let queue = &queue;
+            let f = &f;
+            s.spawn(move || loop {
+                let item = queue.lock().unwrap().pop_front();
+                match item {
+                    Some((i, t)) => {
+                        // A send can only fail if the leader is gone —
+                        // nothing useful left to do with the result then.
+                        tx.send((i, f(i, t))).ok();
+                    }
+                    None => break,
+                }
+            });
+        }
+        drop(tx);
+        let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+        for (i, r) in rx {
+            out[i] = Some(r);
+        }
+        out.into_iter()
+            .map(|r| r.expect("fan_out worker delivered every task"))
+            .collect()
+    })
+}
 
 enum ToWorker {
     Params(Vec<Tensor>),
@@ -121,4 +177,32 @@ pub fn train_data_parallel(
         h.join().map_err(|_| anyhow!("worker panicked"))?;
     }
     Ok(losses)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fan_out_preserves_order_and_handles_edges() {
+        let tasks: Vec<usize> = (0..50).collect();
+        let out = fan_out(tasks, 4, |i, t| {
+            assert_eq!(i, t);
+            t * 2
+        });
+        assert_eq!(out, (0..50).map(|t| t * 2).collect::<Vec<_>>());
+        // empty task list, and more workers than tasks
+        let empty: Vec<usize> = Vec::new();
+        assert!(fan_out(empty, 3, |_, t: usize| t).is_empty());
+        assert_eq!(fan_out(vec![7usize], 8, |_, t| t + 1), vec![8]);
+        // error values pass through per-task (failure isolation pattern)
+        let out = fan_out(vec![1usize, 0, 3], 2, |_, t| {
+            if t == 0 {
+                Err("zero")
+            } else {
+                Ok(t)
+            }
+        });
+        assert_eq!(out, vec![Ok(1), Err("zero"), Ok(3)]);
+    }
 }

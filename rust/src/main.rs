@@ -10,14 +10,17 @@
 //! repro fig1|fig2|fig4           # optimizer-comparison training curves
 //! repro e2e [--steps 300]        # end-to-end LM training driver (SMMF)
 //! repro train --artifact lm_tiny_grads --optimizer smmf --steps 100
+//! repro suite rust/tests/suite_smoke.toml   # optimizer × model × seed sweep
+//! repro report runs/smoke        # re-render docs/RESULTS.md from a suite dir
 //! repro dp --workers 2           # data-parallel demo
 //! repro fused --steps 50         # compiled (Pallas) SMMF train step
 //! ```
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
+use std::path::Path;
 
 use smmf_repro::coordinator::experiments as exp;
-use smmf_repro::coordinator::{workers, ExperimentConfig};
+use smmf_repro::coordinator::{report, suite, workers, ExperimentConfig, SuiteConfig};
 use smmf_repro::models;
 use smmf_repro::optim::OptKind;
 use smmf_repro::runtime::Runtime;
@@ -65,6 +68,8 @@ fn run(args: &Args) -> Result<()> {
         "fig4" => cmd_fig(args, "fig4"),
         "e2e" => cmd_e2e(args),
         "train" => cmd_train(args),
+        "suite" => cmd_suite(args),
+        "report" => cmd_report(args),
         "dp" => cmd_dp(args),
         "fused" => cmd_fused(args),
         "ablate" => cmd_ablate(args),
@@ -84,6 +89,16 @@ commands:
                     --lr, --config file.toml, --out-dir,
                     --save-every N [writes runs/<name>/checkpoint.bin],
                     --resume <checkpoint.bin> [bit-identical restart])
+  suite FILE.toml   run a declarative optimizer × model × seed sweep
+                    ([[suite.run]] blocks; see rust/tests/suite_smoke.toml)
+                    with failure isolation + resume-aware re-entry, then
+                    regenerate the paper-style report (--workers N,
+                    --force re-runs cached cells, --out-dir DIR,
+                    --docs PATH [default docs/RESULTS.md],
+                    --bench-json PATH [default BENCH_suite.json])
+  report DIR        re-render the report from an existing suite dir
+                    (runs/<suite>) without training (--name, --docs,
+                    --bench-json as above)
   dp --workers K    synchronous data-parallel training demo
   fused             compiled whole-train-step (Pallas SMMF) demo
   ablate            SMMF design ablations (scheme / sign width /
@@ -284,6 +299,78 @@ fn cmd_train(args: &Args) -> Result<()> {
         s.mean_step_ms,
         fmt::bytes(s.opt_state_bytes)
     );
+    Ok(())
+}
+
+/// Default report paths: repo-root-relative when invoked from the repo
+/// root, `../`-prefixed when invoked from `rust/` (the two places the
+/// Makefile and README run `repro` from).
+fn default_report_paths() -> (String, String) {
+    if Path::new("docs").is_dir() || !Path::new("../docs").is_dir() {
+        ("docs/RESULTS.md".into(), "BENCH_suite.json".into())
+    } else {
+        ("../docs/RESULTS.md".into(), "../BENCH_suite.json".into())
+    }
+}
+
+fn report_paths(args: &Args) -> (String, String) {
+    let (d_docs, d_bench) = default_report_paths();
+    (args.str_or("docs", &d_docs), args.str_or("bench-json", &d_bench))
+}
+
+fn cmd_suite(args: &Args) -> Result<()> {
+    let file = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.opt("file"))
+        .ok_or_else(|| {
+            anyhow!(
+                "usage: repro suite <suite.toml> [--workers N] [--force] \
+                 [--docs PATH] [--bench-json PATH]"
+            )
+        })?;
+    let mut suite_cfg = SuiteConfig::from_toml(Path::new(file))?;
+    suite_cfg.out_dir = args.str_or("out-dir", &suite_cfg.out_dir);
+    let opts = suite::SuiteOptions {
+        force: args.has_flag("force"),
+        workers: args.usize_or("workers", 0),
+        artifacts_dir: artifacts_dir(args),
+    };
+    let outcome = suite::run_suite(&suite_cfg, &opts)?;
+    let (ran, skipped, failed) = outcome.counts();
+    let (docs, bench) = report_paths(args);
+    report::write_report(&suite_cfg.name, &outcome.suite_dir, Path::new(&docs), Path::new(&bench))?;
+    println!("\n[suite {}] {ran} ran, {skipped} cached, {failed} failed", suite_cfg.name);
+    println!("[suite {}] report -> {docs} (records -> {bench})", suite_cfg.name);
+    // Failure isolation keeps the suite (and the report) going, but the
+    // exit code must still tell CI the truth.
+    if failed > 0 {
+        bail!(
+            "{failed} suite cell(s) FAILED (report still written to {docs}; \
+             see the FAILED markers under {:?} — failed cells retry on re-run)",
+            outcome.suite_dir
+        );
+    }
+    Ok(())
+}
+
+fn cmd_report(args: &Args) -> Result<()> {
+    let dir = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.opt("dir"))
+        .ok_or_else(|| {
+            anyhow!("usage: repro report runs/<suite> [--name NAME] [--docs PATH] [--bench-json PATH]")
+        })?;
+    let dirp = Path::new(dir);
+    let default_name =
+        dirp.file_name().and_then(|s| s.to_str()).unwrap_or("suite").to_string();
+    let name = args.str_or("name", &default_name);
+    let (docs, bench) = report_paths(args);
+    let n = report::write_report(&name, dirp, Path::new(&docs), Path::new(&bench))?;
+    println!("[report {name}] {n} cells -> {docs} (records -> {bench})");
     Ok(())
 }
 

@@ -26,6 +26,7 @@ pub fn list_inventories() -> Vec<(&'static str, &'static str)> {
         ("bart_base", "Table 12 (summarization)"),
         ("mbart_large", "Table 13 (summarization)"),
         ("marian_mt", "Table 10 (WMT16 En-Ro)"),
+        ("tiny_lm", "suite smoke (synthetic workload)"),
     ]
 }
 
@@ -51,6 +52,7 @@ pub fn inventory_by_name(name: &str) -> Option<Inventory> {
         "bart_base" => bart::bart_base(),
         "mbart_large" => bart::mbart_large(),
         "marian_mt" => bart::marian_mt(),
+        "tiny_lm" => transformer::tiny_lm(),
         _ => return None,
     })
 }

@@ -68,6 +68,27 @@ pub fn transformer_big() -> Inventory {
     transformer_mt("transformer_big", &BIG)
 }
 
+/// A deliberately tiny (~15K param) char-LM-shaped inventory covering
+/// every [`super::ParamTensor`] role (embedding, kernel, bias, norm) —
+/// the workload behind the artifact-free `synthetic:` suite cells
+/// (`rust/tests/suite_smoke.toml`) and a fast target for group-matcher
+/// examples. Small enough that a full optimizer sweep over several
+/// seeds runs in milliseconds on one core.
+pub fn tiny_lm() -> Inventory {
+    let mut inv = Inventory::new("tiny_lm");
+    let (vocab, d, ff) = (96, 32, 64);
+    inv.embedding("tok_emb", vocab, d);
+    inv.norm("block.0.ln1", d);
+    inv.linear("block.0.attn.qkv", d, 3 * d);
+    inv.linear("block.0.attn.o", d, d);
+    inv.norm("block.0.ln2", d);
+    inv.linear("block.0.ffn.w1", d, ff);
+    inv.linear("block.0.ffn.w2", ff, d);
+    inv.norm("ln_final", d);
+    inv.linear_nb("head", d, vocab);
+    inv
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,5 +112,16 @@ mod tests {
     fn all_matrices_are_2d() {
         let inv = transformer_base();
         assert!(inv.tensors.iter().all(|t| t.shape.len() <= 2));
+    }
+
+    #[test]
+    fn tiny_lm_is_tiny_and_covers_all_roles() {
+        use crate::optim::group::ParamRole;
+        let inv = tiny_lm();
+        assert_eq!(inv.param_count(), 14752);
+        let roles: Vec<ParamRole> = inv.role_breakdown().into_iter().map(|(r, _, _)| r).collect();
+        for want in [ParamRole::Kernel, ParamRole::Bias, ParamRole::Norm, ParamRole::Embedding] {
+            assert!(roles.contains(&want), "missing {want:?}");
+        }
     }
 }

@@ -7,11 +7,27 @@
 //! differential testing; the production hot path in `smmf.rs` fuses them
 //! and never materializes the matrix.
 
+#![deny(missing_docs)]
+
 use crate::tensor::BitMatrix;
 
 /// Compress a non-negative (rows × cols) matrix `m` into `r`, `c`.
 /// Normalization side rule (Appendix M code): if rows < cols normalize `r`
 /// by its total mass, else normalize `c`.
+///
+/// ```
+/// use smmf_repro::optim::nnmf::{compress, decompress};
+/// // A rank-1 non-negative matrix survives the round trip exactly:
+/// // m = outer([2, 1], [1, 2]).
+/// let m = [2.0_f32, 4.0, 1.0, 2.0];
+/// let (mut r, mut c) = (vec![0.0; 2], vec![0.0; 2]);
+/// compress(&m, 2, 2, &mut r, &mut c);
+/// let mut rec = vec![0.0; 4];
+/// decompress(&r, &c, None, &mut rec);
+/// for (a, b) in m.iter().zip(&rec) {
+///     assert!((a - b).abs() < 1e-5);
+/// }
+/// ```
 pub fn compress(m: &[f32], rows: usize, cols: usize, r: &mut [f32], c: &mut [f32]) {
     crate::tensor::mat::row_sums(m, rows, cols, r);
     crate::tensor::mat::col_sums(m, rows, cols, c);

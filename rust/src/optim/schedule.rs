@@ -6,6 +6,14 @@
 //! * Learning-rate schedules used by the experiment harness: constant,
 //!   linear-warmup + linear/cosine decay, inverse-sqrt (transformer), and
 //!   ReduceLROnPlateau (the paper's CNN recipe).
+//!
+//! Schedules are plain state (no trait objects): optimizers call the β
+//! functions directly each step, and the trainer samples
+//! [`LrSchedule::at`] before every [`crate::optim::Optimizer::step`].
+//! The suite/TOML spelling lives in `coordinator::config`
+//! (`[schedule] kind = "warmup" | "linear" | "invsqrt" | "constant"`).
+
+#![deny(missing_docs)]
 
 /// SMMF / AdamNC 1st-momentum growth schedule.
 #[inline]
@@ -22,18 +30,45 @@ pub fn beta2_t(decay_rate: f32, t: u64) -> f32 {
 /// Learning-rate schedules.
 #[derive(Clone, Debug, PartialEq)]
 pub enum LrSchedule {
+    /// The base LR at every step (the default).
     Constant,
     /// Linear warmup to the base LR over `warmup` steps, then constant.
-    Warmup { warmup: u64 },
+    Warmup {
+        /// Ramp length in steps (0 = no ramp).
+        warmup: u64,
+    },
     /// Linear warmup then linear decay to zero at `total` steps.
-    Linear { warmup: u64, total: u64 },
+    Linear {
+        /// Ramp length in steps.
+        warmup: u64,
+        /// Step at which the decayed LR reaches zero.
+        total: u64,
+    },
     /// Transformer inverse-sqrt: lr * min(t^-0.5, t * warmup^-1.5) * warmup^0.5.
-    InvSqrt { warmup: u64 },
+    InvSqrt {
+        /// Step at which the schedule peaks at the base LR.
+        warmup: u64,
+    },
     /// Cosine decay to `floor` fraction after warmup.
-    Cosine { warmup: u64, total: u64, floor: f32 },
+    Cosine {
+        /// Ramp length in steps.
+        warmup: u64,
+        /// Step at which the cosine reaches its floor.
+        total: u64,
+        /// Fraction of the base LR kept at the end (0.0–1.0).
+        floor: f32,
+    },
 }
 
 impl LrSchedule {
+    /// The LR this schedule yields at (1-based) step `t` for `base_lr`.
+    ///
+    /// ```
+    /// use smmf_repro::optim::schedule::LrSchedule;
+    /// let s = LrSchedule::Warmup { warmup: 10 };
+    /// assert!((s.at(1.0, 5) - 0.5).abs() < 1e-6); // mid-ramp
+    /// assert_eq!(s.at(1.0, 100), 1.0); // past warmup: the base LR
+    /// ```
     pub fn at(&self, base_lr: f32, t: u64) -> f32 {
         let t = t.max(1);
         match *self {
@@ -108,15 +143,20 @@ impl LrSchedule {
 /// evaluations.
 #[derive(Clone, Debug)]
 pub struct ReduceOnPlateau {
+    /// Multiplier applied to the LR scale on each reduction (< 1).
     pub factor: f32,
+    /// Non-improving evaluations tolerated before reducing.
     pub patience: u32,
+    /// Lower bound on the cumulative LR scale.
     pub min_lr: f32,
     best: f32,
     bad_evals: u32,
+    /// Current cumulative LR scale (starts at 1.0).
     pub lr_scale: f32,
 }
 
 impl ReduceOnPlateau {
+    /// A fresh scheduler (scale 1.0, no observations yet).
     pub fn new(factor: f32, patience: u32, min_lr: f32) -> Self {
         Self { factor, patience, min_lr, best: f32::INFINITY, bad_evals: 0, lr_scale: 1.0 }
     }

@@ -1,6 +1,6 @@
 //! Run metrics: JSONL (machine) + CSV (plotting) writers under `runs/`.
 
-use anyhow::{Context, Result};
+use anyhow::{anyhow, Context, Result};
 use std::fs::{self, File};
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
@@ -97,8 +97,19 @@ impl RunLogger {
     }
 
     /// Write a free-form summary JSON next to the metrics.
+    ///
+    /// Atomic (temp file + fsync + rename), because the suite scheduler
+    /// uses `summary.json`'s existence as its "cell finished" marker: a
+    /// partial file left by an interrupt would otherwise make the cell
+    /// skip forever while the report generator can't parse it.
     pub fn write_summary(&self, json: &crate::util::json::Json) -> Result<()> {
-        fs::write(self.dir.join("summary.json"), json.to_string())?;
+        let tmp = self.dir.join("summary.json.tmp");
+        {
+            let mut f = File::create(&tmp).with_context(|| format!("creating {tmp:?}"))?;
+            f.write_all(json.to_string().as_bytes())?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, self.dir.join("summary.json"))?;
         Ok(())
     }
 
@@ -113,6 +124,22 @@ impl Drop for RunLogger {
     fn drop(&mut self) {
         let _ = self.flush();
     }
+}
+
+/// Path of the summary a [`RunLogger::write_summary`] call would produce
+/// for `root/name` — the suite scheduler's "this cell already ran"
+/// marker.
+pub fn summary_path(root: impl AsRef<Path>, name: &str) -> PathBuf {
+    root.as_ref().join(name).join("summary.json")
+}
+
+/// Parse a run directory's `summary.json` (the inverse of
+/// [`RunLogger::write_summary`]) — used by the suite report generator to
+/// aggregate finished cells.
+pub fn read_summary(dir: &Path) -> Result<crate::util::json::Json> {
+    let path = dir.join("summary.json");
+    let text = fs::read_to_string(&path).with_context(|| format!("reading {path:?}"))?;
+    crate::util::json::Json::parse(&text).map_err(|e| anyhow!("parsing {path:?}: {e}"))
 }
 
 /// Drop lines whose parsed step exceeds `resume_step` (lines that don't
@@ -158,8 +185,17 @@ mod tests {
             let mut log = RunLogger::create(&tmp, "t1").unwrap();
             log.log(1, 2.5, &[("lr", 1e-3)]).unwrap();
             log.log(2, 2.0, &[("lr", 1e-3)]).unwrap();
+            log.write_summary(
+                &crate::util::json::ObjBuilder::new().num("final_loss", 2.0).build(),
+            )
+            .unwrap();
             log.flush().unwrap();
         }
+        // summary round-trips through the suite-report reader
+        assert!(summary_path(&tmp, "t1").exists());
+        let summary = read_summary(&tmp.join("t1")).unwrap();
+        assert_eq!(summary.get("final_loss").unwrap().as_f64(), Some(2.0));
+        assert!(read_summary(&tmp.join("absent")).is_err());
         let jsonl = std::fs::read_to_string(tmp.join("t1/metrics.jsonl")).unwrap();
         let lines: Vec<_> = jsonl.lines().collect();
         assert_eq!(lines.len(), 2);

@@ -141,6 +141,29 @@ impl TomlDoc {
             _ => None,
         }
     }
+
+    /// A key's value as a list of integers: either a TOML array of
+    /// integers or a single bare integer (`seeds = [0, 1, 2]` /
+    /// `seeds = 3`). `None` when absent or not integer-valued.
+    pub fn i64_list(&self, key: &str) -> Option<Vec<i64>> {
+        match self.get(key)? {
+            TomlValue::Int(i) => Some(vec![*i]),
+            TomlValue::Arr(items) => {
+                items.iter().map(|v| v.as_i64()).collect::<Option<Vec<i64>>>()
+            }
+            _ => None,
+        }
+    }
+
+    /// Iterate the key suffixes under a dotted prefix (e.g. prefix
+    /// `"suite.run.0"` yields `"steps"`, `"optimizers"`, …). Used by the
+    /// suite parser to reject unknown keys instead of silently ignoring
+    /// typos.
+    pub fn keys_under<'a>(&'a self, prefix: &'a str) -> impl Iterator<Item = &'a str> + 'a {
+        self.values.keys().filter_map(move |k| {
+            k.strip_prefix(prefix).and_then(|rest| rest.strip_prefix('.'))
+        })
+    }
 }
 
 fn strip_comment(line: &str) -> &str {
@@ -291,6 +314,25 @@ state = "dense"
         assert_eq!(doc.str_or("optimizer.kind", ""), "smmf");
         assert!(TomlDoc::parse("[[oops]").is_err());
         assert!(TomlDoc::parse("[[]]").is_err());
+    }
+
+    #[test]
+    fn int_lists_and_key_enumeration() {
+        let doc = TomlDoc::parse(
+            "[suite]\nseeds = [0, 1, 7]\nsolo = 3\n[[suite.run]]\nsteps = 5\nmodels = [\"a\"]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.i64_list("suite.seeds"), Some(vec![0, 1, 7]));
+        assert_eq!(doc.i64_list("suite.solo"), Some(vec![3]));
+        assert_eq!(doc.i64_list("absent"), None);
+        // non-integer lists are rejected, not coerced
+        let bad = TomlDoc::parse("seeds = [1, \"x\"]").unwrap();
+        assert_eq!(bad.i64_list("seeds"), None);
+        let mut keys: Vec<&str> = doc.keys_under("suite.run.0").collect();
+        keys.sort();
+        assert_eq!(keys, vec!["models", "steps"]);
+        // the prefix match is segment-aware: `suite.runx` keys don't leak in
+        assert_eq!(doc.keys_under("suite.run").count(), 2); // "0.steps", "0.models"
     }
 
     #[test]

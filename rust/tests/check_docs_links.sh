@@ -1,0 +1,49 @@
+#!/usr/bin/env bash
+# Docs link/anchor checker, run by `make docs-check`.
+#
+# 1. Every relative markdown link in README.md and docs/*.md must point
+#    at a file that exists (anchors after '#' are stripped; http(s) and
+#    mailto links are skipped).
+# 2. Every `path:line` code anchor in docs/ARCHITECTURE.md (backticked
+#    `rust/...:N` references) must name an existing file with at least N
+#    lines — so the module guide cannot silently rot as code moves.
+set -euo pipefail
+
+cd "$(dirname "$0")/../.."   # repo root
+
+fail=0
+
+for f in README.md docs/*.md; do
+  while IFS= read -r link; do
+    [ -z "$link" ] && continue
+    case "$link" in
+      http://*|https://*|mailto:*|'#'*) continue ;;
+    esac
+    target="${link%%#*}"
+    [ -z "$target" ] && continue
+    base="$(dirname "$f")"
+    if [ ! -e "$target" ] && [ ! -e "$base/$target" ]; then
+      echo "BROKEN LINK: $f -> $link"
+      fail=1
+    fi
+  done < <(grep -oE '\]\([^)]+\)' "$f" 2>/dev/null | sed -E 's/^\]\(//; s/\)$//')
+done
+
+if [ -f docs/ARCHITECTURE.md ]; then
+  while IFS=: read -r path line; do
+    [ -z "$path" ] && continue
+    if [ ! -f "$path" ]; then
+      echo "BROKEN ANCHOR: docs/ARCHITECTURE.md -> $path:$line (no such file)"
+      fail=1
+    elif [ "$(wc -l < "$path")" -lt "$line" ]; then
+      echo "BROKEN ANCHOR: docs/ARCHITECTURE.md -> $path:$line (file has only $(wc -l < "$path") lines)"
+      fail=1
+    fi
+  done < <(grep -oE '`(rust|python|docs|examples)/[A-Za-z0-9_./-]+:[0-9]+' docs/ARCHITECTURE.md | tr -d '`')
+fi
+
+if [ "$fail" -ne 0 ]; then
+  echo "docs link check FAILED"
+  exit 1
+fi
+echo "docs link check OK"

@@ -26,6 +26,23 @@ cargo test --release --test checkpoint_roundtrip
 echo "== grouped API (default-group bit-identity, wd exemption, grouped resume) =="
 cargo test --release --test grouped_build
 
+echo "== suite subsystem (expansion, synthetic cells, report determinism) =="
+cargo test --release --test suite
+
+# Suite smoke: 2 optimizers × 1 model × 2 seeds on the artifact-free
+# synthetic workload, run twice — the second pass must skip every cached
+# cell and re-render a byte-identical report (the docs/RESULTS.md
+# determinism contract).
+echo "== suite smoke (repro suite tests/suite_smoke.toml, twice) =="
+rm -rf target/suite-smoke
+cargo run --release -- suite tests/suite_smoke.toml \
+  --out-dir target/suite-smoke --docs target/suite-smoke/RESULTS.md \
+  --bench-json target/suite-smoke/BENCH_suite.json
+cargo run --release -- suite tests/suite_smoke.toml \
+  --out-dir target/suite-smoke --docs target/suite-smoke/RESULTS.2.md \
+  --bench-json target/suite-smoke/BENCH_suite.2.json
+cmp target/suite-smoke/RESULTS.md target/suite-smoke/RESULTS.2.md
+
 # Grouped end-to-end: train -> save -> resume with a bias/norm-exempt
 # group config through the real CLI. Needs AOT artifacts (make
 # artifacts); self-skips when they are absent, matching the other
