@@ -8,6 +8,10 @@
 #   make suite-smoke tiny 2-optimizer × 1-model × 2-seed suite (pure
 #                    Rust, no artifacts) run twice; asserts the report
 #                    is byte-identical across re-entry
+#   make serve-smoke loopback optimizer-state server: 4 clients × 2
+#                    shards on synthetic:tiny_lm; asserts the snapshot
+#                    is byte-identical to the single-process reference
+#                    trainer and refreshes BENCH_server.json
 #   make docs-check  regenerate docs/RESULTS.md from the checked-in
 #                    fixture summaries, fail on diff, and verify every
 #                    docs link / file:line anchor
@@ -15,7 +19,7 @@
 #   make docs        rustdoc for the crate, warnings-clean (--no-deps)
 #   make artifacts   AOT-lower the JAX/Pallas graphs (needs python + jax)
 
-.PHONY: build test smoke suite-smoke docs-check bench docs artifacts
+.PHONY: build test smoke suite-smoke serve-smoke docs-check bench docs artifacts
 
 build:
 	cd rust && cargo build --release
@@ -36,6 +40,13 @@ suite-smoke:
 	  --bench-json ../runs/smoke/BENCH_suite.2.json
 	cmp runs/smoke/RESULTS.md runs/smoke/RESULTS.2.md
 	@echo "suite-smoke OK: report byte-identical across re-entry"
+
+serve-smoke:
+	cd rust && cargo run --release -- loadgen --model synthetic:tiny_lm \
+	  --clients 4 --shards 2 --steps 30 \
+	  --snapshot target/serve-smoke/snapshot.bin --check \
+	  --bench-json ../BENCH_server.json
+	@echo "serve-smoke OK: 2-shard x 4-client snapshot byte-identical to the single-process trainer"
 
 docs-check:
 	cd rust && cargo run --release -- report tests/fixtures/suite_report/smoke \

@@ -438,7 +438,11 @@ impl SuiteConfig {
                 save_every: take_i64("save_every")?.map(|v| v.max(0) as u64),
             });
         }
-        let workers = doc.i64_or("suite.workers", 1).max(1) as usize;
+        // Worker-count knobs are validated (not silently clamped) at the
+        // config layer: a zero- or negative-width pool is a config
+        // mistake the user must see, mirroring the `log_every` hardening.
+        let workers =
+            doc.count_or("suite.workers", 1).map_err(|e| anyhow!("[suite]: {e}"))?;
         let out_dir = doc.str_or("suite.out_dir", &base.out_dir).to_string();
         Ok(SuiteConfig { name, out_dir, seeds, workers, base, runs })
     }
@@ -685,6 +689,19 @@ mod tests {
         assert!(cfg2
             .apply_args(&Args::parse(["--bias-correction", "maybe"].iter().map(|s| s.to_string())))
             .is_err());
+    }
+
+    #[test]
+    fn suite_workers_validated_not_clamped() {
+        let base = "[[suite.run]]\noptimizers = [\"smmf\"]\nmodels = [\"synthetic:tiny_lm\"]\n";
+        let ok = SuiteConfig::parse(&format!("[suite]\nworkers = 3\n{base}"), "s").unwrap();
+        assert_eq!(ok.workers, 3);
+        // absent -> default 1
+        assert_eq!(SuiteConfig::parse(base, "s").unwrap().workers, 1);
+        for bad in ["workers = 0", "workers = -2", "workers = \"many\""] {
+            let e = SuiteConfig::parse(&format!("[suite]\n{bad}\n{base}"), "s").unwrap_err();
+            assert!(format!("{e:#}").contains(">= 1"), "{bad}: {e:#}");
+        }
     }
 
     #[test]

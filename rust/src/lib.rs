@@ -23,12 +23,16 @@
 //! * [`train`] — the trainer that composes runtime + optim + data.
 //! * [`coordinator`] — experiment registry and launcher.
 //! * [`runtime`] — PJRT artifact loading/execution.
+//! * [`server`] — the optimizer-state server: sharded, batched gradient
+//!   ingestion over the `SMMFWIRE` binary protocol (`repro serve` /
+//!   `repro loadgen`).
 
 pub mod coordinator;
 pub mod data;
 pub mod models;
 pub mod optim;
 pub mod runtime;
+pub mod server;
 pub mod tensor;
 pub mod train;
 pub mod util;

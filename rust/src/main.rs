@@ -14,6 +14,9 @@
 //! repro report runs/smoke        # re-render docs/RESULTS.md from a suite dir
 //! repro dp --workers 2           # data-parallel demo
 //! repro fused --steps 50         # compiled (Pallas) SMMF train step
+//! repro ablate                   # SMMF design ablations
+//! repro serve --shards 2 --clients 4     # optimizer-state server
+//! repro loadgen --clients 4 --steps 50   # drive it + bench it
 //! ```
 
 use anyhow::{anyhow, bail, Result};
@@ -73,12 +76,15 @@ fn run(args: &Args) -> Result<()> {
         "dp" => cmd_dp(args),
         "fused" => cmd_fused(args),
         "ablate" => cmd_ablate(args),
+        "serve" => cmd_serve(args),
+        "loadgen" => cmd_loadgen(args),
         other => bail!("unknown command {other} (try `repro help`)"),
     }
 }
 
 const HELP: &str = "repro — SMMF (AAAI 2025) reproduction
 commands:
+  help              this message
   list              artifacts and model inventories (+ per-role breakdown)
   memory --table T  memory columns (table1..table4, table6..table13, all)
   tableN            shortcut for `memory --table tableN`
@@ -103,6 +109,20 @@ commands:
   fused             compiled whole-train-step (Pallas SMMF) demo
   ablate            SMMF design ablations (scheme / sign width /
                     matricization / vector_reshape) on the LM workload
+  serve             optimizer-state server: sharded, batched gradient
+                    ingestion over the SMMFWIRE binary protocol
+                    (--model synthetic:tiny_lm, --shards K, --clients N,
+                    --addr HOST:PORT, --max-pending Q, [server] TOML;
+                    stops on a client Shutdown op; see
+                    docs/SERVER_PROTOCOL.md)
+  loadgen           drive a state server with N concurrent gradient
+                    clients and emit throughput + p50/p99 push latency
+                    (--clients N, --steps S; self-spawns a loopback
+                    server [--shards K] unless --connect HOST:PORT;
+                    --snapshot PATH, --check [assert the snapshot is
+                    bit-identical to the single-process reference
+                    trainer], --bench-json PATH [default
+                    BENCH_server.json])
 common flags: --artifacts DIR (default ./artifacts), --seed N,
               --threads N (parallel optimizer step engine; 1 = serial),
               --save-every N / --resume PATH (SMMFCKPT v2 checkpoints;
@@ -444,6 +464,185 @@ fn cmd_ablate(args: &Args) -> Result<()> {
         "{}",
         fmt::render_table(&["variant", "final loss", "ms/step", "opt state"], &rows)
     );
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    use smmf_repro::server::{ServeOptions, Server};
+    let cfg = base_config(args)?;
+    let opts = ServeOptions::load(args)?;
+    let server = Server::start(&cfg, &opts)?;
+    println!(
+        "[serve] {} on {} — {} shard(s), step barrier over {} client(s), optimizer {}",
+        opts.model,
+        server.addr,
+        opts.shards,
+        opts.clients,
+        cfg.optimizer.name()
+    );
+    println!("[serve] drive it with `repro loadgen --connect {}` (a Shutdown op stops it)", server.addr);
+    let stats = server.wait()?;
+    println!(
+        "[serve] stopped at step {} — {} pushes, {} busy bounces, {} snapshot(s)",
+        stats.step, stats.pushes, stats.busy, stats.snapshots
+    );
+    Ok(())
+}
+
+/// Default `BENCH_server.json` location: repo-root-relative from the
+/// repo root, `../`-prefixed from `rust/` (same rule as the report
+/// paths).
+fn default_server_bench() -> String {
+    if Path::new("docs").is_dir() || !Path::new("../docs").is_dir() {
+        "BENCH_server.json".into()
+    } else {
+        "../BENCH_server.json".into()
+    }
+}
+
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use smmf_repro::server::{self as srv, ServeOptions};
+    use smmf_repro::util::bench::JsonSink;
+    use smmf_repro::util::json::ObjBuilder;
+
+    let cfg = base_config(args)?;
+    // Strictly validated (not silently defaulted): a typo'd --steps must
+    // not quietly drive the wrong number of steps.
+    let steps = args.count_or("steps", 50).map_err(|e| anyhow!(e))? as u64;
+    let mut opts = ServeOptions::load(args)?;
+    let check = args.has_flag("check");
+    if check && args.opt("connect").is_some() {
+        bail!(
+            "--check needs a self-spawned server (omit --connect): the snapshot is \
+             written on the server host, so the byte-compare against the local \
+             reference trainer is only meaningful when both share this process's \
+             working directory and config"
+        );
+    }
+    let snapshot_was_temp = check && args.opt("snapshot").is_none();
+    let snapshot: Option<String> = args.opt("snapshot").map(String::from).or_else(|| {
+        check.then(|| {
+            std::env::temp_dir()
+                .join(format!("smmf_loadgen_{}.bin", std::process::id()))
+                .to_string_lossy()
+                .into_owned()
+        })
+    });
+
+    // Self-spawn a loopback server unless --connect points elsewhere.
+    let external = args.opt("connect").map(String::from);
+    let (addr, server) = match &external {
+        Some(a) => (a.clone(), None),
+        None => {
+            if args.opt("addr").is_none() {
+                opts.addr = "127.0.0.1:0".into();
+            }
+            let server = srv::Server::start(&cfg, &opts)?;
+            (server.addr.to_string(), Some(server))
+        }
+    };
+
+    let inv_name =
+        opts.model.strip_prefix("synthetic:").unwrap_or(&opts.model).to_string();
+    let shapes = srv::resolve_inventory(&opts.model)?.shapes();
+    println!(
+        "[loadgen] {} client(s) × {} steps on {} against {} ({} shard(s), optimizer {})",
+        opts.clients,
+        steps,
+        opts.model,
+        addr,
+        opts.shards,
+        cfg.optimizer.name()
+    );
+    let report = srv::run_loadgen(
+        &addr,
+        &shapes,
+        cfg.seed,
+        &srv::LoadgenOptions { clients: opts.clients, steps },
+    )?;
+
+    // Control connection: snapshot + stats, then stop a self-spawned
+    // server (an external server keeps running).
+    let mut ctl = srv::Client::connect(&addr)?;
+    let snap_bytes = match &snapshot {
+        Some(path) => Some(ctl.snapshot(path)?),
+        None => None,
+    };
+    let stats = ctl.stats()?;
+    if server.is_some() {
+        ctl.shutdown()?;
+    }
+    if let Some(s) = server {
+        s.wait()?;
+    }
+
+    println!(
+        "[loadgen] {} steps in {:.2}s — {:.1} steps/s; push latency p50 {:.3} ms  p99 {:.3} ms  mean {:.3} ms",
+        report.steps, report.elapsed_s, report.steps_per_s, report.push_p50_ms,
+        report.push_p99_ms, report.push_mean_ms
+    );
+    println!(
+        "[loadgen] {} pushes accepted, {} busy retries (client), {} busy bounces (server), final loss {:.4}",
+        report.pushes, report.busy_retries, stats.busy, report.final_loss
+    );
+    if let (Some(path), Some(bytes)) = (&snapshot, snap_bytes) {
+        let locus = if external.is_some() { " on the server host" } else { "" };
+        println!("[loadgen] snapshot -> {path}{locus} ({} bytes, SMMFCKPT v2)", bytes);
+    }
+
+    let bench_path = args.str_or("bench-json", &default_server_bench());
+    let mut sink = JsonSink::new("server_loadgen", &bench_path);
+    sink.push(
+        ObjBuilder::new()
+            .str("name", &format!("loadgen/{inv_name}"))
+            .str("model", &opts.model)
+            .str("optimizer", cfg.optimizer.name())
+            .num("shards", opts.shards as f64)
+            .num("clients", opts.clients as f64)
+            .num("steps", report.steps as f64)
+            .num("steps_per_s", report.steps_per_s)
+            .num("push_p50_ms", report.push_p50_ms)
+            .num("push_p99_ms", report.push_p99_ms)
+            .num("push_mean_ms", report.push_mean_ms)
+            .num("pushes", report.pushes as f64)
+            .num("busy", stats.busy as f64)
+            .num("final_loss", report.final_loss as f64)
+            .build(),
+    );
+    sink.write()?;
+    println!("[loadgen] bench record -> {bench_path}");
+
+    if check {
+        let snap = snapshot.as_ref().expect("--check implies a snapshot path");
+        let ref_path = format!("{snap}.ref");
+        let ref_loss =
+            srv::reference_checkpoint(&cfg, &opts.model, opts.clients, steps, Path::new(&ref_path))?;
+        let got = std::fs::read(snap)?;
+        let want = std::fs::read(&ref_path)?;
+        if got != want {
+            bail!(
+                "determinism contract broken: snapshot {snap} ({} bytes) differs from the \
+                 single-process reference {ref_path} ({} bytes)",
+                got.len(),
+                want.len()
+            );
+        }
+        if ref_loss.to_bits() != report.final_loss.to_bits() {
+            bail!(
+                "loadgen final loss {} != reference final loss {ref_loss}",
+                report.final_loss
+            );
+        }
+        std::fs::remove_file(&ref_path).ok();
+        if snapshot_was_temp {
+            std::fs::remove_file(snap).ok();
+        }
+        println!(
+            "[loadgen] check OK: {}-shard × {}-client snapshot is bit-identical to the \
+             single-process reference trainer",
+            opts.shards, opts.clients
+        );
+    }
     Ok(())
 }
 

@@ -484,6 +484,31 @@ pub fn build_grouped(
     build_with_policies(kind, &shapes, &gcfg.base, &res.tensor)
 }
 
+/// Construct an optimizer over a *subset* of a resolved inventory: the
+/// tensors named by `indices` (ascending positions into
+/// `shapes`/`policies`), carrying their already-resolved per-tensor
+/// policies. This is the shard-aware build path of the optimizer-state
+/// server (`crate::server::shard`): each shard owns the state for its
+/// tensor subset, and because every optimizer here updates tensors
+/// independently (only the internal step counter is shared, and each
+/// shard advances it identically), the sharded trajectory is
+/// bit-identical, tensor by tensor, to a single optimizer over the full
+/// inventory. Group overrides (`StatePolicy`, lr scale, weight decay,
+/// frozen) survive sharding because the policy table travels with the
+/// subset.
+pub fn build_subset(
+    kind: OptKind,
+    shapes: &[Vec<usize>],
+    cfg: &OptimConfig,
+    policies: &[TensorPolicy],
+    indices: &[usize],
+) -> Box<dyn Optimizer> {
+    assert_eq!(shapes.len(), policies.len(), "one policy per tensor");
+    let sub_shapes: Vec<Vec<usize>> = indices.iter().map(|&i| shapes[i].clone()).collect();
+    let sub_policies: Vec<TensorPolicy> = indices.iter().map(|&i| policies[i]).collect();
+    build_with_policies(kind, &sub_shapes, cfg, &sub_policies)
+}
+
 /// Construct from an already-resolved per-tensor policy table (the
 /// common substrate of [`build`] and [`build_grouped`]; useful when the
 /// caller also needs the [`group::Resolution`] — e.g. for the checkpoint

@@ -1,0 +1,227 @@
+//! Gradient coalescing: the per-step barrier that makes a K-shard,
+//! N-client server bit-identical to the single-process trainer.
+//!
+//! Clients push complete gradient sets tagged with `(client id, step)`.
+//! The [`StepBatcher`] holds them until every client `0..N` has pushed
+//! for the current step (the *step barrier*), then combines them into
+//! one coalesced gradient by accumulating `(1/N)·g_c` **in ascending
+//! client-id order** onto a zero buffer. Floating-point addition is not
+//! associative, so pinning the reduction order — rather than coalescing
+//! in arrival order — is what makes the applied step independent of
+//! network timing: any interleaving of pushes produces the same bits.
+//! The single-process reference trainer
+//! (`server::service::reference_checkpoint`) performs the identical
+//! reduction, which is what the snapshot bit-identity e2e asserts.
+//!
+//! The batcher is pure bookkeeping (no threads, no IO), so the barrier
+//! logic is unit-testable in isolation.
+
+use crate::tensor::Tensor;
+
+/// Outcome of offering one client push to the current step's barrier.
+#[derive(Debug, PartialEq)]
+pub enum Offer {
+    /// Stored; the barrier still waits for other clients.
+    Accepted,
+    /// Stored, and this push completed the barrier — the caller must now
+    /// [`StepBatcher::take_coalesced`] and apply the step.
+    Completed,
+    /// Rejected (unknown client, wrong step, duplicate, bad shapes); the
+    /// barrier state is unchanged.
+    Rejected(String),
+}
+
+/// Accumulates per-client gradient pushes for one step at a time.
+pub struct StepBatcher {
+    n_clients: usize,
+    shapes: Vec<Vec<usize>>,
+    /// The step currently being assembled (first step is 1).
+    step: u64,
+    pending: Vec<Option<Vec<Tensor>>>,
+    received: usize,
+}
+
+impl StepBatcher {
+    /// A barrier over clients `0..n_clients` pushing gradients for the
+    /// given tensor shapes (inventory registration order).
+    pub fn new(n_clients: usize, shapes: Vec<Vec<usize>>) -> StepBatcher {
+        assert!(n_clients >= 1, "barrier needs at least one client");
+        StepBatcher {
+            n_clients,
+            shapes,
+            step: 1,
+            pending: (0..n_clients).map(|_| None).collect(),
+            received: 0,
+        }
+    }
+
+    /// The step currently being assembled (= applied steps + 1).
+    pub fn pending_step(&self) -> u64 {
+        self.step
+    }
+
+    /// Steps fully applied so far.
+    pub fn applied_step(&self) -> u64 {
+        self.step - 1
+    }
+
+    /// Offer client `client`'s gradient set for `step`. Flat per-tensor
+    /// data is validated against the inventory shapes before it is
+    /// stored.
+    pub fn offer(&mut self, client: u32, step: u64, grads: Vec<Vec<f32>>) -> Offer {
+        let c = client as usize;
+        if c >= self.n_clients {
+            return Offer::Rejected(format!(
+                "unknown client {client} (barrier width {})",
+                self.n_clients
+            ));
+        }
+        if step != self.step {
+            return Offer::Rejected(format!(
+                "push for step {step}, server is assembling step {}",
+                self.step
+            ));
+        }
+        if self.pending[c].is_some() {
+            return Offer::Rejected(format!("client {client} already pushed for step {step}"));
+        }
+        if grads.len() != self.shapes.len() {
+            return Offer::Rejected(format!(
+                "push holds {} tensors, inventory has {}",
+                grads.len(),
+                self.shapes.len()
+            ));
+        }
+        let mut tensors = Vec::with_capacity(grads.len());
+        for (i, (data, shape)) in grads.into_iter().zip(&self.shapes).enumerate() {
+            let numel: usize = shape.iter().product();
+            if data.len() != numel {
+                return Offer::Rejected(format!(
+                    "tensor {i}: push holds {} elements, shape {shape:?} needs {numel}",
+                    data.len()
+                ));
+            }
+            tensors.push(Tensor::from_vec(shape, data));
+        }
+        self.pending[c] = Some(tensors);
+        self.received += 1;
+        if self.received == self.n_clients {
+            Offer::Completed
+        } else {
+            Offer::Accepted
+        }
+    }
+
+    /// Drain the completed barrier into the coalesced gradient
+    /// (`Σ_c g_c / N`, accumulated in ascending client-id order) and
+    /// advance to the next step. Panics if the barrier is incomplete —
+    /// callers only reach this after [`Offer::Completed`].
+    pub fn take_coalesced(&mut self) -> Vec<Tensor> {
+        assert_eq!(self.received, self.n_clients, "barrier incomplete");
+        let scale = 1.0 / self.n_clients as f32;
+        let mut out: Vec<Tensor> = self.shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        for slot in self.pending.iter_mut() {
+            let grads = slot.take().expect("complete barrier has every slot");
+            for (acc, g) in out.iter_mut().zip(&grads) {
+                acc.axpy(scale, g);
+            }
+        }
+        self.received = 0;
+        self.step += 1;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shapes() -> Vec<Vec<usize>> {
+        vec![vec![2, 2], vec![3]]
+    }
+
+    fn grads_for(c: u32) -> Vec<Vec<f32>> {
+        let b = c as f32;
+        vec![vec![b, b + 0.5, -b, 1.0], vec![0.25 * b, -1.0, b]]
+    }
+
+    #[test]
+    fn barrier_completes_and_coalesces_in_client_order() {
+        let mut b = StepBatcher::new(3, shapes());
+        assert_eq!(b.pending_step(), 1);
+        assert_eq!(b.applied_step(), 0);
+        // arrival order 2, 0, 1 — must not matter
+        assert_eq!(b.offer(2, 1, grads_for(2)), Offer::Accepted);
+        assert_eq!(b.offer(0, 1, grads_for(0)), Offer::Accepted);
+        assert_eq!(b.offer(1, 1, grads_for(1)), Offer::Completed);
+        let out = b.take_coalesced();
+        assert_eq!(b.pending_step(), 2);
+
+        // reference reduction: fixed client order 0, 1, 2
+        let mut want: Vec<Tensor> = shapes().iter().map(|s| Tensor::zeros(s)).collect();
+        for c in 0..3u32 {
+            let g = grads_for(c);
+            for (w, (data, shape)) in want.iter_mut().zip(g.iter().zip(shapes().iter())) {
+                w.axpy(1.0 / 3.0, &Tensor::from_vec(shape, data.clone()));
+            }
+        }
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn arrival_order_never_changes_the_bits() {
+        let orders: [[u32; 3]; 3] = [[0, 1, 2], [2, 1, 0], [1, 2, 0]];
+        let mut results = Vec::new();
+        for order in orders {
+            let mut b = StepBatcher::new(3, shapes());
+            for &c in &order[..2] {
+                assert_eq!(b.offer(c, 1, grads_for(c)), Offer::Accepted);
+            }
+            assert_eq!(b.offer(order[2], 1, grads_for(order[2])), Offer::Completed);
+            results.push(b.take_coalesced());
+        }
+        assert_eq!(results[0], results[1]);
+        assert_eq!(results[1], results[2]);
+    }
+
+    #[test]
+    fn rejects_bad_pushes_without_disturbing_the_barrier() {
+        let mut b = StepBatcher::new(2, shapes());
+        assert_eq!(b.offer(0, 1, grads_for(0)), Offer::Accepted);
+        // duplicate client
+        assert!(matches!(b.offer(0, 1, grads_for(0)), Offer::Rejected(_)));
+        // unknown client
+        assert!(matches!(b.offer(9, 1, grads_for(1)), Offer::Rejected(_)));
+        // wrong step
+        assert!(matches!(b.offer(1, 2, grads_for(1)), Offer::Rejected(_)));
+        // wrong tensor count
+        assert!(matches!(b.offer(1, 1, vec![vec![1.0]]), Offer::Rejected(_)));
+        // wrong element count
+        let mut bad = grads_for(1);
+        bad[1].pop();
+        assert!(matches!(b.offer(1, 1, bad), Offer::Rejected(_)));
+        // the good push still completes the barrier
+        assert_eq!(b.offer(1, 1, grads_for(1)), Offer::Completed);
+        b.take_coalesced();
+        // next step accepts the same clients again
+        assert_eq!(b.offer(0, 2, grads_for(0)), Offer::Accepted);
+    }
+
+    #[test]
+    fn single_client_barrier_is_immediate() {
+        let mut b = StepBatcher::new(1, shapes());
+        assert_eq!(b.offer(0, 1, grads_for(5)), Offer::Completed);
+        let out = b.take_coalesced();
+        // N = 1: coalesced = 0 + 1.0 * g
+        let want: Vec<Tensor> = grads_for(5)
+            .into_iter()
+            .zip(shapes())
+            .map(|(d, s)| {
+                let mut t = Tensor::zeros(&s);
+                t.axpy(1.0, &Tensor::from_vec(&s, d));
+                t
+            })
+            .collect();
+        assert_eq!(out, want);
+    }
+}

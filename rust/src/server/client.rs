@@ -1,0 +1,193 @@
+//! Client side of the optimizer-state server: a blocking wire client
+//! plus the deterministic synthetic gradient workload shared by the
+//! load generator and the single-process reference trainer.
+
+use anyhow::{anyhow, bail, Result};
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::server::protocol::{self, Frame, Msg, ServerStats};
+use crate::tensor::Tensor;
+use crate::util::rng::Pcg32;
+
+/// A blocking request/reply connection to a state server. One request
+/// is outstanding at a time (the protocol is strictly request → reply
+/// per connection).
+pub struct Client {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+    /// `Busy` bounces absorbed by [`Client::call_retry`].
+    pub busy_retries: u64,
+}
+
+impl Client {
+    /// Connect to `addr` (e.g. `127.0.0.1:7070`).
+    pub fn connect(addr: &str) -> Result<Client> {
+        let stream = TcpStream::connect(addr).map_err(|e| anyhow!("connecting {addr}: {e}"))?;
+        stream.set_nodelay(true).ok();
+        let reader = BufReader::new(stream.try_clone()?);
+        Ok(Client { reader, writer: BufWriter::new(stream), next_id: 1, busy_retries: 0 })
+    }
+
+    /// Send one request and wait for its reply. The reply's request id
+    /// must echo the request's (the per-connection protocol is strictly
+    /// sequential, so a mismatch means a framing bug).
+    pub fn call(&mut self, msg: Msg) -> Result<Msg> {
+        let id = self.next_id;
+        self.next_id += 1;
+        protocol::write_frame(&mut self.writer, &Frame { request_id: id, msg })?;
+        let reply = protocol::read_frame(&mut self.reader)?;
+        if reply.request_id != id {
+            bail!("reply for request {} while waiting on {id}", reply.request_id);
+        }
+        Ok(reply.msg)
+    }
+
+    /// [`Client::call`], transparently retrying [`Msg::Busy`] bounces
+    /// (the server's bounded-queue backpressure) with a short sleep.
+    pub fn call_retry(&mut self, msg: Msg) -> Result<Msg> {
+        loop {
+            match self.call(msg.clone())? {
+                Msg::Busy => {
+                    self.busy_retries += 1;
+                    std::thread::sleep(Duration::from_micros(200));
+                }
+                reply => return Ok(reply),
+            }
+        }
+    }
+
+    /// Pull the current parameters: `(applied step, flat tensor data)`.
+    pub fn pull_params(&mut self) -> Result<(u64, Vec<Vec<f32>>)> {
+        match self.call_retry(Msg::PullParams)? {
+            Msg::Params { step, tensors } => Ok((step, tensors)),
+            other => bail!("PullParams answered with {}", other.name()),
+        }
+    }
+
+    /// Push this client's gradient set for `step`; blocks until the step
+    /// barrier completes and the coalesced step is applied.
+    pub fn push_grad(&mut self, client: u32, step: u64, grads: Vec<Vec<f32>>) -> Result<u64> {
+        match self.call_retry(Msg::PushGrad { client, step, grads })? {
+            Msg::Ack { step: applied } => Ok(applied),
+            Msg::Err { msg } => bail!("PushGrad rejected: {msg}"),
+            other => bail!("PushGrad answered with {}", other.name()),
+        }
+    }
+
+    /// Ask the server to write a snapshot; returns the on-disk bytes.
+    pub fn snapshot(&mut self, path: &str) -> Result<u64> {
+        if path.is_empty() || path.len() > protocol::MAX_STR_LEN {
+            bail!(
+                "snapshot path must be 1..={} bytes (got {})",
+                protocol::MAX_STR_LEN,
+                path.len()
+            );
+        }
+        match self.call_retry(Msg::Snapshot { path: path.to_string() })? {
+            Msg::SnapshotDone { bytes } => Ok(bytes),
+            Msg::Err { msg } => bail!("Snapshot rejected: {msg}"),
+            other => bail!("Snapshot answered with {}", other.name()),
+        }
+    }
+
+    /// Fetch the server's counters.
+    pub fn stats(&mut self) -> Result<ServerStats> {
+        match self.call_retry(Msg::Stats)? {
+            Msg::StatsReply(s) => Ok(s),
+            other => bail!("Stats answered with {}", other.name()),
+        }
+    }
+
+    /// Stop the server.
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.call_retry(Msg::Shutdown)? {
+            Msg::Bye => Ok(()),
+            other => bail!("Shutdown answered with {}", other.name()),
+        }
+    }
+}
+
+/// The deterministic synthetic gradient workload: the noisy quadratic
+/// well of `coordinator::experiments::run_synthetic_experiment`, split
+/// across clients. Targets `θ*` are a function of the seed only (every
+/// client optimizes the same well); the gradient noise stream is keyed
+/// by `(seed, client)` so concurrent clients push distinct but fully
+/// reproducible gradients. The single-process reference trainer
+/// instantiates the same sources with the same keys, which is what makes
+/// the server snapshot bit-comparable.
+pub struct GradSource {
+    targets: Vec<Tensor>,
+    noise: Pcg32,
+    n_total: f64,
+}
+
+/// Gradient noise scale (matches the synthetic suite workload).
+pub const NOISE_SIGMA: f32 = 0.01;
+
+impl GradSource {
+    /// Workload for `client` under `seed` over the inventory shapes.
+    pub fn new(shapes: &[Vec<usize>], seed: u64, client: u32) -> GradSource {
+        let mut target_rng = Pcg32::new(seed ^ 0x7a67);
+        let targets: Vec<Tensor> = shapes
+            .iter()
+            .map(|s| {
+                let mut t = Tensor::zeros(s);
+                target_rng.fill_normal(t.data_mut(), 0.5);
+                t
+            })
+            .collect();
+        // Distinct PCG stream per client: same seed, different inc.
+        let noise = Pcg32::with_stream(seed ^ 0xda7a, 0x6f5e_ed00 + client as u64);
+        let n_total = shapes.iter().map(|s| s.iter().product::<usize>() as f64).sum();
+        GradSource { targets, noise, n_total }
+    }
+
+    /// Compute this client's gradient set at `params` (flat per-tensor
+    /// data, inventory order): `g = (θ − θ*) + σ·ξ` with deterministic
+    /// noise. Returns `(loss, grads)`; the loss is the exact quadratic
+    /// objective (noise-free), for reporting.
+    pub fn grads(&mut self, params: &[Vec<f32>]) -> Result<(f32, Vec<Vec<f32>>)> {
+        if params.len() != self.targets.len() {
+            bail!("pulled {} tensors, workload has {}", params.len(), self.targets.len());
+        }
+        let mut loss_acc = 0.0f64;
+        let mut out = Vec::with_capacity(params.len());
+        for (p, t) in params.iter().zip(&self.targets) {
+            let td = t.data();
+            if p.len() != td.len() {
+                bail!("pulled tensor holds {} elements, workload expects {}", p.len(), td.len());
+            }
+            let mut g = Vec::with_capacity(p.len());
+            for (&pv, &tv) in p.iter().zip(td) {
+                let r = pv - tv;
+                loss_acc += 0.5 * (r as f64) * (r as f64);
+                g.push(r + NOISE_SIGMA * self.noise.normal());
+            }
+            out.push(g);
+        }
+        Ok(((loss_acc / self.n_total) as f32, out))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grad_source_is_deterministic_and_client_keyed() {
+        let shapes = vec![vec![3, 2], vec![4]];
+        let params: Vec<Vec<f32>> = vec![vec![0.0; 6], vec![0.1; 4]];
+        let (l1, g1) = GradSource::new(&shapes, 7, 0).grads(&params).unwrap();
+        let (l2, g2) = GradSource::new(&shapes, 7, 0).grads(&params).unwrap();
+        assert_eq!((l1, &g1), (l2, &g2));
+        // different clients share the loss surface but not the noise
+        let (l3, g3) = GradSource::new(&shapes, 7, 1).grads(&params).unwrap();
+        assert_eq!(l1, l3);
+        assert_ne!(g1, g3);
+        // shape mismatch errors
+        assert!(GradSource::new(&shapes, 7, 0).grads(&params[..1]).is_err());
+    }
+}

@@ -1,0 +1,47 @@
+//! The optimizer-state server: a parameter-server-style service that
+//! holds SMMF-factorized (or any baseline) optimizer state behind a
+//! binary wire protocol, sharded across worker threads, with batched
+//! gradient ingestion.
+//!
+//! SMMF's point is that factored momenta make optimizer state small
+//! enough to hold and move cheaply — which makes it the natural backing
+//! store for a long-running service where many clients stream gradients
+//! against shared state. The subsystem is four layers, each its own
+//! module:
+//!
+//! * [`protocol`] — the `SMMFWIRE` versioned, length-prefixed binary
+//!   framing (`PushGrad` / `PullParams` / `Snapshot` / `Stats` /
+//!   `Shutdown`), decoded with the same strict bounds-checked discipline
+//!   as the checkpoint container.
+//! * [`batch`] — gradient coalescing: concurrent client pushes
+//!   accumulate behind a per-step barrier and reduce in fixed client-id
+//!   order, so the applied step is independent of network timing.
+//! * [`shard`] — the inventory partitioned across K worker threads by
+//!   the FLOP-balancing planner, each shard owning its optimizer state
+//!   (built through the param-group table, so per-shard `StatePolicy`
+//!   overrides work).
+//! * [`service`] / [`client`] — the TCP accept loop with a bounded
+//!   request queue and explicit `Busy` backpressure, the snapshot writer
+//!   (reusing the atomic `SMMFCKPT` v2 checkpoint path), the blocking
+//!   wire client, the load generator, and the single-process reference
+//!   trainer that the determinism contract is pinned against.
+//!
+//! End-to-end guarantee: a K-shard server driven by N concurrent
+//! clients writes snapshots **bit-identical** to the equivalent
+//! single-process trainer, for any K and N. `repro serve` / `repro
+//! loadgen` expose the subsystem on the CLI; `docs/SERVER_PROTOCOL.md`
+//! has the byte-level wire spec.
+
+pub mod batch;
+pub mod client;
+pub mod protocol;
+pub mod service;
+pub mod shard;
+
+pub use client::{Client, GradSource};
+pub use protocol::{Frame, Msg, ServerStats};
+pub use service::{
+    reference_checkpoint, resolve_inventory, run_loadgen, LoadgenOptions, LoadgenReport,
+    ServeOptions, Server,
+};
+pub use shard::{plan_shards, ShardPlan, ShardSet};

@@ -1,0 +1,435 @@
+//! The `SMMFWIRE` binary wire protocol: versioned, length-prefixed
+//! framing for the optimizer-state server.
+//!
+//! Every message travels as one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"SMMFWIRE"
+//! 8       4     u32    protocol version (= 1)
+//! 12      8     u64    request id (replies echo the request's id)
+//! 20      1     u8     op code (see the OP_* constants)
+//! 21      8     u64    payload length in bytes (<= MAX_PAYLOAD)
+//! 29      len   op-specific payload
+//! ```
+//!
+//! All multi-byte values are little-endian, encoded/decoded with the
+//! checkpoint blob codec (`optim::blob`). Decoding follows the same
+//! strict discipline as `SMMFCKPT` loading: magic/version/op are
+//! validated before the payload is touched, the payload length is capped
+//! before any allocation, every per-tensor element count is checked
+//! against the bytes actually remaining *before* the buffer is
+//! allocated, and trailing payload bytes are rejected — a truncated or
+//! hostile frame produces a context-rich error, never a panic or an
+//! unbounded allocation. The byte-level spec lives in
+//! `docs/SERVER_PROTOCOL.md`; changing any layout here requires a
+//! version bump and a spec update.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+use crate::optim::blob::{BlobReader, BlobWriter};
+
+/// Frame magic (8 bytes, never changes).
+pub const MAGIC: &[u8; 8] = b"SMMFWIRE";
+/// Current protocol version. Bump on any layout change.
+pub const VERSION: u32 = 1;
+/// Fixed frame header size: magic + version + request id + op + length.
+pub const HEADER_LEN: usize = 8 + 4 + 8 + 1 + 8;
+/// Hard payload cap: a frame may never ask the peer to buffer more.
+pub const MAX_PAYLOAD: u64 = 256 << 20;
+/// Per-frame tensor-count cap (mirrors the checkpoint loader's cap).
+pub const MAX_TENSORS: usize = 1 << 20;
+/// Snapshot-path / error-string length cap.
+pub const MAX_STR_LEN: usize = 4096;
+
+/// Request op codes (client -> server).
+pub const OP_PUSH_GRAD: u8 = 1;
+pub const OP_PULL_PARAMS: u8 = 2;
+pub const OP_SNAPSHOT: u8 = 3;
+pub const OP_STATS: u8 = 4;
+pub const OP_SHUTDOWN: u8 = 5;
+/// Reply op codes (server -> client) live in a disjoint range so a
+/// misdirected frame can never be confused for a request.
+pub const OP_ACK: u8 = 64;
+pub const OP_PARAMS: u8 = 65;
+pub const OP_SNAPSHOT_DONE: u8 = 66;
+pub const OP_STATS_REPLY: u8 = 67;
+pub const OP_BUSY: u8 = 68;
+pub const OP_BYE: u8 = 69;
+pub const OP_ERR: u8 = 70;
+
+/// Server-side counters returned by [`Msg::Stats`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServerStats {
+    /// Optimizer steps applied so far.
+    pub step: u64,
+    /// Shard (state-owner worker) count.
+    pub shards: u32,
+    /// Barrier width: gradient pushes per step.
+    pub clients: u32,
+    /// Total accepted `PushGrad` requests.
+    pub pushes: u64,
+    /// Requests bounced with [`Msg::Busy`] (request queue full).
+    pub busy: u64,
+    /// Snapshots written.
+    pub snapshots: u64,
+}
+
+/// One protocol message (request or reply).
+#[derive(Clone, Debug, PartialEq)]
+pub enum Msg {
+    /// Client `client` pushes its gradient set for optimizer step `step`
+    /// (flat f32 data per tensor, inventory registration order). The
+    /// reply — [`Msg::Ack`] — is deferred until the step barrier
+    /// completes and the coalesced step has been applied.
+    PushGrad { client: u32, step: u64, grads: Vec<Vec<f32>> },
+    /// Fetch the current parameters; replied with [`Msg::Params`].
+    PullParams,
+    /// Write a `SMMFCKPT` v2 snapshot to `path` on the server host;
+    /// replied with [`Msg::SnapshotDone`].
+    Snapshot { path: String },
+    /// Fetch [`ServerStats`]; replied with [`Msg::StatsReply`].
+    Stats,
+    /// Stop the server; replied with [`Msg::Bye`].
+    Shutdown,
+    /// `PushGrad` accepted and applied; `step` is the step just applied.
+    Ack { step: u64 },
+    /// Current parameters after `step` applied steps.
+    Params { step: u64, tensors: Vec<Vec<f32>> },
+    /// Snapshot written (`bytes` = on-disk size).
+    SnapshotDone { bytes: u64 },
+    /// Stats reply.
+    StatsReply(ServerStats),
+    /// Backpressure: the server's bounded request queue is full — retry.
+    Busy,
+    /// Shutdown acknowledged; the connection closes after this frame.
+    Bye,
+    /// Request rejected (unknown client, wrong step, bad shapes, …).
+    Err { msg: String },
+}
+
+impl Msg {
+    /// The wire op code of this message.
+    pub fn op(&self) -> u8 {
+        match self {
+            Msg::PushGrad { .. } => OP_PUSH_GRAD,
+            Msg::PullParams => OP_PULL_PARAMS,
+            Msg::Snapshot { .. } => OP_SNAPSHOT,
+            Msg::Stats => OP_STATS,
+            Msg::Shutdown => OP_SHUTDOWN,
+            Msg::Ack { .. } => OP_ACK,
+            Msg::Params { .. } => OP_PARAMS,
+            Msg::SnapshotDone { .. } => OP_SNAPSHOT_DONE,
+            Msg::StatsReply(_) => OP_STATS_REPLY,
+            Msg::Busy => OP_BUSY,
+            Msg::Bye => OP_BYE,
+            Msg::Err { .. } => OP_ERR,
+        }
+    }
+
+    /// Human-readable op name (logs and error contexts).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Msg::PushGrad { .. } => "PushGrad",
+            Msg::PullParams => "PullParams",
+            Msg::Snapshot { .. } => "Snapshot",
+            Msg::Stats => "Stats",
+            Msg::Shutdown => "Shutdown",
+            Msg::Ack { .. } => "Ack",
+            Msg::Params { .. } => "Params",
+            Msg::SnapshotDone { .. } => "SnapshotDone",
+            Msg::StatsReply(_) => "StatsReply",
+            Msg::Busy => "Busy",
+            Msg::Bye => "Bye",
+            Msg::Err { .. } => "Err",
+        }
+    }
+}
+
+/// One wire frame: a request id plus the message.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Frame {
+    pub request_id: u64,
+    pub msg: Msg,
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+// ---------------------------------------------------------------------------
+
+fn write_tensor_list(w: &mut BlobWriter, tensors: &[Vec<f32>]) {
+    w.u32(tensors.len() as u32);
+    for t in tensors {
+        w.len_prefixed_f32s(t);
+    }
+}
+
+fn write_str(w: &mut BlobWriter, s: &str) {
+    w.u32(s.len() as u32);
+    w.bytes(s.as_bytes());
+}
+
+/// Clip a string to [`MAX_STR_LEN`] bytes on a char boundary. Applied to
+/// outgoing `Err` messages (anyhow chains can exceed the cap; a reply
+/// the peer's decoder rejects would kill the connection and hide the
+/// real error). Snapshot paths are *not* clipped — a silently truncated
+/// path is worse than a rejected frame, so over-long paths are refused
+/// at the client instead.
+fn clip_str(s: &str) -> &str {
+    if s.len() <= MAX_STR_LEN {
+        return s;
+    }
+    let mut end = MAX_STR_LEN;
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    &s[..end]
+}
+
+fn payload(msg: &Msg) -> Vec<u8> {
+    let mut w = BlobWriter::new();
+    match msg {
+        Msg::PushGrad { client, step, grads } => {
+            w.u32(*client);
+            w.u64(*step);
+            write_tensor_list(&mut w, grads);
+        }
+        Msg::PullParams | Msg::Stats | Msg::Shutdown | Msg::Busy | Msg::Bye => {}
+        Msg::Snapshot { path } => write_str(&mut w, path),
+        Msg::Ack { step } => w.u64(*step),
+        Msg::Params { step, tensors } => {
+            w.u64(*step);
+            write_tensor_list(&mut w, tensors);
+        }
+        Msg::SnapshotDone { bytes } => w.u64(*bytes),
+        Msg::StatsReply(s) => {
+            w.u64(s.step);
+            w.u32(s.shards);
+            w.u32(s.clients);
+            w.u64(s.pushes);
+            w.u64(s.busy);
+            w.u64(s.snapshots);
+        }
+        Msg::Err { msg } => write_str(&mut w, clip_str(msg)),
+    }
+    w.finish()
+}
+
+/// Wire payload size of a `PushGrad` frame over the given shapes — the
+/// largest message either side ever sends for an inventory (a `Params`
+/// reply's prefix is `u64 step` + `u32 count` vs PushGrad's `u32
+/// client` + `u64 step` + `u32 count`, i.e. 4 bytes smaller). Servers and load generators check this
+/// against [`MAX_PAYLOAD`] up front, so an inventory too large for the
+/// wire fails with a clear error at startup instead of an assert on the
+/// first push.
+pub fn grads_payload_bytes(shapes: &[Vec<usize>]) -> u64 {
+    // client u32 + step u64 + tensor count u32, then per tensor a u64
+    // length prefix + 4 bytes per element.
+    4 + 8 + 4
+        + shapes
+            .iter()
+            .map(|s| 8 + 4 * s.iter().product::<usize>() as u64)
+            .sum::<u64>()
+}
+
+/// Serialize a frame to bytes.
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let payload = payload(&frame.msg);
+    assert!(
+        payload.len() as u64 <= MAX_PAYLOAD,
+        "frame payload {} exceeds MAX_PAYLOAD",
+        payload.len()
+    );
+    let mut w = BlobWriter::new();
+    w.bytes(MAGIC);
+    w.u32(VERSION);
+    w.u64(frame.request_id);
+    w.u8(frame.msg.op());
+    w.u64(payload.len() as u64);
+    w.bytes(&payload);
+    w.finish()
+}
+
+/// Write one frame to a stream (a single buffered `write_all`).
+pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
+    w.write_all(&encode(frame))?;
+    w.flush()
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+// ---------------------------------------------------------------------------
+
+/// Parse and validate a frame header; returns `(request_id, op, payload
+/// length)`. The length is already checked against [`MAX_PAYLOAD`].
+pub fn decode_header(hdr: &[u8; HEADER_LEN]) -> Result<(u64, u8, u64)> {
+    let mut r = BlobReader::new(hdr);
+    let magic = r.bytes(8)?;
+    if magic != MAGIC {
+        bail!("not an SMMFWIRE frame (bad magic {magic:02x?})");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("unsupported SMMFWIRE version {version} (supported: {VERSION})");
+    }
+    let request_id = r.u64()?;
+    let op = r.u8()?;
+    let len = r.u64()?;
+    if len > MAX_PAYLOAD {
+        bail!("frame op {op} claims a {len}-byte payload (cap {MAX_PAYLOAD})");
+    }
+    r.finish()?;
+    Ok((request_id, op, len))
+}
+
+fn read_tensor_list(r: &mut BlobReader<'_>, what: &str) -> Result<Vec<Vec<f32>>> {
+    let n = r.u32()? as usize;
+    if n > MAX_TENSORS {
+        bail!("{what}: claims {n} tensors (cap {MAX_TENSORS})");
+    }
+    let mut out = Vec::with_capacity(n.min(1024));
+    for i in 0..n {
+        let numel = r.u64()? as usize;
+        // Remaining-bytes check BEFORE the allocation: a hostile frame
+        // cannot force an OOM with a fabricated element count.
+        if r.remaining() < numel.saturating_mul(4) {
+            bail!(
+                "{what}: tensor {i} claims {numel} f32 elements, only {} payload bytes remain",
+                r.remaining()
+            );
+        }
+        let mut data = vec![0.0f32; numel];
+        r.f32s_into(&mut data)?;
+        out.push(data);
+    }
+    Ok(out)
+}
+
+fn read_str(r: &mut BlobReader<'_>, what: &str) -> Result<String> {
+    let len = r.u32()? as usize;
+    if len > MAX_STR_LEN {
+        bail!("{what}: string length {len} exceeds the cap ({MAX_STR_LEN})");
+    }
+    String::from_utf8(r.bytes(len)?.to_vec()).with_context(|| format!("{what}: not valid UTF-8"))
+}
+
+/// Decode an op-specific payload. The full payload must be consumed —
+/// trailing bytes are rejected.
+pub fn decode_payload(op: u8, payload: &[u8]) -> Result<Msg> {
+    let mut r = BlobReader::new(payload);
+    let msg = match op {
+        OP_PUSH_GRAD => {
+            let client = r.u32()?;
+            let step = r.u64()?;
+            let grads = read_tensor_list(&mut r, "PushGrad")?;
+            Msg::PushGrad { client, step, grads }
+        }
+        OP_PULL_PARAMS => Msg::PullParams,
+        OP_SNAPSHOT => Msg::Snapshot { path: read_str(&mut r, "Snapshot path")? },
+        OP_STATS => Msg::Stats,
+        OP_SHUTDOWN => Msg::Shutdown,
+        OP_ACK => Msg::Ack { step: r.u64()? },
+        OP_PARAMS => {
+            let step = r.u64()?;
+            let tensors = read_tensor_list(&mut r, "Params")?;
+            Msg::Params { step, tensors }
+        }
+        OP_SNAPSHOT_DONE => Msg::SnapshotDone { bytes: r.u64()? },
+        OP_STATS_REPLY => Msg::StatsReply(ServerStats {
+            step: r.u64()?,
+            shards: r.u32()?,
+            clients: r.u32()?,
+            pushes: r.u64()?,
+            busy: r.u64()?,
+            snapshots: r.u64()?,
+        }),
+        OP_BUSY => Msg::Busy,
+        OP_BYE => Msg::Bye,
+        OP_ERR => Msg::Err { msg: read_str(&mut r, "Err message")? },
+        other => bail!("unknown SMMFWIRE op {other}"),
+    };
+    r.finish().with_context(|| format!("{} payload", msg.name()))?;
+    Ok(msg)
+}
+
+/// Decode one complete frame from a byte slice (tests / in-memory use).
+/// The slice must hold exactly one frame.
+pub fn decode(buf: &[u8]) -> Result<Frame> {
+    if buf.len() < HEADER_LEN {
+        bail!("truncated frame: {} bytes, header alone needs {HEADER_LEN}", buf.len());
+    }
+    let hdr: [u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().unwrap();
+    let (request_id, op, len) = decode_header(&hdr)?;
+    let body = &buf[HEADER_LEN..];
+    if (body.len() as u64) < len {
+        bail!("truncated frame: payload claims {len} bytes, {} present", body.len());
+    }
+    if (body.len() as u64) > len {
+        bail!("frame has {} trailing bytes", body.len() as u64 - len);
+    }
+    let msg = decode_payload(op, body)?;
+    Ok(Frame { request_id, msg })
+}
+
+/// Read one frame from a stream: header first (validated before the
+/// payload is buffered), then exactly `len` payload bytes.
+pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+    let mut hdr = [0u8; HEADER_LEN];
+    r.read_exact(&mut hdr).context("reading SMMFWIRE frame header")?;
+    let (request_id, op, len) = decode_header(&hdr)?;
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)
+        .with_context(|| format!("reading {len}-byte payload of op {op}"))?;
+    let msg = decode_payload(op, &body)?;
+    Ok(Frame { request_id, msg })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn header_roundtrip_and_caps() {
+        let f = Frame { request_id: 42, msg: Msg::Ack { step: 7 } };
+        let bytes = encode(&f);
+        assert_eq!(&bytes[..8], MAGIC);
+        let hdr: [u8; HEADER_LEN] = bytes[..HEADER_LEN].try_into().unwrap();
+        let (id, op, len) = decode_header(&hdr).unwrap();
+        assert_eq!((id, op, len), (42, OP_ACK, 8));
+        assert_eq!(decode(&bytes).unwrap(), f);
+    }
+
+    #[test]
+    fn stream_roundtrip_back_to_back() {
+        let frames = vec![
+            Frame { request_id: 1, msg: Msg::PullParams },
+            Frame {
+                request_id: 2,
+                msg: Msg::PushGrad { client: 3, step: 9, grads: vec![vec![1.5, -2.0], vec![]] },
+            },
+            Frame { request_id: 3, msg: Msg::Bye },
+        ];
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut cur = std::io::Cursor::new(buf);
+        for f in &frames {
+            assert_eq!(&read_frame(&mut cur).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn rejects_oversized_payload_claim_before_reading() {
+        let mut w = BlobWriter::new();
+        w.bytes(MAGIC);
+        w.u32(VERSION);
+        w.u64(0);
+        w.u8(OP_PULL_PARAMS);
+        w.u64(MAX_PAYLOAD + 1);
+        let hdr: [u8; HEADER_LEN] = w.finish()[..HEADER_LEN].try_into().unwrap();
+        let e = decode_header(&hdr).unwrap_err();
+        assert!(format!("{e:#}").contains("cap"), "{e:#}");
+    }
+}

@@ -1,0 +1,638 @@
+//! The optimizer-state server: TCP accept loop, bounded request queue
+//! with explicit backpressure, the step coordinator, the single-process
+//! reference trainer, and the load generator.
+//!
+//! Thread topology (all `std::thread`, mirroring
+//! `coordinator::workers::train_data_parallel`):
+//!
+//! * **acceptor** — non-blocking accept loop; spawns one handler thread
+//!   per connection.
+//! * **handlers** (one per connection) — read a frame, forward it to the
+//!   coordinator over a *bounded* `sync_channel`, wait for the reply,
+//!   write it back. A full queue is answered with [`Msg::Busy`]
+//!   immediately — the server never buffers unbounded work.
+//! * **coordinator** — owns the master parameters, the
+//!   [`StepBatcher`](super::batch::StepBatcher) step barrier and the
+//!   [`ShardSet`](super::shard::ShardSet); applies coalesced steps,
+//!   serves pulls/snapshots/stats, and drives shutdown.
+//! * **shard workers** (K) — own the optimizer state for their tensor
+//!   subsets (see [`super::shard`]).
+//!
+//! Determinism contract: a K-shard server driven by N concurrent
+//! loadgen clients writes a snapshot bit-identical to
+//! [`reference_checkpoint`] — the equivalent single-process trainer over
+//! the same workload — for any K, N, and any network interleaving. The
+//! e2e test (`rust/tests/server_e2e.rs`) and `make serve-smoke` pin this
+//! at shards {1,2} × clients {1,4}.
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::Path;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{self, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::{self, JoinHandle};
+use std::time::{Duration, Instant};
+
+use crate::coordinator::config::ExperimentConfig;
+use crate::models::{inventory_by_name, Inventory};
+use crate::optim::group::{self, Resolution};
+use crate::optim::{self, Optimizer, StateSerde};
+use crate::server::batch::{Offer, StepBatcher};
+use crate::server::client::{Client, GradSource};
+use crate::server::protocol::{self, Frame, Msg, ServerStats};
+use crate::server::shard::ShardSet;
+use crate::tensor::Tensor;
+use crate::train::checkpoint::{self, ConfigSection};
+use crate::util::cli::Args;
+use crate::util::toml::TomlDoc;
+
+// ---------------------------------------------------------------------------
+// Options
+// ---------------------------------------------------------------------------
+
+/// Server knobs: `[server]` TOML section + CLI flags (CLI wins). All
+/// count knobs are validated to `>= 1` at this layer with a clear error
+/// — a zero-shard server or zero-client barrier is meaningless and
+/// would otherwise surface as a deadlock or divide-by-zero deep in the
+/// step path.
+#[derive(Clone, Debug)]
+pub struct ServeOptions {
+    /// Listen address (`127.0.0.1:0` picks an ephemeral port).
+    pub addr: String,
+    /// Workload inventory: `synthetic:<name>` or a bare inventory name.
+    pub model: String,
+    /// State shards (worker threads owning optimizer state).
+    pub shards: usize,
+    /// Step-barrier width: gradient pushes per optimizer step.
+    pub clients: usize,
+    /// Bounded request-queue depth; a full queue answers `Busy`.
+    pub max_pending: usize,
+}
+
+impl Default for ServeOptions {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7070".into(),
+            model: "synthetic:tiny_lm".into(),
+            shards: 1,
+            clients: 1,
+            max_pending: 256,
+        }
+    }
+}
+
+fn toml_count(doc: &TomlDoc, key: &str, default: usize) -> Result<usize> {
+    doc.count_or(key, default).map_err(|e| anyhow!("[server]: {e}"))
+}
+
+impl ServeOptions {
+    /// Load from the `--config` file's `[server]` section (if any), then
+    /// apply CLI overrides.
+    pub fn load(args: &Args) -> Result<ServeOptions> {
+        let mut o = ServeOptions::default();
+        if let Some(path) = args.opt("config") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading {path:?}"))?;
+            let doc = TomlDoc::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+            o.apply_toml(&doc)?;
+        }
+        o.apply_args(args)?;
+        Ok(o)
+    }
+
+    /// Apply `[server]` TOML keys.
+    pub fn apply_toml(&mut self, doc: &TomlDoc) -> Result<()> {
+        self.addr = doc.str_or("server.addr", &self.addr).to_string();
+        self.model = doc.str_or("server.model", &self.model).to_string();
+        self.shards = toml_count(doc, "server.shards", self.shards)?;
+        self.clients = toml_count(doc, "server.clients", self.clients)?;
+        self.max_pending = toml_count(doc, "server.max_pending", self.max_pending)?;
+        Ok(())
+    }
+
+    /// Apply `--addr/--model/--shards/--clients/--max-pending` CLI
+    /// overrides (strictly validated, not silently clamped).
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        self.addr = args.str_or("addr", &self.addr);
+        if let Some(m) = args.opt("model") {
+            self.model = m.to_string();
+        }
+        self.shards = args.count_or("shards", self.shards).map_err(|e| anyhow!(e))?;
+        self.clients = args.count_or("clients", self.clients).map_err(|e| anyhow!(e))?;
+        self.max_pending =
+            args.count_or("max-pending", self.max_pending).map_err(|e| anyhow!(e))?;
+        Ok(())
+    }
+}
+
+/// Resolve a workload spec (`synthetic:<name>` or a bare inventory
+/// name) to its inventory — shared by the server, the reference
+/// trainer, and the `repro loadgen` CLI so the model-spec syntax lives
+/// in one place.
+pub fn resolve_inventory(model: &str) -> Result<Inventory> {
+    let name = model.strip_prefix("synthetic:").unwrap_or(model);
+    inventory_by_name(name)
+        .ok_or_else(|| anyhow!("unknown inventory {name} (see `repro list`)"))
+}
+
+/// Refuse inventories whose gradient/parameter messages cannot fit in
+/// one wire frame — a clear startup error instead of an encoder assert
+/// on the first push. (The protocol is a single-frame-per-tensor-set
+/// design; the paper-scale BERT/LLaMA inventories are out of scope for
+/// the serving demo.)
+fn check_wire_capacity(model: &str, shapes: &[Vec<usize>]) -> Result<()> {
+    let bytes = protocol::grads_payload_bytes(shapes);
+    if bytes > protocol::MAX_PAYLOAD {
+        bail!(
+            "inventory {model} needs {bytes}-byte gradient frames, over the SMMFWIRE \
+             payload cap ({} bytes) — pick a smaller inventory (e.g. synthetic:tiny_lm)",
+            protocol::MAX_PAYLOAD
+        );
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Server
+// ---------------------------------------------------------------------------
+
+struct Request {
+    reply: mpsc::Sender<Msg>,
+    msg: Msg,
+}
+
+/// A running optimizer-state server. [`Server::start`] returns once the
+/// listener is bound; [`Server::wait`] blocks until a client sends
+/// [`Msg::Shutdown`] and returns the final counters.
+pub struct Server {
+    /// The bound address (resolves `:0` to the real ephemeral port).
+    pub addr: SocketAddr,
+    shutdown: Arc<AtomicBool>,
+    coordinator: Option<JoinHandle<Result<ServerStats>>>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind, spawn the shard workers, the coordinator and the accept
+    /// loop. `cfg` supplies the optimizer recipe (kind, hyperparameters,
+    /// `[[optimizer.group]]` policies, LR schedule, seed); `opts` the
+    /// serving topology.
+    pub fn start(cfg: &ExperimentConfig, opts: &ServeOptions) -> Result<Server> {
+        let inv = resolve_inventory(&opts.model)?;
+        let specs = inv.param_specs();
+        let shapes = inv.shapes();
+        check_wire_capacity(&opts.model, &shapes)?;
+        let names: Vec<String> = inv.tensors.iter().map(|t| t.name.clone()).collect();
+        let res = group::resolve(&specs, &cfg.grouped());
+        let config_section = ConfigSection::from_config(&cfg.optim, &res);
+        let shards =
+            ShardSet::spawn(cfg.optimizer, &shapes, &cfg.optim, &res.tensor, opts.shards);
+        // Parameters start at the origin, like the synthetic suite
+        // workload — clients own the loss surface (targets + noise).
+        let params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+
+        let listener = TcpListener::bind(&opts.addr)
+            .with_context(|| format!("binding {}", opts.addr))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let busy = Arc::new(AtomicU64::new(0));
+        let (req_tx, req_rx) = mpsc::sync_channel::<Request>(opts.max_pending);
+
+        let acceptor = {
+            let shutdown = shutdown.clone();
+            let busy = busy.clone();
+            thread::spawn(move || loop {
+                if shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let req_tx = req_tx.clone();
+                        let busy = busy.clone();
+                        thread::spawn(move || handle_conn(stream, req_tx, busy));
+                    }
+                    // WouldBlock (idle) and transient accept errors both
+                    // back off briefly; only the shutdown flag exits.
+                    Err(_) => thread::sleep(Duration::from_millis(2)),
+                }
+            })
+        };
+
+        let coordinator = {
+            let shutdown = shutdown.clone();
+            let busy = busy.clone();
+            let mut stats = ServerStats {
+                shards: opts.shards as u32,
+                clients: opts.clients as u32,
+                ..ServerStats::default()
+            };
+            let n_clients = opts.clients;
+            let base_lr = cfg.optim.lr;
+            let schedule = cfg.schedule.clone();
+            let kind = cfg.optimizer;
+            let mut params = params;
+            let mut batcher = StepBatcher::new(n_clients, shapes.clone());
+            thread::spawn(move || -> Result<ServerStats> {
+                let mut waiters: Vec<(u32, mpsc::Sender<Msg>)> = Vec::new();
+                let run = (|| -> Result<()> {
+                    while let Ok(req) = req_rx.recv() {
+                        match req.msg {
+                            Msg::PushGrad { client, step, grads } => {
+                                match batcher.offer(client, step, grads) {
+                                    Offer::Rejected(msg) => {
+                                        req.reply.send(Msg::Err { msg }).ok();
+                                    }
+                                    Offer::Accepted => waiters.push((client, req.reply)),
+                                    Offer::Completed => {
+                                        waiters.push((client, req.reply));
+                                        let applied = batcher.pending_step();
+                                        let grads = batcher.take_coalesced();
+                                        let lr = schedule.at(base_lr, applied);
+                                        shards.step(lr, &mut params, grads)?;
+                                        stats.pushes += n_clients as u64;
+                                        stats.step = applied;
+                                        // Reply in client-id order, like
+                                        // the coalescing reduction.
+                                        waiters.sort_by_key(|w| w.0);
+                                        for (_, tx) in waiters.drain(..) {
+                                            tx.send(Msg::Ack { step: applied }).ok();
+                                        }
+                                    }
+                                }
+                            }
+                            Msg::PullParams => {
+                                let tensors =
+                                    params.iter().map(|t| t.data().to_vec()).collect();
+                                req.reply
+                                    .send(Msg::Params {
+                                        step: batcher.applied_step(),
+                                        tensors,
+                                    })
+                                    .ok();
+                            }
+                            Msg::Snapshot { path } => {
+                                let reply = shards.collect_state().and_then(
+                                    |(opt_step, _live, blobs)| {
+                                        checkpoint::save_snapshot(
+                                            Path::new(&path),
+                                            batcher.applied_step(),
+                                            &names,
+                                            &params,
+                                            base_lr,
+                                            &schedule,
+                                            kind,
+                                            opt_step,
+                                            blobs,
+                                            &config_section,
+                                        )
+                                    },
+                                );
+                                match reply {
+                                    Ok(bytes) => {
+                                        stats.snapshots += 1;
+                                        req.reply.send(Msg::SnapshotDone { bytes }).ok();
+                                    }
+                                    Err(e) => {
+                                        req.reply
+                                            .send(Msg::Err { msg: format!("{e:#}") })
+                                            .ok();
+                                    }
+                                }
+                            }
+                            Msg::Stats => {
+                                stats.busy = busy.load(Ordering::Relaxed);
+                                req.reply.send(Msg::StatsReply(stats)).ok();
+                            }
+                            Msg::Shutdown => {
+                                req.reply.send(Msg::Bye).ok();
+                                return Ok(());
+                            }
+                            other => {
+                                req.reply
+                                    .send(Msg::Err {
+                                        msg: format!("{} is not a request", other.name()),
+                                    })
+                                    .ok();
+                            }
+                        }
+                    }
+                    Ok(())
+                })();
+                // Teardown: unblock any barrier waiters, stop accepting,
+                // join the shard workers — whether we exit via Shutdown
+                // or a shard failure.
+                for (_, tx) in waiters.drain(..) {
+                    tx.send(Msg::Err { msg: "server shutting down".into() }).ok();
+                }
+                shutdown.store(true, Ordering::SeqCst);
+                shards.stop();
+                run?;
+                stats.busy = busy.load(Ordering::Relaxed);
+                Ok(stats)
+            })
+        };
+
+        Ok(Server { addr, shutdown, coordinator: Some(coordinator), acceptor: Some(acceptor) })
+    }
+
+    /// Block until the server shuts down; returns the final counters.
+    pub fn wait(mut self) -> Result<ServerStats> {
+        let stats = self
+            .coordinator
+            .take()
+            .expect("wait() is called once")
+            .join()
+            .map_err(|_| anyhow!("server coordinator panicked"))?;
+        self.shutdown.store(true, Ordering::SeqCst);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        stats
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        // Belt and braces: an abandoned handle must not keep the accept
+        // loop spinning.
+        self.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Per-connection handler: strictly sequential request → reply. A full
+/// coordinator queue is answered with `Busy` right here — the explicit
+/// backpressure path.
+fn handle_conn(stream: TcpStream, req_tx: SyncSender<Request>, busy: Arc<AtomicU64>) {
+    stream.set_nodelay(true).ok();
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = std::io::BufReader::new(read_half);
+    let mut writer = std::io::BufWriter::new(stream);
+    loop {
+        // Read errors (EOF on client disconnect, or a malformed frame)
+        // end the connection; the protocol has no resync point.
+        let Ok(frame) = protocol::read_frame(&mut reader) else { return };
+        let id = frame.request_id;
+        let is_request = matches!(
+            frame.msg,
+            Msg::PushGrad { .. }
+                | Msg::PullParams
+                | Msg::Snapshot { .. }
+                | Msg::Stats
+                | Msg::Shutdown
+        );
+        let reply = if !is_request {
+            Msg::Err { msg: format!("{} is not a request", frame.msg.name()) }
+        } else {
+            let (rtx, rrx) = mpsc::channel::<Msg>();
+            match req_tx.try_send(Request { reply: rtx, msg: frame.msg }) {
+                Ok(()) => rrx.recv().unwrap_or(Msg::Err { msg: "server stopped".into() }),
+                Err(TrySendError::Full(_)) => {
+                    busy.fetch_add(1, Ordering::Relaxed);
+                    Msg::Busy
+                }
+                Err(TrySendError::Disconnected(_)) => Msg::Err { msg: "server stopped".into() },
+            }
+        };
+        let done = matches!(reply, Msg::Bye);
+        if protocol::write_frame(&mut writer, &Frame { request_id: id, msg: reply }).is_err() {
+            return;
+        }
+        if done {
+            return;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Single-process reference trainer
+// ---------------------------------------------------------------------------
+
+/// The equivalent single-process trainer: one optimizer over the full
+/// inventory, fed the identical per-client gradient streams coalesced
+/// through the identical [`StepBatcher`] reduction, snapshotted through
+/// the identical [`checkpoint::save_snapshot`] writer. A K-shard,
+/// N-client server run must produce a byte-identical file — this is the
+/// oracle of the determinism e2e and of `repro loadgen --check`.
+/// Returns client 0's final (noise-free) loss.
+pub fn reference_checkpoint(
+    cfg: &ExperimentConfig,
+    model: &str,
+    n_clients: usize,
+    steps: u64,
+    path: &Path,
+) -> Result<f32> {
+    assert!(n_clients >= 1);
+    let inv = resolve_inventory(model)?;
+    let specs = inv.param_specs();
+    let shapes = inv.shapes();
+    let names: Vec<String> = inv.tensors.iter().map(|t| t.name.clone()).collect();
+    let res: Resolution = group::resolve(&specs, &cfg.grouped());
+    let mut opt = optim::build_with_policies(cfg.optimizer, &shapes, &cfg.optim, &res.tensor);
+    let mut params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+    let mut sources: Vec<GradSource> =
+        (0..n_clients).map(|c| GradSource::new(&shapes, cfg.seed, c as u32)).collect();
+    let mut final_loss = f32::NAN;
+    for step in 1..=steps {
+        let flat: Vec<Vec<f32>> = params.iter().map(|t| t.data().to_vec()).collect();
+        let mut barrier = StepBatcher::new(n_clients, shapes.clone());
+        for (c, src) in sources.iter_mut().enumerate() {
+            let (loss, grads) = src.grads(&flat)?;
+            if c == 0 {
+                final_loss = loss;
+            }
+            match barrier.offer(c as u32, 1, grads) {
+                Offer::Rejected(msg) => bail!("reference barrier rejected client {c}: {msg}"),
+                _ => {}
+            }
+        }
+        let grads = barrier.take_coalesced();
+        opt.set_lr(cfg.schedule.at(cfg.optim.lr, step));
+        opt.step(&mut params, &grads);
+    }
+    checkpoint::save_snapshot(
+        path,
+        steps,
+        &names,
+        &params,
+        cfg.optim.lr,
+        &cfg.schedule,
+        cfg.optimizer,
+        opt.opt_step(),
+        opt.state_blobs(),
+        &ConfigSection::from_config(&cfg.optim, &res),
+    )?;
+    Ok(final_loss)
+}
+
+// ---------------------------------------------------------------------------
+// Load generator
+// ---------------------------------------------------------------------------
+
+/// Loadgen knobs.
+#[derive(Clone, Debug)]
+pub struct LoadgenOptions {
+    /// Concurrent connections (must equal the server's barrier width).
+    pub clients: usize,
+    /// Optimizer steps to drive.
+    pub steps: u64,
+}
+
+/// Aggregate loadgen measurements: throughput plus push round-trip
+/// latency percentiles (a push's round trip spans the step barrier and
+/// the sharded optimizer step — it is the end-to-end step latency as one
+/// client observes it).
+#[derive(Clone, Debug)]
+pub struct LoadgenReport {
+    pub clients: usize,
+    pub steps: u64,
+    /// Total accepted pushes (= clients × steps).
+    pub pushes: u64,
+    /// `Busy` bounces absorbed by client-side retries.
+    pub busy_retries: u64,
+    pub elapsed_s: f64,
+    /// Optimizer steps per second.
+    pub steps_per_s: f64,
+    pub push_p50_ms: f64,
+    pub push_p99_ms: f64,
+    pub push_mean_ms: f64,
+    /// Client 0's final noise-free loss (sanity: the well converges).
+    pub final_loss: f32,
+}
+
+fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
+    if sorted_ms.is_empty() {
+        return f64::NAN;
+    }
+    sorted_ms[((sorted_ms.len() - 1) as f64 * q).round() as usize]
+}
+
+/// Drive `opts.clients` concurrent connections for `opts.steps` steps
+/// against the server at `addr`. `shapes`/`seed` must match the
+/// server's workload (the CLI derives both from the same config).
+pub fn run_loadgen(
+    addr: &str,
+    shapes: &[Vec<usize>],
+    seed: u64,
+    opts: &LoadgenOptions,
+) -> Result<LoadgenReport> {
+    assert!(opts.clients >= 1 && opts.steps >= 1);
+    check_wire_capacity("workload", shapes)?;
+    // A client count that disagrees with the server's barrier width
+    // would deadlock the first push (the barrier never completes) —
+    // probe the server's Stats once and fail loudly instead.
+    let server = Client::connect(addr)?.stats()?;
+    if server.clients as usize != opts.clients {
+        bail!(
+            "loadgen drives {} client(s) but the server's step barrier is {} wide — \
+             pass --clients {} (or restart the server)",
+            opts.clients,
+            server.clients,
+            server.clients
+        );
+    }
+    let t0 = Instant::now();
+    let results: Vec<Result<(Vec<f64>, u64, f32)>> = thread::scope(|s| {
+        let handles: Vec<_> = (0..opts.clients)
+            .map(|c| {
+                let steps = opts.steps;
+                s.spawn(move || -> Result<(Vec<f64>, u64, f32)> {
+                    let mut client = Client::connect(addr)?;
+                    let mut src = GradSource::new(shapes, seed, c as u32);
+                    let mut latencies_ms = Vec::with_capacity(steps as usize);
+                    let mut final_loss = f32::NAN;
+                    for step in 1..=steps {
+                        let (at, params) = client.pull_params()?;
+                        if at != step - 1 {
+                            bail!(
+                                "client {c}: server at step {at}, expected {} — \
+                                 is another loadgen driving it?",
+                                step - 1
+                            );
+                        }
+                        let (loss, grads) = src.grads(&params)?;
+                        final_loss = loss;
+                        let t = Instant::now();
+                        let applied = client.push_grad(c as u32, step, grads)?;
+                        latencies_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                        if applied != step {
+                            bail!("client {c}: pushed step {step}, server applied {applied}");
+                        }
+                    }
+                    Ok((latencies_ms, client.busy_retries, final_loss))
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or_else(|_| Err(anyhow!("loadgen client panicked"))))
+            .collect()
+    });
+    let elapsed_s = t0.elapsed().as_secs_f64();
+
+    let mut all_ms = Vec::with_capacity(opts.clients * opts.steps as usize);
+    let mut busy_retries = 0u64;
+    let mut final_loss = f32::NAN;
+    for (c, r) in results.into_iter().enumerate() {
+        let (lat, busy, loss) = r.with_context(|| format!("loadgen client {c}"))?;
+        all_ms.extend(lat);
+        busy_retries += busy;
+        if c == 0 {
+            final_loss = loss;
+        }
+    }
+    all_ms.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let mean = all_ms.iter().sum::<f64>() / all_ms.len().max(1) as f64;
+    Ok(LoadgenReport {
+        clients: opts.clients,
+        steps: opts.steps,
+        pushes: opts.clients as u64 * opts.steps,
+        busy_retries,
+        elapsed_s,
+        steps_per_s: opts.steps as f64 / elapsed_s.max(1e-12),
+        push_p50_ms: percentile(&all_ms, 0.50),
+        push_p99_ms: percentile(&all_ms, 0.99),
+        push_mean_ms: mean,
+        final_loss,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_options_validate_counts() {
+        // TOML layer
+        let doc = TomlDoc::parse("[server]\nshards = 2\nclients = 4\nmax_pending = 8").unwrap();
+        let mut o = ServeOptions::default();
+        o.apply_toml(&doc).unwrap();
+        assert_eq!((o.shards, o.clients, o.max_pending), (2, 4, 8));
+        for bad in ["[server]\nshards = 0", "[server]\nclients = -3", "[server]\nshards = \"x\""]
+        {
+            let doc = TomlDoc::parse(bad).unwrap();
+            let e = ServeOptions::default().apply_toml(&doc).unwrap_err();
+            assert!(format!("{e:#}").contains(">= 1"), "{bad}: {e:#}");
+        }
+        // CLI layer
+        let args = Args::parse(["--shards", "3", "--clients", "2"].iter().map(|s| s.to_string()));
+        let mut o = ServeOptions::default();
+        o.apply_args(&args).unwrap();
+        assert_eq!((o.shards, o.clients), (3, 2));
+        let args = Args::parse(["--clients", "0"].iter().map(|s| s.to_string()));
+        let e = ServeOptions::default().apply_args(&args).unwrap_err();
+        assert!(format!("{e:#}").contains(">= 1"), "{e:#}");
+    }
+
+    #[test]
+    fn percentile_picks_expected_ranks() {
+        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&v, 0.50), 51.0);
+        assert_eq!(percentile(&v, 0.99), 99.0);
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 1.0), 100.0);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+}

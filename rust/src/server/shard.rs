@@ -1,0 +1,345 @@
+//! State sharding: partition an inventory across K worker threads, each
+//! owning the optimizer state for its tensor subset.
+//!
+//! The partition reuses the FLOP-balancing planner from the parallel
+//! step engine ([`crate::optim::parallel::ParamPartition`]) over
+//! whole-tensor units — one unsplittable [`TensorGeom`] per tensor, with
+//! per-tensor cost weights derived from the resolved group policies
+//! (stateless/frozen tensors are cheap to update, so the LPT packing
+//! balances *effective* work, exactly like the intra-step engine). Every
+//! optimizer in this crate updates tensors independently of each other
+//! (the per-tensor state machines share only the internal step counter,
+//! which each shard advances identically), so a sharded step is
+//! bit-identical, tensor by tensor, to a single optimizer over the full
+//! inventory — the property the server's snapshot e2e pins.
+//!
+//! Execution mirrors the persistent-worker topology of
+//! `coordinator::workers::train_data_parallel`: each shard is one
+//! long-lived `std::thread` owning its optimizer, driven over channels.
+//! Tensor ownership *moves* through the channels (a `Vec<Tensor>` move
+//! is pointer-sized — no data copies), so there is no shared mutable
+//! state and no unsafe.
+
+use anyhow::{anyhow, Result};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::thread::JoinHandle;
+
+use crate::optim::parallel::{ParamPartition, TensorGeom};
+use crate::optim::{self, OptKind, OptimConfig, Optimizer, StateSerde, TensorPolicy};
+use crate::tensor::Tensor;
+
+/// Assignment of inventory tensors to shards.
+#[derive(Clone, Debug)]
+pub struct ShardPlan {
+    /// Number of shards (>= 1).
+    pub n_shards: usize,
+    /// Original tensor index -> owning shard.
+    pub assign: Vec<usize>,
+    /// Shard -> original tensor indices, ascending (the shard's local
+    /// registration order).
+    pub locals: Vec<Vec<usize>>,
+}
+
+/// Plan a K-way shard assignment over the inventory with the
+/// FLOP-balancing partition planner (whole-tensor units; policy-aware
+/// cost weights).
+pub fn plan_shards(
+    shapes: &[Vec<usize>],
+    policies: &[TensorPolicy],
+    n_shards: usize,
+) -> ShardPlan {
+    assert_eq!(shapes.len(), policies.len(), "one policy per tensor");
+    let n_shards = n_shards.max(1);
+    let geoms: Vec<TensorGeom> = shapes
+        .iter()
+        .zip(policies)
+        .map(|(s, p)| {
+            let numel = s.iter().product::<usize>();
+            // Same relative weights as the step engine's planning:
+            // frozen tensors are skipped entirely, stateless ones run the
+            // cheap `w -= lr·g` path, stateful ones the full update.
+            let cost = if p.frozen {
+                1
+            } else if p.stateless() {
+                2
+            } else {
+                8
+            };
+            TensorGeom::whole(numel, cost)
+        })
+        .collect();
+    let part = ParamPartition::plan(&geoms, n_shards);
+    let mut assign = vec![0usize; shapes.len()];
+    for it in part.items() {
+        assign[it.tensor] = it.shard;
+    }
+    let mut locals = vec![Vec::new(); n_shards];
+    for (t, &s) in assign.iter().enumerate() {
+        locals[s].push(t);
+    }
+    ShardPlan { n_shards, assign, locals }
+}
+
+enum Cmd {
+    /// Apply one optimizer step over the shard's tensors (ownership of
+    /// the subsets moves in; the updated params move back).
+    Step { lr: f32, params: Vec<Tensor>, grads: Vec<Tensor> },
+    /// Collect the shard's serialized optimizer state.
+    Collect,
+    Stop,
+}
+
+enum Reply {
+    Stepped { params: Vec<Tensor> },
+    State { opt_step: u64, state_bytes: u64, blobs: Vec<Vec<u8>> },
+}
+
+struct ShardHandle {
+    tx: Sender<Cmd>,
+    rx: Receiver<Reply>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// K shard workers plus the plan mapping tensors onto them.
+pub struct ShardSet {
+    pub plan: ShardPlan,
+    handles: Vec<ShardHandle>,
+}
+
+impl ShardSet {
+    /// Plan the partition and spawn one worker per shard; each worker
+    /// builds its optimizer over its tensor subset through the resolved
+    /// per-tensor policy table ([`optim::build_subset`]), so per-group
+    /// `StatePolicy` / lr-scale / weight-decay overrides survive
+    /// sharding.
+    pub fn spawn(
+        kind: OptKind,
+        shapes: &[Vec<usize>],
+        cfg: &OptimConfig,
+        policies: &[TensorPolicy],
+        n_shards: usize,
+    ) -> ShardSet {
+        let plan = plan_shards(shapes, policies, n_shards);
+        let mut handles = Vec::with_capacity(plan.n_shards);
+        for s in 0..plan.n_shards {
+            let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+            let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+            let idx = plan.locals[s].clone();
+            let shapes = shapes.to_vec();
+            let cfg = cfg.clone();
+            let policies = policies.to_vec();
+            let join = std::thread::spawn(move || {
+                let mut opt = optim::build_subset(kind, &shapes, &cfg, &policies, &idx);
+                while let Ok(cmd) = cmd_rx.recv() {
+                    match cmd {
+                        Cmd::Step { lr, mut params, grads } => {
+                            opt.set_lr(lr);
+                            opt.step(&mut params, &grads);
+                            if reply_tx.send(Reply::Stepped { params }).is_err() {
+                                break;
+                            }
+                        }
+                        Cmd::Collect => {
+                            let reply = Reply::State {
+                                opt_step: opt.opt_step(),
+                                state_bytes: opt.state_bytes(),
+                                blobs: opt.state_blobs(),
+                            };
+                            if reply_tx.send(reply).is_err() {
+                                break;
+                            }
+                        }
+                        Cmd::Stop => break,
+                    }
+                }
+            });
+            handles.push(ShardHandle { tx: cmd_tx, rx: reply_rx, join: Some(join) });
+        }
+        ShardSet { plan, handles }
+    }
+
+    /// Apply one coalesced optimizer step across all shards: scatter the
+    /// per-shard parameter/gradient subsets (ownership moves, the master
+    /// slots are back-filled with empty placeholders), run the shards
+    /// concurrently, gather the updated parameters back in place.
+    /// `grads` is consumed.
+    pub fn step(&self, lr: f32, params: &mut [Tensor], grads: Vec<Tensor>) -> Result<()> {
+        assert_eq!(params.len(), self.plan.assign.len());
+        assert_eq!(grads.len(), self.plan.assign.len());
+        let mut grads: Vec<Option<Tensor>> = grads.into_iter().map(Some).collect();
+        // Empty shards (more shards than tensors) are skipped entirely —
+        // their optimizers never step, and collect_state ignores them.
+        for (s, h) in self.handles.iter().enumerate() {
+            if self.plan.locals[s].is_empty() {
+                continue;
+            }
+            let idx = &self.plan.locals[s];
+            let sub_params: Vec<Tensor> = idx
+                .iter()
+                .map(|&t| std::mem::replace(&mut params[t], Tensor::scalar(0.0)))
+                .collect();
+            let sub_grads: Vec<Tensor> =
+                idx.iter().map(|&t| grads[t].take().expect("each tensor scattered once")).collect();
+            h.tx.send(Cmd::Step { lr, params: sub_params, grads: sub_grads })
+                .map_err(|_| anyhow!("shard {s} worker is gone"))?;
+        }
+        for (s, h) in self.handles.iter().enumerate() {
+            if self.plan.locals[s].is_empty() {
+                continue;
+            }
+            match h.rx.recv() {
+                Ok(Reply::Stepped { params: sub }) => {
+                    for (&t, tensor) in self.plan.locals[s].iter().zip(sub) {
+                        params[t] = tensor;
+                    }
+                }
+                _ => return Err(anyhow!("shard {s} worker died mid-step")),
+            }
+        }
+        Ok(())
+    }
+
+    /// Gather the serialized optimizer state from every shard, reordered
+    /// into original inventory order: `(opt_step, live state bytes, one
+    /// blob per tensor)`. Errors if the shards' internal step counters
+    /// disagree (they advance in lockstep, so drift means a lost step).
+    pub fn collect_state(&self) -> Result<(u64, u64, Vec<Vec<u8>>)> {
+        let n_tensors = self.plan.assign.len();
+        let mut blobs: Vec<Vec<u8>> = vec![Vec::new(); n_tensors];
+        let mut opt_step = None;
+        let mut state_bytes = 0u64;
+        for (s, h) in self.handles.iter().enumerate() {
+            if self.plan.locals[s].is_empty() {
+                continue;
+            }
+            h.tx.send(Cmd::Collect).map_err(|_| anyhow!("shard {s} worker is gone"))?;
+            match h.rx.recv() {
+                Ok(Reply::State { opt_step: t, state_bytes: b, blobs: sub }) => {
+                    if *opt_step.get_or_insert(t) != t {
+                        return Err(anyhow!(
+                            "shard {s} is at optimizer step {t}, others at {}",
+                            opt_step.unwrap()
+                        ));
+                    }
+                    state_bytes += b;
+                    if sub.len() != self.plan.locals[s].len() {
+                        return Err(anyhow!(
+                            "shard {s} returned {} blobs for {} tensors",
+                            sub.len(),
+                            self.plan.locals[s].len()
+                        ));
+                    }
+                    for (&t, blob) in self.plan.locals[s].iter().zip(sub) {
+                        blobs[t] = blob;
+                    }
+                }
+                _ => return Err(anyhow!("shard {s} worker died during state collection")),
+            }
+        }
+        Ok((opt_step.unwrap_or(0), state_bytes, blobs))
+    }
+
+    /// Stop and join every worker.
+    pub fn stop(mut self) {
+        for h in &self.handles {
+            let _ = h.tx.send(Cmd::Stop);
+        }
+        for h in &mut self.handles {
+            if let Some(j) = h.join.take() {
+                let _ = j.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::optim::build_with_policies;
+    use crate::util::rng::Pcg32;
+
+    fn toy_shapes() -> Vec<Vec<usize>> {
+        vec![vec![16, 8], vec![8], vec![4, 4, 2], vec![32], vec![1]]
+    }
+
+    fn uniform_policies(cfg: &OptimConfig, n: usize) -> Vec<TensorPolicy> {
+        vec![TensorPolicy::uniform(cfg); n]
+    }
+
+    #[test]
+    fn plan_covers_every_tensor_exactly_once() {
+        let shapes = toy_shapes();
+        let cfg = OptimConfig::default();
+        let pol = uniform_policies(&cfg, shapes.len());
+        for k in [1, 2, 3, 8] {
+            let plan = plan_shards(&shapes, &pol, k);
+            assert_eq!(plan.n_shards, k);
+            assert_eq!(plan.assign.len(), shapes.len());
+            let mut seen = vec![false; shapes.len()];
+            for (s, local) in plan.locals.iter().enumerate() {
+                for &t in local {
+                    assert_eq!(plan.assign[t], s);
+                    assert!(!seen[t], "tensor {t} owned twice");
+                    seen[t] = true;
+                }
+                // ascending local order (blob reassembly relies on it)
+                assert!(local.windows(2).all(|w| w[0] < w[1]));
+            }
+            assert!(seen.iter().all(|&x| x), "{seen:?}");
+        }
+        // planning is deterministic
+        let a = plan_shards(&shapes, &pol, 3);
+        let b = plan_shards(&shapes, &pol, 3);
+        assert_eq!(a.assign, b.assign);
+    }
+
+    /// The core determinism claim: a sharded step produces bit-identical
+    /// parameters and state blobs to one optimizer over the full
+    /// inventory, for every optimizer kind.
+    #[test]
+    fn sharded_steps_match_single_optimizer_bitwise() {
+        let shapes = toy_shapes();
+        for kind in OptKind::every() {
+            let mut cfg = OptimConfig::paper_defaults(kind);
+            cfg.lr = 0.01;
+            cfg.relative_step = false;
+            let pol = uniform_policies(&cfg, shapes.len());
+            for k in [1, 2, 4] {
+                let shards = ShardSet::spawn(kind, &shapes, &cfg, &pol, k);
+                let mut reference = build_with_policies(kind, &shapes, &cfg, &pol);
+
+                let mut rng = Pcg32::new(11);
+                let mut p_sharded: Vec<Tensor> = shapes
+                    .iter()
+                    .map(|s| {
+                        let mut t = Tensor::zeros(s);
+                        rng.fill_normal(t.data_mut(), 0.3);
+                        t
+                    })
+                    .collect();
+                let mut p_single = p_sharded.clone();
+                let mut grng = Pcg32::new(29);
+                for step in 1..=5u64 {
+                    let grads: Vec<Tensor> = shapes
+                        .iter()
+                        .map(|s| {
+                            let mut t = Tensor::zeros(s);
+                            grng.fill_normal(t.data_mut(), 0.05);
+                            t
+                        })
+                        .collect();
+                    let lr = 0.01 / step as f32;
+                    shards.step(lr, &mut p_sharded, grads.clone()).unwrap();
+                    reference.set_lr(lr);
+                    reference.step(&mut p_single, &grads);
+                }
+                assert_eq!(p_sharded, p_single, "{} params drift at k={k}", kind.name());
+                let (opt_step, state_bytes, blobs) = shards.collect_state().unwrap();
+                assert_eq!(opt_step, reference.opt_step(), "{}", kind.name());
+                assert_eq!(state_bytes, reference.state_bytes(), "{}", kind.name());
+                assert_eq!(blobs, reference.state_blobs(), "{} blobs drift at k={k}", kind.name());
+                shards.stop();
+            }
+        }
+    }
+}

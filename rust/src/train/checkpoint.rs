@@ -391,6 +391,40 @@ pub fn save_v2(
     })
 }
 
+/// One-call snapshot writer for the optimizer-state server (and its
+/// single-process reference trainer): assembles the standard section set
+/// — PARAMS, TRAINER (no data-RNG: the gradient streams live in the
+/// clients), SCHEDULE, OPT, CONFIG — and writes it through the same
+/// atomic [`save_v2`] path a trainer checkpoint uses, so a server
+/// snapshot *is* a regular `SMMFCKPT` v2 file (`repro train --resume`
+/// can consume it). Returns the on-disk size in bytes. Both the server
+/// and the reference trainer funnel through this one writer, which is
+/// what makes their outputs byte-comparable.
+#[allow(clippy::too_many_arguments)]
+pub fn save_snapshot(
+    path: &Path,
+    step: u64,
+    names: &[String],
+    params: &[Tensor],
+    base_lr: f32,
+    schedule: &LrSchedule,
+    kind: OptKind,
+    opt_step: u64,
+    blobs: Vec<Vec<u8>>,
+    config: &ConfigSection,
+) -> Result<u64> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating snapshot dir {parent:?}"))?;
+        }
+    }
+    let sched = ScheduleSection { base_lr, schedule: schedule.clone() };
+    let opt = OptSection { kind, opt_step, blobs };
+    save_v2(path, step, names, params, None, Some(&sched), Some(&opt), Some(config))?;
+    Ok(std::fs::metadata(path).with_context(|| format!("stat {path:?}"))?.len())
+}
+
 /// Stream the writer's output to `<path>.tmp` in the same directory,
 /// fsync, then atomically rename over `path` — a crash mid-save can
 /// never destroy the previous checkpoint (the whole point of

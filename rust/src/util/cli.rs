@@ -66,6 +66,21 @@ impl Args {
         self.opt(key).and_then(|s| s.parse().ok()).unwrap_or(default)
     }
 
+    /// Strict count parsing: absent -> `default`; present but not an
+    /// integer >= 1 -> a clear error instead of a silent clamp. Used by
+    /// knobs where `--clients 0` is a config mistake the user must see
+    /// (server shards, loadgen connections), as opposed to
+    /// [`Args::positive_usize_or`]'s forgiving clamp.
+    pub fn count_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.opt(key) {
+            None => Ok(default),
+            Some(s) => match s.parse::<usize>() {
+                Ok(n) if n >= 1 => Ok(n),
+                _ => Err(format!("--{key} must be an integer >= 1 (got {s:?})")),
+            },
+        }
+    }
+
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -111,5 +126,14 @@ mod tests {
         assert_eq!(a.positive_usize_or("threads", 1), 1);
         assert_eq!(a.positive_usize_or("workers", 1), 4);
         assert_eq!(a.positive_usize_or("absent", 3), 3);
+    }
+
+    #[test]
+    fn count_or_errors_instead_of_clamping() {
+        let a = parse("serve --shards 2 --clients 0 --steps x");
+        assert_eq!(a.count_or("shards", 1), Ok(2));
+        assert_eq!(a.count_or("absent", 5), Ok(5));
+        assert!(a.count_or("clients", 1).unwrap_err().contains(">= 1"));
+        assert!(a.count_or("steps", 1).is_err());
     }
 }

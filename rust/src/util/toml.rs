@@ -123,6 +123,21 @@ impl TomlDoc {
         self.get(key).and_then(|v| v.as_bool()).unwrap_or(default)
     }
 
+    /// Strict count key: absent -> `default`; present but not an
+    /// integer >= 1 -> a clear error (callers prefix their section).
+    /// The shared validator behind `[suite] workers` and the `[server]`
+    /// count knobs — count config where 0 is a mistake the user must
+    /// see, not a value to clamp.
+    pub fn count_or(&self, key: &str, default: usize) -> Result<usize, String> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.as_i64() {
+                Some(n) if n >= 1 => Ok(n as usize),
+                _ => Err(format!("{key} must be an integer >= 1")),
+            },
+        }
+    }
+
     /// Number of `[[name]]` table-array occurrences (0 when absent).
     pub fn array_len(&self, name: &str) -> usize {
         self.arrays.get(name).copied().unwrap_or(0)
@@ -234,6 +249,16 @@ fn split_top_level(s: &str) -> Vec<&str> {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn count_or_validates_instead_of_clamping() {
+        let doc = TomlDoc::parse("[server]\nshards = 2\nbad = 0\nworse = -1\nnan = \"x\"").unwrap();
+        assert_eq!(doc.count_or("server.shards", 1), Ok(2));
+        assert_eq!(doc.count_or("server.absent", 7), Ok(7));
+        for k in ["server.bad", "server.worse", "server.nan"] {
+            assert!(doc.count_or(k, 1).unwrap_err().contains(">= 1"), "{k}");
+        }
+    }
 
     #[test]
     fn parse_full_config() {

@@ -1,0 +1,104 @@
+//! `repro help` drift guard: cross-checks the `HELP` text in
+//! `src/main.rs` against the `match cmd.as_str()` dispatch arms, so a
+//! new subcommand cannot land without a help entry (and a help entry
+//! cannot outlive its command). `main.rs` is a binary root, so the test
+//! reads the source directly — the strings under test are compile-time
+//! constants of that file.
+
+use std::collections::BTreeSet;
+
+const MAIN_RS: &str = include_str!("../src/main.rs");
+
+/// The subcommand literals of the dispatch `match` in `run()`.
+fn dispatch_commands() -> BTreeSet<String> {
+    let start = MAIN_RS
+        .find("match cmd.as_str()")
+        .expect("main.rs dispatches on `match cmd.as_str()`");
+    let end = MAIN_RS[start..]
+        .find("other => bail!")
+        .map(|i| start + i)
+        .expect("dispatch match ends with a catch-all arm");
+    let block = &MAIN_RS[start..end];
+    let mut out = BTreeSet::new();
+    for line in block.lines() {
+        let line = line.trim();
+        // Arms look like `"name" => …` or `"a" | "b" => …`.
+        let Some((pattern, _)) = line.split_once("=>") else { continue };
+        for alt in pattern.split('|') {
+            let alt = alt.trim();
+            if let Some(stripped) = alt.strip_prefix('"').and_then(|s| s.strip_suffix('"')) {
+                // `--help` is an alias of `help`, not its own command.
+                if !stripped.starts_with("--") {
+                    out.insert(stripped.to_string());
+                }
+            }
+        }
+    }
+    assert!(!out.is_empty(), "found no dispatch arms");
+    out
+}
+
+/// The command tokens of the HELP text's `commands:` block.
+fn help_commands() -> BTreeSet<String> {
+    let start = MAIN_RS.find("const HELP: &str = \"").expect("main.rs defines HELP");
+    let body = &MAIN_RS[start..];
+    let end = body.find("\";").expect("HELP is a terminated string literal");
+    let help = &body[..end];
+    let commands_at = help.find("commands:").expect("HELP has a commands: section");
+    let mut out = BTreeSet::new();
+    for line in help[commands_at..].lines().skip(1) {
+        if line.starts_with("common flags:") {
+            break;
+        }
+        // Command rows are indented exactly two spaces; continuation
+        // rows are indented further.
+        let Some(rest) = line.strip_prefix("  ") else { continue };
+        if rest.starts_with(' ') {
+            continue;
+        }
+        let token = rest.split_whitespace().next().unwrap_or("");
+        for alt in token.split('|') {
+            if !alt.is_empty() {
+                out.insert(alt.to_string());
+            }
+        }
+    }
+    assert!(!out.is_empty(), "found no help command rows");
+    out
+}
+
+#[test]
+fn help_lists_exactly_the_live_subcommands() {
+    let arms = dispatch_commands();
+    let mut help = help_commands();
+
+    // `tableN` in the help maps onto the `t.starts_with("table")` guard
+    // arm in the dispatch (table1..table13 shortcuts).
+    assert!(
+        help.remove("tableN"),
+        "help must document the tableN shortcuts: {help:?}"
+    );
+    assert!(
+        MAIN_RS.contains("starts_with(\"table\")"),
+        "the tableN guard arm disappeared from main.rs — update HELP"
+    );
+
+    let undocumented: Vec<_> = arms.difference(&help).collect();
+    assert!(
+        undocumented.is_empty(),
+        "subcommands missing from `repro help`: {undocumented:?}"
+    );
+    let stale: Vec<_> = help.difference(&arms).collect();
+    assert!(
+        stale.is_empty(),
+        "`repro help` documents commands with no dispatch arm: {stale:?}"
+    );
+
+    // The commands this repo's docs and Makefile lean on must all be
+    // live (regression guard for the original help-drift bug).
+    for cmd in
+        ["help", "list", "table5", "suite", "report", "dp", "fused", "ablate", "serve", "loadgen"]
+    {
+        assert!(arms.contains(cmd), "dispatch lost `{cmd}`");
+    }
+}

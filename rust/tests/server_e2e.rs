@@ -1,0 +1,184 @@
+//! End-to-end tests for the optimizer-state server: the determinism
+//! contract (a K-shard server driven by N concurrent TCP clients writes
+//! a snapshot byte-identical to the equivalent single-process trainer,
+//! at shards {1,2} × clients {1,4}), the loadgen measurements, and the
+//! wire-level error paths.
+//!
+//! Everything here runs over real loopback TCP against the `tiny_lm`
+//! inventory (~15K params) — no AOT artifacts, no PJRT.
+
+use std::path::PathBuf;
+
+use smmf_repro::coordinator::ExperimentConfig;
+use smmf_repro::models::inventory_by_name;
+use smmf_repro::optim::OptKind;
+use smmf_repro::server::{
+    reference_checkpoint, run_loadgen, Client, LoadgenOptions, Msg, ServeOptions, Server,
+};
+use smmf_repro::train::checkpoint;
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("smmf_server_{tag}_{}.bin", std::process::id()))
+}
+
+fn test_config(kind: OptKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.optimizer = kind;
+    cfg.optim = smmf_repro::optim::OptimConfig::paper_defaults(kind);
+    cfg.optim.lr = 0.05;
+    cfg.seed = 3;
+    cfg
+}
+
+fn serve_opts(shards: usize, clients: usize) -> ServeOptions {
+    ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        model: "synthetic:tiny_lm".into(),
+        shards,
+        clients,
+        max_pending: 64,
+    }
+}
+
+/// The acceptance matrix: shards {1,2} × clients {1,4}, snapshot
+/// bit-identity against the single-process reference trainer.
+#[test]
+fn sharded_concurrent_snapshot_is_bit_identical_to_reference() {
+    let steps = 12u64;
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    for kind in [OptKind::Smmf, OptKind::Adam] {
+        let cfg = test_config(kind);
+        for shards in [1usize, 2] {
+            for clients in [1usize, 4] {
+                let tag = format!("{}_{shards}s_{clients}c", kind.name());
+                let snap = tmp(&tag);
+                let refp = tmp(&format!("{tag}_ref"));
+
+                let server = Server::start(&cfg, &serve_opts(shards, clients)).unwrap();
+                let addr = server.addr.to_string();
+                let report =
+                    run_loadgen(&addr, &shapes, cfg.seed, &LoadgenOptions { clients, steps })
+                        .unwrap();
+                let mut ctl = Client::connect(&addr).unwrap();
+                let bytes = ctl.snapshot(snap.to_str().unwrap()).unwrap();
+                let stats = ctl.stats().unwrap();
+                ctl.shutdown().unwrap();
+                let final_stats = server.wait().unwrap();
+
+                assert_eq!(stats.step, steps, "{tag}");
+                assert_eq!(stats.pushes, clients as u64 * steps, "{tag}");
+                assert_eq!(final_stats.snapshots, 1, "{tag}");
+                assert_eq!(report.pushes, clients as u64 * steps, "{tag}");
+
+                let ref_loss =
+                    reference_checkpoint(&cfg, "synthetic:tiny_lm", clients, steps, &refp)
+                        .unwrap();
+                let got = std::fs::read(&snap).unwrap();
+                let want = std::fs::read(&refp).unwrap();
+                assert_eq!(got.len() as u64, bytes, "{tag}: SnapshotDone size");
+                assert!(got == want, "{tag}: snapshot differs from the reference");
+                // the client-observed objective matches the reference's
+                assert_eq!(report.final_loss.to_bits(), ref_loss.to_bits(), "{tag}");
+                // the well actually converges (sanity that training ran)
+                assert!(report.final_loss < 0.125, "{tag}: loss {}", report.final_loss);
+
+                // A snapshot is a regular SMMFCKPT v2 file with the full
+                // section set.
+                let ck = checkpoint::load_any(&snap).unwrap();
+                assert_eq!(ck.step, steps, "{tag}");
+                assert_eq!(ck.opt.as_ref().unwrap().kind, kind, "{tag}");
+                assert!(ck.schedule.is_some() && ck.config.is_some(), "{tag}");
+
+                std::fs::remove_file(&snap).ok();
+                std::fs::remove_file(&refp).ok();
+            }
+        }
+    }
+}
+
+/// Sharding is invisible in the bits: the same run on 1 vs 2 shards
+/// produces identical snapshots (both already equal the reference; this
+/// pins the transitive property directly as well).
+#[test]
+fn shard_count_does_not_change_the_snapshot() {
+    let steps = 8u64;
+    let cfg = test_config(OptKind::Smmf);
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    let mut files = Vec::new();
+    for shards in [1usize, 2] {
+        let snap = tmp(&format!("shardcmp_{shards}"));
+        let server = Server::start(&cfg, &serve_opts(shards, 2)).unwrap();
+        let addr = server.addr.to_string();
+        run_loadgen(&addr, &shapes, cfg.seed, &LoadgenOptions { clients: 2, steps }).unwrap();
+        let mut ctl = Client::connect(&addr).unwrap();
+        ctl.snapshot(snap.to_str().unwrap()).unwrap();
+        ctl.shutdown().unwrap();
+        server.wait().unwrap();
+        files.push(std::fs::read(&snap).unwrap());
+        std::fs::remove_file(&snap).ok();
+    }
+    assert!(files[0] == files[1], "1-shard vs 2-shard snapshots differ");
+}
+
+#[test]
+fn loadgen_reports_finite_latencies_and_throughput() {
+    let cfg = test_config(OptKind::Smmf);
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    let server = Server::start(&cfg, &serve_opts(2, 3)).unwrap();
+    let addr = server.addr.to_string();
+    let report =
+        run_loadgen(&addr, &shapes, cfg.seed, &LoadgenOptions { clients: 3, steps: 6 }).unwrap();
+    Client::connect(&addr).unwrap().shutdown().unwrap();
+    server.wait().unwrap();
+    assert_eq!(report.clients, 3);
+    assert_eq!(report.steps, 6);
+    assert!(report.steps_per_s > 0.0, "{report:?}");
+    assert!(report.push_p50_ms.is_finite() && report.push_p50_ms >= 0.0, "{report:?}");
+    assert!(report.push_p99_ms >= report.push_p50_ms, "{report:?}");
+    assert!(report.push_mean_ms.is_finite(), "{report:?}");
+    assert!(report.elapsed_s > 0.0);
+}
+
+/// Wire-level error paths: bad pushes are rejected with Err (not a
+/// hang, not a dropped connection), replies are not accepted as
+/// requests, and the connection survives to serve further requests.
+#[test]
+fn server_rejects_bad_requests_and_keeps_serving() {
+    let cfg = test_config(OptKind::Smmf);
+    let server = Server::start(&cfg, &serve_opts(1, 2)).unwrap();
+    let addr = server.addr.to_string();
+    let mut c = Client::connect(&addr).unwrap();
+
+    // unknown client id
+    let reply = c.call(Msg::PushGrad { client: 9, step: 1, grads: vec![] }).unwrap();
+    assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
+    // wrong step
+    let reply = c.call(Msg::PushGrad { client: 0, step: 5, grads: vec![] }).unwrap();
+    assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
+    // wrong tensor count (right client, right step)
+    let reply = c.call(Msg::PushGrad { client: 0, step: 1, grads: vec![vec![1.0]] }).unwrap();
+    assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
+    // a reply op sent as a request is rejected by the handler
+    let reply = c.call(Msg::Ack { step: 1 }).unwrap();
+    assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
+    // snapshot to an unwritable path errors instead of killing the server
+    let reply = c.call(Msg::Snapshot { path: "/definitely/not/a/dir/x.bin".into() }).unwrap();
+    assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
+
+    // a loadgen whose client count disagrees with the server's barrier
+    // width fails loudly up front instead of deadlocking the barrier
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    let e = run_loadgen(&addr, &shapes, cfg.seed, &LoadgenOptions { clients: 1, steps: 1 })
+        .unwrap_err();
+    assert!(format!("{e:#}").contains("barrier"), "{e:#}");
+
+    // …and the same connection still works
+    let (step, tensors) = c.pull_params().unwrap();
+    assert_eq!(step, 0);
+    assert_eq!(tensors.len(), inventory_by_name("tiny_lm").unwrap().tensors.len());
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.step, 0);
+    assert_eq!((stats.shards, stats.clients), (1, 2));
+    c.shutdown().unwrap();
+    server.wait().unwrap();
+}

@@ -1,0 +1,254 @@
+//! Wire-codec property and corruption tests for the `SMMFWIRE`
+//! protocol (`server::protocol`), in the same strict-decode style as the
+//! `optim/blob.rs` and checkpoint-container tests: every op roundtrips,
+//! every strict prefix of a valid frame errors cleanly, hostile length
+//! fields are rejected *before* any allocation, and bad magic/version/op
+//! bytes produce context-rich errors — never a panic or an OOM.
+
+use smmf_repro::server::protocol::{
+    self, decode, encode, read_frame, write_frame, Frame, Msg, ServerStats, HEADER_LEN,
+    MAX_PAYLOAD, OP_PUSH_GRAD,
+};
+use smmf_repro::util::prop;
+
+fn all_ops() -> Vec<Msg> {
+    vec![
+        Msg::PushGrad {
+            client: 3,
+            step: 41,
+            grads: vec![vec![1.0, -2.5, 0.0], vec![], vec![f32::MIN, f32::MAX]],
+        },
+        Msg::PullParams,
+        Msg::Snapshot { path: "runs/server/snapshot.bin".into() },
+        Msg::Stats,
+        Msg::Shutdown,
+        Msg::Ack { step: 7 },
+        Msg::Params { step: 6, tensors: vec![vec![0.25; 17], vec![-1.0]] },
+        Msg::SnapshotDone { bytes: 123_456_789 },
+        Msg::StatsReply(ServerStats {
+            step: 9,
+            shards: 2,
+            clients: 4,
+            pushes: 36,
+            busy: 1,
+            snapshots: 2,
+        }),
+        Msg::Busy,
+        Msg::Bye,
+        Msg::Err { msg: "client 9 already pushed for step 3".into() },
+    ]
+}
+
+#[test]
+fn every_op_roundtrips_through_slice_and_stream() {
+    for (i, msg) in all_ops().into_iter().enumerate() {
+        let frame = Frame { request_id: 1000 + i as u64, msg };
+        // slice path
+        let bytes = encode(&frame);
+        assert_eq!(decode(&bytes).unwrap(), frame, "op {}", frame.msg.name());
+        // stream path
+        let mut cur = std::io::Cursor::new(bytes);
+        assert_eq!(read_frame(&mut cur).unwrap(), frame, "op {}", frame.msg.name());
+    }
+}
+
+#[test]
+fn back_to_back_frames_stream_cleanly() {
+    let frames: Vec<Frame> = all_ops()
+        .into_iter()
+        .enumerate()
+        .map(|(i, msg)| Frame { request_id: i as u64, msg })
+        .collect();
+    let mut buf = Vec::new();
+    for f in &frames {
+        write_frame(&mut buf, f).unwrap();
+    }
+    let mut cur = std::io::Cursor::new(buf);
+    for f in &frames {
+        assert_eq!(&read_frame(&mut cur).unwrap(), f);
+    }
+    // stream exhausted: the next read errors instead of hanging
+    assert!(read_frame(&mut cur).is_err());
+}
+
+#[test]
+fn every_strict_prefix_of_every_op_errors() {
+    for msg in all_ops() {
+        let name = msg.name();
+        let full = encode(&Frame { request_id: 5, msg });
+        for cut in 0..full.len() {
+            assert!(decode(&full[..cut]).is_err(), "{name}: prefix of {cut} bytes parsed");
+            let mut cur = std::io::Cursor::new(&full[..cut]);
+            assert!(read_frame(&mut cur).is_err(), "{name}: stream prefix of {cut} bytes parsed");
+        }
+        assert!(decode(&full).is_ok(), "{name}");
+    }
+}
+
+#[test]
+fn bad_magic_version_and_op_are_rejected() {
+    let good = encode(&Frame { request_id: 1, msg: Msg::PullParams });
+
+    // flip each magic byte
+    for i in 0..8 {
+        let mut bad = good.clone();
+        bad[i] ^= 0xff;
+        let e = decode(&bad).unwrap_err();
+        assert!(format!("{e:#}").contains("magic"), "byte {i}: {e:#}");
+    }
+    // wrong version
+    let mut bad = good.clone();
+    bad[8..12].copy_from_slice(&99u32.to_le_bytes());
+    let e = decode(&bad).unwrap_err();
+    assert!(format!("{e:#}").contains("version"), "{e:#}");
+    // unknown op byte (offset 20)
+    let mut bad = good.clone();
+    bad[20] = 0xee;
+    let e = decode(&bad).unwrap_err();
+    assert!(format!("{e:#}").contains("unknown"), "{e:#}");
+}
+
+#[test]
+fn oversized_length_prefix_is_rejected_before_allocation() {
+    // Header claims a payload beyond MAX_PAYLOAD: both decode paths must
+    // refuse from the header alone. A reader that trusted this length
+    // would try to allocate 2^60 bytes — the test passing at all is the
+    // proof it never gets there.
+    let good = encode(&Frame { request_id: 1, msg: Msg::Stats });
+    let mut bad = good.clone();
+    bad[21..29].copy_from_slice(&(1u64 << 60).to_le_bytes());
+    let e = decode(&bad).unwrap_err();
+    assert!(format!("{e:#}").contains("cap"), "{e:#}");
+    let mut cur = std::io::Cursor::new(&bad);
+    assert!(read_frame(&mut cur).is_err());
+    // just over the cap is also refused
+    let mut bad = good.clone();
+    bad[21..29].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
+    assert!(decode(&bad).is_err());
+}
+
+/// Hand-build a PushGrad frame whose tensor claims more f32 elements
+/// than the payload holds: the remaining-bytes check must fire before
+/// the element buffer is allocated.
+#[test]
+fn fabricated_tensor_count_is_caught_by_the_remaining_bytes_check() {
+    use smmf_repro::optim::blob::BlobWriter;
+    let mut p = BlobWriter::new();
+    p.u32(0); // client
+    p.u64(1); // step
+    p.u32(1); // one tensor…
+    p.u64(1 << 40); // …claiming 2^40 elements
+    let payload = p.finish();
+    let mut w = BlobWriter::new();
+    w.bytes(protocol::MAGIC);
+    w.u32(protocol::VERSION);
+    w.u64(9);
+    w.u8(OP_PUSH_GRAD);
+    w.u64(payload.len() as u64);
+    w.bytes(&payload);
+    let e = decode(&w.finish()).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("remain"), "{msg}");
+
+    // absurd tensor *count* is capped too
+    let mut p = BlobWriter::new();
+    p.u32(0);
+    p.u64(1);
+    p.u32(u32::MAX);
+    let payload = p.finish();
+    let mut w = BlobWriter::new();
+    w.bytes(protocol::MAGIC);
+    w.u32(protocol::VERSION);
+    w.u64(9);
+    w.u8(OP_PUSH_GRAD);
+    w.u64(payload.len() as u64);
+    w.bytes(&payload);
+    let e = decode(&w.finish()).unwrap_err();
+    assert!(format!("{e:#}").contains("cap"), "{e:#}");
+}
+
+#[test]
+fn trailing_payload_bytes_are_rejected() {
+    // An Ack payload with one extra byte: decode_payload's finish()
+    // must flag it (a desynced stream must not be silently accepted).
+    let good = encode(&Frame { request_id: 2, msg: Msg::Ack { step: 3 } });
+    let mut bad = good.clone();
+    bad.push(0);
+    // fix up the declared length to cover the extra byte
+    let len = (bad.len() - HEADER_LEN) as u64;
+    bad[21..29].copy_from_slice(&len.to_le_bytes());
+    let e = decode(&bad).unwrap_err();
+    assert!(format!("{e:#}").contains("trailing"), "{e:#}");
+
+    // extra bytes *after* the declared payload are flagged by decode too
+    let mut bad = good;
+    bad.push(0);
+    assert!(decode(&bad).is_err());
+}
+
+#[test]
+fn string_caps_apply_to_snapshot_and_err() {
+    let long = "x".repeat(protocol::MAX_STR_LEN + 1);
+    // An over-long snapshot path is NOT clipped on encode (a silently
+    // truncated path would be worse) — the decoder rejects the frame.
+    let bytes = encode(&Frame { request_id: 1, msg: Msg::Snapshot { path: long.clone() } });
+    let e = decode(&bytes).unwrap_err();
+    assert!(format!("{e:#}").contains("cap"), "{e:#}");
+    // An over-long Err message IS clipped on encode (char-boundary
+    // safe), so an anyhow chain longer than the cap still reaches the
+    // peer instead of killing the connection.
+    let bytes = encode(&Frame { request_id: 1, msg: Msg::Err { msg: format!("{long}é") } });
+    match decode(&bytes).unwrap().msg {
+        Msg::Err { msg } => {
+            assert_eq!(msg.len(), protocol::MAX_STR_LEN);
+            assert!(msg.chars().all(|c| c == 'x'));
+        }
+        other => panic!("expected Err, got {}", other.name()),
+    }
+    // clipping lands on a char boundary even when a multibyte char
+    // straddles the cap
+    let straddle = format!("{}é tail", "x".repeat(protocol::MAX_STR_LEN - 1));
+    let bytes = encode(&Frame { request_id: 1, msg: Msg::Err { msg: straddle } });
+    match decode(&bytes).unwrap().msg {
+        Msg::Err { msg } => assert_eq!(msg.len(), protocol::MAX_STR_LEN - 1),
+        other => panic!("expected Err, got {}", other.name()),
+    }
+    // at the cap is fine, untouched
+    let ok = "y".repeat(protocol::MAX_STR_LEN);
+    let f = Frame { request_id: 1, msg: Msg::Snapshot { path: ok } };
+    assert_eq!(decode(&encode(&f)).unwrap(), f);
+}
+
+#[test]
+fn grads_payload_bytes_matches_the_encoder() {
+    let shapes = vec![vec![3, 2], vec![7], vec![1]];
+    let grads: Vec<Vec<f32>> =
+        shapes.iter().map(|s| vec![0.5; s.iter().product()]).collect();
+    let frame = Frame { request_id: 1, msg: Msg::PushGrad { client: 0, step: 1, grads } };
+    let expect = protocol::grads_payload_bytes(&shapes);
+    assert_eq!(encode(&frame).len() as u64, HEADER_LEN as u64 + expect);
+}
+
+#[test]
+fn prop_random_corruption_never_panics() {
+    // Flip random bytes of random valid frames: decoding must always
+    // return (Ok for the rare no-op flip of f32 payload bytes, Err
+    // otherwise) — never panic, never hang, never over-allocate.
+    let ops = all_ops();
+    prop::cases(200, |rng| {
+        let frame = Frame {
+            request_id: rng.next_u64(),
+            msg: ops[rng.below(ops.len())].clone(),
+        };
+        let mut bytes = encode(&frame);
+        let flips = 1 + rng.below(4);
+        for _ in 0..flips {
+            let i = rng.below(bytes.len());
+            bytes[i] ^= 1u8 << rng.below(8);
+        }
+        let _ = decode(&bytes);
+        // truncate at a random point too
+        let cut = rng.below(bytes.len() + 1);
+        let _ = decode(&bytes[..cut]);
+    });
+}

@@ -29,6 +29,15 @@ cargo test --release --test grouped_build
 echo "== suite subsystem (expansion, synthetic cells, report determinism) =="
 cargo test --release --test suite
 
+echo "== server wire codec (roundtrip + corruption) =="
+cargo test --release --test server_protocol
+
+echo "== server e2e (K-shard x N-client snapshot bit-identity) =="
+cargo test --release --test server_e2e
+
+echo "== CLI help drift guard =="
+cargo test --release --test cli_help
+
 # Suite smoke: 2 optimizers × 1 model × 2 seeds on the artifact-free
 # synthetic workload, run twice — the second pass must skip every cached
 # cell and re-render a byte-identical report (the docs/RESULTS.md
@@ -42,6 +51,16 @@ cargo run --release -- suite tests/suite_smoke.toml \
   --out-dir target/suite-smoke --docs target/suite-smoke/RESULTS.2.md \
   --bench-json target/suite-smoke/BENCH_suite.2.json
 cmp target/suite-smoke/RESULTS.md target/suite-smoke/RESULTS.2.md
+
+# Server smoke: loopback optimizer-state server, 4 clients × 2 shards
+# on the synthetic workload; --check asserts the snapshot is
+# byte-identical to the single-process reference trainer and the run
+# refreshes the BENCH_server.json throughput/latency record.
+echo "== server smoke (repro loadgen --check, 2 shards x 4 clients) =="
+cargo run --release -- loadgen --model synthetic:tiny_lm \
+  --clients 4 --shards 2 --steps 30 \
+  --snapshot target/serve-smoke/snapshot.bin --check \
+  --bench-json "${SMMF_SERVER_BENCH_JSON:-../BENCH_server.json}"
 
 # Grouped end-to-end: train -> save -> resume with a bias/norm-exempt
 # group config through the real CLI. Needs AOT artifacts (make
