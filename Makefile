@@ -12,6 +12,11 @@
 #                    shards on synthetic:tiny_lm; asserts the snapshot
 #                    is byte-identical to the single-process reference
 #                    trainer and refreshes BENCH_server.json
+#   make chaos-smoke fault-tolerance smoke: drop a client + kill a shard
+#                    worker mid-run (--check pins the snapshot against
+#                    the elastic reference trainer), then a slow client
+#                    under an armed eviction deadline; refreshes
+#                    BENCH_server.json with degraded-vs-healthy numbers
 #   make docs-check  regenerate docs/RESULTS.md from the checked-in
 #                    fixture summaries, fail on diff, and verify every
 #                    docs link / file:line anchor
@@ -19,7 +24,7 @@
 #   make docs        rustdoc for the crate, warnings-clean (--no-deps)
 #   make artifacts   AOT-lower the JAX/Pallas graphs (needs python + jax)
 
-.PHONY: build test smoke suite-smoke serve-smoke docs-check bench docs artifacts
+.PHONY: build test smoke suite-smoke serve-smoke chaos-smoke docs-check bench docs artifacts
 
 build:
 	cd rust && cargo build --release
@@ -47,6 +52,18 @@ serve-smoke:
 	  --snapshot target/serve-smoke/snapshot.bin --check \
 	  --bench-json ../BENCH_server.json
 	@echo "serve-smoke OK: 2-shard x 4-client snapshot byte-identical to the single-process trainer"
+
+chaos-smoke:
+	cd rust && cargo run --release -- loadgen --model synthetic:tiny_lm \
+	  --clients 3 --shards 2 --steps 20 \
+	  --drop-client 8 --kill-shard 5 --client-timeout-ms 400 \
+	  --snapshot target/chaos-smoke/snapshot.bin --check \
+	  --bench-json target/chaos-smoke/BENCH_chaos.json
+	cd rust && cargo run --release -- loadgen --model synthetic:tiny_lm \
+	  --clients 3 --shards 2 --steps 12 \
+	  --slow-client 40 --client-timeout-ms 2000 \
+	  --bench-json ../BENCH_server.json
+	@echo "chaos-smoke OK: survived a client drop + shard kill bit-identically, and a slow client under an armed deadline"
 
 docs-check:
 	cd rust && cargo run --release -- report tests/fixtures/suite_report/smoke \

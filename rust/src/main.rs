@@ -112,8 +112,13 @@ commands:
   serve             optimizer-state server: sharded, batched gradient
                     ingestion over the SMMFWIRE binary protocol
                     (--model synthetic:tiny_lm, --shards K, --clients N,
-                    --addr HOST:PORT, --max-pending Q, [server] TOML;
-                    stops on a client Shutdown op; see
+                    --addr HOST:PORT, --max-pending Q,
+                    --client-timeout-ms MS [evict barrier members that
+                    stop pushing; 0 = never], --resilient [respawn dead
+                    shard workers from a per-step recovery image],
+                    --resume SNAPSHOT.bin [restore params + optimizer
+                    state, re-sharding if --shards differs],
+                    [server] TOML; stops on a client Shutdown op; see
                     docs/SERVER_PROTOCOL.md)
   loadgen           drive a state server with N concurrent gradient
                     clients and emit throughput + p50/p99 push latency
@@ -121,8 +126,16 @@ commands:
                     server [--shards K] unless --connect HOST:PORT;
                     --snapshot PATH, --check [assert the snapshot is
                     bit-identical to the single-process reference
-                    trainer], --bench-json PATH [default
-                    BENCH_server.json])
+                    trainer, elastic-aware under --drop-client],
+                    --bench-json PATH [default BENCH_server.json];
+                    chaos faults: --slow-client MS [p95 exponential
+                    think time on the highest-id client],
+                    --drop-client STEP [that client crashes after
+                    pushing STEP; needs --client-timeout-ms],
+                    --kill-shard STEP [kill a shard worker once the
+                    server passes STEP; implies --resilient]; any
+                    fault also runs a healthy baseline first and
+                    reports degraded vs healthy steps/s)
 common flags: --artifacts DIR (default ./artifacts), --seed N,
               --threads N (parallel optimizer step engine; 1 = serial),
               --save-every N / --resume PATH (SMMFCKPT v2 checkpoints;
@@ -480,11 +493,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         opts.clients,
         cfg.optimizer.name()
     );
+    if opts.client_timeout_ms > 0 || opts.resilient || opts.resume.is_some() {
+        println!(
+            "[serve] fault tolerance: client_timeout_ms={} resilient={}{}",
+            opts.client_timeout_ms,
+            opts.resilient,
+            opts.resume
+                .as_deref()
+                .map(|p| format!(", resumed from {p}"))
+                .unwrap_or_default()
+        );
+    }
     println!("[serve] drive it with `repro loadgen --connect {}` (a Shutdown op stops it)", server.addr);
     let stats = server.wait()?;
     println!(
-        "[serve] stopped at step {} — {} pushes, {} busy bounces, {} snapshot(s)",
-        stats.step, stats.pushes, stats.busy, stats.snapshots
+        "[serve] stopped at step {} (epoch {}) — {} pushes, {} busy bounces, {} snapshot(s), \
+         {} eviction(s), {} shard respawn(s)",
+        stats.step, stats.epoch, stats.pushes, stats.busy, stats.snapshots, stats.evictions,
+        stats.respawns
     );
     Ok(())
 }
@@ -519,6 +545,47 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
              working directory and config"
         );
     }
+
+    // Chaos-fault knobs (docs/ARCHITECTURE.md has the failure model).
+    let slow_client_ms = match args.opt("slow-client") {
+        None => 0.0,
+        Some(s) => {
+            let v: f64 = s
+                .parse()
+                .map_err(|_| anyhow!("--slow-client wants a p95 in milliseconds, got {s:?}"))?;
+            if v < 0.0 {
+                bail!("--slow-client must be >= 0 (got {v})");
+            }
+            v
+        }
+    };
+    let drop_client_at = args.count_or("drop-client", 0).map_err(|e| anyhow!(e))? as u64;
+    let kill_shard_at = args.count_or("kill-shard", 0).map_err(|e| anyhow!(e))? as u64;
+    if drop_client_at > 0 {
+        if opts.clients < 2 {
+            bail!("--drop-client needs --clients >= 2 (someone must survive the barrier)");
+        }
+        if opts.client_timeout_ms == 0 {
+            bail!(
+                "--drop-client needs --client-timeout-ms > 0, or the surviving clients \
+                 wait on the dropped one forever"
+            );
+        }
+    }
+    if kill_shard_at > 0 {
+        if args.opt("connect").is_some() {
+            bail!("--kill-shard injects the fault in-process — it needs a self-spawned server");
+        }
+        // A killed shard without resilience is just a dead server.
+        opts.resilient = true;
+    }
+    if check && slow_client_ms > 0.0 {
+        bail!(
+            "--check with --slow-client is unsupported: whether the slow client gets \
+             evicted depends on wall-clock timing, so there is no fixed membership \
+             schedule for the reference trainer to replay"
+        );
+    }
     let snapshot_was_temp = check && args.opt("snapshot").is_none();
     let snapshot: Option<String> = args.opt("snapshot").map(String::from).or_else(|| {
         check.then(|| {
@@ -545,6 +612,37 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     let inv_name =
         opts.model.strip_prefix("synthetic:").unwrap_or(&opts.model).to_string();
     let shapes = srv::resolve_inventory(&opts.model)?.shapes();
+
+    // With a fault injected, first measure the same run healthy on its
+    // own throwaway server — the degraded-vs-healthy throughput ratio
+    // is the recovery-cost headline of BENCH_server.json.
+    let faults = slow_client_ms > 0.0 || drop_client_at > 0 || kill_shard_at > 0;
+    let healthy_steps_per_s = if faults && external.is_none() {
+        let mut hopts = opts.clone();
+        hopts.addr = "127.0.0.1:0".into();
+        let hsrv = srv::Server::start(&cfg, &hopts)?;
+        let haddr = hsrv.addr.to_string();
+        let hstart = srv::Client::connect(&haddr)?.stats()?.step + 1;
+        let rep = srv::run_loadgen(
+            &haddr,
+            &shapes,
+            cfg.seed,
+            &srv::LoadgenOptions {
+                clients: opts.clients,
+                steps,
+                start_step: hstart,
+                slow_client_ms: 0.0,
+                drop_client_at: 0,
+            },
+        )?;
+        srv::Client::connect(&haddr)?.shutdown()?;
+        hsrv.wait()?;
+        println!("[loadgen] healthy baseline: {:.1} steps/s", rep.steps_per_s);
+        Some(rep.steps_per_s)
+    } else {
+        None
+    };
+
     println!(
         "[loadgen] {} client(s) × {} steps on {} against {} ({} shard(s), optimizer {})",
         opts.clients,
@@ -554,12 +652,58 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         opts.shards,
         cfg.optimizer.name()
     );
-    let report = srv::run_loadgen(
-        &addr,
-        &shapes,
-        cfg.seed,
-        &srv::LoadgenOptions { clients: opts.clients, steps },
-    )?;
+    // A resumed server sits past step 0 — start where it left off (the
+    // gradient-noise streams fast-forward to match).
+    let start_step = srv::Client::connect(&addr)?.stats()?.step + 1;
+    if check && start_step > 1 {
+        bail!(
+            "--check compares against a from-scratch reference trainer, but the server \
+             is already at step {} — re-run without --resume/--check together",
+            start_step - 1
+        );
+    }
+    let lopts = srv::LoadgenOptions {
+        clients: opts.clients,
+        steps,
+        start_step,
+        slow_client_ms,
+        drop_client_at,
+    };
+    let report = {
+        use std::sync::atomic::{AtomicBool, Ordering};
+        let done = AtomicBool::new(false);
+        let server_ref = server.as_ref();
+        std::thread::scope(|s| -> Result<srv::LoadgenReport> {
+            // Chaos harness: poll the server's applied step from a side
+            // connection and kill shard 0's worker thread once the run
+            // passes --kill-shard. Recovery happens mid-run, under load.
+            let killer = (kill_shard_at > 0).then(|| {
+                let done = &done;
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let Ok(mut c) = srv::Client::connect(&addr) else { return };
+                    while !done.load(Ordering::SeqCst) {
+                        match c.stats() {
+                            Ok(st) if st.step >= kill_shard_at => {
+                                if let Some(sv) = server_ref {
+                                    sv.kill_shard(0);
+                                }
+                                return;
+                            }
+                            Ok(_) => std::thread::sleep(std::time::Duration::from_millis(2)),
+                            Err(_) => return,
+                        }
+                    }
+                })
+            });
+            let r = srv::run_loadgen(&addr, &shapes, cfg.seed, &lopts);
+            done.store(true, Ordering::SeqCst);
+            if let Some(k) = killer {
+                let _ = k.join();
+            }
+            r
+        })?
+    };
 
     // Control connection: snapshot + stats, then stop a self-spawned
     // server (an external server keeps running).
@@ -585,6 +729,36 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         "[loadgen] {} pushes accepted, {} busy retries (client), {} busy bounces (server), final loss {:.4}",
         report.pushes, report.busy_retries, stats.busy, report.final_loss
     );
+    if faults {
+        println!(
+            "[loadgen] faults: {} client(s) evicted, {} eviction(s) server-side, \
+             {} shard respawn(s) ({} ms recovering), final epoch {}",
+            report.evicted, stats.evictions, stats.respawns, stats.recovery_ms, stats.epoch
+        );
+    }
+    if let Some(h) = healthy_steps_per_s {
+        println!(
+            "[loadgen] degraded {:.1} steps/s vs healthy {:.1} steps/s ({:.0}% of healthy)",
+            report.steps_per_s,
+            h,
+            100.0 * report.steps_per_s / h.max(1e-12)
+        );
+    }
+    if kill_shard_at > 0 && stats.respawns == 0 {
+        bail!(
+            "--kill-shard {kill_shard_at} was requested but the server reports no \
+             respawns — the kill never landed (did the run end before step \
+             {kill_shard_at}?)"
+        );
+    }
+    // (Eviction lands at drop + 1, so it only exists when the run has a
+    // step after the drop.)
+    if drop_client_at > 0 && drop_client_at < start_step + steps - 1 && stats.evictions == 0 {
+        bail!(
+            "--drop-client {drop_client_at} was requested but the server reports no \
+             evictions — the drop never landed"
+        );
+    }
     if let (Some(path), Some(bytes)) = (&snapshot, snap_bytes) {
         let locus = if external.is_some() { " on the server host" } else { "" };
         println!("[loadgen] snapshot -> {path}{locus} ({} bytes, SMMFCKPT v2)", bytes);
@@ -592,31 +766,50 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
 
     let bench_path = args.str_or("bench-json", &default_server_bench());
     let mut sink = JsonSink::new("server_loadgen", &bench_path);
-    sink.push(
-        ObjBuilder::new()
-            .str("name", &format!("loadgen/{inv_name}"))
-            .str("model", &opts.model)
-            .str("optimizer", cfg.optimizer.name())
-            .num("shards", opts.shards as f64)
-            .num("clients", opts.clients as f64)
-            .num("steps", report.steps as f64)
-            .num("steps_per_s", report.steps_per_s)
-            .num("push_p50_ms", report.push_p50_ms)
-            .num("push_p99_ms", report.push_p99_ms)
-            .num("push_mean_ms", report.push_mean_ms)
-            .num("pushes", report.pushes as f64)
-            .num("busy", stats.busy as f64)
-            .num("final_loss", report.final_loss as f64)
-            .build(),
-    );
+    let mut record = ObjBuilder::new()
+        .str("name", &format!("loadgen/{inv_name}"))
+        .str("model", &opts.model)
+        .str("optimizer", cfg.optimizer.name())
+        .num("shards", opts.shards as f64)
+        .num("clients", opts.clients as f64)
+        .num("steps", report.steps as f64)
+        .num("steps_per_s", report.steps_per_s)
+        .num("push_p50_ms", report.push_p50_ms)
+        .num("push_p99_ms", report.push_p99_ms)
+        .num("push_mean_ms", report.push_mean_ms)
+        .num("pushes", report.pushes as f64)
+        .num("busy", stats.busy as f64)
+        .num("final_loss", report.final_loss as f64)
+        .num("epoch", stats.epoch as f64)
+        .num("evictions", stats.evictions as f64)
+        .num("respawns", stats.respawns as f64)
+        .num("recovery_ms", stats.recovery_ms as f64);
+    if let Some(h) = healthy_steps_per_s {
+        record = record.num("healthy_steps_per_s", h);
+    }
+    sink.push(record.build());
     sink.write()?;
     println!("[loadgen] bench record -> {bench_path}");
 
     if check {
         let snap = snapshot.as_ref().expect("--check implies a snapshot path");
         let ref_path = format!("{snap}.ref");
-        let ref_loss =
-            srv::reference_checkpoint(&cfg, &opts.model, opts.clients, steps, Path::new(&ref_path))?;
+        // Under --drop-client the membership schedule is deterministic
+        // (eviction lands exactly at drop + 1), so the oracle is the
+        // elastic reference trainer over that schedule.
+        let ref_loss = if drop_client_at > 0 {
+            let all: Vec<u32> = (0..opts.clients as u32).collect();
+            let survivors: Vec<u32> = (0..opts.clients as u32 - 1).collect();
+            srv::reference_checkpoint_elastic(
+                &cfg,
+                &opts.model,
+                &[(1, all), (drop_client_at + 1, survivors)],
+                steps,
+                Path::new(&ref_path),
+            )?
+        } else {
+            srv::reference_checkpoint(&cfg, &opts.model, opts.clients, steps, Path::new(&ref_path))?
+        };
         let got = std::fs::read(snap)?;
         let want = std::fs::read(&ref_path)?;
         if got != want {

@@ -2,41 +2,61 @@
 //! N-client server bit-identical to the single-process trainer.
 //!
 //! Clients push complete gradient sets tagged with `(client id, step)`.
-//! The [`StepBatcher`] holds them until every client `0..N` has pushed
-//! for the current step (the *step barrier*), then combines them into
-//! one coalesced gradient by accumulating `(1/N)·g_c` **in ascending
-//! client-id order** onto a zero buffer. Floating-point addition is not
-//! associative, so pinning the reduction order — rather than coalescing
-//! in arrival order — is what makes the applied step independent of
-//! network timing: any interleaving of pushes produces the same bits.
-//! The single-process reference trainer
-//! (`server::service::reference_checkpoint`) performs the identical
-//! reduction, which is what the snapshot bit-identity e2e asserts.
+//! The [`StepBatcher`] holds them until every *member* of the current
+//! epoch has pushed for the current step (the *step barrier*), then
+//! combines them into one coalesced gradient by accumulating
+//! `(1/width)·g_c` **in ascending client-id order** onto a zero buffer.
+//! Floating-point addition is not associative, so pinning the reduction
+//! order — rather than coalescing in arrival order — is what makes the
+//! applied step independent of network timing: any interleaving of
+//! pushes produces the same bits. The single-process reference trainer
+//! (`server::service::reference_checkpoint_elastic`) performs the
+//! identical reduction over the identical membership schedule, which is
+//! what the snapshot bit-identity e2e asserts.
 //!
-//! The batcher is pure bookkeeping (no threads, no IO), so the barrier
-//! logic is unit-testable in isolation.
+//! Membership is elastic: [`StepBatcher::join`] and
+//! [`StepBatcher::leave`] restructure the barrier between (or during)
+//! steps, and [`StepBatcher::evict_unpushed`] removes every member that
+//! has not pushed for the assembling step — the deadline path that
+//! keeps one stalled client from wedging the world. The epoch counter
+//! itself lives in the coordinator (`service.rs`); the batcher is pure
+//! bookkeeping (no threads, no IO), so the barrier logic is
+//! unit-testable in isolation.
 
 use crate::tensor::Tensor;
 
 /// Outcome of offering one client push to the current step's barrier.
 #[derive(Debug, PartialEq)]
 pub enum Offer {
-    /// Stored; the barrier still waits for other clients.
+    /// Stored; the barrier still waits for other members.
     Accepted,
     /// Stored, and this push completed the barrier — the caller must now
     /// [`StepBatcher::take_coalesced`] and apply the step.
     Completed,
-    /// Rejected (unknown client, wrong step, duplicate, bad shapes); the
+    /// Rejected (non-member, wrong step, duplicate, bad shapes); the
     /// barrier state is unchanged.
     Rejected(String),
 }
 
-/// Accumulates per-client gradient pushes for one step at a time.
+/// Outcome of a member leaving mid-barrier.
+#[derive(Debug, PartialEq)]
+pub struct LeaveOutcome {
+    /// The departing member had a pending (un-coalesced) push that was
+    /// discarded — its deferred reply must be failed by the caller.
+    pub had_pending: bool,
+    /// Removing the member completed the barrier for the remaining
+    /// members — the caller must now [`StepBatcher::take_coalesced`].
+    pub completed: bool,
+}
+
+/// Accumulates per-member gradient pushes for one step at a time.
 pub struct StepBatcher {
-    n_clients: usize,
+    /// Barrier members, ascending client id (the reduction order).
+    members: Vec<u32>,
     shapes: Vec<Vec<usize>>,
     /// The step currently being assembled (first step is 1).
     step: u64,
+    /// Pending push per member, parallel to `members`.
     pending: Vec<Option<Vec<Tensor>>>,
     received: usize,
 }
@@ -45,14 +65,38 @@ impl StepBatcher {
     /// A barrier over clients `0..n_clients` pushing gradients for the
     /// given tensor shapes (inventory registration order).
     pub fn new(n_clients: usize, shapes: Vec<Vec<usize>>) -> StepBatcher {
-        assert!(n_clients >= 1, "barrier needs at least one client");
-        StepBatcher {
-            n_clients,
-            shapes,
-            step: 1,
-            pending: (0..n_clients).map(|_| None).collect(),
-            received: 0,
-        }
+        StepBatcher::with_members((0..n_clients as u32).collect(), shapes, 1)
+    }
+
+    /// A barrier over an explicit member set, assembling `first_step`
+    /// next (a resumed server starts past 1). Members must be distinct;
+    /// they are kept in ascending id order.
+    pub fn with_members(
+        mut members: Vec<u32>,
+        shapes: Vec<Vec<usize>>,
+        first_step: u64,
+    ) -> StepBatcher {
+        assert!(!members.is_empty(), "barrier needs at least one member");
+        assert!(first_step >= 1, "steps are 1-based");
+        members.sort_unstable();
+        assert!(members.windows(2).all(|w| w[0] < w[1]), "duplicate member ids");
+        let pending = members.iter().map(|_| None).collect();
+        StepBatcher { members, shapes, step: first_step, pending, received: 0 }
+    }
+
+    /// Current members, ascending client id.
+    pub fn members(&self) -> &[u32] {
+        &self.members
+    }
+
+    /// Barrier width (= member count).
+    pub fn width(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Pushes stored for the assembling step so far.
+    pub fn received(&self) -> usize {
+        self.received
     }
 
     /// The step currently being assembled (= applied steps + 1).
@@ -65,24 +109,23 @@ impl StepBatcher {
         self.step - 1
     }
 
-    /// Offer client `client`'s gradient set for `step`. Flat per-tensor
+    /// Offer member `client`'s gradient set for `step`. Flat per-tensor
     /// data is validated against the inventory shapes before it is
     /// stored.
     pub fn offer(&mut self, client: u32, step: u64, grads: Vec<Vec<f32>>) -> Offer {
-        let c = client as usize;
-        if c >= self.n_clients {
+        let Ok(slot) = self.members.binary_search(&client) else {
             return Offer::Rejected(format!(
-                "unknown client {client} (barrier width {})",
-                self.n_clients
+                "client {client} is not a member of the barrier (width {})",
+                self.members.len()
             ));
-        }
+        };
         if step != self.step {
             return Offer::Rejected(format!(
                 "push for step {step}, server is assembling step {}",
                 self.step
             ));
         }
-        if self.pending[c].is_some() {
+        if self.pending[slot].is_some() {
             return Offer::Rejected(format!("client {client} already pushed for step {step}"));
         }
         if grads.len() != self.shapes.len() {
@@ -103,22 +146,81 @@ impl StepBatcher {
             }
             tensors.push(Tensor::from_vec(shape, data));
         }
-        self.pending[c] = Some(tensors);
+        self.pending[slot] = Some(tensors);
         self.received += 1;
-        if self.received == self.n_clients {
+        if self.received == self.members.len() {
             Offer::Completed
         } else {
             Offer::Accepted
         }
     }
 
+    /// Add a member to the barrier (effective for the assembling step:
+    /// the widened barrier now also waits on the joiner). Errs on a
+    /// duplicate id.
+    pub fn join(&mut self, client: u32) -> Result<(), String> {
+        match self.members.binary_search(&client) {
+            Ok(_) => Err(format!("client {client} is already a member")),
+            Err(slot) => {
+                self.members.insert(slot, client);
+                self.pending.insert(slot, None);
+                Ok(())
+            }
+        }
+    }
+
+    /// Remove a member; any pending push it had for the assembling step
+    /// is discarded. Errs on a non-member or when it is the last member
+    /// (an empty barrier can never complete — the caller keeps the world
+    /// at width >= 1).
+    pub fn leave(&mut self, client: u32) -> Result<LeaveOutcome, String> {
+        let slot = self
+            .members
+            .binary_search(&client)
+            .map_err(|_| format!("client {client} is not a member"))?;
+        if self.members.len() == 1 {
+            return Err(format!("client {client} is the last member — the barrier cannot empty"));
+        }
+        self.members.remove(slot);
+        let had_pending = self.pending.remove(slot).is_some();
+        if had_pending {
+            self.received -= 1;
+        }
+        let completed = self.received > 0 && self.received == self.members.len();
+        Ok(LeaveOutcome { had_pending, completed })
+    }
+
+    /// Evict every member that has NOT pushed for the assembling step
+    /// (the `client_timeout_ms` deadline path). Requires at least one
+    /// pending push — afterwards the barrier is complete over the
+    /// survivors. Returns the evicted ids, ascending.
+    pub fn evict_unpushed(&mut self) -> Vec<u32> {
+        assert!(self.received >= 1, "eviction needs at least one pushed member to survive");
+        let mut evicted = Vec::new();
+        let mut keep_members = Vec::with_capacity(self.received);
+        let mut keep_pending = Vec::with_capacity(self.received);
+        for (m, p) in self.members.drain(..).zip(self.pending.drain(..)) {
+            if p.is_some() {
+                keep_members.push(m);
+                keep_pending.push(p);
+            } else {
+                evicted.push(m);
+            }
+        }
+        self.members = keep_members;
+        self.pending = keep_pending;
+        debug_assert_eq!(self.received, self.members.len());
+        evicted
+    }
+
     /// Drain the completed barrier into the coalesced gradient
-    /// (`Σ_c g_c / N`, accumulated in ascending client-id order) and
+    /// (`Σ_c g_c / width`, accumulated in ascending client-id order) and
     /// advance to the next step. Panics if the barrier is incomplete —
-    /// callers only reach this after [`Offer::Completed`].
+    /// callers only reach this after [`Offer::Completed`] (or a
+    /// completing leave/eviction).
     pub fn take_coalesced(&mut self) -> Vec<Tensor> {
-        assert_eq!(self.received, self.n_clients, "barrier incomplete");
-        let scale = 1.0 / self.n_clients as f32;
+        assert_eq!(self.received, self.members.len(), "barrier incomplete");
+        let scale = 1.0 / self.members.len() as f32;
         let mut out: Vec<Tensor> = self.shapes.iter().map(|s| Tensor::zeros(s)).collect();
         for slot in self.pending.iter_mut() {
             let grads = slot.take().expect("complete barrier has every slot");
@@ -145,27 +247,32 @@ mod tests {
         vec![vec![b, b + 0.5, -b, 1.0], vec![0.25 * b, -1.0, b]]
     }
 
+    /// Fixed-order reference reduction over an explicit member set.
+    fn reference(members: &[u32]) -> Vec<Tensor> {
+        let scale = 1.0 / members.len() as f32;
+        let mut want: Vec<Tensor> = shapes().iter().map(|s| Tensor::zeros(s)).collect();
+        for &c in members {
+            let g = grads_for(c);
+            for (w, (data, shape)) in want.iter_mut().zip(g.iter().zip(shapes().iter())) {
+                w.axpy(scale, &Tensor::from_vec(shape, data.clone()));
+            }
+        }
+        want
+    }
+
     #[test]
     fn barrier_completes_and_coalesces_in_client_order() {
         let mut b = StepBatcher::new(3, shapes());
         assert_eq!(b.pending_step(), 1);
         assert_eq!(b.applied_step(), 0);
+        assert_eq!(b.members(), &[0, 1, 2]);
         // arrival order 2, 0, 1 — must not matter
         assert_eq!(b.offer(2, 1, grads_for(2)), Offer::Accepted);
         assert_eq!(b.offer(0, 1, grads_for(0)), Offer::Accepted);
         assert_eq!(b.offer(1, 1, grads_for(1)), Offer::Completed);
         let out = b.take_coalesced();
         assert_eq!(b.pending_step(), 2);
-
-        // reference reduction: fixed client order 0, 1, 2
-        let mut want: Vec<Tensor> = shapes().iter().map(|s| Tensor::zeros(s)).collect();
-        for c in 0..3u32 {
-            let g = grads_for(c);
-            for (w, (data, shape)) in want.iter_mut().zip(g.iter().zip(shapes().iter())) {
-                w.axpy(1.0 / 3.0, &Tensor::from_vec(shape, data.clone()));
-            }
-        }
-        assert_eq!(out, want);
+        assert_eq!(out, reference(&[0, 1, 2]));
     }
 
     #[test]
@@ -190,7 +297,7 @@ mod tests {
         assert_eq!(b.offer(0, 1, grads_for(0)), Offer::Accepted);
         // duplicate client
         assert!(matches!(b.offer(0, 1, grads_for(0)), Offer::Rejected(_)));
-        // unknown client
+        // non-member
         assert!(matches!(b.offer(9, 1, grads_for(1)), Offer::Rejected(_)));
         // wrong step
         assert!(matches!(b.offer(1, 2, grads_for(1)), Offer::Rejected(_)));
@@ -212,7 +319,7 @@ mod tests {
         let mut b = StepBatcher::new(1, shapes());
         assert_eq!(b.offer(0, 1, grads_for(5)), Offer::Completed);
         let out = b.take_coalesced();
-        // N = 1: coalesced = 0 + 1.0 * g
+        // width = 1: coalesced = 0 + 1.0 * g
         let want: Vec<Tensor> = grads_for(5)
             .into_iter()
             .zip(shapes())
@@ -223,5 +330,65 @@ mod tests {
             })
             .collect();
         assert_eq!(out, want);
+    }
+
+    #[test]
+    fn join_widens_the_assembling_barrier() {
+        let mut b = StepBatcher::with_members(vec![0, 2], shapes(), 1);
+        assert_eq!(b.offer(0, 1, grads_for(0)), Offer::Accepted);
+        assert_eq!(b.offer(2, 1, grads_for(2)), Offer::Completed);
+        b.take_coalesced();
+        // joiner takes the freed id slot the coordinator assigns
+        b.join(1).unwrap();
+        assert_eq!(b.members(), &[0, 1, 2]);
+        assert!(b.join(1).is_err(), "duplicate join must be rejected");
+        // the widened barrier waits on all three
+        assert_eq!(b.offer(0, 2, grads_for(0)), Offer::Accepted);
+        assert_eq!(b.offer(2, 2, grads_for(2)), Offer::Accepted);
+        assert_eq!(b.offer(1, 2, grads_for(1)), Offer::Completed);
+        assert_eq!(b.take_coalesced(), reference(&[0, 1, 2]));
+    }
+
+    #[test]
+    fn leave_discards_pending_and_can_complete_the_barrier() {
+        let mut b = StepBatcher::new(3, shapes());
+        assert_eq!(b.offer(0, 1, grads_for(0)), Offer::Accepted);
+        assert_eq!(b.offer(1, 1, grads_for(1)), Offer::Accepted);
+        // the member that has NOT pushed leaves: the barrier completes
+        // over the two that did
+        let out = b.leave(2).unwrap();
+        assert_eq!(out, LeaveOutcome { had_pending: false, completed: true });
+        assert_eq!(b.take_coalesced(), reference(&[0, 1]));
+        // a member WITH a pending push leaves: the push is discarded
+        assert_eq!(b.offer(0, 2, grads_for(0)), Offer::Accepted);
+        let out = b.leave(0).unwrap();
+        assert_eq!(out, LeaveOutcome { had_pending: true, completed: false });
+        assert_eq!(b.members(), &[1]);
+        // non-member and last-member errors
+        assert!(b.leave(7).is_err());
+        assert!(b.leave(1).is_err(), "last member may not leave");
+        assert_eq!(b.offer(1, 2, grads_for(1)), Offer::Completed);
+    }
+
+    #[test]
+    fn evict_unpushed_completes_over_the_survivors() {
+        let mut b = StepBatcher::new(4, shapes());
+        assert_eq!(b.offer(3, 1, grads_for(3)), Offer::Accepted);
+        assert_eq!(b.offer(1, 1, grads_for(1)), Offer::Accepted);
+        assert_eq!(b.evict_unpushed(), vec![0, 2]);
+        assert_eq!(b.members(), &[1, 3]);
+        assert_eq!(b.received(), 2);
+        // barrier is now complete: the survivors' pushes coalesce at the
+        // new width
+        assert_eq!(b.take_coalesced(), reference(&[1, 3]));
+        assert_eq!(b.pending_step(), 2);
+    }
+
+    #[test]
+    fn resumed_barrier_starts_past_step_one() {
+        let mut b = StepBatcher::with_members(vec![0], shapes(), 7);
+        assert_eq!(b.applied_step(), 6);
+        assert!(matches!(b.offer(0, 1, grads_for(0)), Offer::Rejected(_)));
+        assert_eq!(b.offer(0, 7, grads_for(0)), Offer::Completed);
     }
 }

@@ -7,9 +7,35 @@ use std::io::{BufReader, BufWriter};
 use std::net::TcpStream;
 use std::time::Duration;
 
-use crate::server::protocol::{self, Frame, Msg, ServerStats};
+use crate::server::protocol::{self, EpochView, Frame, Msg, ServerStats};
 use crate::tensor::Tensor;
 use crate::util::rng::Pcg32;
+
+/// Default socket read/write timeout: long enough for any barrier wait
+/// a healthy server produces, short enough that a dead server surfaces
+/// as an error instead of a forever-hung client.
+pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// `Busy` backoff: starts at [`BACKOFF_BASE_US`] µs, doubles per
+/// consecutive bounce, capped at [`BACKOFF_CAP_US`] µs, with ±25%
+/// deterministic jitter (a fixed-seed PCG stream — reproducible runs,
+/// but concurrent clients still decorrelate because each sleeps a
+/// different number of times).
+pub const BACKOFF_BASE_US: u64 = 200;
+pub const BACKOFF_CAP_US: u64 = 50_000;
+
+/// Outcome of a [`Client::push_grad`]: the terminal replies a pusher
+/// must distinguish without string-matching.
+#[derive(Debug, PartialEq)]
+pub enum PushOutcome {
+    /// Barrier completed; the coalesced step `step` was applied.
+    Applied(u64),
+    /// The push's epoch was superseded — `epoch` is current; refresh
+    /// membership knowledge and retry.
+    Stale(u64),
+    /// Rejected outright (non-member, wrong step, bad shapes, …).
+    Rejected(String),
+}
 
 /// A blocking request/reply connection to a state server. One request
 /// is outstanding at a time (the protocol is strictly request → reply
@@ -20,15 +46,41 @@ pub struct Client {
     next_id: u64,
     /// `Busy` bounces absorbed by [`Client::call_retry`].
     pub busy_retries: u64,
+    /// Deterministic jitter stream for the busy backoff.
+    jitter: Pcg32,
+    /// Consecutive `Busy` bounces (drives the exponential backoff;
+    /// resets on any non-Busy reply).
+    backoff_level: u32,
 }
 
 impl Client {
-    /// Connect to `addr` (e.g. `127.0.0.1:7070`).
+    /// Connect to `addr` (e.g. `127.0.0.1:7070`) with the default IO
+    /// timeouts.
     pub fn connect(addr: &str) -> Result<Client> {
+        Self::connect_with_timeout(addr, Some(DEFAULT_IO_TIMEOUT))
+    }
+
+    /// Connect with explicit socket read/write timeouts (`None` = block
+    /// forever — the pre-timeout behavior, for tests that park a
+    /// connection on purpose).
+    pub fn connect_with_timeout(addr: &str, io_timeout: Option<Duration>) -> Result<Client> {
         let stream = TcpStream::connect(addr).map_err(|e| anyhow!("connecting {addr}: {e}"))?;
         stream.set_nodelay(true).ok();
+        stream
+            .set_read_timeout(io_timeout)
+            .map_err(|e| anyhow!("setting read timeout on {addr}: {e}"))?;
+        stream
+            .set_write_timeout(io_timeout)
+            .map_err(|e| anyhow!("setting write timeout on {addr}: {e}"))?;
         let reader = BufReader::new(stream.try_clone()?);
-        Ok(Client { reader, writer: BufWriter::new(stream), next_id: 1, busy_retries: 0 })
+        Ok(Client {
+            reader,
+            writer: BufWriter::new(stream),
+            next_id: 1,
+            busy_retries: 0,
+            jitter: Pcg32::new(0x6a17_7e72),
+            backoff_level: 0,
+        })
     }
 
     /// Send one request and wait for its reply. The reply's request id
@@ -46,15 +98,24 @@ impl Client {
     }
 
     /// [`Client::call`], transparently retrying [`Msg::Busy`] bounces
-    /// (the server's bounded-queue backpressure) with a short sleep.
+    /// (the server's bounded-queue backpressure) with capped exponential
+    /// backoff plus deterministic jitter — a saturated server sees
+    /// clients spread out instead of a tight retry spin.
     pub fn call_retry(&mut self, msg: Msg) -> Result<Msg> {
         loop {
             match self.call(msg.clone())? {
                 Msg::Busy => {
                     self.busy_retries += 1;
-                    std::thread::sleep(Duration::from_micros(200));
+                    let base = (BACKOFF_BASE_US << self.backoff_level.min(16)).min(BACKOFF_CAP_US);
+                    // ±25% jitter: scale by a factor in [0.75, 1.25).
+                    let us = base * (750 + self.jitter.below(500) as u64) / 1000;
+                    self.backoff_level += 1;
+                    std::thread::sleep(Duration::from_micros(us));
                 }
-                reply => return Ok(reply),
+                reply => {
+                    self.backoff_level = 0;
+                    return Ok(reply);
+                }
             }
         }
     }
@@ -67,13 +128,51 @@ impl Client {
         }
     }
 
-    /// Push this client's gradient set for `step`; blocks until the step
-    /// barrier completes and the coalesced step is applied.
-    pub fn push_grad(&mut self, client: u32, step: u64, grads: Vec<Vec<f32>>) -> Result<u64> {
-        match self.call_retry(Msg::PushGrad { client, step, grads })? {
-            Msg::Ack { step: applied } => Ok(applied),
-            Msg::Err { msg } => bail!("PushGrad rejected: {msg}"),
+    /// Push this client's gradient set for `step`, tagged with the
+    /// membership `epoch` the client believes is current; blocks until
+    /// the step barrier completes and the coalesced step is applied (or
+    /// the server answers with a stale-epoch / rejection outcome — both
+    /// are data, not errors, because an elastic client must react to
+    /// them).
+    pub fn push_grad(
+        &mut self,
+        client: u32,
+        epoch: u64,
+        step: u64,
+        grads: Vec<Vec<f32>>,
+    ) -> Result<PushOutcome> {
+        match self.call_retry(Msg::PushGrad { client, epoch, step, grads })? {
+            Msg::Ack { step: applied } => Ok(PushOutcome::Applied(applied)),
+            Msg::StaleEpoch { epoch } => Ok(PushOutcome::Stale(epoch)),
+            Msg::Err { msg } => Ok(PushOutcome::Rejected(msg)),
             other => bail!("PushGrad answered with {}", other.name()),
+        }
+    }
+
+    /// Join the barrier: returns the new membership view (the assigned
+    /// client id is `view.client`).
+    pub fn join(&mut self) -> Result<EpochView> {
+        match self.call_retry(Msg::Join)? {
+            Msg::EpochReply(v) => Ok(v),
+            Msg::Err { msg } => bail!("Join rejected: {msg}"),
+            other => bail!("Join answered with {}", other.name()),
+        }
+    }
+
+    /// Politely leave the barrier as `client`.
+    pub fn leave(&mut self, client: u32) -> Result<EpochView> {
+        match self.call_retry(Msg::Leave { client })? {
+            Msg::EpochReply(v) => Ok(v),
+            Msg::Err { msg } => bail!("Leave rejected: {msg}"),
+            other => bail!("Leave answered with {}", other.name()),
+        }
+    }
+
+    /// Probe the current epoch / membership without changing either.
+    pub fn epoch_info(&mut self) -> Result<EpochView> {
+        match self.call_retry(Msg::EpochInfo)? {
+            Msg::EpochReply(v) => Ok(v),
+            other => bail!("EpochInfo answered with {}", other.name()),
         }
     }
 
@@ -145,6 +244,20 @@ impl GradSource {
         GradSource { targets, noise, n_total }
     }
 
+    /// Fast-forward the noise stream past `steps` gradient computations
+    /// without materializing them. [`GradSource::grads`] draws exactly
+    /// one normal per element per call, so skipping is just discarding
+    /// `steps × Σ numel` draws — this is how a late-joining or resumed
+    /// client lines its stream up with the step it starts pushing at.
+    pub fn skip_steps(&mut self, steps: u64) {
+        let n_elems: usize = self.targets.iter().map(|t| t.data().len()).sum();
+        for _ in 0..steps {
+            for _ in 0..n_elems {
+                self.noise.normal();
+            }
+        }
+    }
+
     /// Compute this client's gradient set at `params` (flat per-tensor
     /// data, inventory order): `g = (θ − θ*) + σ·ξ` with deterministic
     /// noise. Returns `(loss, grads)`; the loss is the exact quadratic
@@ -189,5 +302,18 @@ mod tests {
         assert_ne!(g1, g3);
         // shape mismatch errors
         assert!(GradSource::new(&shapes, 7, 0).grads(&params[..1]).is_err());
+    }
+
+    #[test]
+    fn skip_steps_matches_discarded_grads_calls() {
+        let shapes = vec![vec![2, 3], vec![5]];
+        let params: Vec<Vec<f32>> = vec![vec![0.2; 6], vec![-0.3; 5]];
+        let mut walked = GradSource::new(&shapes, 11, 2);
+        for _ in 0..4 {
+            walked.grads(&params).unwrap();
+        }
+        let mut skipped = GradSource::new(&shapes, 11, 2);
+        skipped.skip_steps(4);
+        assert_eq!(walked.grads(&params).unwrap(), skipped.grads(&params).unwrap());
     }
 }

@@ -11,26 +11,34 @@
 //!
 //! * [`protocol`] — the `SMMFWIRE` versioned, length-prefixed binary
 //!   framing (`PushGrad` / `PullParams` / `Snapshot` / `Stats` /
-//!   `Shutdown`), decoded with the same strict bounds-checked discipline
-//!   as the checkpoint container.
+//!   `Shutdown`, plus the v2 membership ops `Join` / `Leave` /
+//!   `EpochInfo`), decoded with the same strict bounds-checked
+//!   discipline as the checkpoint container.
 //! * [`batch`] — gradient coalescing: concurrent client pushes
-//!   accumulate behind a per-step barrier and reduce in fixed client-id
-//!   order, so the applied step is independent of network timing.
+//!   accumulate behind a per-step barrier and reduce in fixed member-id
+//!   order, so the applied step is independent of network timing. The
+//!   barrier is elastic: members join, leave and get evicted between
+//!   steps, each change bumping the membership epoch.
 //! * [`shard`] — the inventory partitioned across K worker threads by
 //!   the FLOP-balancing planner, each shard owning its optimizer state
 //!   (built through the param-group table, so per-shard `StatePolicy`
-//!   overrides work).
+//!   overrides work); a dead worker is respawned from a recovery image
+//!   and the interrupted step replayed, bit-identically.
 //! * [`service`] / [`client`] — the TCP accept loop with a bounded
 //!   request queue and explicit `Busy` backpressure, the snapshot writer
-//!   (reusing the atomic `SMMFCKPT` v2 checkpoint path), the blocking
-//!   wire client, the load generator, and the single-process reference
-//!   trainer that the determinism contract is pinned against.
+//!   (reusing the atomic `SMMFCKPT` v2 checkpoint path), crash-resume
+//!   and `--resume` restore, the blocking wire client with socket
+//!   timeouts and jittered backoff, the fault-injecting load generator,
+//!   and the single-process reference trainer (fixed-membership and
+//!   elastic) that the determinism contract is pinned against.
 //!
 //! End-to-end guarantee: a K-shard server driven by N concurrent
 //! clients writes snapshots **bit-identical** to the equivalent
-//! single-process trainer, for any K and N. `repro serve` / `repro
-//! loadgen` expose the subsystem on the CLI; `docs/SERVER_PROTOCOL.md`
-//! has the byte-level wire spec.
+//! single-process trainer, for any K and N — and, per membership epoch,
+//! under injected faults (client drops, shard-worker kills). `repro
+//! serve` / `repro loadgen` expose the subsystem on the CLI;
+//! `docs/SERVER_PROTOCOL.md` has the byte-level wire spec and
+//! `docs/ARCHITECTURE.md` the failure model.
 
 pub mod batch;
 pub mod client;
@@ -38,10 +46,10 @@ pub mod protocol;
 pub mod service;
 pub mod shard;
 
-pub use client::{Client, GradSource};
-pub use protocol::{Frame, Msg, ServerStats};
+pub use client::{Client, GradSource, PushOutcome};
+pub use protocol::{EpochView, Frame, Msg, ServerStats};
 pub use service::{
-    reference_checkpoint, resolve_inventory, run_loadgen, LoadgenOptions, LoadgenReport,
-    ServeOptions, Server,
+    reference_checkpoint, reference_checkpoint_elastic, resolve_inventory, run_loadgen,
+    LoadgenOptions, LoadgenReport, ServeOptions, Server,
 };
-pub use shard::{plan_shards, ShardPlan, ShardSet};
+pub use shard::{plan_shards, Recovery, RecoveryImage, ShardPlan, ShardSet};

@@ -6,12 +6,18 @@
 //! ```text
 //! offset  size  field
 //! 0       8     magic  b"SMMFWIRE"
-//! 8       4     u32    protocol version (= 1)
+//! 8       4     u32    protocol version (= 2)
 //! 12      8     u64    request id (replies echo the request's id)
 //! 20      1     u8     op code (see the OP_* constants)
 //! 21      8     u64    payload length in bytes (<= MAX_PAYLOAD)
 //! 29      len   op-specific payload
 //! ```
+//!
+//! Version 2 added membership epochs: `PushGrad` carries the epoch the
+//! client believes is current, `Join`/`Leave`/`EpochInfo` renegotiate
+//! the barrier, and a push tagged with a superseded epoch is answered
+//! with [`Msg::StaleEpoch`] (carrying the current epoch) so the client
+//! can refresh and retry instead of parsing error strings.
 //!
 //! All multi-byte values are little-endian, encoded/decoded with the
 //! checkpoint blob codec (`optim::blob`). Decoding follows the same
@@ -33,7 +39,8 @@ use crate::optim::blob::{BlobReader, BlobWriter};
 /// Frame magic (8 bytes, never changes).
 pub const MAGIC: &[u8; 8] = b"SMMFWIRE";
 /// Current protocol version. Bump on any layout change.
-pub const VERSION: u32 = 1;
+/// v2: epoch-tagged `PushGrad`, membership ops, extended stats.
+pub const VERSION: u32 = 2;
 /// Fixed frame header size: magic + version + request id + op + length.
 pub const HEADER_LEN: usize = 8 + 4 + 8 + 1 + 8;
 /// Hard payload cap: a frame may never ask the peer to buffer more.
@@ -42,6 +49,8 @@ pub const MAX_PAYLOAD: u64 = 256 << 20;
 pub const MAX_TENSORS: usize = 1 << 20;
 /// Snapshot-path / error-string length cap.
 pub const MAX_STR_LEN: usize = 4096;
+/// Barrier-membership list cap (an `EpochReply` can never claim more).
+pub const MAX_MEMBERS: usize = 4096;
 
 /// Request op codes (client -> server).
 pub const OP_PUSH_GRAD: u8 = 1;
@@ -49,6 +58,9 @@ pub const OP_PULL_PARAMS: u8 = 2;
 pub const OP_SNAPSHOT: u8 = 3;
 pub const OP_STATS: u8 = 4;
 pub const OP_SHUTDOWN: u8 = 5;
+pub const OP_JOIN: u8 = 6;
+pub const OP_LEAVE: u8 = 7;
+pub const OP_EPOCH_INFO: u8 = 8;
 /// Reply op codes (server -> client) live in a disjoint range so a
 /// misdirected frame can never be confused for a request.
 pub const OP_ACK: u8 = 64;
@@ -58,6 +70,12 @@ pub const OP_STATS_REPLY: u8 = 67;
 pub const OP_BUSY: u8 = 68;
 pub const OP_BYE: u8 = 69;
 pub const OP_ERR: u8 = 70;
+pub const OP_EPOCH_REPLY: u8 = 71;
+pub const OP_STALE_EPOCH: u8 = 72;
+
+/// `EpochReply::client` value meaning "no client id applies" (the reply
+/// to an `EpochInfo` probe, which assigns nothing).
+pub const NO_CLIENT: u32 = u32::MAX;
 
 /// Server-side counters returned by [`Msg::Stats`].
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -74,16 +92,40 @@ pub struct ServerStats {
     pub busy: u64,
     /// Snapshots written.
     pub snapshots: u64,
+    /// Current membership epoch (starts at 1, bumps on every Join /
+    /// Leave / eviction).
+    pub epoch: u64,
+    /// Clients evicted at the barrier deadline (`client_timeout_ms`).
+    pub evictions: u64,
+    /// Shard workers respawned after a mid-run death.
+    pub respawns: u64,
+    /// Total wall-clock milliseconds spent recovering dead shards.
+    pub recovery_ms: u64,
+}
+
+/// Membership view carried by [`Msg::EpochReply`]: the epoch, the step
+/// the barrier is currently assembling (a joiner starts pushing there),
+/// the client id the operation concerned ([`NO_CLIENT`] for an
+/// `EpochInfo` probe; the assigned id for a `Join`; the departed id for
+/// a `Leave`), and the member list in ascending id order.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct EpochView {
+    pub epoch: u64,
+    pub next_step: u64,
+    pub client: u32,
+    pub members: Vec<u32>,
 }
 
 /// One protocol message (request or reply).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
     /// Client `client` pushes its gradient set for optimizer step `step`
-    /// (flat f32 data per tensor, inventory registration order). The
+    /// (flat f32 data per tensor, inventory registration order),
+    /// tagged with the membership `epoch` it believes is current. The
     /// reply — [`Msg::Ack`] — is deferred until the step barrier
-    /// completes and the coalesced step has been applied.
-    PushGrad { client: u32, step: u64, grads: Vec<Vec<f32>> },
+    /// completes and the coalesced step has been applied; a superseded
+    /// epoch is answered with [`Msg::StaleEpoch`] instead.
+    PushGrad { client: u32, epoch: u64, step: u64, grads: Vec<Vec<f32>> },
     /// Fetch the current parameters; replied with [`Msg::Params`].
     PullParams,
     /// Write a `SMMFCKPT` v2 snapshot to `path` on the server host;
@@ -93,6 +135,15 @@ pub enum Msg {
     Stats,
     /// Stop the server; replied with [`Msg::Bye`].
     Shutdown,
+    /// Join the barrier: the server assigns the smallest free client id,
+    /// bumps the epoch, and replies with [`Msg::EpochReply`].
+    Join,
+    /// Politely leave the barrier (the graceful alternative to being
+    /// evicted); bumps the epoch, replied with [`Msg::EpochReply`].
+    Leave { client: u32 },
+    /// Probe the current epoch/membership; replied with
+    /// [`Msg::EpochReply`] (no membership change).
+    EpochInfo,
     /// `PushGrad` accepted and applied; `step` is the step just applied.
     Ack { step: u64 },
     /// Current parameters after `step` applied steps.
@@ -107,6 +158,11 @@ pub enum Msg {
     Bye,
     /// Request rejected (unknown client, wrong step, bad shapes, …).
     Err { msg: String },
+    /// Reply to `Join` / `Leave` / `EpochInfo`: the new membership view.
+    EpochReply(EpochView),
+    /// A `PushGrad` carried a superseded epoch; `epoch` is the current
+    /// one — refresh membership knowledge and retry.
+    StaleEpoch { epoch: u64 },
 }
 
 impl Msg {
@@ -118,6 +174,9 @@ impl Msg {
             Msg::Snapshot { .. } => OP_SNAPSHOT,
             Msg::Stats => OP_STATS,
             Msg::Shutdown => OP_SHUTDOWN,
+            Msg::Join => OP_JOIN,
+            Msg::Leave { .. } => OP_LEAVE,
+            Msg::EpochInfo => OP_EPOCH_INFO,
             Msg::Ack { .. } => OP_ACK,
             Msg::Params { .. } => OP_PARAMS,
             Msg::SnapshotDone { .. } => OP_SNAPSHOT_DONE,
@@ -125,6 +184,8 @@ impl Msg {
             Msg::Busy => OP_BUSY,
             Msg::Bye => OP_BYE,
             Msg::Err { .. } => OP_ERR,
+            Msg::EpochReply(_) => OP_EPOCH_REPLY,
+            Msg::StaleEpoch { .. } => OP_STALE_EPOCH,
         }
     }
 
@@ -136,6 +197,9 @@ impl Msg {
             Msg::Snapshot { .. } => "Snapshot",
             Msg::Stats => "Stats",
             Msg::Shutdown => "Shutdown",
+            Msg::Join => "Join",
+            Msg::Leave { .. } => "Leave",
+            Msg::EpochInfo => "EpochInfo",
             Msg::Ack { .. } => "Ack",
             Msg::Params { .. } => "Params",
             Msg::SnapshotDone { .. } => "SnapshotDone",
@@ -143,6 +207,8 @@ impl Msg {
             Msg::Busy => "Busy",
             Msg::Bye => "Bye",
             Msg::Err { .. } => "Err",
+            Msg::EpochReply(_) => "EpochReply",
+            Msg::StaleEpoch { .. } => "StaleEpoch",
         }
     }
 }
@@ -190,13 +256,21 @@ fn clip_str(s: &str) -> &str {
 fn payload(msg: &Msg) -> Vec<u8> {
     let mut w = BlobWriter::new();
     match msg {
-        Msg::PushGrad { client, step, grads } => {
+        Msg::PushGrad { client, epoch, step, grads } => {
             w.u32(*client);
+            w.u64(*epoch);
             w.u64(*step);
             write_tensor_list(&mut w, grads);
         }
-        Msg::PullParams | Msg::Stats | Msg::Shutdown | Msg::Busy | Msg::Bye => {}
+        Msg::PullParams
+        | Msg::Stats
+        | Msg::Shutdown
+        | Msg::Join
+        | Msg::EpochInfo
+        | Msg::Busy
+        | Msg::Bye => {}
         Msg::Snapshot { path } => write_str(&mut w, path),
+        Msg::Leave { client } => w.u32(*client),
         Msg::Ack { step } => w.u64(*step),
         Msg::Params { step, tensors } => {
             w.u64(*step);
@@ -210,8 +284,22 @@ fn payload(msg: &Msg) -> Vec<u8> {
             w.u64(s.pushes);
             w.u64(s.busy);
             w.u64(s.snapshots);
+            w.u64(s.epoch);
+            w.u64(s.evictions);
+            w.u64(s.respawns);
+            w.u64(s.recovery_ms);
         }
         Msg::Err { msg } => write_str(&mut w, clip_str(msg)),
+        Msg::EpochReply(v) => {
+            w.u64(v.epoch);
+            w.u64(v.next_step);
+            w.u32(v.client);
+            w.u32(v.members.len() as u32);
+            for &m in &v.members {
+                w.u32(m);
+            }
+        }
+        Msg::StaleEpoch { epoch } => w.u64(*epoch),
     }
     w.finish()
 }
@@ -219,14 +307,15 @@ fn payload(msg: &Msg) -> Vec<u8> {
 /// Wire payload size of a `PushGrad` frame over the given shapes — the
 /// largest message either side ever sends for an inventory (a `Params`
 /// reply's prefix is `u64 step` + `u32 count` vs PushGrad's `u32
-/// client` + `u64 step` + `u32 count`, i.e. 4 bytes smaller). Servers and load generators check this
-/// against [`MAX_PAYLOAD`] up front, so an inventory too large for the
-/// wire fails with a clear error at startup instead of an assert on the
+/// client` + `u64 epoch` + `u64 step` + `u32 count`, i.e. 12 bytes
+/// smaller). Servers and load generators check this against
+/// [`MAX_PAYLOAD`] up front, so an inventory too large for the wire
+/// fails with a clear error at startup instead of an assert on the
 /// first push.
 pub fn grads_payload_bytes(shapes: &[Vec<usize>]) -> u64 {
-    // client u32 + step u64 + tensor count u32, then per tensor a u64
-    // length prefix + 4 bytes per element.
-    4 + 8 + 4
+    // client u32 + epoch u64 + step u64 + tensor count u32, then per
+    // tensor a u64 length prefix + 4 bytes per element.
+    4 + 8 + 8 + 4
         + shapes
             .iter()
             .map(|s| 8 + 4 * s.iter().product::<usize>() as u64)
@@ -321,14 +410,18 @@ pub fn decode_payload(op: u8, payload: &[u8]) -> Result<Msg> {
     let msg = match op {
         OP_PUSH_GRAD => {
             let client = r.u32()?;
+            let epoch = r.u64()?;
             let step = r.u64()?;
             let grads = read_tensor_list(&mut r, "PushGrad")?;
-            Msg::PushGrad { client, step, grads }
+            Msg::PushGrad { client, epoch, step, grads }
         }
         OP_PULL_PARAMS => Msg::PullParams,
         OP_SNAPSHOT => Msg::Snapshot { path: read_str(&mut r, "Snapshot path")? },
         OP_STATS => Msg::Stats,
         OP_SHUTDOWN => Msg::Shutdown,
+        OP_JOIN => Msg::Join,
+        OP_LEAVE => Msg::Leave { client: r.u32()? },
+        OP_EPOCH_INFO => Msg::EpochInfo,
         OP_ACK => Msg::Ack { step: r.u64()? },
         OP_PARAMS => {
             let step = r.u64()?;
@@ -343,10 +436,36 @@ pub fn decode_payload(op: u8, payload: &[u8]) -> Result<Msg> {
             pushes: r.u64()?,
             busy: r.u64()?,
             snapshots: r.u64()?,
+            epoch: r.u64()?,
+            evictions: r.u64()?,
+            respawns: r.u64()?,
+            recovery_ms: r.u64()?,
         }),
         OP_BUSY => Msg::Busy,
         OP_BYE => Msg::Bye,
         OP_ERR => Msg::Err { msg: read_str(&mut r, "Err message")? },
+        OP_EPOCH_REPLY => {
+            let epoch = r.u64()?;
+            let next_step = r.u64()?;
+            let client = r.u32()?;
+            let n = r.u32()? as usize;
+            if n > MAX_MEMBERS {
+                bail!("EpochReply: claims {n} members (cap {MAX_MEMBERS})");
+            }
+            // Remaining-bytes check before the allocation, like tensors.
+            if r.remaining() < n.saturating_mul(4) {
+                bail!(
+                    "EpochReply: claims {n} members, only {} payload bytes remain",
+                    r.remaining()
+                );
+            }
+            let mut members = Vec::with_capacity(n);
+            for _ in 0..n {
+                members.push(r.u32()?);
+            }
+            Msg::EpochReply(EpochView { epoch, next_step, client, members })
+        }
+        OP_STALE_EPOCH => Msg::StaleEpoch { epoch: r.u64()? },
         other => bail!("unknown SMMFWIRE op {other}"),
     };
     r.finish().with_context(|| format!("{} payload", msg.name()))?;
@@ -406,7 +525,12 @@ mod tests {
             Frame { request_id: 1, msg: Msg::PullParams },
             Frame {
                 request_id: 2,
-                msg: Msg::PushGrad { client: 3, step: 9, grads: vec![vec![1.5, -2.0], vec![]] },
+                msg: Msg::PushGrad {
+                    client: 3,
+                    epoch: 2,
+                    step: 9,
+                    grads: vec![vec![1.5, -2.0], vec![]],
+                },
             },
             Frame { request_id: 3, msg: Msg::Bye },
         ];

@@ -14,37 +14,63 @@
 //! * **coordinator** — owns the master parameters, the
 //!   [`StepBatcher`](super::batch::StepBatcher) step barrier and the
 //!   [`ShardSet`](super::shard::ShardSet); applies coalesced steps,
-//!   serves pulls/snapshots/stats, and drives shutdown.
+//!   serves pulls/snapshots/stats/membership, and drives shutdown.
 //! * **shard workers** (K) — own the optimizer state for their tensor
 //!   subsets (see [`super::shard`]).
+//!
+//! Fault tolerance (wire protocol v2):
+//!
+//! * **Membership epochs** — `Join`/`Leave` renegotiate the barrier
+//!   width and bump the epoch counter; a push tagged with a superseded
+//!   epoch is answered [`Msg::StaleEpoch`] so the client refreshes its
+//!   view and retries instead of deadlocking the barrier.
+//! * **Eviction** — with `client_timeout_ms` set, a partially assembled
+//!   barrier older than the deadline evicts every member that has not
+//!   pushed, bumps the epoch, and completes the step over the
+//!   survivors. A crashed client therefore stalls the fleet for at most
+//!   one timeout.
+//! * **Shard crash-resume** — in `resilient` mode the coordinator keeps
+//!   an in-memory SMMFCKPT v2 image of the state after every applied
+//!   step; a dead shard worker (poisoned channel) is respawned, its
+//!   optimizer state restored tensor-by-tensor from the image (CONFIG
+//!   cross-checked), and the interrupted step replayed — the run
+//!   continues bit-identically.
 //!
 //! Determinism contract: a K-shard server driven by N concurrent
 //! loadgen clients writes a snapshot bit-identical to
 //! [`reference_checkpoint`] — the equivalent single-process trainer over
-//! the same workload — for any K, N, and any network interleaving. The
-//! e2e test (`rust/tests/server_e2e.rs`) and `make serve-smoke` pin this
-//! at shards {1,2} × clients {1,4}.
+//! the same workload — for any K, N, and any network interleaving.
+//! Within one epoch the coalesced step is a fixed-member-id-order
+//! reduction, so the contract extends to elastic runs: a run whose
+//! membership changes at known step boundaries matches
+//! [`reference_checkpoint_elastic`] over the same epoch schedule. The
+//! e2e test (`rust/tests/server_e2e.rs`) and `make serve-smoke` pin the
+//! fixed-membership case at shards {1,2} × clients {1,4}; the chaos e2e
+//! and `make chaos-smoke` pin the elastic case under injected faults.
 
 use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::mpsc::{self, SyncSender, TrySendError};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{self, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::thread::{self, JoinHandle};
 use std::time::{Duration, Instant};
 
 use crate::coordinator::config::ExperimentConfig;
 use crate::models::{inventory_by_name, Inventory};
-use crate::optim::group::{self, Resolution};
-use crate::optim::{self, Optimizer, StateSerde};
+use crate::optim::group::{self, Resolution, TensorPolicy};
+use crate::optim::schedule::LrSchedule;
+use crate::optim::{self, OptKind, Optimizer, StateSerde};
 use crate::server::batch::{Offer, StepBatcher};
-use crate::server::client::{Client, GradSource};
-use crate::server::protocol::{self, Frame, Msg, ServerStats};
-use crate::server::shard::ShardSet;
+use crate::server::client::{Client, GradSource, PushOutcome};
+use crate::server::protocol::{self, EpochView, Frame, Msg, ServerStats};
+use crate::server::shard::{RecoveryImage, ShardSet};
 use crate::tensor::Tensor;
 use crate::train::checkpoint::{self, ConfigSection};
 use crate::util::cli::Args;
+use crate::util::rng::Pcg32;
 use crate::util::toml::TomlDoc;
 
 // ---------------------------------------------------------------------------
@@ -68,6 +94,18 @@ pub struct ServeOptions {
     pub clients: usize,
     /// Bounded request-queue depth; a full queue answers `Busy`.
     pub max_pending: usize,
+    /// Barrier deadline in milliseconds: a partially assembled step
+    /// older than this evicts its unpushed members and completes over
+    /// the survivors. `0` disables eviction (a missing client stalls
+    /// the barrier forever — the pre-v2 behavior).
+    pub client_timeout_ms: u64,
+    /// Keep a per-step in-memory recovery image and respawn dead shard
+    /// workers mid-step instead of failing the run.
+    pub resilient: bool,
+    /// Resume serving from an SMMFCKPT snapshot: parameters, optimizer
+    /// state and the step counter are restored (re-sharded onto the
+    /// configured shard count if it differs from the writing run's).
+    pub resume: Option<String>,
 }
 
 impl Default for ServeOptions {
@@ -78,6 +116,9 @@ impl Default for ServeOptions {
             shards: 1,
             clients: 1,
             max_pending: 256,
+            client_timeout_ms: 0,
+            resilient: false,
+            resume: None,
         }
     }
 }
@@ -108,11 +149,18 @@ impl ServeOptions {
         self.shards = toml_count(doc, "server.shards", self.shards)?;
         self.clients = toml_count(doc, "server.clients", self.clients)?;
         self.max_pending = toml_count(doc, "server.max_pending", self.max_pending)?;
+        let t = doc.i64_or("server.client_timeout_ms", self.client_timeout_ms as i64);
+        if t < 0 {
+            bail!("[server]: client_timeout_ms must be >= 0 (got {t}; 0 disables eviction)");
+        }
+        self.client_timeout_ms = t as u64;
+        self.resilient = doc.bool_or("server.resilient", self.resilient);
         Ok(())
     }
 
-    /// Apply `--addr/--model/--shards/--clients/--max-pending` CLI
-    /// overrides (strictly validated, not silently clamped).
+    /// Apply `--addr/--model/--shards/--clients/--max-pending/
+    /// --client-timeout-ms/--resilient/--resume` CLI overrides
+    /// (strictly validated, not silently clamped).
     pub fn apply_args(&mut self, args: &Args) -> Result<()> {
         self.addr = args.str_or("addr", &self.addr);
         if let Some(m) = args.opt("model") {
@@ -122,6 +170,17 @@ impl ServeOptions {
         self.clients = args.count_or("clients", self.clients).map_err(|e| anyhow!(e))?;
         self.max_pending =
             args.count_or("max-pending", self.max_pending).map_err(|e| anyhow!(e))?;
+        if let Some(t) = args.opt("client-timeout-ms") {
+            self.client_timeout_ms = t.parse().map_err(|_| {
+                anyhow!("--client-timeout-ms wants a non-negative integer, got {t:?}")
+            })?;
+        }
+        if args.has_flag("resilient") {
+            self.resilient = true;
+        }
+        if let Some(p) = args.opt("resume") {
+            self.resume = Some(p.to_string());
+        }
         Ok(())
     }
 }
@@ -169,15 +228,378 @@ pub struct Server {
     /// The bound address (resolves `:0` to the real ephemeral port).
     pub addr: SocketAddr,
     shutdown: Arc<AtomicBool>,
+    kill_shard: Arc<AtomicUsize>,
     coordinator: Option<JoinHandle<Result<ServerStats>>>,
     acceptor: Option<JoinHandle<()>>,
+}
+
+/// Parse and cross-check a recovery image (an in-memory SMMFCKPT v2
+/// written by `snapshot_to_bytes`) into the pieces a shard respawn
+/// needs. The CONFIG/kind/names checks mirror the `--resume` path: a
+/// respawned worker restoring state that disagrees with the serving
+/// run would silently diverge, so mismatches fail the recovery instead.
+fn parse_recovery_image(
+    bytes: Option<&[u8]>,
+    names: &[String],
+    config: &ConfigSection,
+    kind: OptKind,
+) -> Result<RecoveryImage> {
+    let bytes = bytes
+        .ok_or_else(|| anyhow!("no recovery image yet — resilient mode keeps one per step"))?;
+    let ck = checkpoint::load_bytes(bytes)?;
+    if ck.names.as_slice() != names {
+        bail!("recovery image tensor names disagree with the serving inventory");
+    }
+    let opt = ck
+        .opt
+        .ok_or_else(|| anyhow!("recovery image carries no optimizer-state section"))?;
+    if opt.kind != kind {
+        bail!("recovery image optimizer {:?} vs serving {:?}", opt.kind, kind);
+    }
+    if let Some(c) = &ck.config {
+        let mm = c.mismatches(config);
+        if !mm.is_empty() {
+            bail!("recovery image config disagrees with the run: {}", mm.join("; "));
+        }
+    }
+    Ok(RecoveryImage { opt_step: opt.opt_step, params: ck.params, blobs: opt.blobs })
+}
+
+/// Load a snapshot for `--resume` and rebuild the serving state from
+/// it: parameters from PARAMS, optimizer state re-sharded onto
+/// `n_shards` workers (free to differ from the writing run — the
+/// FLOP-balancing planner re-runs and the per-tensor blobs migrate),
+/// with names/shapes/kind/schedule/CONFIG all cross-checked against the
+/// serving config first.
+#[allow(clippy::too_many_arguments)]
+fn restore_serving_state(
+    path: &str,
+    cfg: &ExperimentConfig,
+    names: &[String],
+    shapes: &[Vec<usize>],
+    config_section: &ConfigSection,
+    policies: &[TensorPolicy],
+    n_shards: usize,
+) -> Result<(ShardSet, Vec<Tensor>, u64)> {
+    let ck = checkpoint::load_any(Path::new(path))?;
+    if ck.names.as_slice() != names {
+        bail!(
+            "snapshot {path:?} holds tensors {:?}, the serving inventory expects {:?}",
+            ck.names,
+            names
+        );
+    }
+    for (t, (have, want)) in ck.params.iter().zip(shapes).enumerate() {
+        if have.shape() != &want[..] {
+            bail!(
+                "snapshot {path:?} tensor {t} has shape {:?}, inventory expects {:?}",
+                have.shape(),
+                want
+            );
+        }
+    }
+    let opt = ck.opt.ok_or_else(|| {
+        anyhow!("snapshot {path:?} carries no optimizer-state section — cannot resume serving")
+    })?;
+    if opt.kind != cfg.optimizer {
+        bail!("snapshot {path:?} optimizer {:?} vs configured {:?}", opt.kind, cfg.optimizer);
+    }
+    if let Some(c) = &ck.config {
+        let mm = c.mismatches(config_section);
+        if !mm.is_empty() {
+            bail!("snapshot {path:?} disagrees with the run config: {}", mm.join("; "));
+        }
+    }
+    if let Some(s) = &ck.schedule {
+        if s.base_lr.to_bits() != cfg.optim.lr.to_bits() || s.schedule != cfg.schedule {
+            bail!("snapshot {path:?} was written under a different LR schedule");
+        }
+    }
+    let shards = ShardSet::spawn_restored(
+        cfg.optimizer,
+        shapes,
+        &cfg.optim,
+        policies,
+        n_shards,
+        opt.opt_step,
+        &opt.blobs,
+    )
+    .with_context(|| format!("restoring shard state from {path:?}"))?;
+    Ok((shards, ck.params, ck.step + 1))
+}
+
+/// The coordinator's owned state plus the step/epoch logic, a struct so
+/// the apply-step path is shared between its three triggers: a push
+/// completing the barrier, a leave whose discarded pending push
+/// completes it, and a deadline eviction.
+struct Coordinator {
+    stats: ServerStats,
+    params: Vec<Tensor>,
+    batcher: StepBatcher,
+    shards: ShardSet,
+    /// Blocked pushers of the assembling step: `(client, reply)`.
+    waiters: Vec<(u32, mpsc::Sender<Msg>)>,
+    names: Vec<String>,
+    base_lr: f32,
+    schedule: LrSchedule,
+    kind: OptKind,
+    config_section: ConfigSection,
+    /// Membership epoch: starts at 1, bumps on every join/leave/evict.
+    epoch: u64,
+    /// Next id handed to a `Join` (monotonic — ids are never reused, so
+    /// a late push from a departed client can only be a non-member
+    /// rejection, never a hijack of a new member's slot).
+    next_client_id: u32,
+    resilient: bool,
+    /// Serialized SMMFCKPT v2 image of the state after the last applied
+    /// step (resilient mode only) — the crash-recovery source of truth.
+    recovery_bytes: Option<Vec<u8>>,
+    /// `client_timeout_ms` as a duration (`None` = never evict).
+    client_timeout: Option<Duration>,
+    /// When the assembling barrier received its first push.
+    barrier_since: Option<Instant>,
+}
+
+impl Coordinator {
+    fn epoch_view(&self, client: u32) -> Msg {
+        Msg::EpochReply(EpochView {
+            epoch: self.epoch,
+            next_step: self.batcher.pending_step(),
+            client,
+            members: self.batcher.members().to_vec(),
+        })
+    }
+
+    fn bump_epoch(&mut self) {
+        self.epoch += 1;
+        self.stats.epoch = self.epoch;
+        self.stats.clients = self.batcher.width() as u32;
+    }
+
+    /// Re-serialize the post-step state (resilient mode only). Runs
+    /// after every applied step: the image must always describe the
+    /// state a respawned shard should return to.
+    fn refresh_recovery_image(&mut self) -> Result<()> {
+        if !self.resilient {
+            return Ok(());
+        }
+        let (opt_step, _bytes, blobs) = self.shards.collect_state()?;
+        self.recovery_bytes = Some(checkpoint::snapshot_to_bytes(
+            self.batcher.applied_step(),
+            &self.names,
+            &self.params,
+            self.base_lr,
+            &self.schedule,
+            self.kind,
+            opt_step,
+            blobs,
+            &self.config_section,
+        ));
+        Ok(())
+    }
+
+    /// The barrier is complete: coalesce, step the shards (resiliently
+    /// if enabled), acknowledge the waiters in client-id order, refresh
+    /// the recovery image.
+    fn apply_pending_step(&mut self) -> Result<()> {
+        let applied = self.batcher.pending_step();
+        let grads = self.batcher.take_coalesced();
+        let lr = self.schedule.at(self.base_lr, applied);
+        if self.resilient {
+            let bytes = &self.recovery_bytes;
+            let names = &self.names;
+            let config = &self.config_section;
+            let kind = self.kind;
+            let rec = self.shards.step_resilient(lr, &mut self.params, grads, &mut || {
+                parse_recovery_image(bytes.as_deref(), names, config, kind)
+            })?;
+            self.stats.respawns += rec.respawns;
+            self.stats.recovery_ms += rec.elapsed.as_millis() as u64;
+        } else {
+            self.shards.step(lr, &mut self.params, grads)?;
+        }
+        self.stats.step = applied;
+        self.barrier_since = None;
+        // Reply in client-id order, like the coalescing reduction.
+        self.waiters.sort_by_key(|w| w.0);
+        for (_, tx) in self.waiters.drain(..) {
+            tx.send(Msg::Ack { step: applied }).ok();
+        }
+        self.refresh_recovery_image()
+    }
+
+    /// Deadline check: an assembling barrier older than the timeout
+    /// evicts every member that has not pushed and completes the step
+    /// over the survivors.
+    fn tick(&mut self) -> Result<()> {
+        let Some(timeout) = self.client_timeout else { return Ok(()) };
+        if self.batcher.received() == 0 {
+            // Nothing pending (or a leave drained the barrier) — the
+            // deadline re-arms at the next first push.
+            self.barrier_since = None;
+            return Ok(());
+        }
+        let Some(since) = self.barrier_since else { return Ok(()) };
+        if since.elapsed() < timeout {
+            return Ok(());
+        }
+        let evicted = self.batcher.evict_unpushed();
+        self.stats.evictions += evicted.len() as u64;
+        self.bump_epoch();
+        self.apply_pending_step()
+    }
+
+    /// Serve one request. Returns `true` when the request was a
+    /// `Shutdown`.
+    fn handle(&mut self, req: Request, busy: &AtomicU64) -> Result<bool> {
+        match req.msg {
+            Msg::PushGrad { client, epoch, step, grads } => {
+                if epoch != self.epoch {
+                    // The membership changed since this client last
+                    // looked: a typed reply, so the client refreshes and
+                    // retries instead of string-matching an error.
+                    req.reply.send(Msg::StaleEpoch { epoch: self.epoch }).ok();
+                } else {
+                    match self.batcher.offer(client, step, grads) {
+                        Offer::Rejected(msg) => {
+                            req.reply.send(Msg::Err { msg }).ok();
+                        }
+                        Offer::Accepted => {
+                            self.stats.pushes += 1;
+                            self.barrier_since.get_or_insert_with(Instant::now);
+                            self.waiters.push((client, req.reply));
+                        }
+                        Offer::Completed => {
+                            self.stats.pushes += 1;
+                            self.waiters.push((client, req.reply));
+                            self.apply_pending_step()?;
+                        }
+                    }
+                }
+            }
+            Msg::Join => {
+                if self.batcher.width() >= protocol::MAX_MEMBERS {
+                    req.reply
+                        .send(Msg::Err {
+                            msg: format!(
+                                "membership is full ({} members)",
+                                protocol::MAX_MEMBERS
+                            ),
+                        })
+                        .ok();
+                } else {
+                    let id = self.next_client_id;
+                    self.next_client_id += 1;
+                    match self.batcher.join(id) {
+                        Ok(()) => {
+                            self.bump_epoch();
+                            req.reply.send(self.epoch_view(id)).ok();
+                        }
+                        // Unreachable (the id is fresh), but never panic
+                        // the coordinator over a reply.
+                        Err(msg) => {
+                            req.reply.send(Msg::Err { msg }).ok();
+                        }
+                    }
+                }
+            }
+            Msg::Leave { client } => match self.batcher.leave(client) {
+                Ok(outcome) => {
+                    self.bump_epoch();
+                    req.reply.send(self.epoch_view(client)).ok();
+                    if outcome.had_pending {
+                        // The leaver's pending push was discarded — its
+                        // blocked waiter (if the leave came from another
+                        // connection) must not see an Ack for a step its
+                        // gradient did not join.
+                        let mut i = 0;
+                        while i < self.waiters.len() {
+                            if self.waiters[i].0 == client {
+                                let (_, tx) = self.waiters.remove(i);
+                                tx.send(Msg::Err {
+                                    msg: format!("client {client} left the barrier"),
+                                })
+                                .ok();
+                            } else {
+                                i += 1;
+                            }
+                        }
+                    }
+                    if outcome.completed {
+                        self.apply_pending_step()?;
+                    }
+                }
+                Err(msg) => {
+                    req.reply.send(Msg::Err { msg }).ok();
+                }
+            },
+            Msg::EpochInfo => {
+                req.reply.send(self.epoch_view(protocol::NO_CLIENT)).ok();
+            }
+            Msg::PullParams => {
+                let tensors = self.params.iter().map(|t| t.data().to_vec()).collect();
+                req.reply
+                    .send(Msg::Params { step: self.batcher.applied_step(), tensors })
+                    .ok();
+            }
+            Msg::Snapshot { path } => {
+                // In resilient mode the per-step recovery image *is* the
+                // snapshot (same writer, byte-identical) — and it stays
+                // serveable even while a killed shard worker is down.
+                let result = if self.resilient {
+                    match &self.recovery_bytes {
+                        Some(bytes) => checkpoint::write_snapshot_bytes(Path::new(&path), bytes),
+                        None => Err(anyhow!("no recovery image yet")),
+                    }
+                } else {
+                    self.shards.collect_state().and_then(|(opt_step, _live, blobs)| {
+                        checkpoint::save_snapshot(
+                            Path::new(&path),
+                            self.batcher.applied_step(),
+                            &self.names,
+                            &self.params,
+                            self.base_lr,
+                            &self.schedule,
+                            self.kind,
+                            opt_step,
+                            blobs,
+                            &self.config_section,
+                        )
+                    })
+                };
+                match result {
+                    Ok(bytes) => {
+                        self.stats.snapshots += 1;
+                        req.reply.send(Msg::SnapshotDone { bytes }).ok();
+                    }
+                    Err(e) => {
+                        req.reply.send(Msg::Err { msg: format!("{e:#}") }).ok();
+                    }
+                }
+            }
+            Msg::Stats => {
+                self.stats.busy = busy.load(Ordering::Relaxed);
+                req.reply.send(Msg::StatsReply(self.stats)).ok();
+            }
+            Msg::Shutdown => {
+                req.reply.send(Msg::Bye).ok();
+                return Ok(true);
+            }
+            other => {
+                req.reply
+                    .send(Msg::Err { msg: format!("{} is not a request", other.name()) })
+                    .ok();
+            }
+        }
+        Ok(false)
+    }
 }
 
 impl Server {
     /// Bind, spawn the shard workers, the coordinator and the accept
     /// loop. `cfg` supplies the optimizer recipe (kind, hyperparameters,
     /// `[[optimizer.group]]` policies, LR schedule, seed); `opts` the
-    /// serving topology.
+    /// serving topology and fault-tolerance knobs.
     pub fn start(cfg: &ExperimentConfig, opts: &ServeOptions) -> Result<Server> {
         let inv = resolve_inventory(&opts.model)?;
         let specs = inv.param_specs();
@@ -186,11 +608,31 @@ impl Server {
         let names: Vec<String> = inv.tensors.iter().map(|t| t.name.clone()).collect();
         let res = group::resolve(&specs, &cfg.grouped());
         let config_section = ConfigSection::from_config(&cfg.optim, &res);
-        let shards =
-            ShardSet::spawn(cfg.optimizer, &shapes, &cfg.optim, &res.tensor, opts.shards);
-        // Parameters start at the origin, like the synthetic suite
-        // workload — clients own the loss surface (targets + noise).
-        let params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        let (shards, params, first_step) = match &opts.resume {
+            None => {
+                let shards = ShardSet::spawn(
+                    cfg.optimizer,
+                    &shapes,
+                    &cfg.optim,
+                    &res.tensor,
+                    opts.shards,
+                );
+                // Parameters start at the origin, like the synthetic
+                // suite workload — clients own the loss surface
+                // (targets + noise).
+                let params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+                (shards, params, 1)
+            }
+            Some(path) => restore_serving_state(
+                path,
+                cfg,
+                &names,
+                &shapes,
+                &config_section,
+                &res.tensor,
+                opts.shards,
+            )?,
+        };
 
         let listener = TcpListener::bind(&opts.addr)
             .with_context(|| format!("binding {}", opts.addr))?;
@@ -198,6 +640,7 @@ impl Server {
         listener.set_nonblocking(true)?;
 
         let shutdown = Arc::new(AtomicBool::new(false));
+        let kill_shard = Arc::new(AtomicUsize::new(0));
         let busy = Arc::new(AtomicU64::new(0));
         let (req_tx, req_rx) = mpsc::sync_channel::<Request>(opts.max_pending);
 
@@ -224,110 +667,72 @@ impl Server {
         let coordinator = {
             let shutdown = shutdown.clone();
             let busy = busy.clone();
-            let mut stats = ServerStats {
-                shards: opts.shards as u32,
-                clients: opts.clients as u32,
-                ..ServerStats::default()
+            let kill = kill_shard.clone();
+            let mut coord = Coordinator {
+                stats: ServerStats {
+                    shards: opts.shards as u32,
+                    clients: opts.clients as u32,
+                    step: first_step - 1,
+                    epoch: 1,
+                    ..ServerStats::default()
+                },
+                params,
+                batcher: StepBatcher::with_members(
+                    (0..opts.clients as u32).collect(),
+                    shapes.clone(),
+                    first_step,
+                ),
+                shards,
+                waiters: Vec::new(),
+                names,
+                base_lr: cfg.optim.lr,
+                schedule: cfg.schedule.clone(),
+                kind: cfg.optimizer,
+                config_section,
+                epoch: 1,
+                next_client_id: opts.clients as u32,
+                resilient: opts.resilient,
+                recovery_bytes: None,
+                client_timeout: (opts.client_timeout_ms > 0)
+                    .then(|| Duration::from_millis(opts.client_timeout_ms)),
+                barrier_since: None,
             };
-            let n_clients = opts.clients;
-            let base_lr = cfg.optim.lr;
-            let schedule = cfg.schedule.clone();
-            let kind = cfg.optimizer;
-            let mut params = params;
-            let mut batcher = StepBatcher::new(n_clients, shapes.clone());
+            // Seed the recovery image before serving: a shard killed
+            // before the first applied step must still be restorable.
+            coord.refresh_recovery_image().context("seeding the crash-recovery image")?;
             thread::spawn(move || -> Result<ServerStats> {
-                let mut waiters: Vec<(u32, mpsc::Sender<Msg>)> = Vec::new();
                 let run = (|| -> Result<()> {
-                    while let Ok(req) = req_rx.recv() {
-                        match req.msg {
-                            Msg::PushGrad { client, step, grads } => {
-                                match batcher.offer(client, step, grads) {
-                                    Offer::Rejected(msg) => {
-                                        req.reply.send(Msg::Err { msg }).ok();
-                                    }
-                                    Offer::Accepted => waiters.push((client, req.reply)),
-                                    Offer::Completed => {
-                                        waiters.push((client, req.reply));
-                                        let applied = batcher.pending_step();
-                                        let grads = batcher.take_coalesced();
-                                        let lr = schedule.at(base_lr, applied);
-                                        shards.step(lr, &mut params, grads)?;
-                                        stats.pushes += n_clients as u64;
-                                        stats.step = applied;
-                                        // Reply in client-id order, like
-                                        // the coalescing reduction.
-                                        waiters.sort_by_key(|w| w.0);
-                                        for (_, tx) in waiters.drain(..) {
-                                            tx.send(Msg::Ack { step: applied }).ok();
-                                        }
-                                    }
-                                }
-                            }
-                            Msg::PullParams => {
-                                let tensors =
-                                    params.iter().map(|t| t.data().to_vec()).collect();
-                                req.reply
-                                    .send(Msg::Params {
-                                        step: batcher.applied_step(),
-                                        tensors,
-                                    })
-                                    .ok();
-                            }
-                            Msg::Snapshot { path } => {
-                                let reply = shards.collect_state().and_then(
-                                    |(opt_step, _live, blobs)| {
-                                        checkpoint::save_snapshot(
-                                            Path::new(&path),
-                                            batcher.applied_step(),
-                                            &names,
-                                            &params,
-                                            base_lr,
-                                            &schedule,
-                                            kind,
-                                            opt_step,
-                                            blobs,
-                                            &config_section,
-                                        )
-                                    },
-                                );
-                                match reply {
-                                    Ok(bytes) => {
-                                        stats.snapshots += 1;
-                                        req.reply.send(Msg::SnapshotDone { bytes }).ok();
-                                    }
-                                    Err(e) => {
-                                        req.reply
-                                            .send(Msg::Err { msg: format!("{e:#}") })
-                                            .ok();
-                                    }
-                                }
-                            }
-                            Msg::Stats => {
-                                stats.busy = busy.load(Ordering::Relaxed);
-                                req.reply.send(Msg::StatsReply(stats)).ok();
-                            }
-                            Msg::Shutdown => {
-                                req.reply.send(Msg::Bye).ok();
-                                return Ok(());
-                            }
-                            other => {
-                                req.reply
-                                    .send(Msg::Err {
-                                        msg: format!("{} is not a request", other.name()),
-                                    })
-                                    .ok();
-                            }
+                    loop {
+                        // Chaos harness: an injected shard kill lands
+                        // here, on the coordinator thread, between
+                        // requests.
+                        let k = kill.swap(0, Ordering::SeqCst);
+                        if k > 0 {
+                            coord.shards.kill(k - 1);
                         }
+                        // A short recv timeout keeps the eviction
+                        // deadline live while the barrier is stalled
+                        // (no requests arriving to drive the loop).
+                        match req_rx.recv_timeout(Duration::from_millis(5)) {
+                            Ok(req) => {
+                                if coord.handle(req, &busy)? {
+                                    return Ok(());
+                                }
+                            }
+                            Err(RecvTimeoutError::Timeout) => {}
+                            Err(RecvTimeoutError::Disconnected) => return Ok(()),
+                        }
+                        coord.tick()?;
                     }
-                    Ok(())
                 })();
                 // Teardown: unblock any barrier waiters, stop accepting,
                 // join the shard workers — whether we exit via Shutdown
                 // or a shard failure.
-                for (_, tx) in waiters.drain(..) {
+                for (_, tx) in coord.waiters.drain(..) {
                     tx.send(Msg::Err { msg: "server shutting down".into() }).ok();
                 }
                 shutdown.store(true, Ordering::SeqCst);
+                let Coordinator { shards, mut stats, .. } = coord;
                 shards.stop();
                 run?;
                 stats.busy = busy.load(Ordering::Relaxed);
@@ -335,7 +740,21 @@ impl Server {
             })
         };
 
-        Ok(Server { addr, shutdown, coordinator: Some(coordinator), acceptor: Some(acceptor) })
+        Ok(Server {
+            addr,
+            shutdown,
+            kill_shard,
+            coordinator: Some(coordinator),
+            acceptor: Some(acceptor),
+        })
+    }
+
+    /// Chaos harness: kill shard `s`'s worker thread (simulated crash).
+    /// The coordinator notices the poisoned channel on the next step and
+    /// — in resilient mode — respawns and resumes it; without
+    /// `resilient` the server fails, which is the point of the knob.
+    pub fn kill_shard(&self, s: usize) {
+        self.kill_shard.store(s + 1, Ordering::SeqCst);
     }
 
     /// Block until the server shuts down; returns the final counters.
@@ -382,6 +801,9 @@ fn handle_conn(stream: TcpStream, req_tx: SyncSender<Request>, busy: Arc<AtomicU
                 | Msg::Snapshot { .. }
                 | Msg::Stats
                 | Msg::Shutdown
+                | Msg::Join
+                | Msg::Leave { .. }
+                | Msg::EpochInfo
         );
         let reply = if !is_request {
             Msg::Err { msg: format!("{} is not a request", frame.msg.name()) }
@@ -425,6 +847,28 @@ pub fn reference_checkpoint(
     path: &Path,
 ) -> Result<f32> {
     assert!(n_clients >= 1);
+    reference_checkpoint_elastic(cfg, model, &[(1, (0..n_clients as u32).collect())], steps, path)
+}
+
+/// [`reference_checkpoint`] generalized to an *elastic* membership
+/// schedule: `epochs` lists `(start_step, members)` entries, ascending
+/// by start step and covering step 1 — at each step the last entry
+/// whose start is `<= step` is the active member set. Only active
+/// members draw from their gradient-noise streams, exactly like a
+/// dropped or late-joining client on the server (a [`GradSource`] draws
+/// nothing while it is not pushing). This is the oracle for chaos runs
+/// whose membership changes at known step boundaries (a `--drop-client`
+/// eviction lands deterministically at `drop + 1`). Returns the lowest
+/// active member's final noise-free loss.
+pub fn reference_checkpoint_elastic(
+    cfg: &ExperimentConfig,
+    model: &str,
+    epochs: &[(u64, Vec<u32>)],
+    steps: u64,
+    path: &Path,
+) -> Result<f32> {
+    assert!(!epochs.is_empty() && epochs[0].0 == 1, "the schedule must cover step 1");
+    assert!(epochs.windows(2).all(|w| w[0].0 < w[1].0), "epoch starts must ascend");
     let inv = resolve_inventory(model)?;
     let specs = inv.param_specs();
     let shapes = inv.shapes();
@@ -432,20 +876,30 @@ pub fn reference_checkpoint(
     let res: Resolution = group::resolve(&specs, &cfg.grouped());
     let mut opt = optim::build_with_policies(cfg.optimizer, &shapes, &cfg.optim, &res.tensor);
     let mut params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
-    let mut sources: Vec<GradSource> =
-        (0..n_clients).map(|c| GradSource::new(&shapes, cfg.seed, c as u32)).collect();
+    // One source per member id appearing anywhere in the schedule.
+    // Construction draws nothing from the noise stream, so a member's
+    // stream position depends only on how many steps it was active for.
+    let mut sources: BTreeMap<u32, GradSource> = epochs
+        .iter()
+        .flat_map(|(_, m)| m)
+        .map(|&c| (c, GradSource::new(&shapes, cfg.seed, c)))
+        .collect();
     let mut final_loss = f32::NAN;
     for step in 1..=steps {
+        let members =
+            &epochs.iter().rev().find(|(s, _)| *s <= step).expect("step 1 is covered").1;
         let flat: Vec<Vec<f32>> = params.iter().map(|t| t.data().to_vec()).collect();
-        let mut barrier = StepBatcher::new(n_clients, shapes.clone());
-        for (c, src) in sources.iter_mut().enumerate() {
+        let mut barrier = StepBatcher::with_members(members.clone(), shapes.clone(), step);
+        let mut sorted = members.clone();
+        sorted.sort_unstable();
+        for &c in &sorted {
+            let src = sources.get_mut(&c).expect("every member has a source");
             let (loss, grads) = src.grads(&flat)?;
-            if c == 0 {
+            if c == sorted[0] {
                 final_loss = loss;
             }
-            match barrier.offer(c as u32, 1, grads) {
-                Offer::Rejected(msg) => bail!("reference barrier rejected client {c}: {msg}"),
-                _ => {}
+            if let Offer::Rejected(msg) = barrier.offer(c, step, grads) {
+                bail!("reference barrier rejected client {c}: {msg}");
             }
         }
         let grads = barrier.take_coalesced();
@@ -471,13 +925,32 @@ pub fn reference_checkpoint(
 // Load generator
 // ---------------------------------------------------------------------------
 
-/// Loadgen knobs.
+/// Loadgen knobs, including the chaos-harness fault injectors. Faults
+/// always target the *highest-id* client, so the surviving low ids
+/// (client 0 in particular) drive the run to completion.
 #[derive(Clone, Debug)]
 pub struct LoadgenOptions {
     /// Concurrent connections (must equal the server's barrier width).
     pub clients: usize,
     /// Optimizer steps to drive.
     pub steps: u64,
+    /// First step to drive (for resumed servers: the server is at
+    /// `start_step - 1`; gradient-noise streams are fast-forwarded).
+    pub start_step: u64,
+    /// Slow-client fault: p95 milliseconds of an exponential think time
+    /// injected before each of the highest-id client's pushes (0 = off).
+    pub slow_client_ms: f64,
+    /// Drop-client fault: the highest-id client silently stops after
+    /// pushing this step — no polite `Leave`, like a crash (0 = off).
+    /// With `client_timeout_ms` set the server evicts it at step
+    /// `drop + 1`.
+    pub drop_client_at: u64,
+}
+
+impl Default for LoadgenOptions {
+    fn default() -> Self {
+        Self { clients: 1, steps: 10, start_step: 1, slow_client_ms: 0.0, drop_client_at: 0 }
+    }
 }
 
 /// Aggregate loadgen measurements: throughput plus push round-trip
@@ -488,10 +961,12 @@ pub struct LoadgenOptions {
 pub struct LoadgenReport {
     pub clients: usize,
     pub steps: u64,
-    /// Total accepted pushes (= clients × steps).
+    /// Total applied pushes (= clients × steps when nothing drops).
     pub pushes: u64,
     /// `Busy` bounces absorbed by client-side retries.
     pub busy_retries: u64,
+    /// Clients that exited early because the server evicted them.
+    pub evicted: u64,
     pub elapsed_s: f64,
     /// Optimizer steps per second.
     pub steps_per_s: f64,
@@ -509,6 +984,96 @@ fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
     sorted_ms[((sorted_ms.len() - 1) as f64 * q).round() as usize]
 }
 
+/// One client's share of a loadgen run.
+struct ClientRun {
+    latencies_ms: Vec<f64>,
+    applied: u64,
+    busy_retries: u64,
+    final_loss: f32,
+    evicted: bool,
+}
+
+fn drive_client(
+    addr: &str,
+    shapes: &[Vec<usize>],
+    seed: u64,
+    opts: &LoadgenOptions,
+    c: usize,
+) -> Result<ClientRun> {
+    let mut client = Client::connect(addr)?;
+    let mut src = GradSource::new(shapes, seed, c as u32);
+    if opts.start_step > 1 {
+        src.skip_steps(opts.start_step - 1);
+    }
+    let mut epoch = client.epoch_info()?.epoch;
+    // Fault injection targets the highest-id client only.
+    let faulty = c + 1 == opts.clients;
+    let slow_ms = if faulty { opts.slow_client_ms } else { 0.0 };
+    let drop_at = if faulty { opts.drop_client_at } else { 0 };
+    let mut think = Pcg32::with_stream(seed ^ 0x51de_c43e, 0x51de + c as u64);
+    let mut run = ClientRun {
+        latencies_ms: Vec::with_capacity(opts.steps as usize),
+        applied: 0,
+        busy_retries: 0,
+        final_loss: f32::NAN,
+        evicted: false,
+    };
+    let last = opts.start_step + opts.steps - 1;
+    'steps: for step in opts.start_step..=last {
+        if drop_at != 0 && step > drop_at {
+            // Simulated crash: stop driving mid-run, no polite Leave —
+            // the server's eviction deadline has to notice on its own.
+            break;
+        }
+        let (at, params) = client.pull_params()?;
+        if at >= step {
+            // The barrier advanced without us: we were evicted.
+            run.evicted = true;
+            break;
+        }
+        if at != step - 1 {
+            bail!(
+                "client {c}: server at step {at}, expected {} — \
+                 is another loadgen driving it?",
+                step - 1
+            );
+        }
+        let (loss, grads) = src.grads(&params)?;
+        run.final_loss = loss;
+        if slow_ms > 0.0 {
+            // Exponential think time with p95 = slow_ms (the p95 of an
+            // exponential is ln 20 ≈ 3.0 mean lifetimes).
+            let u = (think.uniform() as f64).min(0.999_999);
+            let ms = -(slow_ms / 3.0) * (1.0 - u).ln();
+            thread::sleep(Duration::from_secs_f64(ms / 1e3));
+        }
+        let t = Instant::now();
+        loop {
+            match client.push_grad(c as u32, epoch, step, grads.clone())? {
+                PushOutcome::Applied(applied) => {
+                    run.latencies_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                    run.applied += 1;
+                    if applied != step {
+                        bail!("client {c}: pushed step {step}, server applied {applied}");
+                    }
+                    break;
+                }
+                // Membership changed under us (someone joined, left or
+                // was evicted): adopt the current epoch, retry the same
+                // step — our pending slot is untouched.
+                PushOutcome::Stale(current) => epoch = current,
+                PushOutcome::Rejected(msg) if msg.contains("not a member") => {
+                    run.evicted = true;
+                    break 'steps;
+                }
+                PushOutcome::Rejected(msg) => bail!("client {c}: push rejected: {msg}"),
+            }
+        }
+    }
+    run.busy_retries = client.busy_retries;
+    Ok(run)
+}
+
 /// Drive `opts.clients` concurrent connections for `opts.steps` steps
 /// against the server at `addr`. `shapes`/`seed` must match the
 /// server's workload (the CLI derives both from the same config).
@@ -518,7 +1083,7 @@ pub fn run_loadgen(
     seed: u64,
     opts: &LoadgenOptions,
 ) -> Result<LoadgenReport> {
-    assert!(opts.clients >= 1 && opts.steps >= 1);
+    assert!(opts.clients >= 1 && opts.steps >= 1 && opts.start_step >= 1);
     check_wire_capacity("workload", shapes)?;
     // A client count that disagrees with the server's barrier width
     // would deadlock the first push (the barrier never completes) —
@@ -534,36 +1099,9 @@ pub fn run_loadgen(
         );
     }
     let t0 = Instant::now();
-    let results: Vec<Result<(Vec<f64>, u64, f32)>> = thread::scope(|s| {
+    let results: Vec<Result<ClientRun>> = thread::scope(|s| {
         let handles: Vec<_> = (0..opts.clients)
-            .map(|c| {
-                let steps = opts.steps;
-                s.spawn(move || -> Result<(Vec<f64>, u64, f32)> {
-                    let mut client = Client::connect(addr)?;
-                    let mut src = GradSource::new(shapes, seed, c as u32);
-                    let mut latencies_ms = Vec::with_capacity(steps as usize);
-                    let mut final_loss = f32::NAN;
-                    for step in 1..=steps {
-                        let (at, params) = client.pull_params()?;
-                        if at != step - 1 {
-                            bail!(
-                                "client {c}: server at step {at}, expected {} — \
-                                 is another loadgen driving it?",
-                                step - 1
-                            );
-                        }
-                        let (loss, grads) = src.grads(&params)?;
-                        final_loss = loss;
-                        let t = Instant::now();
-                        let applied = client.push_grad(c as u32, step, grads)?;
-                        latencies_ms.push(t.elapsed().as_secs_f64() * 1e3);
-                        if applied != step {
-                            bail!("client {c}: pushed step {step}, server applied {applied}");
-                        }
-                    }
-                    Ok((latencies_ms, client.busy_retries, final_loss))
-                })
-            })
+            .map(|c| s.spawn(move || drive_client(addr, shapes, seed, opts, c)))
             .collect();
         handles
             .into_iter()
@@ -574,13 +1112,17 @@ pub fn run_loadgen(
 
     let mut all_ms = Vec::with_capacity(opts.clients * opts.steps as usize);
     let mut busy_retries = 0u64;
+    let mut pushes = 0u64;
+    let mut evicted = 0u64;
     let mut final_loss = f32::NAN;
     for (c, r) in results.into_iter().enumerate() {
-        let (lat, busy, loss) = r.with_context(|| format!("loadgen client {c}"))?;
-        all_ms.extend(lat);
-        busy_retries += busy;
+        let run = r.with_context(|| format!("loadgen client {c}"))?;
+        all_ms.extend(run.latencies_ms);
+        busy_retries += run.busy_retries;
+        pushes += run.applied;
+        evicted += run.evicted as u64;
         if c == 0 {
-            final_loss = loss;
+            final_loss = run.final_loss;
         }
     }
     all_ms.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
@@ -588,8 +1130,9 @@ pub fn run_loadgen(
     Ok(LoadgenReport {
         clients: opts.clients,
         steps: opts.steps,
-        pushes: opts.clients as u64 * opts.steps,
+        pushes,
         busy_retries,
+        evicted,
         elapsed_s,
         steps_per_s: opts.steps as f64 / elapsed_s.max(1e-12),
         push_p50_ms: percentile(&all_ms, 0.50),
@@ -606,24 +1149,45 @@ mod tests {
     #[test]
     fn serve_options_validate_counts() {
         // TOML layer
-        let doc = TomlDoc::parse("[server]\nshards = 2\nclients = 4\nmax_pending = 8").unwrap();
+        let doc = TomlDoc::parse(
+            "[server]\nshards = 2\nclients = 4\nmax_pending = 8\n\
+             client_timeout_ms = 250\nresilient = true",
+        )
+        .unwrap();
         let mut o = ServeOptions::default();
         o.apply_toml(&doc).unwrap();
         assert_eq!((o.shards, o.clients, o.max_pending), (2, 4, 8));
+        assert_eq!((o.client_timeout_ms, o.resilient), (250, true));
         for bad in ["[server]\nshards = 0", "[server]\nclients = -3", "[server]\nshards = \"x\""]
         {
             let doc = TomlDoc::parse(bad).unwrap();
             let e = ServeOptions::default().apply_toml(&doc).unwrap_err();
             assert!(format!("{e:#}").contains(">= 1"), "{bad}: {e:#}");
         }
+        // client_timeout_ms = 0 is valid (eviction off); negatives are not.
+        let doc = TomlDoc::parse("[server]\nclient_timeout_ms = 0").unwrap();
+        let mut o = ServeOptions::default();
+        o.apply_toml(&doc).unwrap();
+        assert_eq!(o.client_timeout_ms, 0);
+        let doc = TomlDoc::parse("[server]\nclient_timeout_ms = -5").unwrap();
+        let e = ServeOptions::default().apply_toml(&doc).unwrap_err();
+        assert!(format!("{e:#}").contains(">= 0"), "{e:#}");
         // CLI layer
-        let args = Args::parse(["--shards", "3", "--clients", "2"].iter().map(|s| s.to_string()));
+        let args = Args::parse(
+            ["--shards", "3", "--clients", "2", "--client-timeout-ms", "100", "--resilient"]
+                .iter()
+                .map(|s| s.to_string()),
+        );
         let mut o = ServeOptions::default();
         o.apply_args(&args).unwrap();
         assert_eq!((o.shards, o.clients), (3, 2));
+        assert_eq!((o.client_timeout_ms, o.resilient), (100, true));
         let args = Args::parse(["--clients", "0"].iter().map(|s| s.to_string()));
         let e = ServeOptions::default().apply_args(&args).unwrap_err();
         assert!(format!("{e:#}").contains(">= 1"), "{e:#}");
+        let args = Args::parse(["--client-timeout-ms", "-1"].iter().map(|s| s.to_string()));
+        let e = ServeOptions::default().apply_args(&args).unwrap_err();
+        assert!(format!("{e:#}").contains("non-negative"), "{e:#}");
     }
 
     #[test]

@@ -20,9 +20,10 @@
 //! is pointer-sized — no data copies), so there is no shared mutable
 //! state and no unsafe.
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 use std::sync::mpsc::{self, Receiver, Sender};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::optim::parallel::{ParamPartition, TensorGeom};
 use crate::optim::{self, OptKind, OptimConfig, Optimizer, StateSerde, TensorPolicy};
@@ -87,6 +88,11 @@ enum Cmd {
     /// Collect the shard's serialized optimizer state.
     Collect,
     Stop,
+    /// Fault injection: the worker returns immediately without replying
+    /// or draining its queue — observably identical (poisoned channels)
+    /// to a panic, minus the stderr noise. Chaos tests and `repro
+    /// loadgen --kill-shard` use this.
+    Kill,
 }
 
 enum Reply {
@@ -100,10 +106,83 @@ struct ShardHandle {
     join: Option<JoinHandle<()>>,
 }
 
-/// K shard workers plus the plan mapping tensors onto them.
+/// Everything a dead shard needs to come back exactly where it died: an
+/// in-memory `SMMFCKPT` v2 image of the *whole* run after the last
+/// applied step, cracked open into the pieces recovery consumes —
+/// parameters and per-tensor state blobs in inventory order, plus the
+/// shared optimizer step counter.
+pub struct RecoveryImage {
+    pub opt_step: u64,
+    pub params: Vec<Tensor>,
+    pub blobs: Vec<Vec<u8>>,
+}
+
+/// What a resilient step had to do to complete (all zero on the happy
+/// path).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct Recovery {
+    /// Shard workers respawned during this step.
+    pub respawns: u64,
+    /// Wall-clock time spent detecting, respawning and replaying.
+    pub elapsed: Duration,
+}
+
+/// Build one shard worker. The optimizer is constructed — and, for a
+/// respawn/resume, restored from `restore = (opt_step, blobs in local
+/// order)` — on the *calling* thread, so a corrupt restore fails here
+/// with context instead of poisoning a channel.
+fn spawn_worker(
+    kind: OptKind,
+    shapes: &[Vec<usize>],
+    cfg: &OptimConfig,
+    policies: &[TensorPolicy],
+    idx: &[usize],
+    restore: Option<(u64, Vec<Vec<u8>>)>,
+) -> Result<ShardHandle> {
+    let mut opt = optim::build_subset(kind, shapes, cfg, policies, idx);
+    if let Some((opt_step, blobs)) = restore {
+        opt.set_opt_step(opt_step);
+        opt.load_state_blobs(&blobs)?;
+    }
+    let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+    let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+    let join = std::thread::spawn(move || {
+        while let Ok(cmd) = cmd_rx.recv() {
+            match cmd {
+                Cmd::Step { lr, mut params, grads } => {
+                    opt.set_lr(lr);
+                    opt.step(&mut params, &grads);
+                    if reply_tx.send(Reply::Stepped { params }).is_err() {
+                        break;
+                    }
+                }
+                Cmd::Collect => {
+                    let reply = Reply::State {
+                        opt_step: opt.opt_step(),
+                        state_bytes: opt.state_bytes(),
+                        blobs: opt.state_blobs(),
+                    };
+                    if reply_tx.send(reply).is_err() {
+                        break;
+                    }
+                }
+                Cmd::Stop | Cmd::Kill => break,
+            }
+        }
+    });
+    Ok(ShardHandle { tx: cmd_tx, rx: reply_rx, join: Some(join) })
+}
+
+/// K shard workers plus the plan mapping tensors onto them. The spawn
+/// recipe (kind / shapes / config / policies) is kept so a dead worker
+/// can be rebuilt mid-run.
 pub struct ShardSet {
     pub plan: ShardPlan,
     handles: Vec<ShardHandle>,
+    kind: OptKind,
+    shapes: Vec<Vec<usize>>,
+    cfg: OptimConfig,
+    policies: Vec<TensorPolicy>,
 }
 
 impl ShardSet {
@@ -119,43 +198,92 @@ impl ShardSet {
         policies: &[TensorPolicy],
         n_shards: usize,
     ) -> ShardSet {
+        Self::spawn_inner(kind, shapes, cfg, policies, n_shards, None)
+            .expect("fresh spawn restores nothing and cannot fail")
+    }
+
+    /// Spawn with every shard restored from checkpointed optimizer state
+    /// (`blobs` in original inventory order). `n_shards` is free to
+    /// differ from the run that wrote the state: the FLOP-balancing
+    /// planner re-runs and each worker restores exactly the blobs of the
+    /// tensors it now owns — the K-migration path behind `repro serve
+    /// --resume`.
+    pub fn spawn_restored(
+        kind: OptKind,
+        shapes: &[Vec<usize>],
+        cfg: &OptimConfig,
+        policies: &[TensorPolicy],
+        n_shards: usize,
+        opt_step: u64,
+        blobs: &[Vec<u8>],
+    ) -> Result<ShardSet> {
+        if blobs.len() != shapes.len() {
+            bail!("restore carries {} state blobs for {} tensors", blobs.len(), shapes.len());
+        }
+        Self::spawn_inner(kind, shapes, cfg, policies, n_shards, Some((opt_step, blobs)))
+    }
+
+    fn spawn_inner(
+        kind: OptKind,
+        shapes: &[Vec<usize>],
+        cfg: &OptimConfig,
+        policies: &[TensorPolicy],
+        n_shards: usize,
+        restore: Option<(u64, &[Vec<u8>])>,
+    ) -> Result<ShardSet> {
         let plan = plan_shards(shapes, policies, n_shards);
         let mut handles = Vec::with_capacity(plan.n_shards);
         for s in 0..plan.n_shards {
-            let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
-            let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
-            let idx = plan.locals[s].clone();
-            let shapes = shapes.to_vec();
-            let cfg = cfg.clone();
-            let policies = policies.to_vec();
-            let join = std::thread::spawn(move || {
-                let mut opt = optim::build_subset(kind, &shapes, &cfg, &policies, &idx);
-                while let Ok(cmd) = cmd_rx.recv() {
-                    match cmd {
-                        Cmd::Step { lr, mut params, grads } => {
-                            opt.set_lr(lr);
-                            opt.step(&mut params, &grads);
-                            if reply_tx.send(Reply::Stepped { params }).is_err() {
-                                break;
-                            }
-                        }
-                        Cmd::Collect => {
-                            let reply = Reply::State {
-                                opt_step: opt.opt_step(),
-                                state_bytes: opt.state_bytes(),
-                                blobs: opt.state_blobs(),
-                            };
-                            if reply_tx.send(reply).is_err() {
-                                break;
-                            }
-                        }
-                        Cmd::Stop => break,
-                    }
-                }
+            let idx = &plan.locals[s];
+            let sub_restore = restore.map(|(opt_step, blobs)| {
+                (opt_step, idx.iter().map(|&t| blobs[t].clone()).collect())
             });
-            handles.push(ShardHandle { tx: cmd_tx, rx: reply_rx, join: Some(join) });
+            handles.push(
+                spawn_worker(kind, shapes, cfg, policies, idx, sub_restore)
+                    .map_err(|e| anyhow!("restoring shard {s}: {e:#}"))?,
+            );
         }
-        ShardSet { plan, handles }
+        Ok(ShardSet {
+            plan,
+            handles,
+            kind,
+            shapes: shapes.to_vec(),
+            cfg: cfg.clone(),
+            policies: policies.to_vec(),
+        })
+    }
+
+    /// Fault injection: make shard `s`'s worker exit as if it crashed
+    /// (its channels poison; the next step against it fails). Recovery
+    /// is [`ShardSet::step_resilient`]'s job.
+    pub fn kill(&self, s: usize) {
+        if let Some(h) = self.handles.get(s) {
+            let _ = h.tx.send(Cmd::Kill);
+        }
+    }
+
+    /// Rebuild shard `s` from a recovery image: re-plan nothing (the
+    /// plan is fixed for the server's lifetime), restore the worker's
+    /// optimizer state tensor-by-tensor from the image blobs.
+    fn respawn_from(&mut self, s: usize, image: &RecoveryImage) -> Result<()> {
+        let idx = &self.plan.locals[s];
+        let blobs: Vec<Vec<u8>> = idx.iter().map(|&t| image.blobs[t].clone()).collect();
+        let fresh = spawn_worker(
+            self.kind,
+            &self.shapes,
+            &self.cfg,
+            &self.policies,
+            idx,
+            Some((image.opt_step, blobs)),
+        )
+        .map_err(|e| anyhow!("respawning shard {s}: {e:#}"))?;
+        let mut old = std::mem::replace(&mut self.handles[s], fresh);
+        // The dead worker's thread has already returned (that is how we
+        // noticed); join just reaps it.
+        if let Some(j) = old.join.take() {
+            let _ = j.join();
+        }
+        Ok(())
     }
 
     /// Apply one coalesced optimizer step across all shards: scatter the
@@ -197,6 +325,104 @@ impl ShardSet {
             }
         }
         Ok(())
+    }
+
+    /// [`ShardSet::step`] with crash-resume: a shard whose worker died
+    /// (send or receive on a poisoned channel) is respawned from the
+    /// coordinator's recovery image — optimizer state restored
+    /// tensor-by-tensor, the shard's parameters reset from the image
+    /// (they carry the last applied step exactly), and this step's
+    /// gradients replayed from the clones kept at scatter time. The
+    /// continuation is bit-identical to a run where the shard never
+    /// died, because the replayed step consumes exactly the state and
+    /// inputs the dead worker held. `recover` parses the image lazily —
+    /// the happy path never touches it — and a shard that dies *again*
+    /// during its own recovery is a hard error.
+    pub fn step_resilient(
+        &mut self,
+        lr: f32,
+        params: &mut [Tensor],
+        grads: Vec<Tensor>,
+        recover: &mut dyn FnMut() -> Result<RecoveryImage>,
+    ) -> Result<Recovery> {
+        assert_eq!(params.len(), self.plan.assign.len());
+        assert_eq!(grads.len(), self.plan.assign.len());
+        let n = self.plan.n_shards;
+        let mut grads: Vec<Option<Tensor>> = grads.into_iter().map(Some).collect();
+        // Clone each shard's gradient subset before it moves into the
+        // channel: a dead shard's inputs must be replayable without
+        // asking the clients to re-push.
+        let mut sent: Vec<Option<Vec<Tensor>>> = (0..n).map(|_| None).collect();
+        let mut dead = vec![false; n];
+        for s in 0..n {
+            if self.plan.locals[s].is_empty() {
+                continue;
+            }
+            let idx = &self.plan.locals[s];
+            let sub_params: Vec<Tensor> = idx
+                .iter()
+                .map(|&t| std::mem::replace(&mut params[t], Tensor::scalar(0.0)))
+                .collect();
+            let sub_grads: Vec<Tensor> =
+                idx.iter().map(|&t| grads[t].take().expect("each tensor scattered once")).collect();
+            sent[s] = Some(sub_grads.clone());
+            if self.handles[s]
+                .tx
+                .send(Cmd::Step { lr, params: sub_params, grads: sub_grads })
+                .is_err()
+            {
+                dead[s] = true;
+            }
+        }
+        let mut image: Option<RecoveryImage> = None;
+        let mut rec = Recovery::default();
+        for s in 0..n {
+            if self.plan.locals[s].is_empty() {
+                continue;
+            }
+            if !dead[s] {
+                match self.handles[s].rx.recv() {
+                    Ok(Reply::Stepped { params: sub }) => {
+                        for (&t, tensor) in self.plan.locals[s].iter().zip(sub) {
+                            params[t] = tensor;
+                        }
+                        continue;
+                    }
+                    _ => dead[s] = true,
+                }
+            }
+            // Recovery: respawn from the image and replay this step.
+            let t0 = Instant::now();
+            if image.is_none() {
+                image = Some(recover()?);
+            }
+            let img = image.as_ref().unwrap();
+            if img.params.len() != params.len() {
+                bail!(
+                    "recovery image holds {} tensors, inventory has {}",
+                    img.params.len(),
+                    params.len()
+                );
+            }
+            self.respawn_from(s, img)?;
+            let idx = &self.plan.locals[s];
+            let sub_params: Vec<Tensor> = idx.iter().map(|&t| img.params[t].clone()).collect();
+            let sub_grads = sent[s].take().expect("grads cloned at scatter");
+            let h = &self.handles[s];
+            h.tx.send(Cmd::Step { lr, params: sub_params, grads: sub_grads })
+                .map_err(|_| anyhow!("shard {s}: respawned worker died immediately"))?;
+            match h.rx.recv() {
+                Ok(Reply::Stepped { params: sub }) => {
+                    for (&t, tensor) in self.plan.locals[s].iter().zip(sub) {
+                        params[t] = tensor;
+                    }
+                }
+                _ => bail!("shard {s} died again while replaying the recovered step"),
+            }
+            rec.respawns += 1;
+            rec.elapsed += t0.elapsed();
+        }
+        Ok(rec)
     }
 
     /// Gather the serialized optimizer state from every shard, reordered
@@ -341,5 +567,128 @@ mod tests {
                 shards.stop();
             }
         }
+    }
+
+    fn random_tensors(shapes: &[Vec<usize>], rng: &mut Pcg32, sigma: f32) -> Vec<Tensor> {
+        shapes
+            .iter()
+            .map(|s| {
+                let mut t = Tensor::zeros(s);
+                rng.fill_normal(t.data_mut(), sigma);
+                t
+            })
+            .collect()
+    }
+
+    /// Crash-resume bit-identity at the shard layer: kill a worker
+    /// mid-run, let `step_resilient` respawn it from a recovery image,
+    /// and the run must end bit-identical (params AND state blobs) to a
+    /// run that never crashed.
+    #[test]
+    fn killed_shard_resumes_bit_identically() {
+        let shapes = toy_shapes();
+        let mut cfg = OptimConfig::paper_defaults(OptKind::Smmf);
+        cfg.lr = 0.01;
+        cfg.relative_step = false;
+        let pol = uniform_policies(&cfg, shapes.len());
+
+        // Uninterrupted reference over the same streams.
+        let mut reference = build_with_policies(OptKind::Smmf, &shapes, &cfg, &pol);
+        let mut p_ref = random_tensors(&shapes, &mut Pcg32::new(11), 0.3);
+
+        let mut shards = ShardSet::spawn(OptKind::Smmf, &shapes, &cfg, &pol, 3);
+        let mut p_live = p_ref.clone();
+        // Image of step 0: initial params, fresh state.
+        let (t0, _, b0) = shards.collect_state().unwrap();
+        let mut img = RecoveryImage { opt_step: t0, params: p_live.clone(), blobs: b0 };
+
+        let mut grng = Pcg32::new(29);
+        let mut total_respawns = 0u64;
+        for step in 1..=6u64 {
+            let grads = random_tensors(&shapes, &mut grng, 0.05);
+            if step == 3 {
+                shards.kill(1);
+            }
+            if step == 5 {
+                shards.kill(0);
+                shards.kill(2);
+            }
+            let lr = 0.01 / step as f32;
+            let mut recover = || -> Result<RecoveryImage> {
+                Ok(RecoveryImage {
+                    opt_step: img.opt_step,
+                    params: img.params.clone(),
+                    blobs: img.blobs.clone(),
+                })
+            };
+            let rec = shards.step_resilient(lr, &mut p_live, grads.clone(), &mut recover).unwrap();
+            total_respawns += rec.respawns;
+            reference.set_lr(lr);
+            reference.step(&mut p_ref, &grads);
+            assert_eq!(p_live, p_ref, "params drift at step {step}");
+            // Refresh the image after every applied step, like the
+            // resilient coordinator does.
+            let (t, _, blobs) = shards.collect_state().unwrap();
+            img = RecoveryImage { opt_step: t, params: p_live.clone(), blobs };
+        }
+        assert_eq!(total_respawns, 3, "one respawn per injected kill");
+        let (opt_step, _, blobs) = shards.collect_state().unwrap();
+        assert_eq!(opt_step, reference.opt_step());
+        assert_eq!(blobs, reference.state_blobs(), "state blobs drift after recovery");
+        shards.stop();
+    }
+
+    /// K-migration: state collected from a K-shard run restores into a
+    /// K'-shard set (the planner re-runs; each worker restores the blobs
+    /// of the tensors it now owns) and continues bit-identically.
+    #[test]
+    fn state_migrates_across_shard_counts() {
+        let shapes = toy_shapes();
+        let mut cfg = OptimConfig::paper_defaults(OptKind::Smmf);
+        cfg.lr = 0.01;
+        cfg.relative_step = false;
+        let pol = uniform_policies(&cfg, shapes.len());
+
+        let mut reference = build_with_policies(OptKind::Smmf, &shapes, &cfg, &pol);
+        let mut p_ref = random_tensors(&shapes, &mut Pcg32::new(7), 0.3);
+        let first = ShardSet::spawn(OptKind::Smmf, &shapes, &cfg, &pol, 2);
+        let mut p_live = p_ref.clone();
+
+        let mut grng = Pcg32::new(31);
+        for step in 1..=3u64 {
+            let grads = random_tensors(&shapes, &mut grng, 0.05);
+            first.step(0.01, &mut p_live, grads.clone()).unwrap();
+            reference.step(&mut p_ref, &grads);
+            let _ = step;
+        }
+        let (opt_step, _, blobs) = first.collect_state().unwrap();
+        first.stop();
+
+        // Restore onto a *different* shard count and keep going.
+        let second =
+            ShardSet::spawn_restored(OptKind::Smmf, &shapes, &cfg, &pol, 4, opt_step, &blobs)
+                .unwrap();
+        for _ in 4..=6u64 {
+            let grads = random_tensors(&shapes, &mut grng, 0.05);
+            second.step(0.01, &mut p_live, grads.clone()).unwrap();
+            reference.step(&mut p_ref, &grads);
+        }
+        assert_eq!(p_live, p_ref, "params drift across the 2 -> 4 shard migration");
+        let (t2, _, b2) = second.collect_state().unwrap();
+        assert_eq!(t2, reference.opt_step());
+        assert_eq!(b2, reference.state_blobs());
+        second.stop();
+
+        // blob/tensor count mismatch is a clear error
+        let bad = ShardSet::spawn_restored(
+            OptKind::Smmf,
+            &shapes,
+            &cfg,
+            &pol,
+            2,
+            opt_step,
+            &b2[..b2.len() - 1],
+        );
+        assert!(bad.is_err());
     }
 }

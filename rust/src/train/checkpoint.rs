@@ -317,6 +317,24 @@ pub fn save_v2(
     opt: Option<&OptSection>,
     config: Option<&ConfigSection>,
 ) -> Result<()> {
+    atomic_write(path, |w| write_v2(w, step, names, params, rng, schedule, opt, config))
+}
+
+/// Stream a v2 checkpoint to any writer — the body of [`save_v2`],
+/// shared with the in-memory snapshot path ([`snapshot_to_bytes`]) so a
+/// file snapshot and a recovery image are byte-identical by
+/// construction.
+#[allow(clippy::too_many_arguments)]
+pub fn write_v2(
+    w: &mut impl Write,
+    step: u64,
+    names: &[String],
+    params: &[Tensor],
+    rng: Option<(u64, u64)>,
+    schedule: Option<&ScheduleSection>,
+    opt: Option<&OptSection>,
+    config: Option<&ConfigSection>,
+) -> std::io::Result<()> {
     assert_eq!(names.len(), params.len());
 
     // Small sections are assembled in memory; PARAMS/OPT stream.
@@ -349,46 +367,43 @@ pub fn save_v2(
         + sched_payload.is_some() as u32
         + opt.is_some() as u32
         + config_payload.is_some() as u32;
-    atomic_write(path, |w| {
-        w.write_all(MAGIC)?;
-        w_u32(w, VERSION_V2)?;
-        w_u32(w, n_sections)?;
+    w.write_all(MAGIC)?;
+    w_u32(w, VERSION_V2)?;
+    w_u32(w, n_sections)?;
 
-        w_u32(w, SEC_PARAMS)?;
-        w_u64(w, tensor_table_len(names, params))?;
-        stream_tensor_table(w, names, params)?;
+    w_u32(w, SEC_PARAMS)?;
+    w_u64(w, tensor_table_len(names, params))?;
+    stream_tensor_table(w, names, params)?;
 
-        w_u32(w, SEC_TRAINER)?;
-        w_u64(w, trainer_payload.len() as u64)?;
-        w.write_all(&trainer_payload)?;
+    w_u32(w, SEC_TRAINER)?;
+    w_u64(w, trainer_payload.len() as u64)?;
+    w.write_all(&trainer_payload)?;
 
-        if let Some(p) = &sched_payload {
-            w_u32(w, SEC_SCHEDULE)?;
-            w_u64(w, p.len() as u64)?;
-            w.write_all(p)?;
+    if let Some(p) = &sched_payload {
+        w_u32(w, SEC_SCHEDULE)?;
+        w_u64(w, p.len() as u64)?;
+        w.write_all(p)?;
+    }
+
+    if let Some(o) = opt {
+        w_u32(w, SEC_OPT)?;
+        let len: u64 = 4 + 8 + 4 + o.blobs.iter().map(|b| 8 + b.len() as u64).sum::<u64>();
+        w_u64(w, len)?;
+        w_u32(w, o.kind.tag())?;
+        w_u64(w, o.opt_step)?;
+        w_u32(w, o.blobs.len() as u32)?;
+        for blob in &o.blobs {
+            w_u64(w, blob.len() as u64)?;
+            w.write_all(blob)?;
         }
+    }
 
-        if let Some(o) = opt {
-            w_u32(w, SEC_OPT)?;
-            let len: u64 =
-                4 + 8 + 4 + o.blobs.iter().map(|b| 8 + b.len() as u64).sum::<u64>();
-            w_u64(w, len)?;
-            w_u32(w, o.kind.tag())?;
-            w_u64(w, o.opt_step)?;
-            w_u32(w, o.blobs.len() as u32)?;
-            for blob in &o.blobs {
-                w_u64(w, blob.len() as u64)?;
-                w.write_all(blob)?;
-            }
-        }
-
-        if let Some(p) = &config_payload {
-            w_u32(w, SEC_CONFIG)?;
-            w_u64(w, p.len() as u64)?;
-            w.write_all(p)?;
-        }
-        Ok(())
-    })
+    if let Some(p) = &config_payload {
+        w_u32(w, SEC_CONFIG)?;
+        w_u64(w, p.len() as u64)?;
+        w.write_all(p)?;
+    }
+    Ok(())
 }
 
 /// One-call snapshot writer for the optimizer-state server (and its
@@ -425,6 +440,44 @@ pub fn save_snapshot(
     Ok(std::fs::metadata(path).with_context(|| format!("stat {path:?}"))?.len())
 }
 
+/// [`save_snapshot`]'s section set serialized to memory instead of
+/// disk: the server's crash-recovery image. Byte-identical to what
+/// [`save_snapshot`] would write (both funnel through [`write_v2`]), so
+/// a recovery image doubles as a snapshot and vice versa.
+#[allow(clippy::too_many_arguments)]
+pub fn snapshot_to_bytes(
+    step: u64,
+    names: &[String],
+    params: &[Tensor],
+    base_lr: f32,
+    schedule: &LrSchedule,
+    kind: OptKind,
+    opt_step: u64,
+    blobs: Vec<Vec<u8>>,
+    config: &ConfigSection,
+) -> Vec<u8> {
+    let sched = ScheduleSection { base_lr, schedule: schedule.clone() };
+    let opt = OptSection { kind, opt_step, blobs };
+    let mut buf = Vec::new();
+    write_v2(&mut buf, step, names, params, None, Some(&sched), Some(&opt), Some(config))
+        .expect("writing a checkpoint to memory cannot fail");
+    buf
+}
+
+/// Atomically persist an already-serialized checkpoint image (e.g. a
+/// crash-recovery image from [`snapshot_to_bytes`]) to `path`, creating
+/// parent directories like [`save_snapshot`]. Returns the byte count.
+pub fn write_snapshot_bytes(path: &Path, bytes: &[u8]) -> Result<u64> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating snapshot dir {parent:?}"))?;
+        }
+    }
+    atomic_write(path, |w| w.write_all(bytes))?;
+    Ok(bytes.len() as u64)
+}
+
 /// Stream the writer's output to `<path>.tmp` in the same directory,
 /// fsync, then atomically rename over `path` — a crash mid-save can
 /// never destroy the previous checkpoint (the whole point of
@@ -447,7 +500,14 @@ fn atomic_write(
         let _ = std::fs::remove_file(&tmp);
         return Err(e).with_context(|| format!("writing {tmp:?}"));
     }
-    std::fs::rename(&tmp, path).with_context(|| format!("renaming {tmp:?} over {path:?}"))
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        // A failed rename (target is a directory, cross-device target
+        // appeared, permissions flipped) must not strand the temp file
+        // next to the checkpoint.
+        let _ = std::fs::remove_file(&tmp);
+        return Err(e).with_context(|| format!("renaming {tmp:?} over {path:?}"));
+    }
+    Ok(())
 }
 
 /// Byte length of the streamed tensor table (the PARAMS section payload).
@@ -512,6 +572,12 @@ pub fn load_any(path: &Path) -> Result<Checkpoint> {
     let file = std::fs::File::open(path).with_context(|| format!("reading {path:?}"))?;
     parse(std::io::BufReader::new(file), total)
         .with_context(|| format!("corrupt checkpoint {path:?}"))
+}
+
+/// Parse an in-memory checkpoint image (a [`snapshot_to_bytes`] recovery
+/// image) with the same strict bounds-checked loader as [`load_any`].
+pub fn load_bytes(bytes: &[u8]) -> Result<Checkpoint> {
+    parse(bytes, bytes.len() as u64).context("corrupt in-memory checkpoint image")
 }
 
 /// Legacy v1 loader signature: `(step, names, params)` of any readable

@@ -208,6 +208,48 @@ fn truncated_and_corrupt_checkpoints_error_cleanly() {
     std::fs::remove_file(&path).unwrap();
 }
 
+/// A failed snapshot write must not strand its `.tmp` sibling and must
+/// surface the io error with the offending path (regression: the temp
+/// file used to leak when the final rename failed).
+#[test]
+fn failed_snapshot_writes_remove_the_temp_and_name_the_path() {
+    let shapes = vec![vec![8, 8]];
+    let cfg = cfg_for(OptKind::Smmf, 1);
+    let mut opt = build(OptKind::Smmf, &shapes, &cfg);
+    let mut rng = Pcg32::new(11);
+    let mut params = rand_tensors(&mut rng, &shapes, 0.5);
+    let grads = rand_tensors(&mut rng, &shapes, 0.1);
+    opt.step(&mut params, &grads);
+    let names = vec!["w".to_string()];
+
+    // Rename failure: the target exists and is a non-empty directory, so
+    // the temp write itself succeeds and only the final rename fails —
+    // the torn write's temp file must be cleaned up, not stranded.
+    let dir = std::env::temp_dir().join(format!("smmf_ckpt_it_dir_{}", std::process::id()));
+    std::fs::create_dir_all(dir.join("occupied")).unwrap();
+    let e = checkpoint::save_v2(&dir, 1, &names, &params, None, None, None, None).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("renaming"), "{msg}");
+    assert!(msg.contains(dir.file_name().unwrap().to_str().unwrap()), "{msg}");
+    let mut side = dir.file_name().unwrap().to_os_string();
+    side.push(".tmp");
+    let tmp_sibling = dir.with_file_name(side);
+    assert!(!tmp_sibling.exists(), "leaked {tmp_sibling:?}");
+
+    // Create failure: the parent is a regular file, so the temp file
+    // cannot even be created — the error still names the temp path.
+    let blocker = tmp("parent_is_a_file");
+    std::fs::write(&blocker, b"x").unwrap();
+    let inside = blocker.join("x.bin");
+    let e =
+        checkpoint::save_v2(&inside, 1, &names, &params, None, None, None, None).unwrap_err();
+    let msg = format!("{e:#}");
+    assert!(msg.contains("writing") && msg.contains("x.bin.tmp"), "{msg}");
+
+    std::fs::remove_dir_all(&dir).ok();
+    std::fs::remove_file(&blocker).ok();
+}
+
 #[test]
 fn mismatched_optimizer_state_is_rejected() {
     let shapes = test_shapes();

@@ -1,19 +1,24 @@
 //! End-to-end tests for the optimizer-state server: the determinism
 //! contract (a K-shard server driven by N concurrent TCP clients writes
 //! a snapshot byte-identical to the equivalent single-process trainer,
-//! at shards {1,2} × clients {1,4}), the loadgen measurements, and the
-//! wire-level error paths.
+//! at shards {1,2} × clients {1,4}), the loadgen measurements, the
+//! wire-level error paths, and the fault-tolerance contract (membership
+//! epochs, client eviction, shard crash-resume, snapshot resume with
+//! re-sharding) pinned against the elastic reference trainer.
 //!
 //! Everything here runs over real loopback TCP against the `tiny_lm`
 //! inventory (~15K params) — no AOT artifacts, no PJRT.
 
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
 
 use smmf_repro::coordinator::ExperimentConfig;
 use smmf_repro::models::inventory_by_name;
 use smmf_repro::optim::OptKind;
+use smmf_repro::server::protocol::NO_CLIENT;
 use smmf_repro::server::{
-    reference_checkpoint, run_loadgen, Client, LoadgenOptions, Msg, ServeOptions, Server,
+    reference_checkpoint, reference_checkpoint_elastic, run_loadgen, Client, LoadgenOptions, Msg,
+    PushOutcome, ServeOptions, Server,
 };
 use smmf_repro::train::checkpoint;
 
@@ -37,6 +42,7 @@ fn serve_opts(shards: usize, clients: usize) -> ServeOptions {
         shards,
         clients,
         max_pending: 64,
+        ..ServeOptions::default()
     }
 }
 
@@ -57,8 +63,13 @@ fn sharded_concurrent_snapshot_is_bit_identical_to_reference() {
                 let server = Server::start(&cfg, &serve_opts(shards, clients)).unwrap();
                 let addr = server.addr.to_string();
                 let report =
-                    run_loadgen(&addr, &shapes, cfg.seed, &LoadgenOptions { clients, steps })
-                        .unwrap();
+                    run_loadgen(
+                        &addr,
+                        &shapes,
+                        cfg.seed,
+                        &LoadgenOptions { clients, steps, ..LoadgenOptions::default() },
+                    )
+                    .unwrap();
                 let mut ctl = Client::connect(&addr).unwrap();
                 let bytes = ctl.snapshot(snap.to_str().unwrap()).unwrap();
                 let stats = ctl.stats().unwrap();
@@ -109,7 +120,13 @@ fn shard_count_does_not_change_the_snapshot() {
         let snap = tmp(&format!("shardcmp_{shards}"));
         let server = Server::start(&cfg, &serve_opts(shards, 2)).unwrap();
         let addr = server.addr.to_string();
-        run_loadgen(&addr, &shapes, cfg.seed, &LoadgenOptions { clients: 2, steps }).unwrap();
+        run_loadgen(
+            &addr,
+            &shapes,
+            cfg.seed,
+            &LoadgenOptions { clients: 2, steps, ..LoadgenOptions::default() },
+        )
+        .unwrap();
         let mut ctl = Client::connect(&addr).unwrap();
         ctl.snapshot(snap.to_str().unwrap()).unwrap();
         ctl.shutdown().unwrap();
@@ -126,8 +143,13 @@ fn loadgen_reports_finite_latencies_and_throughput() {
     let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
     let server = Server::start(&cfg, &serve_opts(2, 3)).unwrap();
     let addr = server.addr.to_string();
-    let report =
-        run_loadgen(&addr, &shapes, cfg.seed, &LoadgenOptions { clients: 3, steps: 6 }).unwrap();
+    let report = run_loadgen(
+        &addr,
+        &shapes,
+        cfg.seed,
+        &LoadgenOptions { clients: 3, steps: 6, ..LoadgenOptions::default() },
+    )
+    .unwrap();
     Client::connect(&addr).unwrap().shutdown().unwrap();
     server.wait().unwrap();
     assert_eq!(report.clients, 3);
@@ -150,13 +172,14 @@ fn server_rejects_bad_requests_and_keeps_serving() {
     let mut c = Client::connect(&addr).unwrap();
 
     // unknown client id
-    let reply = c.call(Msg::PushGrad { client: 9, step: 1, grads: vec![] }).unwrap();
+    let reply = c.call(Msg::PushGrad { client: 9, epoch: 1, step: 1, grads: vec![] }).unwrap();
     assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
     // wrong step
-    let reply = c.call(Msg::PushGrad { client: 0, step: 5, grads: vec![] }).unwrap();
+    let reply = c.call(Msg::PushGrad { client: 0, epoch: 1, step: 5, grads: vec![] }).unwrap();
     assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
     // wrong tensor count (right client, right step)
-    let reply = c.call(Msg::PushGrad { client: 0, step: 1, grads: vec![vec![1.0]] }).unwrap();
+    let reply =
+        c.call(Msg::PushGrad { client: 0, epoch: 1, step: 1, grads: vec![vec![1.0]] }).unwrap();
     assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
     // a reply op sent as a request is rejected by the handler
     let reply = c.call(Msg::Ack { step: 1 }).unwrap();
@@ -168,8 +191,13 @@ fn server_rejects_bad_requests_and_keeps_serving() {
     // a loadgen whose client count disagrees with the server's barrier
     // width fails loudly up front instead of deadlocking the barrier
     let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
-    let e = run_loadgen(&addr, &shapes, cfg.seed, &LoadgenOptions { clients: 1, steps: 1 })
-        .unwrap_err();
+    let e = run_loadgen(
+        &addr,
+        &shapes,
+        cfg.seed,
+        &LoadgenOptions { clients: 1, steps: 1, ..LoadgenOptions::default() },
+    )
+    .unwrap_err();
     assert!(format!("{e:#}").contains("barrier"), "{e:#}");
 
     // …and the same connection still works
@@ -181,4 +209,226 @@ fn server_rejects_bad_requests_and_keeps_serving() {
     assert_eq!((stats.shards, stats.clients), (1, 2));
     c.shutdown().unwrap();
     server.wait().unwrap();
+}
+
+/// Epoch handling on the wire: a push tagged with a non-current
+/// membership epoch gets the typed `StaleEpoch` reply (carrying the
+/// current epoch) before any other validation, and the typed client
+/// surfaces it as `PushOutcome::Stale` instead of an error string.
+#[test]
+fn stale_epoch_pushes_get_a_typed_reply() {
+    let cfg = test_config(OptKind::Smmf);
+    let server = Server::start(&cfg, &serve_opts(1, 2)).unwrap();
+    let addr = server.addr.to_string();
+    let mut c = Client::connect(&addr).unwrap();
+
+    let view = c.epoch_info().unwrap();
+    assert_eq!((view.epoch, view.next_step, view.client), (1, 1, NO_CLIENT));
+    assert_eq!(view.members, vec![0, 1]);
+
+    let reply = c.call(Msg::PushGrad { client: 0, epoch: 7, step: 1, grads: vec![] }).unwrap();
+    assert_eq!(reply, Msg::StaleEpoch { epoch: 1 });
+    let out = c.push_grad(0, 99, 1, vec![]).unwrap();
+    assert_eq!(out, PushOutcome::Stale(1));
+
+    c.shutdown().unwrap();
+    server.wait().unwrap();
+}
+
+/// Polite membership: `Join` assigns a fresh id and widens the barrier,
+/// `Leave` narrows it, each bumping the epoch — and a run after the
+/// churn is bit-identical to one on a server that never saw it (the
+/// epoch counter moved, the optimizer state did not).
+#[test]
+fn join_and_leave_bump_the_epoch_and_renegotiate_the_barrier() {
+    let steps = 3u64;
+    let cfg = test_config(OptKind::Smmf);
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    let snap = tmp("member");
+    let refp = tmp("member_ref");
+    let server = Server::start(&cfg, &serve_opts(1, 1)).unwrap();
+    let addr = server.addr.to_string();
+    let mut c = Client::connect(&addr).unwrap();
+
+    let joined = c.join().unwrap();
+    assert_eq!((joined.epoch, joined.client), (2, 1));
+    assert_eq!(joined.members, vec![0, 1]);
+    assert_eq!(c.stats().unwrap().clients, 2, "barrier width follows the membership");
+
+    // leaving as a non-member is a clean rejection, not a state change
+    assert!(c.leave(17).is_err());
+
+    let left = c.leave(1).unwrap();
+    assert_eq!(left.epoch, 3);
+    assert_eq!(left.members, vec![0]);
+    assert_eq!(c.stats().unwrap().clients, 1);
+
+    let report = run_loadgen(
+        &addr,
+        &shapes,
+        cfg.seed,
+        &LoadgenOptions { clients: 1, steps, ..LoadgenOptions::default() },
+    )
+    .unwrap();
+    let mut ctl = Client::connect(&addr).unwrap();
+    ctl.snapshot(snap.to_str().unwrap()).unwrap();
+    ctl.shutdown().unwrap();
+    server.wait().unwrap();
+
+    let ref_loss = reference_checkpoint(&cfg, "synthetic:tiny_lm", 1, steps, &refp).unwrap();
+    assert_eq!(report.final_loss.to_bits(), ref_loss.to_bits());
+    let got = std::fs::read(&snap).unwrap();
+    let want = std::fs::read(&refp).unwrap();
+    assert!(got == want, "post-churn snapshot differs from the fixed-membership reference");
+    std::fs::remove_file(&snap).ok();
+    std::fs::remove_file(&refp).ok();
+}
+
+/// The chaos contract (the acceptance test): one client crashes mid-run
+/// (silent stop, evicted at the next step boundary) and one shard
+/// worker is killed mid-run (respawned from the recovery image, the
+/// interrupted step replayed) — and the final snapshot is still
+/// bit-identical to the elastic reference trainer run over the
+/// surviving epoch schedule.
+#[test]
+fn chaos_kill_shard_and_drop_client_stay_bit_identical() {
+    let steps = 10u64;
+    let drop_at = 4u64;
+    let cfg = test_config(OptKind::Smmf);
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    let snap = tmp("chaos");
+    let refp = tmp("chaos_ref");
+
+    // Generous deadline: the survivors push within microseconds of each
+    // other, but a descheduled test thread must never look like a crash.
+    let opts = ServeOptions { client_timeout_ms: 400, resilient: true, ..serve_opts(2, 3) };
+    let server = Server::start(&cfg, &opts).unwrap();
+    let addr = server.addr.to_string();
+
+    let done = AtomicBool::new(false);
+    let report = std::thread::scope(|s| {
+        // Kill shard 0 once the run reaches the drop step: the barrier
+        // then stalls for client_timeout_ms waiting to evict the dropped
+        // client, so the kill deterministically lands mid-run, before
+        // the first survivors-only step is applied.
+        s.spawn(|| {
+            let mut probe = Client::connect(&addr).unwrap();
+            while !done.load(Ordering::SeqCst) {
+                if probe.stats().unwrap().step >= drop_at {
+                    server.kill_shard(0);
+                    return;
+                }
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+        });
+        let report = run_loadgen(
+            &addr,
+            &shapes,
+            cfg.seed,
+            &LoadgenOptions {
+                clients: 3,
+                steps,
+                drop_client_at: drop_at,
+                ..LoadgenOptions::default()
+            },
+        )
+        .unwrap();
+        done.store(true, Ordering::SeqCst);
+        report
+    });
+
+    let mut ctl = Client::connect(&addr).unwrap();
+    let bytes = ctl.snapshot(snap.to_str().unwrap()).unwrap();
+    let stats = ctl.stats().unwrap();
+    ctl.shutdown().unwrap();
+    server.wait().unwrap();
+
+    assert_eq!(stats.step, steps, "{stats:?}");
+    assert_eq!(stats.evictions, 1, "{stats:?}");
+    assert!(stats.respawns >= 1, "{stats:?}");
+    assert_eq!(stats.epoch, 2, "{stats:?}");
+    // The crash is silent — the dropped client never *observes* its
+    // eviction, so the server-side counter above is the witness.
+    assert_eq!(report.evicted, 0, "{report:?}");
+    // 3 members for steps 1..=drop, the 2 survivors for the rest.
+    assert_eq!(report.pushes, 3 * drop_at + 2 * (steps - drop_at), "{report:?}");
+
+    let ref_loss = reference_checkpoint_elastic(
+        &cfg,
+        "synthetic:tiny_lm",
+        &[(1, vec![0, 1, 2]), (drop_at + 1, vec![0, 1])],
+        steps,
+        &refp,
+    )
+    .unwrap();
+    let got = std::fs::read(&snap).unwrap();
+    let want = std::fs::read(&refp).unwrap();
+    assert_eq!(got.len() as u64, bytes, "SnapshotDone size");
+    assert!(got == want, "chaos snapshot differs from the elastic reference");
+    assert_eq!(report.final_loss.to_bits(), ref_loss.to_bits());
+
+    std::fs::remove_file(&snap).ok();
+    std::fs::remove_file(&refp).ok();
+}
+
+/// `--resume`: a snapshot taken mid-run restarts a server — on a
+/// *different* shard count — and the continuation is bit-identical to
+/// the uninterrupted run. State migrates over the checkpoint path and
+/// the FLOP-balancing planner re-partitions onto the new K.
+#[test]
+fn resume_on_a_different_shard_count_continues_bit_identically() {
+    let (first, rest) = (5u64, 5u64);
+    let cfg = test_config(OptKind::Smmf);
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    let mid = tmp("resume_mid");
+    let fin = tmp("resume_fin");
+    let refp = tmp("resume_ref");
+
+    // Phase A: 1 shard, stop after `first` steps, snapshot, shut down.
+    let server = Server::start(&cfg, &serve_opts(1, 2)).unwrap();
+    let addr = server.addr.to_string();
+    run_loadgen(
+        &addr,
+        &shapes,
+        cfg.seed,
+        &LoadgenOptions { clients: 2, steps: first, ..LoadgenOptions::default() },
+    )
+    .unwrap();
+    let mut ctl = Client::connect(&addr).unwrap();
+    ctl.snapshot(mid.to_str().unwrap()).unwrap();
+    ctl.shutdown().unwrap();
+    server.wait().unwrap();
+
+    // Phase B: resume the snapshot onto 2 shards, drive the rest.
+    let opts =
+        ServeOptions { resume: Some(mid.to_str().unwrap().into()), ..serve_opts(2, 2) };
+    let server = Server::start(&cfg, &opts).unwrap();
+    let addr = server.addr.to_string();
+    let mut ctl = Client::connect(&addr).unwrap();
+    assert_eq!(ctl.stats().unwrap().step, first, "resume restores the step counter");
+    let report = run_loadgen(
+        &addr,
+        &shapes,
+        cfg.seed,
+        &LoadgenOptions {
+            clients: 2,
+            steps: rest,
+            start_step: first + 1,
+            ..LoadgenOptions::default()
+        },
+    )
+    .unwrap();
+    ctl.snapshot(fin.to_str().unwrap()).unwrap();
+    ctl.shutdown().unwrap();
+    server.wait().unwrap();
+
+    let ref_loss =
+        reference_checkpoint(&cfg, "synthetic:tiny_lm", 2, first + rest, &refp).unwrap();
+    assert_eq!(report.final_loss.to_bits(), ref_loss.to_bits());
+    let got = std::fs::read(&fin).unwrap();
+    let want = std::fs::read(&refp).unwrap();
+    assert!(got == want, "resumed continuation differs from the uninterrupted reference");
+    for p in [&mid, &fin, &refp] {
+        std::fs::remove_file(p).ok();
+    }
 }

@@ -6,8 +6,8 @@
 //! bytes produce context-rich errors — never a panic or an OOM.
 
 use smmf_repro::server::protocol::{
-    self, decode, encode, read_frame, write_frame, Frame, Msg, ServerStats, HEADER_LEN,
-    MAX_PAYLOAD, OP_PUSH_GRAD,
+    self, decode, encode, read_frame, write_frame, EpochView, Frame, Msg, ServerStats,
+    HEADER_LEN, MAX_PAYLOAD, OP_PUSH_GRAD,
 };
 use smmf_repro::util::prop;
 
@@ -15,6 +15,7 @@ fn all_ops() -> Vec<Msg> {
     vec![
         Msg::PushGrad {
             client: 3,
+            epoch: 2,
             step: 41,
             grads: vec![vec![1.0, -2.5, 0.0], vec![], vec![f32::MIN, f32::MAX]],
         },
@@ -22,6 +23,9 @@ fn all_ops() -> Vec<Msg> {
         Msg::Snapshot { path: "runs/server/snapshot.bin".into() },
         Msg::Stats,
         Msg::Shutdown,
+        Msg::Join,
+        Msg::Leave { client: 5 },
+        Msg::EpochInfo,
         Msg::Ack { step: 7 },
         Msg::Params { step: 6, tensors: vec![vec![0.25; 17], vec![-1.0]] },
         Msg::SnapshotDone { bytes: 123_456_789 },
@@ -32,7 +36,19 @@ fn all_ops() -> Vec<Msg> {
             pushes: 36,
             busy: 1,
             snapshots: 2,
+            epoch: 3,
+            evictions: 1,
+            respawns: 2,
+            recovery_ms: 48,
         }),
+        Msg::EpochReply(EpochView {
+            epoch: 4,
+            next_step: 10,
+            client: protocol::NO_CLIENT,
+            members: vec![0, 2, 3, 7],
+        }),
+        Msg::EpochReply(EpochView { epoch: 1, next_step: 1, client: 0, members: vec![0] }),
+        Msg::StaleEpoch { epoch: 6 },
         Msg::Busy,
         Msg::Bye,
         Msg::Err { msg: "client 9 already pushed for step 3".into() },
@@ -135,6 +151,7 @@ fn fabricated_tensor_count_is_caught_by_the_remaining_bytes_check() {
     use smmf_repro::optim::blob::BlobWriter;
     let mut p = BlobWriter::new();
     p.u32(0); // client
+    p.u64(1); // epoch
     p.u64(1); // step
     p.u32(1); // one tensor…
     p.u64(1 << 40); // …claiming 2^40 elements
@@ -153,6 +170,7 @@ fn fabricated_tensor_count_is_caught_by_the_remaining_bytes_check() {
     // absurd tensor *count* is capped too
     let mut p = BlobWriter::new();
     p.u32(0);
+    p.u64(1);
     p.u64(1);
     p.u32(u32::MAX);
     let payload = p.finish();
@@ -224,9 +242,39 @@ fn grads_payload_bytes_matches_the_encoder() {
     let shapes = vec![vec![3, 2], vec![7], vec![1]];
     let grads: Vec<Vec<f32>> =
         shapes.iter().map(|s| vec![0.5; s.iter().product()]).collect();
-    let frame = Frame { request_id: 1, msg: Msg::PushGrad { client: 0, step: 1, grads } };
+    let frame =
+        Frame { request_id: 1, msg: Msg::PushGrad { client: 0, epoch: 1, step: 1, grads } };
     let expect = protocol::grads_payload_bytes(&shapes);
     assert_eq!(encode(&frame).len() as u64, HEADER_LEN as u64 + expect);
+}
+
+/// Hand-build an EpochReply whose member list claims more entries than
+/// [`protocol::MAX_MEMBERS`] (cap check) or than the payload holds
+/// (remaining-bytes check): both must fire before the member buffer is
+/// allocated.
+#[test]
+fn fabricated_member_count_is_caught_before_allocation() {
+    use smmf_repro::optim::blob::BlobWriter;
+    let build = |n_members: u32| {
+        let mut p = BlobWriter::new();
+        p.u64(2); // epoch
+        p.u64(5); // next_step
+        p.u32(protocol::NO_CLIENT);
+        p.u32(n_members); // …but no member bytes follow
+        let payload = p.finish();
+        let mut w = BlobWriter::new();
+        w.bytes(protocol::MAGIC);
+        w.u32(protocol::VERSION);
+        w.u64(9);
+        w.u8(protocol::OP_EPOCH_REPLY);
+        w.u64(payload.len() as u64);
+        w.bytes(&payload);
+        w.finish()
+    };
+    let e = decode(&build(protocol::MAX_MEMBERS as u32 + 1)).unwrap_err();
+    assert!(format!("{e:#}").contains("cap"), "{e:#}");
+    let e = decode(&build(16)).unwrap_err();
+    assert!(format!("{e:#}").contains("remain"), "{e:#}");
 }
 
 #[test]

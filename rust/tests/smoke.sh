@@ -62,6 +62,27 @@ cargo run --release -- loadgen --model synthetic:tiny_lm \
   --snapshot target/serve-smoke/snapshot.bin --check \
   --bench-json "${SMMF_SERVER_BENCH_JSON:-../BENCH_server.json}"
 
+# Chaos smoke: the fault-tolerance contract from the CLI. First drop
+# one client mid-run *and* kill one shard worker mid-run — --check pins
+# the final snapshot against the elastic reference trainer for the
+# surviving epoch schedule (eviction lands deterministically at
+# drop + 1; the killed shard respawns from the recovery image). Then a
+# slow (but live) client under an armed eviction deadline: the run must
+# finish, not evict, and record degraded-vs-healthy throughput — this
+# is the run that leaves the final BENCH_server.json refresh.
+echo "== chaos smoke (drop-client + kill-shard, --check vs elastic reference) =="
+cargo run --release -- loadgen --model synthetic:tiny_lm \
+  --clients 3 --shards 2 --steps 20 \
+  --drop-client 8 --kill-shard 5 --client-timeout-ms 400 \
+  --snapshot target/chaos-smoke/snapshot.bin --check \
+  --bench-json target/chaos-smoke/BENCH_chaos.json
+
+echo "== chaos smoke (slow client under an armed eviction deadline) =="
+cargo run --release -- loadgen --model synthetic:tiny_lm \
+  --clients 3 --shards 2 --steps 12 \
+  --slow-client 40 --client-timeout-ms 2000 \
+  --bench-json "${SMMF_SERVER_BENCH_JSON:-../BENCH_server.json}"
+
 # Grouped end-to-end: train -> save -> resume with a bias/norm-exempt
 # group config through the real CLI. Needs AOT artifacts (make
 # artifacts); self-skips when they are absent, matching the other
