@@ -17,6 +17,10 @@
 #                    the elastic reference trainer), then a slow client
 #                    under an armed eviction deadline; refreshes
 #                    BENCH_server.json with degraded-vs-healthy numbers
+#   make async-smoke bounded-staleness smoke: async ingestion (window 4)
+#                    with a straggler client, commit log recorded, then
+#                    `repro replay` re-executes the log and the replayed
+#                    snapshot is byte-compared against the server's
 #   make docs-check  regenerate docs/RESULTS.md from the checked-in
 #                    fixture summaries, fail on diff, and verify every
 #                    docs link / file:line anchor
@@ -24,7 +28,7 @@
 #   make docs        rustdoc for the crate, warnings-clean (--no-deps)
 #   make artifacts   AOT-lower the JAX/Pallas graphs (needs python + jax)
 
-.PHONY: build test smoke suite-smoke serve-smoke chaos-smoke docs-check bench docs artifacts
+.PHONY: build test smoke suite-smoke serve-smoke chaos-smoke async-smoke docs-check bench docs artifacts
 
 build:
 	cd rust && cargo build --release
@@ -64,6 +68,18 @@ chaos-smoke:
 	  --slow-client 40 --client-timeout-ms 2000 \
 	  --bench-json ../BENCH_server.json
 	@echo "chaos-smoke OK: survived a client drop + shard kill bit-identically, and a slow client under an armed deadline"
+
+async-smoke:
+	cd rust && cargo run --release -- loadgen --model synthetic:tiny_lm \
+	  --clients 4 --shards 2 --steps 30 \
+	  --staleness 4 --slow-client 20 \
+	  --commit-log target/async-smoke/commits.bin \
+	  --snapshot target/async-smoke/snapshot.bin \
+	  --bench-json target/async-smoke/BENCH_async.json
+	cd rust && cargo run --release -- replay target/async-smoke/commits.bin \
+	  --shards 2 --snapshot target/async-smoke/replay.bin
+	cmp rust/target/async-smoke/snapshot.bin rust/target/async-smoke/replay.bin
+	@echo "async-smoke OK: commit-log replay byte-identical to the async server's snapshot"
 
 docs-check:
 	cd rust && cargo run --release -- report tests/fixtures/suite_report/smoke \

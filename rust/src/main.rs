@@ -17,6 +17,7 @@
 //! repro ablate                   # SMMF design ablations
 //! repro serve --shards 2 --clients 4     # optimizer-state server
 //! repro loadgen --clients 4 --steps 50   # drive it + bench it
+//! repro replay commits.bin --shards 2    # re-apply an async commit log
 //! ```
 
 use anyhow::{anyhow, bail, Result};
@@ -78,6 +79,7 @@ fn run(args: &Args) -> Result<()> {
         "ablate" => cmd_ablate(args),
         "serve" => cmd_serve(args),
         "loadgen" => cmd_loadgen(args),
+        "replay" => cmd_replay(args),
         other => bail!("unknown command {other} (try `repro help`)"),
     }
 }
@@ -118,6 +120,12 @@ commands:
                     shard workers from a per-step recovery image],
                     --resume SNAPSHOT.bin [restore params + optimizer
                     state, re-sharding if --shards differs],
+                    --staleness S [bounded-staleness async ingestion:
+                    whatever is pending commits as one partial batch,
+                    pushes more than S steps stale bounce as TooStale;
+                    0 = synchronous step barrier],
+                    --commit-log PATH [async only: append every applied
+                    commit for `repro replay`],
                     [server] TOML; stops on a client Shutdown op; see
                     docs/SERVER_PROTOCOL.md)
   loadgen           drive a state server with N concurrent gradient
@@ -135,7 +143,17 @@ commands:
                     --kill-shard STEP [kill a shard worker once the
                     server passes STEP; implies --resilient]; any
                     fault also runs a healthy baseline first and
-                    reports degraded vs healthy steps/s)
+                    reports degraded vs healthy steps/s; with
+                    --staleness S the drivers run the async pull/push
+                    loop, a synchronous baseline runs first for the
+                    sync-vs-async steps/s comparison, and --check /
+                    --drop-client are refused [replay pins async runs])
+  replay LOG.bin    re-apply a --commit-log file through the synchronous
+                    sharded machinery to a bit-identical snapshot — the
+                    determinism oracle for async runs (--shards K
+                    [default 1, free to differ from the recording run],
+                    --snapshot OUT.bin [default LOG.bin.replay.bin];
+                    config/seed/optimizer must match the recording run)
 common flags: --artifacts DIR (default ./artifacts), --seed N,
               --threads N (parallel optimizer step engine; 1 = serial),
               --save-every N / --resume PATH (SMMFCKPT v2 checkpoints;
@@ -485,14 +503,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = base_config(args)?;
     let opts = ServeOptions::load(args)?;
     let server = Server::start(&cfg, &opts)?;
+    let mode = if opts.staleness == 0 {
+        format!("step barrier over {} client(s)", opts.clients)
+    } else {
+        format!(
+            "async ingestion over {} member(s), staleness window {}",
+            opts.clients, opts.staleness
+        )
+    };
     println!(
-        "[serve] {} on {} — {} shard(s), step barrier over {} client(s), optimizer {}",
+        "[serve] {} on {} — {} shard(s), {}, optimizer {}",
         opts.model,
         server.addr,
         opts.shards,
-        opts.clients,
+        mode,
         cfg.optimizer.name()
     );
+    if let Some(log) = &opts.commit_log {
+        println!("[serve] commit log -> {log} (replay with `repro replay {log}`)");
+    }
     if opts.client_timeout_ms > 0 || opts.resilient || opts.resume.is_some() {
         println!(
             "[serve] fault tolerance: client_timeout_ms={} resilient={}{}",
@@ -586,6 +615,22 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
              schedule for the reference trainer to replay"
         );
     }
+    if opts.staleness > 0 {
+        if check {
+            bail!(
+                "--check is the synchronous-mode oracle (the reference trainer replays a \
+                 fixed barrier schedule); async runs are pinned by `repro replay` over a \
+                 --commit-log instead"
+            );
+        }
+        if drop_client_at > 0 {
+            bail!(
+                "--drop-client drives the synchronous eviction path; async mode has no \
+                 barrier to evict from — a straggler only ever delays itself \
+                 (use --slow-client to exercise that)"
+            );
+        }
+    }
     let snapshot_was_temp = check && args.opt("snapshot").is_none();
     let snapshot: Option<String> = args.opt("snapshot").map(String::from).or_else(|| {
         check.then(|| {
@@ -615,9 +660,11 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
 
     // With a fault injected, first measure the same run healthy on its
     // own throwaway server — the degraded-vs-healthy throughput ratio
-    // is the recovery-cost headline of BENCH_server.json.
+    // is the recovery-cost headline of BENCH_server.json. Sync mode
+    // only: the async comparison below is sync-vs-async instead (and a
+    // cloned async server would contend for the same --commit-log).
     let faults = slow_client_ms > 0.0 || drop_client_at > 0 || kill_shard_at > 0;
-    let healthy_steps_per_s = if faults && external.is_none() {
+    let healthy_steps_per_s = if faults && external.is_none() && opts.staleness == 0 {
         let mut hopts = opts.clone();
         hopts.addr = "127.0.0.1:0".into();
         let hsrv = srv::Server::start(&cfg, &hopts)?;
@@ -643,6 +690,36 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         None
     };
 
+    // Async mode: measure the identical workload (same clients, same
+    // straggler fault) against a synchronous-barrier server first —
+    // the sync-vs-async steps/s ratio is what bounded staleness buys.
+    let sync_steps_per_s = if opts.staleness > 0 && external.is_none() {
+        let mut sopts = opts.clone();
+        sopts.addr = "127.0.0.1:0".into();
+        sopts.staleness = 0;
+        sopts.commit_log = None;
+        let ssrv = srv::Server::start(&cfg, &sopts)?;
+        let saddr = ssrv.addr.to_string();
+        let rep = srv::run_loadgen(
+            &saddr,
+            &shapes,
+            cfg.seed,
+            &srv::LoadgenOptions {
+                clients: opts.clients,
+                steps,
+                start_step: 1,
+                slow_client_ms,
+                drop_client_at: 0,
+            },
+        )?;
+        srv::Client::connect(&saddr)?.shutdown()?;
+        ssrv.wait()?;
+        println!("[loadgen] synchronous baseline: {:.1} steps/s", rep.steps_per_s);
+        Some(rep.steps_per_s)
+    } else {
+        None
+    };
+
     println!(
         "[loadgen] {} client(s) × {} steps on {} against {} ({} shard(s), optimizer {})",
         opts.clients,
@@ -652,6 +729,16 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         opts.shards,
         cfg.optimizer.name()
     );
+    if opts.staleness > 0 {
+        println!(
+            "[loadgen] async mode: staleness window {} step(s){}",
+            opts.staleness,
+            opts.commit_log
+                .as_deref()
+                .map(|p| format!(", commit log -> {p}"))
+                .unwrap_or_default()
+        );
+    }
     // A resumed server sits past step 0 — start where it left off (the
     // gradient-noise streams fast-forward to match).
     let start_step = srv::Client::connect(&addr)?.stats()?.step + 1;
@@ -744,6 +831,14 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             100.0 * report.steps_per_s / h.max(1e-12)
         );
     }
+    if let Some(sy) = sync_steps_per_s {
+        println!(
+            "[loadgen] async {:.1} steps/s vs synchronous {:.1} steps/s ({:.2}x)",
+            report.steps_per_s,
+            sy,
+            report.steps_per_s / sy.max(1e-12)
+        );
+    }
     if kill_shard_at > 0 && stats.respawns == 0 {
         bail!(
             "--kill-shard {kill_shard_at} was requested but the server reports no \
@@ -783,9 +878,13 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         .num("epoch", stats.epoch as f64)
         .num("evictions", stats.evictions as f64)
         .num("respawns", stats.respawns as f64)
-        .num("recovery_ms", stats.recovery_ms as f64);
+        .num("recovery_ms", stats.recovery_ms as f64)
+        .num("staleness", opts.staleness as f64);
     if let Some(h) = healthy_steps_per_s {
         record = record.num("healthy_steps_per_s", h);
+    }
+    if let Some(sy) = sync_steps_per_s {
+        record = record.num("sync_steps_per_s", sy);
     }
     sink.push(record.build());
     sink.write()?;
@@ -836,6 +935,33 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             opts.shards, opts.clients
         );
     }
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    use smmf_repro::server as srv;
+    let log = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .or_else(|| args.opt("log"))
+        .ok_or_else(|| {
+            anyhow!("usage: repro replay <commits.bin> [--shards K] [--snapshot OUT.bin]")
+        })?;
+    let cfg = base_config(args)?;
+    let shards = args.count_or("shards", 1).map_err(|e| anyhow!(e))?;
+    let out = args.str_or("snapshot", &format!("{log}.replay.bin"));
+    let rep = srv::replay_commit_log(&cfg, Path::new(log), shards, Path::new(&out))?;
+    println!(
+        "[replay] {} commit(s) from {log} re-applied on {} shard(s) ({}, optimizer {}) — \
+         final step {}",
+        rep.commits,
+        shards,
+        rep.model,
+        cfg.optimizer.name(),
+        rep.final_step
+    );
+    println!("[replay] snapshot -> {out} ({} bytes, SMMFCKPT v2)", rep.snapshot_bytes);
     Ok(())
 }
 

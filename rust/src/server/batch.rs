@@ -22,8 +22,44 @@
 //! itself lives in the coordinator (`service.rs`); the batcher is pure
 //! bookkeeping (no threads, no IO), so the barrier logic is
 //! unit-testable in isolation.
+//!
+//! The [`AsyncAccumulator`] is the bounded-staleness alternative to the
+//! barrier (`[server] staleness = S`, S >= 1): it accepts a gradient
+//! whenever its `base_step` — the applied step the client computed it
+//! against — is at most S steps behind the current applied step, and
+//! commits *whatever is pending* as one partial batch per
+//! [`AsyncAccumulator::take_commit`] call. Within a commit the
+//! contributions are still coalesced in ascending member-id order, so
+//! the committed bits depend only on *which* members contributed —
+//! never on arrival order — which is what lets the ordered commit log
+//! (`server::commitlog`) replay an async run bit-identically.
 
 use crate::tensor::Tensor;
+
+/// Validate a flat pushed gradient set against the inventory shapes and
+/// build the tensors — shared by the barrier and the async accumulator
+/// so both ingestion modes reject malformed pushes identically.
+fn validate_grads(shapes: &[Vec<usize>], grads: Vec<Vec<f32>>) -> Result<Vec<Tensor>, String> {
+    if grads.len() != shapes.len() {
+        return Err(format!(
+            "push holds {} tensors, inventory has {}",
+            grads.len(),
+            shapes.len()
+        ));
+    }
+    let mut tensors = Vec::with_capacity(grads.len());
+    for (i, (data, shape)) in grads.into_iter().zip(shapes).enumerate() {
+        let numel: usize = shape.iter().product();
+        if data.len() != numel {
+            return Err(format!(
+                "tensor {i}: push holds {} elements, shape {shape:?} needs {numel}",
+                data.len()
+            ));
+        }
+        tensors.push(Tensor::from_vec(shape, data));
+    }
+    Ok(tensors)
+}
 
 /// Outcome of offering one client push to the current step's barrier.
 #[derive(Debug, PartialEq)]
@@ -128,24 +164,10 @@ impl StepBatcher {
         if self.pending[slot].is_some() {
             return Offer::Rejected(format!("client {client} already pushed for step {step}"));
         }
-        if grads.len() != self.shapes.len() {
-            return Offer::Rejected(format!(
-                "push holds {} tensors, inventory has {}",
-                grads.len(),
-                self.shapes.len()
-            ));
-        }
-        let mut tensors = Vec::with_capacity(grads.len());
-        for (i, (data, shape)) in grads.into_iter().zip(&self.shapes).enumerate() {
-            let numel: usize = shape.iter().product();
-            if data.len() != numel {
-                return Offer::Rejected(format!(
-                    "tensor {i}: push holds {} elements, shape {shape:?} needs {numel}",
-                    data.len()
-                ));
-            }
-            tensors.push(Tensor::from_vec(shape, data));
-        }
+        let tensors = match validate_grads(&self.shapes, grads) {
+            Ok(t) => t,
+            Err(msg) => return Offer::Rejected(msg),
+        };
         self.pending[slot] = Some(tensors);
         self.received += 1;
         if self.received == self.members.len() {
@@ -231,6 +253,163 @@ impl StepBatcher {
         self.received = 0;
         self.step += 1;
         out
+    }
+}
+
+/// Outcome of offering one client push to the async accumulator.
+#[derive(Debug, PartialEq)]
+pub enum AsyncOffer {
+    /// Stored; the contribution will ride the next commit.
+    Accepted,
+    /// The gradient's `base_step` is more than `staleness` steps behind
+    /// the `applied` step — the client must re-pull (any step >=
+    /// `required`) and recompute.
+    TooStale { applied: u64, required: u64 },
+    /// Rejected (non-member, duplicate pending, bad shapes, or a
+    /// `base_step` the server has not reached); state unchanged.
+    Rejected(String),
+}
+
+/// Bounded-staleness gradient accumulator: the async alternative to the
+/// [`StepBatcher`] barrier.
+///
+/// Contributions pile up in `pending` as they arrive;
+/// [`AsyncAccumulator::take_commit`] drains them all as one partial
+/// batch (sorted by ascending member id) and advances the step. The
+/// staleness check happens at offer time against the *applied* step, so
+/// the lag recorded in the commit log obeys
+/// `commit.step - 1 - base_step <= staleness` for every contributor —
+/// the invariant `commitlog::CommitLog::max_lag` exposes.
+pub struct AsyncAccumulator {
+    /// Members, ascending client id (commit reduction order).
+    members: Vec<u32>,
+    shapes: Vec<Vec<usize>>,
+    /// The step the next commit will apply (first step is 1).
+    step: u64,
+    staleness: u64,
+    /// Contributions awaiting the next commit, arrival order:
+    /// `(client, base_step, grads)`.
+    pending: Vec<(u32, u64, Vec<Tensor>)>,
+}
+
+impl AsyncAccumulator {
+    /// An accumulator over an explicit member set with window
+    /// `staleness >= 1`, committing `first_step` next (a resumed server
+    /// starts past 1).
+    pub fn with_members(
+        mut members: Vec<u32>,
+        shapes: Vec<Vec<usize>>,
+        staleness: u64,
+        first_step: u64,
+    ) -> AsyncAccumulator {
+        assert!(staleness >= 1, "staleness 0 is the synchronous barrier (StepBatcher)");
+        assert!(!members.is_empty(), "async ingestion needs at least one member");
+        assert!(first_step >= 1, "steps are 1-based");
+        members.sort_unstable();
+        assert!(members.windows(2).all(|w| w[0] < w[1]), "duplicate member ids");
+        AsyncAccumulator { members, shapes, step: first_step, staleness, pending: Vec::new() }
+    }
+
+    /// Current members, ascending client id.
+    pub fn members(&self) -> &[u32] {
+        &self.members
+    }
+
+    /// Member count.
+    pub fn width(&self) -> usize {
+        self.members.len()
+    }
+
+    /// Contributions awaiting the next commit.
+    pub fn pending(&self) -> usize {
+        self.pending.len()
+    }
+
+    /// The step the next commit will apply.
+    pub fn pending_step(&self) -> u64 {
+        self.step
+    }
+
+    /// Steps fully applied so far.
+    pub fn applied_step(&self) -> u64 {
+        self.step - 1
+    }
+
+    /// Offer member `client`'s gradient set computed against applied
+    /// step `base_step`. Checks run cheapest-first — membership,
+    /// duplicate pending, future base, staleness window — so a
+    /// [`AsyncOffer::TooStale`] reply is issued *before* the tensor
+    /// payload is validated or copied.
+    pub fn offer(&mut self, client: u32, base_step: u64, grads: Vec<Vec<f32>>) -> AsyncOffer {
+        if self.members.binary_search(&client).is_err() {
+            return AsyncOffer::Rejected(format!(
+                "client {client} is not a member of the server ({} member(s))",
+                self.members.len()
+            ));
+        }
+        if self.pending.iter().any(|(c, ..)| *c == client) {
+            return AsyncOffer::Rejected(format!(
+                "client {client} already has a contribution pending for the next commit"
+            ));
+        }
+        let applied = self.applied_step();
+        if base_step > applied {
+            return AsyncOffer::Rejected(format!(
+                "gradient claims base step {base_step}, server has applied only {applied}"
+            ));
+        }
+        if applied - base_step > self.staleness {
+            return AsyncOffer::TooStale { applied, required: applied - self.staleness };
+        }
+        match validate_grads(&self.shapes, grads) {
+            Ok(tensors) => {
+                self.pending.push((client, base_step, tensors));
+                AsyncOffer::Accepted
+            }
+            Err(msg) => AsyncOffer::Rejected(msg),
+        }
+    }
+
+    /// Add a member. Errs on a duplicate id.
+    pub fn join(&mut self, client: u32) -> Result<(), String> {
+        match self.members.binary_search(&client) {
+            Ok(_) => Err(format!("client {client} is already a member")),
+            Err(slot) => {
+                self.members.insert(slot, client);
+                Ok(())
+            }
+        }
+    }
+
+    /// Remove a member, discarding any pending contribution it had;
+    /// returns whether one was discarded (its deferred reply must be
+    /// failed by the caller). Errs on a non-member or the last member.
+    pub fn leave(&mut self, client: u32) -> Result<bool, String> {
+        let slot = self
+            .members
+            .binary_search(&client)
+            .map_err(|_| format!("client {client} is not a member"))?;
+        if self.members.len() == 1 {
+            return Err(format!("client {client} is the last member — the server cannot empty"));
+        }
+        self.members.remove(slot);
+        let before = self.pending.len();
+        self.pending.retain(|(c, ..)| *c != client);
+        Ok(self.pending.len() != before)
+    }
+
+    /// Drain every pending contribution as the next commit — sorted by
+    /// ascending member id, the order `shard::coalesce_commit` reduces
+    /// in — and advance the step. `None` when nothing is pending (no
+    /// empty commits: the step only advances when gradients applied).
+    pub fn take_commit(&mut self) -> Option<Vec<(u32, u64, Vec<Tensor>)>> {
+        if self.pending.is_empty() {
+            return None;
+        }
+        let mut commit = std::mem::take(&mut self.pending);
+        commit.sort_by_key(|(c, ..)| *c);
+        self.step += 1;
+        Some(commit)
     }
 }
 
@@ -390,5 +569,60 @@ mod tests {
         assert_eq!(b.applied_step(), 6);
         assert!(matches!(b.offer(0, 1, grads_for(0)), Offer::Rejected(_)));
         assert_eq!(b.offer(0, 7, grads_for(0)), Offer::Completed);
+    }
+
+    #[test]
+    fn async_commit_sorts_contributors_and_advances_one_step() {
+        let mut a = AsyncAccumulator::with_members(vec![0, 1, 2], shapes(), 2, 1);
+        assert_eq!(a.applied_step(), 0);
+        assert_eq!(a.take_commit(), None, "no empty commits");
+        // arrival order 2, 0 — the commit must come out sorted
+        assert_eq!(a.offer(2, 0, grads_for(2)), AsyncOffer::Accepted);
+        assert_eq!(a.offer(0, 0, grads_for(0)), AsyncOffer::Accepted);
+        let commit = a.take_commit().unwrap();
+        let ids: Vec<u32> = commit.iter().map(|(c, ..)| *c).collect();
+        assert_eq!(ids, vec![0, 2]);
+        assert_eq!(a.applied_step(), 1);
+        assert_eq!(a.pending(), 0);
+    }
+
+    #[test]
+    fn async_staleness_window_bounds_accepted_base_steps() {
+        let mut a = AsyncAccumulator::with_members(vec![0, 1], shapes(), 2, 1);
+        // advance to applied step 3 via three single-contributor commits
+        for base in 0..3 {
+            assert_eq!(a.offer(0, base, grads_for(0)), AsyncOffer::Accepted);
+            a.take_commit().unwrap();
+        }
+        assert_eq!(a.applied_step(), 3);
+        // lag 3 > staleness 2: typed TooStale, issued before the (empty,
+        // invalid) payload is even looked at
+        assert_eq!(a.offer(1, 0, vec![]), AsyncOffer::TooStale { applied: 3, required: 1 });
+        // lag exactly at the window is accepted
+        assert_eq!(a.offer(1, 1, grads_for(1)), AsyncOffer::Accepted);
+        // a base step the server has not reached is rejected outright
+        assert!(matches!(a.offer(0, 4, grads_for(0)), AsyncOffer::Rejected(_)));
+        // duplicate pending contribution is rejected
+        assert!(matches!(a.offer(1, 3, grads_for(1)), AsyncOffer::Rejected(_)));
+        // non-member
+        assert!(matches!(a.offer(9, 3, grads_for(9)), AsyncOffer::Rejected(_)));
+        // bad shapes
+        assert!(matches!(a.offer(0, 3, vec![vec![1.0]]), AsyncOffer::Rejected(_)));
+    }
+
+    #[test]
+    fn async_leave_discards_pending_and_join_widens() {
+        let mut a = AsyncAccumulator::with_members(vec![0, 1], shapes(), 1, 1);
+        assert_eq!(a.offer(1, 0, grads_for(1)), AsyncOffer::Accepted);
+        assert!(a.leave(1).unwrap(), "pending contribution was discarded");
+        assert_eq!(a.members(), &[0]);
+        assert!(a.leave(0).is_err(), "last member may not leave");
+        a.join(5).unwrap();
+        assert!(a.join(5).is_err(), "duplicate join must be rejected");
+        assert_eq!(a.offer(5, 0, grads_for(5)), AsyncOffer::Accepted);
+        assert!(!a.leave(0).unwrap(), "member without pending work");
+        let commit = a.take_commit().unwrap();
+        assert_eq!(commit.len(), 1);
+        assert_eq!(commit[0].0, 5);
     }
 }

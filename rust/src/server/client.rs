@@ -28,13 +28,29 @@ pub const BACKOFF_CAP_US: u64 = 50_000;
 /// must distinguish without string-matching.
 #[derive(Debug, PartialEq)]
 pub enum PushOutcome {
-    /// Barrier completed; the coalesced step `step` was applied.
+    /// The gradient was applied as (part of) step `step` — the barrier
+    /// step in sync mode, the commit step in async mode.
     Applied(u64),
     /// The push's epoch was superseded — `epoch` is current; refresh
     /// membership knowledge and retry.
     Stale(u64),
+    /// Async mode: the gradient's `base_step` fell out of the staleness
+    /// window (`applied` steps are in; `required` is the oldest
+    /// acceptable base) — re-pull fresher params and recompute.
+    TooStale { applied: u64, required: u64 },
     /// Rejected outright (non-member, wrong step, bad shapes, …).
     Rejected(String),
+}
+
+/// Reply to a freshness-floored pull ([`Client::pull_params_at_least`]).
+#[derive(Debug, PartialEq)]
+pub enum PullReply {
+    /// Parameters after `step` applied steps (`step >= min_step`
+    /// guaranteed).
+    Params { step: u64, tensors: Vec<Vec<f32>> },
+    /// The server has applied only `applied` steps, short of the
+    /// `required` floor — retry later.
+    TooStale { applied: u64, required: u64 },
 }
 
 /// A blocking request/reply connection to a state server. One request
@@ -120,30 +136,49 @@ impl Client {
         }
     }
 
-    /// Pull the current parameters: `(applied step, flat tensor data)`.
+    /// Pull the current parameters unconditionally: `(applied step,
+    /// flat tensor data)`.
     pub fn pull_params(&mut self) -> Result<(u64, Vec<Vec<f32>>)> {
-        match self.call_retry(Msg::PullParams)? {
-            Msg::Params { step, tensors } => Ok((step, tensors)),
+        match self.pull_params_at_least(0)? {
+            PullReply::Params { step, tensors } => Ok((step, tensors)),
+            PullReply::TooStale { applied, required } => {
+                bail!("PullParams with no floor answered TooStale ({applied} < {required})")
+            }
+        }
+    }
+
+    /// Pull the current parameters only if the server has applied at
+    /// least `min_step` steps — the bounded-staleness freshness floor an
+    /// async client holds at `last_acked - staleness`. A
+    /// [`PullReply::TooStale`] is data, not an error: the caller decides
+    /// whether to wait, retry, or bail.
+    pub fn pull_params_at_least(&mut self, min_step: u64) -> Result<PullReply> {
+        match self.call_retry(Msg::PullParams { min_step })? {
+            Msg::Params { step, tensors } => Ok(PullReply::Params { step, tensors }),
+            Msg::TooStale { applied, required } => Ok(PullReply::TooStale { applied, required }),
             other => bail!("PullParams answered with {}", other.name()),
         }
     }
 
-    /// Push this client's gradient set for `step`, tagged with the
-    /// membership `epoch` the client believes is current; blocks until
-    /// the step barrier completes and the coalesced step is applied (or
-    /// the server answers with a stale-epoch / rejection outcome — both
-    /// are data, not errors, because an elastic client must react to
-    /// them).
+    /// Push this client's gradient set for `step`, computed against
+    /// applied step `base_step` and tagged with the membership `epoch`
+    /// the client believes is current; blocks until the gradient is
+    /// applied — at the completed barrier (sync) or in the next commit
+    /// (async) — or until the server answers with a stale-epoch /
+    /// too-stale / rejection outcome. All four are data, not errors,
+    /// because an elastic client must react to them.
     pub fn push_grad(
         &mut self,
         client: u32,
         epoch: u64,
         step: u64,
+        base_step: u64,
         grads: Vec<Vec<f32>>,
     ) -> Result<PushOutcome> {
-        match self.call_retry(Msg::PushGrad { client, epoch, step, grads })? {
+        match self.call_retry(Msg::PushGrad { client, epoch, step, base_step, grads })? {
             Msg::Ack { step: applied } => Ok(PushOutcome::Applied(applied)),
             Msg::StaleEpoch { epoch } => Ok(PushOutcome::Stale(epoch)),
+            Msg::TooStale { applied, required } => Ok(PushOutcome::TooStale { applied, required }),
             Msg::Err { msg } => Ok(PushOutcome::Rejected(msg)),
             other => bail!("PushGrad answered with {}", other.name()),
         }

@@ -1,0 +1,398 @@
+//! The ordered commit log behind bounded-staleness async serving.
+//!
+//! Live async application is racy by design — commits happen whenever
+//! contributions are pending — but every committed partial batch is
+//! appended here as one `SMMFWIRE` [`Msg::LogCommit`] frame: the
+//! optimizer step it applied, the membership epoch, the contributors in
+//! ascending member-id order (each with the `base_step` its gradient
+//! was computed against), an FNV-1a digest of the coalesced gradient
+//! bits, and those bits themselves. A log is therefore a complete,
+//! ordered record of *what was applied*, which is what lets
+//! `repro replay` re-execute the run through the synchronous shard
+//! machinery to a byte-identical snapshot: replay does not re-derive
+//! gradients (clients raced), it re-applies the logged coalesced bits
+//! in commit order.
+//!
+//! The file layout is one [`Msg::LogHeader`] frame (the run identity a
+//! replay must match: model, optimizer, seed, base lr, staleness
+//! window, first step) followed by [`Msg::LogCommit`] frames. Loading
+//! follows the `SMMFCKPT` strict discipline: every frame decodes
+//! through the bounds-checked wire codec, digests are recomputed and
+//! verified, commit steps must be contiguous from `first_step`, and
+//! every contributor must sit inside the declared staleness window — a
+//! truncated or tampered log is a context-rich error, never a panic.
+
+use anyhow::{bail, Context, Result};
+use std::fs::File;
+use std::io::BufWriter;
+use std::path::Path;
+
+use crate::server::protocol::{self, Contributor, Frame, Msg, HEADER_LEN};
+
+/// FNV-1a 64 over per-tensor length-framed little-endian f32 bytes —
+/// tensor boundaries are part of the digest, so moving an element
+/// across tensors changes it.
+pub fn grad_digest(grads: &[Vec<f32>]) -> u64 {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+    fn eat(mut h: u64, bytes: &[u8]) -> u64 {
+        for &b in bytes {
+            h = (h ^ b as u64).wrapping_mul(PRIME);
+        }
+        h
+    }
+    let mut h = OFFSET;
+    for t in grads {
+        h = eat(h, &(t.len() as u64).to_le_bytes());
+        for v in t {
+            h = eat(h, &v.to_le_bytes());
+        }
+    }
+    h
+}
+
+/// The run identity written as the log's first frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogInfo {
+    pub model: String,
+    pub optimizer: String,
+    pub seed: u64,
+    pub base_lr: f32,
+    /// The bounded-staleness window the run was served under.
+    pub staleness: u64,
+    /// The first step the log covers (1 for a fresh server; a resumed
+    /// server logs from its resume point).
+    pub first_step: u64,
+}
+
+/// One committed partial batch, as recorded in the log.
+#[derive(Clone, Debug, PartialEq)]
+pub struct LogCommitRecord {
+    pub step: u64,
+    pub epoch: u64,
+    /// Contributors in ascending member-id order.
+    pub contributors: Vec<Contributor>,
+    pub digest: u64,
+    /// The coalesced gradient bits applied at `step` (flat f32 per
+    /// tensor, inventory order).
+    pub grads: Vec<Vec<f32>>,
+}
+
+/// Append-only commit-log writer: one header frame at create time, one
+/// commit frame per applied partial batch, flushed per commit.
+pub struct CommitLogWriter {
+    w: BufWriter<File>,
+    next_step: u64,
+    staleness: u64,
+    seq: u64,
+}
+
+impl CommitLogWriter {
+    /// Create (truncate) the log at `path` and write the header frame.
+    pub fn create(path: &Path, info: &LogInfo) -> Result<CommitLogWriter> {
+        assert!(info.staleness >= 1, "the commit log records async runs only");
+        if let Some(dir) = path.parent().filter(|d| !d.as_os_str().is_empty()) {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating commit-log directory {dir:?}"))?;
+        }
+        let file =
+            File::create(path).with_context(|| format!("creating commit log {path:?}"))?;
+        let mut w = BufWriter::new(file);
+        let msg = Msg::LogHeader {
+            model: info.model.clone(),
+            optimizer: info.optimizer.clone(),
+            seed: info.seed,
+            base_lr: info.base_lr,
+            staleness: info.staleness,
+            first_step: info.first_step,
+        };
+        protocol::write_frame(&mut w, &Frame { request_id: 0, msg })
+            .with_context(|| format!("writing commit-log header to {path:?}"))?;
+        Ok(CommitLogWriter {
+            w,
+            next_step: info.first_step,
+            staleness: info.staleness,
+            seq: 1,
+        })
+    }
+
+    /// Append one commit. Steps must arrive contiguously from the
+    /// header's `first_step`; contributors must be sorted ascending and
+    /// inside the staleness window — the writer enforces at append time
+    /// exactly what the loader verifies at read time, so a log this
+    /// writer produced always loads. Returns the recorded digest.
+    pub fn append(
+        &mut self,
+        step: u64,
+        epoch: u64,
+        contributors: &[Contributor],
+        grads: &[Vec<f32>],
+    ) -> Result<u64> {
+        if step != self.next_step {
+            bail!("commit for step {step}, the log expects step {}", self.next_step);
+        }
+        check_commit_shape(step, self.staleness, contributors)?;
+        let digest = grad_digest(grads);
+        let msg = Msg::LogCommit {
+            step,
+            epoch,
+            contributors: contributors.to_vec(),
+            digest,
+            grads: grads.to_vec(),
+        };
+        protocol::write_frame(&mut self.w, &Frame { request_id: self.seq, msg })
+            .with_context(|| format!("appending commit {step} to the log"))?;
+        self.next_step += 1;
+        self.seq += 1;
+        Ok(digest)
+    }
+}
+
+/// Shared writer/loader validation of one commit's contributor list:
+/// non-empty, ascending member ids, and every `base_step` inside the
+/// staleness window relative to the step being committed.
+fn check_commit_shape(step: u64, staleness: u64, contributors: &[Contributor]) -> Result<()> {
+    if contributors.is_empty() {
+        bail!("commit {step} has no contributors (empty commits are never logged)");
+    }
+    if !contributors.windows(2).all(|w| w[0].client < w[1].client) {
+        bail!("commit {step}: contributors must be distinct and ascending by member id");
+    }
+    for c in contributors {
+        // The accumulator accepted this contribution when
+        // applied - base <= staleness and applied = step - 1.
+        if c.base_step >= step {
+            bail!(
+                "commit {step}: contributor {} claims base step {} at or past the commit",
+                c.client,
+                c.base_step
+            );
+        }
+        let lag = step - 1 - c.base_step;
+        if lag > staleness {
+            bail!(
+                "commit {step}: contributor {} lags {lag} steps, window is {staleness}",
+                c.client
+            );
+        }
+    }
+    Ok(())
+}
+
+/// A fully loaded and verified commit log.
+#[derive(Clone, Debug)]
+pub struct CommitLog {
+    pub header: LogInfo,
+    pub commits: Vec<LogCommitRecord>,
+}
+
+impl CommitLog {
+    /// Load and verify a commit log: strict frame decode, header first,
+    /// contiguous steps, ascending in-window contributors, digests
+    /// recomputed and compared against the recorded ones.
+    pub fn load(path: &Path) -> Result<CommitLog> {
+        let bytes =
+            std::fs::read(path).with_context(|| format!("reading commit log {path:?}"))?;
+        let mut off = 0usize;
+        let mut header: Option<LogInfo> = None;
+        let mut commits = Vec::new();
+        while off < bytes.len() {
+            if bytes.len() - off < HEADER_LEN {
+                bail!(
+                    "commit log {path:?}: {} trailing bytes at offset {off} are not a full frame",
+                    bytes.len() - off
+                );
+            }
+            let hdr: [u8; HEADER_LEN] = bytes[off..off + HEADER_LEN].try_into().unwrap();
+            let (_, op, len) = protocol::decode_header(&hdr)
+                .with_context(|| format!("commit log {path:?}: frame header at offset {off}"))?;
+            let start = off + HEADER_LEN;
+            let end = start.checked_add(len as usize).filter(|&e| e <= bytes.len());
+            let Some(end) = end else {
+                bail!(
+                    "commit log {path:?}: frame at offset {off} claims {len} payload bytes past the end of the file"
+                );
+            };
+            let msg = protocol::decode_payload(op, &bytes[start..end])
+                .with_context(|| format!("commit log {path:?}: frame at offset {off}"))?;
+            off = end;
+            match msg {
+                Msg::LogHeader { model, optimizer, seed, base_lr, staleness, first_step } => {
+                    if header.is_some() {
+                        bail!("commit log {path:?}: duplicate header frame");
+                    }
+                    if staleness == 0 {
+                        bail!("commit log {path:?}: header claims staleness 0 (synchronous runs are not logged)");
+                    }
+                    header =
+                        Some(LogInfo { model, optimizer, seed, base_lr, staleness, first_step });
+                }
+                Msg::LogCommit { step, epoch, contributors, digest, grads } => {
+                    let Some(h) = header.as_ref() else {
+                        bail!("commit log {path:?}: first frame is LogCommit, expected LogHeader");
+                    };
+                    let expect = h.first_step + commits.len() as u64;
+                    if step != expect {
+                        bail!(
+                            "commit log {path:?}: commit {step} where step {expect} was expected (steps must be contiguous)"
+                        );
+                    }
+                    check_commit_shape(step, h.staleness, &contributors)
+                        .with_context(|| format!("commit log {path:?}"))?;
+                    let actual = grad_digest(&grads);
+                    if actual != digest {
+                        bail!(
+                            "commit log {path:?}: commit {step} digest mismatch (recorded {digest:#018x}, gradient bits hash to {actual:#018x}) — the log is corrupt"
+                        );
+                    }
+                    commits.push(LogCommitRecord { step, epoch, contributors, digest, grads });
+                }
+                other if header.is_none() => bail!(
+                    "commit log {path:?}: first frame is {}, expected LogHeader",
+                    other.name()
+                ),
+                other => bail!(
+                    "commit log {path:?}: unexpected {} frame (only LogCommit may follow the header)",
+                    other.name()
+                ),
+            }
+        }
+        let Some(header) = header else {
+            bail!("commit log {path:?} is empty (no header frame)");
+        };
+        Ok(CommitLog { header, commits })
+    }
+
+    /// The largest contributor lag in the log:
+    /// `max(commit.step - 1 - base_step)`. The bounded-staleness
+    /// property tests assert this never exceeds the header's window.
+    pub fn max_lag(&self) -> u64 {
+        self.commits
+            .iter()
+            .flat_map(|c| c.contributors.iter().map(move |k| c.step - 1 - k.base_step))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(tag: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("smmf_commitlog_{tag}_{}", std::process::id()));
+        p
+    }
+
+    fn info() -> LogInfo {
+        LogInfo {
+            model: "synthetic:tiny_lm".into(),
+            optimizer: "smmf".into(),
+            seed: 3,
+            base_lr: 0.05,
+            staleness: 2,
+            first_step: 1,
+        }
+    }
+
+    fn grads(step: u64) -> Vec<Vec<f32>> {
+        vec![vec![step as f32, -1.5], vec![0.25 * step as f32]]
+    }
+
+    #[test]
+    fn roundtrip_preserves_every_commit_and_the_header() {
+        let path = tmp("roundtrip");
+        let mut w = CommitLogWriter::create(&path, &info()).unwrap();
+        for step in 1..=4u64 {
+            let contributors = vec![
+                Contributor { client: 0, base_step: step - 1 },
+                Contributor { client: 2, base_step: step.saturating_sub(2) },
+            ];
+            w.append(step, 1, &contributors, &grads(step)).unwrap();
+        }
+        drop(w);
+        let log = CommitLog::load(&path).unwrap();
+        assert_eq!(log.header, info());
+        assert_eq!(log.commits.len(), 4);
+        for (i, c) in log.commits.iter().enumerate() {
+            assert_eq!(c.step, i as u64 + 1);
+            assert_eq!(c.grads, grads(c.step));
+            assert_eq!(c.digest, grad_digest(&c.grads));
+        }
+        assert!(log.max_lag() <= info().staleness, "lag {}", log.max_lag());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn writer_rejects_gaps_disorder_and_window_violations() {
+        let path = tmp("writer_rejects");
+        let mut w = CommitLogWriter::create(&path, &info()).unwrap();
+        let one = [Contributor { client: 0, base_step: 0 }];
+        // step gap
+        assert!(w.append(2, 1, &one, &grads(2)).is_err());
+        w.append(1, 1, &one, &grads(1)).unwrap();
+        // contributors out of order
+        let disordered = [
+            Contributor { client: 3, base_step: 1 },
+            Contributor { client: 1, base_step: 1 },
+        ];
+        assert!(w.append(2, 1, &disordered, &grads(2)).is_err());
+        // empty contributor list
+        assert!(w.append(2, 1, &[], &grads(2)).is_err());
+        // outside the staleness window (step 2 would imply lag > 2 only
+        // for base past the window; craft step 4 after filling in)
+        w.append(2, 1, &[Contributor { client: 0, base_step: 1 }], &grads(2)).unwrap();
+        w.append(3, 1, &[Contributor { client: 0, base_step: 2 }], &grads(3)).unwrap();
+        let stale = [Contributor { client: 0, base_step: 0 }];
+        let err = w.append(4, 1, &stale, &grads(4)).unwrap_err();
+        assert!(format!("{err:#}").contains("window"), "{err:#}");
+        // base step at/past the commit step
+        let future = [Contributor { client: 0, base_step: 4 }];
+        assert!(w.append(4, 1, &future, &grads(4)).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn loader_rejects_corruption_truncation_and_misordered_logs() {
+        let path = tmp("loader_rejects");
+        let mut w = CommitLogWriter::create(&path, &info()).unwrap();
+        for step in 1..=3u64 {
+            w.append(step, 1, &[Contributor { client: 1, base_step: step - 1 }], &grads(step))
+                .unwrap();
+        }
+        drop(w);
+        let good = std::fs::read(&path).unwrap();
+        CommitLog::load(&path).unwrap();
+
+        // flip one byte in the last commit's gradient region: digest
+        // mismatch, never a panic
+        let mut corrupt = good.clone();
+        let n = corrupt.len();
+        corrupt[n - 3] ^= 0xff;
+        std::fs::write(&path, &corrupt).unwrap();
+        let err = CommitLog::load(&path).unwrap_err();
+        let text = format!("{err:#}");
+        assert!(text.contains("digest") || text.contains("payload"), "{text}");
+
+        // truncate mid-frame
+        std::fs::write(&path, &good[..n - 7]).unwrap();
+        assert!(CommitLog::load(&path).is_err());
+
+        // a log that does not start with a header
+        let mut no_header = Vec::new();
+        protocol::write_frame(
+            &mut no_header,
+            &Frame { request_id: 0, msg: Msg::Ack { step: 1 } },
+        )
+        .unwrap();
+        std::fs::write(&path, &no_header).unwrap();
+        let err = CommitLog::load(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("LogHeader"), "{err:#}");
+
+        // empty file
+        std::fs::write(&path, b"").unwrap();
+        assert!(CommitLog::load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -12,13 +12,22 @@
 //! * [`protocol`] — the `SMMFWIRE` versioned, length-prefixed binary
 //!   framing (`PushGrad` / `PullParams` / `Snapshot` / `Stats` /
 //!   `Shutdown`, plus the v2 membership ops `Join` / `Leave` /
-//!   `EpochInfo`), decoded with the same strict bounds-checked
-//!   discipline as the checkpoint container.
+//!   `EpochInfo`, plus the v3 bounded-staleness fields, `TooStale`
+//!   reply and commit-log frames), decoded with the same strict
+//!   bounds-checked discipline as the checkpoint container.
 //! * [`batch`] — gradient coalescing: concurrent client pushes
 //!   accumulate behind a per-step barrier and reduce in fixed member-id
 //!   order, so the applied step is independent of network timing. The
 //!   barrier is elastic: members join, leave and get evicted between
-//!   steps, each change bumping the membership epoch.
+//!   steps, each change bumping the membership epoch. Async mode swaps
+//!   the barrier for a bounded-staleness accumulator: whatever is
+//!   pending commits as one partial batch, and a push based on
+//!   parameters more than `S` steps old is turned away.
+//! * [`commitlog`] — the ordered on-disk record of every applied async
+//!   commit (contributors, base steps, digest, coalesced gradient),
+//!   written through the wire-frame codec; `repro replay` re-executes
+//!   it to a bit-identical snapshot, making async runs as auditable as
+//!   synchronous ones.
 //! * [`shard`] — the inventory partitioned across K worker threads by
 //!   the FLOP-balancing planner, each shard owning its optimizer state
 //!   (built through the param-group table, so per-shard `StatePolicy`
@@ -42,14 +51,16 @@
 
 pub mod batch;
 pub mod client;
+pub mod commitlog;
 pub mod protocol;
 pub mod service;
 pub mod shard;
 
-pub use client::{Client, GradSource, PushOutcome};
-pub use protocol::{EpochView, Frame, Msg, ServerStats};
+pub use client::{Client, GradSource, PullReply, PushOutcome};
+pub use commitlog::{grad_digest, CommitLog, CommitLogWriter, LogInfo};
+pub use protocol::{Contributor, EpochView, Frame, Msg, ServerStats};
 pub use service::{
-    reference_checkpoint, reference_checkpoint_elastic, resolve_inventory, run_loadgen,
-    LoadgenOptions, LoadgenReport, ServeOptions, Server,
+    reference_checkpoint, reference_checkpoint_elastic, replay_commit_log, resolve_inventory,
+    run_loadgen, LoadgenOptions, LoadgenReport, ReplayReport, ServeOptions, Server,
 };
-pub use shard::{plan_shards, Recovery, RecoveryImage, ShardPlan, ShardSet};
+pub use shard::{coalesce_commit, plan_shards, Recovery, RecoveryImage, ShardPlan, ShardSet};

@@ -6,7 +6,7 @@
 //! ```text
 //! offset  size  field
 //! 0       8     magic  b"SMMFWIRE"
-//! 8       4     u32    protocol version (= 2)
+//! 8       4     u32    protocol version (= 3)
 //! 12      8     u64    request id (replies echo the request's id)
 //! 20      1     u8     op code (see the OP_* constants)
 //! 21      8     u64    payload length in bytes (<= MAX_PAYLOAD)
@@ -18,6 +18,16 @@
 //! the barrier, and a push tagged with a superseded epoch is answered
 //! with [`Msg::StaleEpoch`] (carrying the current epoch) so the client
 //! can refresh and retry instead of parsing error strings.
+//!
+//! Version 3 added bounded-staleness async ingestion: `PushGrad`
+//! carries the `base_step` its gradient was computed against,
+//! `PullParams` carries a `min_step` freshness floor, and a push (or
+//! pull) outside the staleness window is answered with the typed
+//! [`Msg::TooStale`]. The commit-log frames ([`Msg::LogHeader`],
+//! [`Msg::LogCommit`]) live in a third op range (>= 128): they are
+//! written to the on-disk commit log through the same framing and
+//! strict decode, but are never valid requests or replies on a live
+//! connection.
 //!
 //! All multi-byte values are little-endian, encoded/decoded with the
 //! checkpoint blob codec (`optim::blob`). Decoding follows the same
@@ -40,7 +50,9 @@ use crate::optim::blob::{BlobReader, BlobWriter};
 pub const MAGIC: &[u8; 8] = b"SMMFWIRE";
 /// Current protocol version. Bump on any layout change.
 /// v2: epoch-tagged `PushGrad`, membership ops, extended stats.
-pub const VERSION: u32 = 2;
+/// v3: bounded staleness (`base_step`/`min_step`/`TooStale`) and the
+/// commit-log frames (`LogHeader`/`LogCommit`).
+pub const VERSION: u32 = 3;
 /// Fixed frame header size: magic + version + request id + op + length.
 pub const HEADER_LEN: usize = 8 + 4 + 8 + 1 + 8;
 /// Hard payload cap: a frame may never ask the peer to buffer more.
@@ -72,6 +84,12 @@ pub const OP_BYE: u8 = 69;
 pub const OP_ERR: u8 = 70;
 pub const OP_EPOCH_REPLY: u8 = 71;
 pub const OP_STALE_EPOCH: u8 = 72;
+pub const OP_TOO_STALE: u8 = 73;
+/// Commit-log op codes (>= 128) live in a third disjoint range: they
+/// are only ever written to / read from the on-disk commit log, never
+/// exchanged on a live connection.
+pub const OP_LOG_HEADER: u8 = 128;
+pub const OP_LOG_COMMIT: u8 = 129;
 
 /// `EpochReply::client` value meaning "no client id applies" (the reply
 /// to an `EpochInfo` probe, which assigns nothing).
@@ -101,6 +119,17 @@ pub struct ServerStats {
     pub respawns: u64,
     /// Total wall-clock milliseconds spent recovering dead shards.
     pub recovery_ms: u64,
+    /// Bounded-staleness window: 0 = synchronous barrier, S >= 1 =
+    /// async ingestion accepting gradients up to S steps stale.
+    pub staleness: u64,
+}
+
+/// One commit-log contributor: a member id and the applied step its
+/// gradient was computed against (its `base_step`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct Contributor {
+    pub client: u32,
+    pub base_step: u64,
 }
 
 /// Membership view carried by [`Msg::EpochReply`]: the epoch, the step
@@ -121,13 +150,20 @@ pub struct EpochView {
 pub enum Msg {
     /// Client `client` pushes its gradient set for optimizer step `step`
     /// (flat f32 data per tensor, inventory registration order),
-    /// tagged with the membership `epoch` it believes is current. The
-    /// reply — [`Msg::Ack`] — is deferred until the step barrier
-    /// completes and the coalesced step has been applied; a superseded
-    /// epoch is answered with [`Msg::StaleEpoch`] instead.
-    PushGrad { client: u32, epoch: u64, step: u64, grads: Vec<Vec<f32>> },
-    /// Fetch the current parameters; replied with [`Msg::Params`].
-    PullParams,
+    /// tagged with the membership `epoch` it believes is current and
+    /// the applied step (`base_step`) the gradient was computed
+    /// against. The reply — [`Msg::Ack`] — is deferred until the step
+    /// barrier completes (sync mode) or the contribution is committed
+    /// as part of a partial batch (async mode; the acked step is the
+    /// commit step, which may exceed `step`). A superseded epoch is
+    /// answered with [`Msg::StaleEpoch`]; a `base_step` outside the
+    /// staleness window with [`Msg::TooStale`].
+    PushGrad { client: u32, epoch: u64, step: u64, base_step: u64, grads: Vec<Vec<f32>> },
+    /// Fetch the current parameters, but only if at least `min_step`
+    /// steps have been applied (0 = unconditional); replied with
+    /// [`Msg::Params`], or [`Msg::TooStale`] when the server is behind
+    /// the floor.
+    PullParams { min_step: u64 },
     /// Write a `SMMFCKPT` v2 snapshot to `path` on the server host;
     /// replied with [`Msg::SnapshotDone`].
     Snapshot { path: String },
@@ -163,6 +199,36 @@ pub enum Msg {
     /// A `PushGrad` carried a superseded epoch; `epoch` is the current
     /// one — refresh membership knowledge and retry.
     StaleEpoch { epoch: u64 },
+    /// The request fell outside the bounded-staleness window. For a
+    /// push: the gradient's `base_step` is more than `staleness` steps
+    /// behind the `applied` step and `required` is the oldest
+    /// acceptable base — re-pull and recompute. For a pull: the server
+    /// has applied only `applied` steps, short of the `required`
+    /// (`min_step`) floor.
+    TooStale { applied: u64, required: u64 },
+    /// Commit-log file header (first frame of a commit log, never sent
+    /// on a connection): the run identity a replay must match.
+    LogHeader {
+        model: String,
+        optimizer: String,
+        seed: u64,
+        base_lr: f32,
+        staleness: u64,
+        first_step: u64,
+    },
+    /// One committed partial batch (subsequent commit-log frames):
+    /// the optimizer step it applied, the membership epoch at commit
+    /// time, the contributors in ascending member-id order, the FNV-1a
+    /// digest of the coalesced gradient bits, and those bits themselves
+    /// (flat f32 per tensor, inventory order) so `repro replay` can
+    /// re-execute the step exactly.
+    LogCommit {
+        step: u64,
+        epoch: u64,
+        contributors: Vec<Contributor>,
+        digest: u64,
+        grads: Vec<Vec<f32>>,
+    },
 }
 
 impl Msg {
@@ -170,7 +236,7 @@ impl Msg {
     pub fn op(&self) -> u8 {
         match self {
             Msg::PushGrad { .. } => OP_PUSH_GRAD,
-            Msg::PullParams => OP_PULL_PARAMS,
+            Msg::PullParams { .. } => OP_PULL_PARAMS,
             Msg::Snapshot { .. } => OP_SNAPSHOT,
             Msg::Stats => OP_STATS,
             Msg::Shutdown => OP_SHUTDOWN,
@@ -186,6 +252,9 @@ impl Msg {
             Msg::Err { .. } => OP_ERR,
             Msg::EpochReply(_) => OP_EPOCH_REPLY,
             Msg::StaleEpoch { .. } => OP_STALE_EPOCH,
+            Msg::TooStale { .. } => OP_TOO_STALE,
+            Msg::LogHeader { .. } => OP_LOG_HEADER,
+            Msg::LogCommit { .. } => OP_LOG_COMMIT,
         }
     }
 
@@ -193,7 +262,7 @@ impl Msg {
     pub fn name(&self) -> &'static str {
         match self {
             Msg::PushGrad { .. } => "PushGrad",
-            Msg::PullParams => "PullParams",
+            Msg::PullParams { .. } => "PullParams",
             Msg::Snapshot { .. } => "Snapshot",
             Msg::Stats => "Stats",
             Msg::Shutdown => "Shutdown",
@@ -209,6 +278,9 @@ impl Msg {
             Msg::Err { .. } => "Err",
             Msg::EpochReply(_) => "EpochReply",
             Msg::StaleEpoch { .. } => "StaleEpoch",
+            Msg::TooStale { .. } => "TooStale",
+            Msg::LogHeader { .. } => "LogHeader",
+            Msg::LogCommit { .. } => "LogCommit",
         }
     }
 }
@@ -256,19 +328,15 @@ fn clip_str(s: &str) -> &str {
 fn payload(msg: &Msg) -> Vec<u8> {
     let mut w = BlobWriter::new();
     match msg {
-        Msg::PushGrad { client, epoch, step, grads } => {
+        Msg::PushGrad { client, epoch, step, base_step, grads } => {
             w.u32(*client);
             w.u64(*epoch);
             w.u64(*step);
+            w.u64(*base_step);
             write_tensor_list(&mut w, grads);
         }
-        Msg::PullParams
-        | Msg::Stats
-        | Msg::Shutdown
-        | Msg::Join
-        | Msg::EpochInfo
-        | Msg::Busy
-        | Msg::Bye => {}
+        Msg::Stats | Msg::Shutdown | Msg::Join | Msg::EpochInfo | Msg::Busy | Msg::Bye => {}
+        Msg::PullParams { min_step } => w.u64(*min_step),
         Msg::Snapshot { path } => write_str(&mut w, path),
         Msg::Leave { client } => w.u32(*client),
         Msg::Ack { step } => w.u64(*step),
@@ -288,6 +356,7 @@ fn payload(msg: &Msg) -> Vec<u8> {
             w.u64(s.evictions);
             w.u64(s.respawns);
             w.u64(s.recovery_ms);
+            w.u64(s.staleness);
         }
         Msg::Err { msg } => write_str(&mut w, clip_str(msg)),
         Msg::EpochReply(v) => {
@@ -300,22 +369,47 @@ fn payload(msg: &Msg) -> Vec<u8> {
             }
         }
         Msg::StaleEpoch { epoch } => w.u64(*epoch),
+        Msg::TooStale { applied, required } => {
+            w.u64(*applied);
+            w.u64(*required);
+        }
+        Msg::LogHeader { model, optimizer, seed, base_lr, staleness, first_step } => {
+            write_str(&mut w, model);
+            write_str(&mut w, optimizer);
+            w.u64(*seed);
+            w.f32(*base_lr);
+            w.u64(*staleness);
+            w.u64(*first_step);
+        }
+        Msg::LogCommit { step, epoch, contributors, digest, grads } => {
+            w.u64(*step);
+            w.u64(*epoch);
+            w.u32(contributors.len() as u32);
+            for c in contributors {
+                w.u32(c.client);
+                w.u64(c.base_step);
+            }
+            w.u64(*digest);
+            write_tensor_list(&mut w, grads);
+        }
     }
     w.finish()
 }
 
 /// Wire payload size of a `PushGrad` frame over the given shapes — the
-/// largest message either side ever sends for an inventory (a `Params`
-/// reply's prefix is `u64 step` + `u32 count` vs PushGrad's `u32
-/// client` + `u64 epoch` + `u64 step` + `u32 count`, i.e. 12 bytes
-/// smaller). Servers and load generators check this against
-/// [`MAX_PAYLOAD`] up front, so an inventory too large for the wire
-/// fails with a clear error at startup instead of an assert on the
-/// first push.
+/// largest message either side ever sends for an inventory on a live
+/// connection (a `Params` reply's prefix is `u64 step` + `u32 count` vs
+/// PushGrad's `u32 client` + `u64 epoch` + `u64 step` + `u64 base_step`
+/// + `u32 count`, i.e. 20 bytes smaller; a `LogCommit` frame can grow
+/// larger still by its per-contributor metadata, which the server's
+/// capacity check budgets separately). Servers and load generators
+/// check this against [`MAX_PAYLOAD`] up front, so an inventory too
+/// large for the wire fails with a clear error at startup instead of an
+/// assert on the first push.
 pub fn grads_payload_bytes(shapes: &[Vec<usize>]) -> u64 {
-    // client u32 + epoch u64 + step u64 + tensor count u32, then per
-    // tensor a u64 length prefix + 4 bytes per element.
-    4 + 8 + 8 + 4
+    // client u32 + epoch u64 + step u64 + base_step u64 + tensor count
+    // u32, then per tensor a u64 length prefix + 4 bytes per element.
+    4 + 8 + 8 + 8 + 4
         + shapes
             .iter()
             .map(|s| 8 + 4 * s.iter().product::<usize>() as u64)
@@ -412,10 +506,11 @@ pub fn decode_payload(op: u8, payload: &[u8]) -> Result<Msg> {
             let client = r.u32()?;
             let epoch = r.u64()?;
             let step = r.u64()?;
+            let base_step = r.u64()?;
             let grads = read_tensor_list(&mut r, "PushGrad")?;
-            Msg::PushGrad { client, epoch, step, grads }
+            Msg::PushGrad { client, epoch, step, base_step, grads }
         }
-        OP_PULL_PARAMS => Msg::PullParams,
+        OP_PULL_PARAMS => Msg::PullParams { min_step: r.u64()? },
         OP_SNAPSHOT => Msg::Snapshot { path: read_str(&mut r, "Snapshot path")? },
         OP_STATS => Msg::Stats,
         OP_SHUTDOWN => Msg::Shutdown,
@@ -440,6 +535,7 @@ pub fn decode_payload(op: u8, payload: &[u8]) -> Result<Msg> {
             evictions: r.u64()?,
             respawns: r.u64()?,
             recovery_ms: r.u64()?,
+            staleness: r.u64()?,
         }),
         OP_BUSY => Msg::Busy,
         OP_BYE => Msg::Bye,
@@ -466,6 +562,38 @@ pub fn decode_payload(op: u8, payload: &[u8]) -> Result<Msg> {
             Msg::EpochReply(EpochView { epoch, next_step, client, members })
         }
         OP_STALE_EPOCH => Msg::StaleEpoch { epoch: r.u64()? },
+        OP_TOO_STALE => Msg::TooStale { applied: r.u64()?, required: r.u64()? },
+        OP_LOG_HEADER => Msg::LogHeader {
+            model: read_str(&mut r, "LogHeader model")?,
+            optimizer: read_str(&mut r, "LogHeader optimizer")?,
+            seed: r.u64()?,
+            base_lr: r.f32()?,
+            staleness: r.u64()?,
+            first_step: r.u64()?,
+        },
+        OP_LOG_COMMIT => {
+            let step = r.u64()?;
+            let epoch = r.u64()?;
+            let n = r.u32()? as usize;
+            if n > MAX_MEMBERS {
+                bail!("LogCommit: claims {n} contributors (cap {MAX_MEMBERS})");
+            }
+            // Remaining-bytes check before the allocation: 12 bytes
+            // (u32 client + u64 base_step) per claimed contributor.
+            if r.remaining() < n.saturating_mul(12) {
+                bail!(
+                    "LogCommit: claims {n} contributors, only {} payload bytes remain",
+                    r.remaining()
+                );
+            }
+            let mut contributors = Vec::with_capacity(n);
+            for _ in 0..n {
+                contributors.push(Contributor { client: r.u32()?, base_step: r.u64()? });
+            }
+            let digest = r.u64()?;
+            let grads = read_tensor_list(&mut r, "LogCommit")?;
+            Msg::LogCommit { step, epoch, contributors, digest, grads }
+        }
         other => bail!("unknown SMMFWIRE op {other}"),
     };
     r.finish().with_context(|| format!("{} payload", msg.name()))?;
@@ -522,13 +650,14 @@ mod tests {
     #[test]
     fn stream_roundtrip_back_to_back() {
         let frames = vec![
-            Frame { request_id: 1, msg: Msg::PullParams },
+            Frame { request_id: 1, msg: Msg::PullParams { min_step: 4 } },
             Frame {
                 request_id: 2,
                 msg: Msg::PushGrad {
                     client: 3,
                     epoch: 2,
                     step: 9,
+                    base_step: 8,
                     grads: vec![vec![1.5, -2.0], vec![]],
                 },
             },

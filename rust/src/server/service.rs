@@ -36,6 +36,22 @@
 //!   cross-checked), and the interrupted step replayed — the run
 //!   continues bit-identically.
 //!
+//! Bounded-staleness async mode (wire protocol v3): with
+//! `staleness = S >= 1` the step barrier is replaced by an
+//! [`AsyncAccumulator`](super::batch::AsyncAccumulator) — the
+//! coordinator drains every queued push, coalesces the batch in member-id
+//! order (scale `1/n`), applies it as one optimizer step, and
+//! acknowledges exactly the contributors. A push whose `base_step` lags
+//! the applied step by more than `S` is answered [`Msg::TooStale`]; a
+//! pull may carry a `min_step` floor and gets the same typed answer when
+//! the server cannot honor it. Every applied partial batch is appended
+//! to the commit log (`--commit-log`): step, epoch, contributor ids and
+//! base steps, a digest, and the coalesced gradient. [`replay_commit_log`]
+//! re-executes that log through the synchronous sharded machinery to a
+//! bit-identical snapshot — the commit log is the determinism oracle for
+//! async runs, where wall-clock interleaving decides which pushes share
+//! a commit.
+//!
 //! Determinism contract: a K-shard server driven by N concurrent
 //! loadgen clients writes a snapshot bit-identical to
 //! [`reference_checkpoint`] — the equivalent single-process trainer over
@@ -63,10 +79,11 @@ use crate::models::{inventory_by_name, Inventory};
 use crate::optim::group::{self, Resolution, TensorPolicy};
 use crate::optim::schedule::LrSchedule;
 use crate::optim::{self, OptKind, Optimizer, StateSerde};
-use crate::server::batch::{Offer, StepBatcher};
-use crate::server::client::{Client, GradSource, PushOutcome};
-use crate::server::protocol::{self, EpochView, Frame, Msg, ServerStats};
-use crate::server::shard::{RecoveryImage, ShardSet};
+use crate::server::batch::{AsyncAccumulator, AsyncOffer, Offer, StepBatcher};
+use crate::server::client::{Client, GradSource, PullReply, PushOutcome};
+use crate::server::commitlog::{CommitLog, CommitLogWriter, LogInfo};
+use crate::server::protocol::{self, Contributor, EpochView, Frame, Msg, ServerStats};
+use crate::server::shard::{self, RecoveryImage, ShardSet};
 use crate::tensor::Tensor;
 use crate::train::checkpoint::{self, ConfigSection};
 use crate::util::cli::Args;
@@ -106,6 +123,14 @@ pub struct ServeOptions {
     /// state and the step counter are restored (re-sharded onto the
     /// configured shard count if it differs from the writing run's).
     pub resume: Option<String>,
+    /// Bounded-staleness window: `0` keeps the synchronous step barrier;
+    /// `S >= 1` switches to async ingestion, where a push based on
+    /// parameters at most `S` steps behind the applied step joins the
+    /// next commit and anything older is answered `TooStale`.
+    pub staleness: u64,
+    /// Append every applied async commit to this log file (async mode
+    /// only — the synchronous path is already pinned by `--check`).
+    pub commit_log: Option<String>,
 }
 
 impl Default for ServeOptions {
@@ -119,6 +144,8 @@ impl Default for ServeOptions {
             client_timeout_ms: 0,
             resilient: false,
             resume: None,
+            staleness: 0,
+            commit_log: None,
         }
     }
 }
@@ -155,12 +182,23 @@ impl ServeOptions {
         }
         self.client_timeout_ms = t as u64;
         self.resilient = doc.bool_or("server.resilient", self.resilient);
+        let s = doc.i64_or("server.staleness", self.staleness as i64);
+        if s < 0 {
+            bail!("[server]: staleness must be >= 0 (got {s}; 0 is the synchronous barrier)");
+        }
+        self.staleness = s as u64;
+        let cur = self.commit_log.clone().unwrap_or_default();
+        let log = doc.str_or("server.commit_log", &cur).to_string();
+        if !log.is_empty() {
+            self.commit_log = Some(log);
+        }
         Ok(())
     }
 
     /// Apply `--addr/--model/--shards/--clients/--max-pending/
-    /// --client-timeout-ms/--resilient/--resume` CLI overrides
-    /// (strictly validated, not silently clamped).
+    /// --client-timeout-ms/--resilient/--resume/--staleness/
+    /// --commit-log` CLI overrides (strictly validated, not silently
+    /// clamped).
     pub fn apply_args(&mut self, args: &Args) -> Result<()> {
         self.addr = args.str_or("addr", &self.addr);
         if let Some(m) = args.opt("model") {
@@ -180,6 +218,14 @@ impl ServeOptions {
         }
         if let Some(p) = args.opt("resume") {
             self.resume = Some(p.to_string());
+        }
+        if let Some(s) = args.opt("staleness") {
+            self.staleness = s
+                .parse()
+                .map_err(|_| anyhow!("--staleness wants a non-negative integer, got {s:?}"))?;
+        }
+        if let Some(p) = args.opt("commit-log") {
+            self.commit_log = Some(p.to_string());
         }
         Ok(())
     }
@@ -201,7 +247,12 @@ pub fn resolve_inventory(model: &str) -> Result<Inventory> {
 /// design; the paper-scale BERT/LLaMA inventories are out of scope for
 /// the serving demo.)
 fn check_wire_capacity(model: &str, shapes: &[Vec<usize>]) -> Result<()> {
-    let bytes = protocol::grads_payload_bytes(shapes);
+    // Budget for the largest frame the server may ever encode: a
+    // LogCommit carries the same tensor list as a gradient push plus up
+    // to MAX_MEMBERS contributor entries (12 bytes each) — checking the
+    // worst case here means the commit-log writer can never trip the
+    // encoder's payload assert mid-run.
+    let bytes = protocol::grads_payload_bytes(shapes) + 12 * protocol::MAX_MEMBERS as u64;
     if bytes > protocol::MAX_PAYLOAD {
         bail!(
             "inventory {model} needs {bytes}-byte gradient frames, over the SMMFWIRE \
@@ -328,14 +379,65 @@ fn restore_serving_state(
     Ok((shards, ck.params, ck.step + 1))
 }
 
+/// The coordinator's ingestion discipline — the synchronous step
+/// barrier (`staleness = 0`) or the bounded-staleness accumulator
+/// (`staleness >= 1`). The mode is fixed at startup; everything the
+/// membership and pull paths need is shared here so they are
+/// mode-agnostic.
+enum Ingest {
+    Sync(StepBatcher),
+    Async(AsyncAccumulator),
+}
+
+impl Ingest {
+    fn members(&self) -> &[u32] {
+        match self {
+            Ingest::Sync(b) => b.members(),
+            Ingest::Async(a) => a.members(),
+        }
+    }
+
+    fn width(&self) -> usize {
+        match self {
+            Ingest::Sync(b) => b.width(),
+            Ingest::Async(a) => a.width(),
+        }
+    }
+
+    fn pending_step(&self) -> u64 {
+        match self {
+            Ingest::Sync(b) => b.pending_step(),
+            Ingest::Async(a) => a.pending_step(),
+        }
+    }
+
+    fn applied_step(&self) -> u64 {
+        match self {
+            Ingest::Sync(b) => b.applied_step(),
+            Ingest::Async(a) => a.applied_step(),
+        }
+    }
+
+    fn join(&mut self, client: u32) -> Result<(), String> {
+        match self {
+            Ingest::Sync(b) => b.join(client),
+            Ingest::Async(a) => a.join(client),
+        }
+    }
+}
+
 /// The coordinator's owned state plus the step/epoch logic, a struct so
-/// the apply-step path is shared between its three triggers: a push
+/// the apply-step path is shared between its triggers: a push
 /// completing the barrier, a leave whose discarded pending push
-/// completes it, and a deadline eviction.
+/// completes it, a deadline eviction, and (async mode) the post-drain
+/// commit flush.
 struct Coordinator {
     stats: ServerStats,
     params: Vec<Tensor>,
-    batcher: StepBatcher,
+    ingest: Ingest,
+    /// Async mode with `--commit-log`: every applied commit is appended
+    /// here before its contributors are acknowledged.
+    log: Option<CommitLogWriter>,
     shards: ShardSet,
     /// Blocked pushers of the assembling step: `(client, reply)`.
     waiters: Vec<(u32, mpsc::Sender<Msg>)>,
@@ -364,16 +466,16 @@ impl Coordinator {
     fn epoch_view(&self, client: u32) -> Msg {
         Msg::EpochReply(EpochView {
             epoch: self.epoch,
-            next_step: self.batcher.pending_step(),
+            next_step: self.ingest.pending_step(),
             client,
-            members: self.batcher.members().to_vec(),
+            members: self.ingest.members().to_vec(),
         })
     }
 
     fn bump_epoch(&mut self) {
         self.epoch += 1;
         self.stats.epoch = self.epoch;
-        self.stats.clients = self.batcher.width() as u32;
+        self.stats.clients = self.ingest.width() as u32;
     }
 
     /// Re-serialize the post-step state (resilient mode only). Runs
@@ -385,7 +487,7 @@ impl Coordinator {
         }
         let (opt_step, _bytes, blobs) = self.shards.collect_state()?;
         self.recovery_bytes = Some(checkpoint::snapshot_to_bytes(
-            self.batcher.applied_step(),
+            self.ingest.applied_step(),
             &self.names,
             &self.params,
             self.base_lr,
@@ -398,13 +500,13 @@ impl Coordinator {
         Ok(())
     }
 
-    /// The barrier is complete: coalesce, step the shards (resiliently
-    /// if enabled), acknowledge the waiters in client-id order, refresh
-    /// the recovery image.
-    fn apply_pending_step(&mut self) -> Result<()> {
-        let applied = self.batcher.pending_step();
-        let grads = self.batcher.take_coalesced();
-        let lr = self.schedule.at(self.base_lr, applied);
+    /// Apply one coalesced gradient as optimizer step `step`
+    /// (resiliently if enabled), advance the step counter, refresh the
+    /// recovery image. Shared by the synchronous barrier path and the
+    /// async commit path — both modes step the identical sharded
+    /// machinery, which is what makes the commit log replayable.
+    fn apply_coalesced(&mut self, step: u64, grads: Vec<Tensor>) -> Result<()> {
+        let lr = self.schedule.at(self.base_lr, step);
         if self.resilient {
             let bytes = &self.recovery_bytes;
             let names = &self.names;
@@ -418,14 +520,71 @@ impl Coordinator {
         } else {
             self.shards.step(lr, &mut self.params, grads)?;
         }
-        self.stats.step = applied;
+        self.stats.step = step;
+        self.refresh_recovery_image()
+    }
+
+    /// The barrier is complete: coalesce, step the shards, acknowledge
+    /// the waiters in client-id order. Synchronous mode only.
+    fn apply_pending_step(&mut self) -> Result<()> {
+        let (applied, grads) = match &mut self.ingest {
+            Ingest::Sync(b) => (b.pending_step(), b.take_coalesced()),
+            Ingest::Async(_) => bail!("apply_pending_step is the synchronous barrier path"),
+        };
+        self.apply_coalesced(applied, grads)?;
         self.barrier_since = None;
         // Reply in client-id order, like the coalescing reduction.
         self.waiters.sort_by_key(|w| w.0);
         for (_, tx) in self.waiters.drain(..) {
             tx.send(Msg::Ack { step: applied }).ok();
         }
-        self.refresh_recovery_image()
+        Ok(())
+    }
+
+    /// Async mode: commit everything pending as one coalesced partial
+    /// batch — fixed member-id order, scale `1/n` — append it to the
+    /// commit log, and acknowledge exactly the contributors. A no-op
+    /// when nothing is pending (or in sync mode), so the coordinator
+    /// loop calls it unconditionally after draining the queue.
+    fn flush_async(&mut self) -> Result<()> {
+        let (step, commit) = match &mut self.ingest {
+            Ingest::Async(acc) => match acc.take_commit() {
+                Some(c) => (acc.applied_step(), c),
+                None => return Ok(()),
+            },
+            Ingest::Sync(_) => return Ok(()),
+        };
+        let meta: Vec<Contributor> = commit
+            .iter()
+            .map(|(c, base, _)| Contributor { client: *c, base_step: *base })
+            .collect();
+        let parts: Vec<(u32, Vec<Tensor>)> =
+            commit.into_iter().map(|(c, _, g)| (c, g)).collect();
+        let coalesced = shard::coalesce_commit(&parts)?;
+        let flat: Vec<Vec<f32>> = coalesced.iter().map(|t| t.data().to_vec()).collect();
+        self.apply_coalesced(step, coalesced)?;
+        if let Some(log) = &mut self.log {
+            log.append(step, self.epoch, &meta, &flat)
+                .context("appending to the commit log")?;
+        }
+        // Acknowledge exactly the contributors, in member-id order
+        // (meta is already sorted — take_commit sorts the batch).
+        for m in &meta {
+            let mut i = 0;
+            while i < self.waiters.len() {
+                if self.waiters[i].0 == m.client {
+                    let (_, tx) = self.waiters.remove(i);
+                    tx.send(Msg::Ack { step }).ok();
+                } else {
+                    i += 1;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn is_async(&self) -> bool {
+        matches!(self.ingest, Ingest::Async(_))
     }
 
     /// Deadline check: an assembling barrier older than the timeout
@@ -433,7 +592,12 @@ impl Coordinator {
     /// over the survivors.
     fn tick(&mut self) -> Result<()> {
         let Some(timeout) = self.client_timeout else { return Ok(()) };
-        if self.batcher.received() == 0 {
+        let Ingest::Sync(batcher) = &mut self.ingest else {
+            // Async mode has no barrier to time out: a straggler delays
+            // only its own contribution, never the fleet.
+            return Ok(());
+        };
+        if batcher.received() == 0 {
             // Nothing pending (or a leave drained the barrier) — the
             // deadline re-arms at the next first push.
             self.barrier_since = None;
@@ -443,7 +607,7 @@ impl Coordinator {
         if since.elapsed() < timeout {
             return Ok(());
         }
-        let evicted = self.batcher.evict_unpushed();
+        let evicted = batcher.evict_unpushed();
         self.stats.evictions += evicted.len() as u64;
         self.bump_epoch();
         self.apply_pending_step()
@@ -453,32 +617,76 @@ impl Coordinator {
     /// `Shutdown`.
     fn handle(&mut self, req: Request, busy: &AtomicU64) -> Result<bool> {
         match req.msg {
-            Msg::PushGrad { client, epoch, step, grads } => {
+            Msg::PushGrad { client, epoch, step, base_step, grads } => {
                 if epoch != self.epoch {
                     // The membership changed since this client last
                     // looked: a typed reply, so the client refreshes and
                     // retries instead of string-matching an error.
                     req.reply.send(Msg::StaleEpoch { epoch: self.epoch }).ok();
                 } else {
-                    match self.batcher.offer(client, step, grads) {
-                        Offer::Rejected(msg) => {
-                            req.reply.send(Msg::Err { msg }).ok();
+                    let mut complete = false;
+                    match &mut self.ingest {
+                        Ingest::Sync(batcher) => {
+                            // v3 pushes carry the step the gradient was
+                            // computed at; the barrier path demands the
+                            // previous step exactly — anything else is a
+                            // client driving the wrong mode.
+                            if step == 0 || base_step != step - 1 {
+                                req.reply
+                                    .send(Msg::Err {
+                                        msg: format!(
+                                            "synchronous push for step {step} must carry \
+                                             base_step {} (got {base_step})",
+                                            step.saturating_sub(1)
+                                        ),
+                                    })
+                                    .ok();
+                            } else {
+                                match batcher.offer(client, step, grads) {
+                                    Offer::Rejected(msg) => {
+                                        req.reply.send(Msg::Err { msg }).ok();
+                                    }
+                                    Offer::Accepted => {
+                                        self.stats.pushes += 1;
+                                        self.barrier_since.get_or_insert_with(Instant::now);
+                                        self.waiters.push((client, req.reply));
+                                    }
+                                    Offer::Completed => {
+                                        self.stats.pushes += 1;
+                                        self.waiters.push((client, req.reply));
+                                        complete = true;
+                                    }
+                                }
+                            }
                         }
-                        Offer::Accepted => {
-                            self.stats.pushes += 1;
-                            self.barrier_since.get_or_insert_with(Instant::now);
-                            self.waiters.push((client, req.reply));
+                        Ingest::Async(acc) => {
+                            // `step` is advisory here — the server, not
+                            // the client, decides which commit a push
+                            // joins; `base_step` is what the window
+                            // check runs on.
+                            match acc.offer(client, base_step, grads) {
+                                AsyncOffer::Rejected(msg) => {
+                                    req.reply.send(Msg::Err { msg }).ok();
+                                }
+                                AsyncOffer::TooStale { applied, required } => {
+                                    req.reply
+                                        .send(Msg::TooStale { applied, required })
+                                        .ok();
+                                }
+                                AsyncOffer::Accepted => {
+                                    self.stats.pushes += 1;
+                                    self.waiters.push((client, req.reply));
+                                }
+                            }
                         }
-                        Offer::Completed => {
-                            self.stats.pushes += 1;
-                            self.waiters.push((client, req.reply));
-                            self.apply_pending_step()?;
-                        }
+                    }
+                    if complete {
+                        self.apply_pending_step()?;
                     }
                 }
             }
             Msg::Join => {
-                if self.batcher.width() >= protocol::MAX_MEMBERS {
+                if self.ingest.width() >= protocol::MAX_MEMBERS {
                     req.reply
                         .send(Msg::Err {
                             msg: format!(
@@ -490,7 +698,7 @@ impl Coordinator {
                 } else {
                     let id = self.next_client_id;
                     self.next_client_id += 1;
-                    match self.batcher.join(id) {
+                    match self.ingest.join(id) {
                         Ok(()) => {
                             self.bump_epoch();
                             req.reply.send(self.epoch_view(id)).ok();
@@ -503,44 +711,60 @@ impl Coordinator {
                     }
                 }
             }
-            Msg::Leave { client } => match self.batcher.leave(client) {
-                Ok(outcome) => {
-                    self.bump_epoch();
-                    req.reply.send(self.epoch_view(client)).ok();
-                    if outcome.had_pending {
-                        // The leaver's pending push was discarded — its
-                        // blocked waiter (if the leave came from another
-                        // connection) must not see an Ack for a step its
-                        // gradient did not join.
-                        let mut i = 0;
-                        while i < self.waiters.len() {
-                            if self.waiters[i].0 == client {
-                                let (_, tx) = self.waiters.remove(i);
-                                tx.send(Msg::Err {
-                                    msg: format!("client {client} left the barrier"),
-                                })
-                                .ok();
-                            } else {
-                                i += 1;
+            Msg::Leave { client } => {
+                let outcome = match &mut self.ingest {
+                    Ingest::Sync(b) => b.leave(client).map(|o| (o.had_pending, o.completed)),
+                    // An async leave can never complete a barrier; it
+                    // only narrows the membership and discards the
+                    // leaver's pending contribution (if any).
+                    Ingest::Async(a) => a.leave(client).map(|had| (had, false)),
+                };
+                match outcome {
+                    Ok((had_pending, completed)) => {
+                        self.bump_epoch();
+                        req.reply.send(self.epoch_view(client)).ok();
+                        if had_pending {
+                            // The leaver's pending push was discarded — its
+                            // blocked waiter (if the leave came from another
+                            // connection) must not see an Ack for a step its
+                            // gradient did not join.
+                            let mut i = 0;
+                            while i < self.waiters.len() {
+                                if self.waiters[i].0 == client {
+                                    let (_, tx) = self.waiters.remove(i);
+                                    tx.send(Msg::Err {
+                                        msg: format!("client {client} left the barrier"),
+                                    })
+                                    .ok();
+                                } else {
+                                    i += 1;
+                                }
                             }
                         }
+                        if completed {
+                            self.apply_pending_step()?;
+                        }
                     }
-                    if outcome.completed {
-                        self.apply_pending_step()?;
+                    Err(msg) => {
+                        req.reply.send(Msg::Err { msg }).ok();
                     }
                 }
-                Err(msg) => {
-                    req.reply.send(Msg::Err { msg }).ok();
-                }
-            },
+            }
             Msg::EpochInfo => {
                 req.reply.send(self.epoch_view(protocol::NO_CLIENT)).ok();
             }
-            Msg::PullParams => {
-                let tensors = self.params.iter().map(|t| t.data().to_vec()).collect();
-                req.reply
-                    .send(Msg::Params { step: self.batcher.applied_step(), tensors })
-                    .ok();
+            Msg::PullParams { min_step } => {
+                // The bounded-staleness read contract, honored in both
+                // modes (a sync client always sends floor 0): a pull
+                // never hands out parameters older than the caller's
+                // declared floor.
+                let applied = self.ingest.applied_step();
+                if applied < min_step {
+                    req.reply.send(Msg::TooStale { applied, required: min_step }).ok();
+                } else {
+                    let tensors = self.params.iter().map(|t| t.data().to_vec()).collect();
+                    req.reply.send(Msg::Params { step: applied, tensors }).ok();
+                }
             }
             Msg::Snapshot { path } => {
                 // In resilient mode the per-step recovery image *is* the
@@ -555,7 +779,7 @@ impl Coordinator {
                     self.shards.collect_state().and_then(|(opt_step, _live, blobs)| {
                         checkpoint::save_snapshot(
                             Path::new(&path),
-                            self.batcher.applied_step(),
+                            self.ingest.applied_step(),
                             &self.names,
                             &self.params,
                             self.base_lr,
@@ -601,6 +825,13 @@ impl Server {
     /// `[[optimizer.group]]` policies, LR schedule, seed); `opts` the
     /// serving topology and fault-tolerance knobs.
     pub fn start(cfg: &ExperimentConfig, opts: &ServeOptions) -> Result<Server> {
+        if opts.commit_log.is_some() && opts.staleness == 0 {
+            bail!(
+                "--commit-log needs --staleness >= 1 — the synchronous barrier path is \
+                 already pinned by `repro loadgen --check`, the log exists to replay \
+                 async runs"
+            );
+        }
         let inv = resolve_inventory(&opts.model)?;
         let specs = inv.param_specs();
         let shapes = inv.shapes();
@@ -664,6 +895,38 @@ impl Server {
             })
         };
 
+        let ingest = if opts.staleness == 0 {
+            Ingest::Sync(StepBatcher::with_members(
+                (0..opts.clients as u32).collect(),
+                shapes.clone(),
+                first_step,
+            ))
+        } else {
+            Ingest::Async(AsyncAccumulator::with_members(
+                (0..opts.clients as u32).collect(),
+                shapes.clone(),
+                opts.staleness,
+                first_step,
+            ))
+        };
+        let log = match &opts.commit_log {
+            None => None,
+            Some(path) => Some(
+                CommitLogWriter::create(
+                    Path::new(path),
+                    &LogInfo {
+                        model: opts.model.clone(),
+                        optimizer: cfg.optimizer.name().to_string(),
+                        seed: cfg.seed,
+                        base_lr: cfg.optim.lr,
+                        staleness: opts.staleness,
+                        first_step,
+                    },
+                )
+                .with_context(|| format!("creating commit log {path:?}"))?,
+            ),
+        };
+
         let coordinator = {
             let shutdown = shutdown.clone();
             let busy = busy.clone();
@@ -674,14 +937,12 @@ impl Server {
                     clients: opts.clients as u32,
                     step: first_step - 1,
                     epoch: 1,
+                    staleness: opts.staleness,
                     ..ServerStats::default()
                 },
                 params,
-                batcher: StepBatcher::with_members(
-                    (0..opts.clients as u32).collect(),
-                    shapes.clone(),
-                    first_step,
-                ),
+                ingest,
+                log,
                 shards,
                 waiters: Vec::new(),
                 names,
@@ -717,6 +978,19 @@ impl Server {
                             Ok(req) => {
                                 if coord.handle(req, &busy)? {
                                     return Ok(());
+                                }
+                                // Async mode: drain everything already
+                                // queued before committing, so pushes
+                                // that arrived together coalesce into
+                                // one partial batch instead of one
+                                // commit each.
+                                if coord.is_async() {
+                                    while let Ok(req) = req_rx.try_recv() {
+                                        if coord.handle(req, &busy)? {
+                                            return Ok(());
+                                        }
+                                    }
+                                    coord.flush_async()?;
                                 }
                             }
                             Err(RecvTimeoutError::Timeout) => {}
@@ -797,7 +1071,7 @@ fn handle_conn(stream: TcpStream, req_tx: SyncSender<Request>, busy: Arc<AtomicU
         let is_request = matches!(
             frame.msg,
             Msg::PushGrad { .. }
-                | Msg::PullParams
+                | Msg::PullParams { .. }
                 | Msg::Snapshot { .. }
                 | Msg::Stats
                 | Msg::Shutdown
@@ -922,6 +1196,130 @@ pub fn reference_checkpoint_elastic(
 }
 
 // ---------------------------------------------------------------------------
+// Commit-log replay
+// ---------------------------------------------------------------------------
+
+/// What [`replay_commit_log`] did, for the CLI summary line.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    /// Workload the log was recorded against (from its header).
+    pub model: String,
+    /// Commits re-executed.
+    pub commits: u64,
+    /// Step counter after the last commit.
+    pub final_step: u64,
+    /// Size of the written snapshot.
+    pub snapshot_bytes: u64,
+}
+
+/// Re-execute a commit log through the synchronous sharded machinery
+/// and write the resulting SMMFCKPT snapshot to `out`. Because every
+/// commit records the *coalesced* gradient in member-id order, replay
+/// is deterministic even though the run it describes was asynchronous:
+/// the log is the serialization the wall clock chose, and re-applying
+/// it step by step reproduces the server's parameters and optimizer
+/// state bit-for-bit — for any `n_shards`, equal to the recording run's
+/// or not. The loader has already verified digests, step contiguity and
+/// the staleness window by the time this runs.
+pub fn replay_commit_log(
+    cfg: &ExperimentConfig,
+    log_path: &Path,
+    n_shards: usize,
+    out: &Path,
+) -> Result<ReplayReport> {
+    assert!(n_shards >= 1);
+    let log = CommitLog::load(log_path)?;
+    let h = &log.header;
+    if h.optimizer != cfg.optimizer.name() {
+        bail!(
+            "commit log {log_path:?} was recorded under optimizer {}, the config says {}",
+            h.optimizer,
+            cfg.optimizer.name()
+        );
+    }
+    if h.seed != cfg.seed {
+        bail!(
+            "commit log {log_path:?} was recorded under seed {}, the config says {}",
+            h.seed,
+            cfg.seed
+        );
+    }
+    if h.base_lr.to_bits() != cfg.optim.lr.to_bits() {
+        bail!(
+            "commit log {log_path:?} was recorded under base LR {}, the config says {}",
+            h.base_lr,
+            cfg.optim.lr
+        );
+    }
+    if h.first_step != 1 {
+        bail!(
+            "commit log {log_path:?} starts at step {} — it was recorded by a --resume'd \
+             server; replay needs a log covering the run from step 1 (fresh optimizer \
+             state has nothing to fast-forward from)",
+            h.first_step
+        );
+    }
+    let inv = resolve_inventory(&h.model)?;
+    let specs = inv.param_specs();
+    let shapes = inv.shapes();
+    let names: Vec<String> = inv.tensors.iter().map(|t| t.name.clone()).collect();
+    let res = group::resolve(&specs, &cfg.grouped());
+    let config_section = ConfigSection::from_config(&cfg.optim, &res);
+    let shards = ShardSet::spawn(cfg.optimizer, &shapes, &cfg.optim, &res.tensor, n_shards);
+    let mut params: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+    let mut final_step = h.first_step - 1;
+    for c in &log.commits {
+        if c.grads.len() != shapes.len() {
+            bail!(
+                "commit {}: the log holds {} tensors, inventory {} has {}",
+                c.step,
+                c.grads.len(),
+                h.model,
+                shapes.len()
+            );
+        }
+        let mut grads = Vec::with_capacity(shapes.len());
+        for (i, (g, shape)) in c.grads.iter().zip(&shapes).enumerate() {
+            let numel: usize = shape.iter().product();
+            if g.len() != numel {
+                bail!(
+                    "commit {} tensor {i}: the log holds {} elements, shape {shape:?} \
+                     needs {numel}",
+                    c.step,
+                    g.len()
+                );
+            }
+            grads.push(Tensor::from_vec(shape, g.clone()));
+        }
+        let lr = cfg.schedule.at(cfg.optim.lr, c.step);
+        shards
+            .step(lr, &mut params, grads)
+            .with_context(|| format!("replaying commit {}", c.step))?;
+        final_step = c.step;
+    }
+    let (opt_step, _live, blobs) = shards.collect_state()?;
+    let snapshot_bytes = checkpoint::save_snapshot(
+        out,
+        final_step,
+        &names,
+        &params,
+        cfg.optim.lr,
+        &cfg.schedule,
+        cfg.optimizer,
+        opt_step,
+        blobs,
+        &config_section,
+    )?;
+    shards.stop();
+    Ok(ReplayReport {
+        model: h.model.clone(),
+        commits: log.commits.len() as u64,
+        final_step,
+        snapshot_bytes,
+    })
+}
+
+// ---------------------------------------------------------------------------
 // Load generator
 // ---------------------------------------------------------------------------
 
@@ -968,7 +1366,12 @@ pub struct LoadgenReport {
     /// Clients that exited early because the server evicted them.
     pub evicted: u64,
     pub elapsed_s: f64,
-    /// Optimizer steps per second.
+    /// The server's staleness window (0 = synchronous barrier).
+    pub staleness: u64,
+    /// Optimizer steps per second. Sync: `steps / elapsed` (the barrier
+    /// applies exactly `steps` of them). Async: the server-side step
+    /// delta over `elapsed` — commit throughput, the number async mode
+    /// exists to improve under stragglers.
     pub steps_per_s: f64,
     pub push_p50_ms: f64,
     pub push_p99_ms: f64,
@@ -1049,7 +1452,7 @@ fn drive_client(
         }
         let t = Instant::now();
         loop {
-            match client.push_grad(c as u32, epoch, step, grads.clone())? {
+            match client.push_grad(c as u32, epoch, step, step - 1, grads.clone())? {
                 PushOutcome::Applied(applied) => {
                     run.latencies_ms.push(t.elapsed().as_secs_f64() * 1e3);
                     run.applied += 1;
@@ -1062,9 +1465,100 @@ fn drive_client(
                 // was evicted): adopt the current epoch, retry the same
                 // step — our pending slot is untouched.
                 PushOutcome::Stale(current) => epoch = current,
+                PushOutcome::TooStale { applied, required } => bail!(
+                    "client {c}: a synchronous push was answered TooStale \
+                     ({applied} < {required}) — is the server in async mode?"
+                ),
                 PushOutcome::Rejected(msg) if msg.contains("not a member") => {
                     run.evicted = true;
                     break 'steps;
+                }
+                PushOutcome::Rejected(msg) => bail!("client {c}: push rejected: {msg}"),
+            }
+        }
+    }
+    run.busy_retries = client.busy_retries;
+    Ok(run)
+}
+
+/// The async counterpart of [`drive_client`]: pull with a staleness
+/// floor derived from the last acknowledged commit, compute a gradient
+/// against whatever the server handed out, push it tagged with that
+/// base step. A `TooStale` answer (the window moved on while this
+/// client was thinking — stragglers earn these) re-pulls fresher
+/// parameters and recomputes instead of retrying the stale gradient.
+/// `opts.steps` counts *applied contributions* per client, so a run's
+/// total work matches the sync mode's `clients × steps` pushes.
+fn drive_client_async(
+    addr: &str,
+    shapes: &[Vec<usize>],
+    seed: u64,
+    opts: &LoadgenOptions,
+    c: usize,
+    staleness: u64,
+) -> Result<ClientRun> {
+    let mut client = Client::connect(addr)?;
+    let mut src = GradSource::new(shapes, seed, c as u32);
+    if opts.start_step > 1 {
+        src.skip_steps(opts.start_step - 1);
+    }
+    let mut epoch = client.epoch_info()?.epoch;
+    let faulty = c + 1 == opts.clients;
+    let slow_ms = if faulty { opts.slow_client_ms } else { 0.0 };
+    let mut think = Pcg32::with_stream(seed ^ 0x51de_c43e, 0x51de + c as u64);
+    let mut run = ClientRun {
+        latencies_ms: Vec::with_capacity(opts.steps as usize),
+        applied: 0,
+        busy_retries: 0,
+        final_loss: f32::NAN,
+        evicted: false,
+    };
+    // The commit our last contribution landed in. Pulling with floor
+    // `last_acked - staleness` pins the bounded-staleness read contract
+    // from the client side: the server must never hand out parameters
+    // further behind our own acknowledged progress than the window.
+    let mut last_acked: u64 = 0;
+    'pushes: while run.applied < opts.steps {
+        let min_step = last_acked.saturating_sub(staleness);
+        let (at, params) = match client.pull_params_at_least(min_step)? {
+            PullReply::Params { step, tensors } => (step, tensors),
+            PullReply::TooStale { applied, required } => bail!(
+                "client {c}: pull floor {required} answered TooStale at step {applied} — \
+                 did the server move backwards?"
+            ),
+        };
+        if at < min_step {
+            bail!(
+                "client {c}: staleness window violated — the server handed out step {at} \
+                 under a floor of {min_step}"
+            );
+        }
+        let (loss, grads) = src.grads(&params)?;
+        run.final_loss = loss;
+        if slow_ms > 0.0 {
+            // Exponential think time with p95 = slow_ms, same
+            // distribution as the sync straggler fault.
+            let u = (think.uniform() as f64).min(0.999_999);
+            let ms = -(slow_ms / 3.0) * (1.0 - u).ln();
+            thread::sleep(Duration::from_secs_f64(ms / 1e3));
+        }
+        let t = Instant::now();
+        loop {
+            match client.push_grad(c as u32, epoch, at + 1, at, grads.clone())? {
+                PushOutcome::Applied(step) => {
+                    run.latencies_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                    run.applied += 1;
+                    last_acked = step;
+                    break;
+                }
+                // Our base fell out of the window while we computed:
+                // the gradient is unusably old, start the iteration
+                // over with fresh parameters.
+                PushOutcome::TooStale { .. } => continue 'pushes,
+                PushOutcome::Stale(current) => epoch = current,
+                PushOutcome::Rejected(msg) if msg.contains("not a member") => {
+                    run.evicted = true;
+                    break 'pushes;
                 }
                 PushOutcome::Rejected(msg) => bail!("client {c}: push rejected: {msg}"),
             }
@@ -1085,23 +1579,49 @@ pub fn run_loadgen(
 ) -> Result<LoadgenReport> {
     assert!(opts.clients >= 1 && opts.steps >= 1 && opts.start_step >= 1);
     check_wire_capacity("workload", shapes)?;
-    // A client count that disagrees with the server's barrier width
-    // would deadlock the first push (the barrier never completes) —
-    // probe the server's Stats once and fail loudly instead.
+    // Probe the server's Stats once to learn its mode and width, and
+    // fail loudly on a driver/server mismatch instead of wedging:
+    // * sync — a client count that disagrees with the barrier width
+    //   would deadlock the first push (the barrier never completes);
+    // * async — extra drivers are not members and every one of their
+    //   pushes would bounce, so over-subscription is the same config
+    //   error (fewer drivers than members is fine: nobody waits on an
+    //   absent member in async mode).
     let server = Client::connect(addr)?.stats()?;
-    if server.clients as usize != opts.clients {
+    let staleness = server.staleness;
+    if staleness == 0 {
+        if server.clients as usize != opts.clients {
+            bail!(
+                "loadgen drives {} client(s) but the server's step barrier is {} wide — \
+                 pass --clients {} (or restart the server)",
+                opts.clients,
+                server.clients,
+                server.clients
+            );
+        }
+    } else if opts.clients > server.clients as usize {
         bail!(
-            "loadgen drives {} client(s) but the server's step barrier is {} wide — \
-             pass --clients {} (or restart the server)",
+            "loadgen drives {} client(s) but the async server's member table holds {} — \
+             a non-member push is rejected; pass --clients {} or fewer \
+             (or restart the server wider)",
             opts.clients,
             server.clients,
             server.clients
         );
     }
+    let steps_before = server.step;
     let t0 = Instant::now();
     let results: Vec<Result<ClientRun>> = thread::scope(|s| {
         let handles: Vec<_> = (0..opts.clients)
-            .map(|c| s.spawn(move || drive_client(addr, shapes, seed, opts, c)))
+            .map(|c| {
+                s.spawn(move || {
+                    if staleness == 0 {
+                        drive_client(addr, shapes, seed, opts, c)
+                    } else {
+                        drive_client_async(addr, shapes, seed, opts, c, staleness)
+                    }
+                })
+            })
             .collect();
         handles
             .into_iter()
@@ -1127,6 +1647,14 @@ pub fn run_loadgen(
     }
     all_ms.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
     let mean = all_ms.iter().sum::<f64>() / all_ms.len().max(1) as f64;
+    let steps_per_s = if staleness == 0 {
+        opts.steps as f64 / elapsed_s.max(1e-12)
+    } else {
+        // Commit throughput: the server decides how pushes batch into
+        // steps, so count what it actually applied.
+        let after = Client::connect(addr)?.stats()?.step;
+        after.saturating_sub(steps_before) as f64 / elapsed_s.max(1e-12)
+    };
     Ok(LoadgenReport {
         clients: opts.clients,
         steps: opts.steps,
@@ -1134,7 +1662,8 @@ pub fn run_loadgen(
         busy_retries,
         evicted,
         elapsed_s,
-        steps_per_s: opts.steps as f64 / elapsed_s.max(1e-12),
+        staleness,
+        steps_per_s,
         push_p50_ms: percentile(&all_ms, 0.50),
         push_p99_ms: percentile(&all_ms, 0.99),
         push_mean_ms: mean,
@@ -1186,6 +1715,28 @@ mod tests {
         let e = ServeOptions::default().apply_args(&args).unwrap_err();
         assert!(format!("{e:#}").contains(">= 1"), "{e:#}");
         let args = Args::parse(["--client-timeout-ms", "-1"].iter().map(|s| s.to_string()));
+        let e = ServeOptions::default().apply_args(&args).unwrap_err();
+        assert!(format!("{e:#}").contains("non-negative"), "{e:#}");
+    }
+
+    #[test]
+    fn serve_options_parse_staleness_and_commit_log() {
+        let doc =
+            TomlDoc::parse("[server]\nstaleness = 4\ncommit_log = \"log.bin\"").unwrap();
+        let mut o = ServeOptions::default();
+        o.apply_toml(&doc).unwrap();
+        assert_eq!(o.staleness, 4);
+        assert_eq!(o.commit_log.as_deref(), Some("log.bin"));
+        let doc = TomlDoc::parse("[server]\nstaleness = -1").unwrap();
+        let e = ServeOptions::default().apply_toml(&doc).unwrap_err();
+        assert!(format!("{e:#}").contains(">= 0"), "{e:#}");
+        let args = Args::parse(
+            ["--staleness", "2", "--commit-log", "x.bin"].iter().map(|s| s.to_string()),
+        );
+        let mut o = ServeOptions::default();
+        o.apply_args(&args).unwrap();
+        assert_eq!((o.staleness, o.commit_log.as_deref()), (2, Some("x.bin")));
+        let args = Args::parse(["--staleness", "-3"].iter().map(|s| s.to_string()));
         let e = ServeOptions::default().apply_args(&args).unwrap_err();
         assert!(format!("{e:#}").contains("non-negative"), "{e:#}");
     }

@@ -81,6 +81,41 @@ pub fn plan_shards(
     ShardPlan { n_shards, assign, locals }
 }
 
+/// Coalesce one async commit's contributions into a single
+/// partial-batch gradient: `Σ_c g_c / n`, accumulated **in ascending
+/// member-id order** (the caller passes the commit pre-sorted; this
+/// verifies it). Fixing the reduction order — exactly as
+/// `StepBatcher::take_coalesced` does at the barrier — makes the
+/// committed bits depend only on *which* members contributed, never on
+/// arrival timing, which is what lets `repro replay` re-execute a
+/// commit log bit-identically through [`ShardSet::step`].
+pub fn coalesce_commit(contributors: &[(u32, Vec<Tensor>)]) -> Result<Vec<Tensor>> {
+    let Some((_, first)) = contributors.first() else {
+        bail!("a commit needs at least one contributor");
+    };
+    if !contributors.windows(2).all(|w| w[0].0 < w[1].0) {
+        bail!("commit contributors must be distinct and sorted by ascending member id");
+    }
+    let scale = 1.0 / contributors.len() as f32;
+    let mut out: Vec<Tensor> = first.iter().map(|t| Tensor::zeros(t.shape())).collect();
+    for (c, grads) in contributors {
+        if grads.len() != out.len() {
+            bail!("contributor {c} holds {} tensors, the commit has {}", grads.len(), out.len());
+        }
+        for (i, (acc, g)) in out.iter_mut().zip(grads).enumerate() {
+            if acc.shape() != g.shape() {
+                bail!(
+                    "contributor {c} tensor {i}: shape {:?} vs the commit's {:?}",
+                    g.shape(),
+                    acc.shape()
+                );
+            }
+            acc.axpy(scale, g);
+        }
+    }
+    Ok(out)
+}
+
 enum Cmd {
     /// Apply one optimizer step over the shard's tensors (ownership of
     /// the subsets moves in; the updated params move back).
@@ -567,6 +602,46 @@ mod tests {
                 shards.stop();
             }
         }
+    }
+
+    #[test]
+    fn coalesce_commit_matches_the_barrier_reduction_and_rejects_disorder() {
+        let shapes = vec![vec![2, 2], vec![3]];
+        let grads_for = |c: u32| -> Vec<Tensor> {
+            let b = c as f32;
+            vec![
+                Tensor::from_vec(&shapes[0], vec![b, b + 0.5, -b, 1.0]),
+                Tensor::from_vec(&shapes[1], vec![0.25 * b, -1.0, b]),
+            ]
+        };
+        // Reference: the StepBatcher reduction over the same member set.
+        let members = [1u32, 4, 7];
+        let scale = 1.0 / members.len() as f32;
+        let mut want: Vec<Tensor> = shapes.iter().map(|s| Tensor::zeros(s)).collect();
+        for &c in &members {
+            for (w, g) in want.iter_mut().zip(grads_for(c)) {
+                w.axpy(scale, &g);
+            }
+        }
+        let commit: Vec<(u32, Vec<Tensor>)> =
+            members.iter().map(|&c| (c, grads_for(c))).collect();
+        assert_eq!(coalesce_commit(&commit).unwrap(), want);
+
+        // empty commit
+        assert!(coalesce_commit(&[]).is_err());
+        // out-of-order / duplicate member ids
+        let disordered = vec![(4u32, grads_for(4)), (1, grads_for(1))];
+        assert!(coalesce_commit(&disordered).is_err());
+        let duped = vec![(4u32, grads_for(4)), (4, grads_for(4))];
+        assert!(coalesce_commit(&duped).is_err());
+        // tensor count / shape drift between contributors
+        let short = vec![(1u32, grads_for(1)), (4, grads_for(4)[..1].to_vec())];
+        assert!(coalesce_commit(&short).is_err());
+        let reshaped = vec![
+            (1u32, grads_for(1)),
+            (4, vec![Tensor::zeros(&[4, 1]), Tensor::zeros(&[3])]),
+        ];
+        assert!(coalesce_commit(&reshaped).is_err());
     }
 
     fn random_tensors(shapes: &[Vec<usize>], rng: &mut Pcg32, sigma: f32) -> Vec<Tensor> {

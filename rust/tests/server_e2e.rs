@@ -172,15 +172,37 @@ fn server_rejects_bad_requests_and_keeps_serving() {
     let mut c = Client::connect(&addr).unwrap();
 
     // unknown client id
-    let reply = c.call(Msg::PushGrad { client: 9, epoch: 1, step: 1, grads: vec![] }).unwrap();
+    let reply = c
+        .call(Msg::PushGrad { client: 9, epoch: 1, step: 1, base_step: 0, grads: vec![] })
+        .unwrap();
     assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
     // wrong step
-    let reply = c.call(Msg::PushGrad { client: 0, epoch: 1, step: 5, grads: vec![] }).unwrap();
+    let reply = c
+        .call(Msg::PushGrad { client: 0, epoch: 1, step: 5, base_step: 4, grads: vec![] })
+        .unwrap();
     assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
+    // a base_step that is not step - 1 on the synchronous path
+    let reply = c
+        .call(Msg::PushGrad { client: 0, epoch: 1, step: 1, base_step: 7, grads: vec![] })
+        .unwrap();
+    match reply {
+        Msg::Err { ref msg } => assert!(msg.contains("base_step"), "{msg}"),
+        other => panic!("expected Err, got {}", other.name()),
+    }
     // wrong tensor count (right client, right step)
-    let reply =
-        c.call(Msg::PushGrad { client: 0, epoch: 1, step: 1, grads: vec![vec![1.0]] }).unwrap();
+    let reply = c
+        .call(Msg::PushGrad {
+            client: 0,
+            epoch: 1,
+            step: 1,
+            base_step: 0,
+            grads: vec![vec![1.0]],
+        })
+        .unwrap();
     assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
+    // a pull floor the server cannot honor gets the typed TooStale reply
+    let reply = c.call(Msg::PullParams { min_step: 50 }).unwrap();
+    assert_eq!(reply, Msg::TooStale { applied: 0, required: 50 });
     // a reply op sent as a request is rejected by the handler
     let reply = c.call(Msg::Ack { step: 1 }).unwrap();
     assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
@@ -226,9 +248,11 @@ fn stale_epoch_pushes_get_a_typed_reply() {
     assert_eq!((view.epoch, view.next_step, view.client), (1, 1, NO_CLIENT));
     assert_eq!(view.members, vec![0, 1]);
 
-    let reply = c.call(Msg::PushGrad { client: 0, epoch: 7, step: 1, grads: vec![] }).unwrap();
+    let reply = c
+        .call(Msg::PushGrad { client: 0, epoch: 7, step: 1, base_step: 0, grads: vec![] })
+        .unwrap();
     assert_eq!(reply, Msg::StaleEpoch { epoch: 1 });
-    let out = c.push_grad(0, 99, 1, vec![]).unwrap();
+    let out = c.push_grad(0, 99, 1, 0, vec![]).unwrap();
     assert_eq!(out, PushOutcome::Stale(1));
 
     c.shutdown().unwrap();
@@ -431,4 +455,50 @@ fn resume_on_a_different_shard_count_continues_bit_identically() {
     for p in [&mid, &fin, &refp] {
         std::fs::remove_file(p).ok();
     }
+}
+
+/// Regression pin for the async refactor (satellite of the
+/// bounded-staleness PR): a server started with an *explicit*
+/// `staleness: 0` takes the same synchronous-barrier code path as the
+/// default, and both stay bit-identical to the single-process
+/// reference. If the `Ingest` dispatch ever perturbs sync-mode bits,
+/// this fails before any async test runs.
+#[test]
+fn staleness_zero_is_bit_identical_to_the_barrier_path() {
+    let steps = 8u64;
+    let cfg = test_config(OptKind::Smmf);
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    let refp = tmp("szero_ref");
+    let mut files = Vec::new();
+
+    for (tag, explicit) in [("default", false), ("explicit", true)] {
+        let snap = tmp(&format!("szero_{tag}"));
+        let mut opts = serve_opts(2, 2);
+        if explicit {
+            opts.staleness = 0;
+        }
+        let server = Server::start(&cfg, &opts).unwrap();
+        let addr = server.addr.to_string();
+        run_loadgen(
+            &addr,
+            &shapes,
+            cfg.seed,
+            &LoadgenOptions { clients: 2, steps, ..LoadgenOptions::default() },
+        )
+        .unwrap();
+        let mut ctl = Client::connect(&addr).unwrap();
+        let stats = ctl.stats().unwrap();
+        assert_eq!(stats.staleness, 0, "{tag}: sync server advertises staleness 0");
+        ctl.snapshot(snap.to_str().unwrap()).unwrap();
+        ctl.shutdown().unwrap();
+        server.wait().unwrap();
+        files.push(std::fs::read(&snap).unwrap());
+        std::fs::remove_file(&snap).ok();
+    }
+    assert!(files[0] == files[1], "explicit staleness=0 changed the snapshot bits");
+
+    reference_checkpoint(&cfg, "synthetic:tiny_lm", 2, steps, &refp).unwrap();
+    let want = std::fs::read(&refp).unwrap();
+    assert!(files[0] == want, "staleness=0 snapshot differs from the reference");
+    std::fs::remove_file(&refp).ok();
 }

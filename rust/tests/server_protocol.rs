@@ -6,8 +6,8 @@
 //! bytes produce context-rich errors — never a panic or an OOM.
 
 use smmf_repro::server::protocol::{
-    self, decode, encode, read_frame, write_frame, EpochView, Frame, Msg, ServerStats,
-    HEADER_LEN, MAX_PAYLOAD, OP_PUSH_GRAD,
+    self, decode, encode, read_frame, write_frame, Contributor, EpochView, Frame, Msg,
+    ServerStats, HEADER_LEN, MAX_PAYLOAD, OP_PUSH_GRAD,
 };
 use smmf_repro::util::prop;
 
@@ -17,9 +17,11 @@ fn all_ops() -> Vec<Msg> {
             client: 3,
             epoch: 2,
             step: 41,
+            base_step: 38,
             grads: vec![vec![1.0, -2.5, 0.0], vec![], vec![f32::MIN, f32::MAX]],
         },
-        Msg::PullParams,
+        Msg::PullParams { min_step: 0 },
+        Msg::PullParams { min_step: 37 },
         Msg::Snapshot { path: "runs/server/snapshot.bin".into() },
         Msg::Stats,
         Msg::Shutdown,
@@ -40,6 +42,7 @@ fn all_ops() -> Vec<Msg> {
             evictions: 1,
             respawns: 2,
             recovery_ms: 48,
+            staleness: 4,
         }),
         Msg::EpochReply(EpochView {
             epoch: 4,
@@ -49,9 +52,28 @@ fn all_ops() -> Vec<Msg> {
         }),
         Msg::EpochReply(EpochView { epoch: 1, next_step: 1, client: 0, members: vec![0] }),
         Msg::StaleEpoch { epoch: 6 },
+        Msg::TooStale { applied: 12, required: 9 },
         Msg::Busy,
         Msg::Bye,
         Msg::Err { msg: "client 9 already pushed for step 3".into() },
+        Msg::LogHeader {
+            model: "synthetic:tiny_lm".into(),
+            optimizer: "smmf".into(),
+            seed: 42,
+            base_lr: 1e-3,
+            staleness: 3,
+            first_step: 1,
+        },
+        Msg::LogCommit {
+            step: 5,
+            epoch: 2,
+            contributors: vec![
+                Contributor { client: 0, base_step: 4 },
+                Contributor { client: 2, base_step: 2 },
+            ],
+            digest: 0xdead_beef_cafe_f00d,
+            grads: vec![vec![0.5, -0.25], vec![]],
+        },
     ]
 }
 
@@ -103,7 +125,7 @@ fn every_strict_prefix_of_every_op_errors() {
 
 #[test]
 fn bad_magic_version_and_op_are_rejected() {
-    let good = encode(&Frame { request_id: 1, msg: Msg::PullParams });
+    let good = encode(&Frame { request_id: 1, msg: Msg::PullParams { min_step: 0 } });
 
     // flip each magic byte
     for i in 0..8 {
@@ -153,6 +175,7 @@ fn fabricated_tensor_count_is_caught_by_the_remaining_bytes_check() {
     p.u32(0); // client
     p.u64(1); // epoch
     p.u64(1); // step
+    p.u64(0); // base_step
     p.u32(1); // one tensor…
     p.u64(1 << 40); // …claiming 2^40 elements
     let payload = p.finish();
@@ -172,6 +195,7 @@ fn fabricated_tensor_count_is_caught_by_the_remaining_bytes_check() {
     p.u32(0);
     p.u64(1);
     p.u64(1);
+    p.u64(0);
     p.u32(u32::MAX);
     let payload = p.finish();
     let mut w = BlobWriter::new();
@@ -242,8 +266,10 @@ fn grads_payload_bytes_matches_the_encoder() {
     let shapes = vec![vec![3, 2], vec![7], vec![1]];
     let grads: Vec<Vec<f32>> =
         shapes.iter().map(|s| vec![0.5; s.iter().product()]).collect();
-    let frame =
-        Frame { request_id: 1, msg: Msg::PushGrad { client: 0, epoch: 1, step: 1, grads } };
+    let frame = Frame {
+        request_id: 1,
+        msg: Msg::PushGrad { client: 0, epoch: 1, step: 1, base_step: 0, grads },
+    };
     let expect = protocol::grads_payload_bytes(&shapes);
     assert_eq!(encode(&frame).len() as u64, HEADER_LEN as u64 + expect);
 }
@@ -267,6 +293,35 @@ fn fabricated_member_count_is_caught_before_allocation() {
         w.u32(protocol::VERSION);
         w.u64(9);
         w.u8(protocol::OP_EPOCH_REPLY);
+        w.u64(payload.len() as u64);
+        w.bytes(&payload);
+        w.finish()
+    };
+    let e = decode(&build(protocol::MAX_MEMBERS as u32 + 1)).unwrap_err();
+    assert!(format!("{e:#}").contains("cap"), "{e:#}");
+    let e = decode(&build(16)).unwrap_err();
+    assert!(format!("{e:#}").contains("remain"), "{e:#}");
+}
+
+/// Hand-build a LogCommit frame whose contributor list claims more
+/// entries than [`protocol::MAX_MEMBERS`] (cap check) or than the
+/// payload holds (remaining-bytes check): both must fire before the
+/// contributor buffer is allocated — the commit-log loader feeds
+/// attacker-controlled files through this exact decoder.
+#[test]
+fn fabricated_commit_contributor_count_is_caught_before_allocation() {
+    use smmf_repro::optim::blob::BlobWriter;
+    let build = |n: u32| {
+        let mut p = BlobWriter::new();
+        p.u64(5); // step
+        p.u64(2); // epoch
+        p.u32(n); // contributor count… but no contributor bytes follow
+        let payload = p.finish();
+        let mut w = BlobWriter::new();
+        w.bytes(protocol::MAGIC);
+        w.u32(protocol::VERSION);
+        w.u64(9);
+        w.u8(protocol::OP_LOG_COMMIT);
         w.u64(payload.len() as u64);
         w.bytes(&payload);
         w.finish()

@@ -1,0 +1,220 @@
+//! Replay/chaos suite for the bounded-staleness async mode: an async
+//! run with an injected straggler is recorded to the commit log and
+//! `replay_commit_log` re-executes it — on a *different* shard count —
+//! to a byte-identical snapshot, at shards {1,2} × clients {2,4}. Plus
+//! the staleness-window property test (typed `TooStale` on both the
+//! push and pull sides) and the async member-table width check.
+//!
+//! Everything runs over real loopback TCP against the `tiny_lm`
+//! inventory — no AOT artifacts, no PJRT.
+
+use std::path::PathBuf;
+
+use smmf_repro::coordinator::ExperimentConfig;
+use smmf_repro::models::inventory_by_name;
+use smmf_repro::optim::OptKind;
+use smmf_repro::server::{
+    replay_commit_log, run_loadgen, Client, CommitLog, LoadgenOptions, PullReply, PushOutcome,
+    ServeOptions, Server,
+};
+
+fn tmp(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("smmf_replay_{tag}_{}.bin", std::process::id()))
+}
+
+fn test_config(kind: OptKind) -> ExperimentConfig {
+    let mut cfg = ExperimentConfig::default();
+    cfg.optimizer = kind;
+    cfg.optim = smmf_repro::optim::OptimConfig::paper_defaults(kind);
+    cfg.optim.lr = 0.05;
+    cfg.seed = 3;
+    cfg
+}
+
+fn async_opts(shards: usize, clients: usize, staleness: u64, log: &PathBuf) -> ServeOptions {
+    ServeOptions {
+        addr: "127.0.0.1:0".into(),
+        model: "synthetic:tiny_lm".into(),
+        shards,
+        clients,
+        max_pending: 64,
+        staleness,
+        commit_log: Some(log.to_str().unwrap().into()),
+        ..ServeOptions::default()
+    }
+}
+
+fn zero_grads(shapes: &[Vec<usize>]) -> Vec<Vec<f32>> {
+    shapes.iter().map(|s| vec![0.0f32; s.iter().product()]).collect()
+}
+
+/// The acceptance matrix: an async run with a straggler client logs
+/// every commit, and replaying the log through the synchronous sharded
+/// machinery — on the *other* shard count — reproduces the server's
+/// snapshot byte for byte.
+#[test]
+fn async_straggler_log_replays_bit_identically_across_shards() {
+    let steps = 10u64;
+    let staleness = 3u64;
+    let cfg = test_config(OptKind::Smmf);
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    for shards in [1usize, 2] {
+        for clients in [2usize, 4] {
+            let tag = format!("{shards}s_{clients}c");
+            let log = tmp(&format!("{tag}_log"));
+            let snap = tmp(&format!("{tag}_snap"));
+            let replayed = tmp(&format!("{tag}_replay"));
+
+            let server =
+                Server::start(&cfg, &async_opts(shards, clients, staleness, &log)).unwrap();
+            let addr = server.addr.to_string();
+            run_loadgen(
+                &addr,
+                &shapes,
+                cfg.seed,
+                &LoadgenOptions {
+                    clients,
+                    steps,
+                    slow_client_ms: 15.0,
+                    ..LoadgenOptions::default()
+                },
+            )
+            .unwrap();
+            let mut ctl = Client::connect(&addr).unwrap();
+            let stats = ctl.stats().unwrap();
+            ctl.snapshot(snap.to_str().unwrap()).unwrap();
+            ctl.shutdown().unwrap();
+            server.wait().unwrap();
+
+            assert_eq!(stats.staleness, staleness, "{tag}");
+            assert!(stats.step >= steps, "{tag}: {} commits for {steps} pushes", stats.step);
+
+            // The log's own invariants: one record per applied step,
+            // every contributor inside the advertised window.
+            let recorded = CommitLog::load(&log).unwrap();
+            assert_eq!(recorded.header.staleness, staleness, "{tag}");
+            assert_eq!(recorded.commits.len() as u64, stats.step, "{tag}");
+            assert!(
+                recorded.max_lag() <= staleness,
+                "{tag}: observed lag {} exceeds the window {staleness}",
+                recorded.max_lag()
+            );
+
+            // Replay on the *other* shard count: commit bits must not
+            // depend on the partitioning.
+            let report =
+                replay_commit_log(&cfg, &log, 3 - shards, &replayed).unwrap();
+            assert_eq!(report.commits, stats.step, "{tag}");
+            assert_eq!(report.final_step, stats.step, "{tag}");
+
+            let got = std::fs::read(&replayed).unwrap();
+            let want = std::fs::read(&snap).unwrap();
+            assert_eq!(got.len() as u64, report.snapshot_bytes, "{tag}");
+            assert!(got == want, "{tag}: replayed snapshot differs from the server's");
+
+            for p in [&log, &snap, &replayed] {
+                std::fs::remove_file(p).ok();
+            }
+        }
+    }
+}
+
+/// The staleness window as a property: with window S, a push based on
+/// parameters older than `applied - S` gets the typed `TooStale` reply
+/// (checked *before* payload validation), a pull floor above the
+/// applied step gets the pull-side `TooStale`, a reachable floor is
+/// honored, and a base step from the future is rejected outright.
+#[test]
+fn staleness_window_bounds_push_and_pull() {
+    let staleness = 2u64;
+    let cfg = test_config(OptKind::Smmf);
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    let log = tmp("window_log");
+
+    let server = Server::start(&cfg, &async_opts(1, 2, staleness, &log)).unwrap();
+    let addr = server.addr.to_string();
+
+    // Client 0 sprints ahead: four committed pushes, each based on the
+    // step the previous one produced.
+    let mut fast = Client::connect(&addr).unwrap();
+    let mut base = 0u64;
+    for _ in 0..4 {
+        match fast.push_grad(0, 1, base + 1, base, zero_grads(&shapes)).unwrap() {
+            PushOutcome::Applied(step) => base = step,
+            other => panic!("fast client push answered {other:?}"),
+        }
+    }
+    assert_eq!(base, 4, "four commits applied");
+
+    // Client 1 never pulled: base_step 0 is below required = 4 - S = 2.
+    // Empty grads prove the window check runs before shape validation.
+    let mut lag = Client::connect(&addr).unwrap();
+    let out = lag.push_grad(1, 1, 1, 0, vec![]).unwrap();
+    assert_eq!(out, PushOutcome::TooStale { applied: 4, required: 2 });
+
+    // Pull side: an unreachable floor is refused with the same shape...
+    let reply = lag.pull_params_at_least(99).unwrap();
+    assert_eq!(reply, PullReply::TooStale { applied: 4, required: 99 });
+    // ...and a reachable one hands back the applied step.
+    match lag.pull_params_at_least(3).unwrap() {
+        PullReply::Params { step, tensors } => {
+            assert_eq!(step, 4);
+            assert_eq!(tensors.len(), shapes.len());
+        }
+        other => panic!("reachable pull floor answered {other:?}"),
+    }
+
+    // A base step the server has not produced yet is nonsense, not
+    // merely stale: rejected outright.
+    match lag.push_grad(1, 1, 10, 9, zero_grads(&shapes)).unwrap() {
+        PushOutcome::Rejected(_) => {}
+        other => panic!("future base_step answered {other:?}"),
+    }
+
+    // A lagging-but-in-window push lands: base 3 with applied = 4.
+    match lag.push_grad(1, 1, 5, 3, zero_grads(&shapes)).unwrap() {
+        PushOutcome::Applied(step) => assert_eq!(step, 5),
+        other => panic!("in-window push answered {other:?}"),
+    }
+
+    Client::connect(&addr).unwrap().shutdown().unwrap();
+    server.wait().unwrap();
+    std::fs::remove_file(&log).ok();
+}
+
+/// Async mode relaxes the loadgen width check from "exactly the
+/// barrier" to "at most the member table": driving fewer clients than
+/// members works (no barrier to starve), driving more fails fast with
+/// a clear message instead of a hail of non-member rejections.
+#[test]
+fn async_loadgen_width_is_bounded_by_the_member_table() {
+    let cfg = test_config(OptKind::Smmf);
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    let log = tmp("width_log");
+
+    let server = Server::start(&cfg, &async_opts(1, 2, 1, &log)).unwrap();
+    let addr = server.addr.to_string();
+
+    let err = run_loadgen(
+        &addr,
+        &shapes,
+        cfg.seed,
+        &LoadgenOptions { clients: 4, steps: 2, ..LoadgenOptions::default() },
+    )
+    .unwrap_err();
+    assert!(err.to_string().contains("member"), "{err:#}");
+
+    run_loadgen(
+        &addr,
+        &shapes,
+        cfg.seed,
+        &LoadgenOptions { clients: 1, steps: 3, ..LoadgenOptions::default() },
+    )
+    .unwrap();
+    let stats = Client::connect(&addr).unwrap().stats().unwrap();
+    assert!(stats.step >= 3, "{}", stats.step);
+
+    Client::connect(&addr).unwrap().shutdown().unwrap();
+    server.wait().unwrap();
+    std::fs::remove_file(&log).ok();
+}

@@ -35,6 +35,9 @@ cargo test --release --test server_protocol
 echo "== server e2e (K-shard x N-client snapshot bit-identity) =="
 cargo test --release --test server_e2e
 
+echo "== server replay (async commit-log replay + staleness window) =="
+cargo test --release --test server_replay
+
 echo "== CLI help drift guard =="
 cargo test --release --test cli_help
 
@@ -82,6 +85,22 @@ cargo run --release -- loadgen --model synthetic:tiny_lm \
   --clients 3 --shards 2 --steps 12 \
   --slow-client 40 --client-timeout-ms 2000 \
   --bench-json "${SMMF_SERVER_BENCH_JSON:-../BENCH_server.json}"
+
+# Async smoke: bounded-staleness ingestion (window 4) with a straggler
+# client. The run records every applied partial batch to the commit
+# log; `repro replay` then re-executes the log through the synchronous
+# sharded machinery and the replayed snapshot must match the async
+# server's byte for byte — the async analogue of --check.
+echo "== async smoke (staleness 4 + straggler, commit-log replay byte-compare) =="
+cargo run --release -- loadgen --model synthetic:tiny_lm \
+  --clients 4 --shards 2 --steps 30 \
+  --staleness 4 --slow-client 20 \
+  --commit-log target/async-smoke/commits.bin \
+  --snapshot target/async-smoke/snapshot.bin \
+  --bench-json target/async-smoke/BENCH_async.json
+cargo run --release -- replay target/async-smoke/commits.bin \
+  --shards 2 --snapshot target/async-smoke/replay.bin
+cmp target/async-smoke/snapshot.bin target/async-smoke/replay.bin
 
 # Grouped end-to-end: train -> save -> resume with a bias/norm-exempt
 # group config through the real CLI. Needs AOT artifacts (make
