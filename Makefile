@@ -21,6 +21,10 @@
 #                    with a straggler client, commit log recorded, then
 #                    `repro replay` re-executes the log and the replayed
 #                    snapshot is byte-compared against the server's
+#   make remote-smoke distributed-suite smoke: two loopback `repro
+#                    worker` daemons run the smoke suite over SMMFCELL,
+#                    twice (second pass all-cached), then a local-pool
+#                    pass — all three reports byte-compared
 #   make docs-check  regenerate docs/RESULTS.md from the checked-in
 #                    fixture summaries, fail on diff, and verify every
 #                    docs link / file:line anchor
@@ -28,7 +32,7 @@
 #   make docs        rustdoc for the crate, warnings-clean (--no-deps)
 #   make artifacts   AOT-lower the JAX/Pallas graphs (needs python + jax)
 
-.PHONY: build test smoke suite-smoke serve-smoke chaos-smoke async-smoke docs-check bench docs artifacts
+.PHONY: build test smoke suite-smoke serve-smoke chaos-smoke async-smoke remote-smoke docs-check bench docs artifacts
 
 build:
 	cd rust && cargo build --release
@@ -80,6 +84,9 @@ async-smoke:
 	  --shards 2 --snapshot target/async-smoke/replay.bin
 	cmp rust/target/async-smoke/snapshot.bin rust/target/async-smoke/replay.bin
 	@echo "async-smoke OK: commit-log replay byte-identical to the async server's snapshot"
+
+remote-smoke:
+	bash rust/tests/remote_smoke.sh
 
 docs-check:
 	cd rust && cargo run --release -- report tests/fixtures/suite_report/smoke \

@@ -10,7 +10,10 @@ use crate::util::cli::Args;
 use crate::util::toml::TomlDoc;
 
 /// Everything a training experiment needs.
-#[derive(Clone, Debug)]
+/// `PartialEq` backs the `SMMFCELL` wire round-trip guard: the remote
+/// dispatcher asserts `from_toml_str(to_toml(cfg)) == cfg` before
+/// shipping a cell (see `docs/SUITE_WIRE.md`).
+#[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
     pub name: String,
     pub artifact: String,
@@ -243,11 +246,228 @@ impl ExperimentConfig {
         self.optim.threads = threads;
         Ok(())
     }
+
+    /// Render this config as canonical TOML for the `SMMFCELL` wire
+    /// (`docs/SUITE_WIRE.md`): a `repro worker` daemon rebuilds the cell
+    /// config by feeding this text through [`ExperimentConfig::from_toml_str`].
+    ///
+    /// The renderer emits exactly the TOML-settable key set. Fields
+    /// outside it (per-optimizer ε/β tables, SMMF ablation knobs) are
+    /// re-derived from `optimizer.kind` paper defaults on both sides —
+    /// the same rule [`ExperimentConfig::apply_toml`] and
+    /// [`ExperimentConfig::retarget_optimizer`] follow — so every config
+    /// a suite can expand round-trips losslessly (the dispatcher asserts
+    /// this per cell before shipping it). Errors on values the TOML
+    /// subset cannot carry (quotes/newlines in strings, non-finite
+    /// floats, schedules `apply_toml` cannot parse back).
+    pub fn to_toml(&self) -> Result<String> {
+        use std::fmt::Write as _;
+        fn st(out: &mut String, key: &str, v: &str) -> Result<()> {
+            if v.contains('"') || v.contains('\n') {
+                return Err(anyhow!("cannot render {key} = {v:?} (quotes/newlines unsupported)"));
+            }
+            writeln!(out, "{key} = \"{v}\"").ok();
+            Ok(())
+        }
+        fn fl(out: &mut String, key: &str, v: f32) -> Result<()> {
+            if !v.is_finite() {
+                return Err(anyhow!("cannot render {key} = {v} (non-finite)"));
+            }
+            // f32 -> f64 is exact and f64's shortest Display round-trips,
+            // so `parse::<f64>() as f32` recovers the exact bits.
+            writeln!(out, "{key} = {}", v as f64).ok();
+            Ok(())
+        }
+        let mut out = String::new();
+        st(&mut out, "name", &self.name)?;
+        st(&mut out, "artifact", &self.artifact)?;
+        out.push_str("[optimizer]\n");
+        st(&mut out, "kind", self.optimizer.name())?;
+        let o = &self.optim;
+        fl(&mut out, "lr", o.lr)?;
+        fl(&mut out, "beta1", o.beta1)?;
+        fl(&mut out, "beta2", o.beta2)?;
+        fl(&mut out, "weight_decay", o.weight_decay)?;
+        fl(&mut out, "decay_rate", o.decay_rate)?;
+        fl(&mut out, "growth_rate", o.growth_rate)?;
+        writeln!(out, "vector_reshape = {}", o.vector_reshape).ok();
+        writeln!(out, "bias_correction = {}", o.bias_correction).ok();
+        writeln!(out, "threads = {}", o.threads.max(1)).ok();
+        let mode = match o.weight_decay_mode {
+            WeightDecayMode::Adam => "adam",
+            WeightDecayMode::AdamW => "adamw",
+        };
+        st(&mut out, "weight_decay_mode", mode)?;
+        for g in &self.groups {
+            out.push_str("[[optimizer.group]]\n");
+            st(&mut out, "name", &g.name)?;
+            if !g.match_roles.is_empty() {
+                let roles: Vec<String> =
+                    g.match_roles.iter().map(|r| format!("\"{}\"", r.name())).collect();
+                writeln!(out, "match_role = [{}]", roles.join(", ")).ok();
+            }
+            if !g.match_names.is_empty() {
+                let mut names = Vec::with_capacity(g.match_names.len());
+                for n in &g.match_names {
+                    if n.contains('"') || n.contains('\n') {
+                        return Err(anyhow!("cannot render match_name {n:?}"));
+                    }
+                    names.push(format!("\"{n}\""));
+                }
+                writeln!(out, "match_name = [{}]", names.join(", ")).ok();
+            }
+            fl(&mut out, "lr_scale", g.lr_scale)?;
+            if let Some(wd) = g.weight_decay {
+                fl(&mut out, "weight_decay", wd)?;
+            }
+            writeln!(out, "frozen = {}", g.frozen).ok();
+            st(&mut out, "state", g.state.name())?;
+        }
+        out.push_str("[train]\n");
+        writeln!(out, "steps = {}", self.steps).ok();
+        writeln!(out, "seed = {}", self.seed).ok();
+        writeln!(out, "log_every = {}", self.log_every.max(1)).ok();
+        writeln!(out, "workers = {}", self.workers).ok();
+        writeln!(out, "save_every = {}", self.save_every).ok();
+        st(&mut out, "out_dir", &self.out_dir)?;
+        if let Some(resume) = &self.resume {
+            st(&mut out, "resume", resume)?;
+        }
+        out.push_str("[schedule]\n");
+        match self.schedule {
+            LrSchedule::Constant => st(&mut out, "kind", "constant")?,
+            LrSchedule::Warmup { warmup } => {
+                st(&mut out, "kind", "warmup")?;
+                writeln!(out, "warmup = {warmup}").ok();
+            }
+            LrSchedule::Linear { warmup, total } => {
+                st(&mut out, "kind", "linear")?;
+                writeln!(out, "warmup = {warmup}").ok();
+                writeln!(out, "total = {total}").ok();
+            }
+            LrSchedule::InvSqrt { warmup } => {
+                st(&mut out, "kind", "invsqrt")?;
+                writeln!(out, "warmup = {warmup}").ok();
+            }
+            // Not expressible in the TOML schedule section (and not
+            // reachable from a suite file), so not wire-shippable.
+            ref other => return Err(anyhow!("cannot render schedule {other:?} as TOML")),
+        }
+        Ok(out)
+    }
+
+    /// Parse a config from TOML text (the worker side of the `SMMFCELL`
+    /// wire; also exactly what [`ExperimentConfig::from_toml`] does for
+    /// a file).
+    pub fn from_toml_str(text: &str) -> Result<ExperimentConfig> {
+        let doc = TomlDoc::parse(text).map_err(|e| anyhow!("cell config: {e}"))?;
+        let mut cfg = ExperimentConfig::default();
+        cfg.apply_toml(&doc)?;
+        Ok(cfg)
+    }
 }
 
 // ---------------------------------------------------------------------------
 // Experiment suites: declarative optimizer × model sweeps
 // ---------------------------------------------------------------------------
+
+/// Where a suite schedules its cells: a local thread-pool width plus
+/// zero or more remote `repro worker` addresses. Spelled in TOML/CLI as
+/// either a plain integer (`workers = 4`, the historical local pool) or
+/// a spec string:
+///
+/// * `"local:4"` — local thread pool, width 4
+/// * `"remote:host:7131,host:7132"` — remote workers only
+/// * `"local:2,remote:host:7131"` — mixed: local lanes drain the same
+///   cell queue as the remote dispatcher
+///
+/// Validation mirrors the `count_or` rule: zero/negative widths and
+/// malformed entries are errors, never clamps.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WorkerSpec {
+    /// Local worker-thread count (0 = no local lanes; only valid when
+    /// `remote` is non-empty).
+    pub local: usize,
+    /// Remote `repro worker` addresses (`host:port`), dispatch order.
+    pub remote: Vec<String>,
+}
+
+impl WorkerSpec {
+    /// A purely local pool of `n` threads.
+    pub fn local(n: usize) -> WorkerSpec {
+        WorkerSpec { local: n, remote: Vec::new() }
+    }
+
+    /// No remote workers — schedule on the in-process `fan_out` pool.
+    pub fn is_local_only(&self) -> bool {
+        self.remote.is_empty()
+    }
+
+    /// Human-readable summary for suite log lines.
+    pub fn describe(&self) -> String {
+        match (self.local, self.remote.len()) {
+            (n, 0) => format!("{n} local worker(s)"),
+            (0, r) => format!("{r} remote worker(s)"),
+            (n, r) => format!("{r} remote + {n} local worker(s)"),
+        }
+    }
+
+    /// Parse a worker spec: a plain integer, or comma-separated
+    /// `local:N` / `remote:HOST:PORT` entries. After a `remote:` entry,
+    /// bare `HOST:PORT` tokens extend the remote list, so
+    /// `"remote:a:1,b:2"` names two workers.
+    pub fn parse(s: &str) -> std::result::Result<WorkerSpec, String> {
+        let s = s.trim();
+        if let Ok(n) = s.parse::<i64>() {
+            if n >= 1 {
+                return Ok(WorkerSpec::local(n as usize));
+            }
+            return Err("workers must be an integer >= 1".into());
+        }
+        let addr = |tok: &str| -> std::result::Result<String, String> {
+            let tok = tok.trim();
+            if tok.is_empty() || !tok.contains(':') {
+                return Err(format!("bad remote worker address {tok:?} (expected HOST:PORT)"));
+            }
+            Ok(tok.to_string())
+        };
+        let (mut local, mut local_seen) = (0usize, false);
+        let mut remote: Vec<String> = Vec::new();
+        let mut in_remote_list = false;
+        for tok in s.split(',') {
+            let tok = tok.trim();
+            if let Some(n) = tok.strip_prefix("local:") {
+                if local_seen {
+                    return Err(format!("duplicate local: entry in {s:?}"));
+                }
+                local_seen = true;
+                in_remote_list = false;
+                match n.trim().parse::<i64>() {
+                    Ok(n) if n >= 1 => local = n as usize,
+                    _ => return Err("local worker count must be an integer >= 1".into()),
+                }
+            } else if let Some(a) = tok.strip_prefix("remote:") {
+                in_remote_list = true;
+                remote.push(addr(a)?);
+            } else if in_remote_list {
+                remote.push(addr(tok)?);
+            } else {
+                return Err(format!(
+                    "bad workers entry {tok:?} (expected an integer >= 1, local:N, or remote:HOST:PORT)"
+                ));
+            }
+        }
+        for (i, a) in remote.iter().enumerate() {
+            if remote[..i].contains(a) {
+                return Err(format!("duplicate remote worker address {a:?}"));
+            }
+        }
+        if remote.is_empty() && local == 0 {
+            return Err("workers spec names no workers (integer >= 1, local:N, or remote:HOST:PORT)".into());
+        }
+        Ok(WorkerSpec { local, remote })
+    }
+}
 
 /// One `[[suite.run]]` block before expansion: a cartesian
 /// `optimizers × models × seeds` sweep sharing per-block overrides.
@@ -293,8 +513,9 @@ pub struct SuiteConfig {
     pub out_dir: String,
     /// Default seed list for repeat-aggregation (default `[0]`).
     pub seeds: Vec<u64>,
-    /// Worker-pool width for scheduling independent cells (default 1).
-    pub workers: usize,
+    /// Where cells are scheduled: a local pool width or a
+    /// local/remote [`WorkerSpec`] (default: 1 local worker).
+    pub workers: WorkerSpec,
     /// Shared base experiment config every cell starts from.
     pub base: ExperimentConfig,
     /// The sweep blocks, in file order.
@@ -441,8 +662,15 @@ impl SuiteConfig {
         // Worker-count knobs are validated (not silently clamped) at the
         // config layer: a zero- or negative-width pool is a config
         // mistake the user must see, mirroring the `log_every` hardening.
-        let workers =
-            doc.count_or("suite.workers", 1).map_err(|e| anyhow!("[suite]: {e}"))?;
+        // Integer spellings keep the historical local-pool meaning;
+        // string spellings name local/remote backends (see WorkerSpec).
+        let workers = match doc.get("suite.workers") {
+            Some(v) if v.as_str().is_some() => WorkerSpec::parse(v.as_str().unwrap())
+                .map_err(|e| anyhow!("[suite]: workers: {e}"))?,
+            _ => WorkerSpec::local(
+                doc.count_or("suite.workers", 1).map_err(|e| anyhow!("[suite]: {e}"))?,
+            ),
+        };
         let out_dir = doc.str_or("suite.out_dir", &base.out_dir).to_string();
         Ok(SuiteConfig { name, out_dir, seeds, workers, base, runs })
     }
@@ -695,13 +923,131 @@ mod tests {
     fn suite_workers_validated_not_clamped() {
         let base = "[[suite.run]]\noptimizers = [\"smmf\"]\nmodels = [\"synthetic:tiny_lm\"]\n";
         let ok = SuiteConfig::parse(&format!("[suite]\nworkers = 3\n{base}"), "s").unwrap();
-        assert_eq!(ok.workers, 3);
+        assert_eq!(ok.workers, WorkerSpec::local(3));
         // absent -> default 1
-        assert_eq!(SuiteConfig::parse(base, "s").unwrap().workers, 1);
-        for bad in ["workers = 0", "workers = -2", "workers = \"many\""] {
+        assert_eq!(SuiteConfig::parse(base, "s").unwrap().workers, WorkerSpec::local(1));
+        // zero/negative pools error with the count_or message, never clamp
+        for bad in ["workers = 0", "workers = -2"] {
             let e = SuiteConfig::parse(&format!("[suite]\n{bad}\n{base}"), "s").unwrap_err();
             assert!(format!("{e:#}").contains(">= 1"), "{bad}: {e:#}");
         }
+        // a string that is neither a count nor a backend spec errors too
+        let e = SuiteConfig::parse(&format!("[suite]\nworkers = \"many\"\n{base}"), "s")
+            .unwrap_err();
+        assert!(format!("{e:#}").contains("bad workers entry"), "{e:#}");
+        // string spellings route through WorkerSpec
+        let ok = SuiteConfig::parse(
+            &format!("[suite]\nworkers = \"local:2,remote:127.0.0.1:7131\"\n{base}"),
+            "s",
+        )
+        .unwrap();
+        assert_eq!(
+            ok.workers,
+            WorkerSpec { local: 2, remote: vec!["127.0.0.1:7131".into()] }
+        );
+    }
+
+    #[test]
+    fn worker_spec_parsing() {
+        // integers and local:N are the thread pool
+        assert_eq!(WorkerSpec::parse("4"), Ok(WorkerSpec::local(4)));
+        assert_eq!(WorkerSpec::parse(" local:2 "), Ok(WorkerSpec::local(2)));
+        // remote lists: explicit prefix per entry or bare continuations
+        let two = WorkerSpec { local: 0, remote: vec!["a:1".into(), "b:2".into()] };
+        assert_eq!(WorkerSpec::parse("remote:a:1,remote:b:2"), Ok(two.clone()));
+        assert_eq!(WorkerSpec::parse("remote:a:1,b:2"), Ok(two));
+        // mixed, in either order
+        let mixed = WorkerSpec { local: 1, remote: vec!["h:9".into()] };
+        assert_eq!(WorkerSpec::parse("local:1,remote:h:9"), Ok(mixed.clone()));
+        assert_eq!(WorkerSpec::parse("remote:h:9,local:1"), Ok(mixed.clone()));
+        assert!(!mixed.is_local_only());
+        assert!(WorkerSpec::local(3).is_local_only());
+        // errors: bad counts, port-less addresses, duplicates, emptiness
+        for bad in [
+            "0",
+            "-2",
+            "local:0",
+            "local:x",
+            "many",
+            "remote:nocolon",
+            "remote:a:1,a:1",
+            "remote:a:1,local:1,local:2",
+            "",
+        ] {
+            assert!(WorkerSpec::parse(bad).is_err(), "{bad:?} should not parse");
+        }
+    }
+
+    /// The `SMMFCELL` wire contract: every cell config a suite can
+    /// expand — groups, schedules, per-block overrides included — must
+    /// survive `to_toml` -> `from_toml_str` exactly (the remote worker
+    /// rebuilds the config from this text alone).
+    #[test]
+    fn experiment_config_round_trips_through_toml_text() {
+        let text = r#"
+[suite]
+name = "rt"
+seeds = [0, 3]
+
+[optimizer]
+kind = "smmf"
+lr = 0.0123
+weight_decay = 0.01
+decay_rate = -0.7
+threads = 2
+weight_decay_mode = "adam"
+
+[[optimizer.group]]
+name = "no_decay"
+match_role = ["bias", "norm"]
+weight_decay = 0.0
+state = "dense"
+
+[[optimizer.group]]
+name = "emb"
+match_name = ["*emb*", "tok?"]
+lr_scale = 0.5
+frozen = true
+
+[schedule]
+kind = "linear"
+warmup = 7
+total = 40
+
+[train]
+steps = 40
+log_every = 5
+
+[[suite.run]]
+optimizers = ["adam", "came", "adafactor"]
+models = ["synthetic:tiny_lm"]
+
+[[suite.run]]
+label = "hot"
+optimizers = ["smmf", "sm3", "sgd"]
+models = ["synthetic:tiny_lm"]
+lr = 0.05
+steps = 9
+save_every = 4
+"#;
+        let suite = SuiteConfig::parse(text, "rt").unwrap();
+        let cells = suite.expand().unwrap();
+        assert!(cells.len() >= 12);
+        for cell in &cells {
+            let rendered = cell.cfg.to_toml().unwrap();
+            let back = ExperimentConfig::from_toml_str(&rendered).unwrap();
+            assert_eq!(back, cell.cfg, "cell {} drifted through the wire TOML", cell.run);
+            // canonical form is a fixpoint
+            assert_eq!(back.to_toml().unwrap(), rendered);
+        }
+        // non-finite floats and unrepresentable schedules are rejected,
+        // not silently mangled
+        let mut bad = cells[0].cfg.clone();
+        bad.optim.lr = f32::NAN;
+        assert!(bad.to_toml().is_err());
+        let mut cos = cells[0].cfg.clone();
+        cos.schedule = LrSchedule::Cosine { warmup: 1, total: 2, floor: 0.1 };
+        assert!(cos.to_toml().is_err());
     }
 
     #[test]

@@ -9,15 +9,22 @@
 //! The suite subsystem turns the one-run-at-a-time harness declarative:
 //! [`config::SuiteConfig`] parses a `[[suite.run]]` sweep file,
 //! [`suite::run_suite`] schedules the expanded optimizer × model × seed
-//! matrix over [`workers::fan_out`] with failure isolation and
+//! matrix over [`workers::fan_out_recover`] with failure isolation and
 //! resume-aware re-entry, and [`report`] aggregates the per-cell
 //! summaries into the paper-style memory/quality/throughput tables
 //! (`docs/RESULTS.md`, `BENCH_suite.json`).
+//!
+//! The [`remote`] subsystem scales the same suites past one machine:
+//! `repro worker` daemons execute cells shipped over the `SMMFCELL`
+//! wire protocol, and a `workers = "remote:host:port,…"` spec swaps the
+//! thread pool for the submit/poll dispatcher — same cells, same
+//! on-disk artifacts, byte-identical reports.
 
 pub mod config;
 pub mod experiments;
+pub mod remote;
 pub mod report;
 pub mod suite;
 pub mod workers;
 
-pub use config::{ExperimentConfig, SuiteConfig};
+pub use config::{ExperimentConfig, SuiteConfig, WorkerSpec};

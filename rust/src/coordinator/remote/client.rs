@@ -1,0 +1,90 @@
+//! Thin synchronous client for one `repro worker` connection.
+//!
+//! Deliberately dumber than [`server::Client`](crate::server::client):
+//! no internal `Busy` absorption, no retry loop — the
+//! [`dispatch`](super::dispatch) scheduler owns retry/backoff policy
+//! because a `Busy` bounce is a *scheduling* signal there (defer this
+//! worker, maybe try another), not something to hide inside a blocking
+//! call. What the client does own is framing hygiene: requests carry a
+//! monotonically increasing id and every reply must echo it.
+
+use anyhow::{bail, Context, Result};
+use std::io::{BufReader, BufWriter};
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::coordinator::remote::protocol::{self, CellFrame, CellMsg};
+
+/// One connection to a worker daemon.
+pub struct CellClient {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+    next_id: u64,
+}
+
+impl CellClient {
+    /// Connect with a dial timeout; `io_timeout` bounds every
+    /// subsequent read/write (`None` = block forever).
+    pub fn connect(addr: &str, io_timeout: Option<Duration>) -> Result<CellClient> {
+        let sock_addr = addr
+            .parse()
+            .with_context(|| format!("bad worker address {addr:?} (expected HOST:PORT)"))?;
+        let dial = io_timeout.unwrap_or(Duration::from_secs(5));
+        let stream = TcpStream::connect_timeout(&sock_addr, dial)
+            .with_context(|| format!("connecting to worker {addr}"))?;
+        stream.set_nodelay(true).ok();
+        stream.set_read_timeout(io_timeout)?;
+        stream.set_write_timeout(io_timeout)?;
+        let read_half = stream.try_clone()?;
+        Ok(CellClient {
+            reader: BufReader::new(read_half),
+            writer: BufWriter::new(stream),
+            next_id: 1,
+        })
+    }
+
+    /// One request → reply round trip, with the id echo checked.
+    pub fn call(&mut self, msg: CellMsg) -> Result<CellMsg> {
+        debug_assert!(msg.is_request(), "{} is not a request", msg.name());
+        let id = self.next_id;
+        self.next_id += 1;
+        protocol::write_frame(&mut self.writer, &CellFrame { request_id: id, msg })
+            .context("writing to worker")?;
+        let reply = protocol::read_frame(&mut self.reader).context("reading worker reply")?;
+        if reply.request_id != id {
+            bail!("worker answered request {} while {id} was pending", reply.request_id);
+        }
+        Ok(reply.msg)
+    }
+
+    /// Submit cell `job` (`run`/`model`/canonical config TOML).
+    pub fn submit(&mut self, job: u64, run: &str, model: &str, config: &str) -> Result<CellMsg> {
+        self.call(CellMsg::Submit {
+            job,
+            run: run.to_string(),
+            model: model.to_string(),
+            config: config.to_string(),
+        })
+    }
+
+    /// Ask for `job`'s state.
+    pub fn poll(&mut self, job: u64) -> Result<CellMsg> {
+        self.call(CellMsg::Poll { job })
+    }
+
+    /// Heartbeat; returns `(running, capacity)`.
+    pub fn ping(&mut self) -> Result<(u32, u32)> {
+        match self.call(CellMsg::Ping)? {
+            CellMsg::Pong { running, capacity } => Ok((running, capacity)),
+            other => bail!("expected Pong, worker answered {}", other.name()),
+        }
+    }
+
+    /// Ask the worker to shut down (acknowledged with `Bye`).
+    pub fn shutdown(&mut self) -> Result<()> {
+        match self.call(CellMsg::Shutdown)? {
+            CellMsg::Bye => Ok(()),
+            other => bail!("expected Bye, worker answered {}", other.name()),
+        }
+    }
+}

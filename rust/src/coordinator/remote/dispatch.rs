@@ -1,0 +1,441 @@
+//! The remote suite backend: a submit/poll dispatcher that fans
+//! expanded cells out to `repro worker` daemons (plus optional local
+//! lanes) and commits statuses in deterministic expansion order.
+//!
+//! Scheduling model:
+//!
+//! * One **work queue** holds the indices of every cell that still
+//!   needs to run, in expansion order; remote lanes and local lanes pop
+//!   from the same queue, so `local:N,remote:…` mixes trivially.
+//! * Each remote **lane** keeps at most [`INFLIGHT_PER_WORKER`] cells
+//!   in flight: submit → poll until `Done`/`Failed`. `Busy` bounces
+//!   requeue the cell and defer that lane through the shared
+//!   [`Backoff`] (the same deterministic-jitter schedule
+//!   `server::Client` retries with).
+//! * **Leases**: every successful round trip refreshes a lane's
+//!   `last_ok`. A lane silent past the lease timeout is declared dead
+//!   and its in-flight cells are requeued to the survivors — after a
+//!   re-entry-cache recheck, because a stranded worker may have
+//!   finished a cell before dying (its `summary.json` is the verdict,
+//!   not its lost reply). With every remote lane dead and no local
+//!   lanes, the remainder fails loudly with `FAILED` markers instead of
+//!   hanging: the next invocation retries exactly those cells.
+//! * **Determinism**: statuses land in a slot-per-cell table keyed by
+//!   expansion index; which worker finished first is invisible to the
+//!   caller, so [`report`](crate::coordinator::report) renders
+//!   byte-identical `docs/RESULTS.md` / `BENCH_suite.json` regardless
+//!   of backend or completion timing.
+//!
+//! The wire config is [`ExperimentConfig::to_toml`]'s canonical
+//! rendering — the round-trip test in `coordinator::config` pins that a
+//! worker's `from_toml_str` reconstructs the resolved config exactly.
+//!
+//! [`ExperimentConfig::to_toml`]: crate::coordinator::config::ExperimentConfig::to_toml
+
+use anyhow::Result;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::config::{SuiteCell, WorkerSpec};
+use crate::coordinator::remote::client::CellClient;
+use crate::coordinator::remote::protocol::CellMsg;
+use crate::coordinator::suite::{self, CellStatus, SuiteOptions};
+use crate::coordinator::workers::panic_note;
+use crate::train::metrics;
+use crate::util::backoff::Backoff;
+
+/// Cells a single worker daemon may have in flight at once. Two keeps a
+/// capacity-1 worker saturated (one running, one queued behind its
+/// `Busy` bounces) without piling risk onto one lease.
+pub const INFLIGHT_PER_WORKER: usize = 2;
+
+/// One remote worker's dispatch lane.
+struct Lane {
+    addr: String,
+    client: Option<CellClient>,
+    /// Expansion indices of cells submitted here and not yet resolved.
+    inflight: Vec<usize>,
+    dead: bool,
+    /// Busy-bounce deferral: no submits to this lane before this
+    /// instant (polls continue — deferral is backpressure, not death).
+    defer_until: Option<Instant>,
+    busy_backoff: Backoff,
+    /// Last successful round trip; the lease clock.
+    last_ok: Instant,
+}
+
+impl Lane {
+    /// Take the connection (dialing if needed) so calls can run while
+    /// the lane's bookkeeping fields stay mutable. Put it back with
+    /// `self.client = Some(c)` after a healthy exchange; drop it on an
+    /// IO error and the next take re-dials.
+    fn take_client(&mut self, io: Duration) -> Option<CellClient> {
+        match self.client.take() {
+            Some(c) => Some(c),
+            // Dial failure: leave `client` empty; the lease clock keeps
+            // ticking toward this lane's death.
+            None => CellClient::connect(&self.addr, Some(io)).ok(),
+        }
+    }
+}
+
+/// Shared scheduling state: the work queue plus the slot-per-cell
+/// status table that makes completion order invisible to the caller.
+struct Board<'a> {
+    cells: &'a [SuiteCell],
+    total: usize,
+    pending: Mutex<VecDeque<usize>>,
+    statuses: Mutex<Vec<Option<CellStatus>>>,
+    /// Set by the dispatcher once nothing is pending or in flight —
+    /// releases the local lanes, which otherwise idle awaiting requeues.
+    done: AtomicBool,
+}
+
+impl<'a> Board<'a> {
+    fn record(&self, idx: usize, status: CellStatus) {
+        self.statuses.lock().unwrap()[idx] = Some(status);
+    }
+
+    fn requeue_front(&self, idx: usize) {
+        self.pending.lock().unwrap().push_front(idx);
+    }
+
+    fn pop(&self) -> Option<usize> {
+        self.pending.lock().unwrap().pop_front()
+    }
+
+    /// The re-dispatch cache recheck: a popped cell whose summary
+    /// already landed (a stranded worker finished it before dying, or a
+    /// lost reply hid a completion) counts as `Ran` — the on-disk
+    /// verdict outranks the lost acknowledgment. Returns `None` when
+    /// the cell is already settled.
+    fn claim(&self, idx: usize) -> Option<usize> {
+        let cell = &self.cells[idx];
+        if suite::cell_cached(cell, false) {
+            println!(
+                "{}: completed remotely (summary.json present)",
+                suite::cell_tag(idx, self.total, &cell.run)
+            );
+            self.record(idx, CellStatus::Ran);
+            return None;
+        }
+        Some(idx)
+    }
+
+    fn fail(&self, idx: usize, note: String) {
+        let cell = &self.cells[idx];
+        let status = suite::fail_cell(
+            &suite::cell_tag(idx, self.total, &cell.run),
+            &suite::cell_dir(cell),
+            note,
+        );
+        self.record(idx, status);
+    }
+}
+
+/// Run a suite's cells over the remote (or mixed) backend described by
+/// `spec`. Statuses come back in expansion order; per-cell failures are
+/// isolated into [`CellStatus::Failed`] exactly like the local pool.
+pub fn run_dispatched(
+    cells: &[SuiteCell],
+    spec: &WorkerSpec,
+    opts: &SuiteOptions,
+) -> Result<Vec<CellStatus>> {
+    let total = cells.len();
+    let lease = Duration::from_millis(opts.lease_timeout_ms.max(1));
+    // IO timeout well under the lease: a silent worker must miss
+    // several round trips before its lease expires, not exactly one.
+    let io_timeout = Duration::from_millis((opts.lease_timeout_ms / 2).max(50));
+
+    let board = Board {
+        cells,
+        total,
+        pending: Mutex::new(VecDeque::new()),
+        statuses: Mutex::new(vec![None; total]),
+        done: AtomicBool::new(false),
+    };
+
+    // Pre-pass in expansion order: the re-entry cache decides what runs
+    // at all — identical to the local backend's cached check.
+    for (idx, cell) in cells.iter().enumerate() {
+        if suite::cell_cached(cell, opts.force) {
+            println!(
+                "{}: cached (summary.json exists — use --force to re-run)",
+                suite::cell_tag(idx, total, &cell.run)
+            );
+            board.record(idx, CellStatus::Skipped);
+            continue;
+        }
+        if opts.force {
+            let _ = std::fs::remove_file(metrics::summary_path(&cell.cfg.out_dir, &cell.cfg.name));
+        }
+        board.pending.lock().unwrap().push_back(idx);
+    }
+
+    std::thread::scope(|scope| {
+        // Local lanes: same executor as the in-process pool, but fed
+        // from the shared queue so they absorb re-dispatched cells too.
+        for _ in 0..spec.local {
+            scope.spawn(|| loop {
+                let Some(idx) = board.pop() else {
+                    if board.done.load(Ordering::SeqCst) {
+                        return;
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                    continue;
+                };
+                let Some(idx) = board.claim(idx) else { continue };
+                let cell = &cells[idx];
+                let tag = suite::cell_tag(idx, total, &cell.run);
+                let status = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    suite::execute_cell(&tag, cell, &opts.artifacts_dir)
+                })) {
+                    Ok(s) => s,
+                    Err(payload) => suite::fail_cell(
+                        &tag,
+                        &suite::cell_dir(cell),
+                        format!("cell worker panicked: {}", panic_note(payload.as_ref())),
+                    ),
+                };
+                board.record(idx, status);
+            });
+        }
+        // One dispatcher thread drives every remote lane — the per-call
+        // IO timeouts bound each round trip, so a stuck worker stalls
+        // only its own lane's turn, never the loop.
+        scope.spawn(|| dispatch_loop(&board, spec, lease, io_timeout));
+    });
+
+    let statuses = board.statuses.into_inner().unwrap();
+    Ok(statuses
+        .into_iter()
+        .enumerate()
+        .map(|(idx, s)| {
+            // Defensive: every path above records a status; a hole
+            // would silently corrupt the report's expansion order.
+            s.unwrap_or_else(|| {
+                suite::fail_cell(
+                    &suite::cell_tag(idx, total, &cells[idx].run),
+                    &suite::cell_dir(&cells[idx]),
+                    "cell was never scheduled (dispatcher bug)".into(),
+                )
+            })
+        })
+        .collect())
+}
+
+fn dispatch_loop(board: &Board<'_>, spec: &WorkerSpec, lease: Duration, io: Duration) {
+    let mut lanes: Vec<Lane> = spec
+        .remote
+        .iter()
+        .map(|addr| Lane {
+            addr: addr.clone(),
+            client: None,
+            inflight: Vec::new(),
+            dead: false,
+            defer_until: None,
+            busy_backoff: Backoff::new(),
+            last_ok: Instant::now(),
+        })
+        .collect();
+    let mut pacing = Backoff::new();
+    loop {
+        let mut progress = false;
+        for lane in &mut lanes {
+            if lane.dead {
+                continue;
+            }
+            progress |= poll_lane(board, lane, io);
+            progress |= fill_lane(board, lane, io);
+            if lane.last_ok.elapsed() > lease {
+                lane.dead = true;
+                lane.client = None;
+                let stranded = std::mem::take(&mut lane.inflight);
+                println!(
+                    "[suite] worker {} unreachable (lease {} ms expired) — re-dispatching \
+                     {} cell(s)",
+                    lane.addr,
+                    lease.as_millis(),
+                    stranded.len()
+                );
+                // Front of the queue: the survivors should pick these up
+                // before fresh work, keeping completion close to
+                // expansion order.
+                for idx in stranded.into_iter().rev() {
+                    board.requeue_front(idx);
+                }
+                progress = true;
+            }
+        }
+        let inflight_total: usize = lanes.iter().map(|l| l.inflight.len()).sum();
+        let pending_len = board.pending.lock().unwrap().len();
+        if pending_len == 0 && inflight_total == 0 {
+            board.done.store(true, Ordering::SeqCst);
+            return;
+        }
+        if inflight_total == 0 && spec.local == 0 && lanes.iter().all(|l| l.dead) {
+            // Nothing can make progress: fail the remainder loudly. The
+            // FAILED markers make the next invocation retry exactly
+            // these cells.
+            while let Some(idx) = board.pop() {
+                let Some(idx) = board.claim(idx) else { continue };
+                board.fail(idx, "no live workers (every remote worker's lease expired)".into());
+            }
+            board.done.store(true, Ordering::SeqCst);
+            return;
+        }
+        if progress {
+            pacing.reset();
+        } else {
+            // Deterministic-jitter idle pacing, capped at 50 ms — the
+            // same schedule the state-server client retries with.
+            pacing.sleep();
+        }
+    }
+}
+
+/// Poll a lane's in-flight cells once each. Returns whether any cell
+/// reached a verdict.
+fn poll_lane(board: &Board<'_>, lane: &mut Lane, io: Duration) -> bool {
+    if lane.inflight.is_empty() {
+        return false;
+    }
+    let Some(mut client) = lane.take_client(io) else { return false };
+    let mut progress = false;
+    let mut i = 0;
+    while i < lane.inflight.len() {
+        let idx = lane.inflight[i];
+        let reply = match client.poll(idx as u64) {
+            Ok(r) => r,
+            // Lost round trip: keep the cell in flight (the worker may
+            // just be slow), drop the connection — the lease clock
+            // decides death, and the next take re-dials.
+            Err(_) => return progress,
+        };
+        lane.last_ok = Instant::now();
+        match reply {
+            CellMsg::Running { .. } => i += 1,
+            CellMsg::Done { .. } => {
+                let removed = lane.inflight.remove(i);
+                done_on(board, removed, &lane.addr);
+                progress = true;
+            }
+            CellMsg::Failed { note, .. } => {
+                let removed = lane.inflight.remove(i);
+                board.fail(removed, note);
+                progress = true;
+            }
+            // Unknown job (worker restarted?) or a nonsense reply:
+            // this lane no longer owns the cell.
+            _ => {
+                let removed = lane.inflight.remove(i);
+                board.requeue_front(removed);
+                progress = true;
+            }
+        }
+    }
+    lane.client = Some(client);
+    progress
+}
+
+/// Top a lane up to [`INFLIGHT_PER_WORKER`] from the queue. Returns
+/// whether anything was submitted or resolved.
+fn fill_lane(board: &Board<'_>, lane: &mut Lane, io: Duration) -> bool {
+    if let Some(until) = lane.defer_until {
+        if Instant::now() < until {
+            return false;
+        }
+        lane.defer_until = None;
+    }
+    if lane.inflight.len() >= INFLIGHT_PER_WORKER {
+        return false;
+    }
+    let mut progress = false;
+    let mut client: Option<CellClient> = None;
+    while lane.inflight.len() < INFLIGHT_PER_WORKER {
+        let Some(idx) = board.pop() else { break };
+        let Some(idx) = board.claim(idx) else {
+            progress = true;
+            continue;
+        };
+        let cell = &board.cells[idx];
+        let tag = suite::cell_tag(idx, board.total, &cell.run);
+        // Canonical wire rendering; a config the wire cannot carry is a
+        // per-cell failure, not a suite abort.
+        let config = match cell.cfg.to_toml() {
+            Ok(c) => c,
+            Err(e) => {
+                board.fail(idx, format!("cannot ship cell to a remote worker: {e:#}"));
+                progress = true;
+                continue;
+            }
+        };
+        if client.is_none() {
+            client = lane.take_client(io);
+        }
+        let Some(c) = client.as_mut() else {
+            board.requeue_front(idx);
+            break;
+        };
+        let reply = match c.submit(idx as u64, &cell.run, &cell.model, &config) {
+            Ok(r) => r,
+            Err(_) => {
+                board.requeue_front(idx);
+                client = None; // re-dial next round
+                break;
+            }
+        };
+        lane.last_ok = Instant::now();
+        match reply {
+            CellMsg::Accepted { .. } | CellMsg::Running { .. } => {
+                println!("{tag}: dispatched to worker {}", lane.addr);
+                lane.inflight.push(idx);
+                progress = true;
+            }
+            // Idempotent re-submit of an already-finished job.
+            CellMsg::Done { .. } => {
+                done_on(board, idx, &lane.addr);
+                progress = true;
+            }
+            CellMsg::Failed { note, .. } => {
+                board.fail(idx, note);
+                progress = true;
+            }
+            CellMsg::Busy => {
+                board.requeue_front(idx);
+                lane.defer_until = Some(Instant::now() + lane.busy_backoff.next_delay());
+                break;
+            }
+            CellMsg::Err { msg } => {
+                // The worker rejected the cell itself (bad config,
+                // hostile path): a cell verdict, not a lane fault.
+                board.fail(idx, format!("worker {} rejected the cell: {msg}", lane.addr));
+                progress = true;
+            }
+            _ => {
+                board.requeue_front(idx);
+                client = None;
+                break;
+            }
+        }
+    }
+    if let Some(c) = client {
+        lane.client = Some(c);
+    }
+    if progress {
+        lane.busy_backoff.reset();
+    }
+    progress
+}
+
+/// Commit a remote completion. (Failures flow through [`Board::fail`],
+/// which also mirrors the note into the coordinator-side `FAILED`
+/// marker — the worker already wrote one, but a shared filesystem is
+/// not part of the protocol and the write is idempotent.)
+fn done_on(board: &Board<'_>, idx: usize, addr: &str) {
+    let cell = &board.cells[idx];
+    println!("{}: done on worker {addr}", suite::cell_tag(idx, board.total, &cell.run));
+    board.record(idx, CellStatus::Ran);
+}

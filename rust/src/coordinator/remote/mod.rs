@@ -1,0 +1,32 @@
+//! Distributed suite execution: ship expanded suite cells to `repro
+//! worker` daemons over the `SMMFCELL` wire protocol and collect
+//! verdicts in deterministic expansion order.
+//!
+//! Module map:
+//!
+//! * [`protocol`] — the `SMMFCELL` framing and message codec
+//!   (`SMMFWIRE`-style strict decode; byte spec in
+//!   `docs/SUITE_WIRE.md`).
+//! * [`service`] — the worker daemon behind `repro worker`: accept
+//!   loop, per-connection handlers, per-cell executor threads.
+//! * [`client`] — one typed connection to a worker (submit / poll /
+//!   ping / shutdown).
+//! * [`dispatch`] — the coordinator-side scheduler that replaces the
+//!   local thread pool when `[suite] workers` names remote addresses:
+//!   per-worker in-flight caps, `Busy` backoff, lease-based death
+//!   detection with re-dispatch, and the slot-per-cell status table
+//!   that keeps reports byte-identical to a local run.
+//!
+//! The subsystem adds *no* new execution semantics: a remote cell runs
+//! through the same [`suite::execute_cell`](crate::coordinator::suite)
+//! path, leaves the same artifacts, and is cached by the same
+//! `summary.json`/`FAILED` re-entry rules as a local one.
+
+pub mod client;
+pub mod dispatch;
+pub mod protocol;
+pub mod service;
+
+pub use client::CellClient;
+pub use dispatch::run_dispatched;
+pub use service::{WorkerOptions, WorkerServer, WorkerStats};

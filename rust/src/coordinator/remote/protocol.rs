@@ -1,0 +1,462 @@
+//! The `SMMFCELL` binary wire protocol: versioned, length-prefixed
+//! framing for distributed suite-cell execution.
+//!
+//! Every message travels as one frame:
+//!
+//! ```text
+//! offset  size  field
+//! 0       8     magic  b"SMMFCELL"
+//! 8       4     u32    protocol version (= 1)
+//! 12      8     u64    request id (replies echo the request's id)
+//! 20      1     u8     op code (see the OP_* constants)
+//! 21      8     u64    payload length in bytes (<= MAX_PAYLOAD)
+//! 29      len   op-specific payload
+//! ```
+//!
+//! The framing deliberately mirrors `SMMFWIRE` (`server::protocol`),
+//! byte for byte in layout, with its own magic, version and op space —
+//! a worker fed a gradient frame (or a state server fed a cell frame)
+//! rejects it at the magic check instead of misinterpreting it.
+//!
+//! All multi-byte values are little-endian, encoded/decoded with the
+//! checkpoint blob codec (`optim::blob`). Decoding follows the same
+//! strict discipline as `SMMFCKPT`/`SMMFWIRE` loading: magic/version/op
+//! are validated before the payload is touched, the payload length is
+//! capped before any allocation, every string length is checked against
+//! its cap (and the bytes actually remaining) *before* the buffer is
+//! built, and trailing payload bytes are rejected — a truncated or
+//! hostile frame produces a context-rich error, never a panic or an
+//! unbounded allocation. The byte-level spec lives in
+//! `docs/SUITE_WIRE.md`.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+
+use crate::optim::blob::{BlobReader, BlobWriter};
+
+pub const MAGIC: &[u8; 8] = b"SMMFCELL";
+pub const VERSION: u32 = 1;
+/// Fixed frame-header size (see the module docs for the layout).
+pub const HEADER_LEN: usize = 8 + 4 + 8 + 1 + 8;
+
+/// Payload cap: a cell spec is a rendered TOML config plus short
+/// strings, so 1 MiB is generous headroom — anything larger is a
+/// corrupt or hostile frame.
+pub const MAX_PAYLOAD: u64 = 1 << 20;
+/// Cap for run/model/note/error strings.
+pub const MAX_STR_LEN: usize = 4096;
+/// Cap for the rendered per-cell config TOML.
+pub const MAX_CONFIG_LEN: usize = 1 << 16;
+
+// Requests (coordinator -> worker) occupy 1..; replies 64.. — disjoint
+// ranges, like SMMFWIRE, so a peer answering with a request (or vice
+// versa) is caught by `is_request` instead of decoding as nonsense.
+pub const OP_SUBMIT: u8 = 1;
+pub const OP_POLL: u8 = 2;
+pub const OP_PING: u8 = 3;
+pub const OP_SHUTDOWN: u8 = 4;
+
+pub const OP_ACCEPTED: u8 = 64;
+pub const OP_RUNNING: u8 = 65;
+pub const OP_DONE: u8 = 66;
+pub const OP_FAILED: u8 = 67;
+pub const OP_BUSY: u8 = 68;
+pub const OP_PONG: u8 = 69;
+pub const OP_BYE: u8 = 70;
+pub const OP_ERR: u8 = 71;
+
+/// One `SMMFCELL` message (request or reply).
+#[derive(Clone, Debug, PartialEq)]
+pub enum CellMsg {
+    /// Run a cell: `job` is the coordinator-chosen id (the cell's
+    /// expansion index), `run` the cell directory name, `model` the
+    /// workload spelling (`synthetic:…` or an artifact name), `config`
+    /// the canonical TOML rendering of the resolved
+    /// [`ExperimentConfig`](crate::coordinator::ExperimentConfig).
+    /// Re-submitting a known job id is idempotent: the worker answers
+    /// with the job's current state instead of running it twice.
+    Submit { job: u64, run: String, model: String, config: String },
+    /// Ask for a job's state; answered with `Running`, `Done`,
+    /// `Failed`, or `Err` for an unknown id.
+    Poll { job: u64 },
+    /// Heartbeat; answered with `Pong`.
+    Ping,
+    /// Stop accepting work and shut the worker down (answered with
+    /// `Bye` first).
+    Shutdown,
+
+    /// Submit accepted; the cell is now running.
+    Accepted { job: u64 },
+    /// Poll reply: still training.
+    Running { job: u64 },
+    /// Poll reply: finished with a finite-loss `summary.json`.
+    Done { job: u64 },
+    /// Poll (or re-submit) reply: the cell failed; `note` is the first
+    /// line of the error, mirrored in the cell's `FAILED` marker.
+    Failed { job: u64, note: String },
+    /// Submit bounced: the worker is at its concurrent-cell capacity.
+    /// Back off and retry (or dispatch elsewhere).
+    Busy,
+    /// Heartbeat reply: current load.
+    Pong { running: u32, capacity: u32 },
+    /// Shutdown acknowledged.
+    Bye,
+    /// Protocol-level failure (malformed submit, unknown job, a reply
+    /// op sent as a request, …).
+    Err { msg: String },
+}
+
+impl CellMsg {
+    pub fn op(&self) -> u8 {
+        match self {
+            CellMsg::Submit { .. } => OP_SUBMIT,
+            CellMsg::Poll { .. } => OP_POLL,
+            CellMsg::Ping => OP_PING,
+            CellMsg::Shutdown => OP_SHUTDOWN,
+            CellMsg::Accepted { .. } => OP_ACCEPTED,
+            CellMsg::Running { .. } => OP_RUNNING,
+            CellMsg::Done { .. } => OP_DONE,
+            CellMsg::Failed { .. } => OP_FAILED,
+            CellMsg::Busy => OP_BUSY,
+            CellMsg::Pong { .. } => OP_PONG,
+            CellMsg::Bye => OP_BYE,
+            CellMsg::Err { .. } => OP_ERR,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CellMsg::Submit { .. } => "Submit",
+            CellMsg::Poll { .. } => "Poll",
+            CellMsg::Ping => "Ping",
+            CellMsg::Shutdown => "Shutdown",
+            CellMsg::Accepted { .. } => "Accepted",
+            CellMsg::Running { .. } => "Running",
+            CellMsg::Done { .. } => "Done",
+            CellMsg::Failed { .. } => "Failed",
+            CellMsg::Busy => "Busy",
+            CellMsg::Pong { .. } => "Pong",
+            CellMsg::Bye => "Bye",
+            CellMsg::Err { .. } => "Err",
+        }
+    }
+
+    /// Is this a message a coordinator may send to a worker?
+    pub fn is_request(&self) -> bool {
+        self.op() < OP_ACCEPTED
+    }
+}
+
+/// A framed message: request id + body. Replies echo the request's id.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CellFrame {
+    pub request_id: u64,
+    pub msg: CellMsg,
+}
+
+/// Clip a string to [`MAX_STR_LEN`] bytes on a char boundary — applied
+/// to outgoing notes/errors so an over-long anyhow chain can never
+/// produce a frame the peer's decoder rejects.
+pub fn clip_str(s: &str) -> &str {
+    if s.len() <= MAX_STR_LEN {
+        return s;
+    }
+    let mut end = MAX_STR_LEN;
+    while !s.is_char_boundary(end) {
+        end -= 1;
+    }
+    &s[..end]
+}
+
+fn write_str(w: &mut BlobWriter, s: &str) {
+    w.u32(s.len() as u32);
+    w.bytes(s.as_bytes());
+}
+
+fn payload(msg: &CellMsg) -> Vec<u8> {
+    let mut w = BlobWriter::new();
+    match msg {
+        CellMsg::Submit { job, run, model, config } => {
+            w.u64(*job);
+            write_str(&mut w, run);
+            write_str(&mut w, model);
+            w.u32(config.len() as u32);
+            w.bytes(config.as_bytes());
+        }
+        CellMsg::Poll { job }
+        | CellMsg::Accepted { job }
+        | CellMsg::Running { job }
+        | CellMsg::Done { job } => w.u64(*job),
+        CellMsg::Failed { job, note } => {
+            w.u64(*job);
+            write_str(&mut w, clip_str(note));
+        }
+        CellMsg::Pong { running, capacity } => {
+            w.u32(*running);
+            w.u32(*capacity);
+        }
+        CellMsg::Err { msg } => write_str(&mut w, clip_str(msg)),
+        CellMsg::Ping | CellMsg::Shutdown | CellMsg::Busy | CellMsg::Bye => {}
+    }
+    w.finish()
+}
+
+/// Serialize a frame to bytes.
+pub fn encode(frame: &CellFrame) -> Vec<u8> {
+    let payload = payload(&frame.msg);
+    assert!(
+        payload.len() as u64 <= MAX_PAYLOAD,
+        "frame payload {} exceeds MAX_PAYLOAD",
+        payload.len()
+    );
+    let mut w = BlobWriter::new();
+    w.bytes(MAGIC);
+    w.u32(VERSION);
+    w.u64(frame.request_id);
+    w.u8(frame.msg.op());
+    w.u64(payload.len() as u64);
+    w.bytes(&payload);
+    w.finish()
+}
+
+/// Write one frame to a stream (a single buffered `write_all`).
+pub fn write_frame(w: &mut impl Write, frame: &CellFrame) -> std::io::Result<()> {
+    w.write_all(&encode(frame))?;
+    w.flush()
+}
+
+/// Parse and validate a frame header; returns `(request_id, op, payload
+/// length)`. The length is already checked against [`MAX_PAYLOAD`].
+pub fn decode_header(hdr: &[u8; HEADER_LEN]) -> Result<(u64, u8, u64)> {
+    let mut r = BlobReader::new(hdr);
+    let magic = r.bytes(8)?;
+    if magic != MAGIC {
+        bail!("not an SMMFCELL frame (bad magic {magic:02x?})");
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        bail!("unsupported SMMFCELL version {version} (supported: {VERSION})");
+    }
+    let request_id = r.u64()?;
+    let op = r.u8()?;
+    let len = r.u64()?;
+    if len > MAX_PAYLOAD {
+        bail!("frame op {op} claims a {len}-byte payload (cap {MAX_PAYLOAD})");
+    }
+    r.finish()?;
+    Ok((request_id, op, len))
+}
+
+fn read_str(r: &mut BlobReader<'_>, what: &str) -> Result<String> {
+    let len = r.u32()? as usize;
+    if len > MAX_STR_LEN {
+        bail!("{what}: string length {len} exceeds the cap ({MAX_STR_LEN})");
+    }
+    String::from_utf8(r.bytes(len)?.to_vec()).with_context(|| format!("{what}: not valid UTF-8"))
+}
+
+/// Decode an op-specific payload. The full payload must be consumed —
+/// trailing bytes are rejected via `finish()`.
+pub fn decode_payload(op: u8, body: &[u8]) -> Result<CellMsg> {
+    let mut r = BlobReader::new(body);
+    let msg = match op {
+        OP_SUBMIT => {
+            let job = r.u64()?;
+            let run = read_str(&mut r, "Submit.run")?;
+            let model = read_str(&mut r, "Submit.model")?;
+            let len = r.u32()? as usize;
+            if len > MAX_CONFIG_LEN {
+                bail!("Submit.config: {len} bytes exceeds the cap ({MAX_CONFIG_LEN})");
+            }
+            // Length-vs-remaining check before the String allocation.
+            if r.remaining() < len {
+                bail!(
+                    "Submit.config: claims {len} bytes, only {} payload bytes remain",
+                    r.remaining()
+                );
+            }
+            let config = String::from_utf8(r.bytes(len)?.to_vec())
+                .context("Submit.config: not valid UTF-8")?;
+            CellMsg::Submit { job, run, model, config }
+        }
+        OP_POLL => CellMsg::Poll { job: r.u64()? },
+        OP_PING => CellMsg::Ping,
+        OP_SHUTDOWN => CellMsg::Shutdown,
+        OP_ACCEPTED => CellMsg::Accepted { job: r.u64()? },
+        OP_RUNNING => CellMsg::Running { job: r.u64()? },
+        OP_DONE => CellMsg::Done { job: r.u64()? },
+        OP_FAILED => {
+            let job = r.u64()?;
+            let note = read_str(&mut r, "Failed.note")?;
+            CellMsg::Failed { job, note }
+        }
+        OP_BUSY => CellMsg::Busy,
+        OP_PONG => CellMsg::Pong { running: r.u32()?, capacity: r.u32()? },
+        OP_BYE => CellMsg::Bye,
+        OP_ERR => CellMsg::Err { msg: read_str(&mut r, "Err.msg")? },
+        other => bail!("unknown SMMFCELL op {other}"),
+    };
+    r.finish().with_context(|| format!("decoding op {op} ({})", msg.name()))?;
+    Ok(msg)
+}
+
+/// Decode one complete frame from a byte slice (tests / in-memory use).
+/// The slice must hold exactly one frame.
+pub fn decode(buf: &[u8]) -> Result<CellFrame> {
+    if buf.len() < HEADER_LEN {
+        bail!("truncated frame: {} bytes, header alone needs {HEADER_LEN}", buf.len());
+    }
+    let hdr: [u8; HEADER_LEN] = buf[..HEADER_LEN].try_into().unwrap();
+    let (request_id, op, len) = decode_header(&hdr)?;
+    let body = &buf[HEADER_LEN..];
+    if (body.len() as u64) < len {
+        bail!("truncated frame: payload claims {len} bytes, {} present", body.len());
+    }
+    if (body.len() as u64) > len {
+        bail!("frame has {} trailing bytes", body.len() as u64 - len);
+    }
+    let msg = decode_payload(op, body)?;
+    Ok(CellFrame { request_id, msg })
+}
+
+/// Read one frame from a stream: header first (validated before the
+/// payload is buffered), then exactly `len` payload bytes.
+pub fn read_frame(r: &mut impl Read) -> Result<CellFrame> {
+    let mut hdr = [0u8; HEADER_LEN];
+    r.read_exact(&mut hdr).context("reading SMMFCELL frame header")?;
+    let (request_id, op, len) = decode_header(&hdr)?;
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)
+        .with_context(|| format!("reading {len}-byte payload of op {op}"))?;
+    let msg = decode_payload(op, &body)?;
+    Ok(CellFrame { request_id, msg })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_msgs() -> Vec<CellMsg> {
+        vec![
+            CellMsg::Submit {
+                job: 3,
+                run: "quad-adam-s0".into(),
+                model: "synthetic:tiny_lm".into(),
+                config: "name = \"x\"\n[train]\nsteps = 4\n".into(),
+            },
+            CellMsg::Poll { job: 9 },
+            CellMsg::Ping,
+            CellMsg::Shutdown,
+            CellMsg::Accepted { job: 3 },
+            CellMsg::Running { job: 3 },
+            CellMsg::Done { job: 3 },
+            CellMsg::Failed { job: 3, note: "diverged: non-finite loss".into() },
+            CellMsg::Busy,
+            CellMsg::Pong { running: 1, capacity: 2 },
+            CellMsg::Bye,
+            CellMsg::Err { msg: "unknown job 77".into() },
+        ]
+    }
+
+    #[test]
+    fn every_message_round_trips() {
+        for (i, msg) in all_msgs().into_iter().enumerate() {
+            let f = CellFrame { request_id: 100 + i as u64, msg };
+            let bytes = encode(&f);
+            assert_eq!(&bytes[..8], MAGIC);
+            assert_eq!(decode(&bytes).unwrap(), f, "frame {i}");
+        }
+    }
+
+    #[test]
+    fn request_reply_ranges_are_disjoint() {
+        for msg in all_msgs() {
+            let is_req = matches!(
+                msg,
+                CellMsg::Submit { .. } | CellMsg::Poll { .. } | CellMsg::Ping | CellMsg::Shutdown
+            );
+            assert_eq!(msg.is_request(), is_req, "{}", msg.name());
+            if is_req {
+                assert!(msg.op() < OP_ACCEPTED);
+            } else {
+                assert!(msg.op() >= OP_ACCEPTED);
+            }
+        }
+    }
+
+    #[test]
+    fn header_rejects_bad_magic_version_and_oversized_claims() {
+        let good = encode(&CellFrame { request_id: 1, msg: CellMsg::Ping });
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        assert!(decode(&bad).unwrap_err().to_string().contains("bad magic"));
+        let mut bad = good.clone();
+        bad[8] = 0xEE; // version
+        assert!(decode(&bad).unwrap_err().to_string().contains("version"));
+        let mut bad = good.clone();
+        bad[21..29].copy_from_slice(&u64::MAX.to_le_bytes()); // payload len
+        assert!(decode(&bad).unwrap_err().to_string().contains("cap"));
+    }
+
+    #[test]
+    fn trailing_and_truncated_payloads_are_rejected() {
+        let mut bytes = encode(&CellFrame { request_id: 7, msg: CellMsg::Poll { job: 1 } });
+        bytes.push(0); // trailing byte after the framed payload
+        assert!(decode(&bytes).unwrap_err().to_string().contains("trailing"));
+        let bytes = encode(&CellFrame { request_id: 7, msg: CellMsg::Poll { job: 1 } });
+        assert!(decode(&bytes[..bytes.len() - 1]).unwrap_err().to_string().contains("truncated"));
+        // in-payload trailing bytes (op says Ping, payload is non-empty)
+        assert!(decode_payload(OP_PING, &[0u8]).is_err());
+    }
+
+    #[test]
+    fn string_caps_are_checked_before_allocation() {
+        // A Submit whose config length field claims far more bytes than
+        // the payload holds must be rejected by the remaining-bytes
+        // check, not by an allocation attempt.
+        let mut w = crate::optim::blob::BlobWriter::new();
+        w.u64(1);
+        w.u32(1);
+        w.bytes(b"r");
+        w.u32(1);
+        w.bytes(b"m");
+        w.u32(60_000); // config "length" with no bytes behind it
+        let body = w.finish();
+        let err = decode_payload(OP_SUBMIT, &body).unwrap_err().to_string();
+        assert!(err.contains("remain"), "{err}");
+        // and an over-cap claim is rejected even earlier
+        let mut w = crate::optim::blob::BlobWriter::new();
+        w.u64(1);
+        w.u32(1);
+        w.bytes(b"r");
+        w.u32(1);
+        w.bytes(b"m");
+        w.u32((MAX_CONFIG_LEN + 1) as u32);
+        let body = w.finish();
+        let err = decode_payload(OP_SUBMIT, &body).unwrap_err().to_string();
+        assert!(err.contains("cap"), "{err}");
+        // over-long outgoing notes are clipped on a char boundary
+        let long = "é".repeat(MAX_STR_LEN);
+        let clipped = clip_str(&long);
+        assert!(clipped.len() <= MAX_STR_LEN);
+        assert!(long.starts_with(clipped));
+    }
+
+    #[test]
+    fn stream_roundtrip_back_to_back() {
+        let frames: Vec<CellFrame> = all_msgs()
+            .into_iter()
+            .enumerate()
+            .map(|(i, msg)| CellFrame { request_id: i as u64, msg })
+            .collect();
+        let mut buf = Vec::new();
+        for f in &frames {
+            write_frame(&mut buf, f).unwrap();
+        }
+        let mut r = &buf[..];
+        for f in &frames {
+            assert_eq!(&read_frame(&mut r).unwrap(), f);
+        }
+        assert!(r.is_empty());
+    }
+}

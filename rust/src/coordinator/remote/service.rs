@@ -1,0 +1,374 @@
+//! The `repro worker` daemon: accept suite cells over `SMMFCELL`,
+//! execute them through the exact same
+//! [`suite::execute_cell`](crate::coordinator::suite) path the local
+//! thread pool uses, and answer polls with the job's state.
+//!
+//! Thread topology (all `std::thread`, mirroring `server::service`):
+//!
+//! * **acceptor** — non-blocking accept loop; spawns one handler thread
+//!   per connection.
+//! * **handlers** (one per connection) — strictly sequential frame →
+//!   reply. A `Submit` past the concurrent-cell capacity is answered
+//!   [`CellMsg::Busy`] immediately; the worker never queues unbounded
+//!   work (the dispatcher owns the queue).
+//! * **executors** (one per running cell) — train the cell, then record
+//!   `Done` / `Failed` in the job table. A panicking cell is caught and
+//!   recorded as `Failed` with a `FAILED` marker — same isolation
+//!   contract as [`workers::fan_out_recover`](crate::coordinator::workers).
+//!
+//! Cells leave the *identical* on-disk artifacts a local run leaves
+//! (`<out_dir>/<suite>/<run>/{metrics.jsonl,csv, summary.json}`,
+//! `FAILED` on error), into paths resolved against the worker's working
+//! directory. That is deliberate: the re-entry cache and the report
+//! generator read only those files, so when coordinator and workers
+//! share a filesystem (the loopback smoke / e2e setup) a completed
+//! remote cell is indistinguishable from a completed local one.
+//!
+//! Submits are idempotent on the job id: re-submitting a known id
+//! answers with the job's current state instead of training twice —
+//! the dispatcher leans on this when it retries after a lost reply.
+//!
+//! `crash_after_accepts` is the chaos knob for the worker-death e2e: the
+//! N-th accepted submit sets a `crashed` latch *without replying* and
+//! every connection goes silent, exactly like a kill -9 — the
+//! dispatcher's lease timeout has to notice and re-dispatch.
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::{self, JoinHandle};
+use std::time::Duration;
+
+use crate::coordinator::config::{ExperimentConfig, SuiteCell};
+use crate::coordinator::remote::protocol::{self, CellFrame, CellMsg};
+use crate::coordinator::suite::{self, CellStatus};
+use crate::coordinator::workers::panic_note;
+
+/// `repro worker` knobs.
+#[derive(Clone, Debug)]
+pub struct WorkerOptions {
+    /// Listen address (`127.0.0.1:0` picks an ephemeral port).
+    pub listen: String,
+    /// Concurrent cells; a submit past this is answered `Busy`.
+    pub capacity: usize,
+    /// AOT artifacts directory for artifact-backed cells.
+    pub artifacts_dir: String,
+    /// Per-connection read/write timeouts (`None` = block forever).
+    pub io_timeout: Option<Duration>,
+    /// Chaos injector: go silent (no replies, ever again) the moment the
+    /// N-th submit is accepted, stranding it mid-flight. `0` = never.
+    pub crash_after_accepts: u64,
+}
+
+impl Default for WorkerOptions {
+    fn default() -> Self {
+        Self {
+            listen: "127.0.0.1:0".into(),
+            capacity: 1,
+            artifacts_dir: "artifacts".into(),
+            io_timeout: Some(Duration::from_secs(30)),
+            crash_after_accepts: 0,
+        }
+    }
+}
+
+/// Final counters, printed by `repro worker` on shutdown.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct WorkerStats {
+    /// Submits accepted (cells started).
+    pub accepted: u64,
+    /// Cells that finished with a finite-loss summary.
+    pub done: u64,
+    /// Cells that errored, diverged or panicked.
+    pub failed: u64,
+    /// Submits bounced at the capacity limit.
+    pub busy: u64,
+}
+
+enum JobState {
+    Running,
+    Done,
+    Failed(String),
+}
+
+struct Shared {
+    jobs: Mutex<HashMap<u64, (String, JobState)>>,
+    shutdown: AtomicBool,
+    /// The chaos latch: once set, every handler goes silent.
+    crashed: AtomicBool,
+    accepted: AtomicU64,
+    done: AtomicU64,
+    failed: AtomicU64,
+    busy: AtomicU64,
+    capacity: usize,
+    artifacts_dir: String,
+    crash_after_accepts: u64,
+}
+
+impl Shared {
+    fn running(&self) -> u32 {
+        let jobs = self.jobs.lock().unwrap();
+        jobs.values().filter(|(_, s)| matches!(s, JobState::Running)).count() as u32
+    }
+
+    fn stats(&self) -> WorkerStats {
+        WorkerStats {
+            accepted: self.accepted.load(Ordering::Relaxed),
+            done: self.done.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            busy: self.busy.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A running cell-execution worker. [`WorkerServer::start`] returns once
+/// the listener is bound; [`WorkerServer::wait`] blocks until a
+/// [`CellMsg::Shutdown`] arrives, drains the running cells, and returns
+/// the final counters.
+pub struct WorkerServer {
+    /// The bound address (resolves `:0` to the real ephemeral port).
+    pub addr: SocketAddr,
+    shared: Arc<Shared>,
+    acceptor: Option<JoinHandle<()>>,
+}
+
+impl WorkerServer {
+    /// Bind and start serving.
+    pub fn start(opts: &WorkerOptions) -> Result<WorkerServer> {
+        if opts.capacity == 0 {
+            anyhow::bail!("worker capacity must be >= 1");
+        }
+        let listener = TcpListener::bind(&opts.listen)
+            .with_context(|| format!("binding {}", opts.listen))?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let shared = Arc::new(Shared {
+            jobs: Mutex::new(HashMap::new()),
+            shutdown: AtomicBool::new(false),
+            crashed: AtomicBool::new(false),
+            accepted: AtomicU64::new(0),
+            done: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+            busy: AtomicU64::new(0),
+            capacity: opts.capacity,
+            artifacts_dir: opts.artifacts_dir.clone(),
+            crash_after_accepts: opts.crash_after_accepts,
+        });
+        let acceptor = {
+            let shared = shared.clone();
+            let io_timeout = opts.io_timeout;
+            thread::spawn(move || loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let shared = shared.clone();
+                        thread::spawn(move || handle_conn(stream, shared, io_timeout));
+                    }
+                    // WouldBlock (idle) and transient accept errors both
+                    // back off briefly; only the shutdown flag exits.
+                    Err(_) => thread::sleep(Duration::from_millis(2)),
+                }
+            })
+        };
+        Ok(WorkerServer { addr, shared, acceptor: Some(acceptor) })
+    }
+
+    /// Current counters (live — callable while serving).
+    pub fn stats(&self) -> WorkerStats {
+        self.shared.stats()
+    }
+
+    /// Ask the worker to stop (same effect as a `Shutdown` frame).
+    pub fn stop(&self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+    }
+
+    /// Block until shutdown, drain running cells, return the counters.
+    pub fn wait(mut self) -> WorkerStats {
+        while !self.shared.shutdown.load(Ordering::SeqCst) {
+            thread::sleep(Duration::from_millis(10));
+        }
+        // Graceful drain: let in-flight cells finish so their verdict
+        // files land (a crashed worker skips this — that's the chaos).
+        while !self.shared.crashed.load(Ordering::SeqCst) && self.shared.running() > 0 {
+            thread::sleep(Duration::from_millis(10));
+        }
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        self.shared.stats()
+    }
+}
+
+impl Drop for WorkerServer {
+    fn drop(&mut self) {
+        // Belt and braces: an abandoned handle must not keep the accept
+        // loop spinning.
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Rebuild the [`SuiteCell`] a submit describes. The config text is the
+/// coordinator's canonical `to_toml` rendering, so `from_toml_str`
+/// reproduces the resolved config exactly (pinned by the round-trip
+/// test in `coordinator::config`). Paths are validated — a worker
+/// executes with filesystem access, so a hostile `out_dir`/`name` must
+/// die here, not in `create_dir_all`.
+fn cell_from_submit(run: &str, model: &str, config: &str) -> Result<SuiteCell> {
+    let cfg: ExperimentConfig = ExperimentConfig::from_toml_str(config)?;
+    for (what, p) in [("name", cfg.name.as_str()), ("out_dir", cfg.out_dir.as_str())] {
+        if p.is_empty() || p.starts_with('/') || p.split('/').any(|seg| seg == "..") {
+            return Err(anyhow!("refusing cell {what} {p:?} (absolute or parent-escaping)"));
+        }
+    }
+    Ok(SuiteCell {
+        run: run.to_string(),
+        model: model.to_string(),
+        optimizer: cfg.optimizer,
+        seed: cfg.seed,
+        cfg,
+    })
+}
+
+fn state_reply(job: u64, state: &JobState) -> CellMsg {
+    match state {
+        JobState::Running => CellMsg::Running { job },
+        JobState::Done => CellMsg::Done { job },
+        JobState::Failed(note) => {
+            CellMsg::Failed { job, note: protocol::clip_str(note).to_string() }
+        }
+    }
+}
+
+/// Serve one submit: register the job, spawn its executor thread,
+/// answer `Accepted`. Returns the reply to send.
+fn handle_submit(shared: &Arc<Shared>, job: u64, run: String, model: String, config: String) -> CellMsg {
+    {
+        let jobs = shared.jobs.lock().unwrap();
+        // Idempotent re-submit: answer with the current state. The
+        // dispatcher hits this when a reply was lost in flight.
+        if let Some((_, state)) = jobs.get(&job) {
+            return match state {
+                JobState::Running => CellMsg::Accepted { job },
+                other => state_reply(job, other),
+            };
+        }
+        if jobs.values().filter(|(_, s)| matches!(s, JobState::Running)).count()
+            >= shared.capacity
+        {
+            shared.busy.fetch_add(1, Ordering::Relaxed);
+            return CellMsg::Busy;
+        }
+    }
+    let cell = match cell_from_submit(&run, &model, &config) {
+        Ok(c) => c,
+        Err(e) => return CellMsg::Err { msg: protocol::clip_str(&format!("{e:#}")).to_string() },
+    };
+    {
+        let mut jobs = shared.jobs.lock().unwrap();
+        // Re-check under the lock (another handler may have raced us in).
+        if let Some((_, state)) = jobs.get(&job) {
+            return match state {
+                JobState::Running => CellMsg::Accepted { job },
+                other => state_reply(job, other),
+            };
+        }
+        if jobs.values().filter(|(_, s)| matches!(s, JobState::Running)).count()
+            >= shared.capacity
+        {
+            shared.busy.fetch_add(1, Ordering::Relaxed);
+            return CellMsg::Busy;
+        }
+        jobs.insert(job, (run.clone(), JobState::Running));
+    }
+    let n = shared.accepted.fetch_add(1, Ordering::SeqCst) + 1;
+    println!("[worker] job {job} {run}: accepted ({model})");
+    if shared.crash_after_accepts > 0 && n >= shared.crash_after_accepts {
+        // Chaos: strand this job — no executor, no reply, total silence.
+        println!("[worker] injected crash after {n} accept(s) — going silent");
+        shared.crashed.store(true, Ordering::SeqCst);
+        shared.shutdown.store(true, Ordering::SeqCst);
+        return CellMsg::Busy; // never sent — the handler checks `crashed`
+    }
+    let shared = shared.clone();
+    thread::spawn(move || {
+        let tag = format!("[worker] job {job} {}", cell.run);
+        let artifacts = shared.artifacts_dir.clone();
+        let status = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            suite::execute_cell(&tag, &cell, &artifacts)
+        })) {
+            Ok(s) => s,
+            Err(payload) => suite::fail_cell(
+                &tag,
+                &suite::cell_dir(&cell),
+                format!("cell worker panicked: {}", panic_note(payload.as_ref())),
+            ),
+        };
+        let state = match status {
+            CellStatus::Failed(note) => {
+                shared.failed.fetch_add(1, Ordering::Relaxed);
+                JobState::Failed(note)
+            }
+            // Ran, or Skipped (can't happen — execute_cell never skips);
+            // either way the summary is on disk.
+            _ => {
+                shared.done.fetch_add(1, Ordering::Relaxed);
+                JobState::Done
+            }
+        };
+        shared.jobs.lock().unwrap().insert(job, (cell.run.clone(), state));
+    });
+    CellMsg::Accepted { job }
+}
+
+/// Per-connection handler: strictly sequential frame → reply.
+fn handle_conn(stream: TcpStream, shared: Arc<Shared>, io_timeout: Option<Duration>) {
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(io_timeout).ok();
+    stream.set_write_timeout(io_timeout).ok();
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = std::io::BufReader::new(read_half);
+    let mut writer = std::io::BufWriter::new(stream);
+    loop {
+        // Read errors (EOF on disconnect, or a malformed frame) end the
+        // connection; the protocol has no resync point.
+        let Ok(frame) = protocol::read_frame(&mut reader) else { return };
+        if shared.crashed.load(Ordering::SeqCst) {
+            return; // the chaos latch: silence, not even an error reply
+        }
+        let id = frame.request_id;
+        let reply = match frame.msg {
+            CellMsg::Submit { job, run, model, config } => {
+                handle_submit(&shared, job, run, model, config)
+            }
+            CellMsg::Poll { job } => {
+                let jobs = shared.jobs.lock().unwrap();
+                match jobs.get(&job) {
+                    Some((_, state)) => state_reply(job, state),
+                    None => CellMsg::Err { msg: format!("unknown job {job}") },
+                }
+            }
+            CellMsg::Ping => {
+                CellMsg::Pong { running: shared.running(), capacity: shared.capacity as u32 }
+            }
+            CellMsg::Shutdown => CellMsg::Bye,
+            other => CellMsg::Err { msg: format!("{} is not a request", other.name()) },
+        };
+        if shared.crashed.load(Ordering::SeqCst) {
+            return; // crash injected while handling — stay silent
+        }
+        let done = matches!(reply, CellMsg::Bye);
+        if protocol::write_frame(&mut writer, &CellFrame { request_id: id, msg: reply }).is_err()
+        {
+            return;
+        }
+        if done {
+            shared.shutdown.store(true, Ordering::SeqCst);
+            return;
+        }
+    }
+}

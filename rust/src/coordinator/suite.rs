@@ -1,29 +1,39 @@
 //! Suite scheduler: expand a [`SuiteConfig`] run matrix and schedule the
-//! independent cells over the [`workers::fan_out`] pool.
+//! independent cells over a backend — the in-process
+//! [`workers::fan_out_recover`] thread pool, or the
+//! [`remote`](crate::coordinator::remote) dispatcher when the worker
+//! spec names `repro worker` daemons (`workers = "remote:host:port,…"`).
 //!
 //! Each expanded cell trains one `(model, optimizer, seed)` combination
 //! into `<out_dir>/<suite>/<run>/` with the same artifacts a standalone
 //! `repro train` run leaves (`metrics.{jsonl,csv}`, `summary.json`).
-//! Three properties make suites safe to run repeatedly:
+//! Three properties make suites safe to run repeatedly, on any backend:
 //!
 //! * **Resume-aware re-entry** — a cell whose `summary.json` already
 //!   exists is skipped (`CellStatus::Skipped`), so an interrupted suite
 //!   picks up where it left off and a completed suite is a no-op that
 //!   just re-renders the report from identical inputs (this is what
-//!   makes `docs/RESULTS.md` reproducible byte-for-byte).
-//! * **Failure isolation** — a cell that errors or diverges writes a
-//!   `FAILED` marker (first line = the error) and the suite carries on;
-//!   failed cells are retried on the next invocation and listed in the
-//!   report instead of poisoning the aggregate tables.
+//!   makes `docs/RESULTS.md` reproducible byte-for-byte). The cache is
+//!   purely on-disk state, so it carries *across backends*: cells a
+//!   remote run completed are skipped by a local re-run and vice versa.
+//! * **Failure isolation** — a cell that errors, diverges or panics
+//!   writes a `FAILED` marker (first line = the error) and the suite
+//!   carries on; failed cells are retried on the next invocation and
+//!   listed in the report instead of poisoning the aggregate tables.
 //! * **Independence** — cells never share mutable state: artifact cells
 //!   open their own [`Runtime`] inside the worker (exactly like the
 //!   data-parallel workers), synthetic cells are pure Rust.
+//!
+//! Statuses are committed in expansion order regardless of which worker
+//! finished first, and the report generator reads only the on-disk
+//! per-cell verdicts — so `docs/RESULTS.md` / `BENCH_suite.json` bytes
+//! never depend on the backend or on completion timing.
 
 use anyhow::Result;
 use std::path::{Path, PathBuf};
 
-use crate::coordinator::config::{SuiteCell, SuiteConfig};
-use crate::coordinator::{experiments, workers};
+use crate::coordinator::config::{SuiteCell, SuiteConfig, WorkerSpec};
+use crate::coordinator::{experiments, remote, workers};
 use crate::runtime::Runtime;
 use crate::train::metrics;
 
@@ -32,15 +42,26 @@ use crate::train::metrics;
 pub struct SuiteOptions {
     /// Re-run cells even when their `summary.json` already exists.
     pub force: bool,
-    /// Worker-pool width override (`0` = use `[suite] workers`).
-    pub workers: usize,
+    /// CLI override for the suite's worker spec (`--workers
+    /// "N | local:N | remote:HOST:PORT,…"`); `None` = use `[suite]
+    /// workers`.
+    pub workers: Option<WorkerSpec>,
     /// AOT artifacts directory for artifact-backed cells.
     pub artifacts_dir: String,
+    /// Remote backend: a worker whose in-flight cells make no observable
+    /// progress for this long is declared dead and its cells are
+    /// re-dispatched to the survivors.
+    pub lease_timeout_ms: u64,
 }
 
 impl Default for SuiteOptions {
     fn default() -> Self {
-        Self { force: false, workers: 0, artifacts_dir: "artifacts".into() }
+        Self {
+            force: false,
+            workers: None,
+            artifacts_dir: "artifacts".into(),
+            lease_timeout_ms: 10_000,
+        }
     }
 }
 
@@ -87,38 +108,78 @@ pub fn run_suite(suite: &SuiteConfig, opts: &SuiteOptions) -> Result<SuiteOutcom
     let cells = suite.expand()?;
     let suite_dir = Path::new(&suite.out_dir).join(&suite.name);
     std::fs::create_dir_all(&suite_dir)?;
-    let n_workers = if opts.workers > 0 { opts.workers } else { suite.workers };
+    let spec = opts.workers.clone().unwrap_or_else(|| suite.workers.clone());
     let total = cells.len();
     println!(
-        "[suite {}] {total} cells over {n_workers} worker(s) -> {}",
+        "[suite {}] {total} cells over {} -> {}",
         suite.name,
+        spec.describe(),
         suite_dir.display()
     );
-    let statuses = workers::fan_out(cells.clone(), n_workers, |i, cell| {
-        run_cell(i, total, &cell, opts)
-    });
+    let statuses = if spec.is_local_only() {
+        // A panicking cell is recovered into a FAILED marker instead of
+        // tearing down the pool (same contract as the remote workers).
+        workers::fan_out_recover(
+            cells.clone(),
+            spec.local.max(1),
+            |i, cell| run_cell(i, total, &cell, opts),
+            |i, note| {
+                let cell = &cells[i];
+                fail_cell(
+                    &cell_tag(i, total, &cell.run),
+                    &cell_dir(cell),
+                    format!("cell worker panicked: {note}"),
+                )
+            },
+        )
+    } else {
+        remote::dispatch::run_dispatched(&cells, &spec, opts)?
+    };
     Ok(SuiteOutcome { suite_dir, cells: cells.into_iter().zip(statuses).collect() })
 }
 
-fn run_cell(idx: usize, total: usize, cell: &SuiteCell, opts: &SuiteOptions) -> CellStatus {
-    let tag = format!("[suite] ({}/{total}) {}", idx + 1, cell.run);
-    let dir = Path::new(&cell.cfg.out_dir).join(&cell.cfg.name);
+/// `[suite] (i/total) <run>` — the per-cell log prefix.
+pub(crate) fn cell_tag(idx: usize, total: usize, run: &str) -> String {
+    format!("[suite] ({}/{total}) {run}", idx + 1)
+}
+
+/// `<out_dir>/<suite>/<run>/` for an expanded cell.
+pub(crate) fn cell_dir(cell: &SuiteCell) -> PathBuf {
+    Path::new(&cell.cfg.out_dir).join(&cell.cfg.name)
+}
+
+/// The re-entry cache check: a cell is cached when its `summary.json`
+/// exists and no `FAILED` marker flags it for retry. Pure on-disk
+/// state — both backends (and the remote dispatcher's re-dispatch
+/// path) consult the same verdict files.
+pub(crate) fn cell_cached(cell: &SuiteCell, force: bool) -> bool {
     let summary = metrics::summary_path(&cell.cfg.out_dir, &cell.cfg.name);
-    let failed_marker = dir.join("FAILED");
-    if !opts.force && summary.exists() && !failed_marker.exists() {
+    !force && summary.exists() && !cell_dir(cell).join("FAILED").exists()
+}
+
+fn run_cell(idx: usize, total: usize, cell: &SuiteCell, opts: &SuiteOptions) -> CellStatus {
+    let tag = cell_tag(idx, total, &cell.run);
+    if cell_cached(cell, opts.force) {
         println!("{tag}: cached (summary.json exists — use --force to re-run)");
         return CellStatus::Skipped;
     }
-    // A retry owns the cell directory's verdict files again.
-    let _ = std::fs::remove_file(&failed_marker);
     if opts.force {
-        let _ = std::fs::remove_file(&summary);
+        let _ = std::fs::remove_file(metrics::summary_path(&cell.cfg.out_dir, &cell.cfg.name));
     }
+    execute_cell(&tag, cell, &opts.artifacts_dir)
+}
+
+/// Train one cell (no cache check — the caller decided). Shared by the
+/// local pool, the remote dispatcher's local lanes, and the `repro
+/// worker` daemon, which all leave identical on-disk artifacts.
+pub(crate) fn execute_cell(tag: &str, cell: &SuiteCell, artifacts_dir: &str) -> CellStatus {
+    let dir = cell_dir(cell);
+    // A retry owns the cell directory's verdict files again.
+    let _ = std::fs::remove_file(dir.join("FAILED"));
     let result = if let Some(inv) = cell.model.strip_prefix("synthetic:") {
         experiments::run_synthetic_experiment(&cell.cfg, inv)
     } else {
-        Runtime::open(&opts.artifacts_dir)
-            .and_then(|rt| experiments::run_experiment(&rt, &cell.cfg))
+        Runtime::open(artifacts_dir).and_then(|rt| experiments::run_experiment(&rt, &cell.cfg))
     };
     match result {
         Ok(s) if s.final_loss.is_finite() => {
@@ -128,12 +189,12 @@ fn run_cell(idx: usize, total: usize, cell: &SuiteCell, opts: &SuiteOptions) -> 
             );
             CellStatus::Ran
         }
-        Ok(s) => fail_cell(&tag, &dir, format!("diverged: non-finite loss after {} steps", s.steps)),
-        Err(e) => fail_cell(&tag, &dir, format!("{e:#}")),
+        Ok(s) => fail_cell(tag, &dir, format!("diverged: non-finite loss after {} steps", s.steps)),
+        Err(e) => fail_cell(tag, &dir, format!("{e:#}")),
     }
 }
 
-fn fail_cell(tag: &str, dir: &Path, note: String) -> CellStatus {
+pub(crate) fn fail_cell(tag: &str, dir: &Path, note: String) -> CellStatus {
     println!("{tag}: FAILED — {note}");
     // Best-effort marker: the suite keeps going even if the cell dir is
     // unwritable (the report then lists the cell as incomplete instead).

@@ -34,11 +34,60 @@ use crate::train::TrainGraph;
 /// task costs balance automatically; `f` receives `(task index, task)`.
 /// Failure isolation is the *caller's* job: have `f` return a
 /// `Result`-like value rather than panic (a panicking task tears down
-/// the whole pool, like any thread panic).
+/// the whole pool, like any thread panic) — or use
+/// [`fan_out_recover`], which maps a per-task panic into a caller-chosen
+/// failure value instead.
 pub fn fan_out<T, R>(
     tasks: Vec<T>,
     n_workers: usize,
     f: impl Fn(usize, T) -> R + Sync,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+{
+    fan_out_impl(tasks, n_workers, &f)
+}
+
+/// [`fan_out`] with panic isolation: a task that panics no longer
+/// poisons the whole pool — the panic is caught on the worker thread,
+/// `recover(index, panic message)` produces that slot's result, and the
+/// worker moves on to the next task. `repro suite` uses this to turn a
+/// panicking cell into a `FAILED` marker instead of an aborted sweep.
+pub fn fan_out_recover<T, R>(
+    tasks: Vec<T>,
+    n_workers: usize,
+    f: impl Fn(usize, T) -> R + Sync,
+    recover: impl Fn(usize, String) -> R + Sync,
+) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+{
+    fan_out_impl(tasks, n_workers, &|i, t| {
+        match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i, t))) {
+            Ok(r) => r,
+            Err(payload) => recover(i, panic_note(payload.as_ref())),
+        }
+    })
+}
+
+/// Render a caught panic payload as a short human-readable note
+/// (panics carry `&str` or `String` in practice).
+pub(crate) fn panic_note(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panicked with a non-string payload".to_string()
+    }
+}
+
+fn fan_out_impl<T, R>(
+    tasks: Vec<T>,
+    n_workers: usize,
+    f: &(impl Fn(usize, T) -> R + Sync),
 ) -> Vec<R>
 where
     T: Send,
@@ -204,5 +253,35 @@ mod tests {
             }
         });
         assert_eq!(out, vec![Ok(1), Err("zero"), Ok(3)]);
+    }
+
+    /// A panicking task must surface as that slot's recovered value —
+    /// not poison the pool: every other task still completes, order is
+    /// preserved, and the panic message reaches the recovery hook.
+    #[test]
+    fn fan_out_recover_isolates_panicking_tasks() {
+        let tasks: Vec<usize> = (0..24).collect();
+        let out = fan_out_recover(
+            tasks,
+            3,
+            |_, t| if t % 7 == 3 { panic!("boom {t}") } else { Ok(t) },
+            |i, note| Err(format!("task {i}: {note}")),
+        );
+        assert_eq!(out.len(), 24);
+        for (i, r) in out.iter().enumerate() {
+            if i % 7 == 3 {
+                assert_eq!(r, &Err(format!("task {i}: boom {i}")));
+            } else {
+                assert_eq!(r, &Ok(i));
+            }
+        }
+        // String panic payloads (format!-style) are captured too.
+        let out = fan_out_recover(
+            vec![0usize],
+            1,
+            |_, _| -> &'static str { std::panic::panic_any("typed".to_string()) },
+            |_, note| if note == "typed" { "recovered" } else { "wrong note" },
+        );
+        assert_eq!(out, vec!["recovered"]);
     }
 }

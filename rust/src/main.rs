@@ -11,6 +11,8 @@
 //! repro e2e [--steps 300]        # end-to-end LM training driver (SMMF)
 //! repro train --artifact lm_tiny_grads --optimizer smmf --steps 100
 //! repro suite rust/tests/suite_smoke.toml   # optimizer × model × seed sweep
+//! repro worker --listen 127.0.0.1:7131      # remote suite-cell executor
+//! repro suite s.toml --workers remote:127.0.0.1:7131   # …dispatched over SMMFCELL
 //! repro report runs/smoke        # re-render docs/RESULTS.md from a suite dir
 //! repro dp --workers 2           # data-parallel demo
 //! repro fused --steps 50         # compiled (Pallas) SMMF train step
@@ -24,7 +26,7 @@ use anyhow::{anyhow, bail, Result};
 use std::path::Path;
 
 use smmf_repro::coordinator::experiments as exp;
-use smmf_repro::coordinator::{report, suite, workers, ExperimentConfig, SuiteConfig};
+use smmf_repro::coordinator::{report, suite, workers, ExperimentConfig, SuiteConfig, WorkerSpec};
 use smmf_repro::models;
 use smmf_repro::optim::OptKind;
 use smmf_repro::runtime::Runtime;
@@ -73,6 +75,7 @@ fn run(args: &Args) -> Result<()> {
         "e2e" => cmd_e2e(args),
         "train" => cmd_train(args),
         "suite" => cmd_suite(args),
+        "worker" => cmd_worker(args),
         "report" => cmd_report(args),
         "dp" => cmd_dp(args),
         "fused" => cmd_fused(args),
@@ -100,10 +103,21 @@ commands:
   suite FILE.toml   run a declarative optimizer × model × seed sweep
                     ([[suite.run]] blocks; see rust/tests/suite_smoke.toml)
                     with failure isolation + resume-aware re-entry, then
-                    regenerate the paper-style report (--workers N,
+                    regenerate the paper-style report
+                    (--workers \"N | local:N | remote:HOST:PORT,...\" —
+                    remote specs dispatch cells to `repro worker`
+                    daemons over SMMFCELL with lease-based re-dispatch
+                    [--lease-timeout-ms MS, default 10000]; reports stay
+                    byte-identical to a local run,
                     --force re-runs cached cells, --out-dir DIR,
                     --docs PATH [default docs/RESULTS.md],
                     --bench-json PATH [default BENCH_suite.json])
+  worker            suite-cell execution daemon: accepts cells over the
+                    SMMFCELL wire protocol and runs them through the
+                    same path as a local suite (--listen HOST:PORT
+                    [default 127.0.0.1:0], --capacity N [concurrent
+                    cells, default 1], --artifacts DIR; stops on a
+                    Shutdown op; see docs/SUITE_WIRE.md)
   report DIR        re-render the report from an existing suite dir
                     (runs/<suite>) without training (--name, --docs,
                     --bench-json as above)
@@ -383,10 +397,18 @@ fn cmd_suite(args: &Args) -> Result<()> {
         })?;
     let mut suite_cfg = SuiteConfig::from_toml(Path::new(file))?;
     suite_cfg.out_dir = args.str_or("out-dir", &suite_cfg.out_dir);
+    // `--workers` accepts the full spec grammar ("3", "local:2",
+    // "remote:host:port,host:port", mixes) and overrides `[suite]
+    // workers`; absent means the file (or its default) decides.
+    let workers = args
+        .opt("workers")
+        .map(|s| WorkerSpec::parse(s).map_err(|e| anyhow!("--workers: {e}")))
+        .transpose()?;
     let opts = suite::SuiteOptions {
         force: args.has_flag("force"),
-        workers: args.usize_or("workers", 0),
+        workers,
         artifacts_dir: artifacts_dir(args),
+        lease_timeout_ms: args.u64_or("lease-timeout-ms", 10_000),
     };
     let outcome = suite::run_suite(&suite_cfg, &opts)?;
     let (ran, skipped, failed) = outcome.counts();
@@ -403,6 +425,32 @@ fn cmd_suite(args: &Args) -> Result<()> {
             outcome.suite_dir
         );
     }
+    Ok(())
+}
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    use smmf_repro::coordinator::remote::{WorkerOptions, WorkerServer};
+    let capacity = args.count_or("capacity", 1).map_err(|e| anyhow!(e))?;
+    let opts = WorkerOptions {
+        listen: args.str_or("listen", "127.0.0.1:0"),
+        capacity,
+        artifacts_dir: artifacts_dir(args),
+        // Test-only chaos knob (undocumented in HELP on purpose): go
+        // silent after N accepted submits, like a kill -9.
+        crash_after_accepts: args.u64_or("crash-after", 0),
+        ..WorkerOptions::default()
+    };
+    let server = WorkerServer::start(&opts)?;
+    println!("[worker] listening on {} (capacity {})", server.addr, opts.capacity);
+    println!(
+        "[worker] point a suite at it: repro suite <suite.toml> --workers \"remote:{}\"",
+        server.addr
+    );
+    let stats = server.wait();
+    println!(
+        "[worker] stopped — {} accepted, {} done, {} failed, {} busy bounce(s)",
+        stats.accepted, stats.done, stats.failed, stats.busy
+    );
     Ok(())
 }
 

@@ -292,7 +292,9 @@ pub enum WeightDecayMode {
 
 /// Shared hyper-parameters (union over all optimizers; each reads the
 /// fields it uses; defaults follow the paper's Appendix L tables).
-#[derive(Clone, Debug)]
+/// `PartialEq` backs the `SMMFCELL` wire round-trip guard
+/// ([`crate::coordinator::ExperimentConfig`] `to_toml`/`from_toml_str`).
+#[derive(Clone, Debug, PartialEq)]
 pub struct OptimConfig {
     pub lr: f32,
     /// 1st-moment coefficient (β1 everywhere).

@@ -9,6 +9,7 @@ use std::time::Duration;
 
 use crate::server::protocol::{self, EpochView, Frame, Msg, ServerStats};
 use crate::tensor::Tensor;
+use crate::util::backoff::Backoff;
 use crate::util::rng::Pcg32;
 
 /// Default socket read/write timeout: long enough for any barrier wait
@@ -20,9 +21,11 @@ pub const DEFAULT_IO_TIMEOUT: Duration = Duration::from_secs(30);
 /// consecutive bounce, capped at [`BACKOFF_CAP_US`] µs, with ±25%
 /// deterministic jitter (a fixed-seed PCG stream — reproducible runs,
 /// but concurrent clients still decorrelate because each sleeps a
-/// different number of times).
-pub const BACKOFF_BASE_US: u64 = 200;
-pub const BACKOFF_CAP_US: u64 = 50_000;
+/// different number of times). The machinery lives in [`util::backoff`]
+/// (shared with the remote suite dispatcher); the constants are
+/// re-exported here for compatibility, and the extraction is pinned
+/// bit-unchanged by `util::backoff`'s jitter-sequence tests.
+pub use crate::util::backoff::{BACKOFF_BASE_US, BACKOFF_CAP_US};
 
 /// Outcome of a [`Client::push_grad`]: the terminal replies a pusher
 /// must distinguish without string-matching.
@@ -62,11 +65,9 @@ pub struct Client {
     next_id: u64,
     /// `Busy` bounces absorbed by [`Client::call_retry`].
     pub busy_retries: u64,
-    /// Deterministic jitter stream for the busy backoff.
-    jitter: Pcg32,
-    /// Consecutive `Busy` bounces (drives the exponential backoff;
-    /// resets on any non-Busy reply).
-    backoff_level: u32,
+    /// Shared backoff machinery: deterministic jitter stream plus the
+    /// consecutive-bounce level (reset on any non-Busy reply).
+    backoff: Backoff,
 }
 
 impl Client {
@@ -94,8 +95,7 @@ impl Client {
             writer: BufWriter::new(stream),
             next_id: 1,
             busy_retries: 0,
-            jitter: Pcg32::new(0x6a17_7e72),
-            backoff_level: 0,
+            backoff: Backoff::new(),
         })
     }
 
@@ -122,14 +122,10 @@ impl Client {
             match self.call(msg.clone())? {
                 Msg::Busy => {
                     self.busy_retries += 1;
-                    let base = (BACKOFF_BASE_US << self.backoff_level.min(16)).min(BACKOFF_CAP_US);
-                    // ±25% jitter: scale by a factor in [0.75, 1.25).
-                    let us = base * (750 + self.jitter.below(500) as u64) / 1000;
-                    self.backoff_level += 1;
-                    std::thread::sleep(Duration::from_micros(us));
+                    self.backoff.sleep();
                 }
                 reply => {
-                    self.backoff_level = 0;
+                    self.backoff.reset();
                     return Ok(reply);
                 }
             }

@@ -1,0 +1,138 @@
+//! Capped exponential `Busy` backoff with deterministic jitter.
+//!
+//! Extracted from the optimizer-state server client so every subsystem
+//! that absorbs `Busy` backpressure — [`crate::server::Client::call_retry`]
+//! and the remote suite dispatcher (`coordinator::remote`) — shares one
+//! retry-timing implementation. The sequence is a pure function of the
+//! seed: a fixed-seed PCG stream keeps runs reproducible, while
+//! concurrent clients still decorrelate because each sleeps a different
+//! number of times. The exact delay sequence is pinned by the unit tests
+//! below, so refactors cannot silently change retry timing.
+
+use std::time::Duration;
+
+use crate::util::rng::Pcg32;
+
+/// First-bounce delay in microseconds; doubles per consecutive bounce.
+pub const BACKOFF_BASE_US: u64 = 200;
+/// Per-bounce delay ceiling in microseconds.
+pub const BACKOFF_CAP_US: u64 = 50_000;
+/// Default jitter-stream seed (the historical `server::Client` seed —
+/// kept so extraction leaves existing retry timing bit-unchanged).
+pub const JITTER_SEED: u64 = 0x6a17_7e72;
+
+/// Backoff state: a jitter stream plus the consecutive-bounce level.
+///
+/// [`Backoff::reset`] zeroes the level on success but never rewinds the
+/// jitter stream — each sleep consumes one fresh draw, exactly like the
+/// pre-extraction client fields (`jitter`, `backoff_level`) did.
+#[derive(Clone, Debug)]
+pub struct Backoff {
+    jitter: Pcg32,
+    level: u32,
+    bounces: u64,
+}
+
+impl Default for Backoff {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Backoff {
+    /// A backoff with the default [`JITTER_SEED`] stream.
+    pub fn new() -> Backoff {
+        Backoff::with_seed(JITTER_SEED)
+    }
+
+    pub fn with_seed(seed: u64) -> Backoff {
+        Backoff { jitter: Pcg32::new(seed), level: 0, bounces: 0 }
+    }
+
+    /// The next delay: `BACKOFF_BASE_US << level` capped at
+    /// [`BACKOFF_CAP_US`], scaled by a ±25% jitter factor in
+    /// `[0.75, 1.25)`. Advances both the level and the jitter stream.
+    pub fn next_delay(&mut self) -> Duration {
+        let base = (BACKOFF_BASE_US << self.level.min(16)).min(BACKOFF_CAP_US);
+        // ±25% jitter: scale by a factor in [0.75, 1.25).
+        let us = base * (750 + self.jitter.below(500) as u64) / 1000;
+        self.level += 1;
+        self.bounces += 1;
+        Duration::from_micros(us)
+    }
+
+    /// Sleep for [`Backoff::next_delay`].
+    pub fn sleep(&mut self) {
+        std::thread::sleep(self.next_delay());
+    }
+
+    /// Success: restart the exponential ramp (the jitter stream keeps
+    /// advancing from where it is).
+    pub fn reset(&mut self) {
+        self.level = 0;
+    }
+
+    /// Total sleeps taken over the life of this backoff.
+    pub fn bounces(&self) -> u64 {
+        self.bounces
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The extraction contract: with the historical seed, the delay
+    /// sequence is bit-identical to what `server::Client::call_retry`
+    /// computed inline before `util::backoff` existed. These constants
+    /// were derived from the PCG32 stream definition independently of
+    /// this implementation — if they drift, retry timing changed.
+    #[test]
+    fn pins_the_default_jitter_delay_sequence() {
+        let mut b = Backoff::new();
+        let expect_us = [174u64, 394, 741, 1547, 3660, 7411, 10803, 25830];
+        for (i, &us) in expect_us.iter().enumerate() {
+            assert_eq!(b.next_delay(), Duration::from_micros(us), "bounce {i}");
+        }
+        assert_eq!(b.bounces(), expect_us.len() as u64);
+    }
+
+    /// `reset` restarts the exponential ramp but must not rewind the
+    /// jitter stream (a reconnect-free success mid-burst keeps drawing
+    /// fresh jitter — the pre-extraction behavior).
+    #[test]
+    fn reset_restarts_level_but_not_the_jitter_stream() {
+        let mut b = Backoff::new();
+        let mut seq = Vec::new();
+        for i in 0..6 {
+            if i == 3 {
+                b.reset();
+            }
+            seq.push(b.next_delay().as_micros() as u64);
+        }
+        assert_eq!(seq, [174, 394, 741, 193, 457, 926]);
+    }
+
+    /// The doubling is capped: past level 16 the shift stops growing and
+    /// the 50ms ceiling bounds every delay (jitter can only lower it).
+    #[test]
+    fn delays_are_capped() {
+        let mut b = Backoff::new();
+        for _ in 0..64 {
+            let d = b.next_delay();
+            assert!(d <= Duration::from_micros(BACKOFF_CAP_US * 1250 / 1000));
+        }
+        // deep into the ramp every delay sits at the cap (± jitter)
+        let d = b.next_delay().as_micros() as u64;
+        assert!(d >= BACKOFF_CAP_US * 750 / 1000, "capped delay too small: {d}");
+    }
+
+    #[test]
+    fn distinct_seeds_decorrelate() {
+        let mut a = Backoff::with_seed(1);
+        let mut b = Backoff::with_seed(2);
+        let sa: Vec<_> = (0..8).map(|_| a.next_delay()).collect();
+        let sb: Vec<_> = (0..8).map(|_| b.next_delay()).collect();
+        assert_ne!(sa, sb);
+    }
+}

@@ -4,9 +4,10 @@
 //! every auxiliary dependency a framework normally pulls from crates.io is
 //! implemented here: a seeded PCG RNG, a JSON parser/writer (for the AOT
 //! manifest and metrics), a TOML-subset config parser, a CLI argument
-//! parser, byte/duration formatting, a micro-benchmark harness and a
-//! property-testing harness.
+//! parser, byte/duration formatting, a micro-benchmark harness, a
+//! property-testing harness and the shared `Busy`-backoff machinery.
 
+pub mod backoff;
 pub mod bench;
 pub mod cli;
 pub mod fmt;

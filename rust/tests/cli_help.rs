@@ -96,9 +96,10 @@ fn help_lists_exactly_the_live_subcommands() {
 
     // The commands this repo's docs and Makefile lean on must all be
     // live (regression guard for the original help-drift bug).
-    for cmd in
-        ["help", "list", "table5", "suite", "report", "dp", "fused", "ablate", "serve", "loadgen"]
-    {
+    for cmd in [
+        "help", "list", "table5", "suite", "worker", "report", "dp", "fused", "ablate", "serve",
+        "loadgen",
+    ] {
         assert!(arms.contains(cmd), "dispatch lost `{cmd}`");
     }
 }

@@ -1,0 +1,224 @@
+//! Dispatcher-side tests that need no live worker: the `[suite]
+//! workers` spec grammar end-to-end through `SuiteConfig`, the wire
+//! config rendering for expanded cells, dead-address failure isolation
+//! (`FAILED` markers + clean local retry), and mixed local+remote
+//! scheduling where the remote half never answers.
+
+use std::path::PathBuf;
+
+use smmf_repro::coordinator::config::{ExperimentConfig, SuiteConfig, WorkerSpec};
+use smmf_repro::coordinator::suite::{run_suite, CellStatus, SuiteOptions};
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("smmf_rdisp_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+const SMOKE: &str = r#"
+[suite]
+name = "smoke"
+seeds = [0, 1]
+
+[optimizer]
+lr = 0.05
+
+[train]
+steps = 8
+log_every = 4
+
+[[suite.run]]
+optimizers = ["adam", "smmf"]
+models = ["synthetic:tiny_lm"]
+"#;
+
+/// An address nothing listens on: bind an ephemeral port, then drop the
+/// listener — connects to it are refused immediately.
+fn dead_addr() -> String {
+    let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = l.local_addr().unwrap().to_string();
+    drop(l);
+    addr
+}
+
+#[test]
+fn suite_toml_carries_remote_worker_specs() {
+    let full = r#"
+[suite]
+name = "smoke"
+workers = "local:2,remote:127.0.0.1:7131,127.0.0.1:7132"
+
+[[suite.run]]
+optimizers = ["adam"]
+models = ["synthetic:tiny_lm"]
+"#;
+    let cfg = SuiteConfig::parse(full, "x").unwrap();
+    assert_eq!(
+        cfg.workers,
+        WorkerSpec {
+            local: 2,
+            remote: vec!["127.0.0.1:7131".into(), "127.0.0.1:7132".into()]
+        }
+    );
+    assert!(!cfg.workers.is_local_only());
+    assert_eq!(cfg.workers.describe(), "2 remote + 2 local worker(s)");
+
+    // Plain integers stay the local thread-pool spelling.
+    let plain = SuiteConfig::parse(SMOKE, "x").unwrap();
+    assert_eq!(plain.workers, WorkerSpec::local(1));
+    assert!(plain.workers.is_local_only());
+}
+
+#[test]
+fn every_expanded_cell_renders_to_wire_toml_losslessly() {
+    // The dispatcher ships `cell.cfg.to_toml()`; the worker rebuilds via
+    // `from_toml_str`. Every cell of a realistic sweep must survive the
+    // round trip *exactly* — this is what makes remote execution
+    // semantically identical to local.
+    let text = r#"
+[suite]
+name = "wire"
+seeds = [0, 7]
+
+[optimizer]
+lr = 1e-3
+weight_decay = 0.01
+
+[schedule]
+kind = "linear"
+warmup = 5
+total = 50
+
+[[optimizer.group]]
+name = "no_decay"
+match_role = ["bias", "norm"]
+weight_decay = 0.0
+
+[train]
+steps = 20
+log_every = 5
+
+[[suite.run]]
+optimizers = ["adam", "smmf", "adafactor", "came", "sm3", "sgd"]
+models = ["synthetic:tiny_lm"]
+"#;
+    let cfg = SuiteConfig::parse(text, "x").unwrap();
+    let cells = cfg.expand().unwrap();
+    assert_eq!(cells.len(), 12, "6 optimizers × 2 seeds");
+    for cell in &cells {
+        let wire = cell.cfg.to_toml().unwrap_or_else(|e| panic!("{}: {e:#}", cell.run));
+        let back = ExperimentConfig::from_toml_str(&wire)
+            .unwrap_or_else(|e| panic!("{}: {e:#}\n{wire}", cell.run));
+        assert_eq!(back, cell.cfg, "{} drifts through the wire rendering:\n{wire}", cell.run);
+    }
+}
+
+#[test]
+fn all_workers_dead_fails_cells_with_markers_then_local_retry_clears_them() {
+    let tmp = tmp_dir("dead");
+    let mut cfg = SuiteConfig::parse(SMOKE, "x").unwrap();
+    cfg.out_dir = tmp.to_str().unwrap().to_string();
+
+    // Two refused addresses, short lease: every cell must fail fast and
+    // loudly instead of hanging the suite.
+    let opts = SuiteOptions {
+        workers: Some(WorkerSpec { local: 0, remote: vec![dead_addr(), dead_addr()] }),
+        lease_timeout_ms: 250,
+        ..SuiteOptions::default()
+    };
+    let out = run_suite(&cfg, &opts).unwrap();
+    assert_eq!(out.counts(), (0, 0, 4), "all cells failed, none hung");
+    for (cell, status) in &out.cells {
+        match status {
+            CellStatus::Failed(note) => {
+                assert!(note.contains("no live workers"), "{}: {note}", cell.run)
+            }
+            other => panic!("{}: expected Failed, got {other:?}", cell.run),
+        }
+        assert!(
+            out.suite_dir.join(&cell.run).join("FAILED").exists(),
+            "{} needs its FAILED marker for the retry path",
+            cell.run
+        );
+    }
+
+    // FAILED markers make the next (local) invocation retry exactly
+    // these cells — the cross-backend recovery story.
+    let local = SuiteOptions::default();
+    let out2 = run_suite(&cfg, &local).unwrap();
+    assert_eq!(out2.counts(), (4, 0, 0), "local retry trains everything");
+    for (cell, _) in &out2.cells {
+        assert!(!out2.suite_dir.join(&cell.run).join("FAILED").exists(), "{}", cell.run);
+        assert!(out2.suite_dir.join(&cell.run).join("summary.json").exists(), "{}", cell.run);
+    }
+    let _ = std::fs::remove_dir_all(tmp);
+}
+
+#[test]
+fn local_lanes_carry_a_suite_whose_remote_half_is_dead() {
+    let tmp = tmp_dir("mixed_dead");
+    let mut cfg = SuiteConfig::parse(SMOKE, "x").unwrap();
+    cfg.out_dir = tmp.to_str().unwrap().to_string();
+
+    // One dead remote + one local lane: the local lane must absorb the
+    // whole suite once the remote lease expires.
+    let opts = SuiteOptions {
+        workers: Some(WorkerSpec { local: 1, remote: vec![dead_addr()] }),
+        lease_timeout_ms: 250,
+        ..SuiteOptions::default()
+    };
+    let out = run_suite(&cfg, &opts).unwrap();
+    assert_eq!(out.counts(), (4, 0, 0), "local lane completed every cell");
+    // Statuses stay in expansion order regardless of scheduling.
+    let runs: Vec<&str> = out.cells.iter().map(|(c, _)| c.run.as_str()).collect();
+    assert_eq!(
+        runs,
+        vec!["tiny_lm-adam-s0", "tiny_lm-adam-s1", "tiny_lm-smmf-s0", "tiny_lm-smmf-s1"]
+    );
+    let _ = std::fs::remove_dir_all(tmp);
+}
+
+#[test]
+fn dispatch_prepass_honors_the_reentry_cache() {
+    let tmp = tmp_dir("prepass");
+    let mut cfg = SuiteConfig::parse(SMOKE, "x").unwrap();
+    cfg.out_dir = tmp.to_str().unwrap().to_string();
+
+    // Seed the cache with a local run.
+    let out = run_suite(&cfg, &SuiteOptions::default()).unwrap();
+    assert_eq!(out.counts(), (4, 0, 0));
+
+    // A remote invocation over the same dir must skip every cell in the
+    // pre-pass — no worker is ever contacted, so even a dead address
+    // finishes instantly with all-Skipped.
+    let opts = SuiteOptions {
+        workers: Some(WorkerSpec { local: 0, remote: vec![dead_addr()] }),
+        lease_timeout_ms: 250,
+        ..SuiteOptions::default()
+    };
+    let out2 = run_suite(&cfg, &opts).unwrap();
+    assert_eq!(out2.counts(), (0, 4, 0), "re-entry cache crosses backends");
+    let _ = std::fs::remove_dir_all(tmp);
+}
+
+#[test]
+fn bad_worker_specs_are_rejected_at_the_cli_grammar() {
+    for bad in [
+        "",
+        "0",
+        "-3",
+        "local:0",
+        "local:x",
+        "remote:nocolon",
+        "remote:a:1,a:1",
+        "local:1,local:2",
+        "many",
+    ] {
+        assert!(WorkerSpec::parse(bad).is_err(), "accepted {bad:?}");
+    }
+    let spec = WorkerSpec::parse("remote:127.0.0.1:7131,127.0.0.1:7132,local:3").unwrap();
+    assert_eq!(spec.local, 3);
+    assert_eq!(spec.remote.len(), 2);
+    assert_eq!(WorkerSpec::parse("4").unwrap(), WorkerSpec::local(4));
+}

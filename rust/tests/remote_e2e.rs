@@ -1,0 +1,297 @@
+//! Distributed-suite end-to-end tests: real `WorkerServer` daemons on
+//! loopback sockets driven through `run_suite`'s remote backend.
+//!
+//! The headline properties pinned here (the PR's acceptance criteria):
+//!
+//! * A suite dispatched to two remote workers completes every cell,
+//!   commits statuses in expansion order, and — via the cross-backend
+//!   re-entry cache — re-renders `docs/RESULTS.md` / `BENCH_suite.json`
+//!   **byte-identically** under the local thread-pool backend.
+//! * A worker that goes silent mid-suite (the `crash_after_accepts`
+//!   chaos knob) has its cells re-dispatched to the survivor and the
+//!   suite still completes with the same reports.
+//! * A second invocation skips every completed cell (all-`Skipped`).
+
+use std::path::{Path, PathBuf};
+
+use smmf_repro::coordinator::config::{SuiteConfig, WorkerSpec};
+use smmf_repro::coordinator::remote::protocol::CellMsg;
+use smmf_repro::coordinator::remote::{CellClient, WorkerOptions, WorkerServer};
+use smmf_repro::coordinator::report;
+use smmf_repro::coordinator::suite::{run_suite, CellStatus, SuiteOptions};
+
+/// A *relative* scratch dir (under `target/`): the worker daemon refuses
+/// absolute `out_dir`s as parent-escape protection, and coordinator +
+/// in-process workers share this test's cwd, so relative paths mean both
+/// sides read and write the same cell directories.
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = PathBuf::from(format!("target/tmp/smmf_re2e_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// 2 optimizers × 3 seeds on the artifact-free synthetic workload —
+/// enough cells that both workers stay busy and a mid-suite death
+/// leaves work to re-dispatch.
+fn smoke_suite(out_dir: &Path) -> SuiteConfig {
+    let mut cfg = SuiteConfig::parse(
+        r#"
+[suite]
+name = "smoke"
+seeds = [0, 1, 2]
+
+[optimizer]
+lr = 0.05
+
+[train]
+steps = 8
+log_every = 4
+
+[[suite.run]]
+optimizers = ["adam", "smmf"]
+models = ["synthetic:tiny_lm"]
+"#,
+        "x",
+    )
+    .unwrap();
+    cfg.out_dir = out_dir.to_str().unwrap().to_string();
+    cfg
+}
+
+fn start_worker(capacity: usize, crash_after: u64) -> WorkerServer {
+    WorkerServer::start(&WorkerOptions {
+        capacity,
+        crash_after_accepts: crash_after,
+        io_timeout: Some(std::time::Duration::from_secs(5)),
+        ..WorkerOptions::default()
+    })
+    .unwrap()
+}
+
+fn remote_spec(workers: &[&WorkerServer]) -> WorkerSpec {
+    WorkerSpec { local: 0, remote: workers.iter().map(|w| w.addr.to_string()).collect() }
+}
+
+/// Render both report artifacts from a suite dir and return their bytes.
+fn report_bytes(tag: &str, suite_dir: &Path, tmp: &Path) -> (Vec<u8>, Vec<u8>) {
+    let docs = tmp.join(format!("RESULTS.{tag}.md"));
+    let bench = tmp.join(format!("BENCH.{tag}.json"));
+    report::write_report("smoke", suite_dir, &docs, &bench).unwrap();
+    (std::fs::read(docs).unwrap(), std::fs::read(bench).unwrap())
+}
+
+#[test]
+fn worker_daemon_runs_a_cell_end_to_end() {
+    let tmp = tmp_dir("daemon");
+    let cfg = smoke_suite(&tmp);
+    let cells = cfg.expand().unwrap();
+    let cell = &cells[0];
+
+    let server = start_worker(1, 0);
+    let mut c =
+        CellClient::connect(&server.addr.to_string(), Some(std::time::Duration::from_secs(5)))
+            .unwrap();
+    let wire = cell.cfg.to_toml().unwrap();
+    match c.submit(0, &cell.run, &cell.model, &wire).unwrap() {
+        CellMsg::Accepted { job: 0 } => {}
+        other => panic!("expected Accepted, got {}", other.name()),
+    }
+    // Poll to completion (tiny cell: milliseconds).
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        match c.poll(0).unwrap() {
+            CellMsg::Running { .. } => {
+                assert!(std::time::Instant::now() < deadline, "cell never finished");
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            CellMsg::Done { job: 0 } => break,
+            other => panic!("expected Running/Done, got {}", other.name()),
+        }
+    }
+    assert!(
+        tmp.join("smoke").join(&cell.run).join("summary.json").exists(),
+        "worker leaves the standard artifacts"
+    );
+    // Idempotent re-submit of a finished job answers Done immediately.
+    match c.submit(0, &cell.run, &cell.model, &wire).unwrap() {
+        CellMsg::Done { job: 0 } => {}
+        other => panic!("expected Done on re-submit, got {}", other.name()),
+    }
+    // A hostile out_dir is refused before any filesystem traffic.
+    let evil = wire.replace(
+        &format!("out_dir = \"{}\"", cfg.out_dir),
+        "out_dir = \"../../etc\"",
+    );
+    assert_ne!(evil, wire, "fixture must actually rewrite out_dir");
+    match c.submit(1, &cell.run, &cell.model, &evil).unwrap() {
+        CellMsg::Err { msg } => assert!(msg.contains("refusing"), "{msg}"),
+        other => panic!("expected Err for hostile path, got {}", other.name()),
+    }
+    c.shutdown().unwrap();
+    let stats = server.wait();
+    assert_eq!((stats.accepted, stats.done, stats.failed), (1, 1, 0));
+    let _ = std::fs::remove_dir_all(tmp);
+}
+
+#[test]
+fn two_workers_run_the_suite_and_reports_match_the_local_backend_bytewise() {
+    let tmp = tmp_dir("two");
+    let cfg = smoke_suite(&tmp);
+    let w1 = start_worker(1, 0);
+    let w2 = start_worker(1, 0);
+
+    let opts = SuiteOptions {
+        workers: Some(remote_spec(&[&w1, &w2])),
+        lease_timeout_ms: 5_000,
+        ..SuiteOptions::default()
+    };
+    let out = run_suite(&cfg, &opts).unwrap();
+    assert_eq!(out.counts(), (6, 0, 0), "all cells ran remotely");
+    // Statuses commit in expansion order no matter which worker (or in
+    // which order) the cells finished.
+    let runs: Vec<&str> = out.cells.iter().map(|(c, _)| c.run.as_str()).collect();
+    assert_eq!(
+        runs,
+        vec![
+            "tiny_lm-adam-s0",
+            "tiny_lm-adam-s1",
+            "tiny_lm-adam-s2",
+            "tiny_lm-smmf-s0",
+            "tiny_lm-smmf-s1",
+            "tiny_lm-smmf-s2"
+        ]
+    );
+    // Both workers did real work (the dispatcher actually fanned out).
+    let (s1, s2) = (w1.stats(), w2.stats());
+    assert_eq!(s1.done + s2.done, 6, "{s1:?} {s2:?}");
+    assert!(s1.done >= 1 && s2.done >= 1, "one worker hogged the suite: {s1:?} {s2:?}");
+
+    let (docs_remote, bench_remote) = report_bytes("remote", &out.suite_dir, &tmp);
+
+    // Second invocation, *local thread-pool backend*, same suite dir:
+    // the re-entry cache skips every completed cell (acceptance
+    // criterion) and the re-rendered reports are byte-identical — the
+    // backend is invisible in the artifacts.
+    let local_opts = SuiteOptions::default();
+    let out2 = run_suite(&cfg, &local_opts).unwrap();
+    assert_eq!(out2.counts(), (0, 6, 0), "cross-backend re-entry: all cached");
+    let (docs_local, bench_local) = report_bytes("local", &out2.suite_dir, &tmp);
+    assert_eq!(docs_remote, docs_local, "docs/RESULTS.md bytes differ across backends");
+    assert_eq!(bench_remote, bench_local, "BENCH_suite.json bytes differ across backends");
+
+    // And a third run over the remote backend is also all-Skipped.
+    let out3 = run_suite(&cfg, &opts).unwrap();
+    assert_eq!(out3.counts(), (0, 6, 0));
+    assert!(out3.cells.iter().all(|(_, s)| *s == CellStatus::Skipped));
+
+    for c in [&w1, &w2] {
+        CellClient::connect(&c.addr.to_string(), None).unwrap().shutdown().unwrap();
+    }
+    w1.wait();
+    w2.wait();
+    let _ = std::fs::remove_dir_all(tmp);
+}
+
+#[test]
+fn mid_suite_worker_death_redispatches_to_the_survivor() {
+    let tmp = tmp_dir("chaos");
+    let cfg = smoke_suite(&tmp);
+    let healthy = start_worker(1, 0);
+    // capacity 2 so the doomed worker holds one accepted-and-running
+    // cell *and* one accepted-then-stranded cell when the chaos latch
+    // fires on its second accept — exercising both the lease-expiry
+    // requeue and the completed-before-death cache recheck.
+    let doomed = start_worker(2, 2);
+
+    let opts = SuiteOptions {
+        workers: Some(remote_spec(&[&doomed, &healthy])),
+        lease_timeout_ms: 400,
+        ..SuiteOptions::default()
+    };
+    let out = run_suite(&cfg, &opts).unwrap();
+    let (ran, skipped, failed) = out.counts();
+    assert_eq!(failed, 0, "death must re-dispatch, not fail cells");
+    assert_eq!(skipped, 0);
+    assert_eq!(ran, 6, "every cell completes despite the mid-suite crash");
+    // The survivor picked up real work.
+    assert!(healthy.stats().done >= 4, "survivor stats: {:?}", healthy.stats());
+
+    let (docs_chaos, bench_chaos) = report_bytes("chaos", &out.suite_dir, &tmp);
+
+    // Reports re-rendered under the local backend are byte-identical —
+    // worker death and re-dispatch left no trace in the artifacts.
+    let out2 = run_suite(&cfg, &SuiteOptions::default()).unwrap();
+    assert_eq!(out2.counts(), (0, 6, 0));
+    let (docs_local, bench_local) = report_bytes("chaos_local", &out2.suite_dir, &tmp);
+    assert_eq!(docs_chaos, docs_local, "chaos run's docs bytes differ from local");
+    assert_eq!(bench_chaos, bench_local, "chaos run's bench bytes differ from local");
+
+    CellClient::connect(&healthy.addr.to_string(), None).unwrap().shutdown().unwrap();
+    healthy.wait();
+    // `doomed` crashed silently; its handle just drops (Drop sets the
+    // shutdown flag for the already-dead accept loop).
+    drop(doomed);
+    let _ = std::fs::remove_dir_all(tmp);
+}
+
+#[test]
+fn capacity_one_worker_absorbs_busy_bounces() {
+    let tmp = tmp_dir("busy");
+    let cfg = smoke_suite(&tmp);
+    let w = start_worker(1, 0);
+    let opts = SuiteOptions {
+        workers: Some(remote_spec(&[&w])),
+        lease_timeout_ms: 5_000,
+        ..SuiteOptions::default()
+    };
+    let out = run_suite(&cfg, &opts).unwrap();
+    assert_eq!(out.counts(), (6, 0, 0), "serial worker still completes the suite");
+    CellClient::connect(&w.addr.to_string(), None).unwrap().shutdown().unwrap();
+    let stats = w.wait();
+    assert_eq!(stats.done, 6);
+    let _ = std::fs::remove_dir_all(tmp);
+}
+
+#[test]
+fn mixed_local_and_remote_lanes_share_the_queue() {
+    let tmp = tmp_dir("mixed");
+    // Heavier cells than the smoke suite: each must run long enough that
+    // the dispatcher's first dial + submit lands while the local lane is
+    // still training its first pop — otherwise the split assertion races.
+    let mut cfg = SuiteConfig::parse(
+        r#"
+[suite]
+name = "smoke"
+seeds = [0, 1]
+
+[optimizer]
+lr = 0.05
+
+[train]
+steps = 400
+log_every = 100
+
+[[suite.run]]
+optimizers = ["adam", "smmf"]
+models = ["synthetic:tiny_lm"]
+"#,
+        "x",
+    )
+    .unwrap();
+    cfg.out_dir = tmp.to_str().unwrap().to_string();
+    let w = start_worker(1, 0);
+    let opts = SuiteOptions {
+        workers: Some(WorkerSpec { local: 1, remote: vec![w.addr.to_string()] }),
+        lease_timeout_ms: 5_000,
+        ..SuiteOptions::default()
+    };
+    let out = run_suite(&cfg, &opts).unwrap();
+    assert_eq!(out.counts(), (4, 0, 0));
+    // The remote worker got some of the queue; the local lane the rest.
+    let done_remote = w.stats().done as usize;
+    assert!(done_remote >= 1 && done_remote < 4, "split was {done_remote}/4 remote");
+    CellClient::connect(&w.addr.to_string(), None).unwrap().shutdown().unwrap();
+    w.wait();
+    let _ = std::fs::remove_dir_all(tmp);
+}

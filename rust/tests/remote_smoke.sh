@@ -1,0 +1,81 @@
+#!/usr/bin/env bash
+# Distributed-suite smoke, run by `make remote-smoke`.
+#
+# Spawns two real `repro worker` processes on loopback ephemeral ports,
+# dispatches the smoke suite to them, and asserts the tentpole contract
+# from the CLI:
+#
+#   1. the dispatched run completes every cell on the remote workers;
+#   2. a second dispatched invocation skips every cell (the re-entry
+#      cache) and re-renders byte-identical reports;
+#   3. a local-pool invocation over the same suite dir also skips every
+#      cell and renders the same bytes — the backend is invisible in
+#      the artifacts.
+#
+#   bash rust/tests/remote_smoke.sh      # from the repo root
+#   make remote-smoke                    # equivalent
+set -euo pipefail
+
+cd "$(dirname "$0")/.."   # rust/
+
+echo "== cargo build --release =="
+cargo build --release
+REPRO=target/release/repro
+
+OUT=target/remote-smoke
+rm -rf "$OUT"
+mkdir -p "$OUT"
+
+# Workers bind ephemeral ports and print them; artifacts go under the
+# shared (relative) out dir because coordinator and workers share this
+# cwd. Kill both on any exit.
+"$REPRO" worker --listen 127.0.0.1:0 --capacity 2 >"$OUT/worker1.log" 2>&1 &
+W1=$!
+"$REPRO" worker --listen 127.0.0.1:0 --capacity 2 >"$OUT/worker2.log" 2>&1 &
+W2=$!
+trap 'kill "$W1" "$W2" 2>/dev/null || true' EXIT
+
+addr_of() { # addr_of <log> -> HOST:PORT, retrying until the worker prints it
+  local log=$1 addr="" i
+  for i in $(seq 1 100); do
+    addr=$(sed -n 's/^\[worker\] listening on \([0-9.:]*\).*$/\1/p' "$log" | head -n1)
+    [ -n "$addr" ] && { echo "$addr"; return 0; }
+    sleep 0.1
+  done
+  echo "worker never printed its address ($log):" >&2
+  cat "$log" >&2
+  return 1
+}
+A1=$(addr_of "$OUT/worker1.log")
+A2=$(addr_of "$OUT/worker2.log")
+echo "== workers up: $A1, $A2 =="
+
+echo "== dispatched suite (remote:$A1,$A2) =="
+"$REPRO" suite tests/suite_smoke.toml \
+  --out-dir "$OUT" --workers "remote:$A1,$A2" --lease-timeout-ms 5000 \
+  --docs "$OUT/RESULTS.remote.md" --bench-json "$OUT/BENCH.remote.json" \
+  | tee "$OUT/run1.log"
+grep -q "dispatched to worker" "$OUT/run1.log" || {
+  echo "no cell was dispatched to a remote worker"; exit 1; }
+
+echo "== dispatched again: every cell must be cached =="
+"$REPRO" suite tests/suite_smoke.toml \
+  --out-dir "$OUT" --workers "remote:$A1,$A2" --lease-timeout-ms 5000 \
+  --docs "$OUT/RESULTS.remote2.md" --bench-json "$OUT/BENCH.remote2.json" \
+  | tee "$OUT/run2.log"
+grep -q " 0 ran, 4 cached, 0 failed" "$OUT/run2.log" || {
+  echo "re-entry cache miss: expected all 4 cells cached"; exit 1; }
+cmp "$OUT/RESULTS.remote.md" "$OUT/RESULTS.remote2.md"
+cmp "$OUT/BENCH.remote.json" "$OUT/BENCH.remote2.json"
+
+echo "== local pool over the same suite dir: same bytes =="
+"$REPRO" suite tests/suite_smoke.toml \
+  --out-dir "$OUT" --workers 2 \
+  --docs "$OUT/RESULTS.local.md" --bench-json "$OUT/BENCH.local.json" \
+  | tee "$OUT/run3.log"
+grep -q " 0 ran, 4 cached, 0 failed" "$OUT/run3.log" || {
+  echo "cross-backend cache miss: expected all 4 cells cached"; exit 1; }
+cmp "$OUT/RESULTS.remote.md" "$OUT/RESULTS.local.md"
+cmp "$OUT/BENCH.remote.json" "$OUT/BENCH.local.json"
+
+echo "remote-smoke OK (reports byte-identical across backends)"

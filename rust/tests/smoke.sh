@@ -38,6 +38,15 @@ cargo test --release --test server_e2e
 echo "== server replay (async commit-log replay + staleness window) =="
 cargo test --release --test server_replay
 
+echo "== suite wire codec (SMMFCELL roundtrip + corruption) =="
+cargo test --release --test remote_protocol
+
+echo "== remote dispatch (worker specs, wire TOML, dead-worker isolation) =="
+cargo test --release --test remote_dispatch
+
+echo "== remote e2e (2-worker fan-out, mid-suite crash, byte-identical reports) =="
+cargo test --release --test remote_e2e
+
 echo "== CLI help drift guard =="
 cargo test --release --test cli_help
 
@@ -54,6 +63,12 @@ cargo run --release -- suite tests/suite_smoke.toml \
   --out-dir target/suite-smoke --docs target/suite-smoke/RESULTS.2.md \
   --bench-json target/suite-smoke/BENCH_suite.2.json
 cmp target/suite-smoke/RESULTS.md target/suite-smoke/RESULTS.2.md
+
+# Remote-suite smoke: the same suite dispatched to two real `repro
+# worker` processes over SMMFCELL, twice (second pass all-cached), then
+# a local-pool pass — reports must be byte-identical across backends.
+echo "== remote smoke (2 loopback workers, byte-identical reports) =="
+bash tests/remote_smoke.sh
 
 # Server smoke: loopback optimizer-state server, 4 clients × 2 shards
 # on the synthetic workload; --check asserts the snapshot is
