@@ -10,9 +10,10 @@ use crate::util::cli::Args;
 use crate::util::toml::TomlDoc;
 
 /// Everything a training experiment needs.
-/// `PartialEq` backs the `SMMFCELL` wire round-trip guard: the remote
-/// dispatcher asserts `from_toml_str(to_toml(cfg)) == cfg` before
-/// shipping a cell (see `docs/SUITE_WIRE.md`).
+/// `PartialEq` backs the `SMMFCELL` wire round-trip guard: before
+/// shipping a cell, the remote dispatcher checks
+/// `from_toml_str(to_toml(cfg)) == cfg` and fails the cell on a
+/// mismatch (see `docs/SUITE_WIRE.md`).
 #[derive(Clone, Debug, PartialEq)]
 pub struct ExperimentConfig {
     pub name: String,
@@ -256,8 +257,9 @@ impl ExperimentConfig {
     /// re-derived from `optimizer.kind` paper defaults on both sides —
     /// the same rule [`ExperimentConfig::apply_toml`] and
     /// [`ExperimentConfig::retarget_optimizer`] follow — so every config
-    /// a suite can expand round-trips losslessly (the dispatcher asserts
-    /// this per cell before shipping it). Errors on values the TOML
+    /// a suite can expand round-trips losslessly (the dispatcher
+    /// re-checks this per cell before shipping it, failing the cell on
+    /// a mismatch). Errors on values the TOML
     /// subset cannot carry (quotes/newlines in strings, non-finite
     /// floats, schedules `apply_toml` cannot parse back).
     pub fn to_toml(&self) -> Result<String> {

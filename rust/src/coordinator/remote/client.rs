@@ -8,9 +8,9 @@
 //! call. What the client does own is framing hygiene: requests carry a
 //! monotonically increasing id and every reply must echo it.
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 use std::io::{BufReader, BufWriter};
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use crate::coordinator::remote::protocol::{self, CellFrame, CellMsg};
@@ -24,13 +24,30 @@ pub struct CellClient {
 
 impl CellClient {
     /// Connect with a dial timeout; `io_timeout` bounds every
-    /// subsequent read/write (`None` = block forever).
+    /// subsequent read/write (`None` = block forever). `addr` may be an
+    /// IP literal or a DNS hostname (`HOST:PORT` — the grammar
+    /// `remote:HOST:PORT` advertises); every resolved address is tried
+    /// in order.
     pub fn connect(addr: &str, io_timeout: Option<Duration>) -> Result<CellClient> {
-        let sock_addr = addr
-            .parse()
-            .with_context(|| format!("bad worker address {addr:?} (expected HOST:PORT)"))?;
+        let sock_addrs: Vec<_> = addr
+            .to_socket_addrs()
+            .with_context(|| format!("bad worker address {addr:?} (expected HOST:PORT)"))?
+            .collect();
         let dial = io_timeout.unwrap_or(Duration::from_secs(5));
-        let stream = TcpStream::connect_timeout(&sock_addr, dial)
+        let mut last_err = None;
+        let stream = sock_addrs
+            .iter()
+            .find_map(|sa| match TcpStream::connect_timeout(sa, dial) {
+                Ok(s) => Some(s),
+                Err(e) => {
+                    last_err = Some(e);
+                    None
+                }
+            })
+            .ok_or_else(|| match last_err {
+                Some(e) => anyhow!(e),
+                None => anyhow!("{addr:?} resolved to no addresses"),
+            })
             .with_context(|| format!("connecting to worker {addr}"))?;
         stream.set_nodelay(true).ok();
         stream.set_read_timeout(io_timeout)?;
@@ -57,9 +74,21 @@ impl CellClient {
         Ok(reply.msg)
     }
 
-    /// Submit cell `job` (`run`/`model`/canonical config TOML).
-    pub fn submit(&mut self, job: u64, run: &str, model: &str, config: &str) -> Result<CellMsg> {
+    /// Submit cell `job` under suite-run `nonce` (`run`/`model`/
+    /// canonical config TOML). Strings over the wire caps fail here,
+    /// locally and by name, instead of as the worker's opaque decode
+    /// rejection.
+    pub fn submit(
+        &mut self,
+        nonce: u64,
+        job: u64,
+        run: &str,
+        model: &str,
+        config: &str,
+    ) -> Result<CellMsg> {
+        protocol::check_submit_limits(run, model, config)?;
         self.call(CellMsg::Submit {
+            nonce,
             job,
             run: run.to_string(),
             model: model.to_string(),
@@ -67,9 +96,9 @@ impl CellClient {
         })
     }
 
-    /// Ask for `job`'s state.
-    pub fn poll(&mut self, job: u64) -> Result<CellMsg> {
-        self.call(CellMsg::Poll { job })
+    /// Ask for `job`'s state under suite-run `nonce`.
+    pub fn poll(&mut self, nonce: u64, job: u64) -> Result<CellMsg> {
+        self.call(CellMsg::Poll { nonce, job })
     }
 
     /// Heartbeat; returns `(running, capacity)`.

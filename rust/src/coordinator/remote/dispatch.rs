@@ -13,13 +13,16 @@
 //!   [`Backoff`] (the same deterministic-jitter schedule
 //!   `server::Client` retries with).
 //! * **Leases**: every successful round trip refreshes a lane's
-//!   `last_ok`. A lane silent past the lease timeout is declared dead
-//!   and its in-flight cells are requeued to the survivors — after a
-//!   re-entry-cache recheck, because a stranded worker may have
-//!   finished a cell before dying (its `summary.json` is the verdict,
-//!   not its lost reply). With every remote lane dead and no local
-//!   lanes, the remainder fails loudly with `FAILED` markers instead of
-//!   hanging: the next invocation retries exactly those cells.
+//!   `last_ok` — and a lane with no submit/poll traffic (idle, or
+//!   deferred on `Busy`) is pinged once its lease is half spent, so a
+//!   healthy-but-idle worker is never mistaken for a dead one. A lane
+//!   silent past the lease timeout is declared dead and its in-flight
+//!   cells are requeued to the survivors — after a re-entry-cache
+//!   recheck, because a stranded worker may have finished a cell before
+//!   dying (its `summary.json` is the verdict, not its lost reply).
+//!   With every remote lane dead and no local lanes, the remainder
+//!   fails loudly with `FAILED` markers instead of hanging: the next
+//!   invocation retries exactly those cells.
 //! * **Determinism**: statuses land in a slot-per-cell table keyed by
 //!   expansion index; which worker finished first is invisible to the
 //!   caller, so [`report`](crate::coordinator::report) renders
@@ -27,8 +30,10 @@
 //!   of backend or completion timing.
 //!
 //! The wire config is [`ExperimentConfig::to_toml`]'s canonical
-//! rendering — the round-trip test in `coordinator::config` pins that a
-//! worker's `from_toml_str` reconstructs the resolved config exactly.
+//! rendering; before a cell ships, the dispatcher re-parses that text
+//! and verifies it reproduces the resolved config exactly — a
+//! non-round-tripping config is a per-cell failure, never a silently
+//! drifted remote run.
 //!
 //! [`ExperimentConfig::to_toml`]: crate::coordinator::config::ExperimentConfig::to_toml
 
@@ -38,9 +43,9 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use crate::coordinator::config::{SuiteCell, WorkerSpec};
+use crate::coordinator::config::{ExperimentConfig, SuiteCell, WorkerSpec};
 use crate::coordinator::remote::client::CellClient;
-use crate::coordinator::remote::protocol::CellMsg;
+use crate::coordinator::remote::protocol::{self, CellMsg};
 use crate::coordinator::suite::{self, CellStatus, SuiteOptions};
 use crate::coordinator::workers::panic_note;
 use crate::train::metrics;
@@ -64,6 +69,10 @@ struct Lane {
     busy_backoff: Backoff,
     /// Last successful round trip; the lease clock.
     last_ok: Instant,
+    /// The first dial failure is logged (once per lane) so an
+    /// unresolvable hostname or refused port is diagnosable instead of
+    /// surfacing only as a lease-expiry message.
+    dial_err_logged: bool,
 }
 
 impl Lane {
@@ -76,7 +85,16 @@ impl Lane {
             Some(c) => Some(c),
             // Dial failure: leave `client` empty; the lease clock keeps
             // ticking toward this lane's death.
-            None => CellClient::connect(&self.addr, Some(io)).ok(),
+            None => match CellClient::connect(&self.addr, Some(io)) {
+                Ok(c) => Some(c),
+                Err(e) => {
+                    if !self.dial_err_logged {
+                        self.dial_err_logged = true;
+                        println!("[suite] worker {}: dial failed: {e:#}", self.addr);
+                    }
+                    None
+                }
+            },
         }
     }
 }
@@ -226,7 +244,21 @@ pub fn run_dispatched(
         .collect())
 }
 
+/// Draw the per-suite-run nonce that scopes job ids on the workers:
+/// OS-seeded hasher state mixed with the wall clock, so two dispatches
+/// — even from the same process — never share one.
+fn suite_nonce() -> u64 {
+    use std::hash::{BuildHasher, Hasher};
+    let seed = std::collections::hash_map::RandomState::new().build_hasher().finish();
+    let clock = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    seed ^ clock.rotate_left(17)
+}
+
 fn dispatch_loop(board: &Board<'_>, spec: &WorkerSpec, lease: Duration, io: Duration) {
+    let nonce = suite_nonce();
     let mut lanes: Vec<Lane> = spec
         .remote
         .iter()
@@ -238,6 +270,7 @@ fn dispatch_loop(board: &Board<'_>, spec: &WorkerSpec, lease: Duration, io: Dura
             defer_until: None,
             busy_backoff: Backoff::new(),
             last_ok: Instant::now(),
+            dial_err_logged: false,
         })
         .collect();
     let mut pacing = Backoff::new();
@@ -247,8 +280,9 @@ fn dispatch_loop(board: &Board<'_>, spec: &WorkerSpec, lease: Duration, io: Dura
             if lane.dead {
                 continue;
             }
-            progress |= poll_lane(board, lane, io);
-            progress |= fill_lane(board, lane, io);
+            progress |= poll_lane(board, lane, nonce, io);
+            progress |= fill_lane(board, lane, nonce, io);
+            heartbeat_lane(lane, lease, io);
             if lane.last_ok.elapsed() > lease {
                 lane.dead = true;
                 lane.client = None;
@@ -296,9 +330,28 @@ fn dispatch_loop(board: &Board<'_>, spec: &WorkerSpec, lease: Duration, io: Dura
     }
 }
 
+/// Keep a quiet lane's lease honest: submit/poll traffic refreshes
+/// `last_ok` as a side effect, but an idle lane (nothing in flight,
+/// nothing to submit) or a `Busy`-deferred one makes no round trips at
+/// all — without a heartbeat it would be declared dead the moment its
+/// lease ran out, despite being perfectly healthy. Once the lease is
+/// half spent with no traffic, ping; success refreshes the lease, while
+/// a genuinely unreachable worker keeps ticking toward expiry.
+fn heartbeat_lane(lane: &mut Lane, lease: Duration, io: Duration) {
+    if lane.last_ok.elapsed() <= lease / 2 {
+        return;
+    }
+    let Some(mut client) = lane.take_client(io) else { return };
+    if client.ping().is_ok() {
+        lane.last_ok = Instant::now();
+        lane.client = Some(client);
+    }
+    // Ping failure drops the connection; the next take re-dials.
+}
+
 /// Poll a lane's in-flight cells once each. Returns whether any cell
 /// reached a verdict.
-fn poll_lane(board: &Board<'_>, lane: &mut Lane, io: Duration) -> bool {
+fn poll_lane(board: &Board<'_>, lane: &mut Lane, nonce: u64, io: Duration) -> bool {
     if lane.inflight.is_empty() {
         return false;
     }
@@ -307,7 +360,7 @@ fn poll_lane(board: &Board<'_>, lane: &mut Lane, io: Duration) -> bool {
     let mut i = 0;
     while i < lane.inflight.len() {
         let idx = lane.inflight[i];
-        let reply = match client.poll(idx as u64) {
+        let reply = match client.poll(nonce, idx as u64) {
             Ok(r) => r,
             // Lost round trip: keep the cell in flight (the worker may
             // just be slow), drop the connection — the lease clock
@@ -342,7 +395,7 @@ fn poll_lane(board: &Board<'_>, lane: &mut Lane, io: Duration) -> bool {
 
 /// Top a lane up to [`INFLIGHT_PER_WORKER`] from the queue. Returns
 /// whether anything was submitted or resolved.
-fn fill_lane(board: &Board<'_>, lane: &mut Lane, io: Duration) -> bool {
+fn fill_lane(board: &Board<'_>, lane: &mut Lane, nonce: u64, io: Duration) -> bool {
     if let Some(until) = lane.defer_until {
         if Instant::now() < until {
             return false;
@@ -372,6 +425,38 @@ fn fill_lane(board: &Board<'_>, lane: &mut Lane, io: Duration) -> bool {
                 continue;
             }
         };
+        // Ship-time round-trip guard: the worker rebuilds the cell from
+        // this text alone, so it must reproduce the resolved config
+        // exactly — a drift here would train a silently different cell.
+        match ExperimentConfig::from_toml_str(&config) {
+            Ok(back) if back == cell.cfg => {}
+            Ok(_) => {
+                board.fail(
+                    idx,
+                    "cannot ship cell to a remote worker: config does not survive the \
+                     wire TOML round trip"
+                        .into(),
+                );
+                progress = true;
+                continue;
+            }
+            Err(e) => {
+                board.fail(
+                    idx,
+                    format!("cannot ship cell to a remote worker: wire config fails to \
+                             re-parse: {e:#}"),
+                );
+                progress = true;
+                continue;
+            }
+        }
+        // And the decode-side size caps: an over-long run/model/config
+        // fails here, by name, not as the peer's opaque rejection.
+        if let Err(e) = protocol::check_submit_limits(&cell.run, &cell.model, &config) {
+            board.fail(idx, format!("cannot ship cell to a remote worker: {e:#}"));
+            progress = true;
+            continue;
+        }
         if client.is_none() {
             client = lane.take_client(io);
         }
@@ -379,7 +464,7 @@ fn fill_lane(board: &Board<'_>, lane: &mut Lane, io: Duration) -> bool {
             board.requeue_front(idx);
             break;
         };
-        let reply = match c.submit(idx as u64, &cell.run, &cell.model, &config) {
+        let reply = match c.submit(nonce, idx as u64, &cell.run, &cell.model, &config) {
             Ok(r) => r,
             Err(_) => {
                 board.requeue_front(idx);
@@ -438,4 +523,62 @@ fn done_on(board: &Board<'_>, idx: usize, addr: &str) {
     let cell = &board.cells[idx];
     println!("{}: done on worker {addr}", suite::cell_tag(idx, board.total, &cell.run));
     board.record(idx, CellStatus::Ran);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::remote::service::{WorkerOptions, WorkerServer};
+
+    fn lane(addr: String) -> Lane {
+        Lane {
+            addr,
+            client: None,
+            inflight: Vec::new(),
+            dead: false,
+            defer_until: None,
+            busy_backoff: Backoff::new(),
+            last_ok: Instant::now(),
+            dial_err_logged: false,
+        }
+    }
+
+    /// The idle-lane half of the lease story: submit/poll traffic is
+    /// what normally refreshes `last_ok`, so a lane with nothing in
+    /// flight and nothing to submit would otherwise be declared dead at
+    /// lease expiry despite a perfectly healthy worker.
+    #[test]
+    fn heartbeat_pings_refresh_an_idle_lane_against_a_live_worker() {
+        let server = WorkerServer::start(&WorkerOptions::default()).unwrap();
+        let mut l = lane(server.addr.to_string());
+        let lease = Duration::from_millis(10_000);
+        // Lease not yet half spent: no ping, no connection dialed.
+        heartbeat_lane(&mut l, lease, Duration::from_secs(5));
+        assert!(l.client.is_none(), "no ping before the lease is half spent");
+        // Back-date the clock past the half-lease mark: the heartbeat
+        // must ping and pull `last_ok` back under the expiry threshold.
+        l.last_ok = Instant::now() - Duration::from_millis(6_000);
+        heartbeat_lane(&mut l, lease, Duration::from_secs(5));
+        assert!(
+            l.last_ok.elapsed() < Duration::from_millis(5_000),
+            "successful ping refreshed the lease clock"
+        );
+        assert!(l.client.is_some(), "healthy connection is kept for reuse");
+        server.stop();
+    }
+
+    #[test]
+    fn heartbeat_leaves_an_unreachable_lane_to_expire() {
+        // Bind then drop: connects to this address are refused.
+        let dead = {
+            let l = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+            l.local_addr().unwrap().to_string()
+        };
+        let mut l = lane(dead);
+        l.last_ok = Instant::now() - Duration::from_millis(6_000);
+        let before = l.last_ok;
+        heartbeat_lane(&mut l, Duration::from_millis(10_000), Duration::from_millis(200));
+        assert_eq!(l.last_ok, before, "failed ping must not refresh the lease");
+        assert!(l.client.is_none());
+    }
 }

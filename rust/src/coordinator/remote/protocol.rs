@@ -68,17 +68,24 @@ pub const OP_ERR: u8 = 71;
 /// One `SMMFCELL` message (request or reply).
 #[derive(Clone, Debug, PartialEq)]
 pub enum CellMsg {
-    /// Run a cell: `job` is the coordinator-chosen id (the cell's
-    /// expansion index), `run` the cell directory name, `model` the
-    /// workload spelling (`synthetic:…` or an artifact name), `config`
-    /// the canonical TOML rendering of the resolved
+    /// Run a cell: `nonce` is the per-suite-run id the coordinator
+    /// draws once per dispatch (so a persistent worker daemon never
+    /// confuses two runs that reuse the same expansion indices), `job`
+    /// the coordinator-chosen id (the cell's expansion index), `run`
+    /// the cell directory name, `model` the workload spelling
+    /// (`synthetic:…` or an artifact name), `config` the canonical TOML
+    /// rendering of the resolved
     /// [`ExperimentConfig`](crate::coordinator::ExperimentConfig).
-    /// Re-submitting a known job id is idempotent: the worker answers
-    /// with the job's current state instead of running it twice.
-    Submit { job: u64, run: String, model: String, config: String },
+    /// Re-submitting a known `(nonce, job)` pair is idempotent: the
+    /// worker answers with the job's current state instead of running
+    /// it twice. The same `job` under a *different* nonce is fresh work
+    /// — that is what keeps a `--force` re-run (or a second suite)
+    /// against a long-lived worker from being answered with a stale
+    /// verdict.
+    Submit { nonce: u64, job: u64, run: String, model: String, config: String },
     /// Ask for a job's state; answered with `Running`, `Done`,
-    /// `Failed`, or `Err` for an unknown id.
-    Poll { job: u64 },
+    /// `Failed`, or `Err` for an unknown `(nonce, job)`.
+    Poll { nonce: u64, job: u64 },
     /// Heartbeat; answered with `Pong`.
     Ping,
     /// Stop accepting work and shut the worker down (answered with
@@ -173,20 +180,44 @@ fn write_str(w: &mut BlobWriter, s: &str) {
     w.bytes(s.as_bytes());
 }
 
+/// Check a submit's strings against the decode-side caps, so an
+/// oversized cell dies locally with a clear message instead of as the
+/// peer's opaque protocol rejection. The encoder itself stays
+/// infallible — callers (the dispatcher, [`CellClient::submit`]) run
+/// this before framing.
+///
+/// [`CellClient::submit`]: crate::coordinator::remote::client::CellClient::submit
+pub fn check_submit_limits(run: &str, model: &str, config: &str) -> Result<()> {
+    for (what, len, cap) in [
+        ("run", run.len(), MAX_STR_LEN),
+        ("model", model.len(), MAX_STR_LEN),
+        ("config", config.len(), MAX_CONFIG_LEN),
+    ] {
+        if len > cap {
+            bail!("Submit.{what} is {len} bytes, over the wire cap ({cap})");
+        }
+    }
+    Ok(())
+}
+
 fn payload(msg: &CellMsg) -> Vec<u8> {
     let mut w = BlobWriter::new();
     match msg {
-        CellMsg::Submit { job, run, model, config } => {
+        CellMsg::Submit { nonce, job, run, model, config } => {
+            w.u64(*nonce);
             w.u64(*job);
             write_str(&mut w, run);
             write_str(&mut w, model);
             w.u32(config.len() as u32);
             w.bytes(config.as_bytes());
         }
-        CellMsg::Poll { job }
-        | CellMsg::Accepted { job }
-        | CellMsg::Running { job }
-        | CellMsg::Done { job } => w.u64(*job),
+        CellMsg::Poll { nonce, job } => {
+            w.u64(*nonce);
+            w.u64(*job);
+        }
+        CellMsg::Accepted { job } | CellMsg::Running { job } | CellMsg::Done { job } => {
+            w.u64(*job)
+        }
         CellMsg::Failed { job, note } => {
             w.u64(*job);
             write_str(&mut w, clip_str(note));
@@ -261,6 +292,7 @@ pub fn decode_payload(op: u8, body: &[u8]) -> Result<CellMsg> {
     let mut r = BlobReader::new(body);
     let msg = match op {
         OP_SUBMIT => {
+            let nonce = r.u64()?;
             let job = r.u64()?;
             let run = read_str(&mut r, "Submit.run")?;
             let model = read_str(&mut r, "Submit.model")?;
@@ -277,9 +309,9 @@ pub fn decode_payload(op: u8, body: &[u8]) -> Result<CellMsg> {
             }
             let config = String::from_utf8(r.bytes(len)?.to_vec())
                 .context("Submit.config: not valid UTF-8")?;
-            CellMsg::Submit { job, run, model, config }
+            CellMsg::Submit { nonce, job, run, model, config }
         }
-        OP_POLL => CellMsg::Poll { job: r.u64()? },
+        OP_POLL => CellMsg::Poll { nonce: r.u64()?, job: r.u64()? },
         OP_PING => CellMsg::Ping,
         OP_SHUTDOWN => CellMsg::Shutdown,
         OP_ACCEPTED => CellMsg::Accepted { job: r.u64()? },
@@ -339,12 +371,13 @@ mod tests {
     fn all_msgs() -> Vec<CellMsg> {
         vec![
             CellMsg::Submit {
+                nonce: 0xFEED_BEEF,
                 job: 3,
                 run: "quad-adam-s0".into(),
                 model: "synthetic:tiny_lm".into(),
                 config: "name = \"x\"\n[train]\nsteps = 4\n".into(),
             },
-            CellMsg::Poll { job: 9 },
+            CellMsg::Poll { nonce: 0xFEED_BEEF, job: 9 },
             CellMsg::Ping,
             CellMsg::Shutdown,
             CellMsg::Accepted { job: 3 },
@@ -400,10 +433,11 @@ mod tests {
 
     #[test]
     fn trailing_and_truncated_payloads_are_rejected() {
-        let mut bytes = encode(&CellFrame { request_id: 7, msg: CellMsg::Poll { job: 1 } });
+        let mut bytes =
+            encode(&CellFrame { request_id: 7, msg: CellMsg::Poll { nonce: 2, job: 1 } });
         bytes.push(0); // trailing byte after the framed payload
         assert!(decode(&bytes).unwrap_err().to_string().contains("trailing"));
-        let bytes = encode(&CellFrame { request_id: 7, msg: CellMsg::Poll { job: 1 } });
+        let bytes = encode(&CellFrame { request_id: 7, msg: CellMsg::Poll { nonce: 2, job: 1 } });
         assert!(decode(&bytes[..bytes.len() - 1]).unwrap_err().to_string().contains("truncated"));
         // in-payload trailing bytes (op says Ping, payload is non-empty)
         assert!(decode_payload(OP_PING, &[0u8]).is_err());
@@ -415,7 +449,8 @@ mod tests {
         // the payload holds must be rejected by the remaining-bytes
         // check, not by an allocation attempt.
         let mut w = crate::optim::blob::BlobWriter::new();
-        w.u64(1);
+        w.u64(7); // nonce
+        w.u64(1); // job
         w.u32(1);
         w.bytes(b"r");
         w.u32(1);
@@ -426,7 +461,8 @@ mod tests {
         assert!(err.contains("remain"), "{err}");
         // and an over-cap claim is rejected even earlier
         let mut w = crate::optim::blob::BlobWriter::new();
-        w.u64(1);
+        w.u64(7); // nonce
+        w.u64(1); // job
         w.u32(1);
         w.bytes(b"r");
         w.u32(1);
@@ -440,6 +476,26 @@ mod tests {
         let clipped = clip_str(&long);
         assert!(clipped.len() <= MAX_STR_LEN);
         assert!(long.starts_with(clipped));
+    }
+
+    #[test]
+    fn submit_limits_are_checked_before_framing() {
+        assert!(check_submit_limits("run", "model", "steps = 1\n").is_ok());
+        // right at each cap is fine
+        let max_s = "x".repeat(MAX_STR_LEN);
+        let max_c = "x".repeat(MAX_CONFIG_LEN);
+        assert!(check_submit_limits(&max_s, &max_s, &max_c).is_ok());
+        // one byte over any cap fails locally with the field named
+        let over_s = "x".repeat(MAX_STR_LEN + 1);
+        let over_c = "x".repeat(MAX_CONFIG_LEN + 1);
+        for (run, model, config, field) in [
+            (over_s.as_str(), "m", "c", "Submit.run"),
+            ("r", over_s.as_str(), "c", "Submit.model"),
+            ("r", "m", over_c.as_str(), "Submit.config"),
+        ] {
+            let err = check_submit_limits(run, model, config).unwrap_err().to_string();
+            assert!(err.contains(field) && err.contains("cap"), "{err}");
+        }
     }
 
     #[test]

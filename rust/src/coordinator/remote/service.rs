@@ -24,9 +24,14 @@
 //! share a filesystem (the loopback smoke / e2e setup) a completed
 //! remote cell is indistinguishable from a completed local one.
 //!
-//! Submits are idempotent on the job id: re-submitting a known id
-//! answers with the job's current state instead of training twice —
-//! the dispatcher leans on this when it retries after a lost reply.
+//! Submits are idempotent on the `(nonce, job)` pair: re-submitting a
+//! known pair answers with the job's current state instead of training
+//! twice — the dispatcher leans on this when it retries after a lost
+//! reply. The nonce is drawn fresh per suite run, so against a
+//! persistent daemon a second suite (or a `--force` re-run) that reuses
+//! the same expansion indices is fresh work, never a stale verdict;
+//! finished jobs from older nonces are pruned as new-nonce submits
+//! arrive, bounding the table.
 //!
 //! `crash_after_accepts` is the chaos knob for the worker-death e2e: the
 //! N-th accepted submit sets a `crashed` latch *without replying* and
@@ -94,7 +99,10 @@ enum JobState {
 }
 
 struct Shared {
-    jobs: Mutex<HashMap<u64, (String, JobState)>>,
+    /// Keyed by `(suite-run nonce, job)`: the nonce scopes idempotency
+    /// to one dispatch, so job ids (expansion indices) reused by a
+    /// later run never collide with an older run's verdicts.
+    jobs: Mutex<HashMap<(u64, u64), (String, JobState)>>,
     shutdown: AtomicBool,
     /// The chaos latch: once set, every handler goes silent.
     crashed: AtomicBool,
@@ -246,12 +254,22 @@ fn state_reply(job: u64, state: &JobState) -> CellMsg {
 
 /// Serve one submit: register the job, spawn its executor thread,
 /// answer `Accepted`. Returns the reply to send.
-fn handle_submit(shared: &Arc<Shared>, job: u64, run: String, model: String, config: String) -> CellMsg {
+fn handle_submit(
+    shared: &Arc<Shared>,
+    nonce: u64,
+    job: u64,
+    run: String,
+    model: String,
+    config: String,
+) -> CellMsg {
+    let key = (nonce, job);
     {
         let jobs = shared.jobs.lock().unwrap();
-        // Idempotent re-submit: answer with the current state. The
-        // dispatcher hits this when a reply was lost in flight.
-        if let Some((_, state)) = jobs.get(&job) {
+        // Idempotent re-submit (same suite run): answer with the
+        // current state. The dispatcher hits this when a reply was lost
+        // in flight. A different nonce never matches — a later run
+        // reusing this job id is fresh work, not this verdict.
+        if let Some((_, state)) = jobs.get(&key) {
             return match state {
                 JobState::Running => CellMsg::Accepted { job },
                 other => state_reply(job, other),
@@ -271,7 +289,7 @@ fn handle_submit(shared: &Arc<Shared>, job: u64, run: String, model: String, con
     {
         let mut jobs = shared.jobs.lock().unwrap();
         // Re-check under the lock (another handler may have raced us in).
-        if let Some((_, state)) = jobs.get(&job) {
+        if let Some((_, state)) = jobs.get(&key) {
             return match state {
                 JobState::Running => CellMsg::Accepted { job },
                 other => state_reply(job, other),
@@ -283,7 +301,16 @@ fn handle_submit(shared: &Arc<Shared>, job: u64, run: String, model: String, con
             shared.busy.fetch_add(1, Ordering::Relaxed);
             return CellMsg::Busy;
         }
-        jobs.insert(job, (run.clone(), JobState::Running));
+        // A new nonce marks a new suite run: drop finished verdicts
+        // from older nonces so the table stays bounded by the live
+        // run's size. (If a *concurrent* coordinator loses a verdict to
+        // this pruning, its poll gets `unknown job` and its dispatcher
+        // requeues through the summary.json cache recheck — the on-disk
+        // verdict, not this table, is the durable record.) Running jobs
+        // are kept regardless; their executors still need somewhere to
+        // record the verdict.
+        jobs.retain(|&(n, _), (_, s)| n == nonce || matches!(s, JobState::Running));
+        jobs.insert(key, (run.clone(), JobState::Running));
     }
     let n = shared.accepted.fetch_add(1, Ordering::SeqCst) + 1;
     println!("[worker] job {job} {run}: accepted ({model})");
@@ -320,7 +347,7 @@ fn handle_submit(shared: &Arc<Shared>, job: u64, run: String, model: String, con
                 JobState::Done
             }
         };
-        shared.jobs.lock().unwrap().insert(job, (cell.run.clone(), state));
+        shared.jobs.lock().unwrap().insert(key, (cell.run.clone(), state));
     });
     CellMsg::Accepted { job }
 }
@@ -342,12 +369,12 @@ fn handle_conn(stream: TcpStream, shared: Arc<Shared>, io_timeout: Option<Durati
         }
         let id = frame.request_id;
         let reply = match frame.msg {
-            CellMsg::Submit { job, run, model, config } => {
-                handle_submit(&shared, job, run, model, config)
+            CellMsg::Submit { nonce, job, run, model, config } => {
+                handle_submit(&shared, nonce, job, run, model, config)
             }
-            CellMsg::Poll { job } => {
+            CellMsg::Poll { nonce, job } => {
                 let jobs = shared.jobs.lock().unwrap();
-                match jobs.get(&job) {
+                match jobs.get(&(nonce, job)) {
                     Some((_, state)) => state_reply(job, state),
                     None => CellMsg::Err { msg: format!("unknown job {job}") },
                 }

@@ -93,30 +93,48 @@ fn worker_daemon_runs_a_cell_end_to_end() {
         CellClient::connect(&server.addr.to_string(), Some(std::time::Duration::from_secs(5)))
             .unwrap();
     let wire = cell.cfg.to_toml().unwrap();
-    match c.submit(0, &cell.run, &cell.model, &wire).unwrap() {
+    const NONCE: u64 = 0xA11C_E000;
+    let poll_done = |c: &mut CellClient, nonce: u64, job: u64| {
+        // Poll to completion (tiny cell: milliseconds).
+        let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+        loop {
+            match c.poll(nonce, job).unwrap() {
+                CellMsg::Running { .. } => {
+                    assert!(std::time::Instant::now() < deadline, "cell never finished");
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+                CellMsg::Done { .. } => break,
+                other => panic!("expected Running/Done, got {}", other.name()),
+            }
+        }
+    };
+    match c.submit(NONCE, 0, &cell.run, &cell.model, &wire).unwrap() {
         CellMsg::Accepted { job: 0 } => {}
         other => panic!("expected Accepted, got {}", other.name()),
     }
-    // Poll to completion (tiny cell: milliseconds).
-    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
-    loop {
-        match c.poll(0).unwrap() {
-            CellMsg::Running { .. } => {
-                assert!(std::time::Instant::now() < deadline, "cell never finished");
-                std::thread::sleep(std::time::Duration::from_millis(5));
-            }
-            CellMsg::Done { job: 0 } => break,
-            other => panic!("expected Running/Done, got {}", other.name()),
-        }
-    }
+    poll_done(&mut c, NONCE, 0);
     assert!(
         tmp.join("smoke").join(&cell.run).join("summary.json").exists(),
         "worker leaves the standard artifacts"
     );
-    // Idempotent re-submit of a finished job answers Done immediately.
-    match c.submit(0, &cell.run, &cell.model, &wire).unwrap() {
+    // Idempotent re-submit of a finished job answers Done immediately —
+    // but only under the *same* suite-run nonce.
+    match c.submit(NONCE, 0, &cell.run, &cell.model, &wire).unwrap() {
         CellMsg::Done { job: 0 } => {}
         other => panic!("expected Done on re-submit, got {}", other.name()),
+    }
+    // The same job id under a fresh nonce is a new suite run (the
+    // `--force` / second-suite case against a persistent daemon): the
+    // worker must execute it again, never answer the stale verdict.
+    match c.submit(NONCE + 1, 0, &cell.run, &cell.model, &wire).unwrap() {
+        CellMsg::Accepted { job: 0 } => {}
+        other => panic!("expected Accepted under a fresh nonce, got {}", other.name()),
+    }
+    poll_done(&mut c, NONCE + 1, 0);
+    // And the old nonce's verdict was pruned by the new run's submit.
+    match c.poll(NONCE, 0).unwrap() {
+        CellMsg::Err { msg } => assert!(msg.contains("unknown job"), "{msg}"),
+        other => panic!("expected Err for the pruned job, got {}", other.name()),
     }
     // A hostile out_dir is refused before any filesystem traffic.
     let evil = wire.replace(
@@ -124,13 +142,13 @@ fn worker_daemon_runs_a_cell_end_to_end() {
         "out_dir = \"../../etc\"",
     );
     assert_ne!(evil, wire, "fixture must actually rewrite out_dir");
-    match c.submit(1, &cell.run, &cell.model, &evil).unwrap() {
+    match c.submit(NONCE + 1, 1, &cell.run, &cell.model, &evil).unwrap() {
         CellMsg::Err { msg } => assert!(msg.contains("refusing"), "{msg}"),
         other => panic!("expected Err for hostile path, got {}", other.name()),
     }
     c.shutdown().unwrap();
     let stats = server.wait();
-    assert_eq!((stats.accepted, stats.done, stats.failed), (1, 1, 0));
+    assert_eq!((stats.accepted, stats.done, stats.failed), (2, 2, 0));
     let _ = std::fs::remove_dir_all(tmp);
 }
 
@@ -187,6 +205,56 @@ fn two_workers_run_the_suite_and_reports_match_the_local_backend_bytewise() {
 
     for c in [&w1, &w2] {
         CellClient::connect(&c.addr.to_string(), None).unwrap().shutdown().unwrap();
+    }
+    w1.wait();
+    w2.wait();
+    let _ = std::fs::remove_dir_all(tmp);
+}
+
+/// The persistent-daemon regression: job ids are suite expansion
+/// indices, so a second dispatch to a worker that served a previous run
+/// reuses them. A `--force` re-run deletes every `summary.json` first —
+/// if the worker answered those re-used ids from its old job table, the
+/// dispatcher would record cells as Ran without any execution and the
+/// report would read from deleted files. The per-run nonce makes the
+/// second dispatch fresh work.
+#[test]
+fn force_rerun_against_persistent_workers_retrains_every_cell() {
+    let tmp = tmp_dir("force");
+    let cfg = smoke_suite(&tmp);
+    let w1 = start_worker(1, 0);
+    let w2 = start_worker(1, 0);
+
+    let opts = SuiteOptions {
+        workers: Some(remote_spec(&[&w1, &w2])),
+        lease_timeout_ms: 5_000,
+        ..SuiteOptions::default()
+    };
+    let out = run_suite(&cfg, &opts).unwrap();
+    assert_eq!(out.counts(), (6, 0, 0));
+    let first_done = w1.stats().done + w2.stats().done;
+    assert_eq!(first_done, 6);
+
+    // Same daemons, same expansion indices, --force: every cell must
+    // actually train again on the workers.
+    let force_opts = SuiteOptions { force: true, ..opts.clone() };
+    let out2 = run_suite(&cfg, &force_opts).unwrap();
+    assert_eq!(out2.counts(), (6, 0, 0), "force re-run executes every cell");
+    assert_eq!(
+        w1.stats().done + w2.stats().done,
+        12,
+        "workers re-trained the cells instead of replaying stale verdicts"
+    );
+    for (cell, _) in &out2.cells {
+        assert!(
+            out2.suite_dir.join(&cell.run).join("summary.json").exists(),
+            "{}: forced re-run must leave a fresh summary",
+            cell.run
+        );
+    }
+
+    for w in [&w1, &w2] {
+        CellClient::connect(&w.addr.to_string(), None).unwrap().shutdown().unwrap();
     }
     w1.wait();
     w2.wait();

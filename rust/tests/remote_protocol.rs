@@ -16,12 +16,13 @@ fn frame(id: u64, msg: CellMsg) -> CellFrame {
 fn sample_msgs() -> Vec<CellMsg> {
     vec![
         CellMsg::Submit {
+            nonce: 0x1234_5678_9ABC_DEF0,
             job: 0,
             run: "tiny_lm-adam-s0".into(),
             model: "synthetic:tiny_lm".into(),
             config: "name = \"smoke/tiny_lm-adam-s0\"\n[train]\nsteps = 8\n".into(),
         },
-        CellMsg::Poll { job: 3 },
+        CellMsg::Poll { nonce: 0x1234_5678_9ABC_DEF0, job: 3 },
         CellMsg::Ping,
         CellMsg::Shutdown,
         CellMsg::Accepted { job: 0 },
@@ -49,7 +50,7 @@ fn all_messages_roundtrip_with_ids() {
 
 #[test]
 fn corruption_matrix_is_rejected_with_context() {
-    let good = protocol::encode(&frame(9, CellMsg::Poll { job: 7 }));
+    let good = protocol::encode(&frame(9, CellMsg::Poll { nonce: 1, job: 7 }));
 
     // Bad magic — the defense against cross-protocol confusion with
     // SMMFWIRE, whose header layout is identical.
@@ -94,20 +95,25 @@ fn string_and_config_caps_are_enforced() {
     let config = "x".repeat(MAX_CONFIG_LEN);
     let f = frame(
         1,
-        CellMsg::Submit { job: 1, run: "r".into(), model: "m".into(), config },
+        CellMsg::Submit { nonce: 5, job: 1, run: "r".into(), model: "m".into(), config },
     );
     let bytes = protocol::encode(&f);
     assert_eq!(protocol::decode(&bytes).unwrap(), f);
 
-    // One byte over the cap is rejected by the decoder. (The encoder
-    // side never produces this: to_toml output is far under the cap.)
+    // One byte over the cap is rejected by the decoder — and caught
+    // locally, by field name, by the pre-flight limit check the
+    // dispatcher and CellClient::submit run before framing.
+    let over_config = "x".repeat(MAX_CONFIG_LEN + 1);
+    let e = protocol::check_submit_limits("r", "m", &over_config).unwrap_err().to_string();
+    assert!(e.contains("Submit.config") && e.contains("cap"), "{e}");
     let over = frame(
         2,
         CellMsg::Submit {
+            nonce: 5,
             job: 2,
             run: "r".into(),
             model: "m".into(),
-            config: "x".repeat(MAX_CONFIG_LEN + 1),
+            config: over_config,
         },
     );
     let e = protocol::decode(&protocol::encode(&over)).unwrap_err().to_string();
@@ -164,7 +170,7 @@ fn live_socket_ping_pong_and_error_replies() {
     let mut c = CellClient::connect(&addr, Some(std::time::Duration::from_secs(5))).unwrap();
     assert_eq!(c.ping().unwrap(), (0, 3), "idle worker, capacity 3");
     // Unknown job id -> typed Err, connection stays usable.
-    match c.poll(42).unwrap() {
+    match c.poll(1, 42).unwrap() {
         CellMsg::Err { msg } => assert!(msg.contains("unknown job 42"), "{msg}"),
         other => panic!("expected Err, got {}", other.name()),
     }
@@ -180,6 +186,13 @@ fn live_socket_ping_pong_and_error_replies() {
             other => panic!("expected Err, got {}", other.name()),
         }
     }
+    // DNS hostnames are part of the advertised `remote:HOST:PORT`
+    // grammar: dialing via `localhost` (resolver, not an IP literal)
+    // must reach the same worker.
+    let by_name = format!("localhost:{}", server.addr.port());
+    let mut c2 =
+        CellClient::connect(&by_name, Some(std::time::Duration::from_secs(5))).unwrap();
+    assert_eq!(c2.ping().unwrap(), (0, 3), "hostname dial reaches the worker");
     c.shutdown().unwrap();
     let stats = server.wait();
     assert_eq!(stats.accepted, 0);
