@@ -25,6 +25,14 @@
 #                    worker` daemons run the smoke suite over SMMFCELL,
 #                    twice (second pass all-cached), then a local-pool
 #                    pass — all three reports byte-compared
+#   make stream-smoke paper-scale streaming smoke: the corruption
+#                    battery + chunk-stream property tests, then
+#                    `repro loadgen --check` at 1x/8x/64x inventory
+#                    scale (64x exceeds the 1 MiB live-frame cap and
+#                    only serves chunked; --check byte-compares the
+#                    streamed snapshot against the dense reference);
+#                    refreshes BENCH_server.json with the per-scale
+#                    steps/s + bytes/step records
 #   make docs-check  regenerate docs/RESULTS.md from the checked-in
 #                    fixture summaries, fail on diff, and verify every
 #                    docs link / file:line anchor
@@ -32,7 +40,7 @@
 #   make docs        rustdoc for the crate, warnings-clean (--no-deps)
 #   make artifacts   AOT-lower the JAX/Pallas graphs (needs python + jax)
 
-.PHONY: build test smoke suite-smoke serve-smoke chaos-smoke async-smoke remote-smoke docs-check bench docs artifacts
+.PHONY: build test smoke suite-smoke serve-smoke chaos-smoke async-smoke remote-smoke stream-smoke docs-check bench docs artifacts
 
 build:
 	cd rust && cargo build --release
@@ -87,6 +95,9 @@ async-smoke:
 
 remote-smoke:
 	bash rust/tests/remote_smoke.sh
+
+stream-smoke:
+	bash rust/tests/stream_smoke.sh
 
 docs-check:
 	cd rust && cargo run --release -- report tests/fixtures/suite_report/smoke \

@@ -864,6 +864,10 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         "[loadgen] {} pushes accepted, {} busy retries (client), {} busy bounces (server), final loss {:.4}",
         report.pushes, report.busy_retries, stats.busy, report.final_loss
     );
+    println!(
+        "[loadgen] wire traffic: {} per applied step (all clients, both directions)",
+        smmf_repro::util::fmt::bytes(report.bytes_per_step as u64)
+    );
     if faults {
         println!(
             "[loadgen] faults: {} client(s) evicted, {} eviction(s) server-side, \
@@ -917,6 +921,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         .num("clients", opts.clients as f64)
         .num("steps", report.steps as f64)
         .num("steps_per_s", report.steps_per_s)
+        .num("bytes_per_step", report.bytes_per_step)
         .num("push_p50_ms", report.push_p50_ms)
         .num("push_p99_ms", report.push_p99_ms)
         .num("push_mean_ms", report.push_mean_ms)

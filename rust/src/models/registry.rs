@@ -27,6 +27,8 @@ pub fn list_inventories() -> Vec<(&'static str, &'static str)> {
         ("mbart_large", "Table 13 (summarization)"),
         ("marian_mt", "Table 10 (WMT16 En-Ro)"),
         ("tiny_lm", "suite smoke (synthetic workload)"),
+        ("tiny_lm_x8", "chunked-streaming tests (8x vocab)"),
+        ("tiny_lm_x64", "chunked-streaming tests (64x vocab, > 1 frame)"),
     ]
 }
 
@@ -53,6 +55,8 @@ pub fn inventory_by_name(name: &str) -> Option<Inventory> {
         "mbart_large" => bart::mbart_large(),
         "marian_mt" => bart::marian_mt(),
         "tiny_lm" => transformer::tiny_lm(),
+        "tiny_lm_x8" => transformer::tiny_lm_scaled(8),
+        "tiny_lm_x64" => transformer::tiny_lm_scaled(64),
         _ => return None,
     })
 }

@@ -75,8 +75,24 @@ pub fn transformer_big() -> Inventory {
 /// examples. Small enough that a full optimizer sweep over several
 /// seeds runs in milliseconds on one core.
 pub fn tiny_lm() -> Inventory {
-    let mut inv = Inventory::new("tiny_lm");
-    let (vocab, d, ff) = (96, 32, 64);
+    tiny_lm_scaled(1)
+}
+
+/// [`tiny_lm`] with the vocabulary widened `scale`× (96·scale entries)
+/// and everything else unchanged. The embedding and head grow linearly
+/// with `scale` while the transformer block stays fixed, so scaled
+/// variants stress *inventory size* (wire payloads, snapshot streaming)
+/// without changing the workload's character. `x64` (~400K params,
+/// ~1.6 MB of f32 — past the 1 MiB connection-frame cap) is the
+/// paper-scale stand-in the chunked-streaming tests pin against.
+pub fn tiny_lm_scaled(scale: usize) -> Inventory {
+    assert!(scale >= 1);
+    let name = match scale {
+        1 => "tiny_lm".to_string(),
+        s => format!("tiny_lm_x{s}"),
+    };
+    let mut inv = Inventory::new(&name);
+    let (vocab, d, ff) = (96 * scale, 32, 64);
     inv.embedding("tok_emb", vocab, d);
     inv.norm("block.0.ln1", d);
     inv.linear("block.0.attn.qkv", d, 3 * d);
@@ -112,6 +128,30 @@ mod tests {
     fn all_matrices_are_2d() {
         let inv = transformer_base();
         assert!(inv.tensors.iter().all(|t| t.shape.len() <= 2));
+    }
+
+    #[test]
+    fn scaled_tiny_lm_grows_vocab_only() {
+        assert_eq!(tiny_lm_scaled(1).param_count(), tiny_lm().param_count());
+        let base = tiny_lm();
+        for scale in [8usize, 64] {
+            let inv = tiny_lm_scaled(scale);
+            assert_eq!(inv.name, format!("tiny_lm_x{scale}"));
+            assert_eq!(inv.tensors.len(), base.tensors.len());
+            // Only tok_emb and head widen; everything else is unchanged.
+            for (t, b) in inv.tensors.iter().zip(&base.tensors) {
+                assert_eq!(t.name, b.name);
+                if t.name == "tok_emb.weight" || t.name == "head.weight" {
+                    assert_eq!(t.shape.iter().product::<usize>(), scale * b.shape.iter().product::<usize>(), "{}", t.name);
+                } else {
+                    assert_eq!(t.shape, b.shape, "{}", t.name);
+                }
+            }
+        }
+        // The x64 inventory is the paper-scale stand-in: its dense f32
+        // image must not fit in one v4 connection frame.
+        let bytes: usize = tiny_lm_scaled(64).tensors.iter().map(|t| 4 * t.shape.iter().product::<usize>()).sum();
+        assert!(bytes as u64 > crate::server::protocol::MAX_PAYLOAD, "{bytes}");
     }
 
     #[test]

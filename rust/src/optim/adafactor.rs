@@ -244,29 +244,29 @@ impl StateSerde for Adafactor {
     /// (Shazeer & Stern 2018) — or the dense fallback for rank-1 tensors,
     /// followed by the optional dense first moment. The factored-or-dense
     /// encoding is shared with CAME ([`blob::write_factored_or_dense`]).
+    fn state_blob(&self, i: usize) -> Vec<u8> {
+        let st = &self.states[i];
+        let mut w = BlobWriter::new();
+        match &st.v {
+            VState::Factored { row, col, .. } => {
+                blob::write_factored_or_dense(&mut w, Some((row.as_slice(), col.as_slice())), &[])
+            }
+            VState::Dense(v) => blob::write_factored_or_dense(&mut w, None, v),
+            // stateless: dense layout with zero elements
+            VState::None => blob::write_factored_or_dense(&mut w, None, &[]),
+        }
+        match &st.m {
+            Some(m) => {
+                w.u8(1);
+                w.len_prefixed_f32s(m);
+            }
+            None => w.u8(0),
+        }
+        w.finish()
+    }
+
     fn state_blobs(&self) -> Vec<Vec<u8>> {
-        self.states
-            .iter()
-            .map(|st| {
-                let mut w = BlobWriter::new();
-                match &st.v {
-                    VState::Factored { row, col, .. } => {
-                        blob::write_factored_or_dense(&mut w, Some((row.as_slice(), col.as_slice())), &[])
-                    }
-                    VState::Dense(v) => blob::write_factored_or_dense(&mut w, None, v),
-                    // stateless: dense layout with zero elements
-                    VState::None => blob::write_factored_or_dense(&mut w, None, &[]),
-                }
-                match &st.m {
-                    Some(m) => {
-                        w.u8(1);
-                        w.len_prefixed_f32s(m);
-                    }
-                    None => w.u8(0),
-                }
-                w.finish()
-            })
-            .collect()
+        (0..self.states.len()).map(|i| self.state_blob(i)).collect()
     }
 
     fn load_state_blobs(&mut self, blobs: &[Vec<u8>]) -> Result<()> {

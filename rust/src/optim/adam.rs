@@ -137,18 +137,17 @@ impl StateSerde for Adam {
 
     /// Blob (docs/CHECKPOINT_FORMAT.md, kind tags 2/3): `u64 len`, then
     /// the dense first and second moments as f32.
+    fn state_blob(&self, i: usize) -> Vec<u8> {
+        let (m, v) = (&self.m[i], &self.v[i]);
+        let mut w = BlobWriter::new();
+        w.u64(m.len() as u64);
+        w.f32s(m);
+        w.f32s(v);
+        w.finish()
+    }
+
     fn state_blobs(&self) -> Vec<Vec<u8>> {
-        self.m
-            .iter()
-            .zip(&self.v)
-            .map(|(m, v)| {
-                let mut w = BlobWriter::new();
-                w.u64(m.len() as u64);
-                w.f32s(m);
-                w.f32s(v);
-                w.finish()
-            })
-            .collect()
+        (0..self.m.len()).map(|i| self.state_blob(i)).collect()
     }
 
     fn load_state_blobs(&mut self, blobs: &[Vec<u8>]) -> Result<()> {

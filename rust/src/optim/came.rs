@@ -288,25 +288,25 @@ impl StateSerde for Came {
     /// Blob (docs/CHECKPOINT_FORMAT.md, kind tag 6): the factored second
     /// moment `V`, the factored confidence/instability matrix `U` (CAME's
     /// extra state, Luo et al. 2023), then the dense momentum.
+    fn state_blob(&self, i: usize) -> Vec<u8> {
+        let st = &self.states[i];
+        let mut w = BlobWriter::new();
+        blob::write_factored_or_dense(
+            &mut w,
+            st.v.as_ref().map(|f| (f.row.as_slice(), f.col.as_slice())),
+            &st.v_dense,
+        );
+        blob::write_factored_or_dense(
+            &mut w,
+            st.u.as_ref().map(|f| (f.row.as_slice(), f.col.as_slice())),
+            &st.u_dense,
+        );
+        w.len_prefixed_f32s(&st.m);
+        w.finish()
+    }
+
     fn state_blobs(&self) -> Vec<Vec<u8>> {
-        self.states
-            .iter()
-            .map(|st| {
-                let mut w = BlobWriter::new();
-                blob::write_factored_or_dense(
-                    &mut w,
-                    st.v.as_ref().map(|f| (f.row.as_slice(), f.col.as_slice())),
-                    &st.v_dense,
-                );
-                blob::write_factored_or_dense(
-                    &mut w,
-                    st.u.as_ref().map(|f| (f.row.as_slice(), f.col.as_slice())),
-                    &st.u_dense,
-                );
-                w.len_prefixed_f32s(&st.m);
-                w.finish()
-            })
-            .collect()
+        (0..self.states.len()).map(|i| self.state_blob(i)).collect()
     }
 
     fn load_state_blobs(&mut self, blobs: &[Vec<u8>]) -> Result<()> {

@@ -420,6 +420,14 @@ pub trait StateSerde {
     /// Restore the internal step counter.
     fn set_opt_step(&mut self, t: u64);
 
+    /// Serialize the persistent state of the single tensor at
+    /// registration index `i`. [`StateSerde::state_blobs`] is exactly
+    /// `(0..n).map(state_blob)` for every optimizer — the per-tensor
+    /// entry point is what lets the server's streamed snapshot path
+    /// emit one tensor at a time instead of materializing the whole
+    /// inventory's state.
+    fn state_blob(&self, i: usize) -> Vec<u8>;
+
     /// Serialize the persistent state: one native-format blob per
     /// parameter tensor, in registration order.
     fn state_blobs(&self) -> Vec<Vec<u8>>;

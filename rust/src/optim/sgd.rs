@@ -99,21 +99,21 @@ impl StateSerde for Sgd {
     /// when 1, `u64 len` + the momentum buffer as f32. Tensors without
     /// momentum (globally disabled, `StatePolicy::None`, or frozen) emit
     /// the single byte 0.
+    fn state_blob(&self, i: usize) -> Vec<u8> {
+        let m = &self.m[i];
+        let mut w = BlobWriter::new();
+        if m.is_empty() {
+            w.u8(0);
+        } else {
+            w.u8(1);
+            w.u64(m.len() as u64);
+            w.f32s(m);
+        }
+        w.finish()
+    }
+
     fn state_blobs(&self) -> Vec<Vec<u8>> {
-        self.m
-            .iter()
-            .map(|m| {
-                let mut w = BlobWriter::new();
-                if m.is_empty() {
-                    w.u8(0);
-                } else {
-                    w.u8(1);
-                    w.u64(m.len() as u64);
-                    w.f32s(m);
-                }
-                w.finish()
-            })
-            .collect()
+        (0..self.m.len()).map(|i| self.state_blob(i)).collect()
     }
 
     fn load_state_blobs(&mut self, blobs: &[Vec<u8>]) -> Result<()> {

@@ -164,25 +164,25 @@ impl StateSerde for Sm3 {
     /// Blob (docs/CHECKPOINT_FORMAT.md, kind tag 5): `u32 n_axes`, one
     /// length-prefixed per-axis cover accumulator each, then the optional
     /// dense momentum.
+    fn state_blob(&self, i: usize) -> Vec<u8> {
+        let st = &self.states[i];
+        let mut w = BlobWriter::new();
+        w.u32(st.acc.len() as u32);
+        for axis in &st.acc {
+            w.len_prefixed_f32s(axis);
+        }
+        match &st.m {
+            Some(m) => {
+                w.u8(1);
+                w.len_prefixed_f32s(m);
+            }
+            None => w.u8(0),
+        }
+        w.finish()
+    }
+
     fn state_blobs(&self) -> Vec<Vec<u8>> {
-        self.states
-            .iter()
-            .map(|st| {
-                let mut w = BlobWriter::new();
-                w.u32(st.acc.len() as u32);
-                for axis in &st.acc {
-                    w.len_prefixed_f32s(axis);
-                }
-                match &st.m {
-                    Some(m) => {
-                        w.u8(1);
-                        w.len_prefixed_f32s(m);
-                    }
-                    None => w.u8(0),
-                }
-                w.finish()
-            })
-            .collect()
+        (0..self.states.len()).map(|i| self.state_blob(i)).collect()
     }
 
     fn load_state_blobs(&mut self, blobs: &[Vec<u8>]) -> Result<()> {

@@ -844,46 +844,45 @@ impl StateSerde for Smmf {
     /// vectors as f32 plus the sign plane in its stored width — the
     /// momenta are *never* densified, so an SMMF checkpoint stays
     /// `2(n̂+m̂)` floats + `n̂·m̂` bits per tensor.
-    fn state_blobs(&self) -> Vec<Vec<u8>> {
-        self.states
-            .iter()
-            .map(|st| {
-                let mut w = BlobWriter::new();
-                match st {
-                    State::Factored { n, m, r_m, c_m, sign, r_v, c_v } => {
-                        w.u8(1);
-                        w.u32(*n as u32);
-                        w.u32(*m as u32);
-                        w.f32s(r_m);
-                        w.f32s(c_m);
-                        w.f32s(r_v);
-                        w.f32s(c_v);
-                        match sign {
-                            SignStore::Bits(b) => {
-                                w.u8(0);
-                                let bytes = b.to_le_bytes();
-                                w.u64(bytes.len() as u64);
-                                w.bytes(&bytes);
-                            }
-                            SignStore::Bytes(v) => {
-                                w.u8(1);
-                                w.u64(v.len() as u64);
-                                w.bytes(v);
-                            }
-                        }
-                    }
-                    State::Dense { m, v } => {
+    fn state_blob(&self, i: usize) -> Vec<u8> {
+        let mut w = BlobWriter::new();
+        match &self.states[i] {
+            State::Factored { n, m, r_m, c_m, sign, r_v, c_v } => {
+                w.u8(1);
+                w.u32(*n as u32);
+                w.u32(*m as u32);
+                w.f32s(r_m);
+                w.f32s(c_m);
+                w.f32s(r_v);
+                w.f32s(c_v);
+                match sign {
+                    SignStore::Bits(b) => {
                         w.u8(0);
-                        w.u64(m.len() as u64);
-                        w.f32s(m);
-                        w.f32s(v);
+                        let bytes = b.to_le_bytes();
+                        w.u64(bytes.len() as u64);
+                        w.bytes(&bytes);
                     }
-                    // StatePolicy::None / frozen: nothing to persist.
-                    State::Stateless => w.u8(2),
+                    SignStore::Bytes(v) => {
+                        w.u8(1);
+                        w.u64(v.len() as u64);
+                        w.bytes(v);
+                    }
                 }
-                w.finish()
-            })
-            .collect()
+            }
+            State::Dense { m, v } => {
+                w.u8(0);
+                w.u64(m.len() as u64);
+                w.f32s(m);
+                w.f32s(v);
+            }
+            // StatePolicy::None / frozen: nothing to persist.
+            State::Stateless => w.u8(2),
+        }
+        w.finish()
+    }
+
+    fn state_blobs(&self) -> Vec<Vec<u8>> {
+        (0..self.states.len()).map(|i| self.state_blob(i)).collect()
     }
 
     fn load_state_blobs(&mut self, blobs: &[Vec<u8>]) -> Result<()> {

@@ -2,6 +2,11 @@
 //! N-client server bit-identical to the single-process trainer.
 //!
 //! Clients push complete gradient sets tagged with `(client id, step)`.
+//! Under wire protocol v4 a "push" arrives at the connection handler as
+//! a `PushBegin` → chunk → `StreamEnd` stream and is reassembled into
+//! the whole-tensor set *before* it reaches this module — the batcher
+//! is deliberately chunking-blind, so the determinism argument below is
+//! untouched by how the bytes crossed the wire.
 //! The [`StepBatcher`] holds them until every *member* of the current
 //! epoch has pushed for the current step (the *step barrier*), then
 //! combines them into one coalesced gradient by accumulating

@@ -1,12 +1,22 @@
 //! Client side of the optimizer-state server: a blocking wire client
 //! plus the deterministic synthetic gradient workload shared by the
 //! load generator and the single-process reference trainer.
+//!
+//! Under wire protocol v4 the client is a chunking peer: a gradient
+//! push goes out as `PushBegin` → per-tensor chunk pairs → `StreamEnd`
+//! and a parameter pull comes back the same way, reassembled through
+//! [`protocol::ChunkAssembler`] with [`Msg::Resend`] recovery for any
+//! chunk the stream did not deliver. The public API is unchanged from
+//! v3 — callers still exchange whole `Vec<Vec<f32>>` tensor sets; the
+//! chunking is invisible below [`Client::push_grad`] /
+//! [`Client::pull_params`].
 
-use anyhow::{anyhow, bail, Result};
-use std::io::{BufReader, BufWriter};
+use anyhow::{anyhow, bail, Context, Result};
+use std::io::{BufReader, BufWriter, Write};
 use std::net::TcpStream;
 use std::time::Duration;
 
+use crate::optim::blob::BlobReader;
 use crate::server::protocol::{self, EpochView, Frame, Msg, ServerStats};
 use crate::tensor::Tensor;
 use crate::util::backoff::Backoff;
@@ -56,6 +66,34 @@ pub enum PullReply {
     TooStale { applied: u64, required: u64 },
 }
 
+/// Largest single-tensor encoding a pull client will reassemble
+/// (guards allocation against a hostile/buggy server's `ChunkHeader`).
+/// Generous on purpose: paper-scale tensors are the point of v4.
+pub const PULL_TENSOR_CAP: u64 = 1 << 32;
+
+/// Resend round trips a pull tolerates before declaring the server
+/// broken. TCP never drops chunks, so resends only fire against a
+/// misbehaving peer — the cap exists to bound that conversation.
+const MAX_RESENDS: u32 = 1024;
+
+/// What a pull stream carried, before payload decoding.
+enum PullPayload {
+    Stream { step: u64, tensors: Vec<Vec<u8>> },
+    TooStale { applied: u64, required: u64 },
+}
+
+/// One tensor's optimizer moments reconstructed from a factored pull
+/// ([`Client::pull_state_factored`]).
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorMoments {
+    /// Dense first/second momenta — decompressed client-side from the
+    /// SMMF factors + sign plane, or shipped dense for tensors the
+    /// optimizer keeps unfactored.
+    Dense { m: Vec<f32>, v: Vec<f32> },
+    /// The tensor carries no persistent state (frozen / stateless).
+    Stateless,
+}
+
 /// A blocking request/reply connection to a state server. One request
 /// is outstanding at a time (the protocol is strictly request → reply
 /// per connection).
@@ -65,6 +103,10 @@ pub struct Client {
     next_id: u64,
     /// `Busy` bounces absorbed by [`Client::call_retry`].
     pub busy_retries: u64,
+    /// Wire bytes written (headers + payloads, every frame).
+    pub bytes_sent: u64,
+    /// Wire bytes read.
+    pub bytes_received: u64,
     /// Shared backoff machinery: deterministic jitter stream plus the
     /// consecutive-bounce level (reset on any non-Busy reply).
     backoff: Backoff,
@@ -95,22 +137,57 @@ impl Client {
             writer: BufWriter::new(stream),
             next_id: 1,
             busy_retries: 0,
+            bytes_sent: 0,
+            bytes_received: 0,
             backoff: Backoff::new(),
         })
     }
 
-    /// Send one request and wait for its reply. The reply's request id
-    /// must echo the request's (the per-connection protocol is strictly
-    /// sequential, so a mismatch means a framing bug).
-    pub fn call(&mut self, msg: Msg) -> Result<Msg> {
+    /// Write one frame, counting its bytes. Streams batch many sends
+    /// before a reply, so this does NOT flush — callers flush once per
+    /// logical request via [`Client::flush`].
+    fn send(&mut self, frame: &Frame) -> Result<()> {
+        let buf = protocol::encode(frame);
+        self.bytes_sent += buf.len() as u64;
+        self.writer.write_all(&buf)?;
+        Ok(())
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    /// Read one frame, counting its bytes.
+    fn recv(&mut self) -> Result<Frame> {
+        let (frame, n) = protocol::read_frame_counted(&mut self.reader)?;
+        self.bytes_received += n;
+        Ok(frame)
+    }
+
+    /// Read one frame and require it to echo `id` (the per-connection
+    /// protocol is strictly sequential, so a mismatch means a framing
+    /// bug).
+    fn recv_for(&mut self, id: u64) -> Result<Frame> {
+        let frame = self.recv()?;
+        if frame.request_id != id {
+            bail!("reply for request {} while waiting on {id}", frame.request_id);
+        }
+        Ok(frame)
+    }
+
+    fn fresh_id(&mut self) -> u64 {
         let id = self.next_id;
         self.next_id += 1;
-        protocol::write_frame(&mut self.writer, &Frame { request_id: id, msg })?;
-        let reply = protocol::read_frame(&mut self.reader)?;
-        if reply.request_id != id {
-            bail!("reply for request {} while waiting on {id}", reply.request_id);
-        }
-        Ok(reply.msg)
+        id
+    }
+
+    /// Send one single-frame request and wait for its reply.
+    pub fn call(&mut self, msg: Msg) -> Result<Msg> {
+        let id = self.fresh_id();
+        self.send(&Frame { request_id: id, msg })?;
+        self.flush()?;
+        Ok(self.recv_for(id)?.msg)
     }
 
     /// [`Client::call`], transparently retrying [`Msg::Busy`] bounces
@@ -149,10 +226,120 @@ impl Client {
     /// [`PullReply::TooStale`] is data, not an error: the caller decides
     /// whether to wait, retry, or bail.
     pub fn pull_params_at_least(&mut self, min_step: u64) -> Result<PullReply> {
-        match self.call_retry(Msg::PullParams { min_step })? {
-            Msg::Params { step, tensors } => Ok(PullReply::Params { step, tensors }),
-            Msg::TooStale { applied, required } => Ok(PullReply::TooStale { applied, required }),
-            other => bail!("PullParams answered with {}", other.name()),
+        match self.pull(min_step, protocol::PULL_DENSE)? {
+            PullPayload::Stream { step, tensors } => {
+                let tensors = tensors
+                    .iter()
+                    .enumerate()
+                    .map(|(t, b)| {
+                        protocol::bytes_to_f32s(b)
+                            .with_context(|| format!("decoding pulled tensor {t}"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(PullReply::Params { step, tensors })
+            }
+            PullPayload::TooStale { applied, required } => {
+                Ok(PullReply::TooStale { applied, required })
+            }
+        }
+    }
+
+    /// Pull the optimizer state in its native compressed encoding —
+    /// for SMMF, the `u`/`v` factor vectors plus the packed 1-bit sign
+    /// plane per tensor — and reconstruct dense first/second momenta
+    /// client-side. Only the compressed state crosses the wire (the
+    /// paper's memory story, applied to bandwidth). Meaningful against
+    /// an SMMF server; other optimizers' blob encodings are rejected
+    /// by the decoder.
+    pub fn pull_state_factored(&mut self) -> Result<(u64, Vec<TensorMoments>)> {
+        match self.pull(0, protocol::PULL_FACTORED)? {
+            PullPayload::Stream { step, tensors } => {
+                let moments = tensors
+                    .iter()
+                    .enumerate()
+                    .map(|(t, b)| {
+                        decode_smmf_state_blob(b)
+                            .with_context(|| format!("decoding factored state of tensor {t}"))
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok((step, moments))
+            }
+            PullPayload::TooStale { applied, required } => {
+                bail!("factored pull with no floor answered TooStale ({applied} < {required})")
+            }
+        }
+    }
+
+    /// The shared pull machinery: one `PullParams` request, then a
+    /// `ParamsBegin` → chunk → `StreamEnd` reply stream reassembled in
+    /// arrival order, with bounded [`Msg::Resend`] recovery for chunks
+    /// the stream did not deliver. `Busy` retries resend the request
+    /// (nothing is cached server-side until a stream starts).
+    fn pull(&mut self, min_step: u64, mode: u8) -> Result<PullPayload> {
+        loop {
+            let id = self.fresh_id();
+            self.send(&Frame { request_id: id, msg: Msg::PullParams { min_step, mode } })?;
+            self.flush()?;
+            let (step, n_tensors) = match self.recv_for(id)?.msg {
+                Msg::Busy => {
+                    self.busy_retries += 1;
+                    self.backoff.sleep();
+                    continue;
+                }
+                Msg::TooStale { applied, required } => {
+                    self.backoff.reset();
+                    return Ok(PullPayload::TooStale { applied, required });
+                }
+                Msg::Err { msg } => bail!("PullParams rejected: {msg}"),
+                Msg::ParamsBegin { step, mode: got, n_tensors } => {
+                    if got != mode {
+                        bail!("pull requested mode {mode}, the stream is mode {got}");
+                    }
+                    (step, n_tensors)
+                }
+                other => bail!("PullParams answered with {}", other.name()),
+            };
+            self.backoff.reset();
+            let mut asm =
+                protocol::ChunkAssembler::for_unknown(n_tensors as usize, PULL_TENSOR_CAP);
+            loop {
+                let frame = self.recv_for(id)?;
+                match frame.msg {
+                    Msg::ChunkHeader { tensor_idx, seq, total, start, count, tensor_len } => {
+                        asm.header(tensor_idx, seq, total, start, count, tensor_len)?;
+                    }
+                    Msg::ChunkData { tensor_idx, seq, bytes } => {
+                        asm.data(tensor_idx, seq, &bytes)?;
+                    }
+                    Msg::StreamEnd { .. } => break,
+                    other => bail!("{} inside a pull stream", other.name()),
+                }
+            }
+            let mut resends = 0u32;
+            while let Some((tensor_idx, seq)) = asm.missing() {
+                resends += 1;
+                if resends > MAX_RESENDS {
+                    bail!("pull stream still incomplete after {MAX_RESENDS} resends");
+                }
+                let rid = self.fresh_id();
+                self.send(&Frame { request_id: rid, msg: Msg::Resend { tensor_idx, seq } })?;
+                self.flush()?;
+                match self.recv_for(rid)?.msg {
+                    Msg::ChunkHeader { tensor_idx, seq, total, start, count, tensor_len } => {
+                        asm.header(tensor_idx, seq, total, start, count, tensor_len)?;
+                        match self.recv_for(rid)?.msg {
+                            Msg::ChunkData { tensor_idx, seq, bytes } => {
+                                asm.data(tensor_idx, seq, &bytes)?;
+                            }
+                            other => bail!("Resend data frame was {}", other.name()),
+                        }
+                    }
+                    Msg::Err { msg } => bail!("Resend rejected: {msg}"),
+                    other => bail!("Resend answered with {}", other.name()),
+                }
+            }
+            let tensors = asm.finish()?;
+            return Ok(PullPayload::Stream { step, tensors });
         }
     }
 
@@ -163,6 +350,10 @@ impl Client {
     /// (async) — or until the server answers with a stale-epoch /
     /// too-stale / rejection outcome. All four are data, not errors,
     /// because an elastic client must react to them.
+    ///
+    /// On the wire this is a whole chunk stream per attempt; a `Busy`
+    /// answer (the server's queue was full when the assembled push
+    /// reached it) retries the entire stream after backoff.
     pub fn push_grad(
         &mut self,
         client: u32,
@@ -171,12 +362,65 @@ impl Client {
         base_step: u64,
         grads: Vec<Vec<f32>>,
     ) -> Result<PushOutcome> {
-        match self.call_retry(Msg::PushGrad { client, epoch, step, base_step, grads })? {
-            Msg::Ack { step: applied } => Ok(PushOutcome::Applied(applied)),
-            Msg::StaleEpoch { epoch } => Ok(PushOutcome::Stale(epoch)),
-            Msg::TooStale { applied, required } => Ok(PushOutcome::TooStale { applied, required }),
-            Msg::Err { msg } => Ok(PushOutcome::Rejected(msg)),
-            other => bail!("PushGrad answered with {}", other.name()),
+        loop {
+            let id = self.fresh_id();
+            let begin = Msg::PushBegin {
+                client,
+                epoch,
+                step,
+                base_step,
+                n_tensors: grads.len() as u32,
+            };
+            self.send(&Frame { request_id: id, msg: begin })?;
+            for (t, g) in grads.iter().enumerate() {
+                let len = 4 * g.len() as u64;
+                let plan = protocol::chunk_plan(len, 4, protocol::CHUNK_MAX_BYTES);
+                let total = plan.len() as u32;
+                for (seq, &(start, count)) in plan.iter().enumerate() {
+                    let hdr = Msg::ChunkHeader {
+                        tensor_idx: t as u32,
+                        seq: seq as u32,
+                        total,
+                        start,
+                        count,
+                        tensor_len: len,
+                    };
+                    self.send(&Frame { request_id: id, msg: hdr })?;
+                    // chunk_plan row-aligns to 4 bytes, so spans map to
+                    // whole f32s — encode per chunk, O(chunk) scratch.
+                    let lo = (start / 4) as usize;
+                    let hi = ((start + count) / 4) as usize;
+                    let data = Msg::ChunkData {
+                        tensor_idx: t as u32,
+                        seq: seq as u32,
+                        bytes: protocol::f32s_to_bytes(&g[lo..hi]),
+                    };
+                    self.send(&Frame { request_id: id, msg: data })?;
+                }
+            }
+            self.send(&Frame {
+                request_id: id,
+                msg: Msg::StreamEnd { step, tensors: grads.len() as u32 },
+            })?;
+            self.flush()?;
+            match self.recv_for(id)?.msg {
+                Msg::Busy => {
+                    self.busy_retries += 1;
+                    self.backoff.sleep();
+                }
+                reply => {
+                    self.backoff.reset();
+                    return match reply {
+                        Msg::Ack { step: applied } => Ok(PushOutcome::Applied(applied)),
+                        Msg::StaleEpoch { epoch } => Ok(PushOutcome::Stale(epoch)),
+                        Msg::TooStale { applied, required } => {
+                            Ok(PushOutcome::TooStale { applied, required })
+                        }
+                        Msg::Err { msg } => Ok(PushOutcome::Rejected(msg)),
+                        other => bail!("PushGrad answered with {}", other.name()),
+                    };
+                }
+            }
         }
     }
 
@@ -237,6 +481,92 @@ impl Client {
             Msg::Bye => Ok(()),
             other => bail!("Shutdown answered with {}", other.name()),
         }
+    }
+}
+
+/// Decode one SMMF state blob (docs/CHECKPOINT_FORMAT.md, kind tag 4 —
+/// the exact bytes `Smmf::state_blob` emits) and reconstruct dense
+/// momenta the way `Smmf::step` does before applying an update:
+/// `M̂ = r_m ⊗ c_m` with the sign restored from the packed 1-bit plane
+/// (bit set ⇒ strictly positive), `V̂ = r_v ⊗ c_v` (non-negative, no
+/// sign plane). SMMF-only: other optimizers lay their blobs out
+/// differently (Adam's has no leading tag byte), so feeding them here
+/// errors rather than mis-decoding.
+fn decode_smmf_state_blob(blob: &[u8]) -> Result<TensorMoments> {
+    let mut r = BlobReader::new(blob);
+    match r.u8()? {
+        2 => {
+            r.finish()?;
+            Ok(TensorMoments::Stateless)
+        }
+        0 => {
+            let len = r.u64()? as usize;
+            // Exact-size check before allocating: tag + u64 + 2 f32 runs.
+            if blob.len() != 9 + 8 * len {
+                bail!("smmf dense blob claims {len} elements in {} bytes", blob.len());
+            }
+            let mut m = vec![0.0f32; len];
+            let mut v = vec![0.0f32; len];
+            r.f32s_into(&mut m)?;
+            r.f32s_into(&mut v)?;
+            r.finish()?;
+            Ok(TensorMoments::Dense { m, v })
+        }
+        1 => {
+            let n = r.u32()? as usize;
+            let mm = r.u32()? as usize;
+            let numel = n
+                .checked_mul(mm)
+                .filter(|&e| (e as u64) < PULL_TENSOR_CAP)
+                .ok_or_else(|| anyhow!("smmf factored blob claims {n}x{mm} elements"))?;
+            // Factor vectors must fit before their buffers are allocated.
+            if blob.len() < 9 + 8 * (n + mm) {
+                bail!("smmf factored blob is {} bytes, too short for {n}+{mm} factors", blob.len());
+            }
+            let mut r_m = vec![0.0f32; n];
+            let mut c_m = vec![0.0f32; mm];
+            let mut r_v = vec![0.0f32; n];
+            let mut c_v = vec![0.0f32; mm];
+            r.f32s_into(&mut r_m)?;
+            r.f32s_into(&mut c_m)?;
+            r.f32s_into(&mut r_v)?;
+            r.f32s_into(&mut c_v)?;
+            let sign_mode = r.u8()?;
+            let len = r.u64()? as usize;
+            let expected = match sign_mode {
+                0 => numel.div_ceil(64) * 8,
+                1 => numel,
+                other => bail!("smmf sign plane has unknown mode {other}"),
+            };
+            if len != expected {
+                bail!("smmf sign plane is {len} bytes, {n}x{mm} mode {sign_mode} needs {expected}");
+            }
+            let sign = r.bytes(len)?.to_vec();
+            r.finish()?;
+            let positive = |idx: usize| -> bool {
+                match sign_mode {
+                    0 => {
+                        let word = u64::from_le_bytes(
+                            sign[(idx >> 6) * 8..(idx >> 6) * 8 + 8].try_into().unwrap(),
+                        );
+                        (word >> (idx & 63)) & 1 == 1
+                    }
+                    _ => sign[idx] != 0,
+                }
+            };
+            let mut m = vec![0.0f32; numel];
+            let mut v = vec![0.0f32; numel];
+            for i in 0..n {
+                for j in 0..mm {
+                    let idx = i * mm + j;
+                    let mag = r_m[i] * c_m[j];
+                    m[idx] = if positive(idx) { mag } else { -mag };
+                    v[idx] = r_v[i] * c_v[j];
+                }
+            }
+            Ok(TensorMoments::Dense { m, v })
+        }
+        other => bail!("smmf state blob has unknown tag {other} (not an SMMF server?)"),
     }
 }
 
@@ -333,6 +663,91 @@ mod tests {
         assert_ne!(g1, g3);
         // shape mismatch errors
         assert!(GradSource::new(&shapes, 7, 0).grads(&params[..1]).is_err());
+    }
+
+    #[test]
+    fn factored_blob_reconstructs_signed_outer_products() {
+        use crate::optim::blob::BlobWriter;
+        // 2x3, bit-packed sign plane: bits 0, 2, 5 set (strictly positive).
+        let mut w = BlobWriter::new();
+        w.u8(1);
+        w.u32(2);
+        w.u32(3);
+        w.f32s(&[1.0, 2.0]); // r_m
+        w.f32s(&[0.5, 1.0, 2.0]); // c_m
+        w.f32s(&[1.0, 1.0]); // r_v
+        w.f32s(&[2.0, 3.0, 4.0]); // c_v
+        w.u8(0); // SignStore::Bits
+        w.u64(8);
+        w.bytes(&0b100101u64.to_le_bytes());
+        let got = decode_smmf_state_blob(&w.finish()).unwrap();
+        assert_eq!(
+            got,
+            TensorMoments::Dense {
+                m: vec![0.5, -1.0, 2.0, -1.0, -2.0, 4.0],
+                v: vec![2.0, 3.0, 4.0, 2.0, 3.0, 4.0],
+            }
+        );
+
+        // Same factors with a byte-wide sign plane, signs flipped.
+        let mut w = BlobWriter::new();
+        w.u8(1);
+        w.u32(2);
+        w.u32(3);
+        w.f32s(&[1.0, 2.0]);
+        w.f32s(&[0.5, 1.0, 2.0]);
+        w.f32s(&[1.0, 1.0]);
+        w.f32s(&[2.0, 3.0, 4.0]);
+        w.u8(1); // SignStore::Bytes
+        w.u64(6);
+        w.bytes(&[0, 1, 0, 1, 1, 0]);
+        match decode_smmf_state_blob(&w.finish()).unwrap() {
+            TensorMoments::Dense { m, .. } => {
+                assert_eq!(m, vec![-0.5, 1.0, -2.0, 1.0, 2.0, -4.0]);
+            }
+            other => panic!("expected dense, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn dense_and_stateless_blobs_decode() {
+        use crate::optim::blob::BlobWriter;
+        let mut w = BlobWriter::new();
+        w.u8(0);
+        w.u64(2);
+        w.f32s(&[0.25, -0.5]); // m
+        w.f32s(&[1.5, 2.5]); // v
+        assert_eq!(
+            decode_smmf_state_blob(&w.finish()).unwrap(),
+            TensorMoments::Dense { m: vec![0.25, -0.5], v: vec![1.5, 2.5] }
+        );
+        assert_eq!(decode_smmf_state_blob(&[2]).unwrap(), TensorMoments::Stateless);
+    }
+
+    #[test]
+    fn malformed_smmf_blobs_are_typed_errors() {
+        use crate::optim::blob::BlobWriter;
+        // Unknown tag.
+        assert!(decode_smmf_state_blob(&[7]).is_err());
+        // Adam-style blob (no tag byte): the leading u64 len byte stream
+        // starts with the length, which reads as a bogus tag.
+        let mut w = BlobWriter::new();
+        w.u64(3);
+        w.f32s(&[0.0; 3]);
+        w.f32s(&[0.0; 3]);
+        assert!(decode_smmf_state_blob(&w.finish()).is_err());
+        // Sign plane length disagreeing with n x m.
+        let mut w = BlobWriter::new();
+        w.u8(1);
+        w.u32(2);
+        w.u32(3);
+        w.f32s(&[0.0; 10]); // all four factor vectors
+        w.u8(0);
+        w.u64(16); // 2x3 needs exactly one 8-byte word
+        w.bytes(&[0u8; 16]);
+        assert!(decode_smmf_state_blob(&w.finish()).is_err());
+        // Trailing garbage after a stateless tag.
+        assert!(decode_smmf_state_blob(&[2, 9]).is_err());
     }
 
     #[test]

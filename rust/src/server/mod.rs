@@ -10,11 +10,14 @@
 //! module:
 //!
 //! * [`protocol`] — the `SMMFWIRE` versioned, length-prefixed binary
-//!   framing (`PushGrad` / `PullParams` / `Snapshot` / `Stats` /
-//!   `Shutdown`, plus the v2 membership ops `Join` / `Leave` /
-//!   `EpochInfo`, plus the v3 bounded-staleness fields, `TooStale`
-//!   reply and commit-log frames), decoded with the same strict
-//!   bounds-checked discipline as the checkpoint container.
+//!   framing. v4 replaces the whole-inventory payloads with sequence-
+//!   numbered per-tensor chunk streams (`PushBegin` / `ChunkHeader` /
+//!   `ChunkData` / `StreamEnd`, `Resend` recovery, dense and SMMF-
+//!   factored pull modes) so any-size inventory crosses the wire in
+//!   O(chunk) frames; membership ops (`Join` / `Leave` / `EpochInfo`),
+//!   bounded-staleness fields, the `TooStale` reply and commit-log
+//!   frames carry over from v2/v3. Everything is decoded with the same
+//!   strict bounds-checked discipline as the checkpoint container.
 //! * [`batch`] — gradient coalescing: concurrent client pushes
 //!   accumulate behind a per-step barrier and reduce in fixed member-id
 //!   order, so the applied step is independent of network timing. The
@@ -56,9 +59,12 @@ pub mod protocol;
 pub mod service;
 pub mod shard;
 
-pub use client::{Client, GradSource, PullReply, PushOutcome};
+pub use client::{Client, GradSource, PullReply, PushOutcome, TensorMoments, PULL_TENSOR_CAP};
 pub use commitlog::{grad_digest, CommitLog, CommitLogWriter, LogInfo};
-pub use protocol::{Contributor, EpochView, Frame, Msg, ServerStats};
+pub use protocol::{
+    chunk_plan, ChunkAssembler, ChunkError, Contributor, EpochView, Frame, Msg, ServerStats,
+    CHUNK_MAX_BYTES, MAX_PAYLOAD, PULL_DENSE, PULL_FACTORED,
+};
 pub use service::{
     reference_checkpoint, reference_checkpoint_elastic, replay_commit_log, resolve_inventory,
     run_loadgen, LoadgenOptions, LoadgenReport, ReplayReport, ServeOptions, Server,

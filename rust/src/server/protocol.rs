@@ -6,42 +6,59 @@
 //! ```text
 //! offset  size  field
 //! 0       8     magic  b"SMMFWIRE"
-//! 8       4     u32    protocol version (= 3)
+//! 8       4     u32    protocol version (= 4)
 //! 12      8     u64    request id (replies echo the request's id)
 //! 20      1     u8     op code (see the OP_* constants)
-//! 21      8     u64    payload length in bytes (<= MAX_PAYLOAD)
+//! 21      8     u64    payload length in bytes (op-dependent cap)
 //! 29      len   op-specific payload
 //! ```
 //!
-//! Version 2 added membership epochs: `PushGrad` carries the epoch the
-//! client believes is current, `Join`/`Leave`/`EpochInfo` renegotiate
-//! the barrier, and a push tagged with a superseded epoch is answered
-//! with [`Msg::StaleEpoch`] (carrying the current epoch) so the client
-//! can refresh and retry instead of parsing error strings.
+//! Version 2 added membership epochs: pushes carry the epoch the client
+//! believes is current, `Join`/`Leave`/`EpochInfo` renegotiate the
+//! barrier, and a push tagged with a superseded epoch is answered with
+//! [`Msg::StaleEpoch`] so the client can refresh and retry instead of
+//! parsing error strings.
 //!
-//! Version 3 added bounded-staleness async ingestion: `PushGrad`
-//! carries the `base_step` its gradient was computed against,
-//! `PullParams` carries a `min_step` freshness floor, and a push (or
-//! pull) outside the staleness window is answered with the typed
-//! [`Msg::TooStale`]. The commit-log frames ([`Msg::LogHeader`],
-//! [`Msg::LogCommit`]) live in a third op range (>= 128): they are
-//! written to the on-disk commit log through the same framing and
-//! strict decode, but are never valid requests or replies on a live
-//! connection.
+//! Version 3 added bounded-staleness async ingestion (`base_step` /
+//! `min_step` / the typed [`Msg::TooStale`]) and the commit-log frames
+//! ([`Msg::LogHeader`], [`Msg::LogCommit`]).
+//!
+//! Version 4 replaces the whole-inventory `PushGrad`/`Params` frames
+//! with **chunked tensor streaming**: a push is a [`Msg::PushBegin`]
+//! followed by sequence-numbered [`Msg::ChunkHeader`]/[`Msg::ChunkData`]
+//! pairs (one per [`chunk_plan`] span, any arrival order) closed by a
+//! [`Msg::StreamEnd`]; a pull is answered by a [`Msg::ParamsBegin`]
+//! followed by the same chunk-pair stream. Each chunk carries at most
+//! [`CHUNK_MAX_BYTES`] of tensor data, so an inventory of any size
+//! crosses the wire with O(chunk) framing memory on both ends, and the
+//! live-connection payload cap shrinks from 256 MiB to [`MAX_PAYLOAD`]
+//! (1 MiB) — no frame on a connection ever needs more. The commit-log
+//! file ops (>= 128) keep the old roomy [`MAX_FILE_PAYLOAD`] cap
+//! because a logged commit still records one whole coalesced gradient
+//! set. A lost or corrupt chunk is recoverable with the
+//! [`Msg::Resend`] op, answered by re-sending that single chunk pair.
+//! `PullParams` also gains a `mode` byte: [`PULL_FACTORED`] ships the
+//! optimizer's native state blobs (SMMF's u/v factor vectors + packed
+//! 1-bit sign planes, never densified) instead of dense parameters.
+//! v3 commit logs do not replay under v4 (the version check is exact);
+//! re-record or replay them with a v3 binary.
 //!
 //! All multi-byte values are little-endian, encoded/decoded with the
 //! checkpoint blob codec (`optim::blob`). Decoding follows the same
 //! strict discipline as `SMMFCKPT` loading: magic/version/op are
 //! validated before the payload is touched, the payload length is capped
-//! before any allocation, every per-tensor element count is checked
-//! against the bytes actually remaining *before* the buffer is
-//! allocated, and trailing payload bytes are rejected — a truncated or
-//! hostile frame produces a context-rich error, never a panic or an
-//! unbounded allocation. The byte-level spec lives in
+//! before any allocation, every count field is checked against the bytes
+//! actually remaining *before* the buffer is allocated, and trailing
+//! payload bytes are rejected — a truncated or hostile frame produces a
+//! context-rich error, never a panic or an unbounded allocation.
+//! Reassembly ([`ChunkAssembler`]) applies the same rigor with typed
+//! errors ([`ChunkError`]): duplicate, overlapping, out-of-range and
+//! missing chunks are all rejected. The byte-level spec lives in
 //! `docs/SERVER_PROTOCOL.md`; changing any layout here requires a
 //! version bump and a spec update.
 
 use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
 use std::io::{Read, Write};
 
 use crate::optim::blob::{BlobReader, BlobWriter};
@@ -49,23 +66,47 @@ use crate::optim::blob::{BlobReader, BlobWriter};
 /// Frame magic (8 bytes, never changes).
 pub const MAGIC: &[u8; 8] = b"SMMFWIRE";
 /// Current protocol version. Bump on any layout change.
-/// v2: epoch-tagged `PushGrad`, membership ops, extended stats.
+/// v2: epoch-tagged pushes, membership ops, extended stats.
 /// v3: bounded staleness (`base_step`/`min_step`/`TooStale`) and the
 /// commit-log frames (`LogHeader`/`LogCommit`).
-pub const VERSION: u32 = 3;
+/// v4: chunked tensor streaming (`PushBegin`/`ChunkHeader`/`ChunkData`/
+/// `StreamEnd`/`ParamsBegin`/`Resend`), the factored pull mode, and the
+/// split live-connection / file payload caps.
+pub const VERSION: u32 = 4;
 /// Fixed frame header size: magic + version + request id + op + length.
 pub const HEADER_LEN: usize = 8 + 4 + 8 + 1 + 8;
-/// Hard payload cap: a frame may never ask the peer to buffer more.
-pub const MAX_PAYLOAD: u64 = 256 << 20;
+/// Hard payload cap for live-connection ops (< 128). Chunked streaming
+/// means no connection frame ever carries a whole inventory, so this is
+/// deliberately small: a `ChunkData` frame tops out at 8 bytes of
+/// addressing + [`CHUNK_MAX_BYTES`] of tensor data.
+pub const MAX_PAYLOAD: u64 = 1 << 20;
+/// Hard payload cap for the commit-log file ops (>= 128): a logged
+/// commit records one whole coalesced gradient set, so it keeps the
+/// pre-v4 roomy cap.
+pub const MAX_FILE_PAYLOAD: u64 = 256 << 20;
 /// Per-frame tensor-count cap (mirrors the checkpoint loader's cap).
 pub const MAX_TENSORS: usize = 1 << 20;
 /// Snapshot-path / error-string length cap.
 pub const MAX_STR_LEN: usize = 4096;
 /// Barrier-membership list cap (an `EpochReply` can never claim more).
 pub const MAX_MEMBERS: usize = 4096;
+/// Most tensor-data bytes one chunk may carry (64 Ki f32 elements).
+pub const CHUNK_MAX_BYTES: u64 = 256 * 1024;
+/// Most chunks one tensor may be split into (with [`CHUNK_MAX_BYTES`]
+/// this bounds a streamed tensor at 16 GiB — far past any inventory
+/// here, but finite, so a hostile `total` cannot inflate bookkeeping).
+pub const MAX_CHUNKS_PER_TENSOR: u32 = 1 << 16;
+
+/// `PullParams.mode`: dense parameters (f32 tensor data, inventory
+/// order) — the only mode v3 had.
+pub const PULL_DENSE: u8 = 0;
+/// `PullParams.mode`: the optimizer's native per-tensor state blobs
+/// (for SMMF: u/v factor vectors + packed 1-bit sign planes, exactly
+/// the `SMMFCKPT` per-tensor layout), reconstructed client-side.
+pub const PULL_FACTORED: u8 = 1;
 
 /// Request op codes (client -> server).
-pub const OP_PUSH_GRAD: u8 = 1;
+pub const OP_PUSH_BEGIN: u8 = 1;
 pub const OP_PULL_PARAMS: u8 = 2;
 pub const OP_SNAPSHOT: u8 = 3;
 pub const OP_STATS: u8 = 4;
@@ -73,10 +114,16 @@ pub const OP_SHUTDOWN: u8 = 5;
 pub const OP_JOIN: u8 = 6;
 pub const OP_LEAVE: u8 = 7;
 pub const OP_EPOCH_INFO: u8 = 8;
+pub const OP_RESEND: u8 = 9;
+/// Stream-frame op codes (both directions, between a `PushBegin` /
+/// `ParamsBegin` and the closing `StreamEnd`).
+pub const OP_CHUNK_HEADER: u8 = 16;
+pub const OP_CHUNK_DATA: u8 = 17;
+pub const OP_STREAM_END: u8 = 18;
 /// Reply op codes (server -> client) live in a disjoint range so a
 /// misdirected frame can never be confused for a request.
 pub const OP_ACK: u8 = 64;
-pub const OP_PARAMS: u8 = 65;
+pub const OP_PARAMS_BEGIN: u8 = 65;
 pub const OP_SNAPSHOT_DONE: u8 = 66;
 pub const OP_STATS_REPLY: u8 = 67;
 pub const OP_BUSY: u8 = 68;
@@ -91,6 +138,16 @@ pub const OP_TOO_STALE: u8 = 73;
 pub const OP_LOG_HEADER: u8 = 128;
 pub const OP_LOG_COMMIT: u8 = 129;
 
+/// The payload cap that applies to `op`: file ops keep the roomy
+/// pre-v4 cap, everything on a live connection gets the small one.
+pub fn max_payload_for(op: u8) -> u64 {
+    if op >= OP_LOG_HEADER {
+        MAX_FILE_PAYLOAD
+    } else {
+        MAX_PAYLOAD
+    }
+}
+
 /// `EpochReply::client` value meaning "no client id applies" (the reply
 /// to an `EpochInfo` probe, which assigns nothing).
 pub const NO_CLIENT: u32 = u32::MAX;
@@ -104,7 +161,7 @@ pub struct ServerStats {
     pub shards: u32,
     /// Barrier width: gradient pushes per step.
     pub clients: u32,
-    /// Total accepted `PushGrad` requests.
+    /// Total accepted gradient pushes.
     pub pushes: u64,
     /// Requests bounced with [`Msg::Busy`] (request queue full).
     pub busy: u64,
@@ -145,27 +202,30 @@ pub struct EpochView {
     pub members: Vec<u32>,
 }
 
-/// One protocol message (request or reply).
+/// One protocol message (request, stream frame, reply, internal
+/// coordinator message, or commit-log record).
 #[derive(Clone, Debug, PartialEq)]
 pub enum Msg {
-    /// Client `client` pushes its gradient set for optimizer step `step`
-    /// (flat f32 data per tensor, inventory registration order),
-    /// tagged with the membership `epoch` it believes is current and
-    /// the applied step (`base_step`) the gradient was computed
-    /// against. The reply — [`Msg::Ack`] — is deferred until the step
-    /// barrier completes (sync mode) or the contribution is committed
-    /// as part of a partial batch (async mode; the acked step is the
-    /// commit step, which may exceed `step`). A superseded epoch is
-    /// answered with [`Msg::StaleEpoch`]; a `base_step` outside the
-    /// staleness window with [`Msg::TooStale`].
-    PushGrad { client: u32, epoch: u64, step: u64, base_step: u64, grads: Vec<Vec<f32>> },
+    /// Opens a push stream: client `client` is about to stream its
+    /// gradient set for optimizer step `step` over `n_tensors` tensors
+    /// (inventory registration order), tagged with the membership
+    /// `epoch` it believes is current and the applied step
+    /// (`base_step`) the gradient was computed against. The chunk pairs
+    /// and the closing [`Msg::StreamEnd`] follow under the same request
+    /// id; the single reply — [`Msg::Ack`], [`Msg::StaleEpoch`],
+    /// [`Msg::TooStale`], [`Msg::Busy`] or [`Msg::Err`] — arrives after
+    /// `StreamEnd`.
+    PushBegin { client: u32, epoch: u64, step: u64, base_step: u64, n_tensors: u32 },
     /// Fetch the current parameters, but only if at least `min_step`
-    /// steps have been applied (0 = unconditional); replied with
-    /// [`Msg::Params`], or [`Msg::TooStale`] when the server is behind
-    /// the floor.
-    PullParams { min_step: u64 },
+    /// steps have been applied (0 = unconditional). `mode` selects the
+    /// representation: [`PULL_DENSE`] or [`PULL_FACTORED`]. Answered
+    /// with a [`Msg::ParamsBegin`]-opened chunk stream, or a single
+    /// [`Msg::TooStale`] / [`Msg::Busy`] / [`Msg::Err`].
+    PullParams { min_step: u64, mode: u8 },
     /// Write a `SMMFCKPT` v2 snapshot to `path` on the server host;
-    /// replied with [`Msg::SnapshotDone`].
+    /// replied with [`Msg::SnapshotDone`]. The server streams it
+    /// shard-by-shard — the full inventory's state is never
+    /// materialized in one buffer.
     Snapshot { path: String },
     /// Fetch [`ServerStats`]; replied with [`Msg::StatsReply`].
     Stats,
@@ -180,10 +240,30 @@ pub enum Msg {
     /// Probe the current epoch/membership; replied with
     /// [`Msg::EpochReply`] (no membership change).
     EpochInfo,
-    /// `PushGrad` accepted and applied; `step` is the step just applied.
+    /// Recovery: re-send one chunk of the most recent pull stream on
+    /// this connection. Answered with that chunk's
+    /// [`Msg::ChunkHeader`] + [`Msg::ChunkData`] pair, or [`Msg::Err`]
+    /// if there is no cached stream or the address is out of range.
+    Resend { tensor_idx: u32, seq: u32 },
+    /// Addressing for one chunk of tensor `tensor_idx`: this is chunk
+    /// `seq` of `total`, covering bytes `[start, start+count)` of the
+    /// tensor's `tensor_len`-byte encoding. Always immediately followed
+    /// by its [`Msg::ChunkData`]. `count` <= [`CHUNK_MAX_BYTES`].
+    ChunkHeader { tensor_idx: u32, seq: u32, total: u32, start: u64, count: u64, tensor_len: u64 },
+    /// The bytes of the chunk announced by the preceding
+    /// [`Msg::ChunkHeader`] with the same `(tensor_idx, seq)`.
+    ChunkData { tensor_idx: u32, seq: u32, bytes: Vec<u8> },
+    /// Closes a chunk stream: `tensors` tensors were streamed; for a
+    /// params stream `step` echoes the `ParamsBegin` step (for a push
+    /// stream it echoes the `PushBegin` step).
+    StreamEnd { step: u64, tensors: u32 },
+    /// Push accepted and applied; `step` is the step just applied.
     Ack { step: u64 },
-    /// Current parameters after `step` applied steps.
-    Params { step: u64, tensors: Vec<Vec<f32>> },
+    /// Opens the reply stream to a [`Msg::PullParams`]: parameters (or
+    /// factored state, per `mode`) after `step` applied steps follow as
+    /// chunk pairs over `n_tensors` tensors, closed by
+    /// [`Msg::StreamEnd`].
+    ParamsBegin { step: u64, mode: u8, n_tensors: u32 },
     /// Snapshot written (`bytes` = on-disk size).
     SnapshotDone { bytes: u64 },
     /// Stats reply.
@@ -196,8 +276,8 @@ pub enum Msg {
     Err { msg: String },
     /// Reply to `Join` / `Leave` / `EpochInfo`: the new membership view.
     EpochReply(EpochView),
-    /// A `PushGrad` carried a superseded epoch; `epoch` is the current
-    /// one — refresh membership knowledge and retry.
+    /// A push carried a superseded epoch; `epoch` is the current one —
+    /// refresh membership knowledge and retry.
     StaleEpoch { epoch: u64 },
     /// The request fell outside the bounded-staleness window. For a
     /// push: the gradient's `base_step` is more than `staleness` steps
@@ -206,6 +286,19 @@ pub enum Msg {
     /// has applied only `applied` steps, short of the `required`
     /// (`min_step`) floor.
     TooStale { applied: u64, required: u64 },
+    /// INTERNAL (never framed in v4): a fully reassembled gradient push,
+    /// handed from the connection handler to the coordinator over the
+    /// in-process request channel. The wire carries it as a
+    /// `PushBegin` + chunk stream.
+    PushGrad { client: u32, epoch: u64, step: u64, base_step: u64, grads: Vec<Vec<f32>> },
+    /// INTERNAL (never framed in v4): the coordinator's dense-params
+    /// reply, streamed out by the connection handler as a
+    /// `ParamsBegin` + chunk stream.
+    Params { step: u64, tensors: Vec<Vec<f32>> },
+    /// INTERNAL (never framed in v4): the coordinator's factored-pull
+    /// reply — one native state blob per tensor, inventory order —
+    /// streamed out by the connection handler.
+    StateBlobs { step: u64, blobs: Vec<Vec<u8>> },
     /// Commit-log file header (first frame of a commit log, never sent
     /// on a connection): the run identity a replay must match.
     LogHeader {
@@ -232,10 +325,11 @@ pub enum Msg {
 }
 
 impl Msg {
-    /// The wire op code of this message.
+    /// The wire op code of this message. Panics for the internal
+    /// coordinator-channel variants — they are never framed.
     pub fn op(&self) -> u8 {
         match self {
-            Msg::PushGrad { .. } => OP_PUSH_GRAD,
+            Msg::PushBegin { .. } => OP_PUSH_BEGIN,
             Msg::PullParams { .. } => OP_PULL_PARAMS,
             Msg::Snapshot { .. } => OP_SNAPSHOT,
             Msg::Stats => OP_STATS,
@@ -243,8 +337,12 @@ impl Msg {
             Msg::Join => OP_JOIN,
             Msg::Leave { .. } => OP_LEAVE,
             Msg::EpochInfo => OP_EPOCH_INFO,
+            Msg::Resend { .. } => OP_RESEND,
+            Msg::ChunkHeader { .. } => OP_CHUNK_HEADER,
+            Msg::ChunkData { .. } => OP_CHUNK_DATA,
+            Msg::StreamEnd { .. } => OP_STREAM_END,
             Msg::Ack { .. } => OP_ACK,
-            Msg::Params { .. } => OP_PARAMS,
+            Msg::ParamsBegin { .. } => OP_PARAMS_BEGIN,
             Msg::SnapshotDone { .. } => OP_SNAPSHOT_DONE,
             Msg::StatsReply(_) => OP_STATS_REPLY,
             Msg::Busy => OP_BUSY,
@@ -253,6 +351,9 @@ impl Msg {
             Msg::EpochReply(_) => OP_EPOCH_REPLY,
             Msg::StaleEpoch { .. } => OP_STALE_EPOCH,
             Msg::TooStale { .. } => OP_TOO_STALE,
+            Msg::PushGrad { .. } | Msg::Params { .. } | Msg::StateBlobs { .. } => {
+                panic!("{} is coordinator-internal and has no wire op in v4", self.name())
+            }
             Msg::LogHeader { .. } => OP_LOG_HEADER,
             Msg::LogCommit { .. } => OP_LOG_COMMIT,
         }
@@ -261,7 +362,7 @@ impl Msg {
     /// Human-readable op name (logs and error contexts).
     pub fn name(&self) -> &'static str {
         match self {
-            Msg::PushGrad { .. } => "PushGrad",
+            Msg::PushBegin { .. } => "PushBegin",
             Msg::PullParams { .. } => "PullParams",
             Msg::Snapshot { .. } => "Snapshot",
             Msg::Stats => "Stats",
@@ -269,8 +370,12 @@ impl Msg {
             Msg::Join => "Join",
             Msg::Leave { .. } => "Leave",
             Msg::EpochInfo => "EpochInfo",
+            Msg::Resend { .. } => "Resend",
+            Msg::ChunkHeader { .. } => "ChunkHeader",
+            Msg::ChunkData { .. } => "ChunkData",
+            Msg::StreamEnd { .. } => "StreamEnd",
             Msg::Ack { .. } => "Ack",
-            Msg::Params { .. } => "Params",
+            Msg::ParamsBegin { .. } => "ParamsBegin",
             Msg::SnapshotDone { .. } => "SnapshotDone",
             Msg::StatsReply(_) => "StatsReply",
             Msg::Busy => "Busy",
@@ -279,6 +384,9 @@ impl Msg {
             Msg::EpochReply(_) => "EpochReply",
             Msg::StaleEpoch { .. } => "StaleEpoch",
             Msg::TooStale { .. } => "TooStale",
+            Msg::PushGrad { .. } => "PushGrad",
+            Msg::Params { .. } => "Params",
+            Msg::StateBlobs { .. } => "StateBlobs",
             Msg::LogHeader { .. } => "LogHeader",
             Msg::LogCommit { .. } => "LogCommit",
         }
@@ -290,6 +398,429 @@ impl Msg {
 pub struct Frame {
     pub request_id: u64,
     pub msg: Msg,
+}
+
+// ---------------------------------------------------------------------------
+// Chunk planning and reassembly
+// ---------------------------------------------------------------------------
+
+/// Split a `len`-byte tensor encoding into chunk spans `(start, count)`
+/// of at most `budget` bytes each. When `0 < row_bytes <= budget`, the
+/// span is rounded down to a whole number of rows, so a row-major 2-D
+/// tensor streams in row-aligned pieces (a resent chunk then maps to
+/// whole rows). A zero-length tensor still yields one `(0, 0)` chunk so
+/// every tensor has `total >= 1` and the receiver can distinguish "an
+/// empty tensor arrived" from "nothing arrived". Deterministic: both
+/// ends planning over the same `(len, row_bytes, budget)` agree on
+/// every span, which is what makes [`Msg::Resend`] addressable.
+pub fn chunk_plan(len: u64, row_bytes: u64, budget: u64) -> Vec<(u64, u64)> {
+    let budget = budget.max(1);
+    let span = if row_bytes > 0 && row_bytes <= budget {
+        (budget / row_bytes) * row_bytes
+    } else {
+        budget
+    };
+    if len == 0 {
+        return vec![(0, 0)];
+    }
+    let mut out = Vec::with_capacity(len.div_ceil(span) as usize);
+    let mut start = 0u64;
+    while start < len {
+        let count = span.min(len - start);
+        out.push((start, count));
+        start += count;
+    }
+    out
+}
+
+/// Typed chunk-reassembly error. Every hostile or lossy stream shape
+/// maps to one of these — callers (and the property tests) can match on
+/// the kind instead of string-parsing.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ChunkError {
+    /// `tensor_idx` is past the stream's announced tensor count.
+    TensorOutOfRange { tensor_idx: u32, n_tensors: u32 },
+    /// `seq >= total` for this tensor.
+    SeqOutOfRange { tensor_idx: u32, seq: u32, total: u32 },
+    /// Two headers for the same tensor disagree on `total`.
+    TotalMismatch { tensor_idx: u32, got: u32, expected: u32 },
+    /// `total` is 0 or exceeds [`MAX_CHUNKS_PER_TENSOR`].
+    TooManyChunks { tensor_idx: u32, total: u32 },
+    /// The header's `tensor_len` disagrees with the known length (or
+    /// exceeds the receiver's cap in untrusted mode).
+    LenMismatch { tensor_idx: u32, got: u64, expected: u64 },
+    /// `start + count` runs past `tensor_len`.
+    RangeOutOfBounds { tensor_idx: u32, seq: u32 },
+    /// One chunk claims more than [`CHUNK_MAX_BYTES`] bytes.
+    ChunkTooLarge { tensor_idx: u32, seq: u32, count: u64 },
+    /// A second header (or data) arrived for an already-filled `seq`.
+    Duplicate { tensor_idx: u32, seq: u32 },
+    /// This chunk's byte range intersects another chunk's.
+    Overlap { tensor_idx: u32, seq: u32 },
+    /// `ChunkData` arrived with no matching `ChunkHeader` first.
+    DataWithoutHeader { tensor_idx: u32, seq: u32 },
+    /// The data frame's byte count differs from its header's `count`.
+    DataSizeMismatch { tensor_idx: u32, seq: u32, got: u64, expected: u64 },
+    /// The stream ended with this chunk never received.
+    Missing { tensor_idx: u32, seq: u32 },
+    /// The stream ended with the tensor's bytes only partially covered
+    /// (all announced chunks arrived but they don't tile `tensor_len`).
+    Incomplete { tensor_idx: u32, covered: u64, expected: u64 },
+}
+
+impl std::fmt::Display for ChunkError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ChunkError::TensorOutOfRange { tensor_idx, n_tensors } => {
+                write!(f, "chunk for tensor {tensor_idx}, stream has {n_tensors} tensors")
+            }
+            ChunkError::SeqOutOfRange { tensor_idx, seq, total } => {
+                write!(f, "tensor {tensor_idx}: chunk seq {seq} out of range (total {total})")
+            }
+            ChunkError::TotalMismatch { tensor_idx, got, expected } => {
+                write!(f, "tensor {tensor_idx}: chunk total {got} contradicts earlier {expected}")
+            }
+            ChunkError::TooManyChunks { tensor_idx, total } => {
+                write!(
+                    f,
+                    "tensor {tensor_idx}: claims {total} chunks (allowed 1..={MAX_CHUNKS_PER_TENSOR})"
+                )
+            }
+            ChunkError::LenMismatch { tensor_idx, got, expected } => {
+                write!(f, "tensor {tensor_idx}: claims {got} bytes, expected {expected}")
+            }
+            ChunkError::RangeOutOfBounds { tensor_idx, seq } => {
+                write!(f, "tensor {tensor_idx} chunk {seq}: byte range runs past the tensor")
+            }
+            ChunkError::ChunkTooLarge { tensor_idx, seq, count } => {
+                write!(
+                    f,
+                    "tensor {tensor_idx} chunk {seq}: {count} bytes exceeds the \
+                     {CHUNK_MAX_BYTES}-byte chunk cap"
+                )
+            }
+            ChunkError::Duplicate { tensor_idx, seq } => {
+                write!(f, "tensor {tensor_idx} chunk {seq}: duplicate")
+            }
+            ChunkError::Overlap { tensor_idx, seq } => {
+                write!(f, "tensor {tensor_idx} chunk {seq}: overlaps another chunk's byte range")
+            }
+            ChunkError::DataWithoutHeader { tensor_idx, seq } => {
+                write!(f, "tensor {tensor_idx} chunk {seq}: data with no preceding header")
+            }
+            ChunkError::DataSizeMismatch { tensor_idx, seq, got, expected } => {
+                write!(
+                    f,
+                    "tensor {tensor_idx} chunk {seq}: {got} data bytes, header announced {expected}"
+                )
+            }
+            ChunkError::Missing { tensor_idx, seq } => {
+                write!(f, "tensor {tensor_idx}: chunk {seq} never arrived")
+            }
+            ChunkError::Incomplete { tensor_idx, covered, expected } => {
+                write!(f, "tensor {tensor_idx}: only {covered} of {expected} bytes covered")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ChunkError {}
+
+/// Per-chunk receive state.
+#[derive(Clone, Copy, PartialEq)]
+enum Slot {
+    Empty,
+    /// Header accepted, data pending.
+    Announced { start: u64, count: u64 },
+    /// Header + data both in.
+    Done { count: u64 },
+}
+
+struct TensorAsm {
+    /// Declared byte length. Trusted mode: fixed at construction.
+    /// Untrusted mode: `None` until the first header announces it.
+    len: Option<u64>,
+    /// Announced chunk count (0 = no header seen yet).
+    total: u32,
+    slots: Vec<Slot>,
+    /// Accepted spans, keyed by start byte -> end byte, for O(log n)
+    /// overlap rejection at header time.
+    spans: BTreeMap<u64, u64>,
+    buf: Vec<u8>,
+    /// Bytes of data received (sum of Done counts).
+    received: u64,
+}
+
+impl TensorAsm {
+    fn done(&self) -> bool {
+        self.total > 0
+            && self.slots.iter().all(|s| matches!(s, Slot::Done { .. }))
+            && Some(self.received) == self.len
+    }
+}
+
+/// Incremental chunk-stream receiver: accepts
+/// [`Msg::ChunkHeader`]/[`Msg::ChunkData`] pairs in **any arrival
+/// order**, rejects duplicates, overlaps and bound violations with
+/// typed [`ChunkError`]s as they arrive, reports what is still
+/// [`ChunkAssembler::missing`] (the driver for [`Msg::Resend`]), and
+/// releases the reassembled per-tensor byte buffers only when coverage
+/// is exact.
+///
+/// Two trust models:
+/// - [`ChunkAssembler::for_lens`] — the receiver knows every tensor's
+///   byte length up front (the server reassembling a push over its own
+///   inventory). Buffers are preallocated; a header's `tensor_len` must
+///   match exactly.
+/// - [`ChunkAssembler::for_unknown`] — lengths come from the stream (a
+///   client pulling an inventory it has never seen). Each announced
+///   length is capped by `max_bytes`, and the buffer grows only as data
+///   actually arrives — a hostile header cannot force an allocation
+///   larger than the bytes it ships (plus the final in-place zero-fill
+///   up to the announced length at completion, which is bounded by
+///   `max_bytes` and only reachable by actually streaming the data).
+pub struct ChunkAssembler {
+    tensors: Vec<TensorAsm>,
+    trusted: bool,
+    max_bytes: u64,
+}
+
+impl ChunkAssembler {
+    /// Trusted receiver over known per-tensor byte lengths.
+    pub fn for_lens(lens: &[u64]) -> ChunkAssembler {
+        ChunkAssembler {
+            tensors: lens
+                .iter()
+                .map(|&l| TensorAsm {
+                    len: Some(l),
+                    total: 0,
+                    slots: Vec::new(),
+                    spans: BTreeMap::new(),
+                    buf: vec![0u8; l as usize],
+                    received: 0,
+                })
+                .collect(),
+            trusted: true,
+            max_bytes: u64::MAX,
+        }
+    }
+
+    /// Untrusted receiver: `n_tensors` tensors of stream-announced
+    /// lengths, each capped at `max_bytes`.
+    pub fn for_unknown(n_tensors: usize, max_bytes: u64) -> ChunkAssembler {
+        ChunkAssembler {
+            tensors: (0..n_tensors)
+                .map(|_| TensorAsm {
+                    len: None,
+                    total: 0,
+                    slots: Vec::new(),
+                    spans: BTreeMap::new(),
+                    buf: Vec::new(),
+                    received: 0,
+                })
+                .collect(),
+            trusted: false,
+            max_bytes,
+        }
+    }
+
+    fn tensor(&mut self, tensor_idx: u32) -> Result<&mut TensorAsm, ChunkError> {
+        let n = self.tensors.len() as u32;
+        self.tensors
+            .get_mut(tensor_idx as usize)
+            .ok_or(ChunkError::TensorOutOfRange { tensor_idx, n_tensors: n })
+    }
+
+    /// Accept one [`Msg::ChunkHeader`].
+    pub fn header(
+        &mut self,
+        tensor_idx: u32,
+        seq: u32,
+        total: u32,
+        start: u64,
+        count: u64,
+        tensor_len: u64,
+    ) -> Result<(), ChunkError> {
+        let trusted = self.trusted;
+        let max_bytes = self.max_bytes;
+        let t = self.tensor(tensor_idx)?;
+        if total == 0 || total > MAX_CHUNKS_PER_TENSOR {
+            return Err(ChunkError::TooManyChunks { tensor_idx, total });
+        }
+        match t.len {
+            Some(known) if known != tensor_len => {
+                return Err(ChunkError::LenMismatch { tensor_idx, got: tensor_len, expected: known });
+            }
+            Some(_) => {}
+            None => {
+                if tensor_len > max_bytes {
+                    return Err(ChunkError::LenMismatch {
+                        tensor_idx,
+                        got: tensor_len,
+                        expected: max_bytes,
+                    });
+                }
+                t.len = Some(tensor_len);
+            }
+        }
+        if t.total == 0 {
+            t.total = total;
+            t.slots = vec![Slot::Empty; total as usize];
+        } else if t.total != total {
+            return Err(ChunkError::TotalMismatch { tensor_idx, got: total, expected: t.total });
+        }
+        if seq >= total {
+            return Err(ChunkError::SeqOutOfRange { tensor_idx, seq, total });
+        }
+        if t.slots[seq as usize] != Slot::Empty {
+            return Err(ChunkError::Duplicate { tensor_idx, seq });
+        }
+        if count > CHUNK_MAX_BYTES {
+            return Err(ChunkError::ChunkTooLarge { tensor_idx, seq, count });
+        }
+        let len = t.len.unwrap();
+        let end = match start.checked_add(count) {
+            Some(e) if e <= len => e,
+            _ => return Err(ChunkError::RangeOutOfBounds { tensor_idx, seq }),
+        };
+        // An empty tensor must be announced as exactly one (0, 0) chunk.
+        if len == 0 && total != 1 {
+            return Err(ChunkError::TooManyChunks { tensor_idx, total });
+        }
+        if count > 0 {
+            // Overlap check against the neighbors in start order.
+            if let Some((_, &prev_end)) = t.spans.range(..=start).next_back() {
+                if prev_end > start {
+                    return Err(ChunkError::Overlap { tensor_idx, seq });
+                }
+            }
+            if let Some((&next_start, _)) = t.spans.range(start..).next() {
+                if next_start < end {
+                    return Err(ChunkError::Overlap { tensor_idx, seq });
+                }
+            }
+            t.spans.insert(start, end);
+        }
+        t.slots[seq as usize] = Slot::Announced { start, count };
+        Ok(())
+    }
+
+    /// Accept one [`Msg::ChunkData`] (its header must already be in).
+    pub fn data(&mut self, tensor_idx: u32, seq: u32, bytes: &[u8]) -> Result<(), ChunkError> {
+        let t = self.tensor(tensor_idx)?;
+        let slot = t
+            .slots
+            .get(seq as usize)
+            .copied()
+            .unwrap_or(Slot::Empty);
+        let (start, count) = match slot {
+            Slot::Announced { start, count } => (start, count),
+            Slot::Empty => return Err(ChunkError::DataWithoutHeader { tensor_idx, seq }),
+            Slot::Done { .. } => return Err(ChunkError::Duplicate { tensor_idx, seq }),
+        };
+        if bytes.len() as u64 != count {
+            return Err(ChunkError::DataSizeMismatch {
+                tensor_idx,
+                seq,
+                got: bytes.len() as u64,
+                expected: count,
+            });
+        }
+        let end = (start + count) as usize;
+        if t.buf.len() < end {
+            // Untrusted mode: grow only as far as data actually lands.
+            t.buf.resize(end, 0);
+        }
+        t.buf[start as usize..end].copy_from_slice(bytes);
+        t.slots[seq as usize] = Slot::Done { count };
+        t.received += count;
+        Ok(())
+    }
+
+    /// The first chunk still outstanding, if any — the address a
+    /// receiver puts in a [`Msg::Resend`]. A tensor no header has
+    /// reached yet reports `(t, 0)` (chunk 0's header carries `total`,
+    /// unlocking the rest).
+    pub fn missing(&self) -> Option<(u32, u32)> {
+        for (i, t) in self.tensors.iter().enumerate() {
+            if t.total == 0 {
+                return Some((i as u32, 0));
+            }
+            for (seq, s) in t.slots.iter().enumerate() {
+                if !matches!(s, Slot::Done { .. }) {
+                    return Some((i as u32, seq as u32));
+                }
+            }
+        }
+        None
+    }
+
+    /// True when every tensor is fully covered.
+    pub fn is_complete(&self) -> bool {
+        self.tensors.iter().all(|t| t.done())
+    }
+
+    /// Consume the assembler, releasing the per-tensor byte buffers.
+    /// Errors with the first typed defect: a chunk that never arrived
+    /// ([`ChunkError::Missing`]) or announced chunks that do not tile
+    /// the tensor exactly ([`ChunkError::Incomplete`] — only reachable
+    /// with zero-length chunks padding the count, since overlaps are
+    /// rejected on arrival).
+    pub fn finish(mut self) -> Result<Vec<Vec<u8>>, ChunkError> {
+        for (i, t) in self.tensors.iter_mut().enumerate() {
+            let tensor_idx = i as u32;
+            if t.total == 0 {
+                return Err(ChunkError::Missing { tensor_idx, seq: 0 });
+            }
+            for (seq, s) in t.slots.iter().enumerate() {
+                if !matches!(s, Slot::Done { .. }) {
+                    return Err(ChunkError::Missing { tensor_idx, seq: seq as u32 });
+                }
+            }
+            let len = t.len.unwrap_or(0);
+            if t.received != len {
+                return Err(ChunkError::Incomplete { tensor_idx, covered: t.received, expected: len });
+            }
+            // Untrusted buffers grew to the highest written offset; with
+            // exact coverage that *is* the declared length, but an empty
+            // tail of zero-count chunks leaves an ungrown buffer.
+            if (t.buf.len() as u64) < len {
+                t.buf.resize(len as usize, 0);
+            }
+        }
+        Ok(self.tensors.into_iter().map(|t| t.buf).collect())
+    }
+
+    /// [`ChunkAssembler::finish`] reinterpreting each buffer as
+    /// little-endian f32s (dense params / gradients on the wire).
+    pub fn finish_f32(self) -> Result<Vec<Vec<f32>>> {
+        let bufs = self.finish()?;
+        bufs.into_iter()
+            .enumerate()
+            .map(|(i, b)| {
+                bytes_to_f32s(&b)
+                    .with_context(|| format!("reassembled tensor {i} is not f32 data"))
+            })
+            .collect()
+    }
+}
+
+/// Reinterpret a little-endian byte buffer as f32s (must be a multiple
+/// of 4 bytes).
+pub fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>> {
+    if bytes.len() % 4 != 0 {
+        bail!("{} bytes is not a whole number of f32s", bytes.len());
+    }
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+/// Encode f32s as the little-endian bytes the chunk stream carries.
+pub fn f32s_to_bytes(vals: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(vals.len() * 4);
+    for v in vals {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
 }
 
 // ---------------------------------------------------------------------------
@@ -328,21 +859,46 @@ fn clip_str(s: &str) -> &str {
 fn payload(msg: &Msg) -> Vec<u8> {
     let mut w = BlobWriter::new();
     match msg {
-        Msg::PushGrad { client, epoch, step, base_step, grads } => {
+        Msg::PushBegin { client, epoch, step, base_step, n_tensors } => {
             w.u32(*client);
             w.u64(*epoch);
             w.u64(*step);
             w.u64(*base_step);
-            write_tensor_list(&mut w, grads);
+            w.u32(*n_tensors);
         }
         Msg::Stats | Msg::Shutdown | Msg::Join | Msg::EpochInfo | Msg::Busy | Msg::Bye => {}
-        Msg::PullParams { min_step } => w.u64(*min_step),
+        Msg::PullParams { min_step, mode } => {
+            w.u64(*min_step);
+            w.u8(*mode);
+        }
         Msg::Snapshot { path } => write_str(&mut w, path),
         Msg::Leave { client } => w.u32(*client),
-        Msg::Ack { step } => w.u64(*step),
-        Msg::Params { step, tensors } => {
+        Msg::Resend { tensor_idx, seq } => {
+            w.u32(*tensor_idx);
+            w.u32(*seq);
+        }
+        Msg::ChunkHeader { tensor_idx, seq, total, start, count, tensor_len } => {
+            w.u32(*tensor_idx);
+            w.u32(*seq);
+            w.u32(*total);
+            w.u64(*start);
+            w.u64(*count);
+            w.u64(*tensor_len);
+        }
+        Msg::ChunkData { tensor_idx, seq, bytes } => {
+            w.u32(*tensor_idx);
+            w.u32(*seq);
+            w.bytes(bytes);
+        }
+        Msg::StreamEnd { step, tensors } => {
             w.u64(*step);
-            write_tensor_list(&mut w, tensors);
+            w.u32(*tensors);
+        }
+        Msg::Ack { step } => w.u64(*step),
+        Msg::ParamsBegin { step, mode, n_tensors } => {
+            w.u64(*step);
+            w.u8(*mode);
+            w.u32(*n_tensors);
         }
         Msg::SnapshotDone { bytes } => w.u64(*bytes),
         Msg::StatsReply(s) => {
@@ -373,6 +929,9 @@ fn payload(msg: &Msg) -> Vec<u8> {
             w.u64(*applied);
             w.u64(*required);
         }
+        Msg::PushGrad { .. } | Msg::Params { .. } | Msg::StateBlobs { .. } => {
+            panic!("{} is coordinator-internal and never framed in v4", msg.name())
+        }
         Msg::LogHeader { model, optimizer, seed, base_lr, staleness, first_step } => {
             write_str(&mut w, model);
             write_str(&mut w, optimizer);
@@ -396,16 +955,12 @@ fn payload(msg: &Msg) -> Vec<u8> {
     w.finish()
 }
 
-/// Wire payload size of a `PushGrad` frame over the given shapes — the
-/// largest message either side ever sends for an inventory on a live
-/// connection (a `Params` reply's prefix is `u64 step` + `u32 count` vs
-/// PushGrad's `u32 client` + `u64 epoch` + `u64 step` + `u64 base_step`
-/// + `u32 count`, i.e. 20 bytes smaller; a `LogCommit` frame can grow
-/// larger still by its per-contributor metadata, which the server's
-/// capacity check budgets separately). Servers and load generators
-/// check this against [`MAX_PAYLOAD`] up front, so an inventory too
-/// large for the wire fails with a clear error at startup instead of an
-/// assert on the first push.
+/// Wire payload size a v3-style whole-inventory dense `PushGrad` frame
+/// *would* need for these shapes. No live frame carries this anymore —
+/// v4 streams chunks — but it remains the honest "dense wire" yardstick:
+/// the e2e pins assert paper-scale inventories exceed [`MAX_PAYLOAD`]
+/// here yet serve end-to-end, and the bench reports it as the dense
+/// baseline bytes/step.
 pub fn grads_payload_bytes(shapes: &[Vec<usize>]) -> u64 {
     // client u32 + epoch u64 + step u64 + base_step u64 + tensor count
     // u32, then per tensor a u64 length prefix + 4 bytes per element.
@@ -418,17 +973,20 @@ pub fn grads_payload_bytes(shapes: &[Vec<usize>]) -> u64 {
 
 /// Serialize a frame to bytes.
 pub fn encode(frame: &Frame) -> Vec<u8> {
+    let op = frame.msg.op();
     let payload = payload(&frame.msg);
     assert!(
-        payload.len() as u64 <= MAX_PAYLOAD,
-        "frame payload {} exceeds MAX_PAYLOAD",
-        payload.len()
+        payload.len() as u64 <= max_payload_for(op),
+        "{} payload {} exceeds the op-{op} cap {}",
+        frame.msg.name(),
+        payload.len(),
+        max_payload_for(op)
     );
     let mut w = BlobWriter::new();
     w.bytes(MAGIC);
     w.u32(VERSION);
     w.u64(frame.request_id);
-    w.u8(frame.msg.op());
+    w.u8(op);
     w.u64(payload.len() as u64);
     w.bytes(&payload);
     w.finish()
@@ -445,7 +1003,8 @@ pub fn write_frame(w: &mut impl Write, frame: &Frame) -> std::io::Result<()> {
 // ---------------------------------------------------------------------------
 
 /// Parse and validate a frame header; returns `(request_id, op, payload
-/// length)`. The length is already checked against [`MAX_PAYLOAD`].
+/// length)`. The length is already checked against the op's cap
+/// ([`max_payload_for`]).
 pub fn decode_header(hdr: &[u8; HEADER_LEN]) -> Result<(u64, u8, u64)> {
     let mut r = BlobReader::new(hdr);
     let magic = r.bytes(8)?;
@@ -459,8 +1018,9 @@ pub fn decode_header(hdr: &[u8; HEADER_LEN]) -> Result<(u64, u8, u64)> {
     let request_id = r.u64()?;
     let op = r.u8()?;
     let len = r.u64()?;
-    if len > MAX_PAYLOAD {
-        bail!("frame op {op} claims a {len}-byte payload (cap {MAX_PAYLOAD})");
+    let cap = max_payload_for(op);
+    if len > cap {
+        bail!("frame op {op} claims a {len}-byte payload (cap {cap})");
     }
     r.finish()?;
     Ok((request_id, op, len))
@@ -497,31 +1057,74 @@ fn read_str(r: &mut BlobReader<'_>, what: &str) -> Result<String> {
     String::from_utf8(r.bytes(len)?.to_vec()).with_context(|| format!("{what}: not valid UTF-8"))
 }
 
+fn check_pull_mode(mode: u8, what: &str) -> Result<u8> {
+    if mode > PULL_FACTORED {
+        bail!("{what}: unknown pull mode {mode} (0 = dense, 1 = factored)");
+    }
+    Ok(mode)
+}
+
 /// Decode an op-specific payload. The full payload must be consumed —
 /// trailing bytes are rejected.
 pub fn decode_payload(op: u8, payload: &[u8]) -> Result<Msg> {
     let mut r = BlobReader::new(payload);
     let msg = match op {
-        OP_PUSH_GRAD => {
+        OP_PUSH_BEGIN => {
             let client = r.u32()?;
             let epoch = r.u64()?;
             let step = r.u64()?;
             let base_step = r.u64()?;
-            let grads = read_tensor_list(&mut r, "PushGrad")?;
-            Msg::PushGrad { client, epoch, step, base_step, grads }
+            let n_tensors = r.u32()?;
+            if n_tensors as usize > MAX_TENSORS {
+                bail!("PushBegin: claims {n_tensors} tensors (cap {MAX_TENSORS})");
+            }
+            Msg::PushBegin { client, epoch, step, base_step, n_tensors }
         }
-        OP_PULL_PARAMS => Msg::PullParams { min_step: r.u64()? },
+        OP_PULL_PARAMS => Msg::PullParams {
+            min_step: r.u64()?,
+            mode: check_pull_mode(r.u8()?, "PullParams")?,
+        },
         OP_SNAPSHOT => Msg::Snapshot { path: read_str(&mut r, "Snapshot path")? },
         OP_STATS => Msg::Stats,
         OP_SHUTDOWN => Msg::Shutdown,
         OP_JOIN => Msg::Join,
         OP_LEAVE => Msg::Leave { client: r.u32()? },
         OP_EPOCH_INFO => Msg::EpochInfo,
+        OP_RESEND => Msg::Resend { tensor_idx: r.u32()?, seq: r.u32()? },
+        OP_CHUNK_HEADER => {
+            let tensor_idx = r.u32()?;
+            let seq = r.u32()?;
+            let total = r.u32()?;
+            let start = r.u64()?;
+            let count = r.u64()?;
+            let tensor_len = r.u64()?;
+            if total == 0 || total > MAX_CHUNKS_PER_TENSOR {
+                bail!("ChunkHeader: claims {total} chunks (allowed 1..={MAX_CHUNKS_PER_TENSOR})");
+            }
+            if count > CHUNK_MAX_BYTES {
+                bail!("ChunkHeader: claims a {count}-byte chunk (cap {CHUNK_MAX_BYTES})");
+            }
+            Msg::ChunkHeader { tensor_idx, seq, total, start, count, tensor_len }
+        }
+        OP_CHUNK_DATA => {
+            let tensor_idx = r.u32()?;
+            let seq = r.u32()?;
+            let n = r.remaining();
+            if n as u64 > CHUNK_MAX_BYTES {
+                bail!("ChunkData: carries {n} bytes (cap {CHUNK_MAX_BYTES})");
+            }
+            Msg::ChunkData { tensor_idx, seq, bytes: r.bytes(n)?.to_vec() }
+        }
+        OP_STREAM_END => Msg::StreamEnd { step: r.u64()?, tensors: r.u32()? },
         OP_ACK => Msg::Ack { step: r.u64()? },
-        OP_PARAMS => {
+        OP_PARAMS_BEGIN => {
             let step = r.u64()?;
-            let tensors = read_tensor_list(&mut r, "Params")?;
-            Msg::Params { step, tensors }
+            let mode = check_pull_mode(r.u8()?, "ParamsBegin")?;
+            let n_tensors = r.u32()?;
+            if n_tensors as usize > MAX_TENSORS {
+                bail!("ParamsBegin: claims {n_tensors} tensors (cap {MAX_TENSORS})");
+            }
+            Msg::ParamsBegin { step, mode, n_tensors }
         }
         OP_SNAPSHOT_DONE => Msg::SnapshotDone { bytes: r.u64()? },
         OP_STATS_REPLY => Msg::StatsReply(ServerStats {
@@ -622,6 +1225,12 @@ pub fn decode(buf: &[u8]) -> Result<Frame> {
 /// Read one frame from a stream: header first (validated before the
 /// payload is buffered), then exactly `len` payload bytes.
 pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
+    Ok(read_frame_counted(r)?.0)
+}
+
+/// [`read_frame`] also reporting the wire bytes consumed (header +
+/// payload) — the client's bytes/step accounting hangs off this.
+pub fn read_frame_counted(r: &mut impl Read) -> Result<(Frame, u64)> {
     let mut hdr = [0u8; HEADER_LEN];
     r.read_exact(&mut hdr).context("reading SMMFWIRE frame header")?;
     let (request_id, op, len) = decode_header(&hdr)?;
@@ -629,7 +1238,7 @@ pub fn read_frame(r: &mut impl Read) -> Result<Frame> {
     r.read_exact(&mut body)
         .with_context(|| format!("reading {len}-byte payload of op {op}"))?;
     let msg = decode_payload(op, &body)?;
-    Ok(Frame { request_id, msg })
+    Ok((Frame { request_id, msg }, HEADER_LEN as u64 + len))
 }
 
 #[cfg(test)]
@@ -650,18 +1259,30 @@ mod tests {
     #[test]
     fn stream_roundtrip_back_to_back() {
         let frames = vec![
-            Frame { request_id: 1, msg: Msg::PullParams { min_step: 4 } },
+            Frame { request_id: 1, msg: Msg::PullParams { min_step: 4, mode: PULL_FACTORED } },
             Frame {
                 request_id: 2,
-                msg: Msg::PushGrad {
-                    client: 3,
-                    epoch: 2,
-                    step: 9,
-                    base_step: 8,
-                    grads: vec![vec![1.5, -2.0], vec![]],
+                msg: Msg::PushBegin { client: 3, epoch: 2, step: 9, base_step: 8, n_tensors: 5 },
+            },
+            Frame {
+                request_id: 2,
+                msg: Msg::ChunkHeader {
+                    tensor_idx: 1,
+                    seq: 0,
+                    total: 2,
+                    start: 0,
+                    count: 8,
+                    tensor_len: 12,
                 },
             },
-            Frame { request_id: 3, msg: Msg::Bye },
+            Frame {
+                request_id: 2,
+                msg: Msg::ChunkData { tensor_idx: 1, seq: 0, bytes: vec![1, 2, 3, 4, 5, 6, 7, 8] },
+            },
+            Frame { request_id: 2, msg: Msg::StreamEnd { step: 9, tensors: 5 } },
+            Frame { request_id: 3, msg: Msg::Resend { tensor_idx: 1, seq: 1 } },
+            Frame { request_id: 4, msg: Msg::ParamsBegin { step: 9, mode: PULL_DENSE, n_tensors: 5 } },
+            Frame { request_id: 5, msg: Msg::Bye },
         ];
         let mut buf = Vec::new();
         for f in &frames {
@@ -684,5 +1305,133 @@ mod tests {
         let hdr: [u8; HEADER_LEN] = w.finish()[..HEADER_LEN].try_into().unwrap();
         let e = decode_header(&hdr).unwrap_err();
         assert!(format!("{e:#}").contains("cap"), "{e:#}");
+    }
+
+    #[test]
+    fn payload_cap_is_per_op_range() {
+        // A connection op is capped at MAX_PAYLOAD...
+        let mk = |op: u8, len: u64| {
+            let mut w = BlobWriter::new();
+            w.bytes(MAGIC);
+            w.u32(VERSION);
+            w.u64(0);
+            w.u8(op);
+            w.u64(len);
+            let hdr: [u8; HEADER_LEN] = w.finish()[..HEADER_LEN].try_into().unwrap();
+            decode_header(&hdr).map(|(_, _, l)| l)
+        };
+        assert!(mk(OP_PUSH_BEGIN, MAX_PAYLOAD + 1).is_err());
+        // ...while a commit-log file op keeps the roomy file cap.
+        assert_eq!(mk(OP_LOG_COMMIT, MAX_PAYLOAD + 1).unwrap(), MAX_PAYLOAD + 1);
+        assert!(mk(OP_LOG_COMMIT, MAX_FILE_PAYLOAD + 1).is_err());
+    }
+
+    #[test]
+    fn rejects_v3_frames_exactly() {
+        let f = Frame { request_id: 1, msg: Msg::Stats };
+        let mut bytes = encode(&f);
+        bytes[8] = 3; // rewrite the version field to v3
+        let e = decode(&bytes).unwrap_err();
+        assert!(format!("{e:#}").contains("version 3"), "{e:#}");
+    }
+
+    #[test]
+    fn chunk_plan_tiles_exactly_and_row_aligns() {
+        // raw split (no row hint)
+        assert_eq!(chunk_plan(10, 0, 4), vec![(0, 4), (4, 4), (8, 2)]);
+        // row-aligned: rows of 3 bytes under a budget of 7 -> spans of 6
+        assert_eq!(chunk_plan(12, 3, 7), vec![(0, 6), (6, 6)]);
+        // a row wider than the budget falls back to raw splitting
+        assert_eq!(chunk_plan(10, 64, 4), vec![(0, 4), (4, 4), (8, 2)]);
+        // empty tensors still occupy one chunk
+        assert_eq!(chunk_plan(0, 0, 4), vec![(0, 0)]);
+        // exact tiling for a spread of sizes
+        for len in [1u64, 5, 64, 1000, 4096] {
+            for row in [0u64, 3, 17] {
+                let plan = chunk_plan(len, row, 64);
+                assert_eq!(plan[0].0, 0);
+                for w in plan.windows(2) {
+                    assert_eq!(w[0].0 + w[0].1, w[1].0, "{len} {row}");
+                }
+                let last = plan.last().unwrap();
+                assert_eq!(last.0 + last.1, len);
+                assert!(plan.iter().all(|&(_, c)| c <= 64));
+            }
+        }
+    }
+
+    #[test]
+    fn assembler_roundtrips_any_order_and_rejects_abuse() {
+        let tensors: Vec<Vec<u8>> = vec![(0..=255).collect(), vec![], vec![7; 10]];
+        let lens: Vec<u64> = tensors.iter().map(|t| t.len() as u64).collect();
+        // Build the chunk pairs, deliver them in reverse order.
+        let mut pairs = Vec::new();
+        for (ti, t) in tensors.iter().enumerate() {
+            let plan = chunk_plan(t.len() as u64, 0, 100);
+            for (seq, &(start, count)) in plan.iter().enumerate() {
+                pairs.push((
+                    ti as u32,
+                    seq as u32,
+                    plan.len() as u32,
+                    start,
+                    count,
+                    t.len() as u64,
+                    t[start as usize..(start + count) as usize].to_vec(),
+                ));
+            }
+        }
+        let mut asm = ChunkAssembler::for_lens(&lens);
+        assert_eq!(asm.missing(), Some((0, 0)));
+        for (ti, seq, total, start, count, len, data) in pairs.iter().rev() {
+            asm.header(*ti, *seq, *total, *start, *count, *len).unwrap();
+            asm.data(*ti, *seq, data).unwrap();
+        }
+        assert!(asm.is_complete());
+        assert_eq!(asm.missing(), None);
+        assert_eq!(asm.finish().unwrap(), tensors);
+
+        // Duplicate header
+        let mut asm = ChunkAssembler::for_lens(&[8]);
+        asm.header(0, 0, 2, 0, 4, 8).unwrap();
+        assert_eq!(asm.header(0, 0, 2, 4, 4, 8), Err(ChunkError::Duplicate { tensor_idx: 0, seq: 0 }));
+        // Overlapping ranges across distinct seqs
+        assert_eq!(asm.header(0, 1, 2, 2, 4, 8), Err(ChunkError::Overlap { tensor_idx: 0, seq: 1 }));
+        // Out-of-bounds range
+        assert_eq!(
+            asm.header(0, 1, 2, 6, 4, 8),
+            Err(ChunkError::RangeOutOfBounds { tensor_idx: 0, seq: 1 })
+        );
+        // Data without header / size mismatch / missing at finish
+        assert_eq!(
+            asm.data(0, 1, &[0; 4]),
+            Err(ChunkError::DataWithoutHeader { tensor_idx: 0, seq: 1 })
+        );
+        assert_eq!(
+            asm.data(0, 0, &[0; 3]),
+            Err(ChunkError::DataSizeMismatch { tensor_idx: 0, seq: 0, got: 3, expected: 4 })
+        );
+        asm.data(0, 0, &[0; 4]).unwrap();
+        assert_eq!(asm.missing(), Some((0, 1)));
+        assert_eq!(asm.finish(), Err(ChunkError::Missing { tensor_idx: 0, seq: 1 }));
+
+        // Untrusted mode caps the announced length.
+        let mut asm = ChunkAssembler::for_unknown(1, 16);
+        assert_eq!(
+            asm.header(0, 0, 1, 0, 4, 17),
+            Err(ChunkError::LenMismatch { tensor_idx: 0, got: 17, expected: 16 })
+        );
+        // Trusted mode pins tensor_len to the known length.
+        let mut asm = ChunkAssembler::for_lens(&[8]);
+        assert_eq!(
+            asm.header(0, 0, 1, 0, 4, 9),
+            Err(ChunkError::LenMismatch { tensor_idx: 0, got: 9, expected: 8 })
+        );
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let vals = vec![1.5f32, -0.0, f32::MIN_POSITIVE, 3.25e8];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&vals)).unwrap(), vals);
+        assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
     }
 }

@@ -10,7 +10,15 @@
 //! * **handlers** (one per connection) — read a frame, forward it to the
 //!   coordinator over a *bounded* `sync_channel`, wait for the reply,
 //!   write it back. A full queue is answered with [`Msg::Busy`]
-//!   immediately — the server never buffers unbounded work.
+//!   immediately — the server never buffers unbounded work. Under wire
+//!   protocol v4 the handler is also the chunking layer: it reassembles
+//!   a client's `PushBegin` → chunk → `StreamEnd` sequence into one
+//!   internal [`Msg::PushGrad`] before the coordinator sees it, and
+//!   fans a pull reply back out as a `ParamsBegin` → chunk →
+//!   `StreamEnd` sequence (retaining the encoded reply so a
+//!   [`Msg::Resend`] is answered without another coordinator round
+//!   trip). Framing buffers are O(chunk); only the in-flight reply a
+//!   handler is already serving is held whole.
 //! * **coordinator** — owns the master parameters, the
 //!   [`StepBatcher`](super::batch::StepBatcher) step barrier and the
 //!   [`ShardSet`](super::shard::ShardSet); applies coalesced steps,
@@ -239,28 +247,6 @@ pub fn resolve_inventory(model: &str) -> Result<Inventory> {
     let name = model.strip_prefix("synthetic:").unwrap_or(model);
     inventory_by_name(name)
         .ok_or_else(|| anyhow!("unknown inventory {name} (see `repro list`)"))
-}
-
-/// Refuse inventories whose gradient/parameter messages cannot fit in
-/// one wire frame — a clear startup error instead of an encoder assert
-/// on the first push. (The protocol is a single-frame-per-tensor-set
-/// design; the paper-scale BERT/LLaMA inventories are out of scope for
-/// the serving demo.)
-fn check_wire_capacity(model: &str, shapes: &[Vec<usize>]) -> Result<()> {
-    // Budget for the largest frame the server may ever encode: a
-    // LogCommit carries the same tensor list as a gradient push plus up
-    // to MAX_MEMBERS contributor entries (12 bytes each) — checking the
-    // worst case here means the commit-log writer can never trip the
-    // encoder's payload assert mid-run.
-    let bytes = protocol::grads_payload_bytes(shapes) + 12 * protocol::MAX_MEMBERS as u64;
-    if bytes > protocol::MAX_PAYLOAD {
-        bail!(
-            "inventory {model} needs {bytes}-byte gradient frames, over the SMMFWIRE \
-             payload cap ({} bytes) — pick a smaller inventory (e.g. synthetic:tiny_lm)",
-            protocol::MAX_PAYLOAD
-        );
-    }
-    Ok(())
 }
 
 // ---------------------------------------------------------------------------
@@ -753,7 +739,7 @@ impl Coordinator {
             Msg::EpochInfo => {
                 req.reply.send(self.epoch_view(protocol::NO_CLIENT)).ok();
             }
-            Msg::PullParams { min_step } => {
+            Msg::PullParams { min_step, mode } => {
                 // The bounded-staleness read contract, honored in both
                 // modes (a sync client always sends floor 0): a pull
                 // never hands out parameters older than the caller's
@@ -761,6 +747,20 @@ impl Coordinator {
                 let applied = self.ingest.applied_step();
                 if applied < min_step {
                     req.reply.send(Msg::TooStale { applied, required: min_step }).ok();
+                } else if mode == protocol::PULL_FACTORED {
+                    // Factored mode ships the optimizer state in its
+                    // native compressed encoding — for SMMF, the u/v
+                    // factor vectors plus packed 1-bit sign planes —
+                    // and the client reconstructs dense momenta. The
+                    // decode layer already validated `mode`.
+                    match self.shards.collect_state() {
+                        Ok((_opt_step, _live, blobs)) => {
+                            req.reply.send(Msg::StateBlobs { step: applied, blobs }).ok();
+                        }
+                        Err(e) => {
+                            req.reply.send(Msg::Err { msg: format!("{e:#}") }).ok();
+                        }
+                    }
                 } else {
                     let tensors = self.params.iter().map(|t| t.data().to_vec()).collect();
                     req.reply.send(Msg::Params { step: applied, tensors }).ok();
@@ -776,8 +776,18 @@ impl Coordinator {
                         None => Err(anyhow!("no recovery image yet")),
                     }
                 } else {
-                    self.shards.collect_state().and_then(|(opt_step, _live, blobs)| {
-                        checkpoint::save_snapshot(
+                    // Streamed: a sizing pass collects only the blob
+                    // lengths, then each tensor's state crosses the
+                    // coordinator one blob at a time on its way into
+                    // the file — the full optimizer state is never
+                    // materialized here, so any-size inventories
+                    // snapshot in O(largest tensor) memory. Byte-
+                    // identical to the dense `save_snapshot` path by
+                    // construction (pinned in checkpoint.rs).
+                    (|| {
+                        let (opt_step, lens) = self.shards.collect_blob_lens()?;
+                        let shards = &self.shards;
+                        checkpoint::save_snapshot_streamed(
                             Path::new(&path),
                             self.ingest.applied_step(),
                             &self.names,
@@ -786,10 +796,11 @@ impl Coordinator {
                             &self.schedule,
                             self.kind,
                             opt_step,
-                            blobs,
+                            &lens,
                             &self.config_section,
+                            &mut |t| shards.collect_blob(t),
                         )
-                    })
+                    })()
                 };
                 match result {
                     Ok(bytes) => {
@@ -835,7 +846,6 @@ impl Server {
         let inv = resolve_inventory(&opts.model)?;
         let specs = inv.param_specs();
         let shapes = inv.shapes();
-        check_wire_capacity(&opts.model, &shapes)?;
         let names: Vec<String> = inv.tensors.iter().map(|t| t.name.clone()).collect();
         let res = group::resolve(&specs, &cfg.grouped());
         let config_section = ConfigSection::from_config(&cfg.optim, &res);
@@ -878,6 +888,9 @@ impl Server {
         let acceptor = {
             let shutdown = shutdown.clone();
             let busy = busy.clone();
+            // Handlers need the inventory shapes to size push-stream
+            // reassembly up front (the trusted-length fast path).
+            let shapes = Arc::new(shapes.clone());
             thread::spawn(move || loop {
                 if shutdown.load(Ordering::SeqCst) {
                     return;
@@ -886,7 +899,8 @@ impl Server {
                     Ok((stream, _)) => {
                         let req_tx = req_tx.clone();
                         let busy = busy.clone();
-                        thread::spawn(move || handle_conn(stream, req_tx, busy));
+                        let shapes = shapes.clone();
+                        thread::spawn(move || handle_conn(stream, req_tx, busy, shapes));
                     }
                     // WouldBlock (idle) and transient accept errors both
                     // back off briefly; only the shutdown flag exits.
@@ -1055,49 +1069,323 @@ impl Drop for Server {
     }
 }
 
-/// Per-connection handler: strictly sequential request → reply. A full
-/// coordinator queue is answered with `Busy` right here — the explicit
-/// backpressure path.
-fn handle_conn(stream: TcpStream, req_tx: SyncSender<Request>, busy: Arc<AtomicU64>) {
+/// The last pull reply a handler served, retained so a [`Msg::Resend`]
+/// is answered locally instead of re-asking the coordinator (whose
+/// state may have advanced — a resent chunk must come from the *same*
+/// reply the client is assembling). Holding one encoded reply per
+/// connection costs exactly what v3 spent buffering the whole `Params`
+/// frame; the O(chunk) memory guarantee is about framing buffers, not
+/// the reply a handler is mid-way through serving.
+struct PullCache {
+    step: u64,
+    mode: u8,
+    /// Per-tensor encoded payloads: f32 LE for dense pulls, native
+    /// optimizer state blobs for factored ones.
+    tensors: Vec<Vec<u8>>,
+    /// `chunk_plan` of each tensor — deterministic, so the plan both
+    /// ends derive is the address space `Resend {tensor_idx, seq}`
+    /// indexes into.
+    plans: Vec<Vec<(u64, u64)>>,
+}
+
+impl PullCache {
+    fn new(step: u64, mode: u8, tensors: Vec<Vec<u8>>, row_bytes: u64) -> PullCache {
+        let plans = tensors
+            .iter()
+            .map(|b| protocol::chunk_plan(b.len() as u64, row_bytes, protocol::CHUNK_MAX_BYTES))
+            .collect();
+        PullCache { step, mode, tensors, plans }
+    }
+
+    /// Write one `ChunkHeader` + `ChunkData` pair. `None` when the
+    /// `(tensor, seq)` address is outside this reply.
+    fn write_chunk(
+        &self,
+        w: &mut impl std::io::Write,
+        id: u64,
+        tensor_idx: u32,
+        seq: u32,
+    ) -> Option<std::io::Result<()>> {
+        let bytes = self.tensors.get(tensor_idx as usize)?;
+        let plan = self.plans.get(tensor_idx as usize)?;
+        let &(start, count) = plan.get(seq as usize)?;
+        let hdr = Msg::ChunkHeader {
+            tensor_idx,
+            seq,
+            total: plan.len() as u32,
+            start,
+            count,
+            tensor_len: bytes.len() as u64,
+        };
+        let data = Msg::ChunkData {
+            tensor_idx,
+            seq,
+            bytes: bytes[start as usize..(start + count) as usize].to_vec(),
+        };
+        Some(
+            protocol::write_frame(w, &Frame { request_id: id, msg: hdr })
+                .and_then(|()| protocol::write_frame(w, &Frame { request_id: id, msg: data })),
+        )
+    }
+
+    /// Stream the whole reply: `ParamsBegin`, every chunk pair in
+    /// order, `StreamEnd`.
+    fn write_stream(&self, w: &mut impl std::io::Write, id: u64) -> std::io::Result<()> {
+        let n = self.tensors.len() as u32;
+        protocol::write_frame(
+            w,
+            &Frame {
+                request_id: id,
+                msg: Msg::ParamsBegin { step: self.step, mode: self.mode, n_tensors: n },
+            },
+        )?;
+        for t in 0..self.tensors.len() {
+            for seq in 0..self.plans[t].len() {
+                self.write_chunk(w, id, t as u32, seq as u32)
+                    .expect("iterating our own plan")?;
+            }
+        }
+        protocol::write_frame(
+            w,
+            &Frame { request_id: id, msg: Msg::StreamEnd { step: self.step, tensors: n } },
+        )
+    }
+}
+
+/// How a push stream (the frames after a `PushBegin`) ended.
+enum PushStream {
+    /// Fully assembled — forward to the coordinator.
+    Grads(Vec<Vec<f32>>),
+    /// Assembly failed, but the stream was drained through its
+    /// `StreamEnd`, so the connection is still framed: answer `Err`
+    /// and keep serving.
+    Bad(String),
+    /// Framing violation or read error — close the connection (after
+    /// one last `Err` frame when there is a message to send).
+    Dead(Option<String>),
+}
+
+/// Consume chunk frames until `StreamEnd`, reassembling them against
+/// the inventory's known per-tensor byte lengths. A chunk the
+/// assembler rejects (duplicate, overlap, out of bounds) poisons the
+/// stream but does NOT abort the read: the remaining frames are
+/// drained so the typed error can be delivered in-band and the
+/// connection survives. Only a frame that breaks the stream discipline
+/// itself — a different request id, a non-chunk op, a read error — is
+/// unrecoverable.
+fn read_push_stream(
+    reader: &mut impl std::io::Read,
+    id: u64,
+    n_tensors: u32,
+    shapes: &[Vec<usize>],
+) -> PushStream {
+    let mut err: Option<String> = None;
+    let mut asm = if n_tensors as usize == shapes.len() {
+        let lens: Vec<u64> =
+            shapes.iter().map(|s| 4 * s.iter().product::<usize>() as u64).collect();
+        Some(protocol::ChunkAssembler::for_lens(&lens))
+    } else {
+        err = Some(format!(
+            "push announces {n_tensors} tensors, the workload has {}",
+            shapes.len()
+        ));
+        None
+    };
+    loop {
+        let frame = match protocol::read_frame(reader) {
+            Ok(f) => f,
+            Err(_) => return PushStream::Dead(None),
+        };
+        if frame.request_id != id {
+            return PushStream::Dead(Some(format!(
+                "request id changed mid-stream ({id} -> {})",
+                frame.request_id
+            )));
+        }
+        match frame.msg {
+            Msg::ChunkHeader { tensor_idx, seq, total, start, count, tensor_len } => {
+                if let (Some(a), None) = (asm.as_mut(), &err) {
+                    if let Err(e) = a.header(tensor_idx, seq, total, start, count, tensor_len)
+                    {
+                        err = Some(e.to_string());
+                    }
+                }
+            }
+            Msg::ChunkData { tensor_idx, seq, bytes } => {
+                if let (Some(a), None) = (asm.as_mut(), &err) {
+                    if let Err(e) = a.data(tensor_idx, seq, &bytes) {
+                        err = Some(e.to_string());
+                    }
+                }
+            }
+            Msg::StreamEnd { .. } => break,
+            other => {
+                return PushStream::Dead(Some(format!(
+                    "{} inside a push stream",
+                    other.name()
+                )))
+            }
+        }
+    }
+    if let Some(msg) = err {
+        return PushStream::Bad(msg);
+    }
+    // err is None, so the tensor-count check passed and asm exists.
+    match asm.expect("assembler exists when no error was recorded").finish_f32() {
+        Ok(grads) => PushStream::Grads(grads),
+        Err(e) => PushStream::Bad(format!("{e:#}")),
+    }
+}
+
+/// Forward one assembled request to the coordinator and wait for its
+/// reply. A full queue is answered with `Busy` right here — the
+/// explicit backpressure path.
+fn forward(req_tx: &SyncSender<Request>, busy: &AtomicU64, msg: Msg) -> Msg {
+    let (rtx, rrx) = mpsc::channel::<Msg>();
+    match req_tx.try_send(Request { reply: rtx, msg }) {
+        Ok(()) => rrx.recv().unwrap_or(Msg::Err { msg: "server stopped".into() }),
+        Err(TrySendError::Full(_)) => {
+            busy.fetch_add(1, Ordering::Relaxed);
+            Msg::Busy
+        }
+        Err(TrySendError::Disconnected(_)) => Msg::Err { msg: "server stopped".into() },
+    }
+}
+
+/// Per-connection handler: strictly sequential request → reply, where
+/// a "request" is either a single frame or a whole chunk stream
+/// (`PushBegin` … `StreamEnd`) and a reply is either a single frame or
+/// a whole pull stream. The handler is the chunking boundary — the
+/// coordinator only ever sees assembled [`Msg::PushGrad`] /
+/// [`Msg::PullParams`] and answers with whole-tensor internal
+/// messages.
+fn handle_conn(
+    stream: TcpStream,
+    req_tx: SyncSender<Request>,
+    busy: Arc<AtomicU64>,
+    shapes: Arc<Vec<Vec<usize>>>,
+) {
     stream.set_nodelay(true).ok();
     let Ok(read_half) = stream.try_clone() else { return };
     let mut reader = std::io::BufReader::new(read_half);
     let mut writer = std::io::BufWriter::new(stream);
+    let mut last_pull: Option<PullCache> = None;
     loop {
         // Read errors (EOF on client disconnect, or a malformed frame)
         // end the connection; the protocol has no resync point.
         let Ok(frame) = protocol::read_frame(&mut reader) else { return };
         let id = frame.request_id;
-        let is_request = matches!(
-            frame.msg,
-            Msg::PushGrad { .. }
-                | Msg::PullParams { .. }
-                | Msg::Snapshot { .. }
-                | Msg::Stats
-                | Msg::Shutdown
-                | Msg::Join
-                | Msg::Leave { .. }
-                | Msg::EpochInfo
-        );
-        let reply = if !is_request {
-            Msg::Err { msg: format!("{} is not a request", frame.msg.name()) }
-        } else {
-            let (rtx, rrx) = mpsc::channel::<Msg>();
-            match req_tx.try_send(Request { reply: rtx, msg: frame.msg }) {
-                Ok(()) => rrx.recv().unwrap_or(Msg::Err { msg: "server stopped".into() }),
-                Err(TrySendError::Full(_)) => {
-                    busy.fetch_add(1, Ordering::Relaxed);
-                    Msg::Busy
+        match frame.msg {
+            Msg::PushBegin { client, epoch, step, base_step, n_tensors } => {
+                let reply = match read_push_stream(&mut reader, id, n_tensors, &shapes) {
+                    PushStream::Grads(grads) => forward(
+                        &req_tx,
+                        &busy,
+                        Msg::PushGrad { client, epoch, step, base_step, grads },
+                    ),
+                    PushStream::Bad(msg) => Msg::Err { msg },
+                    PushStream::Dead(last_words) => {
+                        if let Some(msg) = last_words {
+                            protocol::write_frame(
+                                &mut writer,
+                                &Frame { request_id: id, msg: Msg::Err { msg } },
+                            )
+                            .ok();
+                        }
+                        return;
+                    }
+                };
+                if protocol::write_frame(&mut writer, &Frame { request_id: id, msg: reply })
+                    .is_err()
+                {
+                    return;
                 }
-                Err(TrySendError::Disconnected(_)) => Msg::Err { msg: "server stopped".into() },
             }
-        };
-        let done = matches!(reply, Msg::Bye);
-        if protocol::write_frame(&mut writer, &Frame { request_id: id, msg: reply }).is_err() {
-            return;
-        }
-        if done {
-            return;
+            Msg::PullParams { min_step, mode } => {
+                let cache = match forward(&req_tx, &busy, Msg::PullParams { min_step, mode }) {
+                    Msg::Params { step, tensors } => PullCache::new(
+                        step,
+                        protocol::PULL_DENSE,
+                        tensors.iter().map(|t| protocol::f32s_to_bytes(t)).collect(),
+                        4, // row-align chunks to whole f32s
+                    ),
+                    Msg::StateBlobs { step, blobs } => {
+                        // Opaque blobs have no row structure to align.
+                        PullCache::new(step, protocol::PULL_FACTORED, blobs, 0)
+                    }
+                    other => {
+                        // TooStale / Busy / Err — a single typed frame,
+                        // no stream, nothing cached.
+                        if protocol::write_frame(
+                            &mut writer,
+                            &Frame { request_id: id, msg: other },
+                        )
+                        .is_err()
+                        {
+                            return;
+                        }
+                        continue;
+                    }
+                };
+                let ok = cache.write_stream(&mut writer, id).is_ok();
+                last_pull = Some(cache);
+                if !ok {
+                    return;
+                }
+            }
+            Msg::Resend { tensor_idx, seq } => {
+                // Recovery is local: re-emit the chunk from the cached
+                // reply. The reply pair echoes the *Resend's* id — the
+                // assembler addresses chunks by (tensor, seq), not id.
+                let outcome = match &last_pull {
+                    None => Some("no pull reply on this connection to resend from".into()),
+                    Some(cache) => match cache.write_chunk(&mut writer, id, tensor_idx, seq) {
+                        Some(Ok(())) => None,
+                        Some(Err(_)) => return,
+                        None => Some(format!(
+                            "resend ({tensor_idx}, {seq}) is outside the last pull reply"
+                        )),
+                    },
+                };
+                if let Some(msg) = outcome {
+                    if protocol::write_frame(
+                        &mut writer,
+                        &Frame { request_id: id, msg: Msg::Err { msg } },
+                    )
+                    .is_err()
+                    {
+                        return;
+                    }
+                }
+            }
+            msg @ (Msg::Snapshot { .. }
+            | Msg::Stats
+            | Msg::Shutdown
+            | Msg::Join
+            | Msg::Leave { .. }
+            | Msg::EpochInfo) => {
+                let reply = forward(&req_tx, &busy, msg);
+                let done = matches!(reply, Msg::Bye);
+                if protocol::write_frame(&mut writer, &Frame { request_id: id, msg: reply })
+                    .is_err()
+                {
+                    return;
+                }
+                if done {
+                    return;
+                }
+            }
+            other => {
+                let msg = format!("{} is not a request", other.name());
+                if protocol::write_frame(
+                    &mut writer,
+                    &Frame { request_id: id, msg: Msg::Err { msg } },
+                )
+                .is_err()
+                {
+                    return;
+                }
+            }
         }
     }
 }
@@ -1378,6 +1666,10 @@ pub struct LoadgenReport {
     pub push_mean_ms: f64,
     /// Client 0's final noise-free loss (sanity: the well converges).
     pub final_loss: f32,
+    /// Total wire traffic (both directions, all clients) divided by
+    /// the applied steps — the per-step bandwidth cost of the chunked
+    /// v4 protocol at this inventory scale.
+    pub bytes_per_step: f64,
 }
 
 fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
@@ -1394,6 +1686,8 @@ struct ClientRun {
     busy_retries: u64,
     final_loss: f32,
     evicted: bool,
+    /// Wire bytes this client moved, both directions.
+    bytes: u64,
 }
 
 fn drive_client(
@@ -1420,6 +1714,7 @@ fn drive_client(
         busy_retries: 0,
         final_loss: f32::NAN,
         evicted: false,
+        bytes: 0,
     };
     let last = opts.start_step + opts.steps - 1;
     'steps: for step in opts.start_step..=last {
@@ -1478,6 +1773,7 @@ fn drive_client(
         }
     }
     run.busy_retries = client.busy_retries;
+    run.bytes = client.bytes_sent + client.bytes_received;
     Ok(run)
 }
 
@@ -1512,6 +1808,7 @@ fn drive_client_async(
         busy_retries: 0,
         final_loss: f32::NAN,
         evicted: false,
+        bytes: 0,
     };
     // The commit our last contribution landed in. Pulling with floor
     // `last_acked - staleness` pins the bounded-staleness read contract
@@ -1565,6 +1862,7 @@ fn drive_client_async(
         }
     }
     run.busy_retries = client.busy_retries;
+    run.bytes = client.bytes_sent + client.bytes_received;
     Ok(run)
 }
 
@@ -1578,16 +1876,37 @@ pub fn run_loadgen(
     opts: &LoadgenOptions,
 ) -> Result<LoadgenReport> {
     assert!(opts.clients >= 1 && opts.steps >= 1 && opts.start_step >= 1);
-    check_wire_capacity("workload", shapes)?;
-    // Probe the server's Stats once to learn its mode and width, and
-    // fail loudly on a driver/server mismatch instead of wedging:
+    // Probe the server's Stats to learn its mode and width, and fail
+    // loudly on a driver/server mismatch instead of wedging:
     // * sync — a client count that disagrees with the barrier width
     //   would deadlock the first push (the barrier never completes);
     // * async — extra drivers are not members and every one of their
     //   pushes would bounce, so over-subscription is the same config
     //   error (fewer drivers than members is fine: nobody waits on an
     //   absent member in async mode).
-    let server = Client::connect(addr)?.stats()?;
+    //
+    // The probe must not race a concurrently *joining* member (elastic
+    // runs Join on separate connections while a loadgen starts up): a
+    // one-shot read could see the membership mid-negotiation and bail
+    // on a width that would have settled a few milliseconds later. So
+    // poll until the membership covers the driver count, and only
+    // declare a mismatch once the deadline passes — a genuinely wrong
+    // width still fails, just not spuriously early.
+    let mut probe = Client::connect(addr)?;
+    let deadline = Instant::now() + Duration::from_secs(5);
+    let server = loop {
+        let s = probe.stats()?;
+        let settled = if s.staleness == 0 {
+            s.clients as usize == opts.clients
+        } else {
+            opts.clients <= s.clients as usize
+        };
+        if settled || Instant::now() >= deadline {
+            break s;
+        }
+        thread::sleep(Duration::from_millis(10));
+    };
+    drop(probe);
     let staleness = server.staleness;
     if staleness == 0 {
         if server.clients as usize != opts.clients {
@@ -1634,6 +1953,7 @@ pub fn run_loadgen(
     let mut busy_retries = 0u64;
     let mut pushes = 0u64;
     let mut evicted = 0u64;
+    let mut total_bytes = 0u64;
     let mut final_loss = f32::NAN;
     for (c, r) in results.into_iter().enumerate() {
         let run = r.with_context(|| format!("loadgen client {c}"))?;
@@ -1641,20 +1961,23 @@ pub fn run_loadgen(
         busy_retries += run.busy_retries;
         pushes += run.applied;
         evicted += run.evicted as u64;
+        total_bytes += run.bytes;
         if c == 0 {
             final_loss = run.final_loss;
         }
     }
     all_ms.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
     let mean = all_ms.iter().sum::<f64>() / all_ms.len().max(1) as f64;
-    let steps_per_s = if staleness == 0 {
-        opts.steps as f64 / elapsed_s.max(1e-12)
+    let applied_steps = if staleness == 0 {
+        // The barrier applies exactly `steps` optimizer steps.
+        opts.steps
     } else {
         // Commit throughput: the server decides how pushes batch into
         // steps, so count what it actually applied.
         let after = Client::connect(addr)?.stats()?.step;
-        after.saturating_sub(steps_before) as f64 / elapsed_s.max(1e-12)
+        after.saturating_sub(steps_before)
     };
+    let steps_per_s = applied_steps as f64 / elapsed_s.max(1e-12);
     Ok(LoadgenReport {
         clients: opts.clients,
         steps: opts.steps,
@@ -1668,6 +1991,7 @@ pub fn run_loadgen(
         push_p99_ms: percentile(&all_ms, 0.99),
         push_mean_ms: mean,
         final_loss,
+        bytes_per_step: total_bytes as f64 / applied_steps.max(1) as f64,
     })
 }
 

@@ -122,6 +122,13 @@ enum Cmd {
     Step { lr: f32, params: Vec<Tensor>, grads: Vec<Tensor> },
     /// Collect the shard's serialized optimizer state.
     Collect,
+    /// Collect only the byte lengths of the shard's state blobs (plus
+    /// the step counter) — the sizing pass of a streamed snapshot.
+    CollectLens,
+    /// Collect the state blob of one tensor, addressed by the shard's
+    /// *local* registration index — the per-tensor pass of a streamed
+    /// snapshot. The full shard state is never materialized.
+    CollectOne { local: usize },
     Stop,
     /// Fault injection: the worker returns immediately without replying
     /// or draining its queue — observably identical (poisoned channels)
@@ -133,6 +140,8 @@ enum Cmd {
 enum Reply {
     Stepped { params: Vec<Tensor> },
     State { opt_step: u64, state_bytes: u64, blobs: Vec<Vec<u8>> },
+    Lens { opt_step: u64, lens: Vec<u64> },
+    Blob { opt_step: u64, blob: Vec<u8> },
 }
 
 struct ShardHandle {
@@ -181,6 +190,7 @@ fn spawn_worker(
     }
     let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
     let (reply_tx, reply_rx) = mpsc::channel::<Reply>();
+    let n_local = idx.len();
     let join = std::thread::spawn(move || {
         while let Ok(cmd) = cmd_rx.recv() {
             match cmd {
@@ -197,6 +207,24 @@ fn spawn_worker(
                         state_bytes: opt.state_bytes(),
                         blobs: opt.state_blobs(),
                     };
+                    if reply_tx.send(reply).is_err() {
+                        break;
+                    }
+                }
+                Cmd::CollectLens => {
+                    // Serializes each blob once to measure it (blobs are
+                    // not stored pre-encoded); the streamed-snapshot
+                    // sizing pass accepts the 2x encode cost in exchange
+                    // for never materializing the whole state.
+                    let lens =
+                        (0..n_local).map(|i| opt.state_blob(i).len() as u64).collect();
+                    if reply_tx.send(Reply::Lens { opt_step: opt.opt_step(), lens }).is_err() {
+                        break;
+                    }
+                }
+                Cmd::CollectOne { local } => {
+                    let reply =
+                        Reply::Blob { opt_step: opt.opt_step(), blob: opt.state_blob(local) };
                     if reply_tx.send(reply).is_err() {
                         break;
                     }
@@ -498,6 +526,67 @@ impl ShardSet {
             }
         }
         Ok((opt_step.unwrap_or(0), state_bytes, blobs))
+    }
+
+    /// Gather only the per-tensor state-blob byte lengths (inventory
+    /// order) plus the shared optimizer step — the sizing pass of a
+    /// streamed snapshot. Errors on step-counter drift exactly like
+    /// [`ShardSet::collect_state`].
+    pub fn collect_blob_lens(&self) -> Result<(u64, Vec<u64>)> {
+        let n_tensors = self.plan.assign.len();
+        let mut lens = vec![0u64; n_tensors];
+        let mut opt_step = None;
+        for (s, h) in self.handles.iter().enumerate() {
+            if self.plan.locals[s].is_empty() {
+                continue;
+            }
+            h.tx.send(Cmd::CollectLens).map_err(|_| anyhow!("shard {s} worker is gone"))?;
+            match h.rx.recv() {
+                Ok(Reply::Lens { opt_step: t, lens: sub }) => {
+                    if *opt_step.get_or_insert(t) != t {
+                        return Err(anyhow!(
+                            "shard {s} is at optimizer step {t}, others at {}",
+                            opt_step.unwrap()
+                        ));
+                    }
+                    if sub.len() != self.plan.locals[s].len() {
+                        return Err(anyhow!(
+                            "shard {s} returned {} blob lengths for {} tensors",
+                            sub.len(),
+                            self.plan.locals[s].len()
+                        ));
+                    }
+                    for (&t, len) in self.plan.locals[s].iter().zip(sub) {
+                        lens[t] = len;
+                    }
+                }
+                _ => return Err(anyhow!("shard {s} worker died during length collection")),
+            }
+        }
+        Ok((opt_step.unwrap_or(0), lens))
+    }
+
+    /// Fetch the state blob of one tensor by its *inventory* index,
+    /// routed to the owning shard — the per-tensor pass of a streamed
+    /// snapshot. Peak coordinator memory is one blob, not the
+    /// inventory's worth.
+    pub fn collect_blob(&self, tensor: usize) -> Result<Vec<u8>> {
+        let s = *self
+            .plan
+            .assign
+            .get(tensor)
+            .ok_or_else(|| anyhow!("tensor {tensor} is not in the shard plan"))?;
+        let local = self.plan.locals[s]
+            .iter()
+            .position(|&t| t == tensor)
+            .expect("assign and locals agree by construction");
+        let h = &self.handles[s];
+        h.tx.send(Cmd::CollectOne { local })
+            .map_err(|_| anyhow!("shard {s} worker is gone"))?;
+        match h.rx.recv() {
+            Ok(Reply::Blob { blob, .. }) => Ok(blob),
+            _ => Err(anyhow!("shard {s} worker died collecting tensor {tensor}")),
+        }
     }
 
     /// Stop and join every worker.

@@ -440,6 +440,104 @@ pub fn save_snapshot(
     Ok(std::fs::metadata(path).with_context(|| format!("stat {path:?}"))?.len())
 }
 
+/// [`save_snapshot`] without ever materializing the full optimizer
+/// state: the caller supplies the per-tensor blob *lengths* up front
+/// (so the SEC_OPT section length can be written before any blob
+/// exists) and a `feed` callback that produces one tensor's blob at a
+/// time, which streams straight into the file writer. Peak memory is
+/// one blob, which is what lets a sharded server snapshot an inventory
+/// larger than any single buffer it is willing to allocate.
+///
+/// The section sequence mirrors [`write_v2`] with `rng = None` exactly
+/// — a streamed snapshot is byte-identical to the [`save_snapshot`]
+/// dense path given the same inputs (pinned by a test below), which is
+/// what keeps the server's determinism contract checkable with `cmp`.
+/// Each fed blob must match its announced length; a mismatch aborts
+/// the write (the previous checkpoint survives, courtesy of
+/// [`atomic_write`]).
+#[allow(clippy::too_many_arguments)]
+pub fn save_snapshot_streamed(
+    path: &Path,
+    step: u64,
+    names: &[String],
+    params: &[Tensor],
+    base_lr: f32,
+    schedule: &LrSchedule,
+    kind: OptKind,
+    opt_step: u64,
+    blob_lens: &[u64],
+    config: &ConfigSection,
+    feed: &mut dyn FnMut(usize) -> Result<Vec<u8>>,
+) -> Result<u64> {
+    assert_eq!(names.len(), params.len());
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating snapshot dir {parent:?}"))?;
+        }
+    }
+
+    let mut t = BlobWriter::new();
+    t.u64(step);
+    t.u8(0); // no data-RNG section content, same as save_snapshot
+    let trainer_payload = t.finish();
+
+    let sched_payload = {
+        let mut w = BlobWriter::new();
+        w.f32(base_lr);
+        let (tag, a, b, c) = schedule.encode();
+        w.u8(tag);
+        w.u64(a);
+        w.u64(b);
+        w.f32(c);
+        w.finish()
+    };
+
+    let config_payload = config.payload();
+
+    atomic_write(path, |w| {
+        w.write_all(MAGIC)?;
+        w_u32(w, VERSION_V2)?;
+        w_u32(w, 5)?; // PARAMS, TRAINER, SCHEDULE, OPT, CONFIG
+
+        w_u32(w, SEC_PARAMS)?;
+        w_u64(w, tensor_table_len(names, params))?;
+        stream_tensor_table(w, names, params)?;
+
+        w_u32(w, SEC_TRAINER)?;
+        w_u64(w, trainer_payload.len() as u64)?;
+        w.write_all(&trainer_payload)?;
+
+        w_u32(w, SEC_SCHEDULE)?;
+        w_u64(w, sched_payload.len() as u64)?;
+        w.write_all(&sched_payload)?;
+
+        w_u32(w, SEC_OPT)?;
+        let len: u64 = 4 + 8 + 4 + blob_lens.iter().map(|l| 8 + l).sum::<u64>();
+        w_u64(w, len)?;
+        w_u32(w, kind.tag())?;
+        w_u64(w, opt_step)?;
+        w_u32(w, blob_lens.len() as u32)?;
+        for (i, &announced) in blob_lens.iter().enumerate() {
+            let blob = feed(i).map_err(|e| std::io::Error::other(format!("{e:#}")))?;
+            if blob.len() as u64 != announced {
+                return Err(std::io::Error::other(format!(
+                    "streamed snapshot: tensor {i} blob is {} bytes, sizing pass \
+                     announced {announced} (state mutated mid-snapshot?)",
+                    blob.len()
+                )));
+            }
+            w_u64(w, announced)?;
+            w.write_all(&blob)?;
+        }
+
+        w_u32(w, SEC_CONFIG)?;
+        w_u64(w, config_payload.len() as u64)?;
+        w.write_all(&config_payload)
+    })?;
+    Ok(std::fs::metadata(path).with_context(|| format!("stat {path:?}"))?.len())
+}
+
 /// [`save_snapshot`]'s section set serialized to memory instead of
 /// disk: the server's crash-recovery image. Byte-identical to what
 /// [`save_snapshot`] would write (both funnel through [`write_v2`]), so
@@ -1032,6 +1130,72 @@ mod tests {
         let (step, n2, t2) = load(&tmp).unwrap();
         assert_eq!((step, n2, t2), (17, names, tensors));
         std::fs::remove_file(&tmp).unwrap();
+    }
+
+    #[test]
+    fn streamed_snapshot_is_byte_identical_to_dense() {
+        let dense_path = tmp("snap_dense");
+        let streamed_path = tmp("snap_streamed");
+        let (names, tensors) = sample_tensors();
+        let schedule = LrSchedule::Cosine { warmup: 10, total: 100, floor: 0.05 };
+        let config = sample_config();
+        let blobs = vec![vec![9u8; 33], vec![], vec![1, 2, 3, 4]];
+        // Three blobs vs two tensors is fine here: the OPT section is an
+        // opaque list, only the loader cross-checks counts.
+        let names3 = names.clone();
+        save_snapshot(
+            &dense_path,
+            12,
+            &names3,
+            &tensors,
+            2e-3,
+            &schedule,
+            OptKind::Smmf,
+            12,
+            blobs.clone(),
+            &config,
+        )
+        .unwrap();
+        let lens: Vec<u64> = blobs.iter().map(|b| b.len() as u64).collect();
+        let n = save_snapshot_streamed(
+            &streamed_path,
+            12,
+            &names3,
+            &tensors,
+            2e-3,
+            &schedule,
+            OptKind::Smmf,
+            12,
+            &lens,
+            &config,
+            &mut |i| Ok(blobs[i].clone()),
+        )
+        .unwrap();
+        let dense = std::fs::read(&dense_path).unwrap();
+        let streamed = std::fs::read(&streamed_path).unwrap();
+        assert_eq!(n, streamed.len() as u64);
+        assert_eq!(dense, streamed, "streamed snapshot drifted from the dense writer");
+
+        // A blob that disagrees with its announced length aborts the
+        // write and leaves the previous file intact (atomic_write).
+        let err = save_snapshot_streamed(
+            &streamed_path,
+            13,
+            &names3,
+            &tensors,
+            2e-3,
+            &schedule,
+            OptKind::Smmf,
+            13,
+            &lens,
+            &config,
+            &mut |i| Ok(vec![0u8; blobs[i].len() + 1]),
+        )
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("sizing pass announced"), "{err:#}");
+        assert_eq!(std::fs::read(&streamed_path).unwrap(), dense);
+        std::fs::remove_file(&dense_path).unwrap();
+        std::fs::remove_file(&streamed_path).unwrap();
     }
 
     #[test]

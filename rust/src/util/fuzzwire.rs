@@ -1,0 +1,189 @@
+//! Deterministic wire-corruption driver shared by every length-prefixed
+//! codec in the tree (`SMMFWIRE` frames, `SMMFCELL` frames, `SMMFCKPT`
+//! checkpoint images).
+//!
+//! The decoders all promise the same discipline: a hostile or damaged
+//! byte stream is *rejected with an error* — never a panic, never an
+//! allocation sized by an unvalidated count. This module turns that
+//! promise into a reusable harness: given a corpus of valid encodings
+//! and a decode closure, it replays four corruption families against
+//! every item —
+//!
+//! 1. **Truncation** at every strict prefix length (a length-prefixed
+//!    encoding can never have a valid strict prefix, so each one MUST
+//!    be rejected);
+//! 2. **Bit flips** at PRNG-chosen positions (may still decode — a flip
+//!    inside an f32 payload is legal data — but must never panic);
+//! 3. **Length-prefix inflation**: a deterministic sweep writing huge
+//!    little-endian values over every 4/8-byte window in the leading
+//!    bytes, where magic/version/length fields and the first payload
+//!    count fields live;
+//! 4. **Fabricated counts**: the same huge-value overwrites at
+//!    PRNG-chosen aligned offsets anywhere in the item, modelling a
+//!    peer that lies about an interior vector length.
+//!
+//! Panics propagate — a panicking decoder fails the calling test, which
+//! is exactly the contract under test. The PRNG is seeded per call
+//! (layered under `SMMF_PROP_SEED` conventions by the callers), so a
+//! failure reproduces bit-exactly.
+
+use crate::util::rng::Pcg32;
+
+/// Leading-byte window that gets the exhaustive overwrite sweep: wide
+/// enough to cover every codec's fixed header (29 bytes for the frame
+/// protocols) plus the first few payload count fields.
+const SWEEP_BYTES: usize = 96;
+
+/// Huge values written over suspected length/count fields. `!0` probes
+/// absolute-cap checks; the mid-range value probes arithmetic-overflow
+/// paths that a saturating check might miss.
+const INFLATE_VALUES: [u64; 3] = [!0u64, 0x7fff_ffff_ffff_ffff, 1 << 33];
+
+/// Outcome counts for one corpus run (diagnostics — the hard assertions
+/// fire inside [`fuzz_codec`]).
+#[derive(Debug, Default)]
+pub struct FuzzReport {
+    /// Corrupted inputs fed to the decoder.
+    pub cases: u64,
+    /// Inputs the decoder rejected with an error.
+    pub rejected: u64,
+    /// Inputs the decoder still accepted (possible for payload-interior
+    /// bit flips and overwrites that land on plain data bytes).
+    pub accepted: u64,
+}
+
+/// Run the full corruption battery for one codec.
+///
+/// `decode` must attempt a full decode of the buffer and report
+/// success/failure; `flips` and `overwrites` set the PRNG-driven case
+/// counts per corpus item (the truncation and leading-sweep families
+/// are exhaustive and not tunable).
+///
+/// Asserts (test-failing, with the codec `name` and a reproduction
+/// description in the message):
+/// * every corpus item decodes cleanly before corruption;
+/// * every strict-prefix truncation is rejected;
+/// * every corruption case returns (panics propagate to the caller).
+pub fn fuzz_codec(
+    name: &str,
+    corpus: &[Vec<u8>],
+    seed: u64,
+    flips: usize,
+    overwrites: usize,
+    decode: &mut dyn FnMut(&[u8]) -> Result<(), String>,
+) -> FuzzReport {
+    let mut rng = Pcg32::new(seed ^ 0xf022_0000);
+    let mut rep = FuzzReport::default();
+    for (i, item) in corpus.iter().enumerate() {
+        assert!(
+            decode(item).is_ok(),
+            "{name}: corpus item {i} ({} bytes) does not decode clean",
+            item.len()
+        );
+
+        // 1. Every strict prefix must be rejected.
+        for cut in 0..item.len() {
+            rep.cases += 1;
+            match decode(&item[..cut]) {
+                Err(_) => rep.rejected += 1,
+                Ok(()) => panic!(
+                    "{name}: item {i} truncated to {cut}/{} bytes decoded successfully",
+                    item.len()
+                ),
+            }
+        }
+
+        // 2. PRNG bit flips — must return, may legitimately accept.
+        let mut buf = item.clone();
+        for _ in 0..flips {
+            let pos = rng.below(buf.len());
+            let bit = 1u8 << (rng.below(8) as u8);
+            buf[pos] ^= bit;
+            rep.count(decode(&buf));
+            buf[pos] ^= bit;
+        }
+
+        // 3. Exhaustive huge-value sweep over the leading bytes.
+        for start in 0..SWEEP_BYTES.min(item.len()) {
+            for width in [4usize, 8] {
+                if start + width > buf.len() {
+                    continue;
+                }
+                for v in INFLATE_VALUES {
+                    let saved: Vec<u8> = buf[start..start + width].to_vec();
+                    buf[start..start + width].copy_from_slice(&v.to_le_bytes()[..width]);
+                    rep.count(decode(&buf));
+                    buf[start..start + width].copy_from_slice(&saved);
+                }
+            }
+        }
+
+        // 4. PRNG-positioned fabricated counts anywhere in the item.
+        for _ in 0..overwrites {
+            let width = if rng.below(2) == 0 { 4usize } else { 8 };
+            if buf.len() < width {
+                break;
+            }
+            let start = rng.below(buf.len() - width + 1);
+            let v = INFLATE_VALUES[rng.below(INFLATE_VALUES.len())];
+            let saved: Vec<u8> = buf[start..start + width].to_vec();
+            buf[start..start + width].copy_from_slice(&v.to_le_bytes()[..width]);
+            rep.count(decode(&buf));
+            buf[start..start + width].copy_from_slice(&saved);
+        }
+    }
+    rep
+}
+
+impl FuzzReport {
+    fn count(&mut self, r: Result<(), String>) {
+        self.cases += 1;
+        match r {
+            Ok(()) => self.accepted += 1,
+            Err(_) => self.rejected += 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// A toy length-prefixed codec: `u32 len` + payload, strict.
+    fn toy_decode(buf: &[u8]) -> Result<(), String> {
+        if buf.len() < 4 {
+            return Err("short header".into());
+        }
+        let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+        if len > 1 << 16 {
+            return Err("cap".into());
+        }
+        if buf.len() != 4 + len {
+            return Err("length mismatch".into());
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn driver_exercises_all_families_deterministically() {
+        let corpus = vec![{
+            let mut v = 40u32.to_le_bytes().to_vec();
+            v.extend(std::iter::repeat(0xABu8).take(40));
+            v
+        }];
+        let a = fuzz_codec("toy", &corpus, 7, 32, 32, &mut toy_decode);
+        let b = fuzz_codec("toy", &corpus, 7, 32, 32, &mut toy_decode);
+        assert_eq!((a.cases, a.rejected, a.accepted), (b.cases, b.rejected, b.accepted));
+        // 44 truncations + 32 flips + sweep + 32 overwrites all ran.
+        assert!(a.cases > 44 + 32 + 32, "{a:?}");
+        assert!(a.rejected >= 44, "{a:?}");
+    }
+
+    #[test]
+    #[should_panic(expected = "truncated")]
+    fn prefix_tolerant_codec_is_caught() {
+        // Accepts any prefix — the driver must flag it.
+        let corpus = vec![vec![1, 2, 3, 4, 5, 6, 7, 8]];
+        fuzz_codec("lax", &corpus, 1, 0, 0, &mut |_| Ok(()));
+    }
+}

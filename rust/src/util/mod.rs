@@ -5,12 +5,14 @@
 //! implemented here: a seeded PCG RNG, a JSON parser/writer (for the AOT
 //! manifest and metrics), a TOML-subset config parser, a CLI argument
 //! parser, byte/duration formatting, a micro-benchmark harness, a
-//! property-testing harness and the shared `Busy`-backoff machinery.
+//! property-testing harness, a deterministic wire-corruption fuzz
+//! driver and the shared `Busy`-backoff machinery.
 
 pub mod backoff;
 pub mod bench;
 pub mod cli;
 pub mod fmt;
+pub mod fuzzwire;
 pub mod json;
 pub mod prop;
 pub mod rng;

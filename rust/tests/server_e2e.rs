@@ -7,7 +7,11 @@
 //! re-sharding) pinned against the elastic reference trainer.
 //!
 //! Everything here runs over real loopback TCP against the `tiny_lm`
-//! inventory (~15K params) — no AOT artifacts, no PJRT.
+//! inventory (~15K params) — no AOT artifacts, no PJRT — plus the
+//! `tiny_lm_x8` / `tiny_lm_x64` scaled variants that pin the v4 chunk
+//! streaming: `tiny_lm_x64`'s dense gradient set does not fit one wire
+//! frame, so every cell it passes is evidence the chunk path (not a
+//! big-frame fallback) carried the run.
 
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -15,15 +19,23 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use smmf_repro::coordinator::ExperimentConfig;
 use smmf_repro::models::inventory_by_name;
 use smmf_repro::optim::OptKind;
-use smmf_repro::server::protocol::NO_CLIENT;
+use smmf_repro::server::protocol::{grads_payload_bytes, NO_CLIENT, PULL_DENSE};
 use smmf_repro::server::{
     reference_checkpoint, reference_checkpoint_elastic, run_loadgen, Client, LoadgenOptions, Msg,
-    PushOutcome, ServeOptions, Server,
+    PushOutcome, ServeOptions, Server, TensorMoments, MAX_PAYLOAD,
 };
 use smmf_repro::train::checkpoint;
 
 fn tmp(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("smmf_server_{tag}_{}.bin", std::process::id()))
+}
+
+/// A full-shape all-zero gradient set — the smallest push the v4
+/// stream layer forwards to the coordinator (a wrong tensor *count* is
+/// rejected at the connection handler, before membership or step
+/// validation ever runs).
+fn zero_grads(shapes: &[Vec<usize>]) -> Vec<Vec<f32>> {
+    shapes.iter().map(|s| vec![0.0f32; s.iter().product()]).collect()
 }
 
 fn test_config(kind: OptKind) -> ExperimentConfig {
@@ -170,49 +182,50 @@ fn server_rejects_bad_requests_and_keeps_serving() {
     let server = Server::start(&cfg, &serve_opts(1, 2)).unwrap();
     let addr = server.addr.to_string();
     let mut c = Client::connect(&addr).unwrap();
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    let grads = zero_grads(&shapes);
 
     // unknown client id
-    let reply = c
-        .call(Msg::PushGrad { client: 9, epoch: 1, step: 1, base_step: 0, grads: vec![] })
-        .unwrap();
-    assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
+    let out = c.push_grad(9, 1, 1, 0, grads.clone()).unwrap();
+    assert!(matches!(out, PushOutcome::Rejected(_)), "{out:?}");
     // wrong step
-    let reply = c
-        .call(Msg::PushGrad { client: 0, epoch: 1, step: 5, base_step: 4, grads: vec![] })
-        .unwrap();
-    assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
+    let out = c.push_grad(0, 1, 5, 4, grads.clone()).unwrap();
+    assert!(matches!(out, PushOutcome::Rejected(_)), "{out:?}");
     // a base_step that is not step - 1 on the synchronous path
-    let reply = c
-        .call(Msg::PushGrad { client: 0, epoch: 1, step: 1, base_step: 7, grads: vec![] })
-        .unwrap();
-    match reply {
-        Msg::Err { ref msg } => assert!(msg.contains("base_step"), "{msg}"),
-        other => panic!("expected Err, got {}", other.name()),
+    match c.push_grad(0, 1, 1, 7, grads.clone()).unwrap() {
+        PushOutcome::Rejected(msg) => assert!(msg.contains("base_step"), "{msg}"),
+        other => panic!("expected Rejected, got {other:?}"),
     }
-    // wrong tensor count (right client, right step)
-    let reply = c
-        .call(Msg::PushGrad {
-            client: 0,
-            epoch: 1,
-            step: 1,
-            base_step: 0,
-            grads: vec![vec![1.0]],
-        })
-        .unwrap();
-    assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
+    // wrong tensor count (right client, right step): refused by the
+    // stream layer itself, before the batcher is consulted
+    match c.push_grad(0, 1, 1, 0, vec![vec![1.0]]).unwrap() {
+        PushOutcome::Rejected(msg) => assert!(msg.contains("tensors"), "{msg}"),
+        other => panic!("expected Rejected, got {other:?}"),
+    }
     // a pull floor the server cannot honor gets the typed TooStale reply
-    let reply = c.call(Msg::PullParams { min_step: 50 }).unwrap();
+    let reply = c.call(Msg::PullParams { min_step: 50, mode: PULL_DENSE }).unwrap();
     assert_eq!(reply, Msg::TooStale { applied: 0, required: 50 });
     // a reply op sent as a request is rejected by the handler
     let reply = c.call(Msg::Ack { step: 1 }).unwrap();
     assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
+    // chunk frames with no enclosing PushBegin stream are not requests
+    let reply = c
+        .call(Msg::ChunkHeader { tensor_idx: 0, seq: 0, total: 1, start: 0, count: 4, tensor_len: 4 })
+        .unwrap();
+    assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
+    // a Resend with no pull reply cached on this connection is an error
+    let reply = c.call(Msg::Resend { tensor_idx: 0, seq: 0 }).unwrap();
+    match reply {
+        Msg::Err { ref msg } => assert!(msg.contains("resend") || msg.contains("pull"), "{msg}"),
+        other => panic!("expected Err, got {}", other.name()),
+    }
     // snapshot to an unwritable path errors instead of killing the server
     let reply = c.call(Msg::Snapshot { path: "/definitely/not/a/dir/x.bin".into() }).unwrap();
     assert!(matches!(reply, Msg::Err { .. }), "{}", reply.name());
 
     // a loadgen whose client count disagrees with the server's barrier
     // width fails loudly up front instead of deadlocking the barrier
-    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    // (after the membership-settle poll runs out — nobody else joins)
     let e = run_loadgen(
         &addr,
         &shapes,
@@ -243,16 +256,15 @@ fn stale_epoch_pushes_get_a_typed_reply() {
     let server = Server::start(&cfg, &serve_opts(1, 2)).unwrap();
     let addr = server.addr.to_string();
     let mut c = Client::connect(&addr).unwrap();
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
 
     let view = c.epoch_info().unwrap();
     assert_eq!((view.epoch, view.next_step, view.client), (1, 1, NO_CLIENT));
     assert_eq!(view.members, vec![0, 1]);
 
-    let reply = c
-        .call(Msg::PushGrad { client: 0, epoch: 7, step: 1, base_step: 0, grads: vec![] })
-        .unwrap();
-    assert_eq!(reply, Msg::StaleEpoch { epoch: 1 });
-    let out = c.push_grad(0, 99, 1, 0, vec![]).unwrap();
+    let out = c.push_grad(0, 7, 1, 0, zero_grads(&shapes)).unwrap();
+    assert_eq!(out, PushOutcome::Stale(1));
+    let out = c.push_grad(0, 99, 1, 0, zero_grads(&shapes)).unwrap();
     assert_eq!(out, PushOutcome::Stale(1));
 
     c.shutdown().unwrap();
@@ -501,4 +513,156 @@ fn staleness_zero_is_bit_identical_to_the_barrier_path() {
     let want = std::fs::read(&refp).unwrap();
     assert!(files[0] == want, "staleness=0 snapshot differs from the reference");
     std::fs::remove_file(&refp).ok();
+}
+
+/// The paper-scale differential pin (the v4 acceptance test): the same
+/// run at 1×, 8× and 64× vocab scales, across shards {1,2} × clients
+/// {1,4}, each snapshot byte-identical to the single-process dense
+/// reference. `tiny_lm_x64`'s dense gradient set exceeds the connection
+/// payload cap — under v3 the server refused to even start on it; here
+/// it streams chunk-by-chunk and the *streamed* snapshot writer's
+/// output is compared byte-for-byte against the reference's dense
+/// writer, pinning streamed == dense end to end.
+#[test]
+fn scaled_inventories_stream_bit_identically_to_reference() {
+    let steps = 3u64;
+    let cfg = test_config(OptKind::Smmf);
+    for scale in [1usize, 8, 64] {
+        let model =
+            if scale == 1 { "tiny_lm".to_string() } else { format!("tiny_lm_x{scale}") };
+        let spec = format!("synthetic:{model}");
+        let shapes = inventory_by_name(&model).unwrap().shapes();
+        if scale == 64 {
+            // The point of the exercise: one dense push no longer fits
+            // a connection frame, so only chunking can carry this run.
+            assert!(
+                grads_payload_bytes(&shapes) > MAX_PAYLOAD,
+                "x64 must exceed the dense payload cap to prove anything"
+            );
+        }
+        for shards in [1usize, 2] {
+            for clients in [1usize, 4] {
+                let tag = format!("x{scale}_{shards}s_{clients}c");
+                let snap = tmp(&tag);
+                let refp = tmp(&format!("{tag}_ref"));
+                let mut opts = serve_opts(shards, clients);
+                opts.model = spec.clone();
+                let server = Server::start(&cfg, &opts).unwrap();
+                let addr = server.addr.to_string();
+                let report = run_loadgen(
+                    &addr,
+                    &shapes,
+                    cfg.seed,
+                    &LoadgenOptions { clients, steps, ..LoadgenOptions::default() },
+                )
+                .unwrap();
+                let mut ctl = Client::connect(&addr).unwrap();
+                let bytes = ctl.snapshot(snap.to_str().unwrap()).unwrap();
+                ctl.shutdown().unwrap();
+                server.wait().unwrap();
+
+                assert_eq!(report.pushes, clients as u64 * steps, "{tag}");
+                assert!(report.bytes_per_step > 0.0, "{tag}: {report:?}");
+
+                let ref_loss = reference_checkpoint(&cfg, &spec, clients, steps, &refp).unwrap();
+                let got = std::fs::read(&snap).unwrap();
+                let want = std::fs::read(&refp).unwrap();
+                assert_eq!(got.len() as u64, bytes, "{tag}: SnapshotDone size");
+                assert!(got == want, "{tag}: streamed snapshot differs from the dense reference");
+                assert_eq!(report.final_loss.to_bits(), ref_loss.to_bits(), "{tag}");
+
+                std::fs::remove_file(&snap).ok();
+                std::fs::remove_file(&refp).ok();
+            }
+        }
+    }
+}
+
+/// The factored pull mode: an SMMF server ships its optimizer state as
+/// factor vectors + packed sign planes, and the client reconstructs
+/// dense momenta — shapes right, second moments non-negative (they are
+/// outer products of non-negative factors), and the whole exchange far
+/// smaller on the wire than the dense momenta it reconstructs.
+#[test]
+fn factored_pull_reconstructs_dense_momenta_from_compressed_state() {
+    let steps = 4u64;
+    let cfg = test_config(OptKind::Smmf);
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    let server = Server::start(&cfg, &serve_opts(1, 1)).unwrap();
+    let addr = server.addr.to_string();
+    run_loadgen(
+        &addr,
+        &shapes,
+        cfg.seed,
+        &LoadgenOptions { clients: 1, steps, ..LoadgenOptions::default() },
+    )
+    .unwrap();
+    let mut ctl = Client::connect(&addr).unwrap();
+    let before = ctl.bytes_received;
+    let (at, moments) = ctl.pull_state_factored().unwrap();
+    let factored_bytes = ctl.bytes_received - before;
+    ctl.shutdown().unwrap();
+    server.wait().unwrap();
+
+    assert_eq!(at, steps);
+    assert_eq!(moments.len(), shapes.len());
+    let mut total_numel = 0usize;
+    let mut saw_signal = false;
+    for (t, (m, s)) in moments.iter().zip(&shapes).enumerate() {
+        let numel: usize = s.iter().product();
+        total_numel += numel;
+        match m {
+            TensorMoments::Dense { m, v } => {
+                assert_eq!((m.len(), v.len()), (numel, numel), "tensor {t}");
+                assert!(v.iter().all(|x| *x >= 0.0), "tensor {t}: V̂ went negative");
+                saw_signal |= m.iter().any(|x| *x != 0.0);
+            }
+            TensorMoments::Stateless => panic!("tensor {t}: tiny_lm has no frozen tensors"),
+        }
+    }
+    assert!(saw_signal, "four steps of training left all first moments at zero");
+    // The compression story on the wire: dense momenta would be
+    // 8 bytes/element; the factored stream must come in well under.
+    assert!(
+        factored_bytes < (8 * total_numel) as u64 / 2,
+        "factored pull moved {factored_bytes} bytes for {total_numel} elements"
+    );
+}
+
+/// Regression pin for the loadgen width probe (the race fixed in this
+/// revision): a member that `Join`s concurrently with an async
+/// loadgen's startup must not make the probe bail on the transient
+/// width — the probe polls until the membership covers the driver
+/// count. Before the fix this failed with a spurious member-table
+/// mismatch whenever the Join landed after the one-shot Stats read.
+#[test]
+fn async_loadgen_probe_waits_for_a_joining_member() {
+    let steps = 3u64;
+    let cfg = test_config(OptKind::Smmf);
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    let opts = ServeOptions { staleness: 2, ..serve_opts(1, 1) };
+    let server = Server::start(&cfg, &opts).unwrap();
+    let addr = server.addr.to_string();
+
+    let report = std::thread::scope(|s| {
+        s.spawn(|| {
+            // Land the Join a beat after the loadgen's first probe.
+            std::thread::sleep(std::time::Duration::from_millis(120));
+            let mut c = Client::connect(&addr).unwrap();
+            let view = c.join().unwrap();
+            assert_eq!(view.client, 1);
+        });
+        run_loadgen(
+            &addr,
+            &shapes,
+            cfg.seed,
+            &LoadgenOptions { clients: 2, steps, ..LoadgenOptions::default() },
+        )
+        .unwrap()
+    });
+    assert_eq!(report.staleness, 2, "{report:?}");
+    assert_eq!(report.pushes, 2 * steps, "{report:?}");
+
+    Client::connect(&addr).unwrap().shutdown().unwrap();
+    server.wait().unwrap();
 }

@@ -1,35 +1,46 @@
-//! Wire-codec property and corruption tests for the `SMMFWIRE`
+//! Wire-codec property and corruption tests for the `SMMFWIRE` v4
 //! protocol (`server::protocol`), in the same strict-decode style as the
 //! `optim/blob.rs` and checkpoint-container tests: every op roundtrips,
 //! every strict prefix of a valid frame errors cleanly, hostile length
-//! fields are rejected *before* any allocation, and bad magic/version/op
-//! bytes produce context-rich errors — never a panic or an OOM.
+//! and count fields are rejected *before* any allocation, and bad
+//! magic/version/op bytes produce context-rich errors — never a panic
+//! or an OOM. The cross-codec corruption battery lives in
+//! `tests/wire_corruption.rs`; this file pins the v4-specific shapes
+//! (chunk ops, split payload caps, internal-variant panics).
 
 use smmf_repro::server::protocol::{
-    self, decode, encode, read_frame, write_frame, Contributor, EpochView, Frame, Msg,
-    ServerStats, HEADER_LEN, MAX_PAYLOAD, OP_PUSH_GRAD,
+    self, chunk_plan, decode, decode_header, encode, read_frame, write_frame, ChunkAssembler,
+    ChunkError, Contributor, EpochView, Frame, Msg, ServerStats, CHUNK_MAX_BYTES, HEADER_LEN,
+    MAX_CHUNKS_PER_TENSOR, MAX_FILE_PAYLOAD, MAX_PAYLOAD, OP_CHUNK_HEADER, OP_LOG_COMMIT,
+    OP_PARAMS_BEGIN, OP_PUSH_BEGIN, OP_STATS, PULL_DENSE, PULL_FACTORED,
 };
 use smmf_repro::util::prop;
 
 fn all_ops() -> Vec<Msg> {
     vec![
-        Msg::PushGrad {
-            client: 3,
-            epoch: 2,
-            step: 41,
-            base_step: 38,
-            grads: vec![vec![1.0, -2.5, 0.0], vec![], vec![f32::MIN, f32::MAX]],
-        },
-        Msg::PullParams { min_step: 0 },
-        Msg::PullParams { min_step: 37 },
+        Msg::PushBegin { client: 3, epoch: 2, step: 41, base_step: 38, n_tensors: 9 },
+        Msg::PullParams { min_step: 0, mode: PULL_DENSE },
+        Msg::PullParams { min_step: 37, mode: PULL_FACTORED },
         Msg::Snapshot { path: "runs/server/snapshot.bin".into() },
         Msg::Stats,
         Msg::Shutdown,
         Msg::Join,
         Msg::Leave { client: 5 },
         Msg::EpochInfo,
+        Msg::Resend { tensor_idx: 4, seq: 17 },
+        Msg::ChunkHeader {
+            tensor_idx: 2,
+            seq: 1,
+            total: 3,
+            start: 262_144,
+            count: 262_144,
+            tensor_len: 590_000,
+        },
+        Msg::ChunkData { tensor_idx: 2, seq: 1, bytes: vec![0xAB; 1024] },
+        Msg::ChunkData { tensor_idx: 0, seq: 0, bytes: Vec::new() },
+        Msg::StreamEnd { step: 41, tensors: 9 },
         Msg::Ack { step: 7 },
-        Msg::Params { step: 6, tensors: vec![vec![0.25; 17], vec![-1.0]] },
+        Msg::ParamsBegin { step: 6, mode: PULL_FACTORED, n_tensors: 9 },
         Msg::SnapshotDone { bytes: 123_456_789 },
         Msg::StatsReply(ServerStats {
             step: 9,
@@ -123,9 +134,27 @@ fn every_strict_prefix_of_every_op_errors() {
     }
 }
 
+/// The internal coordinator-channel variants have no v4 wire encoding —
+/// framing one is a programming error that must fail loudly, not ship a
+/// silently wrong frame.
+#[test]
+#[should_panic(expected = "coordinator-internal")]
+fn internal_push_grad_has_no_wire_encoding() {
+    encode(&Frame {
+        request_id: 1,
+        msg: Msg::PushGrad { client: 0, epoch: 1, step: 1, base_step: 0, grads: vec![] },
+    });
+}
+
+#[test]
+#[should_panic(expected = "coordinator-internal")]
+fn internal_params_has_no_wire_encoding() {
+    encode(&Frame { request_id: 1, msg: Msg::Params { step: 1, tensors: vec![] } });
+}
+
 #[test]
 fn bad_magic_version_and_op_are_rejected() {
-    let good = encode(&Frame { request_id: 1, msg: Msg::PullParams { min_step: 0 } });
+    let good = encode(&Frame { request_id: 1, msg: Msg::Stats });
 
     // flip each magic byte
     for i in 0..8 {
@@ -134,11 +163,13 @@ fn bad_magic_version_and_op_are_rejected() {
         let e = decode(&bad).unwrap_err();
         assert!(format!("{e:#}").contains("magic"), "byte {i}: {e:#}");
     }
-    // wrong version
-    let mut bad = good.clone();
-    bad[8..12].copy_from_slice(&99u32.to_le_bytes());
-    let e = decode(&bad).unwrap_err();
-    assert!(format!("{e:#}").contains("version"), "{e:#}");
+    // wrong version — v3 peers (and v3 commit logs) are refused outright
+    for v in [1u32, 2, 3, 99] {
+        let mut bad = good.clone();
+        bad[8..12].copy_from_slice(&v.to_le_bytes());
+        let e = decode(&bad).unwrap_err();
+        assert!(format!("{e:#}").contains("version"), "v{v}: {e:#}");
+    }
     // unknown op byte (offset 20)
     let mut bad = good.clone();
     bad[20] = 0xee;
@@ -147,11 +178,10 @@ fn bad_magic_version_and_op_are_rejected() {
 }
 
 #[test]
-fn oversized_length_prefix_is_rejected_before_allocation() {
-    // Header claims a payload beyond MAX_PAYLOAD: both decode paths must
-    // refuse from the header alone. A reader that trusted this length
-    // would try to allocate 2^60 bytes — the test passing at all is the
-    // proof it never gets there.
+fn split_payload_caps_apply_per_op_range() {
+    // Header claims a payload beyond MAX_PAYLOAD: a connection op must
+    // refuse from the header alone — a reader that trusted this length
+    // would try to allocate 2^60 bytes.
     let good = encode(&Frame { request_id: 1, msg: Msg::Stats });
     let mut bad = good.clone();
     bad[21..29].copy_from_slice(&(1u64 << 60).to_le_bytes());
@@ -159,54 +189,95 @@ fn oversized_length_prefix_is_rejected_before_allocation() {
     assert!(format!("{e:#}").contains("cap"), "{e:#}");
     let mut cur = std::io::Cursor::new(&bad);
     assert!(read_frame(&mut cur).is_err());
-    // just over the cap is also refused
-    let mut bad = good.clone();
-    bad[21..29].copy_from_slice(&(MAX_PAYLOAD + 1).to_le_bytes());
-    assert!(decode(&bad).is_err());
+
+    // Just over the connection cap is refused for connection ops…
+    let hdr_with = |op: u8, len: u64| {
+        let mut h = good.clone();
+        h.truncate(HEADER_LEN);
+        h[20] = op;
+        h[21..29].copy_from_slice(&len.to_le_bytes());
+        let arr: [u8; HEADER_LEN] = h[..HEADER_LEN].try_into().unwrap();
+        decode_header(&arr)
+    };
+    assert!(hdr_with(OP_STATS, MAX_PAYLOAD + 1).is_err());
+    assert!(hdr_with(OP_PUSH_BEGIN, MAX_PAYLOAD + 1).is_err());
+    // …but the commit-log file ops keep the roomy pre-v4 cap: the same
+    // length passes the header check (a logged commit holds one whole
+    // coalesced gradient set).
+    assert_eq!(hdr_with(OP_LOG_COMMIT, MAX_PAYLOAD + 1).unwrap().2, MAX_PAYLOAD + 1);
+    assert!(hdr_with(OP_LOG_COMMIT, MAX_FILE_PAYLOAD + 1).is_err());
 }
 
-/// Hand-build a PushGrad frame whose tensor claims more f32 elements
-/// than the payload holds: the remaining-bytes check must fire before
-/// the element buffer is allocated.
+/// Hand-build chunk-op frames with hostile count fields: each cap must
+/// fire in `decode_payload`, before any downstream buffer exists.
 #[test]
-fn fabricated_tensor_count_is_caught_by_the_remaining_bytes_check() {
+fn hostile_chunk_fields_are_rejected_at_decode() {
     use smmf_repro::optim::blob::BlobWriter;
+    let frame_with = |op: u8, payload: Vec<u8>| {
+        let mut w = BlobWriter::new();
+        w.bytes(protocol::MAGIC);
+        w.u32(protocol::VERSION);
+        w.u64(9);
+        w.u8(op);
+        w.u64(payload.len() as u64);
+        w.bytes(&payload);
+        w.finish()
+    };
+    let chunk_header = |total: u32, count: u64| {
+        let mut p = BlobWriter::new();
+        p.u32(0); // tensor_idx
+        p.u32(0); // seq
+        p.u32(total);
+        p.u64(0); // start
+        p.u64(count);
+        p.u64(count); // tensor_len
+        frame_with(OP_CHUNK_HEADER, p.finish())
+    };
+    // total = 0 and total > MAX_CHUNKS_PER_TENSOR are both refused.
+    let e = decode(&chunk_header(0, 16)).unwrap_err();
+    assert!(format!("{e:#}").contains("chunks"), "{e:#}");
+    let e = decode(&chunk_header(MAX_CHUNKS_PER_TENSOR + 1, 16)).unwrap_err();
+    assert!(format!("{e:#}").contains("chunks"), "{e:#}");
+    // a chunk claiming more than CHUNK_MAX_BYTES is refused.
+    let e = decode(&chunk_header(1, CHUNK_MAX_BYTES + 1)).unwrap_err();
+    assert!(format!("{e:#}").contains("cap"), "{e:#}");
+    // in range decodes fine.
+    assert!(decode(&chunk_header(2, CHUNK_MAX_BYTES)).is_ok());
+
+    // A ChunkData frame carrying more than CHUNK_MAX_BYTES: fits under
+    // the 1 MiB frame cap, so only the per-chunk cap can catch it.
+    let mut p = BlobWriter::new();
+    p.u32(0);
+    p.u32(0);
+    p.bytes(&vec![0u8; CHUNK_MAX_BYTES as usize + 1]);
+    let e = decode(&frame_with(protocol::OP_CHUNK_DATA, p.finish())).unwrap_err();
+    assert!(format!("{e:#}").contains("cap"), "{e:#}");
+
+    // PushBegin / ParamsBegin tensor-count caps.
     let mut p = BlobWriter::new();
     p.u32(0); // client
     p.u64(1); // epoch
     p.u64(1); // step
     p.u64(0); // base_step
-    p.u32(1); // one tensor…
-    p.u64(1 << 40); // …claiming 2^40 elements
-    let payload = p.finish();
-    let mut w = BlobWriter::new();
-    w.bytes(protocol::MAGIC);
-    w.u32(protocol::VERSION);
-    w.u64(9);
-    w.u8(OP_PUSH_GRAD);
-    w.u64(payload.len() as u64);
-    w.bytes(&payload);
-    let e = decode(&w.finish()).unwrap_err();
-    let msg = format!("{e:#}");
-    assert!(msg.contains("remain"), "{msg}");
-
-    // absurd tensor *count* is capped too
-    let mut p = BlobWriter::new();
-    p.u32(0);
-    p.u64(1);
-    p.u64(1);
-    p.u64(0);
-    p.u32(u32::MAX);
-    let payload = p.finish();
-    let mut w = BlobWriter::new();
-    w.bytes(protocol::MAGIC);
-    w.u32(protocol::VERSION);
-    w.u64(9);
-    w.u8(OP_PUSH_GRAD);
-    w.u64(payload.len() as u64);
-    w.bytes(&payload);
-    let e = decode(&w.finish()).unwrap_err();
+    p.u32(u32::MAX); // n_tensors
+    let e = decode(&frame_with(OP_PUSH_BEGIN, p.finish())).unwrap_err();
     assert!(format!("{e:#}").contains("cap"), "{e:#}");
+    let mut p = BlobWriter::new();
+    p.u64(1); // step
+    p.u8(PULL_DENSE);
+    p.u32(u32::MAX);
+    let e = decode(&frame_with(OP_PARAMS_BEGIN, p.finish())).unwrap_err();
+    assert!(format!("{e:#}").contains("cap"), "{e:#}");
+
+    // Unknown pull mode bytes are refused on both request and reply.
+    let bytes = frame_with(protocol::OP_PULL_PARAMS, {
+        let mut p = BlobWriter::new();
+        p.u64(0);
+        p.u8(7);
+        p.finish()
+    });
+    let e = decode(&bytes).unwrap_err();
+    assert!(format!("{e:#}").contains("mode"), "{e:#}");
 }
 
 #[test]
@@ -262,74 +333,117 @@ fn string_caps_apply_to_snapshot_and_err() {
 }
 
 #[test]
-fn grads_payload_bytes_matches_the_encoder() {
+fn grads_payload_bytes_is_the_dense_yardstick() {
+    // No live v4 frame carries a whole gradient set, but the function
+    // remains the honest dense-wire baseline: fixed push header fields
+    // plus a u64 length prefix + 4 bytes per element per tensor.
     let shapes = vec![vec![3, 2], vec![7], vec![1]];
-    let grads: Vec<Vec<f32>> =
-        shapes.iter().map(|s| vec![0.5; s.iter().product()]).collect();
-    let frame = Frame {
-        request_id: 1,
-        msg: Msg::PushGrad { client: 0, epoch: 1, step: 1, base_step: 0, grads },
-    };
-    let expect = protocol::grads_payload_bytes(&shapes);
-    assert_eq!(encode(&frame).len() as u64, HEADER_LEN as u64 + expect);
+    let expect: u64 = (4 + 8 + 8 + 8 + 4) + (8 + 4 * 6) + (8 + 4 * 7) + (8 + 4 * 1);
+    assert_eq!(protocol::grads_payload_bytes(&shapes), expect);
+    // and the x64 scaled inventory really is past the connection cap —
+    // the premise of the chunked-streaming e2e pins.
+    let inv = smmf_repro::models::registry::inventory_by_name("tiny_lm_x64").unwrap();
+    assert!(protocol::grads_payload_bytes(&inv.shapes()) > MAX_PAYLOAD);
 }
 
-/// Hand-build an EpochReply whose member list claims more entries than
-/// [`protocol::MAX_MEMBERS`] (cap check) or than the payload holds
-/// (remaining-bytes check): both must fire before the member buffer is
-/// allocated.
 #[test]
-fn fabricated_member_count_is_caught_before_allocation() {
-    use smmf_repro::optim::blob::BlobWriter;
-    let build = |n_members: u32| {
-        let mut p = BlobWriter::new();
-        p.u64(2); // epoch
-        p.u64(5); // next_step
-        p.u32(protocol::NO_CLIENT);
-        p.u32(n_members); // …but no member bytes follow
-        let payload = p.finish();
-        let mut w = BlobWriter::new();
-        w.bytes(protocol::MAGIC);
-        w.u32(protocol::VERSION);
-        w.u64(9);
-        w.u8(protocol::OP_EPOCH_REPLY);
-        w.u64(payload.len() as u64);
-        w.bytes(&payload);
-        w.finish()
-    };
-    let e = decode(&build(protocol::MAX_MEMBERS as u32 + 1)).unwrap_err();
-    assert!(format!("{e:#}").contains("cap"), "{e:#}");
-    let e = decode(&build(16)).unwrap_err();
-    assert!(format!("{e:#}").contains("remain"), "{e:#}");
+fn chunk_plan_is_deterministic_row_aligned_and_total() {
+    // Plans tile the tensor exactly, in order, within budget.
+    for (len, row, budget) in
+        [(0u64, 0u64, 1024u64), (10, 0, 3), (4096, 16, 100), (590_000, 4, CHUNK_MAX_BYTES)]
+    {
+        let plan = chunk_plan(len, row, budget);
+        assert!(!plan.is_empty());
+        let mut cursor = 0;
+        for &(start, count) in &plan {
+            assert_eq!(start, cursor, "({len},{row},{budget})");
+            assert!(count <= budget.max(1));
+            cursor += count;
+        }
+        assert_eq!(cursor, len);
+        // deterministic: both peers derive identical spans
+        assert_eq!(plan, chunk_plan(len, row, budget));
+    }
+    // row alignment: every non-final chunk covers whole rows
+    let plan = chunk_plan(4096, 16, 100);
+    for &(_, count) in &plan[..plan.len() - 1] {
+        assert_eq!(count % 16, 0);
+    }
+    // zero-length tensors still occupy one (0, 0) chunk
+    assert_eq!(chunk_plan(0, 4, 1024), vec![(0, 0)]);
 }
 
-/// Hand-build a LogCommit frame whose contributor list claims more
-/// entries than [`protocol::MAX_MEMBERS`] (cap check) or than the
-/// payload holds (remaining-bytes check): both must fire before the
-/// contributor buffer is allocated — the commit-log loader feeds
-/// attacker-controlled files through this exact decoder.
 #[test]
-fn fabricated_commit_contributor_count_is_caught_before_allocation() {
-    use smmf_repro::optim::blob::BlobWriter;
-    let build = |n: u32| {
-        let mut p = BlobWriter::new();
-        p.u64(5); // step
-        p.u64(2); // epoch
-        p.u32(n); // contributor count… but no contributor bytes follow
-        let payload = p.finish();
-        let mut w = BlobWriter::new();
-        w.bytes(protocol::MAGIC);
-        w.u32(protocol::VERSION);
-        w.u64(9);
-        w.u8(protocol::OP_LOG_COMMIT);
-        w.u64(payload.len() as u64);
-        w.bytes(&payload);
-        w.finish()
-    };
-    let e = decode(&build(protocol::MAX_MEMBERS as u32 + 1)).unwrap_err();
-    assert!(format!("{e:#}").contains("cap"), "{e:#}");
-    let e = decode(&build(16)).unwrap_err();
-    assert!(format!("{e:#}").contains("remain"), "{e:#}");
+fn assembler_round_trips_any_arrival_order_with_resend() {
+    // Stream two tensors out of order, drop one chunk, recover it via
+    // missing() — the Resend driver — then finish exactly.
+    let data: Vec<Vec<u8>> = vec![(0u8..=255).cycle().take(700).collect(), Vec::new()];
+    let lens: Vec<u64> = data.iter().map(|d| d.len() as u64).collect();
+    let mut asm = ChunkAssembler::for_lens(&lens);
+    let plan = chunk_plan(lens[0], 4, 256);
+    let total = plan.len() as u32;
+    // send all of tensor 0's chunks in reverse, skipping seq 1
+    for (seq, &(start, count)) in plan.iter().enumerate().rev() {
+        if seq == 1 {
+            continue;
+        }
+        asm.header(0, seq as u32, total, start, count, lens[0]).unwrap();
+        asm.data(0, seq as u32, &data[0][start as usize..(start + count) as usize]).unwrap();
+    }
+    asm.header(1, 0, 1, 0, 0, 0).unwrap();
+    asm.data(1, 0, &[]).unwrap();
+    assert!(!asm.is_complete());
+    assert_eq!(asm.missing(), Some((0, 1)));
+    let (start, count) = plan[1];
+    asm.header(0, 1, total, start, count, lens[0]).unwrap();
+    asm.data(0, 1, &data[0][start as usize..(start + count) as usize]).unwrap();
+    assert!(asm.is_complete());
+    assert_eq!(asm.missing(), None);
+    assert_eq!(asm.finish().unwrap(), data);
+}
+
+#[test]
+fn assembler_rejects_duplicates_overlaps_and_bounds_with_typed_errors() {
+    let mut asm = ChunkAssembler::for_lens(&[100]);
+    asm.header(0, 0, 2, 0, 60, 100).unwrap();
+    // duplicate header
+    assert_eq!(asm.header(0, 0, 2, 0, 60, 100), Err(ChunkError::Duplicate { tensor_idx: 0, seq: 0 }));
+    // overlapping span
+    assert_eq!(asm.header(0, 1, 2, 40, 60, 100), Err(ChunkError::Overlap { tensor_idx: 0, seq: 1 }));
+    // out-of-bounds range
+    assert_eq!(
+        asm.header(0, 1, 2, 60, 60, 100),
+        Err(ChunkError::RangeOutOfBounds { tensor_idx: 0, seq: 1 })
+    );
+    // contradicting total
+    assert_eq!(
+        asm.header(0, 1, 3, 60, 40, 100),
+        Err(ChunkError::TotalMismatch { tensor_idx: 0, got: 3, expected: 2 })
+    );
+    // tensor out of range
+    assert_eq!(
+        asm.header(1, 0, 1, 0, 0, 0),
+        Err(ChunkError::TensorOutOfRange { tensor_idx: 1, n_tensors: 1 })
+    );
+    // data without header / size mismatch
+    assert_eq!(
+        asm.data(0, 1, &[0; 40]),
+        Err(ChunkError::DataWithoutHeader { tensor_idx: 0, seq: 1 })
+    );
+    assert_eq!(
+        asm.data(0, 0, &[0; 10]),
+        Err(ChunkError::DataSizeMismatch { tensor_idx: 0, seq: 0, got: 10, expected: 60 })
+    );
+    // finishing with a chunk outstanding is Missing, typed
+    asm.data(0, 0, &[7; 60]).unwrap();
+    assert_eq!(asm.finish(), Err(ChunkError::Missing { tensor_idx: 0, seq: 1 }));
+
+    // untrusted mode caps the announced length
+    let mut asm = ChunkAssembler::for_unknown(1, 1 << 10);
+    assert_eq!(
+        asm.header(0, 0, 1, 0, 16, 1 << 20),
+        Err(ChunkError::LenMismatch { tensor_idx: 0, got: 1 << 20, expected: 1 << 10 })
+    );
 }
 
 #[test]

@@ -86,8 +86,7 @@ cargo run --release -- loadgen --model synthetic:tiny_lm \
 # surviving epoch schedule (eviction lands deterministically at
 # drop + 1; the killed shard respawns from the recovery image). Then a
 # slow (but live) client under an armed eviction deadline: the run must
-# finish, not evict, and record degraded-vs-healthy throughput — this
-# is the run that leaves the final BENCH_server.json refresh.
+# finish, not evict, and record degraded-vs-healthy throughput.
 echo "== chaos smoke (drop-client + kill-shard, --check vs elastic reference) =="
 cargo run --release -- loadgen --model synthetic:tiny_lm \
   --clients 3 --shards 2 --steps 20 \
@@ -116,6 +115,16 @@ cargo run --release -- loadgen --model synthetic:tiny_lm \
 cargo run --release -- replay target/async-smoke/commits.bin \
   --shards 2 --snapshot target/async-smoke/replay.bin
 cmp target/async-smoke/snapshot.bin target/async-smoke/replay.bin
+
+# Stream smoke: the chunked v4 wire path at paper scale. Runs the
+# cross-protocol corruption battery and the chunk-stream property
+# tests, then drives loadgen --check at 1x/8x/64x inventory scale —
+# the 64x inventory only serves chunked (its dense gradient set
+# exceeds the live-frame cap) and its streamed snapshot must be
+# byte-identical to the dense reference. This is the run that leaves
+# the final BENCH_server.json refresh (per-scale steps/s + bytes/step).
+echo "== stream smoke (corruption battery + 1x/8x/64x loadgen --check) =="
+bash tests/stream_smoke.sh
 
 # Grouped end-to-end: train -> save -> resume with a bias/norm-exempt
 # group config through the real CLI. Needs AOT artifacts (make

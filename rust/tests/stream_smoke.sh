@@ -1,0 +1,56 @@
+#!/usr/bin/env bash
+# Paper-scale streaming smoke: drive the chunked v4 wire path with
+# inventories scaled past the live-frame cap and pin the streamed
+# snapshot against the dense single-process reference.
+#
+#   bash rust/tests/stream_smoke.sh     # from the repo root
+#   make stream-smoke                   # equivalent
+#
+# What runs:
+#   1. the cross-protocol corruption battery (SMMFWIRE v4 / SMMFCELL /
+#      SMMFCKPT under one deterministic driver) and the chunk-stream
+#      property tests (every optimizer's state blobs under random
+#      chunk budgets / row splits / arrival orders);
+#   2. `repro loadgen --check` at 1x / 8x / 64x inventory scale — the
+#      64x inventory's dense gradient set exceeds the 1 MiB live-frame
+#      cap, so it only serves chunked; --check byte-compares the
+#      server's streamed snapshot against the dense single-process
+#      reference checkpoint (streamed == dense, bit for bit);
+#   3. the three per-scale bench records (steps_per_s, bytes_per_step,
+#      latency percentiles) merged into BENCH_server.json (or
+#      $SMMF_SERVER_BENCH_JSON when set).
+set -euo pipefail
+
+cd "$(dirname "$0")/.."   # rust/
+
+echo "== corruption battery (SMMFWIRE v4 / SMMFCELL / SMMFCKPT) =="
+cargo test --release --test wire_corruption
+
+echo "== chunk-stream properties (all optimizers, random streams) =="
+cargo test --release --test chunk_stream
+
+mkdir -p target/stream-smoke
+for scale in 1 8 64; do
+  if [ "$scale" = 1 ]; then
+    model=synthetic:tiny_lm
+  else
+    model=synthetic:tiny_lm_x${scale}
+  fi
+  echo "== stream smoke (${scale}x inventory, loadgen --check, streamed-vs-dense snapshot) =="
+  cargo run --release -- loadgen --model "$model" \
+    --clients 2 --shards 2 --steps 8 \
+    --snapshot "target/stream-smoke/snapshot_x${scale}.bin" --check \
+    --bench-json "target/stream-smoke/BENCH_x${scale}.json"
+done
+
+# Merge the three single-record docs into one BENCH_server.json.
+# Record objects never nest arrays, so the record payload is exactly
+# what sits between `"records":[` and the closing `]}`.
+rec() { sed -e 's/^.*"records":\[//' -e 's/\]}$//' "$1"; }
+out="${SMMF_SERVER_BENCH_JSON:-../BENCH_server.json}"
+printf '{"benchmark":"server_loadgen","records":[%s,%s,%s]}\n' \
+  "$(rec target/stream-smoke/BENCH_x1.json)" \
+  "$(rec target/stream-smoke/BENCH_x8.json)" \
+  "$(rec target/stream-smoke/BENCH_x64.json)" > "$out"
+
+echo "stream-smoke OK: 64x streamed snapshot byte-identical to the dense reference; 1x/8x/64x records -> $out"

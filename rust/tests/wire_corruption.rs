@@ -1,0 +1,195 @@
+//! The cross-protocol corruption battery: one deterministic driver
+//! ([`smmf_repro::util::fuzzwire`]) replayed against every
+//! length-prefixed codec in the tree — `SMMFWIRE` v4 frames (including
+//! the chunk-stream ops), `SMMFCELL` remote-suite frames, and
+//! `SMMFCKPT` checkpoint images. The shared contract under test: a
+//! damaged or hostile byte stream is rejected with an error — never a
+//! panic, never an allocation sized by an unvalidated count. Truncation
+//! at every strict prefix must be rejected; bit flips and fabricated
+//! length/count fields must at worst decode to different-but-valid
+//! data. A panicking decoder fails the test by construction (the
+//! driver propagates it); an over-allocating one aborts the run, which
+//! is just as loud.
+//!
+//! Failures reproduce bit-exactly: the PRNG families are seeded per
+//! call and the truncation/inflation families are exhaustive.
+
+use smmf_repro::coordinator::remote::protocol as cell;
+use smmf_repro::optim::group::{self, GroupedConfig};
+use smmf_repro::optim::schedule::LrSchedule;
+use smmf_repro::optim::{self, GroupPolicy, OptKind, OptimConfig, ParamRole, ParamSpec, StatePolicy};
+use smmf_repro::server::protocol::{self as wire, Contributor, EpochView, Frame, Msg, ServerStats};
+use smmf_repro::tensor::Tensor;
+use smmf_repro::train::checkpoint::{self, ConfigSection};
+use smmf_repro::util::fuzzwire::fuzz_codec;
+
+/// Every wire-encodable `SMMFWIRE` v4 op, small enough that the
+/// exhaustive truncation family stays cheap.
+fn wire_corpus() -> Vec<Vec<u8>> {
+    let stats = ServerStats {
+        step: 9,
+        shards: 2,
+        clients: 3,
+        pushes: 27,
+        busy: 1,
+        snapshots: 1,
+        epoch: 2,
+        evictions: 0,
+        respawns: 1,
+        recovery_ms: 12,
+        staleness: 2,
+    };
+    let view = EpochView { epoch: 3, next_step: 10, client: 1, members: vec![0, 1, 4] };
+    let msgs = vec![
+        Msg::PushBegin { client: 1, epoch: 2, step: 7, base_step: 6, n_tensors: 4 },
+        Msg::PullParams { min_step: 0, mode: wire::PULL_DENSE },
+        Msg::PullParams { min_step: 12, mode: wire::PULL_FACTORED },
+        Msg::Snapshot { path: "/tmp/snap.bin".into() },
+        Msg::Stats,
+        Msg::Shutdown,
+        Msg::Join,
+        Msg::Leave { client: 2 },
+        Msg::EpochInfo,
+        Msg::Resend { tensor_idx: 3, seq: 9 },
+        Msg::ChunkHeader { tensor_idx: 0, seq: 1, total: 3, start: 64, count: 64, tensor_len: 192 },
+        Msg::ChunkData { tensor_idx: 0, seq: 1, bytes: (0..64u8).collect() },
+        Msg::StreamEnd { step: 7, tensors: 4 },
+        Msg::Ack { step: 7 },
+        Msg::ParamsBegin { step: 7, mode: wire::PULL_FACTORED, n_tensors: 4 },
+        Msg::SnapshotDone { bytes: 4096 },
+        Msg::StatsReply(stats),
+        Msg::Busy,
+        Msg::Bye,
+        Msg::Err { msg: "rejected for the test".into() },
+        Msg::EpochReply(view),
+        Msg::StaleEpoch { epoch: 3 },
+        Msg::TooStale { applied: 5, required: 9 },
+        Msg::LogHeader {
+            model: "synthetic:tiny_lm".into(),
+            optimizer: "smmf".into(),
+            seed: 3,
+            base_lr: 0.05,
+            staleness: 2,
+            first_step: 1,
+        },
+        Msg::LogCommit {
+            step: 7,
+            epoch: 2,
+            contributors: vec![
+                Contributor { client: 0, base_step: 6 },
+                Contributor { client: 2, base_step: 5 },
+            ],
+            digest: 0xfeed_f00d,
+            grads: vec![vec![0.5, -0.25, 2.0], vec![1.0]],
+        },
+    ];
+    msgs.into_iter()
+        .enumerate()
+        .map(|(i, msg)| wire::encode(&Frame { request_id: 100 + i as u64, msg }))
+        .collect()
+}
+
+/// Every `SMMFCELL` message, requests and replies.
+fn cell_corpus() -> Vec<Vec<u8>> {
+    let msgs = vec![
+        cell::CellMsg::Submit {
+            nonce: 0xabad_cafe,
+            job: 3,
+            run: "lr3e-4_smmf".into(),
+            model: "synthetic:tiny_lm".into(),
+            config: "[optim]\nlr = 3e-4\n".into(),
+        },
+        cell::CellMsg::Poll { nonce: 0xabad_cafe, job: 3 },
+        cell::CellMsg::Ping,
+        cell::CellMsg::Shutdown,
+        cell::CellMsg::Accepted { job: 3 },
+        cell::CellMsg::Running { job: 3 },
+        cell::CellMsg::Done { job: 3 },
+        cell::CellMsg::Failed { job: 3, note: "loss went non-finite".into() },
+        cell::CellMsg::Busy,
+        cell::CellMsg::Pong { running: 1, capacity: 4 },
+        cell::CellMsg::Bye,
+        cell::CellMsg::Err { msg: "unknown job".into() },
+    ];
+    msgs.into_iter()
+        .enumerate()
+        .map(|(i, msg)| cell::encode(&cell::CellFrame { request_id: 7 + i as u64, msg }))
+        .collect()
+}
+
+/// One small-but-complete `SMMFCKPT` v2 image: PARAMS + TRAINER +
+/// SCHEDULE + OPT (real SMMF factored blobs, sign plane included) +
+/// CONFIG with a two-group table. Small on purpose — the truncation
+/// family decodes every strict prefix.
+fn ckpt_corpus() -> Vec<Vec<u8>> {
+    let names = vec!["w1".to_string(), "b1".to_string()];
+    let params = vec![
+        Tensor::from_vec(&[2, 3], vec![1.0, -2.0, 3.0, 4.0, 5.5, -6.0]),
+        Tensor::from_vec(&[3], vec![0.1, 0.2, 0.3]),
+    ];
+    let specs = vec![
+        ParamSpec::new("w1", &[2, 3], ParamRole::Kernel),
+        ParamSpec::new("b1", &[3], ParamRole::Bias),
+    ];
+    let mut gcfg =
+        GroupedConfig::uniform(&OptimConfig { weight_decay: 0.01, ..OptimConfig::default() });
+    gcfg.groups.push(GroupPolicy {
+        name: "no_decay".into(),
+        match_roles: vec![ParamRole::Bias],
+        weight_decay: Some(0.0),
+        state: StatePolicy::Dense,
+        ..GroupPolicy::default()
+    });
+    let config = ConfigSection::from_config(&gcfg.base, &group::resolve(&specs, &gcfg));
+
+    // Real optimizer state, so the OPT section carries representative
+    // factored + sign-plane bytes rather than synthetic filler.
+    let shapes = vec![vec![2usize, 3], vec![3]];
+    let mut opt = optim::build(OptKind::Smmf, &shapes, &gcfg.base);
+    let mut p = params.clone();
+    let grads: Vec<Tensor> = shapes
+        .iter()
+        .map(|s| Tensor::from_vec(s, vec![0.1; s.iter().product()]))
+        .collect();
+    opt.step(&mut p, &grads);
+
+    vec![checkpoint::snapshot_to_bytes(
+        5,
+        &names,
+        &params,
+        1e-2,
+        &LrSchedule::Cosine { warmup: 2, total: 10, floor: 0.1 },
+        OptKind::Smmf,
+        5,
+        opt.state_blobs(),
+        &config,
+    )]
+}
+
+#[test]
+fn smmfwire_v4_rejects_corruption_without_panicking() {
+    let rep = fuzz_codec("SMMFWIRE", &wire_corpus(), 0x51ff_0001, 64, 64, &mut |b| {
+        wire::decode(b).map(|_| ()).map_err(|e| format!("{e:#}"))
+    });
+    // Every family ran and the strict-prefix family alone rejects a lot.
+    assert!(rep.cases > 2_000, "{rep:?}");
+    assert!(rep.rejected > rep.accepted, "{rep:?}");
+}
+
+#[test]
+fn smmfcell_rejects_corruption_without_panicking() {
+    let rep = fuzz_codec("SMMFCELL", &cell_corpus(), 0x51ff_0002, 64, 64, &mut |b| {
+        cell::decode(b).map(|_| ()).map_err(|e| format!("{e:#}"))
+    });
+    assert!(rep.cases > 1_000, "{rep:?}");
+    assert!(rep.rejected > rep.accepted, "{rep:?}");
+}
+
+#[test]
+fn smmfckpt_rejects_corruption_without_panicking() {
+    let rep = fuzz_codec("SMMFCKPT", &ckpt_corpus(), 0x51ff_0003, 256, 256, &mut |b| {
+        checkpoint::load_bytes(b).map(|_| ()).map_err(|e| format!("{e:#}"))
+    });
+    assert!(rep.cases > 500, "{rep:?}");
+    assert!(rep.rejected > 0, "{rep:?}");
+}
