@@ -33,6 +33,14 @@
 #                    streamed snapshot against the dense reference);
 #                    refreshes BENCH_server.json with the per-scale
 #                    steps/s + bytes/step records
+#   make obs-smoke   observability smoke: the obs test battery (ring
+#                    wraparound, cross-thread interleaving, pinned
+#                    export bytes, traced-vs-untraced snapshot
+#                    identity), then `repro trace -- loadgen --check`
+#                    (the bit-identity pin must hold with the flight
+#                    recorder on) and a traced suite run; validates the
+#                    Chrome trace JSON + Prometheus exposition and
+#                    leaves measured obs/ records in the BENCH JSONs
 #   make docs-check  regenerate docs/RESULTS.md from the checked-in
 #                    fixture summaries, fail on diff, and verify every
 #                    docs link / file:line anchor
@@ -40,7 +48,7 @@
 #   make docs        rustdoc for the crate, warnings-clean (--no-deps)
 #   make artifacts   AOT-lower the JAX/Pallas graphs (needs python + jax)
 
-.PHONY: build test smoke suite-smoke serve-smoke chaos-smoke async-smoke remote-smoke stream-smoke docs-check bench docs artifacts
+.PHONY: build test smoke suite-smoke serve-smoke chaos-smoke async-smoke remote-smoke stream-smoke obs-smoke docs-check bench docs artifacts
 
 build:
 	cd rust && cargo build --release
@@ -98,6 +106,28 @@ remote-smoke:
 
 stream-smoke:
 	bash rust/tests/stream_smoke.sh
+
+obs-smoke:
+	cd rust && cargo test --release --test obs
+	rm -rf rust/target/obs-smoke
+	cd rust && cargo run --release -- trace -- loadgen \
+	  --model synthetic:tiny_lm --clients 2 --shards 2 --steps 50 \
+	  --snapshot target/obs-smoke/snapshot.bin --check \
+	  --trace-out target/obs-smoke/trace.json \
+	  --metrics-out target/obs-smoke/metrics.prom \
+	  --bench-json ../BENCH_server.json
+	grep -q '"traceEvents"' rust/target/obs-smoke/trace.json
+	grep -q '"name":"optim.factor_update"' rust/target/obs-smoke/trace.json
+	grep -q '"name":"server.commit"' rust/target/obs-smoke/trace.json
+	grep -q '^smmf_server_pushes_total 100$$' rust/target/obs-smoke/metrics.prom
+	grep -q '"obs/server.commit_ms"' BENCH_server.json
+	cd rust && cargo run --release -- trace -- suite tests/suite_smoke.toml \
+	  --out-dir target/obs-smoke/suite --docs target/obs-smoke/RESULTS.md \
+	  --bench-json target/obs-smoke/BENCH_suite.json \
+	  --trace-out target/obs-smoke/suite-trace.json \
+	  --metrics-out target/obs-smoke/suite-metrics.prom
+	grep -q '"name":"optim.step"' rust/target/obs-smoke/suite-trace.json
+	@echo "obs-smoke OK: traced loadgen stayed bit-identical; trace + exposition artifacts validated"
 
 docs-check:
 	cd rust && cargo run --release -- report tests/fixtures/suite_report/smoke \

@@ -56,6 +56,15 @@ use crate::util::backoff::Backoff;
 /// `Busy` bounces) without piling risk onto one lease.
 pub const INFLIGHT_PER_WORKER: usize = 2;
 
+/// One lane state transition: bump its `remote.*` counter in the global
+/// observability registry and drop a `lane.*` marker on the trace.
+/// Lane events are per-submit/per-verdict, not per-step, so the
+/// registry name lookup is cheap enough to take inline.
+fn lane_event(counter: &'static str, mark: &'static str) {
+    crate::obs::metrics::global().counter(counter).fetch_add(1, Ordering::Relaxed);
+    crate::obs::trace::mark("suite", mark);
+}
+
 /// One remote worker's dispatch lane.
 struct Lane {
     addr: String,
@@ -117,6 +126,7 @@ impl<'a> Board<'a> {
     }
 
     fn requeue_front(&self, idx: usize) {
+        lane_event("remote.requeues_total", "lane.requeue");
         self.pending.lock().unwrap().push_front(idx);
     }
 
@@ -284,6 +294,7 @@ fn dispatch_loop(board: &Board<'_>, spec: &WorkerSpec, lease: Duration, io: Dura
             progress |= fill_lane(board, lane, nonce, io);
             heartbeat_lane(lane, lease, io);
             if lane.last_ok.elapsed() > lease {
+                lane_event("remote.lane_deaths_total", "lane.dead");
                 lane.dead = true;
                 lane.client = None;
                 let stranded = std::mem::take(&mut lane.inflight);
@@ -343,6 +354,7 @@ fn heartbeat_lane(lane: &mut Lane, lease: Duration, io: Duration) {
     }
     let Some(mut client) = lane.take_client(io) else { return };
     if client.ping().is_ok() {
+        lane_event("remote.heartbeats_total", "lane.heartbeat");
         lane.last_ok = Instant::now();
         lane.client = Some(client);
     }
@@ -475,6 +487,7 @@ fn fill_lane(board: &Board<'_>, lane: &mut Lane, nonce: u64, io: Duration) -> bo
         lane.last_ok = Instant::now();
         match reply {
             CellMsg::Accepted { .. } | CellMsg::Running { .. } => {
+                lane_event("remote.submits_total", "lane.submit");
                 println!("{tag}: dispatched to worker {}", lane.addr);
                 lane.inflight.push(idx);
                 progress = true;
@@ -489,6 +502,7 @@ fn fill_lane(board: &Board<'_>, lane: &mut Lane, nonce: u64, io: Duration) -> bo
                 progress = true;
             }
             CellMsg::Busy => {
+                lane_event("remote.busy_retries_total", "lane.busy");
                 board.requeue_front(idx);
                 lane.defer_until = Some(Instant::now() + lane.busy_backoff.next_delay());
                 break;
@@ -520,6 +534,7 @@ fn fill_lane(board: &Board<'_>, lane: &mut Lane, nonce: u64, io: Duration) -> bo
 /// marker — the worker already wrote one, but a shared filesystem is
 /// not part of the protocol and the write is idempotent.)
 fn done_on(board: &Board<'_>, idx: usize, addr: &str) {
+    lane_event("remote.done_total", "lane.done");
     let cell = &board.cells[idx];
     println!("{}: done on worker {addr}", suite::cell_tag(idx, board.total, &cell.run));
     board.record(idx, CellStatus::Ran);

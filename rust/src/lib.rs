@@ -26,10 +26,14 @@
 //! * [`server`] — the optimizer-state server: sharded, batched gradient
 //!   ingestion over the `SMMFWIRE` binary protocol (`repro serve` /
 //!   `repro loadgen`).
+//! * [`obs`] — observability: the flight-recorder tracer, the metrics
+//!   registry, and the Chrome-trace / Prometheus / bench-JSON
+//!   exporters (`repro trace`, `--trace` / `--metrics`).
 
 pub mod coordinator;
 pub mod data;
 pub mod models;
+pub mod obs;
 pub mod optim;
 pub mod runtime;
 pub mod server;

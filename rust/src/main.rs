@@ -28,6 +28,7 @@ use std::path::Path;
 use smmf_repro::coordinator::experiments as exp;
 use smmf_repro::coordinator::{report, suite, workers, ExperimentConfig, SuiteConfig, WorkerSpec};
 use smmf_repro::models;
+use smmf_repro::obs;
 use smmf_repro::optim::OptKind;
 use smmf_repro::runtime::Runtime;
 use smmf_repro::train::FusedSmmfStep;
@@ -36,10 +37,28 @@ use smmf_repro::util::fmt;
 
 fn main() {
     let args = Args::from_env();
-    if let Err(e) = run(&args) {
+    if let Err(e) = run_top(&args) {
         eprintln!("error: {e:#}");
         std::process::exit(1);
     }
+}
+
+/// The observability lifecycle around the dispatch: read `[obs]` +
+/// `--trace`/`--metrics`, flip the global switches, run the command,
+/// export on the way out. `repro trace` manages its own lifecycle
+/// (it rebuilds the inner command line from raw argv), so it is
+/// dispatched bare.
+fn run_top(args: &Args) -> Result<()> {
+    if args.command.as_deref() == Some("trace") {
+        return run(args);
+    }
+    let cfg = obs::ObsConfig::load(args)?;
+    obs::init(&cfg);
+    let out = run(args);
+    // Export even when the command failed — a trace of the failing run
+    // is exactly the trace you want.
+    let fin = obs::finish(&cfg);
+    out.and(fin)
 }
 
 fn artifacts_dir(args: &Args) -> String {
@@ -83,6 +102,7 @@ fn run(args: &Args) -> Result<()> {
         "serve" => cmd_serve(args),
         "loadgen" => cmd_loadgen(args),
         "replay" => cmd_replay(args),
+        "trace" => cmd_trace(),
         other => bail!("unknown command {other} (try `repro help`)"),
     }
 }
@@ -168,7 +188,17 @@ commands:
                     [default 1, free to differ from the recording run],
                     --snapshot OUT.bin [default LOG.bin.replay.bin];
                     config/seed/optimizer must match the recording run)
-common flags: --artifacts DIR (default ./artifacts), --seed N,
+  trace -- CMD …    run any repro command with the flight recorder +
+                    metrics registry forced on, exporting on exit:
+                    Chrome trace-event JSON (--trace-out PATH [default
+                    trace.json]; open at ui.perfetto.dev) and the
+                    Prometheus text exposition (--metrics-out PATH
+                    [default metrics.prom]); see docs/OBSERVABILITY.md
+common flags: --trace / --metrics (observability on any command:
+              span recording / metric export, also `[obs]` TOML;
+              --trace implies --metrics),
+              --trace-out PATH, --metrics-out PATH,
+              --artifacts DIR (default ./artifacts), --seed N,
               --threads N (parallel optimizer step engine; 1 = serial),
               --save-every N / --resume PATH (SMMFCKPT v2 checkpoints;
               see docs/CHECKPOINT_FORMAT.md),
@@ -179,6 +209,35 @@ param groups: --group \"name=no_decay,role=bias|norm,wd=0; match=*emb*,
               overrides (role/name-glob matchers, first match wins;
               state=factored|dense|none, frozen). TOML spelling:
               [[optimizer.group]] blocks (see README quickstart)";
+
+/// `repro trace [--] CMD [args…]`: run CMD with the flight recorder and
+/// the metrics registry forced on, then export the Chrome trace JSON +
+/// Prometheus text on exit. The inner command line is rebuilt from raw
+/// argv because [`Args::parse`] treats a bare `--` as an empty-named
+/// option that swallows the token after it.
+fn cmd_trace() -> Result<()> {
+    let mut raw: Vec<String> = std::env::args().skip(1).collect();
+    match raw.first().map(String::as_str) {
+        Some("trace") => {
+            raw.remove(0);
+        }
+        _ => bail!("`trace` must be the leading subcommand (repro trace -- <command> [args…])"),
+    }
+    if raw.first().map(String::as_str) == Some("--") {
+        raw.remove(0);
+    }
+    if raw.is_empty() || raw[0] == "trace" {
+        bail!("usage: repro trace -- <command> [args…] (e.g. repro trace -- loadgen --steps 50)");
+    }
+    let inner = Args::parse(raw.into_iter());
+    let mut cfg = obs::ObsConfig::load(&inner)?;
+    cfg.trace = true;
+    cfg.metrics = true;
+    obs::init(&cfg);
+    let out = run(&inner);
+    let fin = obs::finish(&cfg);
+    out.and(fin)
+}
 
 fn cmd_list(args: &Args) -> Result<()> {
     println!("model inventories (memory accounting):");
@@ -410,11 +469,25 @@ fn cmd_suite(args: &Args) -> Result<()> {
         artifacts_dir: artifacts_dir(args),
         lease_timeout_ms: args.u64_or("lease-timeout-ms", 10_000),
     };
+    let t0 = std::time::Instant::now();
     let outcome = suite::run_suite(&suite_cfg, &opts)?;
+    let elapsed_s = t0.elapsed().as_secs_f64();
     let (ran, skipped, failed) = outcome.counts();
     let (docs, bench) = report_paths(args);
     report::write_report(&suite_cfg.name, &outcome.suite_dir, Path::new(&docs), Path::new(&bench))?;
     println!("\n[suite {}] {ran} ran, {skipped} cached, {failed} failed", suite_cfg.name);
+    // Lane retries = Busy bounces + requeues, read from the same global
+    // registry the remote dispatcher bumps (0 for a purely local run).
+    let reg = obs::metrics::global();
+    let lane_retries = reg.value("remote.busy_retries_total").unwrap_or(0)
+        + reg.value("remote.requeues_total").unwrap_or(0);
+    println!(
+        "[suite {}] digest: {ran} ran in {:.1}s ({:.2} cells/s) | {} lane retries",
+        suite_cfg.name,
+        elapsed_s,
+        ran as f64 / elapsed_s.max(1e-12),
+        lane_retries
+    );
     println!("[suite {}] report -> {docs} (records -> {bench})", suite_cfg.name);
     // Failure isolation keeps the suite (and the report) going, but the
     // exit code must still tell CI the truth.
@@ -867,6 +940,16 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     println!(
         "[loadgen] wire traffic: {} per applied step (all clients, both directions)",
         smmf_repro::util::fmt::bytes(report.bytes_per_step as u64)
+    );
+    // The one-line digest: the four numbers a dashboard (or a PR diff)
+    // wants, in one greppable place.
+    println!(
+        "[loadgen] digest: {:.1} steps/s | push p50/p99 {:.3}/{:.3} ms | {}/step | {} busy retries",
+        report.steps_per_s,
+        report.push_p50_ms,
+        report.push_p99_ms,
+        smmf_repro::util::fmt::bytes(report.bytes_per_step as u64),
+        report.busy_retries
     );
     if faults {
         println!(

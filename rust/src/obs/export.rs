@@ -1,0 +1,222 @@
+//! Exporters: Chrome trace-event JSON, Prometheus text exposition, and
+//! the bridge that turns measured histograms into `BENCH_*.json`
+//! records.
+//!
+//! All three are deterministic given their inputs: the trace exporter
+//! works off the sorted [`TraceDump`], object keys come out of the
+//! in-tree JSON writer's `BTreeMap` (sorted), and the exposition sorts
+//! by metric name — so a run with an injected clock pins the exported
+//! bytes exactly (`rust/tests/obs.rs`).
+
+use anyhow::{Context, Result};
+
+use crate::obs::metrics::{Histogram, MetricsSnapshot};
+use crate::obs::trace::{Phase, TraceDump};
+use crate::util::bench::JsonSink;
+use crate::util::json::{Json, ObjBuilder};
+
+/// Serialize a drained trace as Chrome trace-event JSON (the "JSON
+/// array format" with a `traceEvents` wrapper), loadable in Perfetto
+/// (ui.perfetto.dev) or `chrome://tracing`. Complete spans use
+/// `"ph":"X"` with `ts`/`dur` in microseconds; markers use the
+/// thread-scoped instant `"ph":"i"`.
+pub fn chrome_trace_json(dump: &TraceDump) -> String {
+    let events: Vec<Json> = dump
+        .events
+        .iter()
+        .map(|e| {
+            let mut b = ObjBuilder::new()
+                .str("cat", e.cat)
+                .str("name", e.name)
+                .num("pid", 1.0)
+                .num("tid", e.tid as f64)
+                .num("ts", e.ts_us as f64);
+            b = match e.ph {
+                Phase::Complete => b.str("ph", "X").num("dur", e.dur_us as f64),
+                Phase::Instant => b.str("ph", "i").str("s", "t"),
+            };
+            b.build()
+        })
+        .collect();
+    ObjBuilder::new()
+        .val("traceEvents", Json::Arr(events))
+        .num("droppedEvents", dump.dropped as f64)
+        .build()
+        .to_string()
+        + "\n"
+}
+
+/// `smmf_server_pushes_total` from `server.pushes_total`.
+fn prom_name(name: &str) -> String {
+    let mut out = String::with_capacity(name.len() + 5);
+    out.push_str("smmf_");
+    for c in name.chars() {
+        out.push(if c == '.' || c == '-' { '_' } else { c });
+    }
+    out
+}
+
+/// Prometheus floats: integers print bare (`3`, not `3.0`), matching
+/// the in-tree JSON writer's rule so the two artifacts agree.
+fn prom_num(v: f64) -> String {
+    if v.fract() == 0.0 && v.abs() < 9e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v}")
+    }
+}
+
+/// Render a registry snapshot as Prometheus text exposition (one
+/// `# TYPE` line per family, sorted by name; histograms export
+/// summary-style `quantile` series plus `_sum`/`_count`).
+pub fn prometheus_text(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    for (name, v) in &snap.counters {
+        let n = prom_name(name);
+        out.push_str(&format!("# TYPE {n} counter\n{n} {v}\n"));
+    }
+    for (name, v) in &snap.gauges {
+        let n = prom_name(name);
+        out.push_str(&format!("# TYPE {n} gauge\n{n} {v}\n"));
+    }
+    for (name, h) in &snap.histograms {
+        let n = prom_name(name);
+        out.push_str(&format!("# TYPE {n} summary\n"));
+        if h.count() > 0 {
+            for q in [0.5, 0.99] {
+                out.push_str(&format!(
+                    "{n}{{quantile=\"{q}\"}} {}\n",
+                    prom_num(h.quantile(q))
+                ));
+            }
+        }
+        out.push_str(&format!("{n}_sum {}\n", prom_num(h.sum())));
+        out.push_str(&format!("{n}_count {}\n", h.count()));
+    }
+    out
+}
+
+/// One measured bench record for histogram `name`.
+fn hist_record(name: &str, h: &Histogram) -> Json {
+    ObjBuilder::new()
+        .str("name", &format!("obs/{name}"))
+        .num("count", h.count() as f64)
+        .num("mean_ms", h.mean())
+        .num("p50_ms", h.quantile(0.5))
+        .num("p99_ms", h.quantile(0.99))
+        .build()
+}
+
+/// Resolve a repo-root bench file from inside `rust/` or at the root —
+/// the same layout probe `repro loadgen` uses for its default
+/// `--bench-json`.
+fn bench_path(file: &str) -> String {
+    if std::path::Path::new("docs").is_dir() || !std::path::Path::new("../docs").is_dir() {
+        file.to_string()
+    } else {
+        format!("../{file}")
+    }
+}
+
+/// Bridge the measured histograms into the tracked bench reports:
+/// `optim.*` histograms become `obs/…` records in
+/// `BENCH_optimizer_step.json` (path overridable with
+/// `SMMF_BENCH_JSON`), `server.*` histograms in `BENCH_server.json`
+/// (`SMMF_SERVER_BENCH_JSON`) — merged update-in-place by
+/// [`JsonSink::write`], so the timing records land next to the
+/// loadgen/bench rows without disturbing them. Histograms with no
+/// observations are skipped.
+pub fn write_bench_records(snap: &MetricsSnapshot) -> Result<()> {
+    let optim_path = std::env::var("SMMF_BENCH_JSON")
+        .ok()
+        .filter(|p| !p.is_empty())
+        .unwrap_or_else(|| bench_path("BENCH_optimizer_step.json"));
+    let server_path = std::env::var("SMMF_SERVER_BENCH_JSON")
+        .ok()
+        .filter(|p| !p.is_empty())
+        .unwrap_or_else(|| bench_path("BENCH_server.json"));
+    let mut optim = JsonSink::new("optimizer_step", &optim_path);
+    let mut server = JsonSink::new("server_loadgen", &server_path);
+    for (name, h) in &snap.histograms {
+        if h.count() == 0 {
+            continue;
+        }
+        if name.starts_with("optim.") {
+            optim.push(hist_record(name, h));
+        } else if name.starts_with("server.") {
+            server.push(hist_record(name, h));
+        }
+    }
+    for sink in [&optim, &server] {
+        if !sink.is_empty() {
+            sink.write()
+                .with_context(|| format!("writing bench records to {}", sink.path().display()))?;
+            println!(
+                "[obs] merged {} measured histogram record(s) into {}",
+                sink.len(),
+                sink.path().display()
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::metrics::Registry;
+    use crate::obs::trace::{Clock, Recorder};
+    use std::sync::atomic::{AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    fn counter_clock() -> Clock {
+        let t = AtomicU64::new(0);
+        Arc::new(move || t.fetch_add(5, Ordering::Relaxed))
+    }
+
+    #[test]
+    fn chrome_trace_bytes_are_deterministic_with_injected_clock() {
+        let rec = Arc::new(Recorder::with_clock(counter_clock()));
+        {
+            let _outer = rec.span("optim", "optim.step");
+            rec.mark("server", "lane.submit");
+        }
+        let json = chrome_trace_json(&rec.drain());
+        assert_eq!(
+            json,
+            concat!(
+                r#"{"droppedEvents":0,"traceEvents":["#,
+                r#"{"cat":"optim","dur":10,"name":"optim.step","ph":"X","pid":1,"tid":1,"ts":0},"#,
+                r#"{"cat":"server","name":"lane.submit","ph":"i","pid":1,"s":"t","tid":1,"ts":5}"#,
+                "]}\n"
+            )
+        );
+        // Parseable by the in-tree reader too.
+        let parsed = Json::parse(&json).unwrap();
+        assert_eq!(parsed.get("traceEvents").and_then(Json::as_arr).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn prometheus_text_is_sorted_and_typed() {
+        let r = Registry::new();
+        r.counter("server.pushes_total").store(42, Ordering::Relaxed);
+        r.gauge("server.epoch").store(3, Ordering::Relaxed);
+        let h = r.histogram("server.commit_ms");
+        h.observe(0.5);
+        h.observe(0.5);
+        let text = prometheus_text(&r.snapshot());
+        assert!(text.contains("# TYPE smmf_server_pushes_total counter\nsmmf_server_pushes_total 42\n"));
+        assert!(text.contains("# TYPE smmf_server_epoch gauge\nsmmf_server_epoch 3\n"));
+        assert!(text.contains("# TYPE smmf_server_commit_ms summary\n"));
+        assert!(text.contains("smmf_server_commit_ms_count 2\n"));
+        assert!(text.contains("smmf_server_commit_ms_sum 1\n"));
+        assert!(text.contains("smmf_server_commit_ms{quantile=\"0.5\"}"));
+        // An empty histogram exports no quantile series (NaN is not
+        // valid exposition), just _sum/_count.
+        let r2 = Registry::new();
+        r2.histogram("optim.step_ms");
+        let t2 = prometheus_text(&r2.snapshot());
+        assert!(t2.contains("smmf_optim_step_ms_count 0\n"));
+        assert!(!t2.contains("quantile"));
+    }
+}

@@ -1,0 +1,338 @@
+//! The metrics registry: named counters, gauges and fixed-bucket
+//! histograms, plus the exact sorted-sample percentile/mean helpers.
+//!
+//! Two usage styles, both alloc-free after setup:
+//!
+//! - **Get-or-create** ([`Registry::counter`] / [`Registry::gauge`] /
+//!   [`Registry::histogram`]): callers cache the returned `Arc` and
+//!   bump it directly. One registry lookup per site, ever.
+//! - **Publish** ([`Registry::publish_counter`], …): a subsystem that
+//!   already owns its atomics (the server's `ServerMetrics`, whose
+//!   counters also back the wire `StatsReply`) registers those same
+//!   handles under canonical names, replacing any previous handle.
+//!   The wire reply and the exposition then read the *same* atomic —
+//!   they cannot drift. Replace-semantics also means a process that
+//!   starts two servers (loadgen's healthy-baseline pass) exports the
+//!   most recently published server's values while each server's wire
+//!   stats stay its own.
+//!
+//! [`Histogram`] is fixed-bucket (log-spaced bounds chosen at
+//! construction), so `observe` is a binary search plus two relaxed
+//! atomic adds — no allocation, no lock, safe from shard threads.
+//! Quantiles come from the bucket counts with linear interpolation
+//! inside the winning bucket: cheap, deterministic, and accurate to
+//! bucket resolution (~2× spacing here — plenty for a p50/p99 digest;
+//! the bench records keep the exact sorted-sample [`percentile`]).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Exact percentile over an **ascending-sorted** slice, nearest-rank
+/// with round-half-up: `q` in [0, 1]; returns NaN for an empty slice.
+/// This is the exact rank rule `run_loadgen` has always used for the
+/// bench records (p50 of 1..=100 is 51), kept here so every caller
+/// shares one definition.
+pub fn percentile(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return f64::NAN;
+    }
+    sorted[((sorted.len() - 1) as f64 * q).round() as usize]
+}
+
+/// Arithmetic mean; NaN for an empty slice.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Default histogram bounds: log-spaced (×2) from 1 µs to ~17 s,
+/// in milliseconds. 25 buckets + one overflow bucket.
+pub fn default_bounds_ms() -> Vec<f64> {
+    (0..25).map(|k| 0.001 * (1u64 << k) as f64).collect()
+}
+
+/// A fixed-bucket histogram. Bounds are upper edges (a value lands in
+/// the first bucket whose bound is `>= v`); values past the last bound
+/// land in the overflow bucket, which quantile extraction reports at
+/// the last finite bound.
+pub struct Histogram {
+    bounds: Vec<f64>,
+    /// bounds.len() + 1 slots; the last is the overflow bucket.
+    counts: Vec<AtomicU64>,
+    count: AtomicU64,
+    /// f64 bits of the running sum, advanced by compare-exchange.
+    sum_bits: AtomicU64,
+}
+
+impl Histogram {
+    /// Histogram over the default millisecond bounds.
+    pub fn new_ms() -> Histogram {
+        Self::with_bounds(default_bounds_ms())
+    }
+
+    /// Histogram over caller-chosen ascending upper edges.
+    pub fn with_bounds(bounds: Vec<f64>) -> Histogram {
+        let n = bounds.len() + 1;
+        Histogram {
+            bounds,
+            counts: (0..n).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_bits: AtomicU64::new(0f64.to_bits()),
+        }
+    }
+
+    /// Record one value. Lock-free and alloc-free.
+    pub fn observe(&self, v: f64) {
+        let idx = self.bounds.partition_point(|b| *b < v);
+        self.counts[idx].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        let mut cur = self.sum_bits.load(Ordering::Relaxed);
+        loop {
+            let next = (f64::from_bits(cur) + v).to_bits();
+            match self.sum_bits.compare_exchange_weak(
+                cur,
+                next,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => break,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> f64 {
+        f64::from_bits(self.sum_bits.load(Ordering::Relaxed))
+    }
+
+    /// Mean of all observed values; NaN when empty.
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            return f64::NAN;
+        }
+        self.sum() / n as f64
+    }
+
+    /// Quantile `q` in [0, 1] from the bucket counts, linearly
+    /// interpolated between the winning bucket's edges; NaN when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        let total = self.count();
+        if total == 0 {
+            return f64::NAN;
+        }
+        let rank = (q.clamp(0.0, 1.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            let c = c.load(Ordering::Relaxed);
+            if c == 0 {
+                continue;
+            }
+            if seen + c >= rank {
+                let hi = if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    // Overflow bucket: report the last finite edge.
+                    return *self.bounds.last().unwrap_or(&f64::NAN);
+                };
+                let lo = if i == 0 { 0.0 } else { self.bounds[i - 1] };
+                let frac = (rank - seen) as f64 / c as f64;
+                return lo + (hi - lo) * frac;
+            }
+            seen += c;
+        }
+        *self.bounds.last().unwrap_or(&f64::NAN)
+    }
+
+    /// Bucket `(upper_edge, count)` pairs, overflow last with an
+    /// infinite edge — the exposition's `le` series.
+    pub fn buckets(&self) -> Vec<(f64, u64)> {
+        self.counts
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let edge = self.bounds.get(i).copied().unwrap_or(f64::INFINITY);
+                (edge, c.load(Ordering::Relaxed))
+            })
+            .collect()
+    }
+}
+
+/// A point-in-time copy of the registry, for the exporters.
+pub struct MetricsSnapshot {
+    pub counters: Vec<(String, u64)>,
+    pub gauges: Vec<(String, u64)>,
+    /// Live handles — histograms are cheap to read at export time.
+    pub histograms: Vec<(String, Arc<Histogram>)>,
+}
+
+/// Named metrics, `.`-separated names (`server.pushes_total`). The
+/// exposition replaces `.` with `_` and prefixes `smmf_`.
+#[derive(Default)]
+pub struct Registry {
+    counters: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    gauges: Mutex<BTreeMap<String, Arc<AtomicU64>>>,
+    histograms: Mutex<BTreeMap<String, Arc<Histogram>>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create a counter. Cache the handle; don't look up per hit.
+    pub fn counter(&self, name: &str) -> Arc<AtomicU64> {
+        Arc::clone(
+            self.counters
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(AtomicU64::new(0))),
+        )
+    }
+
+    /// Get-or-create a gauge (a settable u64).
+    pub fn gauge(&self, name: &str) -> Arc<AtomicU64> {
+        Arc::clone(
+            self.gauges
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(AtomicU64::new(0))),
+        )
+    }
+
+    /// Get-or-create a histogram over the default ms bounds.
+    pub fn histogram(&self, name: &str) -> Arc<Histogram> {
+        Arc::clone(
+            self.histograms
+                .lock()
+                .unwrap()
+                .entry(name.to_string())
+                .or_insert_with(|| Arc::new(Histogram::new_ms())),
+        )
+    }
+
+    /// Register an externally-owned counter handle under `name`,
+    /// replacing any previous one (see the module docs on why).
+    pub fn publish_counter(&self, name: &str, handle: Arc<AtomicU64>) {
+        self.counters.lock().unwrap().insert(name.to_string(), handle);
+    }
+
+    /// Register an externally-owned gauge handle under `name`.
+    pub fn publish_gauge(&self, name: &str, handle: Arc<AtomicU64>) {
+        self.gauges.lock().unwrap().insert(name.to_string(), handle);
+    }
+
+    /// Register an externally-owned histogram under `name`.
+    pub fn publish_histogram(&self, name: &str, handle: Arc<Histogram>) {
+        self.histograms.lock().unwrap().insert(name.to_string(), handle);
+    }
+
+    /// Current value of a counter or gauge, if registered — the CLI
+    /// digest lines read lane counters through this.
+    pub fn value(&self, name: &str) -> Option<u64> {
+        if let Some(c) = self.counters.lock().unwrap().get(name) {
+            return Some(c.load(Ordering::Relaxed));
+        }
+        self.gauges.lock().unwrap().get(name).map(|g| g.load(Ordering::Relaxed))
+    }
+
+    /// Sorted point-in-time copy for the exporters.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.load(Ordering::Relaxed)))
+            .collect();
+        let histograms = self
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), Arc::clone(v)))
+            .collect();
+        MetricsSnapshot { counters, gauges, histograms }
+    }
+}
+
+static GLOBAL: OnceLock<Registry> = OnceLock::new();
+
+/// The process-global registry.
+pub fn global() -> &'static Registry {
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_picks_expected_ranks() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 0.5), 51.0);
+        assert_eq!(percentile(&xs, 0.99), 99.0);
+        assert_eq!(percentile(&xs, 1.0), 100.0);
+        assert!(percentile(&[], 0.5).is_nan());
+    }
+
+    #[test]
+    fn mean_matches_hand_math() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0, 6.0]), 3.0);
+        assert!(mean(&[]).is_nan());
+    }
+
+    #[test]
+    fn histogram_counts_sum_and_quantiles() {
+        let h = Histogram::with_bounds(vec![1.0, 2.0, 4.0, 8.0]);
+        for v in [0.5, 1.5, 1.5, 3.0, 7.0, 100.0] {
+            h.observe(v);
+        }
+        assert_eq!(h.count(), 6);
+        assert!((h.sum() - 113.5).abs() < 1e-9);
+        assert!((h.mean() - 113.5 / 6.0).abs() < 1e-9);
+        // Buckets: le=1 -> 1, le=2 -> 2, le=4 -> 1, le=8 -> 1, +inf -> 1.
+        let b = h.buckets();
+        assert_eq!(b.len(), 5);
+        assert_eq!(b.iter().map(|(_, c)| *c).collect::<Vec<_>>(), vec![1, 2, 1, 1, 1]);
+        // p50: rank 3 of 6 lands in the (1, 2] bucket at its far edge.
+        assert_eq!(h.quantile(0.5), 2.0);
+        // p99: rank 6 lands in the overflow bucket -> last finite edge.
+        assert_eq!(h.quantile(0.99), 8.0);
+        assert!(Histogram::new_ms().quantile(0.5).is_nan());
+    }
+
+    #[test]
+    fn registry_handles_are_shared_and_publish_replaces() {
+        let r = Registry::new();
+        let c = r.counter("x.hits");
+        c.fetch_add(3, Ordering::Relaxed);
+        assert_eq!(r.value("x.hits"), Some(3));
+        // Same name -> same handle.
+        r.counter("x.hits").fetch_add(1, Ordering::Relaxed);
+        assert_eq!(c.load(Ordering::Relaxed), 4);
+        // Publish replaces the handle; the exposition follows the new one.
+        let owned = Arc::new(AtomicU64::new(70));
+        r.publish_counter("x.hits", Arc::clone(&owned));
+        assert_eq!(r.value("x.hits"), Some(70));
+        let snap = r.snapshot();
+        assert_eq!(snap.counters, vec![("x.hits".to_string(), 70)]);
+    }
+}

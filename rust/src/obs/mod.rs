@@ -1,0 +1,182 @@
+//! Observability: a flight-recorder tracer, a metrics registry, and
+//! exporters — std-only, and provably non-perturbing.
+//!
+//! Three pieces (see `docs/OBSERVABILITY.md` for the user guide):
+//!
+//! - [`trace`] — a lock-light per-thread **flight recorder**: each
+//!   thread owns a fixed-capacity ring buffer of span events (oldest
+//!   overwritten on wrap, with overflow accounting), stamped by a
+//!   monotonic microsecond clock injected at recorder construction so
+//!   tests can pin byte-deterministic output.
+//! - [`metrics`] — a **registry** of named counters, gauges and
+//!   fixed-bucket histograms (p50/p99 extraction), plus the exact
+//!   sorted-sample percentile/mean helpers the loadgen bench records
+//!   use.
+//! - [`export`] — Chrome trace-event JSON (loadable in Perfetto /
+//!   `chrome://tracing`), Prometheus-style text exposition, and the
+//!   bridge that turns measured histograms into `BENCH_*.json` records.
+//!
+//! The whole subsystem is gated by two process-wide switches, set once
+//! at startup from the `[obs]` config section and the `--trace` /
+//! `--metrics` CLI flags. When a switch is off the instrumented hot
+//! paths pay exactly one relaxed atomic load and a predictable branch —
+//! no allocation, no lock, no clock read. When a switch is on, the
+//! instrumentation only ever *observes* (timestamps, byte counts); it
+//! never touches optimizer or wire data, which is why every bit-identity
+//! pin (thread sweep, shard × client e2e, commit-log replay) must and
+//! does hold with tracing enabled — `rust/tests/obs.rs` and the traced
+//! pin in `rust/tests/server_e2e.rs` enforce it.
+
+pub mod export;
+pub mod metrics;
+pub mod trace;
+
+use std::sync::atomic::{AtomicBool, Ordering};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::cli::Args;
+use crate::util::toml::TomlDoc;
+
+/// Process-wide tracing switch ([`trace::span`] is a no-op when clear).
+static TRACE_ON: AtomicBool = AtomicBool::new(false);
+/// Process-wide metrics switch (histogram timing sites skip the clock
+/// read when clear; plain counters that back wire replies stay live).
+static METRICS_ON: AtomicBool = AtomicBool::new(false);
+
+/// Is span recording on? One relaxed load — safe to call per task.
+#[inline]
+pub fn trace_enabled() -> bool {
+    TRACE_ON.load(Ordering::Relaxed)
+}
+
+/// Is histogram/exposition collection on? One relaxed load.
+#[inline]
+pub fn metrics_enabled() -> bool {
+    METRICS_ON.load(Ordering::Relaxed)
+}
+
+/// Flip the tracing switch directly (tests and the `repro trace`
+/// wrapper; everything else goes through [`init`]).
+pub fn set_trace_enabled(on: bool) {
+    TRACE_ON.store(on, Ordering::Relaxed);
+}
+
+/// Flip the metrics switch directly (tests; everything else goes
+/// through [`init`]).
+pub fn set_metrics_enabled(on: bool) {
+    METRICS_ON.store(on, Ordering::Relaxed);
+}
+
+/// Resolved observability configuration: the `[obs]` config section
+/// layered under the CLI flags, exactly like `ServeOptions`.
+#[derive(Clone, Debug)]
+pub struct ObsConfig {
+    /// Record spans and write Chrome trace JSON on exit.
+    pub trace: bool,
+    /// Collect histograms; write the Prometheus text exposition and the
+    /// measured `BENCH_*.json` records on exit.
+    pub metrics: bool,
+    /// Where the Chrome trace JSON goes (`--trace-out`).
+    pub trace_path: String,
+    /// Where the Prometheus text exposition goes (`--metrics-out`).
+    pub metrics_path: String,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            trace: false,
+            metrics: false,
+            trace_path: "trace.json".to_string(),
+            metrics_path: "metrics.prom".to_string(),
+        }
+    }
+}
+
+impl ObsConfig {
+    /// Defaults -> `[obs]` section of `--config` (if any) -> CLI flags.
+    /// `--trace` implies `--metrics` (a trace run should also leave the
+    /// measured histograms behind).
+    pub fn load(args: &Args) -> Result<ObsConfig> {
+        let mut cfg = ObsConfig::default();
+        if let Some(path) = args.opt("config") {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading config {path}"))?;
+            let doc = TomlDoc::parse(&text).map_err(|e| anyhow!("{path:?}: {e}"))?;
+            cfg.apply_toml(&doc);
+        }
+        cfg.apply_args(args);
+        Ok(cfg)
+    }
+
+    fn apply_toml(&mut self, doc: &TomlDoc) {
+        self.trace = doc.bool_or("obs.trace", self.trace);
+        self.metrics = doc.bool_or("obs.metrics", self.metrics);
+        self.trace_path = doc.str_or("obs.trace_path", &self.trace_path).to_string();
+        self.metrics_path = doc.str_or("obs.metrics_path", &self.metrics_path).to_string();
+    }
+
+    fn apply_args(&mut self, args: &Args) {
+        if args.has_flag("trace") {
+            self.trace = true;
+        }
+        if args.has_flag("metrics") {
+            self.metrics = true;
+        }
+        if let Some(p) = args.opt("trace-out") {
+            self.trace_path = p.to_string();
+        }
+        if let Some(p) = args.opt("metrics-out") {
+            self.metrics_path = p.to_string();
+        }
+        if self.trace {
+            // A trace run without the registry would leave the bench
+            // bridge empty; tracing implies metrics.
+            self.metrics = true;
+        }
+    }
+}
+
+/// Arm the process-wide switches from a resolved config. Call once,
+/// before any instrumented work runs.
+pub fn init(cfg: &ObsConfig) {
+    set_trace_enabled(cfg.trace);
+    set_metrics_enabled(cfg.metrics);
+}
+
+/// Drain and export everything the run recorded: the Chrome trace JSON
+/// (when tracing), the Prometheus text exposition, and the measured
+/// histogram records bridged into `BENCH_optimizer_step.json` /
+/// `BENCH_server.json` (when metrics). A no-op for untraced, unmetered
+/// runs. Prints one line per artifact written.
+pub fn finish(cfg: &ObsConfig) -> Result<()> {
+    if cfg.trace {
+        let dump = trace::global().drain();
+        let json = export::chrome_trace_json(&dump);
+        std::fs::write(&cfg.trace_path, json)
+            .with_context(|| format!("writing trace to {}", cfg.trace_path))?;
+        let dropped = if dump.dropped > 0 {
+            format!(" ({} oldest events overwritten)", dump.dropped)
+        } else {
+            String::new()
+        };
+        println!(
+            "[obs] wrote {} span events to {}{dropped} — open in Perfetto (ui.perfetto.dev)",
+            dump.events.len(),
+            cfg.trace_path
+        );
+    }
+    if cfg.metrics {
+        let snap = metrics::global().snapshot();
+        std::fs::write(&cfg.metrics_path, export::prometheus_text(&snap))
+            .with_context(|| format!("writing metrics to {}", cfg.metrics_path))?;
+        println!(
+            "[obs] wrote {} metrics to {}",
+            snap.counters.len() + snap.gauges.len() + snap.histograms.len(),
+            cfg.metrics_path
+        );
+        export::write_bench_records(&snap)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,361 @@
+//! The flight recorder: per-thread ring buffers of span events.
+//!
+//! Design goals, in order:
+//!
+//! 1. **Non-perturbing.** Recording only ever reads a clock and writes
+//!    into a preallocated per-thread ring. No instrumented code path
+//!    changes shape based on what was recorded — which is what lets the
+//!    bit-identity pins run with tracing on.
+//! 2. **Lock-light.** Each thread records into its *own* ring behind
+//!    its own mutex, reached through a thread-local handle — the lock
+//!    is uncontended on the hot path (one CAS), and threads never
+//!    serialize against each other while recording. The recorder's
+//!    shared state (the ring list) is only locked on first use per
+//!    thread and at drain time.
+//! 3. **Bounded.** Rings have fixed capacity; when full, the oldest
+//!    event is overwritten and counted in `dropped` — a flight
+//!    recorder keeps the most recent window, it never grows.
+//! 4. **Deterministic under test.** The microsecond clock is injected
+//!    at construction ([`Recorder::with_clock`]); a counter clock plus
+//!    the sorted [`Recorder::drain`] order pins the exported Chrome
+//!    trace byte-for-byte (`rust/tests/obs.rs`).
+//!
+//! Production code uses the free functions [`span`] / [`mark`], which
+//! hit the process-global recorder and cost one relaxed atomic load
+//! when tracing is off. Tests build standalone [`Recorder`]s.
+
+use std::cell::RefCell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+/// Injected monotonic clock: microseconds since some fixed origin.
+pub type Clock = Arc<dyn Fn() -> u64 + Send + Sync>;
+
+/// Event phase, mirroring the Chrome trace-event `ph` field.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// A complete span (`ph: "X"`): `ts` + `dur`.
+    Complete,
+    /// An instant marker (`ph: "i"`): a point in time, no duration.
+    Instant,
+}
+
+/// One recorded event. Names and categories are `&'static str` so
+/// recording never allocates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Event {
+    /// Span/marker name (e.g. `optim.factor_update`).
+    pub name: &'static str,
+    /// Category (e.g. `optim`, `server`, `remote`).
+    pub cat: &'static str,
+    /// Start timestamp, microseconds on the recorder's clock.
+    pub ts_us: u64,
+    /// Duration in microseconds (0 for [`Phase::Instant`]).
+    pub dur_us: u64,
+    /// Recorder-assigned thread id (registration order, from 1).
+    pub tid: u64,
+    pub ph: Phase,
+}
+
+/// Fixed-capacity event ring: overwrites the oldest event when full.
+struct Ring {
+    cap: usize,
+    buf: Vec<Event>,
+    /// Next write position (== buf.len() until the first wrap).
+    next: usize,
+    /// Events overwritten because the ring was full.
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() < self.cap {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+            self.dropped += 1;
+        }
+        self.next = (self.next + 1) % self.cap;
+    }
+
+    /// Oldest-first copy of the surviving events.
+    fn ordered(&self) -> Vec<Event> {
+        if self.buf.len() < self.cap {
+            self.buf.clone()
+        } else {
+            let mut out = Vec::with_capacity(self.cap);
+            out.extend_from_slice(&self.buf[self.next..]);
+            out.extend_from_slice(&self.buf[..self.next]);
+            out
+        }
+    }
+}
+
+/// One thread's slice of the recorder.
+pub struct ThreadRing {
+    tid: u64,
+    ring: Mutex<Ring>,
+}
+
+/// Everything [`Recorder::drain`] hands to the exporters.
+pub struct TraceDump {
+    /// All surviving events, sorted by `(ts_us, tid, name)` so the
+    /// exported bytes do not depend on thread scheduling or drain
+    /// order.
+    pub events: Vec<Event>,
+    /// Total events overwritten across all rings.
+    pub dropped: u64,
+}
+
+/// Default per-thread ring capacity (events). At ~48 bytes per event
+/// this is ~768 KiB per recording thread, and a shard thread inside a
+/// 50-step loadgen run stays well under it.
+pub const DEFAULT_RING_CAPACITY: usize = 16 * 1024;
+
+/// The flight recorder: a clock plus a list of per-thread rings.
+pub struct Recorder {
+    /// Distinguishes recorders in the thread-local cache, so a test's
+    /// standalone recorder never writes into the global one's rings.
+    id: u64,
+    clock: Clock,
+    ring_capacity: usize,
+    rings: Mutex<Vec<Arc<ThreadRing>>>,
+    next_tid: AtomicU64,
+}
+
+static NEXT_RECORDER_ID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    /// (recorder id, this thread's ring in that recorder).
+    static THREAD_RING: RefCell<Option<(u64, Arc<ThreadRing>)>> = const { RefCell::new(None) };
+}
+
+impl Recorder {
+    /// Production recorder: wall-clock microseconds since construction.
+    pub fn new() -> Recorder {
+        let origin = Instant::now();
+        Self::with_clock(Arc::new(move || origin.elapsed().as_micros() as u64))
+    }
+
+    /// Recorder with an injected clock (tests pin deterministic output
+    /// with a counter clock).
+    pub fn with_clock(clock: Clock) -> Recorder {
+        Recorder {
+            id: NEXT_RECORDER_ID.fetch_add(1, Ordering::Relaxed),
+            clock,
+            ring_capacity: DEFAULT_RING_CAPACITY,
+            rings: Mutex::new(Vec::new()),
+            next_tid: AtomicU64::new(1),
+        }
+    }
+
+    /// Override the per-thread ring capacity (wraparound tests use tiny
+    /// rings). Applies to rings registered after the call.
+    pub fn with_capacity(mut self, events: usize) -> Recorder {
+        self.ring_capacity = events.max(1);
+        self
+    }
+
+    /// Current time on the injected clock, in microseconds.
+    pub fn now_us(&self) -> u64 {
+        (self.clock)()
+    }
+
+    /// This thread's ring (registering it on first use).
+    fn thread_ring(&self) -> Arc<ThreadRing> {
+        THREAD_RING.with(|slot| {
+            let mut slot = slot.borrow_mut();
+            if let Some((id, ring)) = slot.as_ref() {
+                if *id == self.id {
+                    return Arc::clone(ring);
+                }
+            }
+            let ring = Arc::new(ThreadRing {
+                tid: self.next_tid.fetch_add(1, Ordering::Relaxed),
+                ring: Mutex::new(Ring {
+                    cap: self.ring_capacity,
+                    buf: Vec::new(),
+                    next: 0,
+                    dropped: 0,
+                }),
+            });
+            self.rings.lock().unwrap().push(Arc::clone(&ring));
+            *slot = Some((self.id, Arc::clone(&ring)));
+            ring
+        })
+    }
+
+    /// Open a span: records one [`Phase::Complete`] event when the
+    /// returned guard drops.
+    pub fn span(self: &Arc<Recorder>, cat: &'static str, name: &'static str) -> Span {
+        Span {
+            inner: Some(SpanInner {
+                rec: Arc::clone(self),
+                ring: self.thread_ring(),
+                cat,
+                name,
+                start_us: self.now_us(),
+            }),
+        }
+    }
+
+    /// Record an instant marker on the calling thread.
+    pub fn mark(&self, cat: &'static str, name: &'static str) {
+        let ring = self.thread_ring();
+        let ts_us = self.now_us();
+        ring.ring.lock().unwrap().push(Event {
+            name,
+            cat,
+            ts_us,
+            dur_us: 0,
+            tid: ring.tid,
+            ph: Phase::Instant,
+        });
+    }
+
+    /// Collect every ring's surviving events into one deterministic
+    /// ordering (see [`TraceDump::events`]). Non-destructive: rings
+    /// keep recording afterwards.
+    pub fn drain(&self) -> TraceDump {
+        let rings = self.rings.lock().unwrap();
+        let mut events = Vec::new();
+        let mut dropped = 0u64;
+        for tr in rings.iter() {
+            let g = tr.ring.lock().unwrap();
+            events.extend(g.ordered());
+            dropped += g.dropped;
+        }
+        events.sort_by(|a, b| {
+            (a.ts_us, a.tid, a.name).cmp(&(b.ts_us, b.tid, b.name))
+        });
+        TraceDump { events, dropped }
+    }
+}
+
+impl Default for Recorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// RAII span guard: records one complete event on drop. The disabled
+/// path carries `None` and drops for free.
+pub struct Span {
+    inner: Option<SpanInner>,
+}
+
+struct SpanInner {
+    rec: Arc<Recorder>,
+    ring: Arc<ThreadRing>,
+    cat: &'static str,
+    name: &'static str,
+    start_us: u64,
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if let Some(s) = self.inner.take() {
+            let end = s.rec.now_us();
+            s.ring.ring.lock().unwrap().push(Event {
+                name: s.name,
+                cat: s.cat,
+                ts_us: s.start_us,
+                dur_us: end.saturating_sub(s.start_us),
+                tid: s.ring.tid,
+                ph: Phase::Complete,
+            });
+        }
+    }
+}
+
+static GLOBAL: OnceLock<Arc<Recorder>> = OnceLock::new();
+
+/// The process-global recorder (created on first touch with the
+/// wall-clock Instant anchor).
+pub fn global() -> &'static Arc<Recorder> {
+    GLOBAL.get_or_init(|| Arc::new(Recorder::new()))
+}
+
+/// Open a span on the global recorder — a no-op guard when tracing is
+/// off (one relaxed atomic load, no allocation, no clock read).
+#[inline]
+pub fn span(cat: &'static str, name: &'static str) -> Span {
+    if !crate::obs::trace_enabled() {
+        return Span { inner: None };
+    }
+    global().span(cat, name)
+}
+
+/// Record an instant marker on the global recorder — a no-op when
+/// tracing is off.
+#[inline]
+pub fn mark(cat: &'static str, name: &'static str) {
+    if crate::obs::trace_enabled() {
+        global().mark(cat, name);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn counter_clock() -> Clock {
+        let t = AtomicU64::new(0);
+        Arc::new(move || t.fetch_add(10, Ordering::Relaxed))
+    }
+
+    #[test]
+    fn span_records_complete_event() {
+        let rec = Arc::new(Recorder::with_clock(counter_clock()));
+        {
+            let _s = rec.span("test", "outer");
+            rec.mark("test", "tick");
+        }
+        let dump = rec.drain();
+        assert_eq!(dump.dropped, 0);
+        assert_eq!(dump.events.len(), 2);
+        // The span started at t=0 (first clock read), the mark landed
+        // at t=10, the span closed at t=20.
+        assert_eq!(dump.events[0].name, "outer");
+        assert_eq!(dump.events[0].ph, Phase::Complete);
+        assert_eq!((dump.events[0].ts_us, dump.events[0].dur_us), (0, 20));
+        assert_eq!(dump.events[1].name, "tick");
+        assert_eq!(dump.events[1].ph, Phase::Instant);
+        assert_eq!(dump.events[1].ts_us, 10);
+    }
+
+    #[test]
+    fn ring_wraparound_keeps_newest_and_counts_dropped() {
+        let rec = Arc::new(Recorder::with_clock(counter_clock()).with_capacity(4));
+        for _ in 0..7 {
+            rec.mark("test", "m");
+        }
+        let dump = rec.drain();
+        assert_eq!(dump.dropped, 3);
+        assert_eq!(dump.events.len(), 4);
+        // The three oldest (ts 0, 10, 20) were overwritten.
+        let ts: Vec<u64> = dump.events.iter().map(|e| e.ts_us).collect();
+        assert_eq!(ts, vec![30, 40, 50, 60]);
+    }
+
+    #[test]
+    fn drain_is_non_destructive() {
+        let rec = Arc::new(Recorder::with_clock(counter_clock()));
+        rec.mark("test", "a");
+        assert_eq!(rec.drain().events.len(), 1);
+        rec.mark("test", "b");
+        assert_eq!(rec.drain().events.len(), 2);
+    }
+
+    #[test]
+    fn disabled_global_span_is_inert() {
+        crate::obs::set_trace_enabled(false);
+        let before = global().drain().events.len();
+        {
+            let _s = span("test", "nothing");
+            mark("test", "nothing");
+        }
+        assert_eq!(global().drain().events.len(), before);
+    }
+}

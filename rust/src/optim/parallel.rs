@@ -237,7 +237,8 @@ where
 {
     let busy = shards.iter().filter(|s| !s.tasks.is_empty()).count();
     if busy <= 1 {
-        for sh in shards.iter_mut() {
+        for sh in shards.iter_mut().filter(|s| !s.tasks.is_empty()) {
+            let _span = crate::obs::trace::span("optim", "optim.shard");
             for t in &mut sh.tasks {
                 f(&mut sh.ctx, t);
             }
@@ -250,11 +251,15 @@ where
         for sh in iter {
             let f = &f;
             scope.spawn(move || {
+                // Worker-thread side: each shard's whole task walk is
+                // one span, recorded on the worker's own ring.
+                let _span = crate::obs::trace::span("optim", "optim.shard");
                 for t in &mut sh.tasks {
                     f(&mut sh.ctx, t);
                 }
             });
         }
+        let _span = crate::obs::trace::span("optim", "optim.shard");
         for t in &mut first.tasks {
             f(&mut first.ctx, t);
         }

@@ -448,6 +448,9 @@ impl Smmf {
         {
             let mut tasks: Vec<Task<'_>> = Vec::with_capacity(plan.n_items());
             let mut scratch_iter = item_scratch.iter_mut();
+            // Square-matricization phase: carve every tensor's flat
+            // storage into the plan's row-range items.
+            let matricize = crate::obs::trace::span("optim", "optim.matricize");
             for (idx, ((param, grad), state)) in
                 params.iter_mut().zip(grads).zip(states.iter_mut()).enumerate()
             {
@@ -533,11 +536,16 @@ impl Smmf {
                 }
             }
 
+            drop(matricize);
+
             let mut shards = parallel::into_shards(plan, vec![(); plan.n_shards()], tasks);
             parallel::run_shards(&mut shards, |_, task| match task {
                 Task::Factored {
                     p, g, rows, m, r_m, r_v, c_m, c_v, sign, acc_cm, acc_cv, g_wd, lr, wd,
                 } => {
+                    // NNMF factor update + sign-plane pack + write-back,
+                    // fused over this item's rows.
+                    let _span = crate::obs::trace::span("optim", "optim.factor_update");
                     let g = effective_grad(p, g, *wd, wd_mode, *lr, g_wd);
                     fused_rows(
                         p, g, *rows, *m, r_m, c_m, sign, r_v, c_v, beta_m, beta_v, *lr, eps,
@@ -545,10 +553,12 @@ impl Smmf {
                     );
                 }
                 Task::Dense { p, g, mom, vel, g_wd, lr, wd } => {
+                    let _span = crate::obs::trace::span("optim", "optim.dense_update");
                     let g = effective_grad(p, g, *wd, wd_mode, *lr, g_wd);
                     dense_update(p, g, mom, vel, beta_m, beta_v, *lr, eps);
                 }
                 Task::Stateless { p, g, lr, wd } => {
+                    let _span = crate::obs::trace::span("optim", "optim.stateless_update");
                     group::stateless_update(p, g, *lr, *wd, wd_mode);
                 }
                 Task::Skip => {}
@@ -558,6 +568,7 @@ impl Smmf {
         // Reduce the per-item column partials in fixed (tensor, row0)
         // order — deterministic for a fixed shard plan — then fold into
         // the factors and normalize.
+        let _span = crate::obs::trace::span("optim", "optim.reduce_normalize");
         let mut item_idx = 0usize;
         for (idx, state) in states.iter_mut().enumerate() {
             let n_items = plan.items_of(idx).len();
@@ -950,6 +961,7 @@ impl Optimizer for Smmf {
     }
 
     fn step(&mut self, params: &mut [Tensor], grads: &[Tensor]) {
+        let _span = crate::obs::trace::span("optim", "optim.step");
         assert_eq!(params.len(), self.states.len());
         self.t += 1;
         let (beta_m, beta_v) = self.betas(self.t);

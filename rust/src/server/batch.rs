@@ -246,6 +246,7 @@ impl StepBatcher {
     /// callers only reach this after [`Offer::Completed`] (or a
     /// completing leave/eviction).
     pub fn take_coalesced(&mut self) -> Vec<Tensor> {
+        let _span = crate::obs::trace::span("server", "server.coalesce");
         assert_eq!(self.received, self.members.len(), "barrier incomplete");
         let scale = 1.0 / self.members.len() as f32;
         let mut out: Vec<Tensor> = self.shapes.iter().map(|s| Tensor::zeros(s)).collect();
@@ -411,6 +412,7 @@ impl AsyncAccumulator {
         if self.pending.is_empty() {
             return None;
         }
+        let _span = crate::obs::trace::span("server", "server.coalesce");
         let mut commit = std::mem::take(&mut self.pending);
         commit.sort_by_key(|(c, ..)| *c);
         self.step += 1;

@@ -475,6 +475,17 @@ impl Client {
         }
     }
 
+    /// Fetch the server's Prometheus text exposition — the same atomics
+    /// behind [`Client::stats`], rendered as `# TYPE`/sample lines by
+    /// the server's metrics registry ([`Msg::MetricsDump`], a v4
+    /// layout-preserving extension).
+    pub fn metrics_dump(&mut self) -> Result<String> {
+        match self.call_retry(Msg::MetricsDump)? {
+            Msg::MetricsText { text } => Ok(text),
+            other => bail!("MetricsDump answered with {}", other.name()),
+        }
+    }
+
     /// Stop the server.
     pub fn shutdown(&mut self) -> Result<()> {
         match self.call_retry(Msg::Shutdown)? {

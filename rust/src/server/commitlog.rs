@@ -26,7 +26,10 @@ use anyhow::{bail, Context, Result};
 use std::fs::File;
 use std::io::BufWriter;
 use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
 
+use crate::obs::{self, metrics::Histogram, trace as obs_trace};
 use crate::server::protocol::{self, Contributor, Frame, Msg, HEADER_LEN};
 
 /// FNV-1a 64 over per-tensor length-framed little-endian f32 bytes —
@@ -85,6 +88,10 @@ pub struct CommitLogWriter {
     next_step: u64,
     staleness: u64,
     seq: u64,
+    /// When set (and metrics are enabled), each append's wall time in
+    /// milliseconds lands here — the server wires in its
+    /// `server.log_append_ms` histogram.
+    append_ms: Option<Arc<Histogram>>,
 }
 
 impl CommitLogWriter {
@@ -113,7 +120,15 @@ impl CommitLogWriter {
             next_step: info.first_step,
             staleness: info.staleness,
             seq: 1,
+            append_ms: None,
         })
+    }
+
+    /// Route per-append timings into `hist` (observed only while
+    /// metrics are enabled).
+    pub fn with_append_timing(mut self, hist: Arc<Histogram>) -> CommitLogWriter {
+        self.append_ms = Some(hist);
+        self
     }
 
     /// Append one commit. Steps must arrive contiguously from the
@@ -140,8 +155,13 @@ impl CommitLogWriter {
             digest,
             grads: grads.to_vec(),
         };
+        let _span = obs_trace::span("server", "server.log_append");
+        let t0 = (self.append_ms.is_some() && obs::metrics_enabled()).then(Instant::now);
         protocol::write_frame(&mut self.w, &Frame { request_id: self.seq, msg })
             .with_context(|| format!("appending commit {step} to the log"))?;
+        if let (Some(t0), Some(h)) = (t0, &self.append_ms) {
+            h.observe(t0.elapsed().as_secs_f64() * 1e3);
+        }
         self.next_step += 1;
         self.seq += 1;
         Ok(digest)

@@ -71,7 +71,10 @@ pub const MAGIC: &[u8; 8] = b"SMMFWIRE";
 /// commit-log frames (`LogHeader`/`LogCommit`).
 /// v4: chunked tensor streaming (`PushBegin`/`ChunkHeader`/`ChunkData`/
 /// `StreamEnd`/`ParamsBegin`/`Resend`), the factored pull mode, and the
-/// split live-connection / file payload caps.
+/// split live-connection / file payload caps. The observability ops
+/// (`MetricsDump`/`MetricsText`) are a layout-preserving v4 extension:
+/// no existing frame changed shape, and a pre-extension peer that never
+/// sends the new request op never sees the new reply op.
 pub const VERSION: u32 = 4;
 /// Fixed frame header size: magic + version + request id + op + length.
 pub const HEADER_LEN: usize = 8 + 4 + 8 + 1 + 8;
@@ -115,6 +118,7 @@ pub const OP_JOIN: u8 = 6;
 pub const OP_LEAVE: u8 = 7;
 pub const OP_EPOCH_INFO: u8 = 8;
 pub const OP_RESEND: u8 = 9;
+pub const OP_METRICS_DUMP: u8 = 10;
 /// Stream-frame op codes (both directions, between a `PushBegin` /
 /// `ParamsBegin` and the closing `StreamEnd`).
 pub const OP_CHUNK_HEADER: u8 = 16;
@@ -132,6 +136,7 @@ pub const OP_ERR: u8 = 70;
 pub const OP_EPOCH_REPLY: u8 = 71;
 pub const OP_STALE_EPOCH: u8 = 72;
 pub const OP_TOO_STALE: u8 = 73;
+pub const OP_METRICS_TEXT: u8 = 74;
 /// Commit-log op codes (>= 128) live in a third disjoint range: they
 /// are only ever written to / read from the on-disk commit log, never
 /// exchanged on a live connection.
@@ -245,6 +250,11 @@ pub enum Msg {
     /// [`Msg::ChunkHeader`] + [`Msg::ChunkData`] pair, or [`Msg::Err`]
     /// if there is no cached stream or the address is out of range.
     Resend { tensor_idx: u32, seq: u32 },
+    /// Fetch the server's Prometheus-style text exposition (the same
+    /// atomics that back [`Msg::StatsReply`], plus the commit/append
+    /// latency histograms); replied with [`Msg::MetricsText`]. A v4
+    /// extension op — see `docs/OBSERVABILITY.md`.
+    MetricsDump,
     /// Addressing for one chunk of tensor `tensor_idx`: this is chunk
     /// `seq` of `total`, covering bytes `[start, start+count)` of the
     /// tensor's `tensor_len`-byte encoding. Always immediately followed
@@ -286,6 +296,10 @@ pub enum Msg {
     /// has applied only `applied` steps, short of the `required`
     /// (`min_step`) floor.
     TooStale { applied: u64, required: u64 },
+    /// Reply to [`Msg::MetricsDump`]: the exposition text, raw UTF-8 as
+    /// the whole payload (capped by [`MAX_PAYLOAD`], clipped at encode
+    /// time on a char boundary if a pathological registry exceeds it).
+    MetricsText { text: String },
     /// INTERNAL (never framed in v4): a fully reassembled gradient push,
     /// handed from the connection handler to the coordinator over the
     /// in-process request channel. The wire carries it as a
@@ -338,6 +352,7 @@ impl Msg {
             Msg::Leave { .. } => OP_LEAVE,
             Msg::EpochInfo => OP_EPOCH_INFO,
             Msg::Resend { .. } => OP_RESEND,
+            Msg::MetricsDump => OP_METRICS_DUMP,
             Msg::ChunkHeader { .. } => OP_CHUNK_HEADER,
             Msg::ChunkData { .. } => OP_CHUNK_DATA,
             Msg::StreamEnd { .. } => OP_STREAM_END,
@@ -351,6 +366,7 @@ impl Msg {
             Msg::EpochReply(_) => OP_EPOCH_REPLY,
             Msg::StaleEpoch { .. } => OP_STALE_EPOCH,
             Msg::TooStale { .. } => OP_TOO_STALE,
+            Msg::MetricsText { .. } => OP_METRICS_TEXT,
             Msg::PushGrad { .. } | Msg::Params { .. } | Msg::StateBlobs { .. } => {
                 panic!("{} is coordinator-internal and has no wire op in v4", self.name())
             }
@@ -371,6 +387,7 @@ impl Msg {
             Msg::Leave { .. } => "Leave",
             Msg::EpochInfo => "EpochInfo",
             Msg::Resend { .. } => "Resend",
+            Msg::MetricsDump => "MetricsDump",
             Msg::ChunkHeader { .. } => "ChunkHeader",
             Msg::ChunkData { .. } => "ChunkData",
             Msg::StreamEnd { .. } => "StreamEnd",
@@ -384,6 +401,7 @@ impl Msg {
             Msg::EpochReply(_) => "EpochReply",
             Msg::StaleEpoch { .. } => "StaleEpoch",
             Msg::TooStale { .. } => "TooStale",
+            Msg::MetricsText { .. } => "MetricsText",
             Msg::PushGrad { .. } => "PushGrad",
             Msg::Params { .. } => "Params",
             Msg::StateBlobs { .. } => "StateBlobs",
@@ -866,7 +884,13 @@ fn payload(msg: &Msg) -> Vec<u8> {
             w.u64(*base_step);
             w.u32(*n_tensors);
         }
-        Msg::Stats | Msg::Shutdown | Msg::Join | Msg::EpochInfo | Msg::Busy | Msg::Bye => {}
+        Msg::Stats
+        | Msg::Shutdown
+        | Msg::Join
+        | Msg::EpochInfo
+        | Msg::MetricsDump
+        | Msg::Busy
+        | Msg::Bye => {}
         Msg::PullParams { min_step, mode } => {
             w.u64(*min_step);
             w.u8(*mode);
@@ -928,6 +952,17 @@ fn payload(msg: &Msg) -> Vec<u8> {
         Msg::TooStale { applied, required } => {
             w.u64(*applied);
             w.u64(*required);
+        }
+        Msg::MetricsText { text } => {
+            // Raw UTF-8 as the whole payload (the frame length is the
+            // string length). Clipped on a char boundary to the live
+            // cap so a pathological registry cannot trip the encoder's
+            // cap assertion.
+            let mut end = (text.len() as u64).min(MAX_PAYLOAD) as usize;
+            while !text.is_char_boundary(end) {
+                end -= 1;
+            }
+            w.bytes(text[..end].as_bytes());
         }
         Msg::PushGrad { .. } | Msg::Params { .. } | Msg::StateBlobs { .. } => {
             panic!("{} is coordinator-internal and never framed in v4", msg.name())
@@ -1091,6 +1126,7 @@ pub fn decode_payload(op: u8, payload: &[u8]) -> Result<Msg> {
         OP_LEAVE => Msg::Leave { client: r.u32()? },
         OP_EPOCH_INFO => Msg::EpochInfo,
         OP_RESEND => Msg::Resend { tensor_idx: r.u32()?, seq: r.u32()? },
+        OP_METRICS_DUMP => Msg::MetricsDump,
         OP_CHUNK_HEADER => {
             let tensor_idx = r.u32()?;
             let seq = r.u32()?;
@@ -1166,6 +1202,15 @@ pub fn decode_payload(op: u8, payload: &[u8]) -> Result<Msg> {
         }
         OP_STALE_EPOCH => Msg::StaleEpoch { epoch: r.u64()? },
         OP_TOO_STALE => Msg::TooStale { applied: r.u64()?, required: r.u64()? },
+        OP_METRICS_TEXT => {
+            // The whole payload is the text; the op's MAX_PAYLOAD cap
+            // was already enforced at the header.
+            let n = r.remaining();
+            Msg::MetricsText {
+                text: String::from_utf8(r.bytes(n)?.to_vec())
+                    .context("MetricsText: not valid UTF-8")?,
+            }
+        }
         OP_LOG_HEADER => Msg::LogHeader {
             model: read_str(&mut r, "LogHeader model")?,
             optimizer: read_str(&mut r, "LogHeader optimizer")?,

@@ -84,6 +84,7 @@ use std::time::{Duration, Instant};
 
 use crate::coordinator::config::ExperimentConfig;
 use crate::models::{inventory_by_name, Inventory};
+use crate::obs::{self, metrics::Histogram, trace as obs_trace};
 use crate::optim::group::{self, Resolution, TensorPolicy};
 use crate::optim::schedule::LrSchedule;
 use crate::optim::{self, OptKind, Optimizer, StateSerde};
@@ -412,13 +413,123 @@ impl Ingest {
     }
 }
 
+/// The server's counters and latency histograms, shared atomics all the
+/// way down. These same handles back **both** the wire replies
+/// ([`Msg::StatsReply`] / [`Msg::MetricsText`]) and the process-wide
+/// exposition (each handle is published into the global
+/// [`obs::metrics`] registry at construction), so the wire numbers and
+/// the exported metrics can never drift — there is exactly one atomic
+/// per counter. A process that starts two servers (loadgen's
+/// healthy-baseline pass) re-publishes under the same names — the
+/// registry follows the newest server, while each server's own wire
+/// stats keep reading its own handles.
+#[derive(Clone)]
+pub(crate) struct ServerMetrics {
+    step: Arc<AtomicU64>,
+    shards: Arc<AtomicU64>,
+    clients: Arc<AtomicU64>,
+    pushes: Arc<AtomicU64>,
+    busy: Arc<AtomicU64>,
+    snapshots: Arc<AtomicU64>,
+    epoch: Arc<AtomicU64>,
+    evictions: Arc<AtomicU64>,
+    respawns: Arc<AtomicU64>,
+    recovery_ms: Arc<AtomicU64>,
+    staleness: Arc<AtomicU64>,
+    /// Push-stream bytes received by connection handlers (chunk frames
+    /// included) — the server-side half of the bytes/step accounting.
+    stream_rx_bytes: Arc<AtomicU64>,
+    /// Pull-stream (and resent-chunk) bytes written by handlers.
+    stream_tx_bytes: Arc<AtomicU64>,
+    /// `Resend` recoveries served from the per-connection pull cache.
+    resends: Arc<AtomicU64>,
+    /// Coalesced-commit apply latency (shard step + recovery image).
+    commit_ms: Arc<Histogram>,
+    /// Commit-log append+flush latency (the fsync-ish cost per commit).
+    log_append_ms: Arc<Histogram>,
+}
+
+impl ServerMetrics {
+    fn new() -> ServerMetrics {
+        let m = ServerMetrics {
+            step: Arc::new(AtomicU64::new(0)),
+            shards: Arc::new(AtomicU64::new(0)),
+            clients: Arc::new(AtomicU64::new(0)),
+            pushes: Arc::new(AtomicU64::new(0)),
+            busy: Arc::new(AtomicU64::new(0)),
+            snapshots: Arc::new(AtomicU64::new(0)),
+            epoch: Arc::new(AtomicU64::new(0)),
+            evictions: Arc::new(AtomicU64::new(0)),
+            respawns: Arc::new(AtomicU64::new(0)),
+            recovery_ms: Arc::new(AtomicU64::new(0)),
+            staleness: Arc::new(AtomicU64::new(0)),
+            stream_rx_bytes: Arc::new(AtomicU64::new(0)),
+            stream_tx_bytes: Arc::new(AtomicU64::new(0)),
+            resends: Arc::new(AtomicU64::new(0)),
+            commit_ms: Arc::new(Histogram::new_ms()),
+            log_append_ms: Arc::new(Histogram::new_ms()),
+        };
+        m.publish_into(obs::metrics::global());
+        m
+    }
+
+    /// Register every handle under its canonical name. Used for the
+    /// process-global registry at construction and for the throwaway
+    /// registry [`ServerMetrics::exposition`] renders from.
+    fn publish_into(&self, reg: &obs::metrics::Registry) {
+        reg.publish_gauge("server.step", Arc::clone(&self.step));
+        reg.publish_gauge("server.shards", Arc::clone(&self.shards));
+        reg.publish_gauge("server.clients", Arc::clone(&self.clients));
+        reg.publish_gauge("server.epoch", Arc::clone(&self.epoch));
+        reg.publish_gauge("server.staleness", Arc::clone(&self.staleness));
+        reg.publish_counter("server.pushes_total", Arc::clone(&self.pushes));
+        reg.publish_counter("server.busy_total", Arc::clone(&self.busy));
+        reg.publish_counter("server.snapshots_total", Arc::clone(&self.snapshots));
+        reg.publish_counter("server.evictions_total", Arc::clone(&self.evictions));
+        reg.publish_counter("server.respawns_total", Arc::clone(&self.respawns));
+        reg.publish_counter("server.recovery_ms_total", Arc::clone(&self.recovery_ms));
+        reg.publish_counter("server.stream_rx_bytes_total", Arc::clone(&self.stream_rx_bytes));
+        reg.publish_counter("server.stream_tx_bytes_total", Arc::clone(&self.stream_tx_bytes));
+        reg.publish_counter("server.resends_total", Arc::clone(&self.resends));
+        reg.publish_histogram("server.commit_ms", Arc::clone(&self.commit_ms));
+        reg.publish_histogram("server.log_append_ms", Arc::clone(&self.log_append_ms));
+    }
+
+    /// The wire [`ServerStats`], read from the same atomics the
+    /// exposition exports.
+    fn stats(&self) -> ServerStats {
+        ServerStats {
+            step: self.step.load(Ordering::Relaxed),
+            shards: self.shards.load(Ordering::Relaxed) as u32,
+            clients: self.clients.load(Ordering::Relaxed) as u32,
+            pushes: self.pushes.load(Ordering::Relaxed),
+            busy: self.busy.load(Ordering::Relaxed),
+            snapshots: self.snapshots.load(Ordering::Relaxed),
+            epoch: self.epoch.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            respawns: self.respawns.load(Ordering::Relaxed),
+            recovery_ms: self.recovery_ms.load(Ordering::Relaxed),
+            staleness: self.staleness.load(Ordering::Relaxed),
+        }
+    }
+
+    /// This server's Prometheus text exposition (the [`Msg::MetricsDump`]
+    /// reply) — rendered from its own handles via a throwaway registry,
+    /// so two servers in one process never leak into each other's dump.
+    fn exposition(&self) -> String {
+        let reg = obs::metrics::Registry::new();
+        self.publish_into(&reg);
+        obs::export::prometheus_text(&reg.snapshot())
+    }
+}
+
 /// The coordinator's owned state plus the step/epoch logic, a struct so
 /// the apply-step path is shared between its triggers: a push
 /// completing the barrier, a leave whose discarded pending push
 /// completes it, a deadline eviction, and (async mode) the post-drain
 /// commit flush.
 struct Coordinator {
-    stats: ServerStats,
+    metrics: ServerMetrics,
     params: Vec<Tensor>,
     ingest: Ingest,
     /// Async mode with `--commit-log`: every applied commit is appended
@@ -460,8 +571,8 @@ impl Coordinator {
 
     fn bump_epoch(&mut self) {
         self.epoch += 1;
-        self.stats.epoch = self.epoch;
-        self.stats.clients = self.ingest.width() as u32;
+        self.metrics.epoch.store(self.epoch, Ordering::Relaxed);
+        self.metrics.clients.store(self.ingest.width() as u64, Ordering::Relaxed);
     }
 
     /// Re-serialize the post-step state (resilient mode only). Runs
@@ -492,6 +603,8 @@ impl Coordinator {
     /// async commit path — both modes step the identical sharded
     /// machinery, which is what makes the commit log replayable.
     fn apply_coalesced(&mut self, step: u64, grads: Vec<Tensor>) -> Result<()> {
+        let _span = obs_trace::span("server", "server.commit");
+        let t0 = obs::metrics_enabled().then(Instant::now);
         let lr = self.schedule.at(self.base_lr, step);
         if self.resilient {
             let bytes = &self.recovery_bytes;
@@ -501,13 +614,19 @@ impl Coordinator {
             let rec = self.shards.step_resilient(lr, &mut self.params, grads, &mut || {
                 parse_recovery_image(bytes.as_deref(), names, config, kind)
             })?;
-            self.stats.respawns += rec.respawns;
-            self.stats.recovery_ms += rec.elapsed.as_millis() as u64;
+            self.metrics.respawns.fetch_add(rec.respawns, Ordering::Relaxed);
+            self.metrics
+                .recovery_ms
+                .fetch_add(rec.elapsed.as_millis() as u64, Ordering::Relaxed);
         } else {
             self.shards.step(lr, &mut self.params, grads)?;
         }
-        self.stats.step = step;
-        self.refresh_recovery_image()
+        self.metrics.step.store(step, Ordering::Relaxed);
+        let out = self.refresh_recovery_image();
+        if let Some(t0) = t0 {
+            self.metrics.commit_ms.observe(t0.elapsed().as_secs_f64() * 1e3);
+        }
+        out
     }
 
     /// The barrier is complete: coalesce, step the shards, acknowledge
@@ -594,7 +713,7 @@ impl Coordinator {
             return Ok(());
         }
         let evicted = batcher.evict_unpushed();
-        self.stats.evictions += evicted.len() as u64;
+        self.metrics.evictions.fetch_add(evicted.len() as u64, Ordering::Relaxed);
         self.bump_epoch();
         self.apply_pending_step()
     }
@@ -604,6 +723,7 @@ impl Coordinator {
     fn handle(&mut self, req: Request, busy: &AtomicU64) -> Result<bool> {
         match req.msg {
             Msg::PushGrad { client, epoch, step, base_step, grads } => {
+                let _span = obs_trace::span("server", "server.push");
                 if epoch != self.epoch {
                     // The membership changed since this client last
                     // looked: a typed reply, so the client refreshes and
@@ -633,12 +753,12 @@ impl Coordinator {
                                         req.reply.send(Msg::Err { msg }).ok();
                                     }
                                     Offer::Accepted => {
-                                        self.stats.pushes += 1;
+                                        self.metrics.pushes.fetch_add(1, Ordering::Relaxed);
                                         self.barrier_since.get_or_insert_with(Instant::now);
                                         self.waiters.push((client, req.reply));
                                     }
                                     Offer::Completed => {
-                                        self.stats.pushes += 1;
+                                        self.metrics.pushes.fetch_add(1, Ordering::Relaxed);
                                         self.waiters.push((client, req.reply));
                                         complete = true;
                                     }
@@ -660,7 +780,7 @@ impl Coordinator {
                                         .ok();
                                 }
                                 AsyncOffer::Accepted => {
-                                    self.stats.pushes += 1;
+                                    self.metrics.pushes.fetch_add(1, Ordering::Relaxed);
                                     self.waiters.push((client, req.reply));
                                 }
                             }
@@ -804,7 +924,7 @@ impl Coordinator {
                 };
                 match result {
                     Ok(bytes) => {
-                        self.stats.snapshots += 1;
+                        self.metrics.snapshots.fetch_add(1, Ordering::Relaxed);
                         req.reply.send(Msg::SnapshotDone { bytes }).ok();
                     }
                     Err(e) => {
@@ -813,8 +933,14 @@ impl Coordinator {
                 }
             }
             Msg::Stats => {
-                self.stats.busy = busy.load(Ordering::Relaxed);
-                req.reply.send(Msg::StatsReply(self.stats)).ok();
+                self.metrics.busy.store(busy.load(Ordering::Relaxed), Ordering::Relaxed);
+                req.reply.send(Msg::StatsReply(self.metrics.stats())).ok();
+            }
+            Msg::MetricsDump => {
+                // The observability sibling of Stats: same atomics,
+                // richer rendering (histograms included).
+                self.metrics.busy.store(busy.load(Ordering::Relaxed), Ordering::Relaxed);
+                req.reply.send(Msg::MetricsText { text: self.metrics.exposition() }).ok();
             }
             Msg::Shutdown => {
                 req.reply.send(Msg::Bye).ok();
@@ -883,11 +1009,18 @@ impl Server {
         let shutdown = Arc::new(AtomicBool::new(false));
         let kill_shard = Arc::new(AtomicUsize::new(0));
         let busy = Arc::new(AtomicU64::new(0));
+        let metrics = ServerMetrics::new();
+        metrics.shards.store(opts.shards as u64, Ordering::Relaxed);
+        metrics.clients.store(opts.clients as u64, Ordering::Relaxed);
+        metrics.step.store(first_step - 1, Ordering::Relaxed);
+        metrics.epoch.store(1, Ordering::Relaxed);
+        metrics.staleness.store(opts.staleness, Ordering::Relaxed);
         let (req_tx, req_rx) = mpsc::sync_channel::<Request>(opts.max_pending);
 
         let acceptor = {
             let shutdown = shutdown.clone();
             let busy = busy.clone();
+            let metrics = metrics.clone();
             // Handlers need the inventory shapes to size push-stream
             // reassembly up front (the trusted-length fast path).
             let shapes = Arc::new(shapes.clone());
@@ -900,7 +1033,8 @@ impl Server {
                         let req_tx = req_tx.clone();
                         let busy = busy.clone();
                         let shapes = shapes.clone();
-                        thread::spawn(move || handle_conn(stream, req_tx, busy, shapes));
+                        let metrics = metrics.clone();
+                        thread::spawn(move || handle_conn(stream, req_tx, busy, shapes, metrics));
                     }
                     // WouldBlock (idle) and transient accept errors both
                     // back off briefly; only the shutdown flag exits.
@@ -937,7 +1071,8 @@ impl Server {
                         first_step,
                     },
                 )
-                .with_context(|| format!("creating commit log {path:?}"))?,
+                .with_context(|| format!("creating commit log {path:?}"))?
+                .with_append_timing(metrics.log_append_ms.clone()),
             ),
         };
 
@@ -946,14 +1081,7 @@ impl Server {
             let busy = busy.clone();
             let kill = kill_shard.clone();
             let mut coord = Coordinator {
-                stats: ServerStats {
-                    shards: opts.shards as u32,
-                    clients: opts.clients as u32,
-                    step: first_step - 1,
-                    epoch: 1,
-                    staleness: opts.staleness,
-                    ..ServerStats::default()
-                },
+                metrics: metrics.clone(),
                 params,
                 ingest,
                 log,
@@ -1020,11 +1148,11 @@ impl Server {
                     tx.send(Msg::Err { msg: "server shutting down".into() }).ok();
                 }
                 shutdown.store(true, Ordering::SeqCst);
-                let Coordinator { shards, mut stats, .. } = coord;
+                let Coordinator { shards, metrics, .. } = coord;
                 shards.stop();
                 run?;
-                stats.busy = busy.load(Ordering::Relaxed);
-                Ok(stats)
+                metrics.busy.store(busy.load(Ordering::Relaxed), Ordering::Relaxed);
+                Ok(metrics.stats())
             })
         };
 
@@ -1178,6 +1306,7 @@ fn read_push_stream(
     id: u64,
     n_tensors: u32,
     shapes: &[Vec<usize>],
+    rx_bytes: &AtomicU64,
 ) -> PushStream {
     let mut err: Option<String> = None;
     let mut asm = if n_tensors as usize == shapes.len() {
@@ -1192,8 +1321,11 @@ fn read_push_stream(
         None
     };
     loop {
-        let frame = match protocol::read_frame(reader) {
-            Ok(f) => f,
+        let frame = match protocol::read_frame_counted(reader) {
+            Ok((f, n)) => {
+                rx_bytes.fetch_add(n, Ordering::Relaxed);
+                f
+            }
             Err(_) => return PushStream::Dead(None),
         };
         if frame.request_id != id {
@@ -1237,6 +1369,26 @@ fn read_push_stream(
     }
 }
 
+/// Forwarding writer that counts every byte it passes through — the
+/// tx half of the handler's stream-byte accounting (pull streams and
+/// resent chunks).
+struct CountWriter<'a, W: std::io::Write> {
+    inner: &'a mut W,
+    counter: &'a AtomicU64,
+}
+
+impl<W: std::io::Write> std::io::Write for CountWriter<'_, W> {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        let n = self.inner.write(buf)?;
+        self.counter.fetch_add(n as u64, Ordering::Relaxed);
+        Ok(n)
+    }
+
+    fn flush(&mut self) -> std::io::Result<()> {
+        self.inner.flush()
+    }
+}
+
 /// Forward one assembled request to the coordinator and wait for its
 /// reply. A full queue is answered with `Busy` right here — the
 /// explicit backpressure path.
@@ -1264,6 +1416,7 @@ fn handle_conn(
     req_tx: SyncSender<Request>,
     busy: Arc<AtomicU64>,
     shapes: Arc<Vec<Vec<usize>>>,
+    metrics: ServerMetrics,
 ) {
     stream.set_nodelay(true).ok();
     let Ok(read_half) = stream.try_clone() else { return };
@@ -1273,11 +1426,20 @@ fn handle_conn(
     loop {
         // Read errors (EOF on client disconnect, or a malformed frame)
         // end the connection; the protocol has no resync point.
-        let Ok(frame) = protocol::read_frame(&mut reader) else { return };
+        let Ok((frame, frame_bytes)) = protocol::read_frame_counted(&mut reader) else {
+            return;
+        };
         let id = frame.request_id;
         match frame.msg {
             Msg::PushBegin { client, epoch, step, base_step, n_tensors } => {
-                let reply = match read_push_stream(&mut reader, id, n_tensors, &shapes) {
+                metrics.stream_rx_bytes.fetch_add(frame_bytes, Ordering::Relaxed);
+                let reply = match read_push_stream(
+                    &mut reader,
+                    id,
+                    n_tensors,
+                    &shapes,
+                    &metrics.stream_rx_bytes,
+                ) {
                     PushStream::Grads(grads) => forward(
                         &req_tx,
                         &busy,
@@ -1327,7 +1489,15 @@ fn handle_conn(
                         continue;
                     }
                 };
-                let ok = cache.write_stream(&mut writer, id).is_ok();
+                let ok = cache
+                    .write_stream(
+                        &mut CountWriter {
+                            inner: &mut writer,
+                            counter: &metrics.stream_tx_bytes,
+                        },
+                        id,
+                    )
+                    .is_ok();
                 last_pull = Some(cache);
                 if !ok {
                     return;
@@ -1339,13 +1509,22 @@ fn handle_conn(
                 // assembler addresses chunks by (tensor, seq), not id.
                 let outcome = match &last_pull {
                     None => Some("no pull reply on this connection to resend from".into()),
-                    Some(cache) => match cache.write_chunk(&mut writer, id, tensor_idx, seq) {
-                        Some(Ok(())) => None,
-                        Some(Err(_)) => return,
-                        None => Some(format!(
-                            "resend ({tensor_idx}, {seq}) is outside the last pull reply"
-                        )),
-                    },
+                    Some(cache) => {
+                        let mut counted = CountWriter {
+                            inner: &mut writer,
+                            counter: &metrics.stream_tx_bytes,
+                        };
+                        match cache.write_chunk(&mut counted, id, tensor_idx, seq) {
+                            Some(Ok(())) => {
+                                metrics.resends.fetch_add(1, Ordering::Relaxed);
+                                None
+                            }
+                            Some(Err(_)) => return,
+                            None => Some(format!(
+                                "resend ({tensor_idx}, {seq}) is outside the last pull reply"
+                            )),
+                        }
+                    }
                 };
                 if let Some(msg) = outcome {
                     if protocol::write_frame(
@@ -1360,6 +1539,7 @@ fn handle_conn(
             }
             msg @ (Msg::Snapshot { .. }
             | Msg::Stats
+            | Msg::MetricsDump
             | Msg::Shutdown
             | Msg::Join
             | Msg::Leave { .. }
@@ -1672,13 +1852,6 @@ pub struct LoadgenReport {
     pub bytes_per_step: f64,
 }
 
-fn percentile(sorted_ms: &[f64], q: f64) -> f64 {
-    if sorted_ms.is_empty() {
-        return f64::NAN;
-    }
-    sorted_ms[((sorted_ms.len() - 1) as f64 * q).round() as usize]
-}
-
 /// One client's share of a loadgen run.
 struct ClientRun {
     latencies_ms: Vec<f64>,
@@ -1967,7 +2140,6 @@ pub fn run_loadgen(
         }
     }
     all_ms.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
-    let mean = all_ms.iter().sum::<f64>() / all_ms.len().max(1) as f64;
     let applied_steps = if staleness == 0 {
         // The barrier applies exactly `steps` optimizer steps.
         opts.steps
@@ -1987,9 +2159,9 @@ pub fn run_loadgen(
         elapsed_s,
         staleness,
         steps_per_s,
-        push_p50_ms: percentile(&all_ms, 0.50),
-        push_p99_ms: percentile(&all_ms, 0.99),
-        push_mean_ms: mean,
+        push_p50_ms: obs::metrics::percentile(&all_ms, 0.50),
+        push_p99_ms: obs::metrics::percentile(&all_ms, 0.99),
+        push_mean_ms: obs::metrics::mean(&all_ms),
         final_loss,
         bytes_per_step: total_bytes as f64 / applied_steps.max(1) as f64,
     })
@@ -2065,13 +2237,4 @@ mod tests {
         assert!(format!("{e:#}").contains("non-negative"), "{e:#}");
     }
 
-    #[test]
-    fn percentile_picks_expected_ranks() {
-        let v: Vec<f64> = (1..=100).map(|i| i as f64).collect();
-        assert_eq!(percentile(&v, 0.50), 51.0);
-        assert_eq!(percentile(&v, 0.99), 99.0);
-        assert_eq!(percentile(&v, 0.0), 1.0);
-        assert_eq!(percentile(&v, 1.0), 100.0);
-        assert!(percentile(&[], 0.5).is_nan());
-    }
 }

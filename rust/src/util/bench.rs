@@ -185,13 +185,35 @@ impl JsonSink {
         &self.path
     }
 
-    /// Serialize and write the report.
+    /// Serialize and write the report, merging into an existing file
+    /// update-in-place: a new record whose `"name"` matches an existing
+    /// record replaces it; everything else (unmatched records, and
+    /// extra top-level keys like the seed files' `"note"`) is kept.
+    /// Repeated smoke runs therefore refresh their rows instead of
+    /// appending duplicates, and different smokes writing to the same
+    /// file never erase each other's records.
     pub fn write(&self) -> std::io::Result<()> {
-        let doc = ObjBuilder::new()
-            .str("benchmark", &self.benchmark)
-            .val("records", Json::Arr(self.records.clone()))
-            .build();
-        std::fs::write(&self.path, doc.to_string() + "\n")
+        let mut doc = std::fs::read_to_string(&self.path)
+            .ok()
+            .and_then(|t| Json::parse(&t).ok())
+            .and_then(|j| j.as_obj().cloned())
+            .unwrap_or_default();
+        let mut records: Vec<Json> =
+            doc.get("records").and_then(Json::as_arr).map(<[Json]>::to_vec).unwrap_or_default();
+        for rec in &self.records {
+            let key = rec.get("name").and_then(Json::as_str);
+            let slot = key.and_then(|k| {
+                records.iter_mut().find(|r| r.get("name").and_then(Json::as_str) == Some(k))
+            });
+            match slot {
+                Some(slot) => *slot = rec.clone(),
+                // No name (or a fresh one): append, preserving order.
+                None => records.push(rec.clone()),
+            }
+        }
+        doc.insert("benchmark".to_string(), Json::Str(self.benchmark.clone()));
+        doc.insert("records".to_string(), Json::Arr(records));
+        std::fs::write(&self.path, Json::Obj(doc).to_string() + "\n")
     }
 }
 
@@ -249,6 +271,41 @@ mod tests {
         assert_eq!(rec.get("threads").and_then(Json::as_f64), Some(4.0));
         assert!(rec.get("median_ns").and_then(Json::as_f64).unwrap() >= 0.0);
         assert_eq!(recs[1].get("smmf_vs_adam_ratio").and_then(Json::as_f64), Some(0.02));
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn json_sink_merges_by_record_name_instead_of_clobbering() {
+        let path = std::env::temp_dir().join(format!("smmf_bench_merge_{}.json", std::process::id()));
+        // Seed file with a note and one record, as the checked-in
+        // BENCH_*.json seeds look.
+        std::fs::write(
+            &path,
+            r#"{"benchmark":"server_loadgen","note":"seed","records":[{"name":"loadgen/a","steps_per_s":1},{"name":"loadgen/b","steps_per_s":2}]}"#,
+        )
+        .unwrap();
+        let mut sink = JsonSink::new("server_loadgen", &path);
+        sink.push(
+            ObjBuilder::new().str("name", "loadgen/a").num("steps_per_s", 9.0).build(),
+        );
+        sink.push(
+            ObjBuilder::new().str("name", "obs/server.commit_ms").num("p50_ms", 0.5).build(),
+        );
+        sink.write().unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        // The note survives, the matching record was updated in place,
+        // the unmatched one kept, the new one appended.
+        assert_eq!(parsed.get("note").and_then(Json::as_str), Some("seed"));
+        let recs = parsed.get("records").and_then(Json::as_arr).unwrap();
+        assert_eq!(recs.len(), 3);
+        assert_eq!(recs[0].get("name").and_then(Json::as_str), Some("loadgen/a"));
+        assert_eq!(recs[0].get("steps_per_s").and_then(Json::as_f64), Some(9.0));
+        assert_eq!(recs[1].get("steps_per_s").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(recs[2].get("name").and_then(Json::as_str), Some("obs/server.commit_ms"));
+        // A second identical write must not grow the file.
+        sink.write().unwrap();
+        let parsed = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(parsed.get("records").and_then(Json::as_arr).unwrap().len(), 3);
         std::fs::remove_file(&path).unwrap();
     }
 }

@@ -98,8 +98,48 @@ fn help_lists_exactly_the_live_subcommands() {
     // live (regression guard for the original help-drift bug).
     for cmd in [
         "help", "list", "table5", "suite", "worker", "report", "dp", "fused", "ablate", "serve",
-        "loadgen",
+        "loadgen", "trace",
     ] {
         assert!(arms.contains(cmd), "dispatch lost `{cmd}`");
     }
+}
+
+const OBS_RS: &str = include_str!("../src/obs/mod.rs");
+
+/// The observability flags are parsed in `obs::ObsConfig` but documented
+/// in `main.rs`'s HELP — pin the two files to each other so neither a
+/// renamed flag nor a deleted help line can drift silently.
+#[test]
+fn help_documents_exactly_the_obs_flags_the_parser_reads() {
+    let start = MAIN_RS.find("const HELP: &str = \"").expect("main.rs defines HELP");
+    let body = &MAIN_RS[start..];
+    let help = &body[..body.find("\";").expect("HELP is terminated")];
+
+    for (accessor, flag) in [
+        ("has_flag(\"trace\")", "--trace"),
+        ("has_flag(\"metrics\")", "--metrics"),
+        ("opt(\"trace-out\")", "--trace-out"),
+        ("opt(\"metrics-out\")", "--metrics-out"),
+    ] {
+        assert!(
+            OBS_RS.contains(accessor),
+            "obs/mod.rs no longer parses {accessor} — update this guard and HELP"
+        );
+        assert!(
+            help.contains(flag),
+            "`repro help` does not document the {flag} flag"
+        );
+    }
+
+    // The `[obs]` config keys layered under the flags must stay in sync
+    // with the parser too.
+    for key in ["obs.trace", "obs.metrics", "obs.trace_path", "obs.metrics_path"] {
+        assert!(OBS_RS.contains(&format!("\"{key}\"")), "obs/mod.rs lost the {key} config key");
+    }
+
+    // The trace wrapper's help row must mention the artifact it writes.
+    assert!(
+        help.contains("trace -- CMD"),
+        "HELP lost the `trace -- CMD` row"
+    );
 }

@@ -666,3 +666,64 @@ fn async_loadgen_probe_waits_for_a_joining_member() {
     Client::connect(&addr).unwrap().shutdown().unwrap();
     server.wait().unwrap();
 }
+
+/// The observability contract's load-bearing half: running the exact
+/// same server + loadgen cell with the flight recorder and metrics ON
+/// produces a snapshot byte-identical to the untraced run (which is
+/// itself pinned to the reference above). Tracing only reads a clock
+/// and writes to its own rings — it must never perturb the math.
+///
+/// While traced, the test also exercises the new `MetricsDump` wire op
+/// and checks the recorder actually captured optimizer-phase and
+/// server-commit spans — so this can't silently pass with
+/// instrumentation compiled out.
+#[test]
+fn traced_run_is_bit_identical_to_untraced_run() {
+    let steps = 8u64;
+    let cfg = test_config(OptKind::Smmf);
+    let shapes = inventory_by_name("tiny_lm").unwrap().shapes();
+    let mut files = Vec::new();
+    for traced in [false, true] {
+        smmf_repro::obs::set_trace_enabled(traced);
+        smmf_repro::obs::set_metrics_enabled(traced);
+        let snap = tmp(&format!("traced_{traced}"));
+        let server = Server::start(&cfg, &serve_opts(2, 2)).unwrap();
+        let addr = server.addr.to_string();
+        run_loadgen(
+            &addr,
+            &shapes,
+            cfg.seed,
+            &LoadgenOptions { clients: 2, steps, ..LoadgenOptions::default() },
+        )
+        .unwrap();
+        let mut ctl = Client::connect(&addr).unwrap();
+        ctl.snapshot(snap.to_str().unwrap()).unwrap();
+        if traced {
+            // The MetricsDump op answers with live exposition text fed
+            // by the same counters that back StatsReply.
+            let text = ctl.metrics_dump().unwrap();
+            assert!(
+                text.contains("smmf_server_pushes_total 16\n"),
+                "exposition disagrees with the run: {text}"
+            );
+            assert!(text.contains("# TYPE smmf_server_commit_ms summary\n"), "{text}");
+            assert!(text.contains("smmf_server_stream_rx_bytes_total"), "{text}");
+        }
+        ctl.shutdown().unwrap();
+        server.wait().unwrap();
+        files.push(std::fs::read(&snap).unwrap());
+        std::fs::remove_file(&snap).ok();
+    }
+    smmf_repro::obs::set_trace_enabled(false);
+    smmf_repro::obs::set_metrics_enabled(false);
+
+    assert!(files[0] == files[1], "tracing changed the snapshot bits");
+
+    // The traced pass must have recorded real spans from both layers.
+    let dump = smmf_repro::obs::trace::global().drain();
+    let has = |n: &str| dump.events.iter().any(|e| e.name == n);
+    assert!(has("optim.step"), "no optimizer step spans recorded");
+    assert!(has("optim.factor_update"), "no SMMF factor-update spans recorded");
+    assert!(has("server.push"), "no server push spans recorded");
+    assert!(has("server.commit"), "no server commit spans recorded");
+}

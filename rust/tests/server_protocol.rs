@@ -23,6 +23,9 @@ fn all_ops() -> Vec<Msg> {
         Msg::PullParams { min_step: 37, mode: PULL_FACTORED },
         Msg::Snapshot { path: "runs/server/snapshot.bin".into() },
         Msg::Stats,
+        Msg::MetricsDump,
+        Msg::MetricsText { text: "# TYPE smmf_server_pushes_total counter\nsmmf_server_pushes_total 200\n".into() },
+        Msg::MetricsText { text: String::new() },
         Msg::Shutdown,
         Msg::Join,
         Msg::Leave { client: 5 },

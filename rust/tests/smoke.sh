@@ -50,6 +50,9 @@ cargo test --release --test remote_e2e
 echo "== CLI help drift guard =="
 cargo test --release --test cli_help
 
+echo "== observability (flight recorder, registry, pinned export bytes) =="
+cargo test --release --test obs
+
 # Suite smoke: 2 optimizers × 1 model × 2 seeds on the artifact-free
 # synthetic workload, run twice — the second pass must skip every cached
 # cell and re-render a byte-identical report (the docs/RESULTS.md
@@ -125,6 +128,25 @@ cmp target/async-smoke/snapshot.bin target/async-smoke/replay.bin
 # the final BENCH_server.json refresh (per-scale steps/s + bytes/step).
 echo "== stream smoke (corruption battery + 1x/8x/64x loadgen --check) =="
 bash tests/stream_smoke.sh
+
+# Observability smoke: the same loadgen --check cell, but run through
+# `repro trace` — the flight recorder and metrics registry are forced
+# on, and the snapshot must STILL be byte-identical to the reference
+# (the non-perturbation contract). The run leaves a Chrome trace JSON
+# (optimizer-phase + server-commit spans), the Prometheus exposition,
+# and measured obs/ histogram records merged into BENCH_server.json.
+echo "== obs smoke (repro trace -- loadgen --check, identity pin under tracing) =="
+rm -rf target/obs-smoke
+cargo run --release -- trace -- loadgen --model synthetic:tiny_lm \
+  --clients 2 --shards 2 --steps 50 \
+  --snapshot target/obs-smoke/snapshot.bin --check \
+  --trace-out target/obs-smoke/trace.json \
+  --metrics-out target/obs-smoke/metrics.prom \
+  --bench-json "${SMMF_SERVER_BENCH_JSON:-../BENCH_server.json}"
+grep -q '"traceEvents"' target/obs-smoke/trace.json
+grep -q '"name":"optim.factor_update"' target/obs-smoke/trace.json
+grep -q '"name":"server.commit"' target/obs-smoke/trace.json
+grep -q '^smmf_server_pushes_total 100$' target/obs-smoke/metrics.prom
 
 # Grouped end-to-end: train -> save -> resume with a bias/norm-exempt
 # group config through the real CLI. Needs AOT artifacts (make
